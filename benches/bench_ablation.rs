@@ -1,0 +1,139 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A. implicit-transpose (scatter) SpMMᵀ vs an explicit transposed CSR
+//!     copy (paper §4.1.2 tried exactly this);
+//!  B. LancSVD block size b at fixed r (paper §2.2 "role of b");
+//!  C. Krylov width r at fixed b (role of r / k = r/b);
+//!  D. initial-vector distribution (paper's centered Poisson vs normal);
+//!  E. CholeskyQR2 vs Householder QR for the panel factorization
+//!     (the §3.1 design decision).
+
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::backend::{Backend, Operand};
+use trunksvd::bench_support::{banner, env_usize, time_runs};
+use trunksvd::coordinator::driver::{run, Algo, BackendChoice, Params};
+use trunksvd::coordinator::report::sci;
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::la::mat::Mat;
+use trunksvd::util::rng::Rng;
+
+fn main() {
+    let quick = env_usize("BENCH_QUICK", 0) == 1;
+    let rows = if quick { 6000 } else { 20_000 };
+    let spec = SparseSpec {
+        rows,
+        cols: rows / 3,
+        nnz: rows * 12,
+        seed: 17,
+        ..Default::default()
+    };
+    let a = generate(&spec);
+    println!("ablation matrix: {}x{} nnz {}", a.rows(), a.cols(), a.nnz());
+
+    banner("A. SpMM-transpose strategy (full LancSVD solve)", "");
+    for choice in [BackendChoice::Cpu, BackendChoice::CpuExplicitT] {
+        let rep = run(
+            "ablA",
+            Operand::Sparse(a.clone()),
+            Algo::Lanc,
+            &Params { r: 64, p: 2, b: 16, ..Default::default() },
+            &choice,
+        )
+        .unwrap();
+        println!(
+            "{:<9} total {:>7.3}s  mult_At {:>7.3}s  R10 {}",
+            choice.name(),
+            rep.secs,
+            rep.profile.stat(trunksvd::metrics::Block::MultAt).secs,
+            sci(rep.max_residual())
+        );
+    }
+
+    banner("B. LancSVD block size b (r=64, p=2)", "paper: larger b → more efficient blocks, fewer Krylov steps");
+    for b in [4usize, 8, 16, 32] {
+        let rep = run(
+            "ablB",
+            Operand::Sparse(a.clone()),
+            Algo::Lanc,
+            &Params { r: 64, p: 2, b, wanted: 4, ..Default::default() },
+            &BackendChoice::Cpu,
+        )
+        .unwrap();
+        println!("b={b:<3} time {:>7.3}s  R4 {}", rep.secs, sci(rep.max_residual()));
+    }
+
+    banner("C. Krylov width r (b=16, p=2)", "paper: larger r converges better but orth cost grows super-linearly");
+    for r in [32usize, 64, 128, 256] {
+        if r > a.cols() {
+            continue;
+        }
+        let rep = run(
+            "ablC",
+            Operand::Sparse(a.clone()),
+            Algo::Lanc,
+            &Params { r, p: 2, b: 16, ..Default::default() },
+            &BackendChoice::Cpu,
+        )
+        .unwrap();
+        println!("r={r:<4} time {:>7.3}s  R10 {}", rep.secs, sci(rep.max_residual()));
+    }
+
+    banner("D. Initial distribution (RandSVD r=16 p=24)", "");
+    for (label, init) in [
+        ("poisson", trunksvd::algo::InitDist::CenteredPoisson),
+        ("normal", trunksvd::algo::InitDist::Normal),
+    ] {
+        let mut be = CpuBackend::new_sparse(a.clone());
+        let t0 = std::time::Instant::now();
+        let svd = trunksvd::algo::randsvd::randsvd(
+            &mut be,
+            &trunksvd::algo::RandSvdOpts { r: 16, p: 24, b: 16, seed: 5, init },
+        )
+        .unwrap();
+        let mut chk = CpuBackend::new_sparse(a.clone());
+        let res = trunksvd::algo::residuals(&mut chk, &svd, 10);
+        println!(
+            "{label:<8} time {:>6.3}s  R10 {}",
+            t0.elapsed().as_secs_f64(),
+            sci(res.iter().fold(0.0f64, |m, &x| m.max(x)))
+        );
+    }
+
+    banner("F. Restart strategy: basic vs thick (LancSVD r=64 p=3)", "");
+    for (label, restart) in [
+        ("basic", trunksvd::algo::Restart::Basic),
+        ("thick32", trunksvd::algo::Restart::Thick { keep: 32 }),
+    ] {
+        let rep = run(
+            "ablF",
+            Operand::Sparse(a.clone()),
+            Algo::Lanc,
+            &Params { r: 64, p: 3, b: 16, restart, ..Default::default() },
+            &BackendChoice::Cpu,
+        )
+        .unwrap();
+        println!(
+            "{label:<8} time {:>7.3}s  flops {:>8.2} GF  R10 {}",
+            rep.secs,
+            rep.profile.total_flops() / 1e9,
+            sci(rep.max_residual())
+        );
+    }
+
+    banner("E. Panel factorization: CholeskyQR2 vs Householder (q x 16)", "");
+    let mut rng = Rng::new(9);
+    let q = if quick { 8192 } else { 32768 };
+    let y0 = Mat::randn(q, 16, &mut rng);
+    let mut be = CpuBackend::new_dense(Mat::zeros(1, 1));
+    let st = time_runs(1, 5, || {
+        let mut y = y0.clone();
+        be.orth_cholqr2(&mut y).unwrap();
+    });
+    println!("cholqr2     q={q}  {:.4}s", st.median);
+    let st = time_runs(1, 5, || {
+        let _ = trunksvd::la::qr::householder_qr(&y0);
+    });
+    println!("householder q={q}  {:.4}s", st.median);
+
+    println!("\nbench_ablation done");
+}

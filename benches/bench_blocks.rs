@@ -1,0 +1,117 @@
+//! Micro-benchmarks of the Table-1 building blocks (GEMM, SpMM, SpMMᵀ,
+//! CholeskyQR2, CGS-CQR2) on the CPU substrate and, when artifacts are
+//! present, on the XLA/PJRT path. Feeds the §Perf iteration log.
+//!
+//! `BENCH_QUICK=1` shrinks the size sweep.
+
+use std::rc::Rc;
+
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::backend::xla::XlaBackend;
+use trunksvd::backend::Backend;
+use trunksvd::bench_support::{auto_runs, banner, env_usize, gflops, time_runs};
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::la::blas3;
+use trunksvd::la::mat::Mat;
+use trunksvd::la::qr::random_orthonormal;
+use trunksvd::runtime::{default_artifact_dir, Runtime};
+use trunksvd::util::rng::Rng;
+
+fn main() {
+    let quick = env_usize("BENCH_QUICK", 0) == 1;
+    let mut rng = Rng::new(1);
+
+    banner("GEMM (C = A·B, k=512, n=16)", "m, GFLOP/s");
+    let ms: &[usize] = if quick { &[4096] } else { &[2048, 8192, 32768] };
+    for &m in ms {
+        let a = Mat::randn(m, 512, &mut rng);
+        let b = Mat::randn(512, 16, &mut rng);
+        let mut c = Mat::zeros(m, 16);
+        let fl = 2.0 * (m * 512 * 16) as f64;
+        let (w, r) = auto_runs(fl / 2e9);
+        let st = time_runs(w, r, || blas3::gemm_nn(1.0, a.as_ref(), b.as_ref(), 0.0, &mut c));
+        println!("gemm_nn  m={m:>6}  {:.2} GF/s ({:.4}s)", gflops(fl, st.median), st.median);
+        let mut h = Mat::zeros(512, 16);
+        let x = Mat::randn(m, 16, &mut rng);
+        let st = time_runs(w, r, || blas3::gemm_tn(1.0, a.as_ref(), x.as_ref(), 0.0, &mut h));
+        println!("gemm_tn  m={m:>6}  {:.2} GF/s ({:.4}s)", gflops(fl, st.median), st.median);
+    }
+
+    banner("SpMM vs SpMMᵀ (k=16)", "the paper's bottleneck asymmetry");
+    let spec = SparseSpec {
+        rows: if quick { 8192 } else { 32768 },
+        cols: 8192,
+        nnz: if quick { 200_000 } else { 800_000 },
+        seed: 3,
+        ..Default::default()
+    };
+    let a = generate(&spec);
+    let at = a.transpose();
+    let x_n = Mat::randn(a.cols(), 16, &mut rng);
+    let x_m = Mat::randn(a.rows(), 16, &mut rng);
+    let fl = 2.0 * a.nnz() as f64 * 16.0;
+    let mut y_m = Mat::zeros(a.rows(), 16);
+    let mut y_n = Mat::zeros(a.cols(), 16);
+    let (w, r) = auto_runs(fl / 1e9);
+    let st = time_runs(w, r, || a.spmm(&x_n, &mut y_m));
+    println!("spmm   (gather)    {:.2} GF/s ({:.4}s)", gflops(fl, st.median), st.median);
+    let st_t = time_runs(w, r, || a.spmm_t(&x_m, &mut y_n));
+    println!("spmm_t (scatter)   {:.2} GF/s ({:.4}s)", gflops(fl, st_t.median), st_t.median);
+    let st_e = time_runs(w, r, || at.spmm(&x_m, &mut y_n));
+    println!("spmm_t (expl. T)   {:.2} GF/s ({:.4}s)", gflops(fl, st_e.median), st_e.median);
+
+    banner("Orthogonalization (q x 16 panel)", "CholeskyQR2 and CGS-CQR2 (s=128)");
+    let qs: &[usize] = if quick { &[4096] } else { &[4096, 32768] };
+    for &q in qs {
+        let y0 = Mat::randn(q, 16, &mut rng);
+        let p = random_orthonormal(q, 128, &mut rng);
+        let mut be = CpuBackend::new_dense(Mat::zeros(1, 1));
+        let fl4 = trunksvd::cost::ca4(16, q);
+        let (w, r) = auto_runs(fl4 / 2e9);
+        let st = time_runs(w, r, || {
+            let mut y = y0.clone();
+            be.orth_cholqr2(&mut y).unwrap();
+        });
+        println!("cholqr2  q={q:>6}  cpu  {:.2} GF/s ({:.4}s)", gflops(fl4, st.median), st.median);
+        let fl5 = trunksvd::cost::ca5(16, q, 128);
+        let st = time_runs(w, r, || {
+            let mut y = y0.clone();
+            be.orth_cgs_cqr2(&mut y, p.panel(0, 128)).unwrap();
+        });
+        println!("cgs_cqr2 q={q:>6}  cpu  {:.2} GF/s ({:.4}s)", gflops(fl5, st.median), st.median);
+
+        // XLA path (artifact + PJRT) when available. The client is
+        // leaked: xla_extension 0.5.1 cannot re-create a CPU client
+        // after one is destroyed in the same process.
+        let dir = default_artifact_dir();
+        if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+            let rt = Rc::new(Runtime::new(&dir).unwrap());
+            std::mem::forget(rt.clone());
+            let mut xbe = XlaBackend::new_dense(rt, Mat::zeros(512, 4)).unwrap();
+            // warm the executable cache before timing
+            let mut y = y0.clone();
+            xbe.orth_cholqr2(&mut y).unwrap();
+            let st = time_runs(1, 3, || {
+                let mut y = y0.clone();
+                xbe.orth_cholqr2(&mut y).unwrap();
+            });
+            println!(
+                "cholqr2  q={q:>6}  xla  {:.2} GF/s ({:.4}s)",
+                gflops(fl4, st.median),
+                st.median
+            );
+            let mut y = y0.clone();
+            xbe.orth_cgs_cqr2(&mut y, p.panel(0, 128)).unwrap();
+            let st = time_runs(1, 3, || {
+                let mut y = y0.clone();
+                xbe.orth_cgs_cqr2(&mut y, p.panel(0, 128)).unwrap();
+            });
+            println!(
+                "cgs_cqr2 q={q:>6}  xla  {:.2} GF/s ({:.4}s)",
+                gflops(fl5, st.median),
+                st.median
+            );
+        }
+    }
+    println!("\nbench_blocks done");
+}

@@ -1,0 +1,20 @@
+//! Reproduces Fig. 1: relative residuals R1/R10 on the sparse suite for
+//! LancSVD (r=256, p=2) vs the three RandSVD configurations (b=16).
+//!
+//! `BENCH_SUBSET=46` runs the full suite; default is the representative
+//! 8-matrix subset (1-core testbed). `BENCH_SHRINK=4` shrinks r/p.
+
+use trunksvd::bench_support::env_usize;
+use trunksvd::coordinator::experiments::{fig1, ExpOpts};
+use trunksvd::gen::suite::Suite;
+
+fn main() {
+    let suite = Suite::load_default().expect("suite config");
+    let o = ExpOpts {
+        subset: env_usize("BENCH_SUBSET", 8),
+        shrink: env_usize("BENCH_SHRINK", 1).max(1),
+        ..Default::default()
+    };
+    let md = fig1(&suite, &o).expect("fig1");
+    println!("{md}");
+}

@@ -1,0 +1,18 @@
+//! Reproduces Fig. 2: execution time, per-block breakdown, and the
+//! LancSVD-vs-RandSVD speed-up (measured CPU wall time + sim-A100 model
+//! time; see DESIGN.md §3) on the sparse suite.
+
+use trunksvd::bench_support::env_usize;
+use trunksvd::coordinator::experiments::{fig2, ExpOpts};
+use trunksvd::gen::suite::Suite;
+
+fn main() {
+    let suite = Suite::load_default().expect("suite config");
+    let o = ExpOpts {
+        subset: env_usize("BENCH_SUBSET", 8),
+        shrink: env_usize("BENCH_SHRINK", 1).max(1),
+        ..Default::default()
+    };
+    let md = fig2(&suite, &o).expect("fig2");
+    println!("{md}");
+}

@@ -1,0 +1,12 @@
+//! Reproduces Fig. 3: theoretical flop distribution across the building
+//! blocks for both algorithms over the full 46-matrix suite (pure
+//! Table-1 cost model — instant).
+
+use trunksvd::coordinator::experiments::{fig3, ExpOpts};
+use trunksvd::gen::suite::Suite;
+
+fn main() {
+    let suite = Suite::load_default().expect("suite config");
+    let md = fig3(&suite, &ExpOpts::default()).expect("fig3");
+    println!("{md}");
+}

@@ -1,0 +1,16 @@
+//! Reproduces Fig. 4: dense synthetic problems (Eq. 15/16 spectrum) —
+//! residuals R1..R10 and execution time for LancSVD (r=64, p in {1,4})
+//! vs RandSVD (r=16, p in {6,24}).
+//!
+//! `BENCH_SHRINK=4` divides the dense row counts for smoke runs.
+
+use trunksvd::bench_support::env_usize;
+use trunksvd::coordinator::experiments::{fig4, ExpOpts};
+use trunksvd::gen::suite::Suite;
+
+fn main() {
+    let suite = Suite::load_default().expect("suite config");
+    let o = ExpOpts { shrink: env_usize("BENCH_SHRINK", 1).max(1), ..Default::default() };
+    let md = fig4(&suite, &o).expect("fig4");
+    println!("{md}");
+}

@@ -1,0 +1,9 @@
+//! Validates Table 1: the analytic cost model must match the
+//! instrumented flop counters of live runs block-for-block.
+
+use trunksvd::coordinator::experiments::{table1, ExpOpts};
+
+fn main() {
+    let md = table1(&ExpOpts::default()).expect("table1");
+    println!("{md}");
+}

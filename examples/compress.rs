@@ -1,0 +1,92 @@
+//! Low-rank compression of a smooth 2-D field.
+//!
+//! Generates a synthetic "image" (a superposition of anisotropic
+//! Gaussians — smooth fields have rapidly decaying singular values),
+//! compresses it to rank k with the truncated SVD, and reports the
+//! storage ratio and reconstruction PSNR as k grows.
+
+use trunksvd::algo::{lancsvd::lancsvd, LancSvdOpts};
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::la::blas3::mat_nn;
+use trunksvd::la::mat::Mat;
+use trunksvd::util::rng::Rng;
+
+fn synth_field(rows: usize, cols: usize, blobs: usize, rng: &mut Rng) -> Mat {
+    let mut centers = Vec::new();
+    for _ in 0..blobs {
+        centers.push((
+            rng.uniform_in(0.0, rows as f64),
+            rng.uniform_in(0.0, cols as f64),
+            rng.uniform_in(8.0, 40.0),  // sigma_r
+            rng.uniform_in(8.0, 40.0),  // sigma_c
+            rng.uniform_in(0.2, 1.0),   // amplitude
+        ));
+    }
+    Mat::from_fn(rows, cols, |i, j| {
+        centers
+            .iter()
+            .map(|&(ci, cj, sr, sc, amp)| {
+                let di = (i as f64 - ci) / sr;
+                let dj = (j as f64 - cj) / sc;
+                amp * (-0.5 * (di * di + dj * dj)).exp()
+            })
+            .sum()
+    })
+}
+
+fn psnr(orig: &Mat, approx: &Mat) -> f64 {
+    let n = (orig.rows() * orig.cols()) as f64;
+    let mse = orig
+        .data()
+        .iter()
+        .zip(approx.data())
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        / n;
+    let peak = orig.data().iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    10.0 * (peak * peak / mse.max(1e-300)).log10()
+}
+
+fn main() -> anyhow::Result<()> {
+    let (rows, cols) = (1200, 800);
+    let mut rng = Rng::new(11);
+    println!("synthesizing {rows}x{cols} smooth field (40 gaussian blobs)...");
+    let img = synth_field(rows, cols, 40, &mut rng);
+
+    println!("\n{:>5} {:>12} {:>10} {:>10}", "rank", "storage", "ratio", "PSNR dB");
+    for k in [4usize, 8, 16, 32] {
+        let mut be = CpuBackend::new_dense(img.clone());
+        let svd = lancsvd(
+            &mut be,
+            &LancSvdOpts {
+                r: (2 * k).max(32),
+                p: 3,
+                b: 16,
+                wanted: k,
+                tol: Some(1e-10),
+                ..Default::default()
+            },
+        )?;
+        // Reconstruct rank-k approximation U_k S_k V_kᵀ.
+        let (u, s, v) = svd.truncated(k);
+        let mut us = u.clone();
+        for j in 0..k {
+            for x in us.col_mut(j) {
+                *x *= s[j];
+            }
+        }
+        let approx = mat_nn(&us, &v.transpose());
+        let full = rows * cols;
+        let stored = k * (rows + cols + 1);
+        println!(
+            "{:>5} {:>12} {:>9.1}x {:>10.1}",
+            k,
+            stored,
+            full as f64 / stored as f64,
+            psnr(&img, &approx)
+        );
+    }
+    println!("\nsmooth fields compress well: PSNR grows rapidly with rank while");
+    println!("storage stays k(m+n+1) words vs mn for the dense field.");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Latent semantic indexing — the data-science workload from the paper's
+//! introduction (dimensionality reduction of a large sparse term-document
+//! matrix before querying).
+//!
+//! Builds a synthetic topic-model corpus (no datasets ship offline),
+//! factorizes the term-document matrix with LancSVD, and shows that
+//! querying in the k-dimensional latent space recovers topic structure
+//! that raw term matching misses.
+
+use trunksvd::algo::{lancsvd::lancsvd, LancSvdOpts};
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::la::blas1::{dot, nrm2};
+use trunksvd::sparse::coo::Coo;
+use trunksvd::sparse::csr::Csr;
+use trunksvd::util::rng::Rng;
+
+const N_TOPICS: usize = 8;
+const VOCAB: usize = 2000;
+const DOCS: usize = 1200;
+const WORDS_PER_DOC: usize = 60;
+
+/// Zipf-ish topic-conditioned word sampler.
+struct TopicModel {
+    /// cumulative word distribution per topic
+    cum: Vec<Vec<f64>>,
+}
+
+impl TopicModel {
+    fn new(rng: &mut Rng) -> TopicModel {
+        let mut cum = Vec::new();
+        for _t in 0..N_TOPICS {
+            // Each topic concentrates on ~150 "own" words plus background.
+            let mut w = vec![0.1; VOCAB];
+            for _ in 0..150 {
+                let word = rng.below(VOCAB);
+                w[word] += 20.0 * rng.uniform();
+            }
+            let mut c = Vec::with_capacity(VOCAB);
+            let mut acc = 0.0;
+            for x in &w {
+                acc += x;
+                c.push(acc);
+            }
+            for x in c.iter_mut() {
+                *x /= acc;
+            }
+            cum.push(c);
+        }
+        TopicModel { cum }
+    }
+
+    fn sample(&self, topic: usize, rng: &mut Rng) -> usize {
+        let u = rng.uniform();
+        self.cum[topic].partition_point(|&c| c < u).min(VOCAB - 1)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(7);
+    let model = TopicModel::new(&mut rng);
+
+    // Term-document matrix (terms x docs) with tf weights.
+    println!("generating corpus: {DOCS} docs, vocab {VOCAB}, {N_TOPICS} topics...");
+    let mut coo = Coo::new(VOCAB, DOCS);
+    let mut doc_topic = Vec::with_capacity(DOCS);
+    for d in 0..DOCS {
+        let topic = d % N_TOPICS;
+        doc_topic.push(topic);
+        for _ in 0..WORDS_PER_DOC {
+            let w = model.sample(topic, &mut rng);
+            coo.push(w, d, 1.0);
+        }
+    }
+    let a = Csr::from_coo(&coo)?;
+    println!("term-doc matrix: {}x{} nnz {}", a.rows(), a.cols(), a.nnz());
+
+    // Truncated SVD with k = 16 latent dimensions.
+    let k = 16;
+    let mut be = CpuBackend::new_sparse(a.clone());
+    let t0 = std::time::Instant::now();
+    let svd = lancsvd(
+        &mut be,
+        &LancSvdOpts { r: 64, p: 3, b: 16, wanted: k, tol: Some(1e-8), ..Default::default() },
+    )?;
+    println!(
+        "LancSVD: {:.2}s, {} restarts, sigma_1 {:.2}, sigma_{k} {:.2}",
+        t0.elapsed().as_secs_f64(),
+        svd.iters,
+        svd.sigma[0],
+        svd.sigma[k - 1]
+    );
+
+    // Latent doc representations: D = Sigma * V^T columns (k x DOCS).
+    let latent: Vec<Vec<f64>> = (0..DOCS)
+        .map(|d| (0..k).map(|j| svd.sigma[j] * svd.v.at(d, j)).collect())
+        .collect();
+
+    // Evaluate: nearest-neighbor topic purity in latent space.
+    let cosine = |x: &[f64], y: &[f64]| dot(x, y) / (nrm2(x) * nrm2(y)).max(1e-300);
+    let mut correct = 0;
+    let probes = 200;
+    for probe in 0..probes {
+        let d = (probe * 13) % DOCS;
+        let mut best = (f64::MIN, 0usize);
+        for other in 0..DOCS {
+            if other == d {
+                continue;
+            }
+            let c = cosine(&latent[d], &latent[other]);
+            if c > best.0 {
+                best = (c, other);
+            }
+        }
+        if doc_topic[best.1] == doc_topic[d] {
+            correct += 1;
+        }
+    }
+    let purity = correct as f64 / probes as f64;
+    println!("latent-space nearest-neighbor topic purity: {:.1}% (chance {:.1}%)",
+        100.0 * purity, 100.0 / N_TOPICS as f64);
+    anyhow::ensure!(purity > 0.6, "LSI should comfortably beat chance");
+    println!("ok: latent space recovers topic structure");
+    Ok(())
+}

@@ -1,0 +1,209 @@
+"""AOT pipeline: lower the L2 graphs to HLO-text artifacts + manifest.
+
+Reads ``config/suite.json`` (shared with the rust side) and emits one
+``.hlo.txt`` per (op, bucketed shape) the runtime may request, plus
+``manifest.json`` mapping op + input shapes → file. The rust runtime
+(`rust/src/runtime/`) compiles these lazily through PJRT and caches the
+executables.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+0.5.1 rejects; the text parser reassigns ids (see aot_recipe /
+/opt/xla-example/gen_hlo.py).
+
+Incremental: existing artifact files are kept unless --force; the Makefile
+treats the manifest as the build product.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import common  # noqa: F401  (enables x64)
+
+F64 = jnp.float64
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F64):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _pow2_range(lo, hi):
+    v = lo
+    while v <= hi:
+        yield v
+        v *= 2
+
+
+def next_pow2(x, lo, hi):
+    v = lo
+    while v < x and v < hi:
+        v *= 2
+    return v
+
+
+class ArtifactSet:
+    """Collects (op, input shapes, output shapes, lowered-fn) entries."""
+
+    def __init__(self, out_dir, force=False):
+        self.out_dir = out_dir
+        self.force = force
+        self.entries = []
+        self.written = 0
+        self.skipped = 0
+
+    def add(self, op, fn, in_specs, dims=None):
+        """Lower fn over in_specs and write the artifact (if stale)."""
+        name_bits = [op] + ["x".join(str(d) for d in s.shape) for s in in_specs]
+        fname = "_".join(name_bits) + ".hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        lowered = jax.jit(fn).lower(*in_specs)
+        out_shapes = [list(s.shape) for s in jax.tree_util.tree_leaves(lowered.out_info)]
+        if self.force or not os.path.exists(path):
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            self.written += 1
+        else:
+            self.skipped += 1
+        self.entries.append(
+            {
+                "op": op,
+                "file": fname,
+                "inputs": [list(s.shape) for s in in_specs],
+                "input_dtypes": [str(s.dtype) for s in in_specs],
+                "outputs": out_shapes,
+                "dims": dims or {},
+            }
+        )
+
+    def write_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        cfg = {"artifacts": self.entries, "version": 1}
+        with open(path, "w") as f:
+            json.dump(cfg, f, indent=1)
+        return path
+
+
+def find_config():
+    for cand in (
+        os.environ.get("TRUNKSVD_CONFIG"),
+        "config/suite.json",
+        "../config/suite.json",
+        os.path.join(os.path.dirname(__file__), "..", "..", "config", "suite.json"),
+    ):
+        if cand and os.path.exists(cand):
+            return cand
+    raise FileNotFoundError("config/suite.json not found")
+
+
+def build_all(out_dir, force=False, quick=False):
+    cfg = json.load(open(find_config()))
+    bk = cfg["artifact_buckets"]
+    b = bk["b"]
+    q_buckets = list(_pow2_range(bk["q_pow2_min"], bk["q_pow2_max"]))
+    s_buckets = list(bk["s_buckets"])
+    r_buckets = [16, 64, 256]
+    n_pad = 512  # dense-suite n=500 → bucket 512
+    if quick:  # CI-speed subset
+        q_buckets = q_buckets[:2]
+        s_buckets = s_buckets[:2]
+        r_buckets = [16]
+
+    os.makedirs(out_dir, exist_ok=True)
+    art = ArtifactSet(out_dir, force=force)
+
+    # Orthogonalization graphs (Algs. 4/5) for every q bucket.
+    for q in q_buckets:
+        art.add(
+            "cholqr2",
+            model.cholqr2_graph,
+            [spec((q, b))],
+            dims={"q": q, "b": b},
+        )
+        for s in s_buckets:
+            art.add(
+                "cgs_cqr2",
+                model.cgs_cqr2_graph,
+                [spec((q, b)), spec((q, s))],
+                dims={"q": q, "s": s, "b": b},
+            )
+
+    # Dense apply-A / apply-Aᵀ (the A operand rides along as an argument
+    # and stays device-resident via execute_b on the rust side).
+    for q in q_buckets:
+        for r in r_buckets:
+            art.add(
+                "matmul_nn",
+                model.matmul_nn_graph,
+                [spec((q, n_pad)), spec((n_pad, r))],
+                dims={"m": q, "k": n_pad, "n": r},
+            )
+            art.add(
+                "matmul_tn",
+                model.matmul_tn_graph,
+                [spec((q, n_pad)), spec((q, r))],
+                dims={"q": q, "a": n_pad, "b": r},
+            )
+            # Finalize GEMMs: (q×r)·(r×r) and the n-side (n_pad×r)·(r×r).
+            art.add(
+                "matmul_nn",
+                model.matmul_nn_graph,
+                [spec((q, r)), spec((r, r))],
+                dims={"m": q, "k": r, "n": r},
+            )
+        # Restart GEMM: P̄ (q×256) · Ū₁ (256×16).
+        art.add(
+            "matmul_nn",
+            model.matmul_nn_graph,
+            [spec((q, 256)), spec((256, 16))],
+            dims={"m": q, "k": 256, "n": 16},
+        )
+
+    # Block-ELL SpMM demo shape (integration-tested end-to-end from rust).
+    art.add(
+        "spmm_blockell",
+        model.spmm_graph,
+        [
+            spec((32, 8, 16, 16)),
+            spec((32, 8), I32),
+            spec((512, 16)),
+        ],
+        dims={"nbr": 32, "mbpr": 8, "bs": 16, "n": 512, "k": 16},
+    )
+
+    manifest = art.write_manifest()
+    print(
+        f"artifacts: {art.written} written, {art.skipped} up-to-date, "
+        f"manifest {manifest} ({len(art.entries)} entries)"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="artifacts", help="output directory")
+    ap.add_argument("--force", action="store_true", help="rewrite all")
+    ap.add_argument("--quick", action="store_true", help="small subset (tests)")
+    args = ap.parse_args()
+    build_all(args.out, force=args.force, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

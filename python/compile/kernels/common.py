@@ -1,0 +1,33 @@
+"""Shared Pallas kernel configuration.
+
+All kernels run with ``interpret=True``: the image's PJRT runtime is the
+CPU plugin, and real-TPU Pallas lowering emits Mosaic custom-calls the CPU
+client cannot execute (see /opt/xla-example/README.md). The BlockSpec
+tiling below is still written as it would be for TPU VMEM so the HBM↔VMEM
+schedule (and its footprint estimates in DESIGN.md §10) is meaningful.
+"""
+
+import jax
+
+# f64 everywhere: the paper's experiments use IEEE double precision.
+jax.config.update("jax_enable_x64", True)
+
+# Row-tile used by the tall-skinny kernels. 256 f64 rows x 256 max panel
+# cols x 8 B = 512 KiB per streamed operand block: comfortably inside a
+# 16 MiB TPU VMEM alongside the b x b accumulator.
+DEFAULT_ROW_TILE = 256
+
+INTERPRET = True
+
+
+def pick_row_tile(q: int, tile: int | None = None) -> int:
+    """Choose a row tile that divides q (q is a power-of-two bucket in
+    production; tests use arbitrary small q)."""
+    t = tile or DEFAULT_ROW_TILE
+    if q % t == 0:
+        return t
+    # largest divisor of q not exceeding t
+    for cand in range(min(t, q), 0, -1):
+        if q % cand == 0:
+            return cand
+    return q

@@ -1,0 +1,45 @@
+"""Pallas kernel: Gram matrix W = QᵀQ.
+
+The SYRK-shaped block of CholeskyQR2 (Alg. 4 steps S1/S4). TPU mapping:
+the q-dimension is streamed through VMEM in row tiles while the b×b
+accumulator stays resident across the grid — the systolic-array analogue
+of the paper's cuBLAS SYRK call.
+
+VMEM/grid estimate (q=65536, b=16, f64): tile 256×16 = 32 KiB streamed +
+2 KiB accumulator; MXU work per step is a 16×256·256×16 contraction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_row_tile
+
+
+def _gram_kernel(q_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = q_ref[...]
+    o_ref[...] += tile.T @ tile
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def gram(q, row_tile=None):
+    """W = QᵀQ via a row-tiled Pallas reduction."""
+    qr, b = q.shape
+    t = pick_row_tile(qr, row_tile)
+    grid = (qr // t,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((t, b), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((b, b), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, b), q.dtype),
+        interpret=INTERPRET,
+    )(q)

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each Pallas kernel in this package has a reference implementation here;
+``python/tests/test_kernels.py`` sweeps shapes with hypothesis and asserts
+allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+from . import common  # noqa: F401  (enables x64)
+
+
+def gram_ref(q):
+    """W = QᵀQ."""
+    return q.T @ q
+
+
+def tall_gemm_ref(p, q):
+    """H = PᵀQ (block-CGS projection / transposed tall GEMM)."""
+    return p.T @ q
+
+
+def row_gemm_ref(a, x):
+    """Y = A·X (row-tiled GEMM, the dense apply-A)."""
+    return a @ x
+
+
+def panel_update_ref(q, p, h):
+    """Q' = Q − P·H (block-CGS update)."""
+    return q - p @ h
+
+
+def spmm_blockell_ref(blocks, idx, x):
+    """Y = A·X with A in block-ELL form.
+
+    blocks: (nbr, mbpr, bs, bs) dense blocks (zero blocks pad short rows)
+    idx:    (nbr, mbpr) int32 block-column indices (0 for padding; the
+            padding blocks are all-zero so the index value is irrelevant)
+    x:      (ncb*bs, k) dense right-hand side
+    """
+    nbr, mbpr, bs, _ = blocks.shape
+    k = x.shape[1]
+    xb = x.reshape(-1, bs, k)  # (ncb, bs, k)
+    gathered = xb[idx]  # (nbr, mbpr, bs, k)
+    y = jnp.einsum("rjab,rjbk->rak", blocks, gathered)
+    return y.reshape(nbr * bs, k)
+
+
+def blockell_from_dense(a_dense, bs):
+    """Convert a dense matrix to block-ELL parts (test/reference helper;
+    the production converter lives in rust/src/sparse/blockell.rs)."""
+    import numpy as np
+
+    m, n = a_dense.shape
+    assert m % bs == 0 and n % bs == 0, "pad before converting"
+    nbr, ncb = m // bs, n // bs
+    rows = []
+    for i in range(nbr):
+        cols = []
+        for j in range(ncb):
+            blk = a_dense[i * bs : (i + 1) * bs, j * bs : (j + 1) * bs]
+            if np.any(blk != 0):
+                cols.append((j, blk))
+        rows.append(cols)
+    mbpr = max(1, max(len(r) for r in rows))
+    blocks = np.zeros((nbr, mbpr, bs, bs), dtype=np.float64)
+    idx = np.zeros((nbr, mbpr), dtype=np.int32)
+    for i, cols in enumerate(rows):
+        for s, (j, blk) in enumerate(cols):
+            blocks[i, s] = blk
+            idx[i, s] = j
+    return blocks, idx

@@ -1,0 +1,42 @@
+"""Pallas kernel: Y = A·X (row-tiled GEMM).
+
+The dense apply-A (Table 1's cuBLAS GEMM for dense problems) and the
+finalize multiplications (U_T = Q̄·V̄ etc.). A is streamed in row tiles;
+X (n×k, with n ≤ 512 and k ≤ 256 in this system) stays VMEM-resident
+across the whole grid.
+
+VMEM estimate (tile 256, n=512, k=256, f64): A tile 1 MiB + X 1 MiB +
+out tile 512 KiB — fits; each grid step is a full 256×512·512×k MXU pass.
+"""
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_row_tile
+
+
+def _row_gemm_kernel(a_ref, x_ref, o_ref):
+    o_ref[...] = a_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def row_gemm(a, x, row_tile=None):
+    """Y = A·X with A row-tiled and X grid-resident."""
+    m, n = a.shape
+    n2, k = x.shape
+    assert n == n2, "inner dims must match"
+    t = pick_row_tile(m, row_tile)
+    grid = (m // t,)
+    return pl.pallas_call(
+        _row_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), a.dtype),
+        interpret=INTERPRET,
+    )(a, x)

@@ -1,0 +1,62 @@
+"""Pallas kernel: block-ELL SpMM, Y = A·X.
+
+Hardware adaptation of the paper's cuSPARSE CSR SpMM (DESIGN.md
+§Hardware-Adaptation): CSR's per-row gather does not map onto the MXU, so
+the sparse matrix is re-tiled into dense bs×bs blocks in ELL layout —
+every block-row holds `mbpr` blocks (zero-padded), making the kernel a
+regular gather + small-matmul loop:
+
+    Y[i·bs : (i+1)·bs, :] = Σ_j  blocks[i, j] @ X[idx[i, j]·bs : …, :]
+
+Grid = one program per block-row. X stays resident (memory-space ANY /
+whole-array block) and is dynamically sliced per block — the TPU version
+would use PrefetchScalarGridSpec to schedule the X gathers; interpret mode
+executes the same dynamic slices directly.
+
+VMEM estimate (bs=16, k=16, f64): per step mbpr×(2 KiB block + 2 KiB X
+slice) streamed + 2 KiB accumulator — deeply memory-bound, as the paper
+observes for SpMM on the A100.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+
+def _spmm_kernel(idx_ref, blocks_ref, x_ref, o_ref, *, mbpr, bs):
+    k = o_ref.shape[1]
+
+    def body(j, acc):
+        c = idx_ref[0, j]
+        xblk = x_ref[pl.dslice(c * bs, bs), :]
+        return acc + blocks_ref[0, j] @ xblk
+
+    acc = jnp.zeros((bs, k), dtype=o_ref.dtype)
+    o_ref[...] = jax.lax.fori_loop(0, mbpr, body, acc)
+
+
+@jax.jit
+def spmm_blockell(blocks, idx, x):
+    """Y = A·X with A in block-ELL form (see ref.spmm_blockell_ref)."""
+    nbr, mbpr, bs, bs2 = blocks.shape
+    assert bs == bs2
+    n, k = x.shape
+    assert n % bs == 0
+    grid = (nbr,)
+    kernel = functools.partial(_spmm_kernel, mbpr=mbpr, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, mbpr), lambda i: (i, 0)),
+            pl.BlockSpec((1, mbpr, bs, bs), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbr * bs, k), x.dtype),
+        interpret=INTERPRET,
+    )(idx, blocks, x)

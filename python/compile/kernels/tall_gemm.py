@@ -1,0 +1,49 @@
+"""Pallas kernel: H = PᵀQ (transposed tall-skinny GEMM).
+
+The block-CGS projection of Alg. 5 (steps S1/S6) and the dense apply-Aᵀ.
+Same streaming structure as the Gram kernel: both q×s and q×b operands are
+row-tiled through VMEM, the s×b accumulator persists across the grid.
+
+VMEM estimate (q tile 256, s=256, b=16, f64): 512 KiB + 32 KiB streamed,
+512 KiB accumulator — well under VMEM; arithmetic intensity grows with s,
+crossing into MXU-bound around s ≥ 64.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_row_tile
+
+
+def _tall_gemm_kernel(p_ref, q_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += p_ref[...].T @ q_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile",))
+def tall_gemm(p, q, row_tile=None):
+    """H = PᵀQ via a row-tiled Pallas reduction."""
+    qr, s = p.shape
+    qr2, b = q.shape
+    assert qr == qr2, "row dims must match"
+    t = pick_row_tile(qr, row_tile)
+    grid = (qr // t,)
+    return pl.pallas_call(
+        _tall_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, s), lambda i: (i, 0)),
+            pl.BlockSpec((t, b), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((s, b), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, b), q.dtype),
+        interpret=INTERPRET,
+    )(p, q)

@@ -1,0 +1,130 @@
+"""Layer-2 JAX compute graphs (the AOT-compiled building blocks).
+
+Assembles the paper's device building blocks from the Layer-1 Pallas
+kernels plus in-graph small factorizations:
+
+* ``cholqr2_graph``   — Alg. 4 fused end-to-end (Gram → Cholesky → TRSM,
+  twice) returning (Q, R).
+* ``cgs_cqr2_graph``  — Alg. 5 fused (project/update twice + CholeskyQR2)
+  returning (Q, H, R).
+* ``matmul_nn/tn``    — apply-A / apply-Aᵀ / finalize GEMMs.
+* ``spmm_graph``      — block-ELL SpMM wrapper.
+
+Design note vs. the paper: the paper ships the b×b POTRF to LAPACK on the
+host (Table 1). Keeping it *in-graph* (a fori_loop right-looking Cholesky
+over a 16×16 operand — negligible flops) removes two PCIe-equivalent
+transfers per orthogonalization; the rust XlaBackend detects a breakdown
+by checking the returned R for NaNs and falls back to the host path,
+preserving the paper's CGS fallback semantics. We deliberately avoid
+``jnp.linalg.cholesky``/``solve_triangular``: on CPU those lower to LAPACK
+custom-calls that the xla_extension 0.5.1 PJRT client cannot execute.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import common  # noqa: F401  (enables x64)
+from .kernels.gram import gram
+from .kernels.panel_update import panel_update
+from .kernels.row_gemm import row_gemm
+from .kernels.spmm_blockell import spmm_blockell
+from .kernels.tall_gemm import tall_gemm
+
+
+def chol_lower(w):
+    """Right-looking Cholesky of an SPD matrix, pure jnp (no custom
+    calls). Returns lower-triangular L; a non-SPD input yields NaNs, which
+    the rust runtime detects as the breakdown signal."""
+    w = jnp.asarray(w)
+    n = w.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, a):
+        # Explicitly NaN-out non-positive pivots so breakdown is always
+        # signalled (sqrt of a tiny *positive* rounding residue would
+        # otherwise silently produce a garbage factor).
+        piv = a[j, j]
+        d = jnp.sqrt(jnp.where(piv > 0.0, piv, jnp.nan))
+        col = jnp.where(idx > j, a[:, j] / d, 0.0)
+        col = col.at[j].set(d)
+        mask = (idx[:, None] > j) & (idx[None, :] > j)
+        a = a - jnp.outer(col, col) * mask
+        return a.at[:, j].set(col)
+
+    a = jax.lax.fori_loop(0, n, body, w)
+    return jnp.tril(a)
+
+
+def tri_inv_lower(l):
+    """L⁻¹ for lower-triangular L by row-wise forward substitution."""
+    l = jnp.asarray(l)
+    n = l.shape[0]
+    eye = jnp.eye(n, dtype=l.dtype)
+
+    def body(i, x):
+        mask = (jnp.arange(n)[:, None] < i).astype(l.dtype)
+        row = (eye[i] - l[i] @ (x * mask)) / l[i, i]
+        return x.at[i].set(row)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros((n, n), dtype=l.dtype))
+
+
+def _cholqr_pass(q):
+    """One CholeskyQR pass: returns (Q·L⁻ᵀ, L)."""
+    w = gram(q)
+    l = chol_lower(w)
+    linv = tri_inv_lower(l)
+    return row_gemm(q, linv.T), l
+
+
+def cholqr2_graph(q):
+    """Alg. 4: returns (Q_out, R) with Q_in = Q_out·R, R = L̄ᵀ·Lᵀ."""
+    q, l1 = _cholqr_pass(q)
+    q, l2 = _cholqr_pass(q)
+    r = l2.T @ l1.T
+    return q, r
+
+
+def cgs_cqr2_graph(q, p):
+    """Alg. 5: returns (Q_out, H, R) with Q_in ≈ P·H + Q_out·R.
+
+    H follows the paper's step S12 accumulation (H + H̄). Zero-padded
+    columns of P are exact no-ops (their H rows are zero), which is what
+    makes the runtime's s-bucket padding bit-safe.
+    """
+    h = tall_gemm(p, q)  # S1
+    q = panel_update(q, p, h)  # S2
+    q, l1 = _cholqr_pass(q)  # S3–S5
+    hbar = tall_gemm(p, q)  # S6
+    q = panel_update(q, p, hbar)  # S7
+    q, l2 = _cholqr_pass(q)  # S8–S10
+    r = l2.T @ l1.T  # S11
+    h = h + hbar  # S12
+    return q, h, r
+
+
+def matmul_nn_graph(a, x):
+    """Y = A·X (dense apply-A / finalize GEMM)."""
+    return row_gemm(a, x)
+
+
+def matmul_tn_graph(a, x):
+    """Y = Aᵀ·X (dense apply-Aᵀ)."""
+    return tall_gemm(a, x)
+
+
+def spmm_graph(blocks, idx, x):
+    """Y = A·X, A in block-ELL form (sparse apply-A)."""
+    return spmm_blockell(blocks, idx, x)
+
+
+# --- pure-jnp references for the graph-level tests --------------------
+
+
+def cholqr2_ref(q):
+    qq, r = jnp.linalg.qr(q)
+    # Fix sign convention: R diagonal positive (CholeskyQR2 produces
+    # positive-diagonal R because L has positive diagonal).
+    sign = jnp.sign(jnp.diag(r))
+    sign = jnp.where(sign == 0, 1.0, sign)
+    return qq * sign[None, :], r * sign[:, None]

@@ -1,0 +1,10 @@
+import os
+import sys
+
+import jax
+
+# f64 everywhere (paper uses IEEE double precision).
+jax.config.update("jax_enable_x64", True)
+
+# Make `compile` importable when pytest runs from python/ or the repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,128 @@
+"""L2 correctness: the fused orthogonalization graphs and the in-graph
+small factorizations vs. numpy/jnp references."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rng_mat(seed, *shape):
+    return np.random.default_rng(seed).standard_normal(shape)
+
+
+def spd(seed, n):
+    g = rng_mat(seed, n + 4, n)
+    return g.T @ g + 1e-3 * np.eye(n)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 24), seed=st.integers(0, 2**31))
+def test_chol_lower_matches_numpy(n, seed):
+    w = spd(seed, n)
+    l = np.asarray(model.chol_lower(w))
+    want = np.linalg.cholesky(w)
+    assert_allclose(l, want, rtol=1e-10, atol=1e-12)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 20), seed=st.integers(0, 2**31))
+def test_tri_inv_lower(n, seed):
+    l = np.linalg.cholesky(spd(seed, n))
+    linv = np.asarray(model.tri_inv_lower(l))
+    assert_allclose(linv @ l, np.eye(n), rtol=1e-10, atol=1e-10)
+    # strictly lower-triangular output
+    assert np.allclose(np.triu(linv, 1), 0.0)
+
+
+def test_chol_lower_breakdown_yields_nan():
+    # A clearly indefinite matrix must signal breakdown with NaN (the
+    # runtime's fallback trigger).
+    w = np.array([[1.0, 2.0], [2.0, 1.0]])
+    l = np.asarray(model.chol_lower(w))
+    assert np.isnan(l).any()
+
+
+def test_cholqr2_graph_breakdown_usable_or_detectable():
+    # Rank-deficient panel contract (DESIGN.md §7): the graph result is
+    # either *usable* (orthonormal Q — the dead direction was replaced by
+    # normalized rounding noise, exactly what the CGS2 fallback would do)
+    # or *detectable* (NaN somewhere), in which case the rust runtime
+    # falls back to the host CGS2 path. It must never be silently wrong.
+    for seed in range(5):
+        y = rng_mat(seed, 32, 4)
+        y[:, 2] = y[:, 0]
+        qq, r = (np.asarray(t) for t in model.cholqr2_graph(y))
+        finite = np.isfinite(qq).all() and np.isfinite(r).all()
+        if finite:
+            orth_err = np.abs(qq.T @ qq - np.eye(4)).max()
+            assert orth_err < 1e-8, f"seed {seed}: silently wrong ({orth_err:.2e})"
+
+
+@settings(**SETTINGS)
+@given(
+    q=st.integers(2, 24).map(lambda x: 8 * x),
+    b=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31),
+)
+def test_cholqr2_graph(q, b, seed):
+    y = rng_mat(seed, q, b)
+    qq, r = model.cholqr2_graph(y)
+    qq, r = np.asarray(qq), np.asarray(r)
+    # Orthonormal + reconstructs + upper triangular.
+    assert_allclose(qq.T @ qq, np.eye(b), rtol=0, atol=1e-12)
+    assert_allclose(qq @ r, y, rtol=1e-11, atol=1e-11)
+    assert np.allclose(np.tril(r, -1), 0.0)
+
+
+@settings(**SETTINGS)
+@given(
+    q=st.integers(4, 20).map(lambda x: 8 * x),
+    s=st.sampled_from([4, 8, 16]),
+    b=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_cgs_cqr2_graph(q, s, b, seed):
+    # Orthonormal history panel P via numpy QR.
+    p, _ = np.linalg.qr(rng_mat(seed, q, s))
+    y = rng_mat(seed + 1, q, b)
+    qq, h, r = (np.asarray(t) for t in model.cgs_cqr2_graph(y, p))
+    assert_allclose(qq.T @ qq, np.eye(b), rtol=0, atol=1e-12)
+    assert_allclose(p.T @ qq, np.zeros((s, b)), rtol=0, atol=1e-11)
+    assert_allclose(p @ h + qq @ r, y, rtol=1e-10, atol=1e-10)
+
+
+def test_cgs_cqr2_zero_padded_history_is_exact():
+    # The runtime pads P's column count to the next s bucket with zeros.
+    q, s, b = 64, 6, 4
+    p, _ = np.linalg.qr(rng_mat(3, q, s))
+    y = rng_mat(4, q, b)
+    p_pad = np.hstack([p, np.zeros((q, 10))])
+    q1, h1, r1 = (np.asarray(t) for t in model.cgs_cqr2_graph(y, p))
+    q2, h2, r2 = (np.asarray(t) for t in model.cgs_cqr2_graph(y, p_pad))
+    assert_allclose(q1, q2, rtol=0, atol=1e-13)
+    assert_allclose(r1, r2, rtol=0, atol=1e-13)
+    assert_allclose(h2[:s], h1, rtol=0, atol=1e-13)
+    assert np.all(h2[s:] == 0.0)
+
+
+def test_cholqr2_zero_padded_rows_are_exact():
+    q, b = 40, 4
+    y = rng_mat(5, q, b)
+    y_pad = np.vstack([y, np.zeros((24, b))])
+    q1, r1 = (np.asarray(t) for t in model.cholqr2_graph(y))
+    q2, r2 = (np.asarray(t) for t in model.cholqr2_graph(y_pad))
+    assert_allclose(r1, r2, rtol=0, atol=1e-13)
+    assert_allclose(q2[:q], q1, rtol=0, atol=1e-13)
+    assert np.all(q2[q:] == 0.0)
+
+
+def test_matmul_graphs():
+    a = rng_mat(6, 48, 16)
+    x = rng_mat(7, 16, 5)
+    assert_allclose(np.asarray(model.matmul_nn_graph(a, x)), a @ x, rtol=1e-12, atol=1e-12)
+    z = rng_mat(8, 48, 3)
+    assert_allclose(np.asarray(model.matmul_tn_graph(a, z)), a.T @ z, rtol=1e-12, atol=1e-12)

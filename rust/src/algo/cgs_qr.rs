@@ -1,0 +1,131 @@
+//! CGS-QR: QR factorization via block Gram-Schmidt (Algorithm 3).
+//!
+//! Factors a tall-and-skinny q×r matrix as Q·R by orthonormalizing the
+//! first b-column block with CholeskyQR2 (Alg. 4) and each subsequent
+//! block against the already-built panel with CGS-CQR2 (Alg. 5). Q is
+//! formed explicitly (the paper's choice for GPU efficiency); R is
+//! assembled block-column-wise into an r×r upper-triangular factor.
+
+use crate::backend::Backend;
+use crate::error::{Error, Result};
+use crate::la::mat::Mat;
+
+use super::orth::{cgs_cqr2, cholqr2};
+
+/// Blocked CGS QR factorization. `y` (q×r) is orthonormalized in place;
+/// the returned R (r×r, upper triangular) satisfies `Y_in ≈ Q_out · R`.
+/// `b` is the block size; `r` need not be a multiple of `b` (the last
+/// block is narrower).
+pub fn cgs_qr<B: Backend + ?Sized>(be: &mut B, y: &mut Mat, b: usize) -> Result<Mat> {
+    let r_cols = y.cols();
+    if b == 0 {
+        return Err(Error::InvalidParam("block size b must be >= 1".into()));
+    }
+    let mut r = Mat::zeros(r_cols, r_cols);
+
+    // S1: first block via CholeskyQR2.
+    let b0 = b.min(r_cols);
+    let mut q0 = y.panel_owned(0, b0);
+    let r0 = cholqr2(be, &mut q0)?;
+    y.set_panel(0, &q0);
+    for j in 0..b0 {
+        for i in 0..=j {
+            r.set(i, j, r0.at(i, j));
+        }
+    }
+
+    // S2: remaining blocks via CGS-CQR2 against the growing panel.
+    let mut j0 = b0;
+    while j0 < r_cols {
+        let jb = b.min(r_cols - j0);
+        let mut qj = y.panel_owned(j0, jb);
+        let (h, rj) = {
+            let panel = y.panel(0, j0);
+            cgs_cqr2(be, &mut qj, panel)?
+        };
+        y.set_panel(j0, &qj);
+        // Assemble the block column of R: H stacked on R_j.
+        for j in 0..jb {
+            for i in 0..j0 {
+                r.set(i, j0 + j, h.at(i, j));
+            }
+            for i in 0..=j {
+                r.set(j0 + i, j0 + j, rj.at(i, j));
+            }
+        }
+        j0 += jb;
+    }
+    Ok(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::CpuBackend;
+    use crate::la::blas3::mat_nn;
+    use crate::la::norms::orth_error;
+    use crate::util::rng::Rng;
+
+    fn dummy_backend() -> CpuBackend {
+        CpuBackend::new_dense(Mat::zeros(1, 1))
+    }
+
+    #[test]
+    fn factorizes_tall_skinny() {
+        let mut be = dummy_backend();
+        let mut rng = Rng::new(10);
+        for &(q_rows, r_cols, b) in
+            &[(100usize, 16usize, 4usize), (333, 24, 8), (64, 16, 16), (90, 10, 3)]
+        {
+            let y0 = Mat::randn(q_rows, r_cols, &mut rng);
+            let mut y = y0.clone();
+            let r = cgs_qr(&mut be, &mut y, b).unwrap();
+            assert!(orth_error(&y) < 1e-12, "orth {q_rows}x{r_cols} b={b}: {}", orth_error(&y));
+            let back = mat_nn(&y, &r);
+            assert!(
+                back.max_abs_diff(&y0) / y0.fro_norm() < 1e-12,
+                "reconstruct {q_rows}x{r_cols} b={b}"
+            );
+            // R strictly upper triangular below the diagonal.
+            for j in 0..r_cols {
+                for i in (j + 1)..r_cols {
+                    assert_eq!(r.at(i, j), 0.0, "R({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_householder_qr_up_to_signs() {
+        let mut be = dummy_backend();
+        let mut rng = Rng::new(11);
+        let y0 = Mat::randn(80, 12, &mut rng);
+        let mut y = y0.clone();
+        let _ = cgs_qr(&mut be, &mut y, 4).unwrap();
+        let (qh, _) = crate::la::qr::householder_qr(&y0);
+        // Same column space: ‖Q_cgs − Q_h (Q_hᵀ Q_cgs)‖ ≈ 0.
+        let proj = crate::la::blas3::mat_tn(&qh, &y);
+        let back = mat_nn(&qh, &proj);
+        assert!(back.max_abs_diff(&y) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_zero_block() {
+        let mut be = dummy_backend();
+        let mut y = Mat::zeros(10, 4);
+        assert!(cgs_qr(&mut be, &mut y, 0).is_err());
+    }
+
+    #[test]
+    fn single_block_equals_cholqr2() {
+        let mut be = dummy_backend();
+        let mut rng = Rng::new(12);
+        let y0 = Mat::randn(50, 8, &mut rng);
+        let mut y1 = y0.clone();
+        let mut y2 = y0.clone();
+        let r1 = cgs_qr(&mut be, &mut y1, 8).unwrap();
+        let r2 = crate::algo::orth::cholqr2(&mut be, &mut y2).unwrap();
+        assert!(y1.max_abs_diff(&y2) < 1e-14);
+        assert!(r1.max_abs_diff(&r2) < 1e-14);
+    }
+}

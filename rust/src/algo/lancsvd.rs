@@ -1,0 +1,422 @@
+//! LancSVD: truncated SVD via the block Golub–Kahan–Lanczos method with
+//! one-sided full orthogonalization and the basic restart (Algorithm 2).
+//!
+//! Each inner iteration extends two orthonormal bases, P ∈ ℝ^{n×r} and
+//! P̄ ∈ ℝ^{m×r}, by one b-column block:
+//!
+//! ```text
+//!   Qᵢ   = Aᵀ·Q̄ᵢ      orthogonalized against P(1..i−1)   →  Lᵢ   (S2, S3)
+//!   Q̄ᵢ₊₁ = A·Qᵢ       orthogonalized against P̄(1..i)      →  Rᵢ   (S4, S5)
+//! ```
+//!
+//! which assembles the lower block-bidiagonal B_k of Eq. 8 (Lᵢ diagonal
+//! blocks, Rᵢ sub-diagonal blocks) satisfying A·P_k = P̄_k·B_k +
+//! Q̄_{k+1}·R_k·E_kᵀ. The SVD of B_k then yields the truncated triplets
+//! (Eqs. 9–12), and ‖R_k·v̄ᵢ[last b]‖ is a *free* residual estimate used
+//! for the restart stopping test.
+//!
+//! The restart (paper §2.2, Golub/Luk/Overton) re-seeds the iteration with
+//! Q̄₁ = P̄·Ū₁, the current approximation of the b leading left singular
+//! vectors, preserving the most relevant search directions.
+
+use crate::backend::Backend;
+use crate::error::{Error, Result};
+use crate::la::blas1::nrm2;
+use crate::la::mat::Mat;
+use crate::la::svd::jacobi_svd;
+use crate::metrics::{Block, Timer};
+use crate::util::rng::Rng;
+
+use super::orth::{cgs_cqr2, cholqr2, random_orthonormal_panel};
+use super::{InitDist, LancSvdOpts, Restart, TruncatedSvd};
+
+/// Run LancSVD on the backend's operand matrix.
+pub fn lancsvd<B: Backend + ?Sized>(be: &mut B, opts: &LancSvdOpts) -> Result<TruncatedSvd> {
+    let (m, n) = (be.m(), be.n());
+    let LancSvdOpts { r, p, b, seed, init, tol, wanted, restart } = opts.clone();
+    if b == 0 || r == 0 || p == 0 {
+        return Err(Error::InvalidParam("r, p, b must all be >= 1".into()));
+    }
+    if r % b != 0 {
+        return Err(Error::InvalidParam(format!("r={r} must be a multiple of b={b}")));
+    }
+    if r > n.min(m) {
+        return Err(Error::InvalidParam(format!("r={r} exceeds min dim of {m}x{n}")));
+    }
+    // Thick restart keeps `keep` Ritz pairs (rounded up to a b multiple);
+    // at least one fresh block must fit after them.
+    let keep = match restart {
+        Restart::Basic => 0,
+        Restart::Thick { keep } => {
+            let k = keep.max(1).div_ceil(b) * b;
+            if k + b > r {
+                return Err(Error::InvalidParam(format!(
+                    "thick restart keep={keep} (rounded {k}) leaves no room in r={r}"
+                )));
+            }
+            k
+        }
+    };
+
+    // S1: random orthonormal start block Q̄₁ ∈ ℝ^{m×b}.
+    be.profile_mut().set_phase(Block::Init);
+    let mut rng = Rng::new(seed);
+    let mut qbar_cur = match init {
+        InitDist::CenteredPoisson => random_orthonormal_panel(be, m, b, &mut rng)?,
+        InitDist::Normal => {
+            let mut q = Mat::randn(m, b, &mut rng);
+            cholqr2(be, &mut q)?;
+            q
+        }
+    };
+
+    let mut p_basis = Mat::zeros(n, r); // [Q₁ … Q_k]
+    let mut pbar_basis = Mat::zeros(m, r); // [Q̄₁ … Q̄_k]
+    let mut bmat = Mat::zeros(r, r);
+    let mut rk_last = Mat::zeros(b, b);
+    let mut svd_b = None;
+    let mut iters = 0;
+    let mut est_res: Vec<f64> = Vec::new();
+    // Columns of the bases already valid at loop entry (0, or `keep`
+    // after a thick restart).
+    let mut filled = 0usize;
+
+    for j in 1..=p {
+        iters = j;
+        // Extend the bases block-by-block until the Krylov width is full.
+        while filled < r {
+            let s = filled;
+            // Record Q̄ᵢ into P̄ before extending the m-side basis.
+            pbar_basis.set_panel(s, &qbar_cur);
+
+            // S2: Qᵢ = Aᵀ·Q̄ᵢ
+            be.profile_mut().set_phase(Block::MultAt);
+            let mut qi = be.apply_at(qbar_cur.as_ref());
+
+            // S3: orthogonalize in the n dimension → Lᵢᵀ (upper).
+            be.profile_mut().set_phase(Block::OrthN);
+            let lt = if s == 0 {
+                cholqr2(be, &mut qi)? // S3a
+            } else {
+                let (_h, lt) = {
+                    let panel = p_basis.panel(0, s);
+                    cgs_cqr2(be, &mut qi, panel)? // S3b
+                };
+                lt
+            };
+            p_basis.set_panel(s, &qi);
+            // B diagonal block: Lᵢ = (Lᵢᵀ)ᵀ, lower triangular.
+            for jj in 0..b {
+                for ii in jj..b {
+                    bmat.set(s + ii, s + jj, lt.at(jj, ii));
+                }
+            }
+
+            // S4: Q̄ᵢ₊₁ = A·Qᵢ
+            be.profile_mut().set_phase(Block::MultA);
+            let mut qbar_next = be.apply_a(qi.as_ref());
+
+            // S5: orthogonalize in the m dimension against P̄ᵢ → Rᵢ.
+            be.profile_mut().set_phase(Block::OrthM);
+            let (_hbar, ri) = {
+                let panel = pbar_basis.panel(0, s + b);
+                cgs_cqr2(be, &mut qbar_next, panel)?
+            };
+            if s + b < r {
+                // B sub-diagonal block (upper-triangular Rᵢ).
+                for jj in 0..b {
+                    for ii in 0..=jj {
+                        bmat.set(s + b + ii, s + jj, ri.at(ii, jj));
+                    }
+                }
+            } else {
+                rk_last = ri; // ‖R_k‖ drives the residual estimate
+            }
+            qbar_cur = qbar_next;
+            filled += b;
+        }
+
+        // S6: SVD of B_k on the host.
+        be.profile_mut().set_phase(Block::SmallSvd);
+        let t = Timer::start(9.0 * (r * r * r) as f64);
+        let svd = jacobi_svd(&bmat)?;
+        t.stop(be.profile_mut());
+
+        // Free residual estimates: ‖A·(P v̄ᵢ) − σᵢ·(P̄ ūᵢ)‖ = ‖R_k·v̄ᵢ[r−b..r]‖.
+        let coupling = |i: usize| -> Vec<f64> {
+            let mut tail = vec![0.0; b];
+            for (t_i, tv) in tail.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for c in 0..b {
+                    acc += rk_last.at(t_i, c) * svd.v.at(r - b + c, i);
+                }
+                *tv = acc;
+            }
+            tail
+        };
+        est_res = (0..wanted.min(r))
+            .map(|i| {
+                let sigma = svd.s[i];
+                if sigma > 0.0 {
+                    nrm2(&coupling(i)) / sigma
+                } else {
+                    f64::INFINITY
+                }
+            })
+            .collect();
+
+        let converged = tol
+            .map(|t| est_res.iter().take(wanted).all(|&x| x < t))
+            .unwrap_or(false);
+
+        if j < p && !converged {
+            be.profile_mut().set_phase(Block::Finalize);
+            match restart {
+                Restart::Basic => {
+                    // S7: Q̄₁ ← P̄·Ū₁ (first b columns of Ū), rebuild all.
+                    qbar_cur = be.gemm_nn(pbar_basis.as_ref(), svd.u.panel(0, b));
+                    be.profile_mut().set_phase(Block::OrthM);
+                    cholqr2(be, &mut qbar_cur)?;
+                    bmat.data_mut().fill(0.0);
+                    filled = 0;
+                }
+                Restart::Thick { .. } => {
+                    // Keep `keep` Ritz pairs: new bases are the Ritz
+                    // vectors; B becomes the arrow matrix diag(Σ) with
+                    // the residual coupling S = R_k·V̄[last b, :keep] in
+                    // the first sub-row block; the continuation block is
+                    // the *existing* residual Q̄_{k+1} (already ⊥ P̄·Ū).
+                    let p_new = be.gemm_nn(p_basis.as_ref(), svd.v.panel(0, keep));
+                    let pbar_new = be.gemm_nn(pbar_basis.as_ref(), svd.u.panel(0, keep));
+                    p_basis.data_mut().fill(0.0);
+                    pbar_basis.data_mut().fill(0.0);
+                    p_basis.set_panel(0, &p_new);
+                    pbar_basis.set_panel(0, &pbar_new);
+                    bmat.data_mut().fill(0.0);
+                    for i in 0..keep {
+                        bmat.set(i, i, svd.s[i]);
+                    }
+                    for i in 0..keep {
+                        let s_col = coupling(i);
+                        for (t_i, &v) in s_col.iter().enumerate() {
+                            bmat.set(keep + t_i, i, v);
+                        }
+                    }
+                    filled = keep;
+                    // qbar_cur is already the residual block Q̄_{k+1}.
+                }
+            }
+            svd_b = Some(svd);
+        } else {
+            svd_b = Some(svd);
+            if converged {
+                break;
+            }
+        }
+    }
+
+    let svd = svd_b.expect("at least one outer iteration ran");
+    // S8/S9: map back to the problem space: U = P̄·Ū, V = P·V̄.
+    be.profile_mut().set_phase(Block::Finalize);
+    let u_t = be.gemm_nn(pbar_basis.as_ref(), svd.u.as_ref());
+    let v_t = be.gemm_nn(p_basis.as_ref(), svd.v.as_ref());
+
+    Ok(TruncatedSvd {
+        u: u_t,
+        sigma: svd.s,
+        v: v_t,
+        profile: be.take_profile(),
+        iters,
+        est_residuals: est_res,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::residuals;
+    use crate::backend::cpu::CpuBackend;
+    use crate::gen::dense::{dense_with_spectrum, paper_dense};
+    use crate::la::norms::orth_error;
+
+    #[test]
+    fn recovers_spectrum_dense() {
+        let sigma: Vec<f64> = (0..16).map(|i| 2.0f64.powi(-(i as i32))).collect();
+        let prob = dense_with_spectrum(100, 16, &sigma, 1);
+        let mut be = CpuBackend::new_dense(prob.a.clone());
+        // b ≥ wanted (paper §2.2: "b should be chosen as large as the
+        // number of desired singular values" for the restart to preserve
+        // a Lanczos vector per wanted triplet).
+        let opts = LancSvdOpts { r: 16, p: 6, b: 8, wanted: 6, ..Default::default() };
+        let svd = lancsvd(&mut be, &opts).unwrap();
+        for i in 0..6 {
+            assert!(
+                (svd.sigma[i] - sigma[i]).abs() / sigma[i] < 1e-9,
+                "sigma_{i}: {} vs {}",
+                svd.sigma[i],
+                sigma[i]
+            );
+        }
+        assert!(orth_error(&svd.u) < 1e-9, "U orth {}", orth_error(&svd.u));
+        assert!(orth_error(&svd.v) < 1e-9, "V orth {}", orth_error(&svd.v));
+        let mut be2 = CpuBackend::new_dense(prob.a);
+        let res = residuals(&mut be2, &svd, 6);
+        assert!(res.iter().all(|&x| x < 1e-8), "residuals {res:?}");
+    }
+
+    #[test]
+    fn est_residuals_track_true_residuals() {
+        let prob = paper_dense(150, 60, 2);
+        let mut be = CpuBackend::new_dense(prob.a.clone());
+        let opts = LancSvdOpts { r: 32, p: 2, b: 8, wanted: 10, ..Default::default() };
+        let svd = lancsvd(&mut be, &opts).unwrap();
+        let mut be2 = CpuBackend::new_dense(prob.a);
+        let truth = residuals(&mut be2, &svd, 10);
+        for i in 0..10 {
+            let est = svd.est_residuals[i];
+            let act = truth[i];
+            // The estimate must be a usable proxy (same order of magnitude
+            // or an upper bound within ~100x once converged digits agree).
+            assert!(
+                est < 1e-6 || act <= est * 100.0,
+                "triplet {i}: est {est:.3e} vs act {act:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn restart_improves_accuracy() {
+        // Paper Fig. 4: p=1 gives ~1e-6..1e-4; p=4 reaches ~1e-14.
+        let prob = paper_dense(200, 64, 3);
+        let a = prob.a.clone();
+        let worst = |p: usize| {
+            let mut be = CpuBackend::new_dense(a.clone());
+            let opts = LancSvdOpts { r: 32, p, b: 8, wanted: 10, seed: 5, ..Default::default() };
+            let svd = lancsvd(&mut be, &opts).unwrap();
+            let mut be2 = CpuBackend::new_dense(a.clone());
+            residuals(&mut be2, &svd, 10).iter().fold(0.0f64, |mx, &x| mx.max(x))
+        };
+        let r1 = worst(1);
+        let r4 = worst(4);
+        assert!(r4 < r1, "restarts must not hurt: p1={r1:.3e} p4={r4:.3e}");
+        assert!(r4 < 1e-8, "p=4 should converge hard: {r4:.3e}");
+    }
+
+    #[test]
+    fn tol_stops_early() {
+        let prob = paper_dense(150, 48, 4);
+        let mut be = CpuBackend::new_dense(prob.a);
+        let opts = LancSvdOpts {
+            r: 48,
+            p: 20,
+            b: 8,
+            wanted: 6,
+            tol: Some(1e-10),
+            ..Default::default()
+        };
+        let svd = lancsvd(&mut be, &opts).unwrap();
+        assert!(svd.iters < 20, "should stop early, ran {}", svd.iters);
+        assert!(svd.est_residuals.iter().take(6).all(|&x| x < 1e-10));
+    }
+
+    #[test]
+    fn works_on_sparse_operand() {
+        use crate::gen::sparse::{generate, SparseSpec};
+        let spec = SparseSpec { rows: 200, cols: 90, nnz: 2500, seed: 9, ..Default::default() };
+        let a = generate(&spec);
+        let mut be = CpuBackend::new_sparse(a.clone());
+        let opts = LancSvdOpts { r: 48, p: 3, b: 16, wanted: 10, seed: 1, ..Default::default() };
+        let svd = lancsvd(&mut be, &opts).unwrap();
+        let mut be2 = CpuBackend::new_sparse(a);
+        let res = residuals(&mut be2, &svd, 10);
+        assert!(res.iter().all(|&x| x < 1e-5), "residuals {res:?}");
+        // Phases exercised: k = r/b = 3 inner steps × 3 restarts.
+        assert!(svd.profile.stat(Block::MultAt).calls >= 9);
+        assert!(svd.profile.stat(Block::OrthM).calls > 0);
+    }
+
+    #[test]
+    fn thick_restart_matches_basic_quality_cheaper() {
+        use crate::algo::Restart;
+        let prob = paper_dense(400, 96, 8);
+        let a = prob.a.clone();
+        let solve = |restart: Restart| {
+            let mut be = CpuBackend::new_dense(a.clone());
+            let svd = lancsvd(
+                &mut be,
+                &LancSvdOpts { r: 48, p: 4, b: 16, wanted: 10, restart, ..Default::default() },
+            )
+            .unwrap();
+            let mut c = CpuBackend::new_dense(a.clone());
+            let res = residuals(&mut c, &svd, 10);
+            let flops = svd.profile.total_flops();
+            (res.iter().cloned().fold(0.0f64, f64::max), flops)
+        };
+        let (basic_res, basic_flops) = solve(Restart::Basic);
+        let (thick_res, thick_flops) = solve(Restart::Thick { keep: 16 });
+        // Same accuracy class, strictly less work per restart.
+        assert!(
+            thick_res < basic_res.max(1e-12) * 1e3,
+            "thick {thick_res:.2e} vs basic {basic_res:.2e}"
+        );
+        assert!(
+            thick_flops < basic_flops,
+            "thick must reuse work: {thick_flops:.3e} vs {basic_flops:.3e}"
+        );
+    }
+
+    #[test]
+    fn thick_restart_orthonormal_bases() {
+        use crate::algo::Restart;
+        let prob = paper_dense(300, 64, 9);
+        let mut be = CpuBackend::new_dense(prob.a.clone());
+        let svd = lancsvd(
+            &mut be,
+            &LancSvdOpts {
+                r: 32,
+                p: 5,
+                b: 8,
+                wanted: 8,
+                restart: Restart::Thick { keep: 8 },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(orth_error(&svd.u) < 1e-9, "U orth {}", orth_error(&svd.u));
+        assert!(orth_error(&svd.v) < 1e-9, "V orth {}", orth_error(&svd.v));
+        let mut c = CpuBackend::new_dense(prob.a);
+        let res = residuals(&mut c, &svd, 8);
+        assert!(res.iter().all(|&x| x < 1e-8), "residuals {res:?}");
+    }
+
+    #[test]
+    fn thick_restart_rejects_keep_too_large() {
+        use crate::algo::Restart;
+        let prob = paper_dense(100, 40, 2);
+        let mut be = CpuBackend::new_dense(prob.a);
+        let opts = LancSvdOpts {
+            r: 32,
+            p: 2,
+            b: 16,
+            restart: Restart::Thick { keep: 32 },
+            ..Default::default()
+        };
+        assert!(lancsvd(&mut be, &opts).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let prob = paper_dense(30, 10, 3);
+        let mut be = CpuBackend::new_dense(prob.a);
+        let bad = |r: usize, p: usize, b: usize| LancSvdOpts {
+            r,
+            p,
+            b,
+            ..Default::default()
+        };
+        assert!(lancsvd(&mut be, &bad(0, 1, 1)).is_err());
+        assert!(lancsvd(&mut be, &bad(10, 1, 3)).is_err(), "r not multiple of b");
+        assert!(lancsvd(&mut be, &bad(100, 1, 4)).is_err(), "r too large");
+        assert!(lancsvd(&mut be, &bad(8, 0, 4)).is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Pure-rust reference backend.
+//!
+//! Implements the [`Backend`] op set over the native dense/sparse
+//! substrates. The transposed product `apply_at` defaults to the scatter
+//! kernel (the cuSPARSE-like "implicit transpose" the paper identifies as
+//! the bottleneck); [`CpuBackend::with_explicit_transpose`] switches to a
+//! pre-transposed CSR copy — the alternative the paper evaluated and the
+//! subject of one of our ablation benches.
+
+use super::{Backend, Operand};
+use crate::la::blas3;
+use crate::la::mat::{Mat, MatRef};
+use crate::metrics::{Profile, Timer};
+use crate::sparse::csr::Csr;
+
+/// Reference CPU backend.
+pub struct CpuBackend {
+    a: Operand,
+    /// Explicit Aᵀ copy; when present `apply_at` uses gather-SpMM on it.
+    at: Option<Csr>,
+    profile: Profile,
+}
+
+impl CpuBackend {
+    pub fn new_sparse(a: Csr) -> CpuBackend {
+        CpuBackend { a: Operand::Sparse(a), at: None, profile: Profile::new() }
+    }
+
+    pub fn new_dense(a: Mat) -> CpuBackend {
+        CpuBackend { a: Operand::Dense(a), at: None, profile: Profile::new() }
+    }
+
+    pub fn new(a: Operand) -> CpuBackend {
+        CpuBackend { a, at: None, profile: Profile::new() }
+    }
+
+    /// Store an explicit transposed CSR copy and use gather-SpMM for Aᵀ·X
+    /// (paper §4.1.2: "explicitly storing a transposed copy of the sparse
+    /// matrix"). No-op for dense operands.
+    pub fn with_explicit_transpose(mut self) -> CpuBackend {
+        if let Operand::Sparse(a) = &self.a {
+            self.at = Some(a.transpose());
+        }
+        self
+    }
+
+    pub fn operand(&self) -> &Operand {
+        &self.a
+    }
+}
+
+impl Backend for CpuBackend {
+    fn m(&self) -> usize {
+        self.a.shape().0
+    }
+    fn n(&self) -> usize {
+        self.a.shape().1
+    }
+    fn nnz(&self) -> Option<usize> {
+        self.a.nnz()
+    }
+
+    fn apply_a(&mut self, x: MatRef) -> Mat {
+        let t = Timer::start(self.mult_flops(x.cols));
+        let mut y = Mat::zeros(self.m(), x.cols);
+        let xo = x.to_owned();
+        match &self.a {
+            Operand::Sparse(a) => a.spmm(&xo, &mut y),
+            Operand::Dense(a) => blas3::gemm_nn(1.0, a.as_ref(), x, 0.0, &mut y),
+        }
+        t.stop(&mut self.profile);
+        y
+    }
+
+    fn apply_at(&mut self, x: MatRef) -> Mat {
+        let t = Timer::start(self.mult_flops(x.cols));
+        let mut y = Mat::zeros(self.n(), x.cols);
+        match (&self.a, &self.at) {
+            (_, Some(at)) => {
+                let xo = x.to_owned();
+                at.spmm(&xo, &mut y);
+            }
+            (Operand::Sparse(a), None) => {
+                let xo = x.to_owned();
+                a.spmm_t(&xo, &mut y);
+            }
+            (Operand::Dense(a), _) => blas3::gemm_tn(1.0, a.as_ref(), x, 0.0, &mut y),
+        }
+        t.stop(&mut self.profile);
+        y
+    }
+
+    fn gram(&mut self, q: MatRef) -> Mat {
+        let flops = q.cols as f64 * q.cols as f64 * q.rows as f64; // syrk: b²q
+        let t = Timer::start(flops);
+        let w = blas3::gram(q);
+        t.stop(&mut self.profile);
+        w
+    }
+
+    fn proj(&mut self, p: MatRef, q: MatRef) -> Mat {
+        let flops = 2.0 * p.rows as f64 * p.cols as f64 * q.cols as f64;
+        let t = Timer::start(flops);
+        let mut h = Mat::zeros(p.cols, q.cols);
+        blas3::gemm_tn(1.0, p, q, 0.0, &mut h);
+        t.stop(&mut self.profile);
+        h
+    }
+
+    fn subtract_proj(&mut self, q: &mut Mat, p: MatRef, h: &Mat) {
+        let flops = 2.0 * p.rows as f64 * p.cols as f64 * h.cols() as f64;
+        let t = Timer::start(flops);
+        blas3::gemm_nn(-1.0, p, h.as_ref(), 1.0, q);
+        t.stop(&mut self.profile);
+    }
+
+    fn tri_solve_right(&mut self, q: &mut Mat, l: &Mat) {
+        let flops = q.cols() as f64 * q.cols() as f64 * q.rows() as f64; // b²q
+        let t = Timer::start(flops);
+        blas3::trsm_right_lt(l, q);
+        t.stop(&mut self.profile);
+    }
+
+    fn gemm_nn(&mut self, a: MatRef, b: MatRef) -> Mat {
+        let flops = 2.0 * a.rows as f64 * a.cols as f64 * b.cols as f64;
+        let t = Timer::start(flops);
+        let mut c = Mat::zeros(a.rows, b.cols);
+        blas3::gemm_nn(1.0, a, b, 0.0, &mut c);
+        t.stop(&mut self.profile);
+        c
+    }
+
+    fn profile_mut(&mut self) -> &mut Profile {
+        &mut self.profile
+    }
+
+    fn take_profile(&mut self) -> Profile {
+        std::mem::take(&mut self.profile)
+    }
+
+    fn name(&self) -> &'static str {
+        if self.at.is_some() {
+            "cpu+expT"
+        } else {
+            "cpu"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas3::{mat_nn, mat_tn};
+    use crate::metrics::Block;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn small_sparse(seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(20, 12);
+        for _ in 0..60 {
+            coo.push(rng.below(20), rng.below(12), rng.normal());
+        }
+        Csr::from_coo(&coo).unwrap()
+    }
+
+    #[test]
+    fn sparse_ops_match_dense_reference() {
+        let a = small_sparse(1);
+        let ad = a.to_dense();
+        let mut be = CpuBackend::new_sparse(a);
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(12, 4, &mut rng);
+        let y = be.apply_a(x.as_ref());
+        assert!(y.max_abs_diff(&mat_nn(&ad, &x)) < 1e-12);
+        let z = Mat::randn(20, 4, &mut rng);
+        let w = be.apply_at(z.as_ref());
+        assert!(w.max_abs_diff(&mat_tn(&ad, &z)) < 1e-12);
+    }
+
+    #[test]
+    fn explicit_transpose_same_numbers() {
+        let a = small_sparse(3);
+        let mut b1 = CpuBackend::new_sparse(a.clone());
+        let mut b2 = CpuBackend::new_sparse(a).with_explicit_transpose();
+        let mut rng = Rng::new(4);
+        let z = Mat::randn(20, 3, &mut rng);
+        let w1 = b1.apply_at(z.as_ref());
+        let w2 = b2.apply_at(z.as_ref());
+        assert!(w1.max_abs_diff(&w2) < 1e-12);
+        assert_eq!(b2.name(), "cpu+expT");
+    }
+
+    #[test]
+    fn profile_collects_phase_flops() {
+        let a = small_sparse(5);
+        let nz = a.nnz() as f64;
+        let mut be = CpuBackend::new_sparse(a);
+        be.profile_mut().set_phase(Block::MultA);
+        let mut rng = Rng::new(6);
+        let x = Mat::randn(12, 4, &mut rng);
+        let _ = be.apply_a(x.as_ref());
+        let p = be.take_profile();
+        assert_eq!(p.stat(Block::MultA).calls, 1);
+        assert!((p.stat(Block::MultA).flops - 2.0 * nz * 4.0).abs() < 1e-9);
+        // take_profile reset
+        assert_eq!(be.profile_mut().stat(Block::MultA).calls, 0);
+    }
+
+    #[test]
+    fn dense_backend_ops() {
+        let mut rng = Rng::new(7);
+        let ad = Mat::randn(15, 9, &mut rng);
+        let mut be = CpuBackend::new_dense(ad.clone());
+        assert_eq!((be.m(), be.n()), (15, 9));
+        assert_eq!(be.nnz(), None);
+        let x = Mat::randn(9, 2, &mut rng);
+        assert!(be.apply_a(x.as_ref()).max_abs_diff(&mat_nn(&ad, &x)) < 1e-12);
+        let q = Mat::randn(15, 3, &mut rng);
+        let w = be.gram(q.as_ref());
+        assert!(w.max_abs_diff(&mat_tn(&q, &q)) < 1e-12);
+    }
+}

@@ -1,0 +1,104 @@
+//! Compute-backend abstraction.
+//!
+//! The paper builds RandSVD and LancSVD from a fixed set of device
+//! building blocks (Table 1): multiplications with A/Aᵀ (cuSPARSE SpMM or
+//! cuBLAS GEMM), Gram products, CGS projections, and right-side triangular
+//! solves — with the tiny POTRF/GESVD factorizations staying on the host.
+//!
+//! [`Backend`] is exactly that op set. Two implementations exist:
+//! [`cpu::CpuBackend`] (pure-rust substrate, the reference) and
+//! [`xla::XlaBackend`] (AOT JAX/Pallas artifacts through PJRT — the
+//! GPU-library stand-in). All operands are host `Mat`s; backends may stage
+//! them to device buffers internally.
+//!
+//! Every op self-records wall time and Table-1 flops into the backend's
+//! [`Profile`] under the phase set by the running algorithm, which is how
+//! Figs. 2–3's breakdowns are measured.
+
+pub mod cpu;
+pub mod xla;
+
+use crate::la::mat::{Mat, MatRef};
+use crate::metrics::Profile;
+
+/// The device building-block set shared by both SVD algorithms.
+pub trait Backend {
+    /// Problem row count (m).
+    fn m(&self) -> usize;
+    /// Problem column count (n).
+    fn n(&self) -> usize;
+    /// Non-zeros if the operand is sparse, `None` for dense.
+    fn nnz(&self) -> Option<usize>;
+
+    /// Y = A · X  with X n×k (SpMM / GEMM).
+    fn apply_a(&mut self, x: MatRef) -> Mat;
+    /// Y = Aᵀ · X  with X m×k (transposed SpMM / GEMM).
+    fn apply_at(&mut self, x: MatRef) -> Mat;
+    /// W = QᵀQ (SYRK-shaped Gram product).
+    fn gram(&mut self, q: MatRef) -> Mat;
+    /// H = PᵀQ (block-CGS projection).
+    fn proj(&mut self, p: MatRef, q: MatRef) -> Mat;
+    /// Q ← Q − P·H (block-CGS update).
+    fn subtract_proj(&mut self, q: &mut Mat, p: MatRef, h: &Mat);
+    /// Q ← Q·L⁻ᵀ with L lower-triangular b×b (the TRSM of CholeskyQR2).
+    fn tri_solve_right(&mut self, q: &mut Mat, l: &Mat);
+    /// C = A·B (the finalize GEMMs forming U_T / V_T and the restart).
+    fn gemm_nn(&mut self, a: MatRef, b: MatRef) -> Mat;
+
+    /// CholeskyQR2 orthonormalization of a q×b panel (Alg. 4), returning
+    /// R with `Q_in = Q_out·R`. The default composes the fine-grained ops
+    /// with the host POTRF; the XLA backend overrides it with the fused
+    /// AOT graph (falling back here on breakdown or unbucketable shapes).
+    fn orth_cholqr2(&mut self, q: &mut Mat) -> crate::error::Result<Mat> {
+        crate::algo::orth::cholqr2_host(self, q)
+    }
+
+    /// CGS + CholeskyQR2 orthogonalization against a history panel
+    /// (Alg. 5), returning (H, R) with `Q_in ≈ P·H + Q_out·R`. Override
+    /// semantics as for [`Backend::orth_cholqr2`].
+    fn orth_cgs_cqr2(
+        &mut self,
+        q: &mut Mat,
+        p: MatRef<'_>,
+    ) -> crate::error::Result<(Mat, Mat)> {
+        crate::algo::orth::cgs_cqr2_host(self, q, p)
+    }
+
+    /// The per-block profile (phase is set by the algorithms).
+    fn profile_mut(&mut self) -> &mut Profile;
+    /// Take the accumulated profile, resetting it.
+    fn take_profile(&mut self) -> Profile;
+    /// Short backend name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Flop cost of one apply_a/apply_at with k dense columns (used both
+    /// for instrumentation and by the analytic model).
+    fn mult_flops(&self, k: usize) -> f64 {
+        match self.nnz() {
+            Some(nz) => 2.0 * nz as f64 * k as f64,
+            None => 2.0 * self.m() as f64 * self.n() as f64 * k as f64,
+        }
+    }
+}
+
+/// The operand matrix a backend is constructed around.
+#[derive(Clone, Debug)]
+pub enum Operand {
+    Sparse(crate::sparse::csr::Csr),
+    Dense(Mat),
+}
+
+impl Operand {
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            Operand::Sparse(a) => (a.rows(), a.cols()),
+            Operand::Dense(a) => (a.rows(), a.cols()),
+        }
+    }
+    pub fn nnz(&self) -> Option<usize> {
+        match self {
+            Operand::Sparse(a) => Some(a.nnz()),
+            Operand::Dense(_) => None,
+        }
+    }
+}

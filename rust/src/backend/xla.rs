@@ -1,0 +1,326 @@
+//! PJRT/XLA backend: the GPU-library stand-in.
+//!
+//! Executes the paper's device building blocks through AOT-compiled
+//! JAX/Pallas graphs (see `python/compile/`) on the PJRT CPU client — the
+//! role cuBLAS/cuSPARSE play on the paper's A100. Semantics:
+//!
+//! * **Fused orthogonalization** — `orth_cholqr2` / `orth_cgs_cqr2`
+//!   dispatch to the whole-graph artifacts (Gram→Cholesky→TRSM ×2 fused,
+//!   with the b×b Cholesky *in-graph*), padding q to its power-of-two
+//!   bucket and the history width s to its bucket with zeros (exact
+//!   no-ops — asserted in the python tests). Breakdown is detected as
+//!   NaN in the returned factor → fall back to the host path (which runs
+//!   the paper's CGS2 fallback).
+//! * **Dense multiplications** — A is staged once into a device-resident
+//!   padded buffer; apply_a/apply_at run the matmul artifacts via
+//!   `execute_b` (no per-call A transfer). Missing shapes fall back to
+//!   runtime-built XlaBuilder GEMMs, then to the CPU substrate.
+//! * **Sparse multiplications** — PJRT-CPU has no cuSPARSE analogue; CSR
+//!   SpMM runs on the host substrate (the block-ELL Pallas kernel exists
+//!   and is integration-tested, see `tests/test_xla_runtime.rs`, but CSR
+//!   is the production path). Documented in DESIGN.md §3.
+
+use std::rc::Rc;
+
+use super::{Backend, Operand};
+use crate::error::{Error, Result};
+use crate::la::blas3;
+use crate::la::mat::{Mat, MatRef};
+use crate::metrics::{Profile, Timer};
+use crate::runtime::convert::{literal_to_mat, mat_to_literal, pow2_bucket};
+use crate::runtime::{builder_ops, Runtime};
+
+/// Bucketing limits (mirror config/suite.json artifact_buckets).
+const Q_MIN: usize = 512;
+const Q_MAX: usize = 65536;
+const S_MAX: usize = 256;
+const B_ART: usize = 16;
+const N_PAD: usize = 512;
+const R_BUCKETS: [usize; 3] = [16, 64, 256];
+
+/// The XLA/PJRT compute backend.
+pub struct XlaBackend {
+    rt: Rc<Runtime>,
+    a: Operand,
+    /// Device-resident padded A (dense operands only), shape m_pad×N_PAD.
+    a_buf: Option<xla::PjRtBuffer>,
+    /// Host literal backing `a_buf`. The PJRT CPU client copies from the
+    /// literal *asynchronously* on its thread pool, so the source must
+    /// outlive the buffer's first use — dropping it early is a
+    /// use-after-free inside libxla_extension (observed SIGSEGV in
+    /// AbstractTfrtCpuBuffer::CopyFromLiteral).
+    _a_lit: Option<xla::Literal>,
+    m_pad: usize,
+    profile: Profile,
+}
+
+fn r_bucket(r: usize) -> Option<usize> {
+    R_BUCKETS.iter().copied().find(|&b| b >= r)
+}
+
+impl XlaBackend {
+    /// Wrap a dense operand; stages the (padded) matrix to the device if
+    /// an artifact family covers its shape.
+    pub fn new_dense(rt: Rc<Runtime>, a: Mat) -> Result<XlaBackend> {
+        let m_pad = pow2_bucket(a.rows(), Q_MIN, Q_MAX);
+        let stageable = a.rows() <= m_pad && a.cols() <= N_PAD;
+        let (a_buf, a_lit) = if stageable {
+            let lit = mat_to_literal(&a, m_pad, N_PAD)?;
+            let buf = rt.stage(&lit)?;
+            (Some(buf), Some(lit))
+        } else {
+            (None, None)
+        };
+        Ok(XlaBackend {
+            rt,
+            a: Operand::Dense(a),
+            a_buf,
+            _a_lit: a_lit,
+            m_pad,
+            profile: Profile::new(),
+        })
+    }
+
+    /// Wrap a sparse operand (CSR SpMM runs on the host substrate).
+    pub fn new_sparse(rt: Rc<Runtime>, a: crate::sparse::csr::Csr) -> XlaBackend {
+        XlaBackend {
+            rt,
+            a: Operand::Sparse(a),
+            a_buf: None,
+            _a_lit: None,
+            m_pad: 0,
+            profile: Profile::new(),
+        }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Fused-orth artifact path for Alg. 4. Returns None when no artifact
+    /// applies (wrong b, q too large) so the caller can fall back.
+    fn try_cholqr2_artifact(&mut self, q: &mut Mat) -> Result<Option<Mat>> {
+        let (qr, b) = (q.rows(), q.cols());
+        if b != B_ART || qr > Q_MAX {
+            return Ok(None);
+        }
+        let q_pad = pow2_bucket(qr, Q_MIN, Q_MAX);
+        let in_shape = [q_pad, b];
+        if !self.rt.has_artifact("cholqr2", &[&in_shape]) {
+            return Ok(None);
+        }
+        let flops = crate::cost::ca4(b, qr);
+        let t = Timer::start(flops);
+        let lit = mat_to_literal(q, q_pad, b)?;
+        let outs = self.rt.run_artifact("cholqr2", &[&in_shape], &[lit])?;
+        let q_out = literal_to_mat(&outs[0], qr, b)?;
+        let r_out = literal_to_mat(&outs[1], b, b)?;
+        t.stop(&mut self.profile);
+        if !mat_finite(&r_out) || !mat_finite(&q_out) {
+            return Ok(None); // breakdown: NaN signal → host fallback
+        }
+        *q = q_out;
+        Ok(Some(r_out))
+    }
+
+    /// Fused-orth artifact path for Alg. 5 (None → fall back).
+    fn try_cgs_cqr2_artifact(
+        &mut self,
+        q: &mut Mat,
+        p: MatRef<'_>,
+    ) -> Result<Option<(Mat, Mat)>> {
+        let (qr, b) = (q.rows(), q.cols());
+        let s = p.cols;
+        if b != B_ART || qr > Q_MAX || s > S_MAX {
+            return Ok(None);
+        }
+        let q_pad = pow2_bucket(qr, Q_MIN, Q_MAX);
+        let s_pad = pow2_bucket(s.max(16), 16, S_MAX);
+        let q_shape = [q_pad, b];
+        let p_shape = [q_pad, s_pad];
+        if !self.rt.has_artifact("cgs_cqr2", &[&q_shape, &p_shape]) {
+            return Ok(None);
+        }
+        let flops = crate::cost::ca5(b, qr, s);
+        let t = Timer::start(flops);
+        let ql = mat_to_literal(q, q_pad, b)?;
+        let pl = mat_to_literal(&p.to_owned(), q_pad, s_pad)?;
+        let outs = self.rt.run_artifact("cgs_cqr2", &[&q_shape, &p_shape], &[ql, pl])?;
+        let q_out = literal_to_mat(&outs[0], qr, b)?;
+        let h_out = literal_to_mat(&outs[1], s, b)?;
+        let r_out = literal_to_mat(&outs[2], b, b)?;
+        t.stop(&mut self.profile);
+        if !mat_finite(&q_out) || !mat_finite(&r_out) {
+            return Ok(None);
+        }
+        *q = q_out;
+        Ok(Some((h_out, r_out)))
+    }
+
+    /// Dense apply through the staged buffer + matmul artifact.
+    fn dense_apply_artifact(&mut self, x: MatRef<'_>, transposed: bool) -> Result<Option<Mat>> {
+        let Operand::Dense(a) = &self.a else { return Ok(None) };
+        let Some(a_buf) = &self.a_buf else { return Ok(None) };
+        let (m, n) = (a.rows(), a.cols());
+        let k = x.cols;
+        let Some(k_pad) = r_bucket(k) else { return Ok(None) };
+        let (op, a_shape, x_shape, out_rows) = if transposed {
+            ("matmul_tn", [self.m_pad, N_PAD], [self.m_pad, k_pad], n)
+        } else {
+            ("matmul_nn", [self.m_pad, N_PAD], [N_PAD, k_pad], m)
+        };
+        if !self.rt.has_artifact(op, &[&a_shape, &x_shape]) {
+            return Ok(None);
+        }
+        let xo = x.to_owned();
+        let xl = mat_to_literal(&xo, x_shape[0], x_shape[1])?;
+        let x_buf = self.rt.stage(&xl)?;
+        let outs = self.rt.run_artifact_b(op, &[&a_shape, &x_shape], &[a_buf, &x_buf])?;
+        let y = literal_to_mat(&outs[0], out_rows, k)?;
+        Ok(Some(y))
+    }
+}
+
+fn mat_finite(m: &Mat) -> bool {
+    m.data().iter().all(|x| x.is_finite())
+}
+
+impl Backend for XlaBackend {
+    fn m(&self) -> usize {
+        self.a.shape().0
+    }
+    fn n(&self) -> usize {
+        self.a.shape().1
+    }
+    fn nnz(&self) -> Option<usize> {
+        self.a.nnz()
+    }
+
+    fn apply_a(&mut self, x: MatRef) -> Mat {
+        let t = Timer::start(self.mult_flops(x.cols));
+        let y = match self.dense_apply_artifact(x, false) {
+            Ok(Some(y)) => y,
+            _ => match &self.a {
+                // Host CSR SpMM (documented substitution) or CPU fallback.
+                Operand::Sparse(a) => {
+                    let mut y = Mat::zeros(a.rows(), x.cols);
+                    a.spmm(&x.to_owned(), &mut y);
+                    y
+                }
+                Operand::Dense(a) => {
+                    builder_ops::matmul_nn(&self.rt, a, &x.to_owned()).unwrap_or_else(|_| {
+                        let mut y = Mat::zeros(a.rows(), x.cols);
+                        blas3::gemm_nn(1.0, a.as_ref(), x, 0.0, &mut y);
+                        y
+                    })
+                }
+            },
+        };
+        t.stop(&mut self.profile);
+        y
+    }
+
+    fn apply_at(&mut self, x: MatRef) -> Mat {
+        let t = Timer::start(self.mult_flops(x.cols));
+        let y = match self.dense_apply_artifact(x, true) {
+            Ok(Some(y)) => y,
+            _ => match &self.a {
+                Operand::Sparse(a) => {
+                    let mut y = Mat::zeros(a.cols(), x.cols);
+                    a.spmm_t(&x.to_owned(), &mut y);
+                    y
+                }
+                Operand::Dense(a) => {
+                    builder_ops::matmul_tn(&self.rt, a, &x.to_owned()).unwrap_or_else(|_| {
+                        let mut y = Mat::zeros(a.cols(), x.cols);
+                        blas3::gemm_tn(1.0, a.as_ref(), x, 0.0, &mut y);
+                        y
+                    })
+                }
+            },
+        };
+        t.stop(&mut self.profile);
+        y
+    }
+
+    fn gram(&mut self, q: MatRef) -> Mat {
+        // Fine-grained op (only reached on the host fallback path).
+        let flops = q.cols as f64 * q.cols as f64 * q.rows as f64;
+        let t = Timer::start(flops);
+        let w = blas3::gram(q);
+        t.stop(&mut self.profile);
+        w
+    }
+
+    fn proj(&mut self, p: MatRef, q: MatRef) -> Mat {
+        let flops = 2.0 * p.rows as f64 * p.cols as f64 * q.cols as f64;
+        let t = Timer::start(flops);
+        let mut h = Mat::zeros(p.cols, q.cols);
+        blas3::gemm_tn(1.0, p, q, 0.0, &mut h);
+        t.stop(&mut self.profile);
+        h
+    }
+
+    fn subtract_proj(&mut self, q: &mut Mat, p: MatRef, h: &Mat) {
+        let flops = 2.0 * p.rows as f64 * p.cols as f64 * h.cols() as f64;
+        let t = Timer::start(flops);
+        blas3::gemm_nn(-1.0, p, h.as_ref(), 1.0, q);
+        t.stop(&mut self.profile);
+    }
+
+    fn tri_solve_right(&mut self, q: &mut Mat, l: &Mat) {
+        let flops = q.cols() as f64 * q.cols() as f64 * q.rows() as f64;
+        let t = Timer::start(flops);
+        blas3::trsm_right_lt(l, q);
+        t.stop(&mut self.profile);
+    }
+
+    fn gemm_nn(&mut self, a: MatRef, b: MatRef) -> Mat {
+        let flops = 2.0 * a.rows as f64 * a.cols as f64 * b.cols as f64;
+        let t = Timer::start(flops);
+        // Runtime-built GEMM keeps this on the XLA path for any shape.
+        let ao = a.to_owned();
+        let bo = b.to_owned();
+        let c = builder_ops::matmul_nn(&self.rt, &ao, &bo).unwrap_or_else(|_| {
+            let mut c = Mat::zeros(a.rows, b.cols);
+            blas3::gemm_nn(1.0, a, b, 0.0, &mut c);
+            c
+        });
+        t.stop(&mut self.profile);
+        c
+    }
+
+    fn orth_cholqr2(&mut self, q: &mut Mat) -> Result<Mat> {
+        match self.try_cholqr2_artifact(q) {
+            Ok(Some(r)) => Ok(r),
+            Ok(None) => crate::algo::orth::cholqr2_host(self, q),
+            Err(Error::Xla(_)) => {
+                // Runtime trouble (missing file, compile failure): degrade
+                // to the host path rather than abort the solve.
+                crate::algo::orth::cholqr2_host(self, q)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn orth_cgs_cqr2(&mut self, q: &mut Mat, p: MatRef<'_>) -> Result<(Mat, Mat)> {
+        match self.try_cgs_cqr2_artifact(q, p) {
+            Ok(Some(hr)) => Ok(hr),
+            Ok(None) => crate::algo::orth::cgs_cqr2_host(self, q, p),
+            Err(Error::Xla(_)) => crate::algo::orth::cgs_cqr2_host(self, q, p),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn profile_mut(&mut self) -> &mut Profile {
+        &mut self.profile
+    }
+
+    fn take_profile(&mut self) -> Profile {
+        std::mem::take(&mut self.profile)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

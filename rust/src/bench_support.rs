@@ -1,0 +1,98 @@
+//! Hand-rolled benchmark harness (no criterion in the offline vendor
+//! set): warm-up + repeated timed runs, median/min statistics, GFLOP/s
+//! reporting, and the paper-style experiment wrappers used by the
+//! `benches/` binaries.
+
+use std::time::Instant;
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub runs: usize,
+}
+
+/// Run `f` `warmup + runs` times; report stats over the timed runs.
+/// (Paper §4: "results ... averaged over several executions following
+/// warm-up runs".)
+pub fn time_runs<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Stats {
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        runs,
+    }
+}
+
+/// Adaptive repeat counts: fast ops get more runs, slow ones fewer.
+pub fn auto_runs(approx_secs: f64) -> (usize, usize) {
+    if approx_secs < 0.01 {
+        (3, 15)
+    } else if approx_secs < 0.5 {
+        (2, 7)
+    } else if approx_secs < 5.0 {
+        (1, 3)
+    } else {
+        (0, 1)
+    }
+}
+
+/// GFLOP/s for a flop count + time.
+pub fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs / 1e9
+}
+
+/// Read a usize bench parameter from the environment (e.g.
+/// `BENCH_SUBSET=46 cargo bench`), with a default.
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Standard bench banner.
+pub fn banner(name: &str, detail: &str) {
+    println!("\n=== {name} ===");
+    if !detail.is_empty() {
+        println!("{detail}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_runs_counts_and_orders() {
+        let mut n = 0;
+        let s = time_runs(2, 5, || {
+            n += 1;
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(n, 7);
+        assert_eq!(s.runs, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.median >= 0.001);
+    }
+
+    #[test]
+    fn auto_runs_monotone() {
+        assert!(auto_runs(0.001).1 > auto_runs(1.0).1);
+        assert_eq!(auto_runs(100.0).1, 1);
+    }
+
+    #[test]
+    fn gflops_math() {
+        assert!((gflops(2e9, 1.0) - 2.0).abs() < 1e-12);
+    }
+}

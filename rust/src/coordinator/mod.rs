@@ -1,0 +1,5 @@
+//! Layer-3 coordinator: drivers, experiment reproduction, reporting.
+
+pub mod driver;
+pub mod experiments;
+pub mod report;

@@ -1,0 +1,152 @@
+//! Calibrated device-time model (the "simulated A100" of DESIGN.md §3).
+//!
+//! The paper's headline Fig. 2 result — LancSVD beating RandSVD by
+//! 1.2×–2.5× at matched accuracy — is driven by the A100's *kernel-rate
+//! asymmetry*: dense orthogonalization GEMMs run near fp64 peak
+//! (~10 TFLOP/s) while cuSPARSE's transposed SpMM crawls at tens of
+//! GFLOP/s. A scalar CPU substrate has no such asymmetry (every kernel
+//! runs at a few GFLOP/s), so wall-clock alone cannot reproduce the
+//! paper's *who-wins* shape. Per the substitution rule we therefore also
+//! report **model time**: measured per-block flop counts and call counts
+//! priced with per-block rates calibrated to the paper's platform.
+//!
+//! Rates are deliberately coarse (one significant digit); the claims we
+//! check are ordinal (who wins, crossovers), not absolute.
+
+use crate::metrics::{Block, Profile};
+
+/// Per-block execution rates + a per-kernel-launch latency.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    /// dense GEMM / orthogonalization rate (flops/s)
+    pub gemm_rate: f64,
+    /// SpMM with A (gather CSR) rate
+    pub spmm_rate: f64,
+    /// SpMM with Aᵀ (implicit transpose / scatter) rate — the paper's
+    /// slow kernel
+    pub spmm_t_rate: f64,
+    /// host small-factorization rate (POTRF/GESVD on the CPU)
+    pub host_rate: f64,
+    /// per-kernel-launch + transfer latency (s) — GPU only
+    pub launch_latency: f64,
+}
+
+impl DeviceModel {
+    /// NVIDIA A100 (paper platform): fp64 ~9.7 TF GEMM; cuSPARSE SpMM
+    /// ~60 GF gather, ~15 GF scattered/transposed (consistent with the
+    /// paper's Figs. 2–3 time-vs-flop discrepancy); ~10 µs launches. The
+    /// host factorizations run on the paper's 16-core EPYC 7282 + MKL
+    /// (multi-threaded dgesvd/dpotrf ≈ 20 GF/s effective).
+    pub fn a100() -> DeviceModel {
+        DeviceModel {
+            name: "sim-A100",
+            gemm_rate: 9.7e12,
+            spmm_rate: 6.0e10,
+            spmm_t_rate: 1.5e10,
+            host_rate: 2.0e10,
+            launch_latency: 1.0e-5,
+        }
+    }
+
+    /// The current testbed (1-core scalar CPU) — used by tests to verify
+    /// the model ranks kernels like the measured wall clock does.
+    pub fn cpu_1core() -> DeviceModel {
+        DeviceModel {
+            name: "cpu-1core",
+            gemm_rate: 3.0e9,
+            spmm_rate: 1.5e9,
+            spmm_t_rate: 1.0e9,
+            host_rate: 2.0e9,
+            launch_latency: 0.0,
+        }
+    }
+
+    fn rate(&self, b: Block, sparse: bool) -> f64 {
+        match b {
+            Block::MultA => {
+                if sparse {
+                    self.spmm_rate
+                } else {
+                    self.gemm_rate
+                }
+            }
+            Block::MultAt => {
+                if sparse {
+                    self.spmm_t_rate
+                } else {
+                    self.gemm_rate
+                }
+            }
+            Block::OrthM | Block::OrthN | Block::Finalize | Block::Init => self.gemm_rate,
+            Block::SmallSvd | Block::Other => self.host_rate,
+        }
+    }
+
+    /// Price a measured profile on this device: Σ flops/rate + launches.
+    pub fn sim_time(&self, prof: &Profile, sparse: bool) -> f64 {
+        let mut t = 0.0;
+        for b in Block::ALL {
+            let s = prof.stat(b);
+            t += s.flops / self.rate(b, sparse);
+            t += s.calls as f64 * self.launch_latency;
+        }
+        t
+    }
+
+    /// Price an analytic cost breakdown (Fig. 3 companion).
+    pub fn sim_time_breakdown(&self, c: &crate::cost::CostBreakdown, sparse: bool) -> f64 {
+        c.mult_a / self.rate(Block::MultA, sparse)
+            + c.mult_at / self.rate(Block::MultAt, sparse)
+            + (c.orth_m + c.orth_n + c.finalize) / self.gemm_rate
+            + c.small_svd / self.host_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{lancsvd_cost, randsvd_cost, Problem};
+
+    #[test]
+    fn a100_model_reproduces_paper_ordering() {
+        // A representative paper-scale sparse problem: on the A100 model
+        // LancSVD(256,2) must beat RandSVD(16,96) — the 96 transposed
+        // SpMMs dominate — even though RandSVD does fewer flops.
+        let prob = Problem { m: 345_688, n: 12_347, nnz: Some(821_839) }; // rel8
+        let dm = DeviceModel::a100();
+        let lanc = lancsvd_cost(prob, 256, 2, 16);
+        let rand = randsvd_cost(prob, 16, 96, 16);
+        assert!(rand.total() < lanc.total(), "rand fewer flops (Fig. 3)");
+        let t_lanc = dm.sim_time_breakdown(&lanc, true);
+        let t_rand = dm.sim_time_breakdown(&rand, true);
+        let speedup = t_rand / t_lanc;
+        assert!(
+            speedup > 1.2 && speedup < 6.0,
+            "sim-A100 speedup {speedup:.2} out of the paper-shaped range"
+        );
+    }
+
+    #[test]
+    fn dense_problems_have_no_spmm_penalty() {
+        // Dense: both algorithms run GEMMs; the gap narrows to the
+        // iteration-count ratio (paper Fig. 4 bottom).
+        let prob = Problem { m: 250_000, n: 10_000, nnz: None };
+        let dm = DeviceModel::a100();
+        let lanc = dm.sim_time_breakdown(&lancsvd_cost(prob, 64, 4, 16), false);
+        let rand = dm.sim_time_breakdown(&randsvd_cost(prob, 16, 24, 16), false);
+        let speedup = rand / lanc;
+        assert!(speedup > 0.8 && speedup < 4.0, "dense speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn some_suite_matrices_favor_randsvd() {
+        // Paper: LancSVD loses on ~7/46 — typically when nnz is small
+        // relative to the dimensions (orthogonalization dominates).
+        let dm = DeviceModel::a100();
+        let sparse_lo = Problem { m: 64_719, n: 1_785_345, nnz: Some(652_140) }; // Delor64K
+        let lanc = dm.sim_time_breakdown(&lancsvd_cost(sparse_lo, 256, 2, 16), true);
+        let rand = dm.sim_time_breakdown(&randsvd_cost(sparse_lo, 16, 96, 16), true);
+        assert!(rand / lanc < 1.6, "low-nnz case should be close or rand-favored: {:.2}", rand / lanc);
+    }
+}

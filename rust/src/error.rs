@@ -1,0 +1,73 @@
+//! Error types for the trunksvd library.
+
+use thiserror::Error;
+
+/// Library-wide error type.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Shape mismatch between operands.
+    #[error("shape mismatch in {op}: {detail}")]
+    Shape { op: &'static str, detail: String },
+
+    /// Cholesky factorization hit a non-positive pivot (matrix not
+    /// numerically SPD). The orthogonalization layer catches this and
+    /// falls back to CGS with re-orthogonalization (paper §3.2).
+    #[error("cholesky breakdown at pivot {pivot} (value {value:.3e})")]
+    CholeskyBreakdown { pivot: usize, value: f64 },
+
+    /// Jacobi SVD failed to converge within the sweep limit.
+    #[error("jacobi SVD did not converge after {sweeps} sweeps (off {off:.3e})")]
+    SvdNoConvergence { sweeps: usize, off: f64 },
+
+    /// Invalid algorithm parameters (r, p, b constraints).
+    #[error("invalid parameter: {0}")]
+    InvalidParam(String),
+
+    /// I/O error (MatrixMarket, artifacts, reports).
+    #[error("io error on {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// Parse error (MatrixMarket, JSON, CLI).
+    #[error("parse error in {what}: {detail}")]
+    Parse { what: &'static str, detail: String },
+
+    /// PJRT / XLA runtime error.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Requested artifact is not present in the manifest and the fallback
+    /// builder cannot synthesize the op.
+    #[error("no artifact or fallback for op {op} with shape {shape}")]
+    MissingArtifact { op: String, shape: String },
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[inline]
+pub(crate) fn shape_err(op: &'static str, detail: impl Into<String>) -> Error {
+    Error::Shape { op, detail: detail.into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        let e = Error::CholeskyBreakdown { pivot: 3, value: -1e-18 };
+        assert!(e.to_string().contains("pivot 3"));
+        let e = shape_err("gemm", "2x3 * 4x5");
+        assert!(e.to_string().contains("gemm"));
+    }
+}

@@ -1,0 +1,106 @@
+//! Dense synthetic problems (paper §4.2, Eqs. 15–16).
+//!
+//! A = X Σ Yᵀ with random orthonormal X (m×n), Y (n×n) and the paper's
+//! spectrum: σ_i = 10^(15·i/(n/2) − 14) for i ≤ n/2 (note: descending
+//! when indexed from the largest), 10⁻¹⁴ otherwise — i.e. half the
+//! spectrum decays geometrically from 10¹ down to ~10⁻¹⁴ and the other
+//! half sits at the double-precision rounding floor.
+
+use crate::la::blas3::mat_nn;
+use crate::la::mat::Mat;
+use crate::la::qr::random_orthonormal;
+use crate::util::rng::Rng;
+
+/// The paper's Eq. 16 singular-value profile, returned descending.
+pub fn paper_spectrum(n: usize) -> Vec<f64> {
+    let half = n / 2;
+    let mut s: Vec<f64> = (1..=n)
+        .map(|i| {
+            if i <= half {
+                10f64.powf(15.0 * i as f64 / half as f64 - 14.0)
+            } else {
+                1e-14
+            }
+        })
+        .collect();
+    s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    s
+}
+
+/// A dense problem with known singular triplets.
+pub struct DenseProblem {
+    pub a: Mat,
+    /// true singular values, descending
+    pub sigma: Vec<f64>,
+    /// true left singular vectors (m×n)
+    pub u: Mat,
+    /// true right singular vectors (n×n)
+    pub v: Mat,
+}
+
+/// Build A = X·diag(sigma)·Yᵀ for a given spectrum.
+pub fn dense_with_spectrum(m: usize, n: usize, sigma: &[f64], seed: u64) -> DenseProblem {
+    assert!(m >= n && sigma.len() == n);
+    let mut rng = Rng::new(seed);
+    let x = random_orthonormal(m, n, &mut rng);
+    let y = random_orthonormal(n, n, &mut rng);
+    let mut xs = x.clone();
+    for j in 0..n {
+        let s = sigma[j];
+        for v in xs.col_mut(j) {
+            *v *= s;
+        }
+    }
+    let a = mat_nn(&xs, &y.transpose());
+    DenseProblem { a, sigma: sigma.to_vec(), u: x, v: y }
+}
+
+/// The paper's synthetic dense benchmark problem (Eq. 15 + Eq. 16).
+pub fn paper_dense(m: usize, n: usize, seed: u64) -> DenseProblem {
+    let sigma = paper_spectrum(n);
+    dense_with_spectrum(m, n, &sigma, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::svd::jacobi_svd;
+
+    #[test]
+    fn spectrum_shape() {
+        let s = paper_spectrum(100);
+        assert_eq!(s.len(), 100);
+        // descending
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        // top value 10^(15*50/50 - 14) = 10
+        assert!((s[0] - 10.0).abs() < 1e-12);
+        // floor
+        assert_eq!(s[99], 1e-14);
+        let floor_count = s.iter().filter(|&&x| x == 1e-14).count();
+        assert!(floor_count >= 50, "floor count {floor_count}");
+    }
+
+    #[test]
+    fn constructed_problem_has_requested_spectrum() {
+        let sigma: Vec<f64> = (0..6).map(|i| 2.0f64.powi(-(i as i32))).collect();
+        let p = dense_with_spectrum(24, 6, &sigma, 7);
+        let svd = jacobi_svd(&p.a).unwrap();
+        for i in 0..6 {
+            assert!(
+                (svd.s[i] - sigma[i]).abs() / sigma[i] < 1e-10,
+                "sigma_{i}: {} vs {}",
+                svd.s[i],
+                sigma[i]
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let p1 = paper_dense(30, 10, 5);
+        let p2 = paper_dense(30, 10, 5);
+        assert!(p1.a.max_abs_diff(&p2.a) < 1e-15);
+    }
+}

@@ -1,0 +1,202 @@
+//! Experiment-suite registry (the scaled Table 2 + dense suite).
+//!
+//! `config/suite.json` is the single source of truth shared with the
+//! python AOT pipeline: the 46 sparse stand-ins (name, paper dims, scaled
+//! dims, nnz, generator seed/skew) and the 4 dense problems, plus the
+//! artifact shape buckets.
+
+use crate::error::{Error, Result};
+use crate::gen::sparse::SparseSpec;
+use crate::util::json::{self, Json};
+
+/// One sparse suite entry.
+#[derive(Clone, Debug)]
+pub struct SparseEntry {
+    pub name: String,
+    pub paper_rows: usize,
+    pub paper_cols: usize,
+    pub paper_nnz: usize,
+    pub spec: SparseSpec,
+}
+
+/// One dense suite entry.
+#[derive(Clone, Debug)]
+pub struct DenseEntry {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub paper_rows: usize,
+    pub paper_cols: usize,
+    pub seed: u64,
+}
+
+/// Artifact shape buckets (shared with python/compile/aot.py).
+#[derive(Clone, Debug)]
+pub struct Buckets {
+    pub q_pow2_min: usize,
+    pub q_pow2_max: usize,
+    pub s_buckets: Vec<usize>,
+    pub b: usize,
+}
+
+/// Parsed suite configuration.
+#[derive(Clone, Debug)]
+pub struct Suite {
+    pub sparse: Vec<SparseEntry>,
+    pub dense: Vec<DenseEntry>,
+    pub buckets: Buckets,
+}
+
+/// Locate `config/suite.json`: `$TRUNKSVD_CONFIG`, then ./config, then the
+/// crate root (for `cargo test` from anywhere).
+pub fn default_config_path() -> String {
+    if let Ok(p) = std::env::var("TRUNKSVD_CONFIG") {
+        return p;
+    }
+    let local = "config/suite.json";
+    if std::path::Path::new(local).exists() {
+        return local.to_string();
+    }
+    concat!(env!("CARGO_MANIFEST_DIR"), "/config/suite.json").to_string()
+}
+
+impl Suite {
+    /// Load the default suite configuration.
+    pub fn load_default() -> Result<Suite> {
+        Suite::load(&default_config_path())
+    }
+
+    /// Load from an explicit path.
+    pub fn load(path: &str) -> Result<Suite> {
+        let doc = json::parse_file(path)?;
+        Self::from_json(&doc)
+    }
+
+    fn from_json(doc: &Json) -> Result<Suite> {
+        let req_usize = |o: &Json, k: &str| -> Result<usize> {
+            o.req(k)?.as_usize().ok_or(Error::Parse {
+                what: "suite",
+                detail: format!("field '{k}' not a number"),
+            })
+        };
+        let req_f64 = |o: &Json, k: &str| -> Result<f64> {
+            o.req(k)?.as_f64().ok_or(Error::Parse {
+                what: "suite",
+                detail: format!("field '{k}' not a number"),
+            })
+        };
+        let mut sparse = Vec::new();
+        for e in doc.req("sparse")?.as_arr().unwrap_or(&[]) {
+            sparse.push(SparseEntry {
+                name: e.req("name")?.as_str().unwrap_or("").to_string(),
+                paper_rows: req_usize(e, "paper_rows")?,
+                paper_cols: req_usize(e, "paper_cols")?,
+                paper_nnz: req_usize(e, "paper_nnz")?,
+                spec: SparseSpec {
+                    rows: req_usize(e, "rows")?,
+                    cols: req_usize(e, "cols")?,
+                    nnz: req_usize(e, "nnz")?,
+                    seed: e.req("seed")?.as_u64().unwrap_or(0),
+                    skew: req_f64(e, "skew")?,
+                    value_decay: req_f64(e, "value_decay")?,
+                },
+            });
+        }
+        let mut dense = Vec::new();
+        for e in doc.req("dense")?.as_arr().unwrap_or(&[]) {
+            dense.push(DenseEntry {
+                name: e.req("name")?.as_str().unwrap_or("").to_string(),
+                rows: req_usize(e, "rows")?,
+                cols: req_usize(e, "cols")?,
+                paper_rows: req_usize(e, "paper_rows")?,
+                paper_cols: req_usize(e, "paper_cols")?,
+                seed: e.req("seed")?.as_u64().unwrap_or(0),
+            });
+        }
+        let b = doc.req("artifact_buckets")?;
+        let buckets = Buckets {
+            q_pow2_min: req_usize(b, "q_pow2_min")?,
+            q_pow2_max: req_usize(b, "q_pow2_max")?,
+            s_buckets: b
+                .req("s_buckets")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            b: req_usize(b, "b")?,
+        };
+        Ok(Suite { sparse, dense, buckets })
+    }
+
+    /// Look up a sparse entry by name.
+    pub fn sparse_by_name(&self, name: &str) -> Option<&SparseEntry> {
+        self.sparse.iter().find(|e| e.name == name)
+    }
+
+    /// A small representative subset for quick benchmark runs: spans
+    /// aspect ratios (tall, wide, extreme) and row-degree skews.
+    pub fn representative(&self, k: usize) -> Vec<&SparseEntry> {
+        let preferred = [
+            "mesh_deform",  // tall, few cols
+            "connectus",    // extremely wide
+            "rel8",         // tall
+            "lp_osa_60",    // wide
+            "specular",     // heavy rows
+            "fome21",       // balanced wide
+            "ESOC",         // tall, denser
+            "ch8-8-b4",     // tall structured
+            "GL7d23",       // wide
+            "dbic1",        // wide
+            "shar_te2-b2",  // tall
+            "12month1",     // wide heavy rows
+        ];
+        let mut out: Vec<&SparseEntry> = preferred
+            .iter()
+            .filter_map(|n| self.sparse_by_name(n))
+            .take(k)
+            .collect();
+        for e in &self.sparse {
+            if out.len() >= k {
+                break;
+            }
+            if !out.iter().any(|x| x.name == e.name) {
+                out.push(e);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_checked_in_config() {
+        let s = Suite::load_default().unwrap();
+        assert_eq!(s.sparse.len(), 46);
+        assert_eq!(s.dense.len(), 4);
+        assert_eq!(s.buckets.b, 16);
+        assert!(s.buckets.s_buckets.contains(&256));
+        // paper dims preserved
+        let relat9 = s.sparse_by_name("relat9").unwrap();
+        assert_eq!(relat9.paper_rows, 12_360_060);
+        assert!(relat9.spec.rows <= 32_768 + 1);
+        // every scaled matrix satisfies the r=256 feasibility floor
+        for e in &s.sparse {
+            assert!(e.spec.rows.min(e.spec.cols) >= 512, "{} too small", e.name);
+            assert!(e.spec.nnz <= e.spec.rows * e.spec.cols / 2, "{} too dense", e.name);
+        }
+    }
+
+    #[test]
+    fn representative_subset() {
+        let s = Suite::load_default().unwrap();
+        let r = s.representative(12);
+        assert_eq!(r.len(), 12);
+        let mut names: Vec<&str> = r.iter().map(|e| e.name.as_str()).collect();
+        names.dedup();
+        assert_eq!(names.len(), 12);
+    }
+}

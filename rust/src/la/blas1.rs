@@ -1,0 +1,96 @@
+//! Level-1 vector kernels used across the building blocks.
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    // 4-way split accumulation: lets LLVM vectorize and improves the
+    // rounding behaviour vs a single serial accumulator.
+    let n = x.len();
+    let n4 = n - n % 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < n4 {
+        s0 += x[i] * y[i];
+        s1 += x[i + 1] * y[i + 1];
+        s2 += x[i + 2] * y[i + 2];
+        s3 += x[i + 3] * y[i + 3];
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < n {
+        s += x[i] * y[i];
+        i += 1;
+    }
+    s
+}
+
+/// y += a * x
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// x *= a
+#[inline]
+pub fn scal(a: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Euclidean norm with scaling against overflow/underflow.
+pub fn nrm2(x: &[f64]) -> f64 {
+    let amax = x.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    if amax == 0.0 || !amax.is_finite() {
+        return amax;
+    }
+    // Fast path: comfortably inside the dynamic range.
+    if amax > 1e-140 && amax < 1e140 {
+        return dot(x, x).sqrt();
+    }
+    let inv = 1.0 / amax;
+    let mut s = 0.0;
+    for v in x {
+        let t = v * inv;
+        s += t * t;
+    }
+    amax * s.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f64> = (0..37).map(|i| (i as f64).sin()).collect();
+        let y: Vec<f64> = (0..37).map(|i| (i as f64).cos()).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_scal() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        scal(0.5, &mut y);
+        assert_eq!(y, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn nrm2_scaled_extremes() {
+        assert!((nrm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        let tiny = vec![1e-200, 1e-200];
+        let expect = 1e-200 * 2.0f64.sqrt();
+        assert!((nrm2(&tiny) - expect).abs() / expect < 1e-12);
+        let huge = vec![1e200, 1e200];
+        assert!((nrm2(&huge) - 1e200 * 2.0f64.sqrt()).abs() / 1e200 < 1e-12);
+        assert_eq!(nrm2(&[]), 0.0);
+    }
+}

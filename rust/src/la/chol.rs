@@ -1,0 +1,176 @@
+//! Cholesky factorization (the POTRF of Table 1).
+//!
+//! Operands here are tiny (b×b or r×r, b ≤ 256), matching the paper's
+//! hybrid design where POTRF runs on the host CPU. We still provide a
+//! blocked right-looking variant for the larger r×r case. Breakdown (a
+//! non-positive pivot) is reported as an error so the orthogonalization
+//! layer can fall back to re-orthogonalized CGS (paper §3.2).
+
+use super::mat::Mat;
+use crate::error::{Error, Result};
+
+/// Unblocked lower Cholesky: A = L·Lᵀ; returns L (strictly lower + diag),
+/// upper triangle zeroed. Errors with `CholeskyBreakdown` on a
+/// non-positive pivot.
+pub fn potrf_unblocked(a: &Mat) -> Result<Mat> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "potrf needs square input");
+    let mut l = a.clone();
+    for j in 0..n {
+        // diagonal
+        let mut d = l.at(j, j);
+        for k in 0..j {
+            let v = l.at(j, k);
+            d -= v * v;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err(Error::CholeskyBreakdown { pivot: j, value: d });
+        }
+        let djj = d.sqrt();
+        l.set(j, j, djj);
+        let inv = 1.0 / djj;
+        // column update below the diagonal
+        for i in (j + 1)..n {
+            let mut s = l.at(i, j);
+            for k in 0..j {
+                s -= l.at(i, k) * l.at(j, k);
+            }
+            l.set(i, j, s * inv);
+        }
+    }
+    // zero the upper triangle
+    for j in 1..n {
+        for i in 0..j {
+            l.set(i, j, 0.0);
+        }
+    }
+    Ok(l)
+}
+
+/// Blocked right-looking lower Cholesky with panel width `nb`.
+/// Identical contract to [`potrf_unblocked`].
+pub fn potrf_blocked(a: &Mat, nb: usize) -> Result<Mat> {
+    let n = a.rows();
+    if n <= nb {
+        return potrf_unblocked(a);
+    }
+    let mut l = a.clone();
+    let mut j0 = 0;
+    while j0 < n {
+        let jb = nb.min(n - j0);
+        // Factor the diagonal block A11 (updated in previous iterations).
+        let a11 = Mat::from_fn(jb, jb, |i, j| l.at(j0 + i, j0 + j));
+        let l11 = potrf_unblocked(&a11).map_err(|e| match e {
+            Error::CholeskyBreakdown { pivot, value } => {
+                Error::CholeskyBreakdown { pivot: j0 + pivot, value }
+            }
+            e => e,
+        })?;
+        for j in 0..jb {
+            for i in 0..jb {
+                l.set(j0 + i, j0 + j, l11.at(i, j));
+            }
+        }
+        let rest = n - j0 - jb;
+        if rest > 0 {
+            // L21 = A21 · L11⁻ᵀ  (solve X L11ᵀ = A21, row-block)
+            for j in 0..jb {
+                for i in 0..rest {
+                    let mut s = l.at(j0 + jb + i, j0 + j);
+                    for k in 0..j {
+                        s -= l.at(j0 + jb + i, j0 + k) * l11.at(j, k);
+                    }
+                    l.set(j0 + jb + i, j0 + j, s / l11.at(j, j));
+                }
+            }
+            // A22 −= L21 · L21ᵀ (lower triangle only)
+            for jj in 0..rest {
+                for ii in jj..rest {
+                    let mut s = l.at(j0 + jb + ii, j0 + jb + jj);
+                    for k in 0..jb {
+                        s -= l.at(j0 + jb + ii, j0 + k) * l.at(j0 + jb + jj, j0 + k);
+                    }
+                    l.set(j0 + jb + ii, j0 + jb + jj, s);
+                }
+            }
+        }
+        j0 += jb;
+    }
+    for j in 1..n {
+        for i in 0..j {
+            l.set(i, j, 0.0);
+        }
+    }
+    Ok(l)
+}
+
+/// Default entry point: blocked for n > 64.
+pub fn potrf(a: &Mat) -> Result<Mat> {
+    if a.rows() > 64 {
+        potrf_blocked(a, 32)
+    } else {
+        potrf_unblocked(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas3::{mat_nn, mat_tn};
+    use crate::util::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::randn(n + 4, n, &mut rng);
+        let mut w = mat_tn(&g, &g);
+        for i in 0..n {
+            w.add_at(i, i, 1e-3);
+        }
+        w
+    }
+
+    #[test]
+    fn unblocked_reconstructs() {
+        for n in [1, 2, 5, 16, 33] {
+            let a = spd(n, n as u64);
+            let l = potrf_unblocked(&a).unwrap();
+            let back = mat_nn(&l, &l.transpose());
+            assert!(back.max_abs_diff(&a) < 1e-9 * (n as f64), "n={n}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_unblocked() {
+        for n in [48, 100, 130] {
+            let a = spd(n, 100 + n as u64);
+            let l1 = potrf_unblocked(&a).unwrap();
+            let l2 = potrf_blocked(&a, 32).unwrap();
+            assert!(l1.max_abs_diff(&l2) < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn breakdown_detected_with_pivot_index() {
+        // Rank-deficient: Gram of a matrix with a repeated column.
+        let mut rng = Rng::new(9);
+        let mut g = Mat::randn(10, 4, &mut rng);
+        let c0 = g.col(0).to_vec();
+        g.col_mut(2).copy_from_slice(&c0);
+        let w = mat_tn(&g, &g);
+        match potrf(&w) {
+            Err(Error::CholeskyBreakdown { pivot, .. }) => assert_eq!(pivot, 2),
+            other => panic!("expected breakdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn upper_triangle_is_zeroed() {
+        let a = spd(6, 77);
+        let l = potrf(&a).unwrap();
+        for j in 1..6 {
+            for i in 0..j {
+                assert_eq!(l.at(i, j), 0.0);
+            }
+        }
+    }
+}

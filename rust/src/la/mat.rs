@@ -1,0 +1,316 @@
+//! Column-major dense matrix type.
+//!
+//! Column-major is the natural layout for the paper's algorithms: every
+//! building block (CGS projections, CholeskyQR, Lanczos bases) operates on
+//! *column panels*, which are contiguous sub-slices in this layout, so
+//! panel views are zero-copy.
+
+use crate::error::{shape_err, Result};
+use crate::util::rng::Rng;
+
+/// Dense f64 matrix, column-major: element (i, j) is `data[j * rows + i]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity (or rectangular identity) matrix.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing column-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Mat> {
+        if data.len() != rows * cols {
+            return Err(shape_err(
+                "from_vec",
+                format!("{}x{} needs {} elements, got {}", rows, cols, rows * cols, data.len()),
+            ));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// Standard-normal random matrix.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    /// Centered-Poisson random matrix (paper's cuRAND init distribution).
+    pub fn rand_centered_poisson(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_centered_poisson(&mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] += v;
+    }
+
+    /// Contiguous view of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable view of column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Zero-copy read view of the column panel [j0, j0+k).
+    pub fn panel(&self, j0: usize, k: usize) -> MatRef<'_> {
+        assert!(j0 + k <= self.cols, "panel out of range");
+        MatRef {
+            rows: self.rows,
+            cols: k,
+            data: &self.data[j0 * self.rows..(j0 + k) * self.rows],
+        }
+    }
+
+    /// Zero-copy mutable view of the column panel [j0, j0+k).
+    pub fn panel_mut(&mut self, j0: usize, k: usize) -> MatMut<'_> {
+        assert!(j0 + k <= self.cols, "panel out of range");
+        let rows = self.rows;
+        MatMut {
+            rows,
+            cols: k,
+            data: &mut self.data[j0 * rows..(j0 + k) * rows],
+        }
+    }
+
+    /// Whole-matrix read view.
+    pub fn as_ref(&self) -> MatRef<'_> {
+        MatRef { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+
+    /// Whole-matrix mutable view.
+    pub fn as_mut(&mut self) -> MatMut<'_> {
+        MatMut { rows: self.rows, cols: self.cols, data: &mut self.data }
+    }
+
+    /// Copy of the column panel [j0, j0+k) as an owned matrix.
+    pub fn panel_owned(&self, j0: usize, k: usize) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: k,
+            data: self.panel(j0, k).data.to_vec(),
+        }
+    }
+
+    /// Overwrite the column panel [j0, j0+k) from `src` (same rows).
+    pub fn set_panel(&mut self, j0: usize, src: &Mat) {
+        assert_eq!(self.rows, src.rows, "set_panel rows");
+        assert!(j0 + src.cols <= self.cols, "set_panel range");
+        let dst = &mut self.data[j0 * self.rows..(j0 + src.cols) * self.rows];
+        dst.copy_from_slice(&src.data);
+    }
+
+    /// Explicit transpose (used by tests and small matrices only).
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// max |a_ij - b_ij|
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Horizontal concatenation [A | B].
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "hcat rows");
+        let mut data = Vec::with_capacity(self.data.len() + other.data.len());
+        data.extend_from_slice(&self.data);
+        data.extend_from_slice(&other.data);
+        Mat { rows: self.rows, cols: self.cols + other.cols, data }
+    }
+
+    /// In-place scale.
+    pub fn scale(&mut self, a: f64) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+}
+
+/// Borrowed read-only column-major view (contiguous, leading dim == rows).
+#[derive(Clone, Copy, Debug)]
+pub struct MatRef<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a [f64],
+}
+
+impl<'a> MatRef<'a> {
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.rows + i]
+    }
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+    pub fn to_owned(&self) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.to_vec() }
+    }
+    /// Sub-panel of this view.
+    pub fn panel(&self, j0: usize, k: usize) -> MatRef<'a> {
+        assert!(j0 + k <= self.cols);
+        MatRef {
+            rows: self.rows,
+            cols: k,
+            data: &self.data[j0 * self.rows..(j0 + k) * self.rows],
+        }
+    }
+}
+
+/// Borrowed mutable column-major view (contiguous, leading dim == rows).
+#[derive(Debug)]
+pub struct MatMut<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: &'a mut [f64],
+}
+
+impl<'a> MatMut<'a> {
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.rows + i]
+    }
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.rows + i] = v;
+    }
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+    pub fn as_ref(&self) -> MatRef<'_> {
+        MatRef { rows: self.rows, cols: self.cols, data: self.data }
+    }
+    pub fn reborrow(&mut self) -> MatMut<'_> {
+        MatMut { rows: self.rows, cols: self.cols, data: self.data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_column_major() {
+        let m = Mat::from_fn(2, 3, |i, j| (10 * i + j) as f64);
+        assert_eq!(m.data(), &[0.0, 10.0, 1.0, 11.0, 2.0, 12.0]);
+        assert_eq!(m.at(1, 2), 12.0);
+    }
+
+    #[test]
+    fn panel_views_are_contiguous() {
+        let m = Mat::from_fn(3, 4, |i, j| (j * 3 + i) as f64);
+        let p = m.panel(1, 2);
+        assert_eq!(p.rows, 3);
+        assert_eq!(p.cols, 2);
+        assert_eq!(p.data, &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(p.at(2, 1), 8.0);
+    }
+
+    #[test]
+    fn set_panel_roundtrip() {
+        let mut m = Mat::zeros(3, 4);
+        let src = Mat::from_fn(3, 2, |i, j| 1.0 + (i + j) as f64);
+        m.set_panel(2, &src);
+        assert_eq!(m.panel_owned(2, 2), src);
+        assert_eq!(m.at(0, 0), 0.0);
+    }
+
+    #[test]
+    fn transpose_and_eye() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        let t = m.transpose();
+        assert_eq!(t.at(2, 1), m.at(1, 2));
+        let i3 = Mat::eye(3);
+        assert_eq!(i3.at(1, 1), 1.0);
+        assert_eq!(i3.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn hcat_shapes() {
+        let a = Mat::zeros(3, 2);
+        let b = Mat::from_fn(3, 1, |_, _| 5.0);
+        let c = a.hcat(&b);
+        assert_eq!((c.rows(), c.cols()), (3, 3));
+        assert_eq!(c.at(2, 2), 5.0);
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Mat::from_vec(2, 2, vec![0.0; 3]).is_err());
+        assert!(Mat::from_vec(2, 2, vec![0.0; 4]).is_ok());
+    }
+}

@@ -1,0 +1,104 @@
+//! Norms and orthogonality diagnostics.
+
+use super::blas1::nrm2;
+use super::blas3::{gram, mat_nn};
+use super::mat::Mat;
+use crate::util::rng::Rng;
+
+/// ‖QᵀQ − I‖_F — the orthogonality defect used throughout the tests and
+/// the CholeskyQR2 quality checks.
+pub fn orth_error(q: &Mat) -> f64 {
+    let w = gram(q.as_ref());
+    let n = q.cols();
+    let mut s = 0.0;
+    for j in 0..n {
+        for i in 0..n {
+            let d = w.at(i, j) - if i == j { 1.0 } else { 0.0 };
+            s += d * d;
+        }
+    }
+    s.sqrt()
+}
+
+/// Spectral-norm estimate of a dense matrix via power iteration on AᵀA.
+pub fn spectral_norm_est(a: &Mat, iters: usize, seed: u64) -> f64 {
+    let n = a.cols();
+    let mut rng = Rng::new(seed);
+    let mut v = Mat::randn(n, 1, &mut rng);
+    let nv = nrm2(v.col(0));
+    if nv == 0.0 {
+        return 0.0;
+    }
+    for x in v.col_mut(0) {
+        *x /= nv;
+    }
+    let mut sigma = 0.0;
+    for _ in 0..iters {
+        let av = mat_nn(a, &v); // m×1
+        let mut atav = Mat::zeros(n, 1);
+        super::blas3::gemm_tn(1.0, a.as_ref(), av.as_ref(), 0.0, &mut atav);
+        let nrm = nrm2(atav.col(0));
+        if nrm == 0.0 {
+            return 0.0;
+        }
+        sigma = nrm.sqrt();
+        for x in atav.col_mut(0) {
+            *x /= nrm;
+        }
+        v = atav;
+    }
+    sigma
+}
+
+/// Condition-number estimate κ₂(A) ≈ σ_max/σ_min via the small Gram SVD —
+/// only for skinny panels (cols ≤ 512); used in CholeskyQR2 diagnostics.
+pub fn panel_cond_est(a: &Mat) -> f64 {
+    let w = gram(a.as_ref());
+    match super::svd::jacobi_svd(&w) {
+        Ok(svd) => {
+            let smax = svd.s.first().copied().unwrap_or(0.0);
+            let smin = svd.s.last().copied().unwrap_or(0.0);
+            if smin <= 0.0 {
+                f64::INFINITY
+            } else {
+                (smax / smin).sqrt()
+            }
+        }
+        Err(_) => f64::INFINITY,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::qr::random_orthonormal;
+
+    #[test]
+    fn orth_error_zero_for_orthonormal() {
+        let mut rng = Rng::new(1);
+        let q = random_orthonormal(40, 8, &mut rng);
+        assert!(orth_error(&q) < 1e-13);
+        let mut bad = q.clone();
+        let c0 = bad.col(0).to_vec();
+        bad.col_mut(1).copy_from_slice(&c0);
+        assert!(orth_error(&bad) > 1.0);
+    }
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let mut a = Mat::zeros(6, 6);
+        for i in 0..6 {
+            a.set(i, i, (i + 1) as f64);
+        }
+        let est = spectral_norm_est(&a, 50, 3);
+        assert!((est - 6.0).abs() < 1e-6, "est {est}");
+    }
+
+    #[test]
+    fn cond_est_identityish() {
+        let mut rng = Rng::new(2);
+        let q = random_orthonormal(30, 5, &mut rng);
+        let c = panel_cond_est(&q);
+        assert!((c - 1.0).abs() < 1e-6, "cond {c}");
+    }
+}

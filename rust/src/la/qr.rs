@@ -1,0 +1,147 @@
+//! Householder QR (comparator / fallback path).
+//!
+//! The paper's fast path uses CholeskyQR2 + block-CGS; Householder QR is
+//! kept as (a) the numerically bullet-proof fallback when CholeskyQR2
+//! breaks down on an extremely ill-conditioned panel, and (b) the oracle
+//! the orthogonalization tests compare against. It is also used to
+//! generate Haar-distributed orthonormal test matrices.
+
+use super::blas1::{axpy, dot, nrm2, scal};
+use super::mat::Mat;
+use crate::util::rng::Rng;
+
+/// Thin QR via Householder reflections: A (m×n, m ≥ n) → (Q m×n with
+/// orthonormal columns, R n×n upper triangular), A = Q·R.
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n, "householder_qr needs m >= n");
+    let mut work = a.clone();
+    // v_k stored in-place below the diagonal; betas on the side.
+    let mut betas = vec![0.0; n];
+    let mut rdiag = vec![0.0; n];
+    for k in 0..n {
+        // Build the reflector for column k.
+        let col = &work.col(k)[k..];
+        let alpha = nrm2(col);
+        let a0 = col[0];
+        let sign = if a0 >= 0.0 { 1.0 } else { -1.0 };
+        let r_kk = -sign * alpha;
+        rdiag[k] = r_kk;
+        if alpha == 0.0 {
+            betas[k] = 0.0;
+            continue;
+        }
+        // v = x - r_kk * e1, normalized so v[0] = 1.
+        let v0 = a0 - r_kk;
+        let colm = &mut work.col_mut(k)[k..];
+        colm[0] = 1.0;
+        if v0 != 0.0 {
+            let inv = 1.0 / v0;
+            for x in colm.iter_mut().skip(1) {
+                *x *= inv;
+            }
+        }
+        let vnorm2 = 1.0 + colm[1..].iter().map(|x| x * x).sum::<f64>();
+        betas[k] = 2.0 / vnorm2;
+        // Apply (I - beta v vᵀ) to the trailing columns.
+        let rows = m;
+        for j in (k + 1)..n {
+            let (vpart, cpart) = {
+                let data = work.data_mut();
+                let (lo, hi) = if k < j { (k, j) } else { (j, k) };
+                let (head, tail) = data.split_at_mut(hi * rows);
+                let v = &head[lo * rows + k..(lo + 1) * rows];
+                let c = &mut tail[k..rows];
+                (v, c)
+            };
+            let s = betas[k] * dot(vpart, cpart);
+            axpy(-s, vpart, cpart);
+        }
+    }
+    // Extract R.
+    let mut r = Mat::zeros(n, n);
+    for j in 0..n {
+        for i in 0..j.min(n) {
+            r.set(i, j, work.at(i, j));
+        }
+        r.set(j, j, rdiag[j]);
+        for i in 0..j {
+            r.set(i, j, work.at(i, j));
+        }
+    }
+    // Form thin Q by applying reflectors to the first n columns of I.
+    let mut q = Mat::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for k in (0..n).rev() {
+        if betas[k] == 0.0 {
+            continue;
+        }
+        let v: Vec<f64> = work.col(k)[k..].to_vec();
+        for j in 0..n {
+            let cj = &mut q.col_mut(j)[k..];
+            let s = betas[k] * dot(&v, cj);
+            axpy(-s, &v, cj);
+        }
+    }
+    (q, r)
+}
+
+/// Random matrix with Haar-ish orthonormal columns (QR of a Gaussian).
+pub fn random_orthonormal(m: usize, n: usize, rng: &mut Rng) -> Mat {
+    assert!(m >= n);
+    let g = Mat::randn(m, n, rng);
+    let (mut q, r) = householder_qr(&g);
+    // Fix the sign convention (diag(R) > 0) so the distribution is Haar.
+    for j in 0..n {
+        if r.at(j, j) < 0.0 {
+            scal(-1.0, q.col_mut(j));
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas3::{mat_nn, mat_tn};
+    use crate::la::norms::orth_error;
+
+    #[test]
+    fn qr_reconstructs_and_q_orthonormal() {
+        let mut rng = Rng::new(21);
+        for &(m, n) in &[(1usize, 1usize), (8, 3), (40, 10), (33, 33), (100, 7)] {
+            let a = Mat::randn(m, n, &mut rng);
+            let (q, r) = householder_qr(&a);
+            let back = mat_nn(&q, &r);
+            assert!(back.max_abs_diff(&a) < 1e-10, "reconstruct {m}x{n}");
+            assert!(orth_error(&q) < 1e-12, "orthonormal {m}x{n}");
+            // R upper triangular
+            for j in 0..n {
+                for i in (j + 1)..n {
+                    assert_eq!(r.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficiency_gracefully() {
+        // Zero column: Q still orthonormal-ish on the nonzero part.
+        let mut a = Mat::randn(20, 4, &mut Rng::new(3));
+        a.col_mut(2).fill(0.0);
+        let (q, r) = householder_qr(&a);
+        let back = mat_nn(&q, &r);
+        assert!(back.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn random_orthonormal_is_orthonormal() {
+        let mut rng = Rng::new(5);
+        let q = random_orthonormal(50, 12, &mut rng);
+        let w = mat_tn(&q, &q);
+        let eye = Mat::eye(12);
+        assert!(w.max_abs_diff(&eye) < 1e-12);
+    }
+}

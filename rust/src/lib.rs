@@ -1,0 +1,64 @@
+//! # trunksvd
+//!
+//! Reproduction of *"Fast Truncated SVD of Sparse and Dense Matrices on
+//! Graphics Processors"* (Tomás, Quintana-Ortí, Anzt): the randomized
+//! truncated SVD (RandSVD, Alg. 1) and the block Golub–Kahan–Lanczos
+//! truncated SVD (LancSVD, Alg. 2), assembled from the paper's shared
+//! building blocks — CGS-QR (Alg. 3), CholeskyQR2 (Alg. 4) and CGS-CQR2
+//! (Alg. 5) — over two interchangeable compute backends:
+//!
+//! * [`backend::CpuBackend`] — a pure-rust dense/sparse substrate;
+//! * [`backend::XlaBackend`] — AOT-compiled JAX/Pallas graphs executed
+//!   through the PJRT runtime (the GPU-library stand-in).
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod error;
+
+pub mod util {
+    pub mod json;
+    pub mod pool;
+    pub mod rng;
+}
+
+pub mod la {
+    pub mod blas1;
+    pub mod blas3;
+    pub mod chol;
+    pub mod mat;
+    pub mod norms;
+    pub mod qr;
+    pub mod svd;
+}
+
+pub mod sparse {
+    pub mod blockell;
+    pub mod coo;
+    pub mod csr;
+    pub mod mm;
+}
+
+pub mod gen {
+    pub mod dense;
+    pub mod sparse;
+    pub mod suite;
+}
+
+pub mod algo;
+pub mod bench_support;
+pub mod cli;
+pub mod backend;
+pub mod coordinator;
+pub mod cost;
+pub mod metrics;
+
+pub use error::{Error, Result};
+pub use la::mat::Mat;
+pub use sparse::csr::Csr;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+pub mod runtime;

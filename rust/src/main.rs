@@ -1,0 +1,5 @@
+//! trunksvd CLI entrypoint (Layer-3 leader process).
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(trunksvd::cli::main_with_args(argv));
+}

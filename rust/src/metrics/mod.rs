@@ -1,0 +1,220 @@
+//! Per-building-block instrumentation.
+//!
+//! Figures 2 and 3 of the paper break execution time / theoretical flops
+//! down across the major building blocks of each algorithm. The backends
+//! record wall time and flops into a [`Profile`] under the currently
+//! active [`Block`] phase, which the algorithms set as they move through
+//! their steps.
+
+use std::time::Instant;
+
+/// The building-block categories of Figs. 2–3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Block {
+    /// SpMM / GEMM with A (steps S1 in Alg. 1, S4 in Alg. 2)
+    MultA,
+    /// SpMM / GEMM with Aᵀ (steps S3 in Alg. 1, S2 in Alg. 2)
+    MultAt,
+    /// Orthogonalization of m-dimension panels (Alg. 1 S2; Alg. 2 S1/S5)
+    OrthM,
+    /// Orthogonalization of n-dimension panels (Alg. 1 S4; Alg. 2 S3)
+    OrthN,
+    /// Host-side small factorizations (POTRF within orth is charged to
+    /// Orth*, this block is the r×r GESVD)
+    SmallSvd,
+    /// Post-loop GEMMs forming U_T/V_T (and the restart GEMM in Alg. 2)
+    Finalize,
+    /// Initial random generation + first orthonormalization
+    Init,
+    /// Anything else (residual checks, copies)
+    Other,
+}
+
+impl Block {
+    pub const ALL: [Block; 8] = [
+        Block::MultA,
+        Block::MultAt,
+        Block::OrthM,
+        Block::OrthN,
+        Block::SmallSvd,
+        Block::Finalize,
+        Block::Init,
+        Block::Other,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Block::MultA => "mult_A",
+            Block::MultAt => "mult_At",
+            Block::OrthM => "orth_m",
+            Block::OrthN => "orth_n",
+            Block::SmallSvd => "small_svd",
+            Block::Finalize => "finalize",
+            Block::Init => "init",
+            Block::Other => "other",
+        }
+    }
+
+    fn index(&self) -> usize {
+        Block::ALL.iter().position(|b| b == self).unwrap()
+    }
+}
+
+/// Accumulated time + flops per block.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BlockStat {
+    pub secs: f64,
+    pub flops: f64,
+    pub calls: u64,
+}
+
+/// A run profile: per-block stats plus the active phase.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    stats: [BlockStat; 8],
+    phase: Block,
+}
+
+impl Default for Profile {
+    fn default() -> Self {
+        Profile { stats: [BlockStat::default(); 8], phase: Block::Other }
+    }
+}
+
+impl Profile {
+    pub fn new() -> Profile {
+        Profile::default()
+    }
+
+    /// Set the phase that subsequent records are charged to.
+    pub fn set_phase(&mut self, b: Block) {
+        self.phase = b;
+    }
+
+    pub fn phase(&self) -> Block {
+        self.phase
+    }
+
+    /// Charge `secs`/`flops` to the current phase.
+    pub fn record(&mut self, secs: f64, flops: f64) {
+        let s = &mut self.stats[self.phase.index()];
+        s.secs += secs;
+        s.flops += flops;
+        s.calls += 1;
+    }
+
+    /// Charge to an explicit block regardless of phase.
+    pub fn record_block(&mut self, b: Block, secs: f64, flops: f64) {
+        let s = &mut self.stats[b.index()];
+        s.secs += secs;
+        s.flops += flops;
+        s.calls += 1;
+    }
+
+    pub fn stat(&self, b: Block) -> BlockStat {
+        self.stats[b.index()]
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.stats.iter().map(|s| s.secs).sum()
+    }
+
+    pub fn total_flops(&self) -> f64 {
+        self.stats.iter().map(|s| s.flops).sum()
+    }
+
+    /// Merge another profile into this one.
+    pub fn merge(&mut self, other: &Profile) {
+        for (a, b) in self.stats.iter_mut().zip(&other.stats) {
+            a.secs += b.secs;
+            a.flops += b.flops;
+            a.calls += b.calls;
+        }
+    }
+
+    /// One-line breakdown, ordered as Fig. 2's legend.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        for b in Block::ALL {
+            let s = self.stat(b);
+            if s.calls > 0 {
+                parts.push(format!("{}={:.3}s/{:.2}GF", b.name(), s.secs, s.flops / 1e9));
+            }
+        }
+        parts.join(" ")
+    }
+}
+
+/// RAII timer: charges the elapsed time (+ flops) to the profile's current
+/// phase on drop. Usage: `let _t = Timer::start(&mut prof, flops);`
+pub struct Timer {
+    t0: Instant,
+    flops: f64,
+}
+
+impl Timer {
+    pub fn start(flops: f64) -> Timer {
+        Timer { t0: Instant::now(), flops }
+    }
+    pub fn stop(self, prof: &mut Profile) {
+        prof.record(self.t0.elapsed().as_secs_f64(), self.flops);
+    }
+    pub fn stop_block(self, prof: &mut Profile, b: Block) {
+        prof.record_block(b, self.t0.elapsed().as_secs_f64(), self.flops);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_accounting() {
+        let mut p = Profile::new();
+        p.set_phase(Block::MultA);
+        p.record(1.0, 100.0);
+        p.record(0.5, 50.0);
+        p.set_phase(Block::OrthM);
+        p.record(2.0, 10.0);
+        assert_eq!(p.stat(Block::MultA).calls, 2);
+        assert!((p.stat(Block::MultA).secs - 1.5).abs() < 1e-12);
+        assert!((p.stat(Block::OrthM).flops - 10.0).abs() < 1e-12);
+        assert!((p.total_secs() - 3.5).abs() < 1e-12);
+        assert!((p.total_flops() - 160.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Profile::new();
+        a.set_phase(Block::Finalize);
+        a.record(1.0, 5.0);
+        let mut b = Profile::new();
+        b.set_phase(Block::Finalize);
+        b.record(2.0, 7.0);
+        a.merge(&b);
+        assert_eq!(a.stat(Block::Finalize).calls, 2);
+        assert!((a.stat(Block::Finalize).flops - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timer_records_elapsed() {
+        let mut p = Profile::new();
+        p.set_phase(Block::Other);
+        let t = Timer::start(42.0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        t.stop(&mut p);
+        let s = p.stat(Block::Other);
+        assert!(s.secs >= 0.004, "timer {}", s.secs);
+        assert_eq!(s.flops, 42.0);
+    }
+
+    #[test]
+    fn summary_mentions_active_blocks() {
+        let mut p = Profile::new();
+        p.set_phase(Block::MultAt);
+        p.record(0.1, 2e9);
+        let s = p.summary();
+        assert!(s.contains("mult_At"));
+        assert!(!s.contains("orth_m"));
+    }
+}

@@ -1,0 +1,88 @@
+//! Runtime-built XLA computations (the fallback for shapes without an AOT
+//! artifact). Python stays off the request path: the computations are
+//! assembled with the `xla` crate's XlaBuilder and cached per shape.
+
+use std::rc::Rc;
+
+use super::convert::{literal_to_mat, mat_to_literal};
+use super::Runtime;
+use crate::error::Result;
+use crate::la::mat::Mat;
+
+fn f64_shape(dims: &[usize]) -> xla::Shape {
+    xla::Shape::array::<f64>(dims.iter().map(|&d| d as i64).collect())
+}
+
+fn build_matmul_nn(m: usize, k: usize, n: usize) -> Result<xla::XlaComputation> {
+    let b = xla::XlaBuilder::new("matmul_nn");
+    let a = b.parameter_s(0, &f64_shape(&[m, k]), "a")?;
+    let x = b.parameter_s(1, &f64_shape(&[k, n]), "x")?;
+    Ok(a.matmul(&x)?.build()?)
+}
+
+fn build_matmul_tn(q: usize, a_cols: usize, b_cols: usize) -> Result<xla::XlaComputation> {
+    let b = xla::XlaBuilder::new("matmul_tn");
+    let a = b.parameter_s(0, &f64_shape(&[q, a_cols]), "a")?;
+    let x = b.parameter_s(1, &f64_shape(&[q, b_cols]), "x")?;
+    let at = a.transpose(&[1, 0])?;
+    Ok(at.matmul(&x)?.build()?)
+}
+
+/// C = A·B through a runtime-built, cached executable.
+pub fn matmul_nn(rt: &Runtime, a: &Mat, b: &Mat) -> Result<Mat> {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k, "matmul_nn inner dim");
+    let exe = rt.builder_exec(format!("bnn|{m}x{k}x{n}"), || build_matmul_nn(m, k, n))?;
+    run2(rt, &exe, a, b, m, n)
+}
+
+/// C = Aᵀ·B through a runtime-built, cached executable.
+pub fn matmul_tn(rt: &Runtime, a: &Mat, b: &Mat) -> Result<Mat> {
+    let (q, ac) = (a.rows(), a.cols());
+    let bc = b.cols();
+    assert_eq!(b.rows(), q, "matmul_tn inner dim");
+    let exe = rt.builder_exec(format!("btn|{q}x{ac}x{bc}"), || build_matmul_tn(q, ac, bc))?;
+    run2(rt, &exe, a, b, ac, bc)
+}
+
+fn run2(
+    rt: &Runtime,
+    exe: &Rc<xla::PjRtLoadedExecutable>,
+    a: &Mat,
+    b: &Mat,
+    out_rows: usize,
+    out_cols: usize,
+) -> Result<Mat> {
+    let la = mat_to_literal(a, a.rows(), a.cols())?;
+    let lb = mat_to_literal(b, b.rows(), b.cols())?;
+    rt.note_builder_exec();
+    let out = exe.execute::<xla::Literal>(&[la, lb])?;
+    let lit = out[0][0].to_literal_sync()?;
+    literal_to_mat(&lit, out_rows, out_cols)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas3::{mat_nn, mat_tn};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn builder_matmuls_match_cpu() {
+        let rt = Runtime::without_artifacts().unwrap();
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(17, 9, &mut rng);
+        let b = Mat::randn(9, 5, &mut rng);
+        let c = matmul_nn(&rt, &a, &b).unwrap();
+        assert!(c.max_abs_diff(&mat_nn(&a, &b)) < 1e-12);
+        let x = Mat::randn(17, 4, &mut rng);
+        let h = matmul_tn(&rt, &a, &x).unwrap();
+        assert!(h.max_abs_diff(&mat_tn(&a, &x)) < 1e-12);
+        // second call hits the cache (one compile per shape)
+        let _ = matmul_nn(&rt, &a, &b).unwrap();
+        let stats = rt.stats();
+        assert_eq!(stats.compiles, 2);
+        assert_eq!(stats.builder_execs, 3);
+    }
+}

@@ -1,0 +1,123 @@
+//! Host `Mat` (column-major) ↔ XLA `Literal` (row-major) conversion and
+//! the zero-padding helpers used by the shape-bucketing executable cache.
+//!
+//! Padding safety: every device graph we ship is exact under zero padding
+//! — zero *rows* are no-ops for Gram/projection/update/GEMM, zero
+//! *columns* of the history panel P produce zero rows of H, and zero
+//! columns of GEMM operands produce zero output columns that the
+//! unpadding step drops. This is asserted bitwise in the python kernel
+//! tests and revalidated by the backend-parity integration tests.
+
+use crate::error::Result;
+use crate::la::mat::Mat;
+
+/// Column-major Mat → row-major flat buffer.
+pub fn to_row_major(m: &Mat) -> Vec<f64> {
+    let (r, c) = (m.rows(), m.cols());
+    let src = m.data();
+    let mut out = vec![0.0; r * c];
+    for j in 0..c {
+        let col = &src[j * r..(j + 1) * r];
+        for i in 0..r {
+            out[i * c + j] = col[i];
+        }
+    }
+    out
+}
+
+/// Row-major flat buffer → column-major Mat.
+pub fn from_row_major(rows: usize, cols: usize, data: &[f64]) -> Mat {
+    assert_eq!(data.len(), rows * cols);
+    let mut m = Mat::zeros(rows, cols);
+    let dst = m.data_mut();
+    for i in 0..rows {
+        for j in 0..cols {
+            dst[j * rows + i] = data[i * cols + j];
+        }
+    }
+    m
+}
+
+/// Mat → row-major XLA literal of shape [rows, cols], with optional
+/// zero padding to [pad_rows, pad_cols].
+pub fn mat_to_literal(m: &Mat, pad_rows: usize, pad_cols: usize) -> Result<xla::Literal> {
+    let (r, c) = (m.rows(), m.cols());
+    assert!(pad_rows >= r && pad_cols >= c, "padding must not truncate");
+    let mut buf = vec![0.0f64; pad_rows * pad_cols];
+    let src = m.data();
+    for j in 0..c {
+        let col = &src[j * r..(j + 1) * r];
+        for i in 0..r {
+            buf[i * pad_cols + j] = col[i];
+        }
+    }
+    let lit = xla::Literal::vec1(&buf).reshape(&[pad_rows as i64, pad_cols as i64])?;
+    Ok(lit)
+}
+
+/// Row-major literal of shape [pr, pc] → Mat, keeping the leading
+/// rows×cols corner (the unpadding step).
+pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims();
+    assert_eq!(dims.len(), 2, "expected rank-2 literal");
+    let (pr, pc) = (dims[0] as usize, dims[1] as usize);
+    assert!(pr >= rows && pc >= cols, "literal smaller than requested corner");
+    let data = lit.to_vec::<f64>()?;
+    let mut m = Mat::zeros(rows, cols);
+    let dst = m.data_mut();
+    for i in 0..rows {
+        for j in 0..cols {
+            dst[j * rows + i] = data[i * pc + j];
+        }
+    }
+    Ok(m)
+}
+
+/// Next power-of-two bucket in [lo, hi] covering x (clamped to hi).
+pub fn pow2_bucket(x: usize, lo: usize, hi: usize) -> usize {
+    let mut v = lo;
+    while v < x && v < hi {
+        v *= 2;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn row_major_roundtrip() {
+        let mut rng = Rng::new(1);
+        let m = Mat::randn(7, 4, &mut rng);
+        let rm = to_row_major(&m);
+        assert_eq!(rm[0 * 4 + 2], m.at(0, 2));
+        let back = from_row_major(7, 4, &rm);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn pow2_bucket_behaviour() {
+        assert_eq!(pow2_bucket(500, 512, 65536), 512);
+        assert_eq!(pow2_bucket(513, 512, 65536), 1024);
+        assert_eq!(pow2_bucket(512, 512, 65536), 512);
+        assert_eq!(pow2_bucket(1 << 30, 512, 65536), 65536);
+    }
+
+    #[test]
+    fn literal_roundtrip_with_padding() {
+        let mut rng = Rng::new(2);
+        let m = Mat::randn(5, 3, &mut rng);
+        let lit = mat_to_literal(&m, 8, 4).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[8, 4]);
+        let back = literal_to_mat(&lit, 5, 3).unwrap();
+        assert!(back.max_abs_diff(&m) == 0.0);
+        // padded region is zero: full corner read includes zeros
+        let full = literal_to_mat(&lit, 8, 4).unwrap();
+        assert_eq!(full.at(7, 3), 0.0);
+        assert_eq!(full.at(0, 0), m.at(0, 0));
+    }
+}

@@ -1,0 +1,247 @@
+//! PJRT runtime: artifact manifest, executable cache, and execution.
+//!
+//! Loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** — the id-safe interchange with xla_extension 0.5.1),
+//! compiles them lazily on the PJRT CPU client, and caches the loaded
+//! executables keyed by (op, input shapes). Shapes with no artifact can be
+//! synthesized at runtime for the plain GEMM ops via `builder_ops`
+//! (XlaBuilder — still no python on the request path).
+
+pub mod builder_ops;
+pub mod convert;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub op: String,
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+fn shape_key(op: &str, shapes: &[&[usize]]) -> String {
+    let mut k = String::from(op);
+    for s in shapes {
+        k.push('|');
+        for (i, d) in s.iter().enumerate() {
+            if i > 0 {
+                k.push('x');
+            }
+            k.push_str(&d.to_string());
+        }
+    }
+    k
+}
+
+/// The PJRT runtime handle. Not `Sync` (PJRT types are single-threaded
+/// here); the coordinator owns exactly one.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: String,
+    manifest: HashMap<String, ArtifactEntry>,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    builder_cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// statistics: (artifact hits, builder-fallback hits, compiles)
+    stats: RefCell<RuntimeStats>,
+}
+
+/// Cache/compile counters (exposed for tests and the perf report).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub artifact_execs: u64,
+    pub builder_execs: u64,
+    pub compiles: u64,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (with manifest.json).
+    pub fn new(artifact_dir: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut manifest = HashMap::new();
+        let man_path = format!("{artifact_dir}/manifest.json");
+        if std::path::Path::new(&man_path).exists() {
+            let doc = json::parse_file(&man_path)?;
+            for e in doc.req("artifacts")?.as_arr().unwrap_or(&[]) {
+                let entry = parse_entry(e)?;
+                let shapes: Vec<&[usize]> = entry.inputs.iter().map(|v| v.as_slice()).collect();
+                manifest.insert(shape_key(&entry.op, &shapes), entry);
+            }
+        }
+        Ok(Runtime {
+            client,
+            dir: artifact_dir.to_string(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            builder_cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Create a runtime with *no* artifacts (builder fallback only).
+    pub fn without_artifacts() -> Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            dir: String::new(),
+            manifest: HashMap::new(),
+            cache: RefCell::new(HashMap::new()),
+            builder_cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    pub fn artifact_count(&self) -> usize {
+        self.manifest.len()
+    }
+
+    /// Does the manifest have an artifact for these exact (padded) shapes?
+    pub fn has_artifact(&self, op: &str, shapes: &[&[usize]]) -> bool {
+        self.manifest.contains_key(&shape_key(op, shapes))
+    }
+
+    /// Compile (or fetch from cache) the artifact executable.
+    pub fn artifact_exec(
+        &self,
+        op: &str,
+        shapes: &[&[usize]],
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let key = shape_key(op, shapes);
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.get(&key).ok_or_else(|| Error::MissingArtifact {
+            op: op.to_string(),
+            shape: key.clone(),
+        })?;
+        let path = format!("{}/{}", self.dir, entry.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.stats.borrow_mut().compiles += 1;
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with literal inputs; returns the decomposed
+    /// tuple outputs (every artifact is lowered with return_tuple=True).
+    pub fn run_artifact(
+        &self,
+        op: &str,
+        shapes: &[&[usize]],
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.artifact_exec(op, shapes)?;
+        self.stats.borrow_mut().artifact_execs += 1;
+        let out = exe.execute::<xla::Literal>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute an artifact where some inputs are device-resident buffers.
+    pub fn run_artifact_b(
+        &self,
+        op: &str,
+        shapes: &[&[usize]],
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.artifact_exec(op, shapes)?;
+        self.stats.borrow_mut().artifact_execs += 1;
+        let out = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Stage a host literal into a device buffer (for persistent operands
+    /// like the problem matrix A).
+    pub fn stage(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Fetch (compile-once) a runtime-built executable; `build` constructs
+    /// the computation on a fresh XlaBuilder when not cached.
+    pub fn builder_exec(
+        &self,
+        key: String,
+        build: impl FnOnce() -> Result<xla::XlaComputation>,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.builder_cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let comp = build()?;
+        let exe = Rc::new(self.client.compile(&comp)?);
+        self.stats.borrow_mut().compiles += 1;
+        self.builder_cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Count a builder-path execution (called by builder_ops).
+    pub(crate) fn note_builder_exec(&self) {
+        self.stats.borrow_mut().builder_execs += 1;
+    }
+}
+
+fn parse_entry(e: &Json) -> Result<ArtifactEntry> {
+    let shapes = |v: &Json| -> Vec<Vec<usize>> {
+        v.as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|s| s.as_arr().unwrap_or(&[]).iter().filter_map(|d| d.as_usize()).collect())
+            .collect()
+    };
+    Ok(ArtifactEntry {
+        op: e.req("op")?.as_str().unwrap_or("").to_string(),
+        file: e.req("file")?.as_str().unwrap_or("").to_string(),
+        inputs: shapes(e.req("inputs")?),
+        outputs: shapes(e.req("outputs")?),
+    })
+}
+
+/// Default artifact directory: `$TRUNKSVD_ARTIFACTS`, else ./artifacts,
+/// else the crate-root artifacts dir.
+pub fn default_artifact_dir() -> String {
+    if let Ok(p) = std::env::var("TRUNKSVD_ARTIFACTS") {
+        return p;
+    }
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        return "artifacts".to_string();
+    }
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_key_stable() {
+        let a = [4usize, 5];
+        let b = [5usize];
+        assert_eq!(shape_key("op", &[&a, &b]), "op|4x5|5");
+        assert_eq!(shape_key("op", &[]), "op");
+    }
+
+    #[test]
+    fn manifest_parses_if_present() {
+        let dir = default_artifact_dir();
+        if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+            let rt = Runtime::new(&dir).unwrap();
+            assert!(rt.artifact_count() > 0);
+            let q = [512usize, 16];
+            assert!(rt.has_artifact("cholqr2", &[&q]));
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Coordinate-format sparse matrix (assembly / I/O staging format).
+
+use crate::error::{shape_err, Result};
+
+/// COO triplet matrix. Duplicates are allowed until conversion (they sum).
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row_idx: Vec<u32>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Coo {
+        Coo { rows, cols, ..Default::default() }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.row_idx.push(i as u32);
+        self.col_idx.push(j as u32);
+        self.values.push(v);
+    }
+
+    /// Validate all indices are in range (used after parsing).
+    pub fn validate(&self) -> Result<()> {
+        for (&i, &j) in self.row_idx.iter().zip(&self.col_idx) {
+            if i as usize >= self.rows || j as usize >= self.cols {
+                return Err(shape_err(
+                    "coo",
+                    format!("entry ({i},{j}) outside {}x{}", self.rows, self.cols),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Coo {
+        Coo {
+            rows: self.cols,
+            cols: self.rows,
+            row_idx: self.col_idx.clone(),
+            col_idx: self.row_idx.clone(),
+            values: self.values.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_validate() {
+        let mut c = Coo::new(3, 4);
+        c.push(0, 0, 1.0);
+        c.push(2, 3, -2.0);
+        assert_eq!(c.nnz(), 2);
+        assert!(c.validate().is_ok());
+        c.row_idx.push(5);
+        c.col_idx.push(0);
+        c.values.push(1.0);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn transpose_swaps() {
+        let mut c = Coo::new(2, 5);
+        c.push(1, 4, 3.0);
+        let t = c.transpose();
+        assert_eq!((t.rows, t.cols), (5, 2));
+        assert_eq!((t.row_idx[0], t.col_idx[0]), (4, 1));
+    }
+}

@@ -1,0 +1,364 @@
+//! CSR sparse matrix and the SpMM kernels (the cuSPARSE stand-ins).
+//!
+//! The paper's central performance observation is the asymmetry between
+//! SpMM with A (gather along rows, fast) and SpMM with Aᵀ (scatter, slow
+//! in cuSPARSE). Our CSR substrate reproduces exactly that structural
+//! asymmetry: `spmm` streams rows and accumulates locally, while `spmm_t`
+//! scatters into the output. An explicit `transpose()` (CSC conversion)
+//! gives the alternative the paper tried ("explicitly storing a transposed
+//! copy"), which we also evaluate in the ablation bench.
+
+use super::coo::Coo;
+use crate::error::{shape_err, Result};
+use crate::la::mat::Mat;
+
+/// Compressed sparse row matrix, f64 values, u32 column indices.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from COO, summing duplicates and sorting columns in each row.
+    pub fn from_coo(coo: &Coo) -> Result<Csr> {
+        coo.validate()?;
+        let rows = coo.rows;
+        // Count entries per row.
+        let mut counts = vec![0usize; rows + 1];
+        for &i in &coo.row_idx {
+            counts[i as usize + 1] += 1;
+        }
+        for i in 0..rows {
+            counts[i + 1] += counts[i];
+        }
+        let mut indices = vec![0u32; coo.nnz()];
+        let mut values = vec![0.0; coo.nnz()];
+        let mut next = counts.clone();
+        for k in 0..coo.nnz() {
+            let i = coo.row_idx[k] as usize;
+            let p = next[i];
+            indices[p] = coo.col_idx[k];
+            values[p] = coo.values[k];
+            next[i] += 1;
+        }
+        // Sort each row by column; merge duplicates.
+        let mut out_indptr = vec![0usize; rows + 1];
+        let mut out_indices = Vec::with_capacity(coo.nnz());
+        let mut out_values = Vec::with_capacity(coo.nnz());
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for i in 0..rows {
+            let lo = counts[i];
+            let hi = counts[i + 1];
+            scratch.clear();
+            scratch.extend(indices[lo..hi].iter().copied().zip(values[lo..hi].iter().copied()));
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut k = 0;
+            while k < scratch.len() {
+                let (c, mut v) = scratch[k];
+                k += 1;
+                while k < scratch.len() && scratch[k].0 == c {
+                    v += scratch[k].1;
+                    k += 1;
+                }
+                out_indices.push(c);
+                out_values.push(v);
+            }
+            out_indptr[i + 1] = out_indices.len();
+        }
+        Ok(Csr {
+            rows,
+            cols: coo.cols,
+            indptr: out_indptr,
+            indices: out_indices,
+            values: out_values,
+        })
+    }
+
+    /// Build directly from CSR parts (validated).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Result<Csr> {
+        if indptr.len() != rows + 1 || indices.len() != values.len() || indptr[rows] != indices.len()
+        {
+            return Err(shape_err("csr", "inconsistent indptr/indices/values"));
+        }
+        for w in indptr.windows(2) {
+            if w[1] < w[0] {
+                return Err(shape_err("csr", "indptr not monotone"));
+            }
+        }
+        if indices.iter().any(|&c| c as usize >= cols) {
+            return Err(shape_err("csr", "column index out of range"));
+        }
+        Ok(Csr { rows, cols, indptr, indices, values })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+    #[inline]
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+    #[inline]
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Row view: (column indices, values).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Explicit transpose (CSR of Aᵀ, i.e. a CSC view of A).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            counts[i + 1] += counts[i];
+        }
+        let mut indices = vec![0u32; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        let mut next = counts.clone();
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let p = next[c as usize];
+                indices[p] = i as u32;
+                values[p] = v;
+                next[c as usize] += 1;
+            }
+        }
+        Csr {
+            rows: self.cols,
+            cols: self.rows,
+            indptr: counts,
+            indices,
+            values,
+        }
+    }
+
+    /// Y = A · X  (SpMM; X is n×k, Y is m×k, both column-major dense).
+    ///
+    /// Row-gather form: for each output row, accumulate dot products of the
+    /// sparse row against the k dense columns. Fast path of the paper.
+    pub fn spmm(&self, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.rows(), self.cols, "spmm inner dim");
+        assert_eq!((y.rows(), y.cols()), (self.rows, x.cols()), "spmm out");
+        let k = x.cols();
+        y.data_mut().fill(0.0);
+        // Process dense columns in pairs to amortize index decoding.
+        let m = self.rows;
+        let mut j = 0;
+        while j + 1 < k {
+            // Split y's storage into the two target columns.
+            let (c0, c1) = {
+                let data = y.data_mut();
+                let (head, tail) = data.split_at_mut((j + 1) * m);
+                (&mut head[j * m..], &mut tail[..m])
+            };
+            let x0 = x.col(j);
+            let x1 = x.col(j + 1);
+            for i in 0..m {
+                let lo = self.indptr[i];
+                let hi = self.indptr[i + 1];
+                let (mut s0, mut s1) = (0.0, 0.0);
+                for p in lo..hi {
+                    let c = self.indices[p] as usize;
+                    let v = self.values[p];
+                    s0 += v * x0[c];
+                    s1 += v * x1[c];
+                }
+                c0[i] = s0;
+                c1[i] = s1;
+            }
+            j += 2;
+        }
+        if j < k {
+            let x0 = x.col(j);
+            let c0 = y.col_mut(j);
+            for i in 0..m {
+                let lo = self.indptr[i];
+                let hi = self.indptr[i + 1];
+                let mut s0 = 0.0;
+                for p in lo..hi {
+                    s0 += self.values[p] * x0[self.indices[p] as usize];
+                }
+                c0[i] = s0;
+            }
+        }
+    }
+
+    /// Y = Aᵀ · X  (transposed SpMM; X is m×k, Y is n×k).
+    ///
+    /// Scatter form: walks A's rows and scatters updates into Y — the
+    /// structurally slow kernel the paper identifies as the bottleneck
+    /// (implicit transpose in cuSPARSE). Kept deliberately in scatter form;
+    /// the "explicit transposed copy" alternative is `transpose()+spmm`.
+    pub fn spmm_t(&self, x: &Mat, y: &mut Mat) {
+        assert_eq!(x.rows(), self.rows, "spmm_t inner dim");
+        assert_eq!((y.rows(), y.cols()), (self.cols, x.cols()), "spmm_t out");
+        let k = x.cols();
+        y.data_mut().fill(0.0);
+        let n = self.cols;
+        for i in 0..self.rows {
+            let lo = self.indptr[i];
+            let hi = self.indptr[i + 1];
+            if lo == hi {
+                continue;
+            }
+            for j in 0..k {
+                let xij = x.at(i, j);
+                if xij == 0.0 {
+                    continue;
+                }
+                let yj = &mut y.data_mut()[j * n..(j + 1) * n];
+                for p in lo..hi {
+                    yj[self.indices[p] as usize] += self.values[p] * xij;
+                }
+            }
+        }
+    }
+
+    /// Densify (tests / tiny matrices only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                m.set(i, c as usize, v);
+            }
+        }
+        m
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas3::{mat_nn, mat_tn};
+    use crate::util::rng::Rng;
+
+    fn random_coo(rows: usize, cols: usize, nnz: usize, seed: u64) -> Coo {
+        let mut rng = Rng::new(seed);
+        let mut c = Coo::new(rows, cols);
+        for _ in 0..nnz {
+            c.push(rng.below(rows), rng.below(cols), rng.normal());
+        }
+        c
+    }
+
+    #[test]
+    fn from_coo_sorts_and_merges() {
+        let mut c = Coo::new(2, 3);
+        c.push(0, 2, 1.0);
+        c.push(0, 0, 2.0);
+        c.push(0, 2, 3.0); // duplicate with the first
+        c.push(1, 1, 5.0);
+        let a = Csr::from_coo(&c).unwrap();
+        assert_eq!(a.nnz(), 3);
+        let (cols, vals) = a.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[2.0, 4.0]);
+        let (cols, vals) = a.row(1);
+        assert_eq!(cols, &[1]);
+        assert_eq!(vals, &[5.0]);
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let coo = random_coo(23, 17, 80, 7);
+        let a = Csr::from_coo(&coo).unwrap();
+        let ad = a.to_dense();
+        let mut rng = Rng::new(8);
+        for k in [1, 2, 3, 8] {
+            let x = Mat::randn(17, k, &mut rng);
+            let mut y = Mat::zeros(23, k);
+            a.spmm(&x, &mut y);
+            let expect = mat_nn(&ad, &x);
+            assert!(y.max_abs_diff(&expect) < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn spmm_t_matches_dense() {
+        let coo = random_coo(19, 29, 100, 9);
+        let a = Csr::from_coo(&coo).unwrap();
+        let ad = a.to_dense();
+        let mut rng = Rng::new(10);
+        for k in [1, 5] {
+            let x = Mat::randn(19, k, &mut rng);
+            let mut y = Mat::zeros(29, k);
+            a.spmm_t(&x, &mut y);
+            let expect = mat_tn(&ad, &x);
+            assert!(y.max_abs_diff(&expect) < 1e-12, "k={k}");
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip_and_equivalence() {
+        let coo = random_coo(31, 11, 90, 11);
+        let a = Csr::from_coo(&coo).unwrap();
+        let at = a.transpose();
+        assert_eq!((at.rows(), at.cols()), (11, 31));
+        assert!(at.transpose().to_dense().max_abs_diff(&a.to_dense()) < 1e-15);
+        // Aᵀ·X via scatter == (Aᵀ as CSR)·X via gather
+        let mut rng = Rng::new(12);
+        let x = Mat::randn(31, 4, &mut rng);
+        let mut y1 = Mat::zeros(11, 4);
+        let mut y2 = Mat::zeros(11, 4);
+        a.spmm_t(&x, &mut y1);
+        at.spmm(&x, &mut y2);
+        assert!(y1.max_abs_diff(&y2) < 1e-12);
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let mut c = Coo::new(4, 4);
+        c.push(1, 1, 2.0);
+        let a = Csr::from_coo(&c).unwrap();
+        let x = Mat::eye(4);
+        let mut y = Mat::zeros(4, 4);
+        a.spmm(&x, &mut y);
+        assert_eq!(y.at(1, 1), 2.0);
+        assert_eq!(y.fro_norm(), 2.0);
+    }
+
+    #[test]
+    fn from_parts_validation() {
+        assert!(Csr::from_parts(2, 2, vec![0, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_ok());
+        assert!(Csr::from_parts(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 2.0]).is_err());
+        assert!(Csr::from_parts(2, 2, vec![0, 1, 2], vec![0, 5], vec![1.0, 2.0]).is_err());
+    }
+}

@@ -1,0 +1,190 @@
+//! MatrixMarket coordinate-format I/O.
+//!
+//! Supports the subset used by the SuiteSparse collection for this paper:
+//! `matrix coordinate real|integer|pattern general|symmetric`. Symmetric
+//! inputs are expanded to general storage on read.
+
+use std::io::{BufRead, BufWriter, Write};
+
+use super::coo::Coo;
+use super::csr::Csr;
+use crate::error::{Error, Result};
+
+fn io_err(path: &str, e: std::io::Error) -> Error {
+    Error::Io { path: path.to_string(), source: e }
+}
+
+fn parse_err(detail: impl Into<String>) -> Error {
+    Error::Parse { what: "matrixmarket", detail: detail.into() }
+}
+
+/// Read a MatrixMarket file into COO.
+pub fn read_coo(path: &str) -> Result<Coo> {
+    let f = std::fs::File::open(path).map_err(|e| io_err(path, e))?;
+    let reader = std::io::BufReader::new(f);
+    let mut lines = reader.lines();
+
+    // Header line.
+    let header = lines
+        .next()
+        .ok_or_else(|| parse_err("empty file"))?
+        .map_err(|e| io_err(path, e))?;
+    let h = header.to_ascii_lowercase();
+    let toks: Vec<&str> = h.split_whitespace().collect();
+    if toks.len() < 5 || toks[0] != "%%matrixmarket" || toks[1] != "matrix" {
+        return Err(parse_err(format!("bad header: {header}")));
+    }
+    if toks[2] != "coordinate" {
+        return Err(parse_err("only coordinate format supported"));
+    }
+    let field = toks[3]; // real | integer | pattern
+    let symmetry = toks[4]; // general | symmetric
+    if !matches!(field, "real" | "integer" | "pattern") {
+        return Err(parse_err(format!("unsupported field type {field}")));
+    }
+    if !matches!(symmetry, "general" | "symmetric") {
+        return Err(parse_err(format!("unsupported symmetry {symmetry}")));
+    }
+
+    // Size line (skipping comments).
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line.map_err(|e| io_err(path, e))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(line);
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| parse_err("missing size line"))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse::<usize>().map_err(|_| parse_err("bad size line")))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        return Err(parse_err("size line needs 3 fields"));
+    }
+    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+
+    let mut coo = Coo::new(rows, cols);
+    let mut seen = 0usize;
+    for line in lines {
+        let line = line.map_err(|e| io_err(path, e))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| parse_err(format!("bad entry line: {t}")))?;
+        let j: usize = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| parse_err(format!("bad entry line: {t}")))?;
+        let v: f64 = if field == "pattern" {
+            1.0
+        } else {
+            it.next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| parse_err(format!("bad value in: {t}")))?
+        };
+        if i == 0 || j == 0 || i > rows || j > cols {
+            return Err(parse_err(format!("index out of range: {t}")));
+        }
+        coo.push(i - 1, j - 1, v);
+        if symmetry == "symmetric" && i != j {
+            coo.push(j - 1, i - 1, v);
+        }
+        seen += 1;
+    }
+    if seen != nnz {
+        return Err(parse_err(format!("expected {nnz} entries, found {seen}")));
+    }
+    Ok(coo)
+}
+
+/// Read a MatrixMarket file straight into CSR.
+pub fn read_csr(path: &str) -> Result<Csr> {
+    Csr::from_coo(&read_coo(path)?)
+}
+
+/// Write a CSR matrix as `matrix coordinate real general`.
+pub fn write_csr(path: &str, a: &Csr) -> Result<()> {
+    let f = std::fs::File::create(path).map_err(|e| io_err(path, e))?;
+    let mut w = BufWriter::new(f);
+    (|| -> std::io::Result<()> {
+        writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+        writeln!(w, "% written by trunksvd")?;
+        writeln!(w, "{} {} {}", a.rows(), a.cols(), a.nnz())?;
+        for i in 0..a.rows() {
+            let (cols, vals) = a.row(i);
+            for (&c, &v) in cols.iter().zip(vals) {
+                writeln!(w, "{} {} {:.17e}", i + 1, c as usize + 1, v)?;
+            }
+        }
+        w.flush()
+    })()
+    .map_err(|e| io_err(path, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("trunksvd_mm_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(5);
+        let mut coo = Coo::new(13, 9);
+        for _ in 0..40 {
+            coo.push(rng.below(13), rng.below(9), rng.normal());
+        }
+        let a = Csr::from_coo(&coo).unwrap();
+        let path = tmp("rt.mtx");
+        write_csr(&path, &a).unwrap();
+        let b = read_csr(&path).unwrap();
+        assert_eq!((a.rows(), a.cols(), a.nnz()), (b.rows(), b.cols(), b.nnz()));
+        assert!(a.to_dense().max_abs_diff(&b.to_dense()) < 1e-15);
+    }
+
+    #[test]
+    fn reads_pattern_and_symmetric() {
+        let path = tmp("sym.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate pattern symmetric\n% c\n3 3 2\n2 1\n3 3\n",
+        )
+        .unwrap();
+        let a = read_csr(&path).unwrap();
+        assert_eq!(a.nnz(), 3); // (2,1), (1,2), (3,3)
+        let d = a.to_dense();
+        assert_eq!(d.at(1, 0), 1.0);
+        assert_eq!(d.at(0, 1), 1.0);
+        assert_eq!(d.at(2, 2), 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_files() {
+        let path = tmp("bad1.mtx");
+        std::fs::write(&path, "nonsense\n").unwrap();
+        assert!(read_coo(&path).is_err());
+        let path = tmp("bad2.mtx");
+        std::fs::write(&path, "%%MatrixMarket matrix coordinate real general\n2 2 1\n5 1 3.0\n")
+            .unwrap();
+        assert!(read_coo(&path).is_err());
+        let path = tmp("bad3.mtx");
+        std::fs::write(&path, "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 3.0\n")
+            .unwrap();
+        assert!(read_coo(&path).is_err(), "nnz mismatch");
+    }
+}

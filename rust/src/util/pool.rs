@@ -1,0 +1,141 @@
+//! Tiny data-parallel helper.
+//!
+//! No rayon/tokio in the offline vendor set, so the hot loops use this
+//! `parallel_for` built on `std::thread::scope`. On a single-core testbed
+//! (the current image) it degrades to a serial loop with zero thread
+//! overhead; on multi-core hosts it chunks the index range across
+//! `TRUNKSVD_THREADS` (default: available_parallelism) workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (cached).
+pub fn num_threads() -> usize {
+    static N: AtomicUsize = AtomicUsize::new(0);
+    let cached = N.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("TRUNKSVD_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    N.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `body(i)` for every `i in 0..n`, partitioned into contiguous chunks
+/// across the worker threads. `body` must be `Sync` (no mutable sharing);
+/// callers that need per-index output write to disjoint slices.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
+    let t = num_threads().min(n.max(1));
+    if t <= 1 || n < 2 {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(t);
+    std::thread::scope(|scope| {
+        for w in 0..t {
+            let body = &body;
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                continue;
+            }
+            scope.spawn(move || {
+                for i in lo..hi {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Partition `data` into disjoint mutable chunks of `chunk_len` and run
+/// `body(chunk_index, chunk)` in parallel. Used for column-panel updates
+/// on column-major matrices.
+pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk_len: usize,
+    body: F,
+) {
+    assert!(chunk_len > 0);
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let t = num_threads().min(n_chunks.max(1));
+    if t <= 1 || n_chunks < 2 {
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            body(ci, chunk);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut ci = 0;
+        // Hand each worker an interleaved sequence is unnecessary; chunks
+        // are roughly equal cost, so deal them out round-robin in batches.
+        let per = n_chunks.div_ceil(t);
+        for _ in 0..t {
+            let take = (per * chunk_len).min(rest.len());
+            if take == 0 {
+                break;
+            }
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let body = &body;
+            let base = ci;
+            ci += head.len().div_ceil(chunk_len);
+            scope.spawn(move || {
+                for (k, chunk) in head.chunks_mut(chunk_len).enumerate() {
+                    body(base + k, chunk);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn covers_all_indices() {
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(97, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn zero_and_one() {
+        parallel_for(0, |_| panic!("must not run"));
+        let c = AtomicU64::new(0);
+        parallel_for(1, |_| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chunks_mut_disjoint_and_complete() {
+        let mut v = vec![0u64; 103];
+        parallel_chunks_mut(&mut v, 10, |ci, chunk| {
+            for x in chunk.iter_mut() {
+                *x += 1 + ci as u64;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, 1 + (i / 10) as u64, "index {i}");
+        }
+    }
+
+    #[test]
+    fn num_threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

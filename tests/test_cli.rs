@@ -1,0 +1,62 @@
+//! CLI integration tests (through `cli::main_with_args`, no subprocess).
+
+use trunksvd::cli::main_with_args;
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(|t| t.to_string()).collect()
+}
+
+#[test]
+fn gen_then_solve_mtx_roundtrip() {
+    let dir = std::env::temp_dir().join("trunksvd_cli_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("connectus.mtx");
+    let path = path.to_string_lossy();
+    assert_eq!(main_with_args(argv(&format!("gen --name connectus --out {path}"))), 0);
+    assert!(std::fs::metadata(&*path).unwrap().len() > 1000);
+    assert_eq!(
+        main_with_args(argv(&format!(
+            "solve --mtx {path} --algo lanc --r 64 --p 1 --b 16 --wanted 5"
+        ))),
+        0
+    );
+}
+
+#[test]
+fn solve_suite_rand() {
+    assert_eq!(
+        main_with_args(argv(
+            "solve --suite mesh_deform --algo rand --r 16 --p 4 --wanted 3"
+        )),
+        0
+    );
+}
+
+#[test]
+fn experiment_table2_and_fig3() {
+    let out = std::env::temp_dir().join("trunksvd_cli_reports");
+    let out = out.to_string_lossy();
+    assert_eq!(main_with_args(argv(&format!("experiment table2 --out {out}"))), 0);
+    assert!(std::path::Path::new(&format!("{out}/table2_suite.md")).exists());
+    assert_eq!(main_with_args(argv(&format!("experiment fig3 --out {out}"))), 0);
+    assert!(std::path::Path::new(&format!("{out}/fig3_flops.csv")).exists());
+}
+
+#[test]
+fn bad_inputs_are_rejected() {
+    assert_eq!(main_with_args(argv("solve")), 1);
+    assert_eq!(main_with_args(argv("solve --suite not_a_matrix")), 1);
+    assert_eq!(main_with_args(argv("solve --dense 100 --n 50 --algo bogus")), 1);
+    assert_eq!(main_with_args(argv("experiment fig99")), 1);
+    assert_eq!(main_with_args(argv("gen --name rel8")), 1);
+}
+
+#[test]
+fn solve_with_tolerance_stops_early() {
+    assert_eq!(
+        main_with_args(argv(
+            "solve --dense 800 --n 128 --algo lanc --r 64 --p 20 --tol 1e-9 --wanted 5"
+        )),
+        0
+    );
+}

@@ -1,0 +1,234 @@
+//! Integration: AOT artifacts → PJRT runtime → XlaBackend, and parity of
+//! the two backends through the full algorithms.
+//!
+//! Requires `make artifacts` (tests that need artifacts skip gracefully
+//! when the manifest is absent so `cargo test` works pre-AOT, but the CI
+//! flow always builds artifacts first).
+
+use std::rc::Rc;
+use std::sync::{Mutex, OnceLock};
+
+/// The bundled xla_extension 0.5.1 PJRT CPU plugin is unreliable when a
+/// process creates more than one TfrtCpuClient (flaky SIGSEGV on the
+/// 2nd/3rd creation). All tests in this file therefore serialize on
+/// PJRT_LOCK and share a single, never-destroyed Runtime. The Rc inside
+/// the wrapper is only ever touched while the lock is held, which makes
+/// the unsafe Send/Sync sound in this harness.
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+struct SharedRt(Option<Rc<Runtime>>);
+unsafe impl Send for SharedRt {}
+unsafe impl Sync for SharedRt {}
+static SHARED_RT: OnceLock<SharedRt> = OnceLock::new();
+
+use trunksvd::algo::{lancsvd::lancsvd, randsvd::randsvd, residuals, LancSvdOpts, RandSvdOpts};
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::backend::xla::XlaBackend;
+use trunksvd::backend::Backend;
+use trunksvd::gen::dense::paper_dense;
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::la::mat::Mat;
+use trunksvd::la::norms::orth_error;
+use trunksvd::runtime::{convert, default_artifact_dir, Runtime};
+use trunksvd::util::rng::Rng;
+
+fn runtime_with_artifacts() -> Option<Rc<Runtime>> {
+    SHARED_RT
+        .get_or_init(|| {
+            let dir = default_artifact_dir();
+            if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+                eprintln!("SKIP: no artifacts at {dir} (run `make artifacts`)");
+                return SharedRt(None);
+            }
+            SharedRt(Some(Rc::new(Runtime::new(&dir).expect("runtime"))))
+        })
+        .0
+        .clone()
+}
+
+#[test]
+fn cholqr2_artifact_runs_and_matches_host() {
+    let _guard = PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(rt) = runtime_with_artifacts() else { return };
+    let mut rng = Rng::new(1);
+    // q=700 exercises padding to the 1024 bucket.
+    let y = Mat::randn(700, 16, &mut rng);
+
+    let mut xbe = XlaBackend::new_dense(rt.clone(), Mat::zeros(512, 4)).unwrap();
+    let mut q_x = y.clone();
+    let r_x = xbe.orth_cholqr2(&mut q_x).unwrap();
+
+    let mut cbe = CpuBackend::new_dense(Mat::zeros(1, 1));
+    let mut q_c = y.clone();
+    let r_c = cbe.orth_cholqr2(&mut q_c).unwrap();
+
+    assert!(orth_error(&q_x) < 1e-12, "artifact Q orthonormal");
+    assert!(r_x.max_abs_diff(&r_c) / r_c.fro_norm() < 1e-12, "R parity");
+    assert!(q_x.max_abs_diff(&q_c) < 1e-10, "Q parity");
+    assert!(rt.stats().artifact_execs >= 1, "artifact path was used");
+}
+
+#[test]
+fn cgs_cqr2_artifact_with_s_padding_matches_host() {
+    let _guard = PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(rt) = runtime_with_artifacts() else { return };
+    let mut rng = Rng::new(2);
+    let q_rows = 600; // pads to 1024
+    let s = 48; // pads to the 64 bucket
+    let p = trunksvd::la::qr::random_orthonormal(q_rows, s, &mut rng);
+    let y = Mat::randn(q_rows, 16, &mut rng);
+
+    let mut xbe = XlaBackend::new_dense(rt.clone(), Mat::zeros(512, 4)).unwrap();
+    let mut q_x = y.clone();
+    let (h_x, r_x) = xbe.orth_cgs_cqr2(&mut q_x, p.as_ref()).unwrap();
+
+    let mut cbe = CpuBackend::new_dense(Mat::zeros(1, 1));
+    let mut q_c = y.clone();
+    let (h_c, r_c) = cbe.orth_cgs_cqr2(&mut q_c, p.as_ref()).unwrap();
+
+    assert_eq!((h_x.rows(), h_x.cols()), (s, 16));
+    assert!(orth_error(&q_x) < 1e-12);
+    assert!(h_x.max_abs_diff(&h_c) < 1e-10, "H parity");
+    assert!(r_x.max_abs_diff(&r_c) / r_c.fro_norm() < 1e-11, "R parity");
+    assert!(q_x.max_abs_diff(&q_c) < 1e-9, "Q parity");
+}
+
+#[test]
+fn breakdown_panel_falls_back_and_stays_orthonormal() {
+    let _guard = PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(rt) = runtime_with_artifacts() else { return };
+    let mut rng = Rng::new(3);
+    let mut y = Mat::randn(600, 16, &mut rng);
+    let c0 = y.col(0).to_vec();
+    y.col_mut(7).copy_from_slice(&c0); // exact rank deficiency
+    let mut xbe = XlaBackend::new_dense(rt, Mat::zeros(512, 4)).unwrap();
+    let mut q = y.clone();
+    let _r = xbe.orth_cholqr2(&mut q).unwrap();
+    assert!(
+        orth_error(&q) < 1e-8,
+        "fallback must keep Q orthonormal: {}",
+        orth_error(&q)
+    );
+}
+
+#[test]
+fn dense_apply_artifacts_match_cpu() {
+    let _guard = PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(rt) = runtime_with_artifacts() else { return };
+    let prob = paper_dense(700, 300, 4); // pads to 1024 x 512
+    let mut xbe = XlaBackend::new_dense(rt, prob.a.clone()).unwrap();
+    let mut cbe = CpuBackend::new_dense(prob.a.clone());
+    let mut rng = Rng::new(5);
+    let x = Mat::randn(300, 16, &mut rng);
+    let y_x = xbe.apply_a(x.as_ref());
+    let y_c = cbe.apply_a(x.as_ref());
+    assert!(y_x.max_abs_diff(&y_c) < 1e-10 * prob.a.fro_norm());
+    let z = Mat::randn(700, 16, &mut rng);
+    let w_x = xbe.apply_at(z.as_ref());
+    let w_c = cbe.apply_at(z.as_ref());
+    assert!(w_x.max_abs_diff(&w_c) < 1e-10 * prob.a.fro_norm());
+}
+
+#[test]
+fn randsvd_parity_cpu_vs_xla_dense() {
+    let _guard = PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(rt) = runtime_with_artifacts() else { return };
+    let prob = paper_dense(600, 200, 6);
+    let opts = RandSvdOpts { r: 16, p: 8, b: 16, seed: 11, ..Default::default() };
+
+    let mut cbe = CpuBackend::new_dense(prob.a.clone());
+    let svd_c = randsvd(&mut cbe, &opts).unwrap();
+    let mut xbe = XlaBackend::new_dense(rt, prob.a.clone()).unwrap();
+    let svd_x = randsvd(&mut xbe, &opts).unwrap();
+
+    for i in 0..10 {
+        let (a, b) = (svd_c.sigma[i], svd_x.sigma[i]);
+        assert!(
+            (a - b).abs() <= 1e-9 * svd_c.sigma[0],
+            "sigma_{i}: cpu {a:.6e} xla {b:.6e}"
+        );
+    }
+    let mut be = CpuBackend::new_dense(prob.a.clone());
+    let res = residuals(&mut be, &svd_x, 10);
+    let res_c = residuals(&mut be, &svd_c, 10);
+    for i in 0..10 {
+        assert!(
+            res[i] < res_c[i].max(1e-12) * 100.0,
+            "xla residual {i}: {:.2e} vs cpu {:.2e}",
+            res[i],
+            res_c[i]
+        );
+    }
+}
+
+#[test]
+fn lancsvd_parity_cpu_vs_xla_sparse() {
+    let _guard = PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(rt) = runtime_with_artifacts() else { return };
+    let spec = SparseSpec { rows: 900, cols: 600, nnz: 12_000, seed: 21, ..Default::default() };
+    let a = generate(&spec);
+    let opts = LancSvdOpts { r: 64, p: 2, b: 16, wanted: 10, seed: 13, ..Default::default() };
+
+    let mut cbe = CpuBackend::new_sparse(a.clone());
+    let svd_c = lancsvd(&mut cbe, &opts).unwrap();
+    let mut xbe = XlaBackend::new_sparse(rt.clone(), a.clone());
+    let svd_x = lancsvd(&mut xbe, &opts).unwrap();
+
+    for i in 0..10 {
+        let (c, x) = (svd_c.sigma[i], svd_x.sigma[i]);
+        assert!(
+            (c - x).abs() <= 1e-8 * svd_c.sigma[0].max(1.0),
+            "sigma_{i}: cpu {c:.6e} xla {x:.6e}"
+        );
+    }
+    // The fused-orth artifacts really ran.
+    assert!(rt.stats().artifact_execs > 0, "expected artifact executions");
+}
+
+#[test]
+fn spmm_blockell_artifact_demo_shape() {
+    let _guard = PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let Some(rt) = runtime_with_artifacts() else { return };
+    // Demo shape from aot.py: nbr=32, mbpr=8, bs=16, n=512, k=16.
+    let (nbr, mbpr, bs, n, k) = (32usize, 8usize, 16usize, 512usize, 16usize);
+    let shapes: [&[usize]; 3] = [&[nbr, mbpr, bs, bs], &[nbr, mbpr], &[n, k]];
+    if !rt.has_artifact("spmm_blockell", &shapes) {
+        eprintln!("SKIP: spmm demo artifact missing");
+        return;
+    }
+    // Random block-sparse matrix with 3 blocks per block-row.
+    let mut rng = Rng::new(31);
+    let mut blocks = vec![0.0f64; nbr * mbpr * bs * bs];
+    let mut idx = vec![0i32; nbr * mbpr];
+    let mut dense = Mat::zeros(nbr * bs, n);
+    for br in 0..nbr {
+        for slot in 0..3 {
+            let bc = rng.below(n / bs);
+            idx[br * mbpr + slot] = bc as i32;
+            for i in 0..bs {
+                for j in 0..bs {
+                    let v = rng.normal();
+                    blocks[((br * mbpr + slot) * bs + i) * bs + j] = v;
+                    // duplicate block columns accumulate, mirror that:
+                    dense.add_at(br * bs + i, bc * bs + j, v);
+                }
+            }
+        }
+    }
+    let x = Mat::randn(n, k, &mut rng);
+    let blocks_lit = xla::Literal::vec1(&blocks)
+        .reshape(&[nbr as i64, mbpr as i64, bs as i64, bs as i64])
+        .unwrap();
+    let idx_lit = xla::Literal::vec1(&idx).reshape(&[nbr as i64, mbpr as i64]).unwrap();
+    let x_lit = convert::mat_to_literal(&x, n, k).unwrap();
+    let outs = rt
+        .run_artifact("spmm_blockell", &shapes, &[blocks_lit, idx_lit, x_lit])
+        .unwrap();
+    let y = convert::literal_to_mat(&outs[0], nbr * bs, k).unwrap();
+    let expect = trunksvd::la::blas3::mat_nn(&dense, &x);
+    assert!(
+        y.max_abs_diff(&expect) < 1e-10,
+        "pallas spmm vs dense: {}",
+        y.max_abs_diff(&expect)
+    );
+}
