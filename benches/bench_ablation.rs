@@ -30,8 +30,11 @@ fn main() {
     let a = generate(&spec);
     println!("ablation matrix: {}x{} nnz {}", a.rows(), a.cols(), a.nnz());
 
-    banner("A. SpMM-transpose strategy (full LancSVD solve)", "");
-    for choice in [BackendChoice::Cpu, BackendChoice::CpuExplicitT] {
+    banner(
+        "A. SpMM-transpose strategy (full LancSVD solve)",
+        "scatter baseline vs adaptive background transpose vs eager explicit copy",
+    );
+    for choice in [BackendChoice::CpuScatter, BackendChoice::Cpu, BackendChoice::CpuExplicitT] {
         let rep = run(
             "ablA",
             Operand::Sparse(a.clone()),
@@ -41,7 +44,7 @@ fn main() {
         )
         .unwrap();
         println!(
-            "{:<9} total {:>7.3}s  mult_At {:>7.3}s  R10 {}",
+            "{:<12} total {:>7.3}s  mult_At {:>7.3}s  R10 {}",
             choice.name(),
             rep.secs,
             rep.profile.stat(trunksvd::metrics::Block::MultAt).secs,

@@ -2,6 +2,11 @@
 //! CholeskyQR2, CGS-CQR2) on the CPU substrate and, when artifacts are
 //! present, on the XLA/PJRT path. Feeds the §Perf iteration log.
 //!
+//! The threaded-kernels section reports serial-vs-parallel speedup and
+//! effective GF/s for `spmm`, `spmm_t` (scatter and cached transpose),
+//! `gram`, and the Block-ELL SpMM, and records everything to
+//! `BENCH_kernels.json` so the perf trajectory is tracked PR-over-PR.
+//!
 //! `BENCH_QUICK=1` shrinks the size sweep.
 
 use std::rc::Rc;
@@ -15,7 +20,39 @@ use trunksvd::la::blas3;
 use trunksvd::la::mat::Mat;
 use trunksvd::la::qr::random_orthonormal;
 use trunksvd::runtime::{default_artifact_dir, Runtime};
+use trunksvd::sparse::blockell::BlockEll;
+use trunksvd::util::json::{self, Json};
+use trunksvd::util::pool;
 use trunksvd::util::rng::Rng;
+
+/// Print one serial-vs-parallel comparison and record it as JSON.
+fn kernel_entry(
+    entries: &mut Vec<Json>,
+    kernel: &str,
+    m: usize,
+    b: usize,
+    threads: usize,
+    serial: f64,
+    parallel: f64,
+    flops: f64,
+) {
+    let speedup = serial / parallel;
+    println!(
+        "{kernel:<16} m={m:>6} b={b:>3}  serial {serial:>8.4}s  par({threads}) {parallel:>8.4}s  \
+         speedup {speedup:>5.2}x  {:>7.2} GF/s",
+        gflops(flops, parallel)
+    );
+    entries.push(json::obj(vec![
+        ("kernel", json::str(kernel)),
+        ("m", json::num(m as f64)),
+        ("b", json::num(b as f64)),
+        ("threads", json::num(threads as f64)),
+        ("serial_s", json::num(serial)),
+        ("parallel_s", json::num(parallel)),
+        ("speedup", json::num(speedup)),
+        ("gflops_parallel", json::num(gflops(flops, parallel))),
+    ]));
+}
 
 fn main() {
     let quick = env_usize("BENCH_QUICK", 0) == 1;
@@ -59,6 +96,96 @@ fn main() {
     println!("spmm_t (scatter)   {:.2} GF/s ({:.4}s)", gflops(fl, st_t.median), st_t.median);
     let st_e = time_runs(w, r, || at.spmm(&x_m, &mut y_n));
     println!("spmm_t (expl. T)   {:.2} GF/s ({:.4}s)", gflops(fl, st_e.median), st_e.median);
+
+    banner(
+        "Threaded kernels: serial vs parallel",
+        "paper-scale panels; results recorded to BENCH_kernels.json",
+    );
+    let threads = pool::num_threads();
+    let mut entries: Vec<Json> = Vec::new();
+    let m2 = if quick { 8192 } else { 32768 };
+    let n2 = m2 / 4;
+    let spec2 = SparseSpec { rows: m2, cols: n2, nnz: m2 * 25, seed: 5, ..Default::default() };
+    let a2 = generate(&spec2);
+    let at2 = a2.transpose();
+    for &b in &[8usize, 16] {
+        let fl = 2.0 * a2.nnz() as f64 * b as f64;
+        let (w, r) = auto_runs(fl / 1e9);
+        // spmm (gather, row-band parallel)
+        let x = Mat::randn(n2, b, &mut rng);
+        let mut y = Mat::zeros(m2, b);
+        pool::set_num_threads(1);
+        let s1 = time_runs(w, r, || a2.spmm(&x, &mut y));
+        pool::set_num_threads(threads);
+        let sp = time_runs(w, r, || a2.spmm(&x, &mut y));
+        kernel_entry(&mut entries, "spmm", m2, b, threads, s1.median, sp.median, fl);
+        // spmm_t: scatter vs cached explicit transpose
+        let xm = Mat::randn(m2, b, &mut rng);
+        let mut yn = Mat::zeros(n2, b);
+        pool::set_num_threads(1);
+        let t1 = time_runs(w, r, || a2.spmm_t(&xm, &mut yn));
+        pool::set_num_threads(threads);
+        let tp = time_runs(w, r, || a2.spmm_t(&xm, &mut yn));
+        kernel_entry(&mut entries, "spmm_t_scatter", m2, b, threads, t1.median, tp.median, fl);
+        pool::set_num_threads(1);
+        let e1 = time_runs(w, r, || at2.spmm(&xm, &mut yn));
+        pool::set_num_threads(threads);
+        let ep = time_runs(w, r, || at2.spmm(&xm, &mut yn));
+        kernel_entry(&mut entries, "spmm_t_cachedT", m2, b, threads, e1.median, ep.median, fl);
+        // gram (row-tiled parallel SYRK)
+        let q = Mat::randn(m2, b, &mut rng);
+        let flg = (b * b) as f64 * m2 as f64;
+        let (wg, rg) = auto_runs(flg / 2e9);
+        pool::set_num_threads(1);
+        let g1 = time_runs(wg, rg, || {
+            let _ = blas3::gram(q.as_ref());
+        });
+        pool::set_num_threads(threads);
+        let gp = time_runs(wg, rg, || {
+            let _ = blas3::gram(q.as_ref());
+        });
+        kernel_entry(&mut entries, "gram", m2, b, threads, g1.median, gp.median, flg);
+    }
+    // Block-ELL SpMM on a smaller, low-skew panel (ELL padding makes a
+    // big skewed random matrix memory-hungry), with the width cap at ncb
+    // so the conversion cannot fail and this arm always produces data.
+    let m3 = if quick { 4096 } else { 8192 };
+    let spec3 = SparseSpec {
+        rows: m3,
+        cols: m3 / 4,
+        nnz: m3 * 6,
+        seed: 7,
+        skew: 0.2,
+        ..Default::default()
+    };
+    let a3 = generate(&spec3);
+    let ncb3 = a3.cols().div_ceil(16);
+    match BlockEll::from_csr(&a3, 16, ncb3) {
+        Ok(be) => {
+            for &b in &[8usize, 16] {
+                let fl = 2.0 * a3.nnz() as f64 * b as f64;
+                let (w, r) = auto_runs(fl / 1e9);
+                let xp = Mat::randn(be.padded_cols(), b, &mut rng);
+                let mut yp = Mat::zeros(be.padded_rows(), b);
+                pool::set_num_threads(1);
+                let b1 = time_runs(w, r, || be.spmm(&xp, &mut yp));
+                pool::set_num_threads(threads);
+                let bp = time_runs(w, r, || be.spmm(&xp, &mut yp));
+                kernel_entry(&mut entries, "blockell_spmm", m3, b, threads, b1.median, bp.median, fl);
+            }
+        }
+        Err(e) => println!("blockell_spmm skipped: {e}"),
+    }
+    pool::set_num_threads(0);
+    let n_entries = entries.len();
+    let doc = json::obj(vec![
+        ("bench", json::str("kernels")),
+        ("threads", json::num(threads as f64)),
+        ("quick", json::num(if quick { 1.0 } else { 0.0 })),
+        ("kernels", json::arr(entries)),
+    ]);
+    std::fs::write("BENCH_kernels.json", json::write(&doc)).expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json ({n_entries} entries)");
 
     banner("Orthogonalization (q x 16 panel)", "CholeskyQR2 and CGS-CQR2 (s=128)");
     let qs: &[usize] = if quick { &[4096] } else { &[4096, 32768] };

@@ -47,7 +47,7 @@ fn psnr(orig: &Mat, approx: &Mat) -> f64 {
     10.0 * (peak * peak / mse.max(1e-300)).log10()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> trunksvd::Result<()> {
     let (rows, cols) = (1200, 800);
     let mut rng = Rng::new(11);
     println!("synthesizing {rows}x{cols} smooth field (40 gaussian blobs)...");

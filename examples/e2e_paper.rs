@@ -24,7 +24,7 @@ use trunksvd::gen::sparse::generate;
 use trunksvd::gen::suite::Suite;
 use trunksvd::runtime::{default_artifact_dir, Runtime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> trunksvd::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let subset: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(6);
     let use_xla = args.get(1).map(|s| s == "xla").unwrap_or(false);

@@ -10,7 +10,7 @@ use trunksvd::algo::{lancsvd::lancsvd, randsvd::randsvd, residuals, LancSvdOpts,
 use trunksvd::backend::cpu::CpuBackend;
 use trunksvd::gen::dense::paper_dense;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> trunksvd::Result<()> {
     // A 4000x500 dense matrix with the paper's Eq. 16 spectrum.
     let (m, n) = (4000, 500);
     println!("building dense test problem {m}x{n} (Eq. 15/16 spectrum)...");

@@ -1,13 +1,16 @@
 //! Pure-rust reference backend.
 //!
 //! Implements the [`Backend`] op set over the native dense/sparse
-//! substrates. The transposed product `apply_at` defaults to the scatter
-//! kernel (the cuSPARSE-like "implicit transpose" the paper identifies as
-//! the bottleneck); [`CpuBackend::with_explicit_transpose`] switches to a
-//! pre-transposed CSR copy — the alternative the paper evaluated and the
-//! subject of one of our ablation benches.
+//! substrates. The transposed product `apply_at` starts on the scatter
+//! kernel (the cuSPARSE-like "implicit transpose" the paper identifies
+//! as the bottleneck) and *adaptively* switches to a pre-transposed CSR
+//! copy built on a background thread once enough Aᵀ·X calls have been
+//! observed (paper §4.1.2's explicit-copy trade-off, amortized).
+//! [`CpuBackend::with_explicit_transpose`] builds the copy eagerly and
+//! [`CpuBackend::scatter_only`] pins the scatter baseline — both are
+//! kept so the ablation benches can compare all three strategies.
 
-use super::{Backend, Operand};
+use super::{AdaptiveTranspose, Backend, Operand};
 use crate::la::blas3;
 use crate::la::mat::{Mat, MatRef};
 use crate::metrics::{Profile, Timer};
@@ -16,31 +19,56 @@ use crate::sparse::csr::Csr;
 /// Reference CPU backend.
 pub struct CpuBackend {
     a: Operand,
-    /// Explicit Aᵀ copy; when present `apply_at` uses gather-SpMM on it.
-    at: Option<Csr>,
+    /// Explicit-Aᵀ strategy state (adaptive by default).
+    at: AdaptiveTranspose,
     profile: Profile,
 }
 
 impl CpuBackend {
     pub fn new_sparse(a: Csr) -> CpuBackend {
-        CpuBackend { a: Operand::Sparse(a), at: None, profile: Profile::new() }
+        CpuBackend {
+            a: Operand::Sparse(a),
+            at: AdaptiveTranspose::from_env(),
+            profile: Profile::new(),
+        }
     }
 
     pub fn new_dense(a: Mat) -> CpuBackend {
-        CpuBackend { a: Operand::Dense(a), at: None, profile: Profile::new() }
+        CpuBackend {
+            a: Operand::Dense(a),
+            at: AdaptiveTranspose::new(None),
+            profile: Profile::new(),
+        }
     }
 
     pub fn new(a: Operand) -> CpuBackend {
-        CpuBackend { a, at: None, profile: Profile::new() }
+        match a {
+            Operand::Sparse(a) => CpuBackend::new_sparse(a),
+            Operand::Dense(a) => CpuBackend::new_dense(a),
+        }
     }
 
-    /// Store an explicit transposed CSR copy and use gather-SpMM for Aᵀ·X
-    /// (paper §4.1.2: "explicitly storing a transposed copy of the sparse
-    /// matrix"). No-op for dense operands.
+    /// Store an explicit transposed CSR copy *eagerly* and use
+    /// gather-SpMM for every Aᵀ·X (paper §4.1.2: "explicitly storing a
+    /// transposed copy of the sparse matrix"). No-op for dense operands.
     pub fn with_explicit_transpose(mut self) -> CpuBackend {
         if let Operand::Sparse(a) = &self.a {
-            self.at = Some(a.transpose());
+            self.at = AdaptiveTranspose::with_built(a.transpose());
         }
+        self
+    }
+
+    /// Disable the adaptive transpose: every Aᵀ·X stays on the scatter
+    /// kernel (the ablation baseline).
+    pub fn scatter_only(mut self) -> CpuBackend {
+        self.at = AdaptiveTranspose::new(None);
+        self
+    }
+
+    /// Override the adaptive threshold (number of scatter Aᵀ·X calls
+    /// before the background transpose build starts).
+    pub fn with_adaptive_threshold(mut self, after: usize) -> CpuBackend {
+        self.at = AdaptiveTranspose::new(Some(after));
         self
     }
 
@@ -75,16 +103,15 @@ impl Backend for CpuBackend {
     fn apply_at(&mut self, x: MatRef) -> Mat {
         let t = Timer::start(self.mult_flops(x.cols));
         let mut y = Mat::zeros(self.n(), x.cols);
-        match (&self.a, &self.at) {
-            (_, Some(at)) => {
+        match &self.a {
+            Operand::Sparse(a) => {
                 let xo = x.to_owned();
-                at.spmm(&xo, &mut y);
+                match self.at.advance(a) {
+                    Some(at) => at.spmm(&xo, &mut y),
+                    None => a.spmm_t(&xo, &mut y),
+                }
             }
-            (Operand::Sparse(a), None) => {
-                let xo = x.to_owned();
-                a.spmm_t(&xo, &mut y);
-            }
-            (Operand::Dense(a), _) => blas3::gemm_tn(1.0, a.as_ref(), x, 0.0, &mut y),
+            Operand::Dense(a) => blas3::gemm_tn(1.0, a.as_ref(), x, 0.0, &mut y),
         }
         t.stop(&mut self.profile);
         y
@@ -139,10 +166,12 @@ impl Backend for CpuBackend {
     }
 
     fn name(&self) -> &'static str {
-        if self.at.is_some() {
+        if self.at.built() {
             "cpu+expT"
-        } else {
+        } else if self.at.enabled() || matches!(self.a, Operand::Dense(_)) {
             "cpu"
+        } else {
+            "cpu-scatter"
         }
     }
 }
@@ -181,14 +210,53 @@ mod tests {
     #[test]
     fn explicit_transpose_same_numbers() {
         let a = small_sparse(3);
-        let mut b1 = CpuBackend::new_sparse(a.clone());
+        let mut b1 = CpuBackend::new_sparse(a.clone()).scatter_only();
         let mut b2 = CpuBackend::new_sparse(a).with_explicit_transpose();
         let mut rng = Rng::new(4);
         let z = Mat::randn(20, 3, &mut rng);
         let w1 = b1.apply_at(z.as_ref());
         let w2 = b2.apply_at(z.as_ref());
         assert!(w1.max_abs_diff(&w2) < 1e-12);
+        assert_eq!(b1.name(), "cpu-scatter");
         assert_eq!(b2.name(), "cpu+expT");
+    }
+
+    #[test]
+    fn adaptive_transpose_adopts_in_background() {
+        let a = small_sparse(8);
+        let ad = a.to_dense();
+        let mut be = CpuBackend::new_sparse(a).with_adaptive_threshold(1);
+        let mut rng = Rng::new(9);
+        let z = Mat::randn(20, 3, &mut rng);
+        let expect = mat_tn(&ad, &z);
+        assert_eq!(be.name(), "cpu");
+        // Keep issuing Aᵀ·X; results must stay exact through the scatter
+        // → cached-gather switch, which happens once the background
+        // build finishes.
+        for _ in 0..400 {
+            let w = be.apply_at(z.as_ref());
+            assert!(w.max_abs_diff(&expect) < 1e-12);
+            if be.name() == "cpu+expT" {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        panic!("adaptive transpose was never adopted");
+    }
+
+    #[test]
+    fn scatter_only_never_builds() {
+        let a = small_sparse(10);
+        let ad = a.to_dense();
+        let mut be = CpuBackend::new_sparse(a).scatter_only();
+        let mut rng = Rng::new(11);
+        let z = Mat::randn(20, 2, &mut rng);
+        let expect = mat_tn(&ad, &z);
+        for _ in 0..32 {
+            let w = be.apply_at(z.as_ref());
+            assert!(w.max_abs_diff(&expect) < 1e-12);
+        }
+        assert_eq!(be.name(), "cpu-scatter");
     }
 
     #[test]
@@ -219,5 +287,6 @@ mod tests {
         let q = Mat::randn(15, 3, &mut rng);
         let w = be.gram(q.as_ref());
         assert!(w.max_abs_diff(&mat_tn(&q, &q)) < 1e-12);
+        assert_eq!(be.name(), "cpu");
     }
 }

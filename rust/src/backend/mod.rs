@@ -81,6 +81,76 @@ pub trait Backend {
     }
 }
 
+/// Adaptive explicit-transpose cache for the sparse Aᵀ·X path.
+///
+/// The paper mitigates the scatter SpMMᵀ bottleneck by "explicitly
+/// storing a transposed copy of the sparse matrix" (§4.1.2), trading
+/// nnz memory for gather-speed products. This helper makes that trade
+/// adaptive: after `after` scatter calls (default
+/// `TRUNKSVD_ADAPTIVE_SPMMT`, see [`AdaptiveTranspose::from_env`]) the
+/// transposed CSR copy is built on a background thread and adopted as
+/// soon as it is ready, so no Aᵀ·X call ever waits on the build. Both
+/// backends embed one; the ablation benches disable it (`new(None)`) to
+/// keep the pure-scatter baseline measurable.
+pub(crate) struct AdaptiveTranspose {
+    at: Option<crate::sparse::csr::Csr>,
+    pending: Option<std::thread::JoinHandle<crate::sparse::csr::Csr>>,
+    calls: usize,
+    after: Option<usize>,
+}
+
+impl AdaptiveTranspose {
+    /// `after` = number of scatter calls before the build starts;
+    /// `None` disables the adaptive build (pure-scatter baseline).
+    pub fn new(after: Option<usize>) -> AdaptiveTranspose {
+        AdaptiveTranspose { at: None, pending: None, calls: 0, after }
+    }
+
+    /// Threshold from `TRUNKSVD_ADAPTIVE_SPMMT` (default 4 scatter calls
+    /// — one LancSVD restart touches Aᵀ well past that, while one-shot
+    /// uses never pay the transpose).
+    pub fn from_env() -> AdaptiveTranspose {
+        let after = std::env::var("TRUNKSVD_ADAPTIVE_SPMMT")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(4);
+        AdaptiveTranspose::new(Some(after))
+    }
+
+    /// Wrap an eagerly built transpose (the paper's always-on variant).
+    pub fn with_built(at: crate::sparse::csr::Csr) -> AdaptiveTranspose {
+        AdaptiveTranspose { at: Some(at), pending: None, calls: 0, after: None }
+    }
+
+    /// Record one Aᵀ·X call against operand `a`; returns the cached
+    /// transpose if it is available (caller then uses gather-SpMM).
+    pub fn advance(&mut self, a: &crate::sparse::csr::Csr) -> Option<&crate::sparse::csr::Csr> {
+        if self.at.is_none() {
+            if let Some(h) = &self.pending {
+                if h.is_finished() {
+                    let h = self.pending.take().expect("pending checked above");
+                    self.at = Some(h.join().expect("transpose builder panicked"));
+                }
+            } else if self.after.is_some_and(|n| self.calls >= n) {
+                let a = a.clone();
+                self.pending = Some(std::thread::spawn(move || a.transpose()));
+            }
+        }
+        self.calls += 1;
+        self.at.as_ref()
+    }
+
+    /// Is the transposed copy adopted (i.e. Aᵀ·X now runs as gather)?
+    pub fn built(&self) -> bool {
+        self.at.is_some()
+    }
+
+    /// Is the adaptive build enabled at all?
+    pub fn enabled(&self) -> bool {
+        self.after.is_some() || self.at.is_some()
+    }
+}
+
 /// The operand matrix a backend is constructed around.
 #[derive(Clone, Debug)]
 pub enum Operand {

@@ -18,11 +18,13 @@
 //! * **Sparse multiplications** — PJRT-CPU has no cuSPARSE analogue; CSR
 //!   SpMM runs on the host substrate (the block-ELL Pallas kernel exists
 //!   and is integration-tested, see `tests/test_xla_runtime.rs`, but CSR
-//!   is the production path). Documented in DESIGN.md §3.
+//!   is the production path). The Aᵀ·X fallback carries the same
+//!   adaptive cached-transpose strategy as the CPU backend. Documented
+//!   in DESIGN.md §3.
 
 use std::rc::Rc;
 
-use super::{Backend, Operand};
+use super::{AdaptiveTranspose, Backend, Operand};
 use crate::error::{Error, Result};
 use crate::la::blas3;
 use crate::la::mat::{Mat, MatRef};
@@ -51,6 +53,11 @@ pub struct XlaBackend {
     /// AbstractTfrtCpuBuffer::CopyFromLiteral).
     _a_lit: Option<xla::Literal>,
     m_pad: usize,
+    /// Adaptive cached transpose for the host-CSR Aᵀ·X fallback (PJRT
+    /// CPU has no cuSPARSE analogue, so sparse products run on the host
+    /// substrate — with the same scatter→cached-gather adaptivity as
+    /// the CPU backend).
+    at_cache: AdaptiveTranspose,
     profile: Profile,
 }
 
@@ -77,6 +84,7 @@ impl XlaBackend {
             a_buf,
             _a_lit: a_lit,
             m_pad,
+            at_cache: AdaptiveTranspose::new(None),
             profile: Profile::new(),
         })
     }
@@ -89,6 +97,7 @@ impl XlaBackend {
             a_buf: None,
             _a_lit: None,
             m_pad: 0,
+            at_cache: AdaptiveTranspose::from_env(),
             profile: Profile::new(),
         }
     }
@@ -226,8 +235,12 @@ impl Backend for XlaBackend {
             Ok(Some(y)) => y,
             _ => match &self.a {
                 Operand::Sparse(a) => {
+                    let xo = x.to_owned();
                     let mut y = Mat::zeros(a.cols(), x.cols);
-                    a.spmm_t(&x.to_owned(), &mut y);
+                    match self.at_cache.advance(a) {
+                        Some(at) => at.spmm(&xo, &mut y),
+                        None => a.spmm_t(&xo, &mut y),
+                    }
                     y
                 }
                 Operand::Dense(a) => {

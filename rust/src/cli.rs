@@ -7,7 +7,7 @@
 //! trunksvd gen --name rel8 --out rel8.mtx
 //! trunksvd solve (--suite NAME | --mtx FILE | --dense M N) \
 //!                [--algo lanc|rand] [--r R] [--p P] [--b B] [--seed S] \
-//!                [--tol T] [--wanted K] [--backend cpu|cpu-expt|xla]
+//!                [--tol T] [--wanted K] [--backend cpu|cpu-scatter|cpu-expt|xla]
 //! trunksvd experiment fig1|fig2|fig3|fig4|table1|table2|all \
 //!                [--subset N] [--shrink S] [--out DIR] [--backend ...]
 //! ```
@@ -80,6 +80,7 @@ impl Args {
 fn backend_choice(args: &Args) -> Result<BackendChoice> {
     match args.get("backend").unwrap_or("cpu") {
         "cpu" => Ok(BackendChoice::Cpu),
+        "cpu-scatter" => Ok(BackendChoice::CpuScatter),
         "cpu-expt" => Ok(BackendChoice::CpuExplicitT),
         "xla" => {
             let rt = Runtime::new(&default_artifact_dir())?;
@@ -87,7 +88,7 @@ fn backend_choice(args: &Args) -> Result<BackendChoice> {
         }
         other => Err(Error::Parse {
             what: "cli",
-            detail: format!("unknown backend '{other}' (cpu|cpu-expt|xla)"),
+            detail: format!("unknown backend '{other}' (cpu|cpu-scatter|cpu-expt|xla)"),
         }),
     }
 }
@@ -99,7 +100,7 @@ const USAGE: &str = "usage: trunksvd <info|suite|gen|solve|experiment> [options]
   solve --suite NAME | --mtx FILE | --dense M N
         [--algo lanc|rand] [--r R] [--p P] [--b B] [--seed S]
         [--tol T] [--wanted K] [--restart basic|thick] [--keep K]
-        [--backend cpu|cpu-expt|xla]
+        [--backend cpu|cpu-scatter|cpu-expt|xla]
   experiment fig1|fig2|fig3|fig4|table1|table2|all
         [--subset N] [--shrink S] [--out DIR] [--backend ...]";
 

@@ -35,9 +35,14 @@ impl Algo {
 /// Which backend executes the building blocks.
 #[derive(Clone)]
 pub enum BackendChoice {
-    /// Pure-rust substrate (scatter SpMMᵀ — the cuSPARSE-like default).
+    /// Pure-rust substrate; Aᵀ·X starts on scatter and adaptively
+    /// switches to a background-built transposed copy (the default).
     Cpu,
-    /// Pure-rust with an explicit transposed CSR copy (paper's ablation).
+    /// Pure-rust, scatter SpMMᵀ only (the cuSPARSE-like baseline; the
+    /// adaptive transpose is disabled — ablation arm).
+    CpuScatter,
+    /// Pure-rust with an eager explicit transposed CSR copy (paper's
+    /// §4.1.2 strategy — ablation arm).
     CpuExplicitT,
     /// AOT JAX/Pallas graphs through PJRT.
     Xla(Rc<Runtime>),
@@ -47,6 +52,7 @@ impl BackendChoice {
     pub fn name(&self) -> &'static str {
         match self {
             BackendChoice::Cpu => "cpu",
+            BackendChoice::CpuScatter => "cpu-scatter",
             BackendChoice::CpuExplicitT => "cpu+expT",
             BackendChoice::Xla(_) => "xla",
         }
@@ -133,6 +139,7 @@ impl RunReport {
 pub fn make_backend(op: Operand, choice: &BackendChoice) -> Result<Box<dyn Backend>> {
     Ok(match (choice, op) {
         (BackendChoice::Cpu, op) => Box::new(CpuBackend::new(op)),
+        (BackendChoice::CpuScatter, op) => Box::new(CpuBackend::new(op).scatter_only()),
         (BackendChoice::CpuExplicitT, op) => {
             Box::new(CpuBackend::new(op).with_explicit_transpose())
         }

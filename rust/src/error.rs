@@ -1,48 +1,72 @@
 //! Error types for the trunksvd library.
+//!
+//! Hand-implemented `Display`/`Error` (no `thiserror` in the offline
+//! vendor set).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Library-wide error type.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape mismatch between operands.
-    #[error("shape mismatch in {op}: {detail}")]
     Shape { op: &'static str, detail: String },
 
     /// Cholesky factorization hit a non-positive pivot (matrix not
     /// numerically SPD). The orthogonalization layer catches this and
     /// falls back to CGS with re-orthogonalization (paper §3.2).
-    #[error("cholesky breakdown at pivot {pivot} (value {value:.3e})")]
     CholeskyBreakdown { pivot: usize, value: f64 },
 
     /// Jacobi SVD failed to converge within the sweep limit.
-    #[error("jacobi SVD did not converge after {sweeps} sweeps (off {off:.3e})")]
     SvdNoConvergence { sweeps: usize, off: f64 },
 
     /// Invalid algorithm parameters (r, p, b constraints).
-    #[error("invalid parameter: {0}")]
     InvalidParam(String),
 
     /// I/O error (MatrixMarket, artifacts, reports).
-    #[error("io error on {path}: {source}")]
     Io {
         path: String,
-        #[source]
         source: std::io::Error,
     },
 
     /// Parse error (MatrixMarket, JSON, CLI).
-    #[error("parse error in {what}: {detail}")]
     Parse { what: &'static str, detail: String },
 
     /// PJRT / XLA runtime error.
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Requested artifact is not present in the manifest and the fallback
     /// builder cannot synthesize the op.
-    #[error("no artifact or fallback for op {op} with shape {shape}")]
     MissingArtifact { op: String, shape: String },
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape { op, detail } => write!(f, "shape mismatch in {op}: {detail}"),
+            Error::CholeskyBreakdown { pivot, value } => {
+                write!(f, "cholesky breakdown at pivot {pivot} (value {value:.3e})")
+            }
+            Error::SvdNoConvergence { sweeps, off } => {
+                write!(f, "jacobi SVD did not converge after {sweeps} sweeps (off {off:.3e})")
+            }
+            Error::InvalidParam(detail) => write!(f, "invalid parameter: {detail}"),
+            Error::Io { path, source } => write!(f, "io error on {path}: {source}"),
+            Error::Parse { what, detail } => write!(f, "parse error in {what}: {detail}"),
+            Error::Xla(detail) => write!(f, "xla runtime: {detail}"),
+            Error::MissingArtifact { op, shape } => {
+                write!(f, "no artifact or fallback for op {op} with shape {shape}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -69,5 +93,15 @@ mod tests {
         assert!(e.to_string().contains("pivot 3"));
         let e = shape_err("gemm", "2x3 * 4x5");
         assert!(e.to_string().contains("gemm"));
+    }
+
+    #[test]
+    fn io_source_is_chained() {
+        let e = Error::Io {
+            path: "x.mtx".into(),
+            source: std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        };
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("x.mtx"));
     }
 }

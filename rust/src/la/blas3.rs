@@ -7,9 +7,18 @@
 //! Layout notes: everything is column-major with leading dimension ==
 //! rows, so `gemm_nn` is an axpy-panel kernel (streams contiguous columns)
 //! and `gemm_tn` is a dot-panel kernel — both auto-vectorize well.
+//!
+//! Threading model: the GEMMs partition *output columns* in groups of 4
+//! (`parallel_chunks_mut` on C's storage — column groups are contiguous
+//! in column-major layout, so ownership is a plain slice split). `gram`
+//! instead partitions the *rows* of Q: each thread streams its row band
+//! tile-by-tile into a private b×b accumulator and the partials are
+//! summed with `parallel_reduce` — a SYRK is reduction-shaped, so row
+//! partitioning exposes q/tile-way parallelism where column partitioning
+//! would only expose b/4.
 
 use super::mat::{Mat, MatRef};
-use crate::util::pool::parallel_chunks_mut;
+use crate::util::pool::{parallel_chunks_mut, parallel_reduce};
 
 /// C = alpha * A * B + beta * C, with A: m×k, B: k×n, C: m×n.
 ///
@@ -230,14 +239,71 @@ pub fn gemm_tn(alpha: f64, a: MatRef, b: MatRef, beta: f64, c: &mut Mat) {
 }
 
 /// Gram matrix W = QᵀQ (b×b), exploiting symmetry (computes the upper
-/// triangle then mirrors). This is the SYRK of Alg. 4 steps S1/S4.
+/// triangle then mirrors). This is the SYRK of Alg. 4 steps S1/S4 and
+/// sits inside every CholeskyQR2 call.
+///
+/// Row-tiled parallel SYRK: the q rows are split across threads
+/// (`parallel_reduce`); each thread walks its row band in tiles small
+/// enough to stay cache-resident (so the b(b+1)/2 column-pair dots read
+/// the tile from L1/L2, not RAM) and accumulates into a private b×b
+/// upper triangle. The partials are summed in the reduction and the
+/// triangle is mirrored once at the end.
 pub fn gram(q: MatRef) -> Mat {
-    let b = q.cols;
+    let (rows, b) = (q.rows, q.cols);
     let mut w = Mat::zeros(b, b);
+    if b == 0 {
+        return w;
+    }
+    // 256 rows × b ≤ 32 cols × 8 B = 64 KiB worst case — L2-resident.
+    const TILE: usize = 256;
+    let acc = parallel_reduce(
+        rows,
+        vec![0.0f64; b * b],
+        |lo, hi| {
+            let mut acc = vec![0.0f64; b * b];
+            let mut t0 = lo;
+            while t0 < hi {
+                let tl = TILE.min(hi - t0);
+                for j in 0..b {
+                    let qj = &q.col(j)[t0..t0 + tl];
+                    // Two (i, j) entries per pass over qj.
+                    let mut i = 0;
+                    while i + 1 <= j {
+                        let qi0 = &q.col(i)[t0..t0 + tl];
+                        let qi1 = &q.col(i + 1)[t0..t0 + tl];
+                        let (mut s0, mut s1) = (0.0, 0.0);
+                        for t in 0..tl {
+                            let x = qj[t];
+                            s0 += qi0[t] * x;
+                            s1 += qi1[t] * x;
+                        }
+                        acc[j * b + i] += s0;
+                        acc[j * b + i + 1] += s1;
+                        i += 2;
+                    }
+                    if i <= j {
+                        let qi = &q.col(i)[t0..t0 + tl];
+                        let mut s = 0.0;
+                        for t in 0..tl {
+                            s += qi[t] * qj[t];
+                        }
+                        acc[j * b + i] += s;
+                    }
+                }
+                t0 += tl;
+            }
+            acc
+        },
+        |mut a, b_part| {
+            for (x, y) in a.iter_mut().zip(&b_part) {
+                *x += y;
+            }
+            a
+        },
+    );
     for j in 0..b {
-        let qj = q.col(j);
         for i in 0..=j {
-            let s = super::blas1::dot(q.col(i), qj);
+            let s = acc[j * b + i];
             w.set(i, j, s);
             w.set(j, i, s);
         }
@@ -359,6 +425,19 @@ mod tests {
             for j in 0..6 {
                 assert_eq!(w.at(i, j), w.at(j, i));
             }
+        }
+    }
+
+    #[test]
+    fn gram_ragged_shapes_match_gemm() {
+        // Rows straddling the 256-row tile and odd b exercise the pair /
+        // remainder loops of the tiled SYRK.
+        let mut rng = Rng::new(31);
+        for &(rows, b) in &[(1usize, 1usize), (5, 3), (255, 7), (256, 8), (257, 9), (700, 16)] {
+            let q = Mat::randn(rows, b, &mut rng);
+            let w = gram(q.as_ref());
+            let expect = mat_tn(&q, &q);
+            assert!(w.max_abs_diff(&expect) < 1e-10, "shape {rows}x{b}");
         }
     }
 

@@ -6,7 +6,9 @@
 //! every block-row stores the same number of blocks (`mbpr`,
 //! zero-padded), so the kernel is a regular gather + small-matmul loop
 //! with static shapes. This module is the production converter used to
-//! feed the AOT SpMM artifact from rust.
+//! feed the AOT SpMM artifact from rust, plus a threaded host SpMM
+//! (parallel over block-row bands, 4-column register-blocked bs×bs
+//! micro-kernel) so the format is competitive on the CPU substrate too.
 
 use super::csr::Csr;
 use crate::error::{Error, Result};
@@ -106,28 +108,89 @@ impl BlockEll {
         (self.nbr * self.mbpr * self.bs * self.bs) as f64 / nnz.max(1) as f64
     }
 
-    /// Reference SpMM on the host (Y = A·X) — the oracle the AOT artifact
-    /// is checked against in the integration tests.
-    pub fn spmm_ref(&self, x: &Mat) -> Mat {
+    /// Y = A·X on the host (Y is padded_rows×k, X is padded_cols×k).
+    ///
+    /// Production kernel: parallel over contiguous *block-row* bands
+    /// (each thread owns whole bs-row stripes of Y, so block-scatter
+    /// accumulation is private), with a 4-column register-blocked bs×bs
+    /// micro-kernel — each block row load feeds 4 dots, and the inner
+    /// contiguous length-bs dot auto-vectorizes.
+    pub fn spmm(&self, x: &Mat, y: &mut Mat) {
         assert_eq!(x.rows(), self.padded_cols(), "block-ELL spmm X rows");
+        assert_eq!(
+            (y.rows(), y.cols()),
+            (self.padded_rows(), x.cols()),
+            "block-ELL spmm out"
+        );
         let k = x.cols();
         let bs = self.bs;
-        let mut y = Mat::zeros(self.padded_rows(), k);
-        for br in 0..self.nbr {
-            for s in 0..self.mbpr {
-                let bc = self.idx[br * self.mbpr + s] as usize;
-                let base = (br * self.mbpr + s) * bs * bs;
-                for j in 0..k {
-                    for ri in 0..bs {
-                        let mut acc = 0.0;
-                        for cj in 0..bs {
-                            acc += self.blocks[base + ri * bs + cj] * x.at(bc * bs + cj, j);
+        let mbpr = self.mbpr;
+        if k == 0 || self.nbr == 0 || self.ncb == 0 {
+            y.data_mut().fill(0.0);
+            return;
+        }
+        let blocks = &self.blocks;
+        let idx = &self.idx;
+        let rows_pad = self.padded_rows();
+        crate::util::pool::parallel_row_blocks(y.data_mut(), rows_pad, bs, |r0, r1, cols| {
+            for cb in cols.iter_mut() {
+                cb.fill(0.0);
+            }
+            let br0 = r0 / bs;
+            for lb in 0..(r1 - r0) / bs {
+                let br = br0 + lb;
+                for s in 0..mbpr {
+                    let slot = br * mbpr + s;
+                    let bc = idx[slot] as usize;
+                    let base = slot * bs * bs;
+                    let blk = &blocks[base..base + bs * bs];
+                    let mut j = 0;
+                    while j + 3 < k {
+                        let x0 = &x.col(j)[bc * bs..(bc + 1) * bs];
+                        let x1 = &x.col(j + 1)[bc * bs..(bc + 1) * bs];
+                        let x2 = &x.col(j + 2)[bc * bs..(bc + 1) * bs];
+                        let x3 = &x.col(j + 3)[bc * bs..(bc + 1) * bs];
+                        let [c0, c1, c2, c3] = &mut cols[j..j + 4] else { unreachable!() };
+                        for ri in 0..bs {
+                            let row = &blk[ri * bs..(ri + 1) * bs];
+                            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                            for (t, &v) in row.iter().enumerate() {
+                                s0 += v * x0[t];
+                                s1 += v * x1[t];
+                                s2 += v * x2[t];
+                                s3 += v * x3[t];
+                            }
+                            let o = lb * bs + ri;
+                            c0[o] += s0;
+                            c1[o] += s1;
+                            c2[o] += s2;
+                            c3[o] += s3;
                         }
-                        y.add_at(br * bs + ri, j, acc);
+                        j += 4;
+                    }
+                    while j < k {
+                        let xj = &x.col(j)[bc * bs..(bc + 1) * bs];
+                        let cj = &mut cols[j];
+                        for ri in 0..bs {
+                            let row = &blk[ri * bs..(ri + 1) * bs];
+                            let mut acc = 0.0;
+                            for (t, &v) in row.iter().enumerate() {
+                                acc += v * xj[t];
+                            }
+                            cj[lb * bs + ri] += acc;
+                        }
+                        j += 1;
                     }
                 }
             }
-        }
+        });
+    }
+
+    /// Allocating wrapper around [`BlockEll::spmm`] — kept as the oracle
+    /// entry point the AOT artifact integration tests call.
+    pub fn spmm_ref(&self, x: &Mat) -> Mat {
+        let mut y = Mat::zeros(self.padded_rows(), x.cols());
+        self.spmm(x, &mut y);
         y
     }
 }
@@ -165,6 +228,33 @@ mod tests {
         }
         // padded rows are zero
         for i in 90..be.padded_rows() {
+            assert_eq!(y.at(i, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn spmm_register_blocked_matches_naive() {
+        // k=6 exercises the 4-column micro-kernel plus the remainder
+        // loop; bs=8 with ragged 130x100 exercises block padding.
+        let spec = SparseSpec { rows: 130, cols: 100, nnz: 1500, seed: 11, ..Default::default() };
+        let a = generate(&spec);
+        let be = BlockEll::from_csr(&a, 8, 64).unwrap();
+        let ad = a.to_dense();
+        let mut rng = Rng::new(12);
+        let mut x = Mat::zeros(be.padded_cols(), 6);
+        for j in 0..6 {
+            for i in 0..100 {
+                x.set(i, j, rng.normal());
+            }
+        }
+        let y = be.spmm_ref(&x);
+        for j in 0..6 {
+            for i in 0..130 {
+                let e = (0..100).map(|c| ad.at(i, c) * x.at(c, j)).sum::<f64>();
+                assert!((y.at(i, j) - e).abs() < 1e-10, "({i},{j})");
+            }
+        }
+        for i in 130..be.padded_rows() {
             assert_eq!(y.at(i, 0), 0.0);
         }
     }

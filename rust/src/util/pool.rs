@@ -1,29 +1,57 @@
-//! Tiny data-parallel helper.
+//! Tiny data-parallel helpers.
 //!
-//! No rayon/tokio in the offline vendor set, so the hot loops use this
-//! `parallel_for` built on `std::thread::scope`. On a single-core testbed
-//! (the current image) it degrades to a serial loop with zero thread
-//! overhead; on multi-core hosts it chunks the index range across
-//! `TRUNKSVD_THREADS` (default: available_parallelism) workers.
+//! No rayon/tokio in the offline vendor set, so the hot loops use these
+//! scoped-thread helpers built on `std::thread::scope`. On a single-core
+//! testbed they degrade to serial loops with zero thread overhead; on
+//! multi-core hosts they chunk work across `TRUNKSVD_THREADS` (default:
+//! available parallelism) workers.
+//!
+//! Threading model (who partitions what):
+//!
+//! * [`parallel_for`] — contiguous index ranges, read-only sharing.
+//! * [`parallel_chunks_mut`] — disjoint mutable chunks of one slice
+//!   (column groups of a column-major panel). Used by the dense GEMMs
+//!   and by the scatter SpMMᵀ, which partitions *output columns* so each
+//!   thread owns whole columns of Y and the scatter stays race-free.
+//! * [`parallel_row_blocks`] — disjoint *row bands* of a column-major
+//!   panel: every worker gets the same row range of every column. Used
+//!   by the gather SpMM kernels, where threads own output rows.
+//! * [`parallel_reduce`] — map contiguous ranges to partials, fold them
+//!   in worker order. Used by the row-tiled SYRK (Gram) reduction and
+//!   the CSR histogram passes.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
-/// Number of worker threads to use (cached).
+/// Runtime override for [`num_threads`] (0 = no override). Lets benches
+/// and tests sweep thread counts inside one process, which the
+/// env-var-derived default (cached in a `OnceLock`) cannot do.
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the worker-thread count for subsequent pool calls.
+/// `set_num_threads(0)` clears the override (back to the env default).
+pub fn set_num_threads(n: usize) {
+    THREAD_OVERRIDE.store(n, Ordering::SeqCst);
+}
+
+/// Number of worker threads to use. Resolution order: the
+/// [`set_num_threads`] override, then `TRUNKSVD_THREADS`, then
+/// `available_parallelism`. The env lookup happens exactly once.
 pub fn num_threads() -> usize {
-    static N: AtomicUsize = AtomicUsize::new(0);
-    let cached = N.load(Ordering::Relaxed);
-    if cached != 0 {
-        return cached;
+    let o = THREAD_OVERRIDE.load(Ordering::SeqCst);
+    if o != 0 {
+        return o;
     }
-    let n = std::env::var("TRUNKSVD_THREADS")
-        .ok()
-        .and_then(|s| s.parse::<usize>().ok())
-        .filter(|&n| n >= 1)
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        });
-    N.store(n, Ordering::Relaxed);
-    n
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::env::var("TRUNKSVD_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
 }
 
 /// Run `body(i)` for every `i in 0..n`, partitioned into contiguous chunks
@@ -75,8 +103,8 @@ pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
     std::thread::scope(|scope| {
         let mut rest = data;
         let mut ci = 0;
-        // Hand each worker an interleaved sequence is unnecessary; chunks
-        // are roughly equal cost, so deal them out round-robin in batches.
+        // Chunks are roughly equal cost, so each worker takes one
+        // contiguous batch of ceil(n_chunks / t) chunks.
         let per = n_chunks.div_ceil(t);
         for _ in 0..t {
             let take = (per * chunk_len).min(rest.len());
@@ -93,6 +121,123 @@ pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
                     body(base + k, chunk);
                 }
             });
+        }
+    });
+}
+
+/// Map-reduce over `0..n`: each worker computes `map(lo, hi)` on one
+/// contiguous sub-range, and the partials are folded with `reduce` in
+/// worker (= index) order starting from `identity`. With one worker this
+/// is exactly `reduce(identity, map(0, n))`, so a concatenating `reduce`
+/// preserves element order.
+pub fn parallel_reduce<T, M, R>(n: usize, identity: T, map: M, reduce: R) -> T
+where
+    T: Send,
+    M: Fn(usize, usize) -> T + Sync,
+    R: Fn(T, T) -> T,
+{
+    let t = num_threads().min(n.max(1));
+    if t <= 1 || n < 2 {
+        if n == 0 {
+            return identity;
+        }
+        return reduce(identity, map(0, n));
+    }
+    let chunk = n.div_ceil(t);
+    let mut parts: Vec<T> = Vec::with_capacity(t);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(t);
+        for w in 0..t {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                continue;
+            }
+            let map = &map;
+            handles.push(scope.spawn(move || map(lo, hi)));
+        }
+        for h in handles {
+            parts.push(h.join().expect("parallel_reduce worker panicked"));
+        }
+    });
+    parts.into_iter().fold(identity, reduce)
+}
+
+/// Parallel histogram over `0..n`: each worker fills a private
+/// `bins`-sized count vector for its contiguous sub-range via
+/// `fill(lo, hi, counts)`, and the per-worker vectors are summed
+/// elementwise. Shared by the CSR row/column counting passes.
+pub fn parallel_histogram<F>(n: usize, bins: usize, fill: F) -> Vec<usize>
+where
+    F: Fn(usize, usize, &mut [usize]) + Sync,
+{
+    parallel_reduce(
+        n,
+        vec![0usize; bins],
+        |lo, hi| {
+            let mut c = vec![0usize; bins];
+            fill(lo, hi, &mut c);
+            c
+        },
+        |mut a, b| {
+            for (x, y) in a.iter_mut().zip(&b) {
+                *x += y;
+            }
+            a
+        },
+    )
+}
+
+/// Partition a column-major panel (`data.len()` divisible by `col_len`)
+/// into contiguous row bands aligned to `align` rows, and run
+/// `body(row_lo, row_hi, cols)` in parallel, where `cols[j]` is the
+/// `[row_lo, row_hi)` sub-slice of column `j`. Each worker owns its row
+/// band across *all* columns, which is the natural decomposition for
+/// row-gather kernels (SpMM) on column-major output.
+pub fn parallel_row_blocks<T, F>(data: &mut [T], col_len: usize, align: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [&mut [T]]) + Sync,
+{
+    assert!(col_len > 0, "parallel_row_blocks: empty columns");
+    assert_eq!(data.len() % col_len, 0, "parallel_row_blocks: ragged panel");
+    let n_cols = data.len() / col_len;
+    let align = align.max(1);
+    let n_blocks = col_len.div_ceil(align);
+    let t = num_threads().min(n_blocks.max(1));
+    if t <= 1 {
+        let mut cols: Vec<&mut [T]> = data.chunks_mut(col_len).collect();
+        body(0, col_len, &mut cols);
+        return;
+    }
+    // Aligned row bounds per worker: ceil(n_blocks / t) blocks each.
+    let per = n_blocks.div_ceil(t);
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0usize);
+    for w in 0..t {
+        let hi = ((w + 1) * per * align).min(col_len);
+        if hi > *bounds.last().unwrap() {
+            bounds.push(hi);
+        }
+    }
+    debug_assert_eq!(*bounds.last().unwrap(), col_len);
+    let nw = bounds.len() - 1;
+    // Split every column at the bounds and deal the bands to workers.
+    let mut bands: Vec<Vec<&mut [T]>> = (0..nw).map(|_| Vec::with_capacity(n_cols)).collect();
+    for col in data.chunks_mut(col_len) {
+        let mut rest = col;
+        for (w, band) in bands.iter_mut().enumerate() {
+            let take = bounds[w + 1] - bounds[w];
+            let (head, tail) = rest.split_at_mut(take);
+            band.push(head);
+            rest = tail;
+        }
+    }
+    std::thread::scope(|scope| {
+        for (w, mut cols) in bands.into_iter().enumerate() {
+            let body = &body;
+            let (lo, hi) = (bounds[w], bounds[w + 1]);
+            scope.spawn(move || body(lo, hi, &mut cols));
         }
     });
 }
@@ -137,5 +282,74 @@ mod tests {
     #[test]
     fn num_threads_at_least_one() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn reduce_sums_and_preserves_order() {
+        // Sum 0..=999 via per-range partial sums.
+        let s = parallel_reduce(
+            1000,
+            0u64,
+            |lo, hi| (lo as u64..hi as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(s, 499_500);
+        // Concatenating reduce keeps index order.
+        let v = parallel_reduce(
+            257,
+            Vec::new(),
+            |lo, hi| (lo..hi).collect::<Vec<usize>>(),
+            |mut a, mut b| {
+                a.append(&mut b);
+                a
+            },
+        );
+        assert_eq!(v, (0..257).collect::<Vec<usize>>());
+        // Empty range returns the identity untouched.
+        assert_eq!(parallel_reduce(0, 41, |_, _| panic!("no work"), |a, b: i32| a + b), 41);
+    }
+
+    #[test]
+    fn row_blocks_cover_panel() {
+        // 103 rows x 5 cols, align 8: every element visited exactly once,
+        // and the row/col coordinates reported to the body are correct.
+        let (rows, cols_n) = (103usize, 5usize);
+        let mut v = vec![0u64; rows * cols_n];
+        parallel_row_blocks(&mut v, rows, 8, |lo, hi, cols| {
+            assert_eq!(cols.len(), cols_n);
+            for (j, col) in cols.iter_mut().enumerate() {
+                assert_eq!(col.len(), hi - lo);
+                for (o, x) in col.iter_mut().enumerate() {
+                    *x += 1 + ((lo + o) * 10 + j) as u64;
+                }
+            }
+        });
+        for j in 0..cols_n {
+            for i in 0..rows {
+                assert_eq!(v[j * rows + i], 1 + (i * 10 + j) as u64, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_counts_every_index_once() {
+        let data: Vec<usize> = (0..1000).map(|i| i % 7).collect();
+        let h = parallel_histogram(data.len(), 7, |lo, hi, c| {
+            for &v in &data[lo..hi] {
+                c[v] += 1;
+            }
+        });
+        assert_eq!(h.iter().sum::<usize>(), 1000);
+        assert_eq!(h[0], 143); // 0 appears for i in {0,7,...,994}
+        assert_eq!(parallel_histogram(0, 3, |_, _, _| panic!("no work")), vec![0; 3]);
+    }
+
+    #[test]
+    fn thread_override_round_trip() {
+        let before = num_threads();
+        set_num_threads(3);
+        assert_eq!(num_threads(), 3);
+        set_num_threads(0);
+        assert_eq!(num_threads(), before);
     }
 }

@@ -1,0 +1,299 @@
+//! Host-side stub of the `xla` (xla_extension 0.5.1 / xla-rs) bindings.
+//!
+//! The offline build environment ships no libxla, so this crate provides
+//! the exact API surface `trunksvd` uses with two behavior classes:
+//!
+//! * **Host literal/shape types are real**: [`Literal`], [`ArrayShape`],
+//!   and [`Shape`] implement the value semantics the runtime's
+//!   `Mat ↔ Literal` conversion layer relies on (vec1/reshape/to_vec),
+//!   so that layer stays fully testable without a device runtime.
+//! * **PJRT / builder entry points fail fast**: [`PjRtClient::cpu`],
+//!   [`HloModuleProto::from_text_file`], and [`XlaBuilder::parameter_s`]
+//!   return an [`Error`], which the trunksvd backends already treat as
+//!   "runtime unavailable" and degrade to the CPU substrate.
+//!
+//! Swapping this path dependency for the real bindings re-enables the
+//! PJRT path with no source changes in trunksvd.
+
+use std::fmt;
+
+/// Stub error: every device-side operation reports unavailable.
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: xla runtime not available (stub build; link the real xla_extension bindings to enable PJRT)"
+    )))
+}
+
+/// Element storage for stub literals (only the types trunksvd stages).
+#[derive(Clone, Debug, PartialEq)]
+enum Payload {
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            Payload::F64(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        }
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for i32 {}
+}
+
+/// Native element types a [`Literal`] can hold.
+pub trait NativeType: sealed::Sealed + Copy {
+    #[doc(hidden)]
+    fn stub_store(data: &[Self]) -> Literal;
+    #[doc(hidden)]
+    fn stub_extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f64 {
+    fn stub_store(data: &[Self]) -> Literal {
+        Literal { payload: Payload::F64(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+    fn stub_extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.payload {
+            Payload::F64(v) => Ok(v.clone()),
+            _ => unavailable("Literal::to_vec::<f64> on non-f64 literal"),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn stub_store(data: &[Self]) -> Literal {
+        Literal { payload: Payload::I32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+    fn stub_extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.payload {
+            Payload::I32(v) => Ok(v.clone()),
+            _ => unavailable("Literal::to_vec::<i32> on non-i32 literal"),
+        }
+    }
+}
+
+/// A host tensor value (fully functional in the stub).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::stub_store(data)
+    }
+
+    /// Same payload with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.payload.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.payload.len()
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    /// Dense array shape of this literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::stub_extract(self)
+    }
+
+    /// Decompose a tuple literal (only produced by device execution,
+    /// which the stub cannot perform).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Dims of a dense array literal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A (typed) array shape used to declare computation parameters.
+#[derive(Clone, Debug)]
+pub struct Shape {
+    #[allow(dead_code)]
+    dims: Vec<i64>,
+}
+
+impl Shape {
+    pub fn array<T: NativeType>(dims: Vec<i64>) -> Shape {
+        Shape { dims }
+    }
+}
+
+/// PJRT client handle (creation always fails in the stub).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_literal")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Compiled executable handle (unreachable in the stub: no client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Device buffer handle (unreachable in the stub: no client).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Parsed HLO module (text loading requires the real bindings).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<std::path::Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation (opaque in the stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Computation builder (parameter creation fails in the stub, so every
+/// builder-constructed graph degrades to the caller's CPU fallback).
+pub struct XlaBuilder {
+    _name: String,
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder { _name: name.to_string() }
+    }
+
+    pub fn parameter_s(&self, _id: i64, _shape: &Shape, _name: &str) -> Result<XlaOp> {
+        unavailable("XlaBuilder::parameter_s")
+    }
+}
+
+/// A node in a computation under construction.
+pub struct XlaOp {
+    _private: (),
+}
+
+impl XlaOp {
+    pub fn matmul(&self, _rhs: &XlaOp) -> Result<XlaOp> {
+        unavailable("XlaOp::matmul")
+    }
+
+    pub fn transpose(&self, _perm: &[i64]) -> Result<XlaOp> {
+        unavailable("XlaOp::transpose")
+    }
+
+    pub fn build(&self) -> Result<XlaComputation> {
+        unavailable("XlaOp::build")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f64() {
+        let l = Literal::vec1(&[1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = Literal::vec1(&[7i32, 8]).reshape(&[1, 2]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn pjrt_is_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("not available"));
+        assert!(HloModuleProto::from_text_file("/nope.hlo").is_err());
+        let b = XlaBuilder::new("t");
+        assert!(b.parameter_s(0, &Shape::array::<f64>(vec![2, 2]), "a").is_err());
+    }
+}

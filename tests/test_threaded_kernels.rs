@@ -1,0 +1,207 @@
+//! Parity of the threaded sparse/Gram kernels against the dense
+//! reference across worker-thread counts (the `TRUNKSVD_THREADS`
+//! dimension, swept in-process via `pool::set_num_threads`), ragged
+//! shapes, k = 1, and empty-row matrices.
+//!
+//! The thread override is process-global, so every test that touches it
+//! serializes on `POOL_LOCK` and restores the default before returning.
+
+use std::sync::Mutex;
+
+use trunksvd::la::blas3::{self, mat_nn, mat_tn};
+use trunksvd::la::mat::Mat;
+use trunksvd::sparse::blockell::BlockEll;
+use trunksvd::sparse::coo::Coo;
+use trunksvd::sparse::csr::Csr;
+use trunksvd::util::pool;
+use trunksvd::util::rng::Rng;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+const THREAD_SWEEP: [usize; 3] = [1, 2, 8];
+const TOL: f64 = 1e-10;
+
+fn random_coo(rows: usize, cols: usize, nnz: usize, seed: u64) -> Coo {
+    let mut rng = Rng::new(seed);
+    let mut c = Coo::new(rows, cols);
+    for _ in 0..nnz {
+        c.push(rng.below(rows), rng.below(cols), rng.normal());
+    }
+    c
+}
+
+/// Restores the pool default even if the guarded closure panics.
+struct PoolReset;
+impl Drop for PoolReset {
+    fn drop(&mut self) {
+        pool::set_num_threads(0);
+    }
+}
+
+#[test]
+fn csr_spmm_and_spmm_t_parity_across_threads() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    // Ragged shapes (not multiples of any block/tile size), including a
+    // 1-row and a 1-col matrix and one with many empty rows.
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 7, 4),
+        (37, 23, 150),
+        (64, 64, 500),
+        (129, 65, 1000),
+        (1000, 333, 12_000), // takes the parallel transpose fill path
+        (50, 1, 20),
+    ];
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        for (si, &(m, n, nnz)) in shapes.iter().enumerate() {
+            let a = Csr::from_coo(&random_coo(m, n, nnz, 40 + si as u64)).unwrap();
+            let ad = a.to_dense();
+            let mut rng = Rng::new(90 + si as u64);
+            for k in [1usize, 2, 3, 5, 8, 16] {
+                let x = Mat::randn(n, k, &mut rng);
+                let mut y = Mat::zeros(m, k);
+                a.spmm(&x, &mut y);
+                assert!(
+                    y.max_abs_diff(&mat_nn(&ad, &x)) < TOL,
+                    "spmm t={t} shape {m}x{n} k={k}"
+                );
+                let z = Mat::randn(m, k, &mut rng);
+                let mut w = Mat::zeros(n, k);
+                a.spmm_t(&z, &mut w);
+                assert!(
+                    w.max_abs_diff(&mat_tn(&ad, &z)) < TOL,
+                    "spmm_t t={t} shape {m}x{n} k={k}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn csr_transpose_and_from_coo_parity_across_threads() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        // from_coo: duplicates merge, columns sort, ragged shape.
+        let mut c = Coo::new(3, 5);
+        c.push(2, 4, 1.0);
+        c.push(2, 0, 2.0);
+        c.push(2, 4, 3.0);
+        c.push(0, 1, 5.0);
+        let a = Csr::from_coo(&c).unwrap();
+        assert_eq!(a.nnz(), 3, "t={t}");
+        assert_eq!(a.row(2), (&[0u32, 4][..], &[2.0, 4.0][..]), "t={t}");
+        // Large matrix: from_coo and both transpose fill paths agree
+        // with the dense reference.
+        let coo = random_coo(700, 450, 20_000, 3);
+        let a = Csr::from_coo(&coo).unwrap();
+        let ad = a.to_dense();
+        let at = a.transpose();
+        assert!(at.to_dense().max_abs_diff(&ad.transpose()) < 1e-15, "t={t}");
+        // Per-row column indices stay sorted through the parallel paths.
+        for i in 0..a.rows() {
+            let (rc, _) = a.row(i);
+            assert!(rc.windows(2).all(|w| w[0] < w[1]), "t={t} row {i}");
+        }
+        for i in 0..at.rows() {
+            let (rc, _) = at.row(i);
+            assert!(rc.windows(2).all(|w| w[0] < w[1]), "t={t} at row {i}");
+        }
+    }
+}
+
+#[test]
+fn gram_parity_across_threads() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        let mut rng = Rng::new(5);
+        // Rows straddle the SYRK tile (256) and the thread partition;
+        // b=1 and odd b exercise the remainder column loops.
+        for &(rows, b) in &[(1usize, 1usize), (33, 5), (255, 8), (257, 16), (1023, 16), (2048, 3)]
+        {
+            let q = Mat::randn(rows, b, &mut rng);
+            let w = blas3::gram(q.as_ref());
+            assert!(
+                w.max_abs_diff(&mat_tn(&q, &q)) < TOL,
+                "gram t={t} shape {rows}x{b}"
+            );
+            for i in 0..b {
+                for j in 0..b {
+                    assert_eq!(w.at(i, j), w.at(j, i), "gram symmetry t={t}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blockell_spmm_parity_across_threads() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    let a = Csr::from_coo(&random_coo(170, 90, 2000, 8)).unwrap();
+    let ad = a.to_dense();
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        for &bs in &[8usize, 16] {
+            let be = BlockEll::from_csr(&a, bs, 64).unwrap();
+            let mut rng = Rng::new(21);
+            for k in [1usize, 4, 6] {
+                let mut x = Mat::zeros(be.padded_cols(), k);
+                for j in 0..k {
+                    for i in 0..a.cols() {
+                        x.set(i, j, rng.normal());
+                    }
+                }
+                let mut y = Mat::zeros(be.padded_rows(), k);
+                be.spmm(&x, &mut y);
+                // Unpadded corner matches dense A · X.
+                for j in 0..k {
+                    for i in 0..a.rows() {
+                        let e: f64 = (0..a.cols()).map(|c| ad.at(i, c) * x.at(c, j)).sum();
+                        assert!((y.at(i, j) - e).abs() < TOL, "t={t} bs={bs} ({i},{j})");
+                    }
+                }
+                for i in a.rows()..be.padded_rows() {
+                    assert_eq!(y.at(i, 0), 0.0, "t={t} bs={bs} padding row {i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn empty_and_degenerate_shapes() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        // All-empty-rows matrix.
+        let a = Csr::from_parts(6, 4, vec![0; 7], vec![], vec![]).unwrap();
+        let x = Mat::from_fn(4, 3, |i, j| (i + j) as f64);
+        let mut y = Mat::from_fn(6, 3, |_, _| 7.0);
+        a.spmm(&x, &mut y);
+        assert_eq!(y.fro_norm(), 0.0, "t={t} spmm over empty matrix");
+        let z = Mat::from_fn(6, 3, |i, j| (i * j) as f64);
+        let mut w = Mat::from_fn(4, 3, |_, _| 7.0);
+        a.spmm_t(&z, &mut w);
+        assert_eq!(w.fro_norm(), 0.0, "t={t} spmm_t over empty matrix");
+        // Single column output (k = 1) on a matrix with empty rows.
+        let mut c = Coo::new(5, 5);
+        c.push(0, 4, 3.0);
+        c.push(4, 0, 2.0);
+        let a = Csr::from_coo(&c).unwrap();
+        let x = Mat::from_fn(5, 1, |i, _| i as f64 + 1.0);
+        let mut y = Mat::zeros(5, 1);
+        a.spmm(&x, &mut y);
+        assert_eq!(y.at(0, 0), 15.0, "t={t}");
+        assert_eq!(y.at(4, 0), 2.0, "t={t}");
+        assert_eq!(y.at(2, 0), 0.0, "t={t}");
+        // gram of an empty panel.
+        let w = blas3::gram(Mat::zeros(10, 0).as_ref());
+        assert_eq!((w.rows(), w.cols()), (0, 0), "t={t}");
+    }
+}
