@@ -126,8 +126,8 @@ fn main() {
     banner("E. Panel factorization: CholeskyQR2 vs Householder (q x 16)", "");
     let mut rng = Rng::new(9);
     let q = if quick { 8192 } else { 32768 };
-    let y0 = Mat::randn(q, 16, &mut rng);
-    let mut be = CpuBackend::new_dense(Mat::zeros(1, 1));
+    let y0: Mat<f64> = Mat::randn(q, 16, &mut rng);
+    let mut be: CpuBackend = CpuBackend::new_dense(Mat::zeros(1, 1));
     let st = time_runs(1, 5, || {
         let mut y = y0.clone();
         be.orth_cholqr2(&mut y).unwrap();

@@ -4,10 +4,13 @@
 //!
 //! The threaded-kernels section reports serial-vs-parallel speedup and
 //! effective GF/s for `spmm`, `spmm_t` (scatter and cached transpose),
-//! `gram`, and the Block-ELL SpMM, and records everything to
-//! `BENCH_kernels.json` so the perf trajectory is tracked PR-over-PR.
+//! `gram`, and the Block-ELL SpMM — **at both element precisions** (the
+//! paper's GPU runs are fp32; these kernels are bandwidth-bound, so f32
+//! should approach 2× f64 throughput) — and records everything to
+//! `BENCH_kernels.json` (each entry carries a `dtype` field) so the perf
+//! trajectory is tracked PR-over-PR.
 //!
-//! `BENCH_QUICK=1` shrinks the size sweep.
+//! `BENCH_QUICK=1` (or the `--smoke` flag) shrinks the size sweep.
 
 use std::rc::Rc;
 
@@ -24,11 +27,14 @@ use trunksvd::sparse::blockell::BlockEll;
 use trunksvd::util::json::{self, Json};
 use trunksvd::util::pool;
 use trunksvd::util::rng::Rng;
+use trunksvd::util::scalar::Scalar;
 
 /// Print one serial-vs-parallel comparison and record it as JSON.
+#[allow(clippy::too_many_arguments)]
 fn kernel_entry(
     entries: &mut Vec<Json>,
     kernel: &str,
+    dtype: &str,
     m: usize,
     b: usize,
     threads: usize,
@@ -38,12 +44,13 @@ fn kernel_entry(
 ) {
     let speedup = serial / parallel;
     println!(
-        "{kernel:<16} m={m:>6} b={b:>3}  serial {serial:>8.4}s  par({threads}) {parallel:>8.4}s  \
-         speedup {speedup:>5.2}x  {:>7.2} GF/s",
+        "{kernel:<16} {dtype} m={m:>6} b={b:>3}  serial {serial:>8.4}s  par({threads}) \
+         {parallel:>8.4}s  speedup {speedup:>5.2}x  {:>7.2} GF/s",
         gflops(flops, parallel)
     );
     entries.push(json::obj(vec![
         ("kernel", json::str(kernel)),
+        ("dtype", json::str(dtype)),
         ("m", json::num(m as f64)),
         ("b", json::num(b as f64)),
         ("threads", json::num(threads as f64)),
@@ -54,8 +61,111 @@ fn kernel_entry(
     ]));
 }
 
+/// Threaded sparse/Gram kernel sweep at one element precision. Returns
+/// `(kernel, m, b, parallel_median_secs)` so the caller can report the
+/// f32-vs-f64 bandwidth win keyed by problem size.
+fn bench_threaded_kernels<S: Scalar>(
+    entries: &mut Vec<Json>,
+    quick: bool,
+    threads: usize,
+) -> Vec<(String, usize, usize, f64)> {
+    let mut rng = Rng::new(17);
+    let mut medians = Vec::new();
+    let m2 = if quick { 8192 } else { 32768 };
+    let n2 = m2 / 4;
+    let spec2 = SparseSpec { rows: m2, cols: n2, nnz: m2 * 25, seed: 5, ..Default::default() };
+    let a2: trunksvd::Csr<S> = generate(&spec2).cast();
+    let at2 = a2.transpose();
+    for &b in &[8usize, 16] {
+        let fl = 2.0 * a2.nnz() as f64 * b as f64;
+        let (w, r) = auto_runs(fl / 1e9);
+        // spmm (gather, row-band parallel)
+        let x: Mat<S> = Mat::randn(n2, b, &mut rng);
+        let mut y: Mat<S> = Mat::zeros(m2, b);
+        pool::set_num_threads(1);
+        let s1 = time_runs(w, r, || a2.spmm(&x, &mut y));
+        pool::set_num_threads(threads);
+        let sp = time_runs(w, r, || a2.spmm(&x, &mut y));
+        kernel_entry(entries, "spmm", S::DTYPE, m2, b, threads, s1.median, sp.median, fl);
+        medians.push(("spmm".to_string(), m2, b, sp.median));
+        // spmm_t: scatter vs cached explicit transpose
+        let xm: Mat<S> = Mat::randn(m2, b, &mut rng);
+        let mut yn: Mat<S> = Mat::zeros(n2, b);
+        pool::set_num_threads(1);
+        let t1 = time_runs(w, r, || a2.spmm_t(&xm, &mut yn));
+        pool::set_num_threads(threads);
+        let tp = time_runs(w, r, || a2.spmm_t(&xm, &mut yn));
+        kernel_entry(entries, "spmm_t_scatter", S::DTYPE, m2, b, threads, t1.median, tp.median, fl);
+        medians.push(("spmm_t_scatter".to_string(), m2, b, tp.median));
+        pool::set_num_threads(1);
+        let e1 = time_runs(w, r, || at2.spmm(&xm, &mut yn));
+        pool::set_num_threads(threads);
+        let ep = time_runs(w, r, || at2.spmm(&xm, &mut yn));
+        kernel_entry(entries, "spmm_t_cachedT", S::DTYPE, m2, b, threads, e1.median, ep.median, fl);
+        medians.push(("spmm_t_cachedT".to_string(), m2, b, ep.median));
+        // gram (row-tiled parallel SYRK)
+        let q: Mat<S> = Mat::randn(m2, b, &mut rng);
+        let flg = (b * b) as f64 * m2 as f64;
+        let (wg, rg) = auto_runs(flg / 2e9);
+        pool::set_num_threads(1);
+        let g1 = time_runs(wg, rg, || {
+            let _ = blas3::gram(q.as_ref());
+        });
+        pool::set_num_threads(threads);
+        let gp = time_runs(wg, rg, || {
+            let _ = blas3::gram(q.as_ref());
+        });
+        kernel_entry(entries, "gram", S::DTYPE, m2, b, threads, g1.median, gp.median, flg);
+        medians.push(("gram".to_string(), m2, b, gp.median));
+    }
+    // Block-ELL SpMM on a smaller, low-skew panel (ELL padding makes a
+    // big skewed random matrix memory-hungry), with the width cap at ncb
+    // so the conversion cannot fail and this arm always produces data.
+    let m3 = if quick { 4096 } else { 8192 };
+    let spec3 = SparseSpec {
+        rows: m3,
+        cols: m3 / 4,
+        nnz: m3 * 6,
+        seed: 7,
+        skew: 0.2,
+        ..Default::default()
+    };
+    let a3: trunksvd::Csr<S> = generate(&spec3).cast();
+    let ncb3 = a3.cols().div_ceil(16);
+    match BlockEll::from_csr(&a3, 16, ncb3) {
+        Ok(be) => {
+            for &b in &[8usize, 16] {
+                let fl = 2.0 * a3.nnz() as f64 * b as f64;
+                let (w, r) = auto_runs(fl / 1e9);
+                let xp: Mat<S> = Mat::randn(be.padded_cols(), b, &mut rng);
+                let mut yp: Mat<S> = Mat::zeros(be.padded_rows(), b);
+                pool::set_num_threads(1);
+                let b1 = time_runs(w, r, || be.spmm(&xp, &mut yp));
+                pool::set_num_threads(threads);
+                let bp = time_runs(w, r, || be.spmm(&xp, &mut yp));
+                kernel_entry(
+                    entries,
+                    "blockell_spmm",
+                    S::DTYPE,
+                    m3,
+                    b,
+                    threads,
+                    b1.median,
+                    bp.median,
+                    fl,
+                );
+                medians.push(("blockell_spmm".to_string(), m3, b, bp.median));
+            }
+        }
+        Err(e) => println!("blockell_spmm skipped: {e}"),
+    }
+    pool::set_num_threads(0);
+    medians
+}
+
 fn main() {
-    let quick = env_usize("BENCH_QUICK", 0) == 1;
+    let quick = env_usize("BENCH_QUICK", 0) == 1
+        || std::env::args().any(|a| a == "--smoke");
     let mut rng = Rng::new(1);
 
     banner("GEMM (C = A·B, k=512, n=16)", "m, GFLOP/s");
@@ -98,85 +208,31 @@ fn main() {
     println!("spmm_t (expl. T)   {:.2} GF/s ({:.4}s)", gflops(fl, st_e.median), st_e.median);
 
     banner(
-        "Threaded kernels: serial vs parallel",
+        "Threaded kernels: serial vs parallel, f64 and f32",
         "paper-scale panels; results recorded to BENCH_kernels.json",
     );
     let threads = pool::num_threads();
     let mut entries: Vec<Json> = Vec::new();
-    let m2 = if quick { 8192 } else { 32768 };
-    let n2 = m2 / 4;
-    let spec2 = SparseSpec { rows: m2, cols: n2, nnz: m2 * 25, seed: 5, ..Default::default() };
-    let a2 = generate(&spec2);
-    let at2 = a2.transpose();
-    for &b in &[8usize, 16] {
-        let fl = 2.0 * a2.nnz() as f64 * b as f64;
-        let (w, r) = auto_runs(fl / 1e9);
-        // spmm (gather, row-band parallel)
-        let x = Mat::randn(n2, b, &mut rng);
-        let mut y = Mat::zeros(m2, b);
-        pool::set_num_threads(1);
-        let s1 = time_runs(w, r, || a2.spmm(&x, &mut y));
-        pool::set_num_threads(threads);
-        let sp = time_runs(w, r, || a2.spmm(&x, &mut y));
-        kernel_entry(&mut entries, "spmm", m2, b, threads, s1.median, sp.median, fl);
-        // spmm_t: scatter vs cached explicit transpose
-        let xm = Mat::randn(m2, b, &mut rng);
-        let mut yn = Mat::zeros(n2, b);
-        pool::set_num_threads(1);
-        let t1 = time_runs(w, r, || a2.spmm_t(&xm, &mut yn));
-        pool::set_num_threads(threads);
-        let tp = time_runs(w, r, || a2.spmm_t(&xm, &mut yn));
-        kernel_entry(&mut entries, "spmm_t_scatter", m2, b, threads, t1.median, tp.median, fl);
-        pool::set_num_threads(1);
-        let e1 = time_runs(w, r, || at2.spmm(&xm, &mut yn));
-        pool::set_num_threads(threads);
-        let ep = time_runs(w, r, || at2.spmm(&xm, &mut yn));
-        kernel_entry(&mut entries, "spmm_t_cachedT", m2, b, threads, e1.median, ep.median, fl);
-        // gram (row-tiled parallel SYRK)
-        let q = Mat::randn(m2, b, &mut rng);
-        let flg = (b * b) as f64 * m2 as f64;
-        let (wg, rg) = auto_runs(flg / 2e9);
-        pool::set_num_threads(1);
-        let g1 = time_runs(wg, rg, || {
-            let _ = blas3::gram(q.as_ref());
-        });
-        pool::set_num_threads(threads);
-        let gp = time_runs(wg, rg, || {
-            let _ = blas3::gram(q.as_ref());
-        });
-        kernel_entry(&mut entries, "gram", m2, b, threads, g1.median, gp.median, flg);
+    let med64 = bench_threaded_kernels::<f64>(&mut entries, quick, threads);
+    let med32 = bench_threaded_kernels::<f32>(&mut entries, quick, threads);
+    // The headline number: fp32 bandwidth win over fp64 per kernel (the
+    // paper's single-precision regime; expect ≥1.5× on the bandwidth-
+    // bound spmm/gram at full thread count).
+    println!("\nfp32 speedup over fp64 (parallel medians):");
+    for ((k64, m64, b64, t64), (_k32, _m32, _b32, t32)) in med64.iter().zip(&med32) {
+        let ratio = t64 / t32.max(1e-12);
+        println!("  {k64:<16} m={m64:>6} b={b64:>3}  f64/f32 = {ratio:>5.2}x");
+        entries.push(json::obj(vec![
+            ("kernel", json::str(format!("{k64}_f32_speedup"))),
+            ("dtype", json::str("f64/f32")),
+            ("m", json::num(*m64 as f64)),
+            ("b", json::num(*b64 as f64)),
+            ("threads", json::num(threads as f64)),
+            ("f64_s", json::num(*t64)),
+            ("f32_s", json::num(*t32)),
+            ("f64_over_f32", json::num(ratio)),
+        ]));
     }
-    // Block-ELL SpMM on a smaller, low-skew panel (ELL padding makes a
-    // big skewed random matrix memory-hungry), with the width cap at ncb
-    // so the conversion cannot fail and this arm always produces data.
-    let m3 = if quick { 4096 } else { 8192 };
-    let spec3 = SparseSpec {
-        rows: m3,
-        cols: m3 / 4,
-        nnz: m3 * 6,
-        seed: 7,
-        skew: 0.2,
-        ..Default::default()
-    };
-    let a3 = generate(&spec3);
-    let ncb3 = a3.cols().div_ceil(16);
-    match BlockEll::from_csr(&a3, 16, ncb3) {
-        Ok(be) => {
-            for &b in &[8usize, 16] {
-                let fl = 2.0 * a3.nnz() as f64 * b as f64;
-                let (w, r) = auto_runs(fl / 1e9);
-                let xp = Mat::randn(be.padded_cols(), b, &mut rng);
-                let mut yp = Mat::zeros(be.padded_rows(), b);
-                pool::set_num_threads(1);
-                let b1 = time_runs(w, r, || be.spmm(&xp, &mut yp));
-                pool::set_num_threads(threads);
-                let bp = time_runs(w, r, || be.spmm(&xp, &mut yp));
-                kernel_entry(&mut entries, "blockell_spmm", m3, b, threads, b1.median, bp.median, fl);
-            }
-        }
-        Err(e) => println!("blockell_spmm skipped: {e}"),
-    }
-    pool::set_num_threads(0);
     let n_entries = entries.len();
     let doc = json::obj(vec![
         ("bench", json::str("kernels")),
@@ -190,9 +246,9 @@ fn main() {
     banner("Orthogonalization (q x 16 panel)", "CholeskyQR2 and CGS-CQR2 (s=128)");
     let qs: &[usize] = if quick { &[4096] } else { &[4096, 32768] };
     for &q in qs {
-        let y0 = Mat::randn(q, 16, &mut rng);
-        let p = random_orthonormal(q, 128, &mut rng);
-        let mut be = CpuBackend::new_dense(Mat::zeros(1, 1));
+        let y0: Mat<f64> = Mat::randn(q, 16, &mut rng);
+        let p: Mat<f64> = random_orthonormal(q, 128, &mut rng);
+        let mut be: CpuBackend = CpuBackend::new_dense(Mat::zeros(1, 1));
         let fl4 = trunksvd::cost::ca4(16, q);
         let (w, r) = auto_runs(fl4 / 2e9);
         let st = time_runs(w, r, || {

@@ -9,6 +9,7 @@
 use crate::backend::Backend;
 use crate::error::{Error, Result};
 use crate::la::mat::Mat;
+use crate::util::scalar::Scalar;
 
 use super::orth::{cgs_cqr2, cholqr2};
 
@@ -16,7 +17,11 @@ use super::orth::{cgs_cqr2, cholqr2};
 /// the returned R (r×r, upper triangular) satisfies `Y_in ≈ Q_out · R`.
 /// `b` is the block size; `r` need not be a multiple of `b` (the last
 /// block is narrower).
-pub fn cgs_qr<B: Backend + ?Sized>(be: &mut B, y: &mut Mat, b: usize) -> Result<Mat> {
+pub fn cgs_qr<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    y: &mut Mat<S>,
+    b: usize,
+) -> Result<Mat<S>> {
     let r_cols = y.cols();
     if b == 0 {
         return Err(Error::InvalidParam("block size b must be >= 1".into()));

@@ -19,25 +19,27 @@ use crate::error::Result;
 use crate::la::mat::Mat;
 use crate::la::svd::jacobi_svd;
 use crate::metrics::Block;
+use crate::util::scalar::Scalar;
 
 use super::orth::cholqr2;
 
-/// Streaming truncated SVD of a column stream.
-pub struct IncrementalSvd {
+/// Streaming truncated SVD of a column stream (generic over the working
+/// precision; the σ threshold `tol` stays an f64 ratio).
+pub struct IncrementalSvd<S: Scalar = f64> {
     rows: usize,
     rank_cap: usize,
     /// relative σ threshold (triplets below tol·σ₁ are truncated away)
     tol: f64,
-    u: Mat,
-    s: Vec<f64>,
+    u: Mat<S>,
+    s: Vec<S>,
     /// right factor as a growing (cols_seen × rank) matrix
-    v: Mat,
+    v: Mat<S>,
     cols_seen: usize,
 }
 
-impl IncrementalSvd {
+impl<S: Scalar> IncrementalSvd<S> {
     /// New accumulator for m-row inputs with rank cap `r`.
-    pub fn new(rows: usize, rank_cap: usize, tol: f64) -> IncrementalSvd {
+    pub fn new(rows: usize, rank_cap: usize, tol: f64) -> IncrementalSvd<S> {
         IncrementalSvd {
             rows,
             rank_cap,
@@ -55,18 +57,18 @@ impl IncrementalSvd {
     pub fn cols_seen(&self) -> usize {
         self.cols_seen
     }
-    pub fn u(&self) -> &Mat {
+    pub fn u(&self) -> &Mat<S> {
         &self.u
     }
-    pub fn sigma(&self) -> &[f64] {
+    pub fn sigma(&self) -> &[S] {
         &self.s
     }
-    pub fn v(&self) -> &Mat {
+    pub fn v(&self) -> &Mat<S> {
         &self.v
     }
 
     /// Append a block of columns C (m×c).
-    pub fn push_block<B: Backend + ?Sized>(&mut self, be: &mut B, c: &Mat) -> Result<()> {
+    pub fn push_block<B: Backend<S> + ?Sized>(&mut self, be: &mut B, c: &Mat<S>) -> Result<()> {
         assert_eq!(c.rows(), self.rows, "column block rows");
         let k = self.rank();
         let cc = c.cols();
@@ -99,7 +101,7 @@ impl IncrementalSvd {
             let t = cholqr2(be, &mut e)?;
             let g_re = crate::la::blas3::mat_nn(&g, &r_e);
             for (hv, c) in h.data_mut().iter_mut().zip(g_re.data()) {
-                *hv += c;
+                *hv += *c;
             }
             r_e = crate::la::blas3::mat_nn(&t, &r_e);
         }
@@ -121,9 +123,9 @@ impl IncrementalSvd {
         let svd = jacobi_svd(&core)?;
 
         // 4. decide the new rank (cap + σ threshold).
-        let smax = svd.s.first().copied().unwrap_or(0.0);
+        let smax = svd.s.first().copied().unwrap_or(S::ZERO);
         let mut new_rank = svd.s.len().min(self.rank_cap);
-        while new_rank > 1 && svd.s[new_rank - 1] < self.tol * smax {
+        while new_rank > 1 && svd.s[new_rank - 1] < S::from_f64(self.tol) * smax {
             new_rank -= 1;
         }
 
@@ -140,7 +142,7 @@ impl IncrementalSvd {
             }
         }
         for j in 0..cc {
-            v_ext.set(old_cols + j, k + j, 1.0);
+            v_ext.set(old_cols + j, k + j, S::ONE);
         }
         let v_new = be.gemm_nn(v_ext.as_ref(), svd.v.panel(0, new_rank));
 
@@ -152,7 +154,7 @@ impl IncrementalSvd {
     }
 
     /// Current reconstruction A ≈ U·diag(s)·Vᵀ (tests / small problems).
-    pub fn reconstruct(&self) -> Mat {
+    pub fn reconstruct(&self) -> Mat<S> {
         let k = self.rank();
         let mut us = self.u.clone();
         for j in 0..k {

@@ -26,12 +26,17 @@ use crate::la::mat::Mat;
 use crate::la::svd::jacobi_svd;
 use crate::metrics::{Block, Timer};
 use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
 
 use super::orth::{cgs_cqr2, cholqr2, random_orthonormal_panel};
 use super::{InitDist, LancSvdOpts, Restart, TruncatedSvd};
 
-/// Run LancSVD on the backend's operand matrix.
-pub fn lancsvd<B: Backend + ?Sized>(be: &mut B, opts: &LancSvdOpts) -> Result<TruncatedSvd> {
+/// Run LancSVD on the backend's operand matrix (any [`Scalar`]
+/// precision; the paper's GPU regime is `S = f32`).
+pub fn lancsvd<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    opts: &LancSvdOpts,
+) -> Result<TruncatedSvd<S>> {
     let (m, n) = (be.m(), be.n());
     let LancSvdOpts { r, p, b, seed, init, tol, wanted, restart } = opts.clone();
     if b == 0 || r == 0 || p == 0 {
@@ -143,10 +148,10 @@ pub fn lancsvd<B: Backend + ?Sized>(be: &mut B, opts: &LancSvdOpts) -> Result<Tr
         t.stop(be.profile_mut());
 
         // Free residual estimates: ‖A·(P v̄ᵢ) − σᵢ·(P̄ ūᵢ)‖ = ‖R_k·v̄ᵢ[r−b..r]‖.
-        let coupling = |i: usize| -> Vec<f64> {
-            let mut tail = vec![0.0; b];
+        let coupling = |i: usize| -> Vec<S> {
+            let mut tail = vec![S::ZERO; b];
             for (t_i, tv) in tail.iter_mut().enumerate() {
-                let mut acc = 0.0;
+                let mut acc = S::ZERO;
                 for c in 0..b {
                     acc += rk_last.at(t_i, c) * svd.v.at(r - b + c, i);
                 }
@@ -157,8 +162,8 @@ pub fn lancsvd<B: Backend + ?Sized>(be: &mut B, opts: &LancSvdOpts) -> Result<Tr
         est_res = (0..wanted.min(r))
             .map(|i| {
                 let sigma = svd.s[i];
-                if sigma > 0.0 {
-                    nrm2(&coupling(i)) / sigma
+                if sigma > S::ZERO {
+                    (nrm2(&coupling(i)) / sigma).to_f64()
                 } else {
                     f64::INFINITY
                 }
@@ -177,7 +182,7 @@ pub fn lancsvd<B: Backend + ?Sized>(be: &mut B, opts: &LancSvdOpts) -> Result<Tr
                     qbar_cur = be.gemm_nn(pbar_basis.as_ref(), svd.u.panel(0, b));
                     be.profile_mut().set_phase(Block::OrthM);
                     cholqr2(be, &mut qbar_cur)?;
-                    bmat.data_mut().fill(0.0);
+                    bmat.data_mut().fill(S::ZERO);
                     filled = 0;
                 }
                 Restart::Thick { .. } => {
@@ -188,11 +193,11 @@ pub fn lancsvd<B: Backend + ?Sized>(be: &mut B, opts: &LancSvdOpts) -> Result<Tr
                     // the *existing* residual Q̄_{k+1} (already ⊥ P̄·Ū).
                     let p_new = be.gemm_nn(p_basis.as_ref(), svd.v.panel(0, keep));
                     let pbar_new = be.gemm_nn(pbar_basis.as_ref(), svd.u.panel(0, keep));
-                    p_basis.data_mut().fill(0.0);
-                    pbar_basis.data_mut().fill(0.0);
+                    p_basis.data_mut().fill(S::ZERO);
+                    pbar_basis.data_mut().fill(S::ZERO);
                     p_basis.set_panel(0, &p_new);
                     pbar_basis.set_panel(0, &pbar_new);
-                    bmat.data_mut().fill(0.0);
+                    bmat.data_mut().fill(S::ZERO);
                     for i in 0..keep {
                         bmat.set(i, i, svd.s[i]);
                     }

@@ -10,6 +10,7 @@ use crate::backend::Backend;
 use crate::la::blas1::nrm2;
 use crate::la::mat::Mat;
 use crate::metrics::{Block, Profile};
+use crate::util::scalar::Scalar;
 
 /// Initial-vector distribution (paper §4: cuRAND Poisson; normal kept for
 /// ablations).
@@ -96,15 +97,17 @@ impl Default for LancSvdOpts {
     }
 }
 
-/// A computed truncated SVD, A ≈ U·diag(sigma)·Vᵀ.
+/// A computed truncated SVD, A ≈ U·diag(sigma)·Vᵀ. Generic over the
+/// working precision of the solve (default f64); residual *estimates*
+/// are always reported as f64.
 #[derive(Debug)]
-pub struct TruncatedSvd {
+pub struct TruncatedSvd<S: Scalar = f64> {
     /// Left singular vectors, m×r.
-    pub u: Mat,
+    pub u: Mat<S>,
     /// Singular values, descending.
-    pub sigma: Vec<f64>,
+    pub sigma: Vec<S>,
     /// Right singular vectors, n×r.
-    pub v: Mat,
+    pub v: Mat<S>,
     /// Per-building-block time/flop profile of the solve.
     pub profile: Profile,
     /// Outer iterations actually performed (≤ p when `tol` stops early).
@@ -114,9 +117,9 @@ pub struct TruncatedSvd {
     pub est_residuals: Vec<f64>,
 }
 
-impl TruncatedSvd {
+impl<S: Scalar> TruncatedSvd<S> {
     /// Keep only the leading `count` triplets.
-    pub fn truncated(&self, count: usize) -> (Mat, Vec<f64>, Mat) {
+    pub fn truncated(&self, count: usize) -> (Mat<S>, Vec<S>, Mat<S>) {
         let c = count.min(self.sigma.len());
         (self.u.panel_owned(0, c), self.sigma[..c].to_vec(), self.v.panel_owned(0, c))
     }
@@ -126,7 +129,11 @@ impl TruncatedSvd {
 /// first `count` triplets, computed with one SpMM/GEMM through the
 /// backend. (The paper prints ‖Auᵢ − σᵢvᵢ‖; with A m×n the dimensionally
 /// consistent form uses vᵢ ∈ ℝⁿ on the left — see DESIGN.md §7.)
-pub fn residuals<B: Backend + ?Sized>(be: &mut B, svd: &TruncatedSvd, count: usize) -> Vec<f64> {
+pub fn residuals<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    svd: &TruncatedSvd<S>,
+    count: usize,
+) -> Vec<f64> {
     let c = count.min(svd.sigma.len());
     if c == 0 {
         return Vec::new();
@@ -139,7 +146,7 @@ pub fn residuals<B: Backend + ?Sized>(be: &mut B, svd: &TruncatedSvd, count: usi
         let mut diff = av.col(i).to_vec();
         crate::la::blas1::axpy(-sigma, svd.u.col(i), &mut diff);
         let r = nrm2(&diff);
-        out.push(if sigma > 0.0 { r / sigma } else { f64::INFINITY });
+        out.push(if sigma > S::ZERO { (r / sigma).to_f64() } else { f64::INFINITY });
     }
     out
 }

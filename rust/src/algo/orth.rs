@@ -19,10 +19,11 @@ use crate::la::chol::potrf;
 use crate::la::mat::{Mat, MatRef};
 use crate::metrics::Timer;
 use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
 
 /// One CholeskyQR pass: W = QᵀQ, L = chol(W), Q ← Q·L⁻ᵀ. Returns L.
 /// The POTRF is charged to the current phase as host (small-factor) work.
-fn cholqr_pass<B: Backend + ?Sized>(be: &mut B, q: &mut Mat) -> Result<Mat> {
+fn cholqr_pass<S: Scalar, B: Backend<S> + ?Sized>(be: &mut B, q: &mut Mat<S>) -> Result<Mat<S>> {
     let w = be.gram(q.as_ref());
     let b = w.rows();
     let t = Timer::start(b as f64 * b as f64 * b as f64 / 3.0);
@@ -40,7 +41,10 @@ fn cholqr_pass<B: Backend + ?Sized>(be: &mut B, q: &mut Mat) -> Result<Mat> {
 /// Q₀ = Q₁Lᵀ and Q₁ = Q₂L̄ᵀ it follows Q₀ = Q₂·(L̄ᵀLᵀ), so the factor
 /// consistent with `Q_in = Q_out·R` is `R = L̄ᵀ·Lᵀ`; we compute that and
 /// verify it by reconstruction in the tests.
-pub fn cholqr2_host<B: Backend + ?Sized>(be: &mut B, q: &mut Mat) -> Result<Mat> {
+pub fn cholqr2_host<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    q: &mut Mat<S>,
+) -> Result<Mat<S>> {
     let snapshot = q.clone();
     let l1 = match cholqr_pass(be, q) {
         Ok(l) => l,
@@ -74,11 +78,11 @@ pub fn cholqr2_host<B: Backend + ?Sized>(be: &mut B, q: &mut Mat) -> Result<Mat>
 /// H s×b, R b×b upper triangular such that `Q_in ≈ P·H + Q_out·R`.
 /// Following the paper's step S12, H is accumulated as H + H̄ (the exact
 /// correction H + H̄·Lᵀ differs at rounding level only).
-pub fn cgs_cqr2_host<B: Backend + ?Sized>(
+pub fn cgs_cqr2_host<S: Scalar, B: Backend<S> + ?Sized>(
     be: &mut B,
-    q: &mut Mat,
-    p: MatRef<'_>,
-) -> Result<(Mat, Mat)> {
+    q: &mut Mat<S>,
+    p: MatRef<'_, S>,
+) -> Result<(Mat<S>, Mat<S>)> {
     assert_eq!(p.rows, q.rows(), "cgs_cqr2 panel rows");
     let snapshot = q.clone();
     // First pass: project out P, then CholeskyQR.
@@ -115,7 +119,7 @@ pub fn cgs_cqr2_host<B: Backend + ?Sized>(
     let t = Timer::start((b * b * b) as f64 + (h.rows() * h.cols()) as f64);
     let r = trmm_lt_lt(&l2, &l1);
     for (hv, hb) in h.data_mut().iter_mut().zip(hbar.data()) {
-        *hv += hb;
+        *hv += *hb;
     }
     t.stop(be.profile_mut());
     Ok((h, r))
@@ -123,16 +127,16 @@ pub fn cgs_cqr2_host<B: Backend + ?Sized>(
 
 /// Backend-dispatching entry point for Alg. 4 (the XLA backend overrides
 /// the trait method with its fused AOT graph).
-pub fn cholqr2<B: Backend + ?Sized>(be: &mut B, q: &mut Mat) -> Result<Mat> {
+pub fn cholqr2<S: Scalar, B: Backend<S> + ?Sized>(be: &mut B, q: &mut Mat<S>) -> Result<Mat<S>> {
     be.orth_cholqr2(q)
 }
 
 /// Backend-dispatching entry point for Alg. 5.
-pub fn cgs_cqr2<B: Backend + ?Sized>(
+pub fn cgs_cqr2<S: Scalar, B: Backend<S> + ?Sized>(
     be: &mut B,
-    q: &mut Mat,
-    p: MatRef<'_>,
-) -> Result<(Mat, Mat)> {
+    q: &mut Mat<S>,
+    p: MatRef<'_, S>,
+) -> Result<(Mat<S>, Mat<S>)> {
     be.orth_cgs_cqr2(q, p)
 }
 
@@ -141,11 +145,11 @@ pub fn cgs_cqr2<B: Backend + ?Sized>(
 /// `p` (if given) and itself; returns the triangular factor R. Columns
 /// that vanish (exact rank deficiency) are replaced by fresh random
 /// directions (their R column is zero).
-pub fn cgs2_fallback<B: Backend + ?Sized>(
+pub fn cgs2_fallback<S: Scalar, B: Backend<S> + ?Sized>(
     be: &mut B,
-    q: &mut Mat,
-    p: Option<MatRef<'_>>,
-) -> Result<Mat> {
+    q: &mut Mat<S>,
+    p: Option<MatRef<'_, S>>,
+) -> Result<Mat<S>> {
     let rows = q.rows();
     let b = q.cols();
     let t = Timer::start(0.0); // wall-time only; flop count folded into R
@@ -153,8 +157,8 @@ pub fn cgs2_fallback<B: Backend + ?Sized>(
     let mut rng = Rng::new(0x5EED_FA11);
     for j in 0..b {
         let mut norm_orig = nrm2(q.col(j));
-        if norm_orig == 0.0 {
-            norm_orig = 1.0;
+        if norm_orig == S::ZERO {
+            norm_orig = S::ONE;
         }
         let mut attempts = 0;
         loop {
@@ -177,11 +181,13 @@ pub fn cgs2_fallback<B: Backend + ?Sized>(
                 }
             }
             let nn = nrm2(q.col(j));
-            if nn > 1e-14 * norm_orig.max(1.0) {
+            // Dead-column cutoff scales with the working precision
+            // (ε-relative, ~1e-14 at f64 / ~1e-5 at f32).
+            if nn > S::from_f64(100.0) * S::EPSILON * norm_orig.max(S::ONE) {
                 if attempts == 0 {
                     r.set(j, j, nn);
                 }
-                scal(1.0 / nn, q.col_mut(j));
+                scal(S::ONE / nn, q.col_mut(j));
                 break;
             }
             // Dead column: replace with a random direction, R entry 0.
@@ -191,15 +197,15 @@ pub fn cgs2_fallback<B: Backend + ?Sized>(
                     "cgs2 fallback could not complete column {j} of a {rows}x{b} panel"
                 )));
             }
-            let mut fresh = vec![0.0; rows];
+            let mut fresh = vec![S::ZERO; rows];
             rng.fill_normal(&mut fresh);
             q.col_mut(j).copy_from_slice(&fresh);
             for ri in 0..b {
                 if ri != j {
-                    r.set(ri, j, if ri < j { r.at(ri, j) } else { 0.0 });
+                    r.set(ri, j, if ri < j { r.at(ri, j) } else { S::ZERO });
                 }
             }
-            r.set(j, j, 0.0);
+            r.set(j, j, S::ZERO);
         }
     }
     t.stop(be.profile_mut());
@@ -208,12 +214,12 @@ pub fn cgs2_fallback<B: Backend + ?Sized>(
 
 /// Generate a random orthonormal q×b panel via the backend (paper Alg. 2
 /// step S1: random init + Alg. 4 orthonormalization).
-pub fn random_orthonormal_panel<B: Backend + ?Sized>(
+pub fn random_orthonormal_panel<S: Scalar, B: Backend<S> + ?Sized>(
     be: &mut B,
     rows: usize,
     b: usize,
     rng: &mut Rng,
-) -> Result<Mat> {
+) -> Result<Mat<S>> {
     let mut q = Mat::rand_centered_poisson(rows, b, rng);
     cholqr2(be, &mut q)?;
     Ok(q)

@@ -12,12 +12,17 @@ use crate::la::mat::Mat;
 use crate::la::svd::jacobi_svd;
 use crate::metrics::{Block, Timer};
 use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
 
 use super::cgs_qr::cgs_qr;
 use super::{InitDist, RandSvdOpts, TruncatedSvd};
 
-/// Run RandSVD on the backend's operand matrix.
-pub fn randsvd<B: Backend + ?Sized>(be: &mut B, opts: &RandSvdOpts) -> Result<TruncatedSvd> {
+/// Run RandSVD on the backend's operand matrix (any [`Scalar`]
+/// precision; the paper's GPU regime is `S = f32`).
+pub fn randsvd<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    opts: &RandSvdOpts,
+) -> Result<TruncatedSvd<S>> {
     let (m, n) = (be.m(), be.n());
     let RandSvdOpts { r, p, b, seed, init } = *opts;
     if r == 0 || r > n.min(m) {

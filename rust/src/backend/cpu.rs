@@ -15,17 +15,19 @@ use crate::la::blas3;
 use crate::la::mat::{Mat, MatRef};
 use crate::metrics::{Profile, Timer};
 use crate::sparse::csr::Csr;
+use crate::util::scalar::Scalar;
 
-/// Reference CPU backend.
-pub struct CpuBackend {
-    a: Operand,
+/// Reference CPU backend, generic over the element precision (default
+/// f64; `CpuBackend<f32>` is the paper's single-precision regime).
+pub struct CpuBackend<S: Scalar = f64> {
+    a: Operand<S>,
     /// Explicit-Aᵀ strategy state (adaptive by default).
-    at: AdaptiveTranspose,
+    at: AdaptiveTranspose<S>,
     profile: Profile,
 }
 
-impl CpuBackend {
-    pub fn new_sparse(a: Csr) -> CpuBackend {
+impl<S: Scalar> CpuBackend<S> {
+    pub fn new_sparse(a: Csr<S>) -> CpuBackend<S> {
         CpuBackend {
             a: Operand::Sparse(a),
             at: AdaptiveTranspose::from_env(),
@@ -33,7 +35,7 @@ impl CpuBackend {
         }
     }
 
-    pub fn new_dense(a: Mat) -> CpuBackend {
+    pub fn new_dense(a: Mat<S>) -> CpuBackend<S> {
         CpuBackend {
             a: Operand::Dense(a),
             at: AdaptiveTranspose::new(None),
@@ -41,7 +43,7 @@ impl CpuBackend {
         }
     }
 
-    pub fn new(a: Operand) -> CpuBackend {
+    pub fn new(a: Operand<S>) -> CpuBackend<S> {
         match a {
             Operand::Sparse(a) => CpuBackend::new_sparse(a),
             Operand::Dense(a) => CpuBackend::new_dense(a),
@@ -51,7 +53,7 @@ impl CpuBackend {
     /// Store an explicit transposed CSR copy *eagerly* and use
     /// gather-SpMM for every Aᵀ·X (paper §4.1.2: "explicitly storing a
     /// transposed copy of the sparse matrix"). No-op for dense operands.
-    pub fn with_explicit_transpose(mut self) -> CpuBackend {
+    pub fn with_explicit_transpose(mut self) -> CpuBackend<S> {
         if let Operand::Sparse(a) = &self.a {
             self.at = AdaptiveTranspose::with_built(a.transpose());
         }
@@ -60,24 +62,24 @@ impl CpuBackend {
 
     /// Disable the adaptive transpose: every Aᵀ·X stays on the scatter
     /// kernel (the ablation baseline).
-    pub fn scatter_only(mut self) -> CpuBackend {
+    pub fn scatter_only(mut self) -> CpuBackend<S> {
         self.at = AdaptiveTranspose::new(None);
         self
     }
 
     /// Override the adaptive threshold (number of scatter Aᵀ·X calls
     /// before the background transpose build starts).
-    pub fn with_adaptive_threshold(mut self, after: usize) -> CpuBackend {
+    pub fn with_adaptive_threshold(mut self, after: usize) -> CpuBackend<S> {
         self.at = AdaptiveTranspose::new(Some(after));
         self
     }
 
-    pub fn operand(&self) -> &Operand {
+    pub fn operand(&self) -> &Operand<S> {
         &self.a
     }
 }
 
-impl Backend for CpuBackend {
+impl<S: Scalar> Backend<S> for CpuBackend<S> {
     fn m(&self) -> usize {
         self.a.shape().0
     }
@@ -88,36 +90,36 @@ impl Backend for CpuBackend {
         self.a.nnz()
     }
 
-    fn apply_a(&mut self, x: MatRef) -> Mat {
+    fn apply_a(&mut self, x: MatRef<S>) -> Mat<S> {
         let t = Timer::start(self.mult_flops(x.cols));
         let mut y = Mat::zeros(self.m(), x.cols);
         let xo = x.to_owned();
         match &self.a {
             Operand::Sparse(a) => a.spmm(&xo, &mut y),
-            Operand::Dense(a) => blas3::gemm_nn(1.0, a.as_ref(), x, 0.0, &mut y),
+            Operand::Dense(a) => blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, &mut y),
         }
         t.stop(&mut self.profile);
         y
     }
 
-    fn apply_at(&mut self, x: MatRef) -> Mat {
+    fn apply_at(&mut self, x: MatRef<S>) -> Mat<S> {
         let t = Timer::start(self.mult_flops(x.cols));
         let mut y = Mat::zeros(self.n(), x.cols);
         match &self.a {
             Operand::Sparse(a) => {
                 let xo = x.to_owned();
-                match self.at.advance(a) {
+                match self.at.advance(a, x.cols) {
                     Some(at) => at.spmm(&xo, &mut y),
                     None => a.spmm_t(&xo, &mut y),
                 }
             }
-            Operand::Dense(a) => blas3::gemm_tn(1.0, a.as_ref(), x, 0.0, &mut y),
+            Operand::Dense(a) => blas3::gemm_tn(S::ONE, a.as_ref(), x, S::ZERO, &mut y),
         }
         t.stop(&mut self.profile);
         y
     }
 
-    fn gram(&mut self, q: MatRef) -> Mat {
+    fn gram(&mut self, q: MatRef<S>) -> Mat<S> {
         let flops = q.cols as f64 * q.cols as f64 * q.rows as f64; // syrk: b²q
         let t = Timer::start(flops);
         let w = blas3::gram(q);
@@ -125,34 +127,34 @@ impl Backend for CpuBackend {
         w
     }
 
-    fn proj(&mut self, p: MatRef, q: MatRef) -> Mat {
+    fn proj(&mut self, p: MatRef<S>, q: MatRef<S>) -> Mat<S> {
         let flops = 2.0 * p.rows as f64 * p.cols as f64 * q.cols as f64;
         let t = Timer::start(flops);
         let mut h = Mat::zeros(p.cols, q.cols);
-        blas3::gemm_tn(1.0, p, q, 0.0, &mut h);
+        blas3::gemm_tn(S::ONE, p, q, S::ZERO, &mut h);
         t.stop(&mut self.profile);
         h
     }
 
-    fn subtract_proj(&mut self, q: &mut Mat, p: MatRef, h: &Mat) {
+    fn subtract_proj(&mut self, q: &mut Mat<S>, p: MatRef<S>, h: &Mat<S>) {
         let flops = 2.0 * p.rows as f64 * p.cols as f64 * h.cols() as f64;
         let t = Timer::start(flops);
-        blas3::gemm_nn(-1.0, p, h.as_ref(), 1.0, q);
+        blas3::gemm_nn(-S::ONE, p, h.as_ref(), S::ONE, q);
         t.stop(&mut self.profile);
     }
 
-    fn tri_solve_right(&mut self, q: &mut Mat, l: &Mat) {
+    fn tri_solve_right(&mut self, q: &mut Mat<S>, l: &Mat<S>) {
         let flops = q.cols() as f64 * q.cols() as f64 * q.rows() as f64; // b²q
         let t = Timer::start(flops);
         blas3::trsm_right_lt(l, q);
         t.stop(&mut self.profile);
     }
 
-    fn gemm_nn(&mut self, a: MatRef, b: MatRef) -> Mat {
+    fn gemm_nn(&mut self, a: MatRef<S>, b: MatRef<S>) -> Mat<S> {
         let flops = 2.0 * a.rows as f64 * a.cols as f64 * b.cols as f64;
         let t = Timer::start(flops);
         let mut c = Mat::zeros(a.rows, b.cols);
-        blas3::gemm_nn(1.0, a, b, 0.0, &mut c);
+        blas3::gemm_nn(S::ONE, a, b, S::ZERO, &mut c);
         t.stop(&mut self.profile);
         c
     }

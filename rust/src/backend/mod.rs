@@ -20,9 +20,16 @@ pub mod xla;
 
 use crate::la::mat::{Mat, MatRef};
 use crate::metrics::Profile;
+use crate::util::scalar::Scalar;
 
 /// The device building-block set shared by both SVD algorithms.
-pub trait Backend {
+///
+/// Generic over the element precision `S` (default `f64`), so a bound of
+/// `B: Backend` keeps meaning the f64 op set while the algorithm drivers
+/// (`algo::{randsvd, lancsvd}`) are generic over `Backend<S>` and run
+/// end-to-end in either precision. The XLA backend implements `Backend`
+/// (f64) only; `CpuBackend<S>` covers both dtypes.
+pub trait Backend<S: Scalar = f64> {
     /// Problem row count (m).
     fn m(&self) -> usize;
     /// Problem column count (n).
@@ -31,25 +38,25 @@ pub trait Backend {
     fn nnz(&self) -> Option<usize>;
 
     /// Y = A · X  with X n×k (SpMM / GEMM).
-    fn apply_a(&mut self, x: MatRef) -> Mat;
+    fn apply_a(&mut self, x: MatRef<S>) -> Mat<S>;
     /// Y = Aᵀ · X  with X m×k (transposed SpMM / GEMM).
-    fn apply_at(&mut self, x: MatRef) -> Mat;
+    fn apply_at(&mut self, x: MatRef<S>) -> Mat<S>;
     /// W = QᵀQ (SYRK-shaped Gram product).
-    fn gram(&mut self, q: MatRef) -> Mat;
+    fn gram(&mut self, q: MatRef<S>) -> Mat<S>;
     /// H = PᵀQ (block-CGS projection).
-    fn proj(&mut self, p: MatRef, q: MatRef) -> Mat;
+    fn proj(&mut self, p: MatRef<S>, q: MatRef<S>) -> Mat<S>;
     /// Q ← Q − P·H (block-CGS update).
-    fn subtract_proj(&mut self, q: &mut Mat, p: MatRef, h: &Mat);
+    fn subtract_proj(&mut self, q: &mut Mat<S>, p: MatRef<S>, h: &Mat<S>);
     /// Q ← Q·L⁻ᵀ with L lower-triangular b×b (the TRSM of CholeskyQR2).
-    fn tri_solve_right(&mut self, q: &mut Mat, l: &Mat);
+    fn tri_solve_right(&mut self, q: &mut Mat<S>, l: &Mat<S>);
     /// C = A·B (the finalize GEMMs forming U_T / V_T and the restart).
-    fn gemm_nn(&mut self, a: MatRef, b: MatRef) -> Mat;
+    fn gemm_nn(&mut self, a: MatRef<S>, b: MatRef<S>) -> Mat<S>;
 
     /// CholeskyQR2 orthonormalization of a q×b panel (Alg. 4), returning
     /// R with `Q_in = Q_out·R`. The default composes the fine-grained ops
     /// with the host POTRF; the XLA backend overrides it with the fused
     /// AOT graph (falling back here on breakdown or unbucketable shapes).
-    fn orth_cholqr2(&mut self, q: &mut Mat) -> crate::error::Result<Mat> {
+    fn orth_cholqr2(&mut self, q: &mut Mat<S>) -> crate::error::Result<Mat<S>> {
         crate::algo::orth::cholqr2_host(self, q)
     }
 
@@ -58,9 +65,9 @@ pub trait Backend {
     /// semantics as for [`Backend::orth_cholqr2`].
     fn orth_cgs_cqr2(
         &mut self,
-        q: &mut Mat,
-        p: MatRef<'_>,
-    ) -> crate::error::Result<(Mat, Mat)> {
+        q: &mut Mat<S>,
+        p: MatRef<'_, S>,
+    ) -> crate::error::Result<(Mat<S>, Mat<S>)> {
         crate::algo::orth::cgs_cqr2_host(self, q, p)
     }
 
@@ -81,57 +88,101 @@ pub trait Backend {
     }
 }
 
+/// How many scatter Aᵀ·X calls to tolerate before building the explicit
+/// transposed copy.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum TransposeThreshold {
+    /// Never build (pure-scatter ablation baseline).
+    Disabled,
+    /// Build after exactly this many scatter calls (env / explicit
+    /// override).
+    Fixed(usize),
+    /// Resolve from the cost model on the first Aᵀ·X call (default):
+    /// [`crate::cost::adaptive_transpose_threshold`] estimates the
+    /// nnz-sweep crossover between repeated scatter and the one-time
+    /// build from the operand shape and the observed column-block width.
+    Auto,
+}
+
 /// Adaptive explicit-transpose cache for the sparse Aᵀ·X path.
 ///
 /// The paper mitigates the scatter SpMMᵀ bottleneck by "explicitly
 /// storing a transposed copy of the sparse matrix" (§4.1.2), trading
 /// nnz memory for gather-speed products. This helper makes that trade
-/// adaptive: after `after` scatter calls (default
-/// `TRUNKSVD_ADAPTIVE_SPMMT`, see [`AdaptiveTranspose::from_env`]) the
-/// transposed CSR copy is built on a background thread and adopted as
-/// soon as it is ready, so no Aᵀ·X call ever waits on the build. Both
+/// adaptive: after the threshold number of scatter calls — by default a
+/// per-matrix estimate from the cost model, overridable via the
+/// `TRUNKSVD_ADAPTIVE_SPMMT` env var (see [`AdaptiveTranspose::from_env`])
+/// — the transposed CSR copy is built on a background thread and adopted
+/// as soon as it is ready, so no Aᵀ·X call ever waits on the build. Both
 /// backends embed one; the ablation benches disable it (`new(None)`) to
 /// keep the pure-scatter baseline measurable.
-pub(crate) struct AdaptiveTranspose {
-    at: Option<crate::sparse::csr::Csr>,
-    pending: Option<std::thread::JoinHandle<crate::sparse::csr::Csr>>,
+pub(crate) struct AdaptiveTranspose<S: Scalar = f64> {
+    at: Option<crate::sparse::csr::Csr<S>>,
+    pending: Option<std::thread::JoinHandle<crate::sparse::csr::Csr<S>>>,
     calls: usize,
-    after: Option<usize>,
+    after: TransposeThreshold,
+    /// Cost-model estimate, cached on the first `advance` in Auto mode.
+    resolved: Option<usize>,
 }
 
-impl AdaptiveTranspose {
+impl<S: Scalar> AdaptiveTranspose<S> {
     /// `after` = number of scatter calls before the build starts;
     /// `None` disables the adaptive build (pure-scatter baseline).
-    pub fn new(after: Option<usize>) -> AdaptiveTranspose {
-        AdaptiveTranspose { at: None, pending: None, calls: 0, after }
+    pub fn new(after: Option<usize>) -> AdaptiveTranspose<S> {
+        let after = match after {
+            Some(n) => TransposeThreshold::Fixed(n),
+            None => TransposeThreshold::Disabled,
+        };
+        AdaptiveTranspose { at: None, pending: None, calls: 0, after, resolved: None }
     }
 
-    /// Threshold from `TRUNKSVD_ADAPTIVE_SPMMT` (default 4 scatter calls
-    /// — one LancSVD restart touches Aᵀ well past that, while one-shot
-    /// uses never pay the transpose).
-    pub fn from_env() -> AdaptiveTranspose {
-        let after = std::env::var("TRUNKSVD_ADAPTIVE_SPMMT")
+    /// Threshold policy: `TRUNKSVD_ADAPTIVE_SPMMT` (a fixed call count)
+    /// if set, otherwise the cost model's per-matrix crossover estimate
+    /// resolved lazily on the first Aᵀ·X call.
+    pub fn from_env() -> AdaptiveTranspose<S> {
+        let after = match std::env::var("TRUNKSVD_ADAPTIVE_SPMMT")
             .ok()
             .and_then(|s| s.parse::<usize>().ok())
-            .unwrap_or(4);
-        AdaptiveTranspose::new(Some(after))
+        {
+            Some(n) => TransposeThreshold::Fixed(n),
+            None => TransposeThreshold::Auto,
+        };
+        AdaptiveTranspose { at: None, pending: None, calls: 0, after, resolved: None }
     }
 
     /// Wrap an eagerly built transpose (the paper's always-on variant).
-    pub fn with_built(at: crate::sparse::csr::Csr) -> AdaptiveTranspose {
-        AdaptiveTranspose { at: Some(at), pending: None, calls: 0, after: None }
+    pub fn with_built(at: crate::sparse::csr::Csr<S>) -> AdaptiveTranspose<S> {
+        AdaptiveTranspose {
+            at: Some(at),
+            pending: None,
+            calls: 0,
+            after: TransposeThreshold::Disabled,
+            resolved: None,
+        }
     }
 
-    /// Record one Aᵀ·X call against operand `a`; returns the cached
-    /// transpose if it is available (caller then uses gather-SpMM).
-    pub fn advance(&mut self, a: &crate::sparse::csr::Csr) -> Option<&crate::sparse::csr::Csr> {
+    /// Record one Aᵀ·X call against operand `a` with a `k`-column dense
+    /// block; returns the cached transpose if it is available (caller
+    /// then uses gather-SpMM).
+    pub fn advance(
+        &mut self,
+        a: &crate::sparse::csr::Csr<S>,
+        k: usize,
+    ) -> Option<&crate::sparse::csr::Csr<S>> {
         if self.at.is_none() {
+            let threshold = match self.after {
+                TransposeThreshold::Disabled => None,
+                TransposeThreshold::Fixed(n) => Some(n),
+                TransposeThreshold::Auto => Some(*self.resolved.get_or_insert_with(|| {
+                    crate::cost::adaptive_transpose_threshold(a.rows(), a.cols(), a.nnz(), k)
+                })),
+            };
             if let Some(h) = &self.pending {
                 if h.is_finished() {
                     let h = self.pending.take().expect("pending checked above");
                     self.at = Some(h.join().expect("transpose builder panicked"));
                 }
-            } else if self.after.is_some_and(|n| self.calls >= n) {
+            } else if threshold.is_some_and(|n| self.calls >= n) {
                 let a = a.clone();
                 self.pending = Some(std::thread::spawn(move || a.transpose()));
             }
@@ -147,18 +198,18 @@ impl AdaptiveTranspose {
 
     /// Is the adaptive build enabled at all?
     pub fn enabled(&self) -> bool {
-        self.after.is_some() || self.at.is_some()
+        !matches!(self.after, TransposeThreshold::Disabled) || self.at.is_some()
     }
 }
 
 /// The operand matrix a backend is constructed around.
 #[derive(Clone, Debug)]
-pub enum Operand {
-    Sparse(crate::sparse::csr::Csr),
-    Dense(Mat),
+pub enum Operand<S: Scalar = f64> {
+    Sparse(crate::sparse::csr::Csr<S>),
+    Dense(Mat<S>),
 }
 
-impl Operand {
+impl<S: Scalar> Operand<S> {
     pub fn shape(&self) -> (usize, usize) {
         match self {
             Operand::Sparse(a) => (a.rows(), a.cols()),
@@ -169,6 +220,13 @@ impl Operand {
         match self {
             Operand::Sparse(a) => Some(a.nnz()),
             Operand::Dense(_) => None,
+        }
+    }
+    /// Copy into another element precision (the `--dtype` conversion).
+    pub fn cast<T: Scalar>(&self) -> Operand<T> {
+        match self {
+            Operand::Sparse(a) => Operand::Sparse(a.cast()),
+            Operand::Dense(a) => Operand::Dense(a.cast()),
         }
     }
 }

@@ -237,7 +237,7 @@ impl Backend for XlaBackend {
                 Operand::Sparse(a) => {
                     let xo = x.to_owned();
                     let mut y = Mat::zeros(a.cols(), x.cols);
-                    match self.at_cache.advance(a) {
+                    match self.at_cache.advance(a, x.cols) {
                         Some(at) => at.spmm(&xo, &mut y),
                         None => a.spmm_t(&xo, &mut y),
                     }

@@ -7,9 +7,11 @@
 //! trunksvd gen --name rel8 --out rel8.mtx
 //! trunksvd solve (--suite NAME | --mtx FILE | --dense M N) \
 //!                [--algo lanc|rand] [--r R] [--p P] [--b B] [--seed S] \
-//!                [--tol T] [--wanted K] [--backend cpu|cpu-scatter|cpu-expt|xla]
+//!                [--tol T] [--wanted K] [--dtype f32|f64] \
+//!                [--backend cpu|cpu-scatter|cpu-expt|xla]
 //! trunksvd experiment fig1|fig2|fig3|fig4|table1|table2|all \
-//!                [--subset N] [--shrink S] [--out DIR] [--backend ...]
+//!                [--subset N] [--shrink S] [--out DIR] [--dtype f32|f64] \
+//!                [--backend ...]
 //! ```
 
 use std::collections::HashMap;
@@ -25,6 +27,7 @@ use crate::gen::sparse::generate;
 use crate::gen::suite::Suite;
 use crate::metrics::Block;
 use crate::runtime::{default_artifact_dir, Runtime};
+use crate::util::scalar::DType;
 
 /// Parsed flags: positional args + `--key value` / `--flag` options.
 #[derive(Debug, Default)]
@@ -100,9 +103,9 @@ const USAGE: &str = "usage: trunksvd <info|suite|gen|solve|experiment> [options]
   solve --suite NAME | --mtx FILE | --dense M N
         [--algo lanc|rand] [--r R] [--p P] [--b B] [--seed S]
         [--tol T] [--wanted K] [--restart basic|thick] [--keep K]
-        [--backend cpu|cpu-scatter|cpu-expt|xla]
+        [--dtype f32|f64] [--backend cpu|cpu-scatter|cpu-expt|xla]
   experiment fig1|fig2|fig3|fig4|table1|table2|all
-        [--subset N] [--shrink S] [--out DIR] [--backend ...]";
+        [--subset N] [--shrink S] [--out DIR] [--dtype f32|f64] [--backend ...]";
 
 /// Run the CLI; returns the process exit code.
 pub fn main_with_args(argv: Vec<String>) -> i32 {
@@ -219,6 +222,13 @@ fn cmd_solve(args: &Args) -> Result<()> {
             })
         }
     };
+    let dtype = match args.get("dtype") {
+        None => suite.default_dtype,
+        Some(tag) => DType::parse(tag).ok_or(Error::Parse {
+            what: "cli",
+            detail: format!("unknown dtype '{tag}' (f32|f64)"),
+        })?,
+    };
     let params = Params {
         r: args.get_usize("r", if algo == Algo::Lanc { 256 } else { 16 })?,
         p: args.get_usize("p", if algo == Algo::Lanc { 2 } else { 96 })?,
@@ -227,6 +237,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
         tol: args.get_f64("tol")?,
         wanted: args.get_usize("wanted", 10)?,
         restart,
+        dtype,
     };
     let choice = backend_choice(args)?;
     let rep = run(&name, op, algo, &params, &choice)?;
@@ -255,11 +266,19 @@ fn cmd_solve(args: &Args) -> Result<()> {
 fn cmd_experiment(args: &Args) -> Result<()> {
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let suite = Suite::load_default()?;
+    let dtype = match args.get("dtype") {
+        None => suite.default_dtype,
+        Some(tag) => DType::parse(tag).ok_or(Error::Parse {
+            what: "cli",
+            detail: format!("unknown dtype '{tag}' (f32|f64)"),
+        })?,
+    };
     let o = ExpOpts {
         subset: args.get_usize("subset", 8)?,
         backend: backend_choice(args)?,
         out_dir: args.get("out").unwrap_or("reports").to_string(),
         shrink: args.get_usize("shrink", 1)?.max(1),
+        dtype,
     };
     let mut ran = false;
     for (id, f) in [
@@ -322,6 +341,21 @@ mod tests {
         assert_eq!(
             main_with_args(argv("solve --dense 600 --n 64 --algo lanc --r 32 --p 2 --wanted 5")),
             0
+        );
+    }
+
+    #[test]
+    fn solve_tiny_dense_f32() {
+        assert_eq!(
+            main_with_args(argv(
+                "solve --dense 400 --n 48 --algo lanc --r 16 --p 2 --wanted 4 --dtype f32"
+            )),
+            0
+        );
+        assert_eq!(
+            main_with_args(argv("solve --dense 100 --n 16 --dtype bf16")),
+            1,
+            "unknown dtype must be rejected"
         );
     }
 }

@@ -5,6 +5,7 @@
 //! under `reports/`. The benches in `benches/` are thin wrappers over
 //! these drivers so `cargo bench` reproduces every table and figure.
 
+use crate::util::scalar::DType;
 use crate::backend::Operand;
 use crate::cost::device::DeviceModel;
 use crate::cost::{self, Problem};
@@ -29,6 +30,9 @@ pub struct ExpOpts {
     /// Divide the paper's r (and dense sizes) by this extra factor for
     /// smoke runs; 1 = the scaled-paper configuration.
     pub shrink: usize,
+    /// Solve precision for every run (suite.json `"dtype"` default or
+    /// the `--dtype` flag).
+    pub dtype: DType,
 }
 
 impl Default for ExpOpts {
@@ -38,23 +42,26 @@ impl Default for ExpOpts {
             backend: BackendChoice::Cpu,
             out_dir: "reports".into(),
             shrink: 1,
+            dtype: DType::F64,
         }
     }
 }
 
-fn lanc_params(shrink: usize) -> Params {
-    Params { r: (256 / shrink).max(32), p: 2, b: 16, ..Default::default() }
+fn lanc_params(o: &ExpOpts) -> Params {
+    Params { r: (256 / o.shrink).max(32), p: 2, b: 16, dtype: o.dtype, ..Default::default() }
 }
 
 /// The three RandSVD configurations of Fig. 1 (§4.1.1).
-fn rand_configs(shrink: usize) -> Vec<(String, Params)> {
-    let r_big = (256 / shrink).max(32);
-    let p32 = (32 / shrink).max(4);
-    let p96 = (96 / shrink).max(12);
+fn rand_configs(o: &ExpOpts) -> Vec<(String, Params)> {
+    let r_big = (256 / o.shrink).max(32);
+    let p32 = (32 / o.shrink).max(4);
+    let p96 = (96 / o.shrink).max(12);
+    let d = o.dtype;
+    let cfg = |r: usize, p: usize| Params { r, p, b: 16, dtype: d, ..Default::default() };
     vec![
-        (format!("rand r={r_big} p=2"), Params { r: r_big, p: 2, b: 16, ..Default::default() }),
-        (format!("rand r=16 p={p32}"), Params { r: 16, p: p32, b: 16, ..Default::default() }),
-        (format!("rand r=16 p={p96}"), Params { r: 16, p: p96, b: 16, ..Default::default() }),
+        (format!("rand r={r_big} p=2"), cfg(r_big, 2)),
+        (format!("rand r=16 p={p32}"), cfg(16, p32)),
+        (format!("rand r=16 p={p96}"), cfg(16, p96)),
     ]
 }
 
@@ -69,7 +76,8 @@ pub fn fig1(suite: &Suite, o: &ExpOpts) -> Result<String> {
     let mut md = String::from("# Fig. 1 — accuracy on the sparse suite (scaled stand-ins)\n\n");
     for e in entries {
         let a = generate(&e.spec);
-        let lanc = run(&e.name, Operand::Sparse(a.clone()), Algo::Lanc, &lanc_params(o.shrink), &o.backend)?;
+        let lanc =
+            run(&e.name, Operand::Sparse(a.clone()), Algo::Lanc, &lanc_params(o), &o.backend)?;
         let mut cells = vec![
             e.name.clone(),
             e.spec.rows.to_string(),
@@ -78,7 +86,7 @@ pub fn fig1(suite: &Suite, o: &ExpOpts) -> Result<String> {
             sci(lanc.residuals[0]),
             sci(*lanc.residuals.last().unwrap()),
         ];
-        for (_, params) in rand_configs(o.shrink) {
+        for (_, params) in rand_configs(o) {
             let rep = run(&e.name, Operand::Sparse(a.clone()), Algo::Rand, &params, &o.backend)?;
             cells.push(sci(rep.residuals[0]));
             cells.push(sci(*rep.residuals.last().unwrap()));
@@ -105,12 +113,13 @@ pub fn fig2(suite: &Suite, o: &ExpOpts) -> Result<String> {
     ]);
     let mut md = String::from("# Fig. 2 — execution time and breakdown (sparse suite)\n\n");
     let p96 = (96 / o.shrink).max(12);
-    let rand_p = Params { r: 16, p: p96, b: 16, ..Default::default() };
+    let rand_p = Params { r: 16, p: p96, b: 16, dtype: o.dtype, ..Default::default() };
     let mut wins = 0usize;
     let mut total = 0usize;
     for e in entries {
         let a = generate(&e.spec);
-        let lanc = run(&e.name, Operand::Sparse(a.clone()), Algo::Lanc, &lanc_params(o.shrink), &o.backend)?;
+        let lanc =
+            run(&e.name, Operand::Sparse(a.clone()), Algo::Lanc, &lanc_params(o), &o.backend)?;
         let rand = run(&e.name, Operand::Sparse(a), Algo::Rand, &rand_p, &o.backend)?;
         let speedup = rand.secs / lanc.secs;
         // Model time on the paper's platform (kernel-rate asymmetry the
@@ -198,11 +207,12 @@ pub fn fig3(suite: &Suite, o: &ExpOpts) -> Result<String> {
 pub fn fig4(suite: &Suite, o: &ExpOpts) -> Result<String> {
     let mut t = Table::new(&["m", "config", "time s", "R1", "R5", "R10"]);
     let mut md = String::from("# Fig. 4 — dense synthetic problems (Eq. 15/16 spectrum)\n\n");
+    let cfg = |r: usize, p: usize| Params { r, p, b: 16, dtype: o.dtype, ..Default::default() };
     let configs: Vec<(Algo, String, Params)> = vec![
-        (Algo::Lanc, "lanc r=64 p=1".into(), Params { r: 64, p: 1, b: 16, ..Default::default() }),
-        (Algo::Lanc, "lanc r=64 p=4".into(), Params { r: 64, p: 4, b: 16, ..Default::default() }),
-        (Algo::Rand, "rand r=16 p=6".into(), Params { r: 16, p: 6, b: 16, ..Default::default() }),
-        (Algo::Rand, "rand r=16 p=24".into(), Params { r: 16, p: 24, b: 16, ..Default::default() }),
+        (Algo::Lanc, "lanc r=64 p=1".into(), cfg(64, 1)),
+        (Algo::Lanc, "lanc r=64 p=4".into(), cfg(64, 4)),
+        (Algo::Rand, "rand r=16 p=6".into(), cfg(16, 6)),
+        (Algo::Rand, "rand r=16 p=24".into(), cfg(16, 24)),
     ];
     for e in &suite.dense {
         let (m, n) = (e.rows / o.shrink, e.cols.min(e.rows / o.shrink));
@@ -246,8 +256,8 @@ pub fn table1(o: &ExpOpts) -> Result<String> {
     let mut md = String::from("# Table 1 — analytic cost model vs instrumented counters\n\n");
     let mut t = Table::new(&["algo", "block", "model GF", "measured GF", "ratio"]);
     let cases = [
-        (Algo::Lanc, Params { r: 64, p: 2, b: 16, ..Default::default() }),
-        (Algo::Rand, Params { r: 16, p: 8, b: 16, ..Default::default() }),
+        (Algo::Lanc, Params { r: 64, p: 2, b: 16, dtype: o.dtype, ..Default::default() }),
+        (Algo::Rand, Params { r: 16, p: 8, b: 16, dtype: o.dtype, ..Default::default() }),
     ];
     let mut worst: f64 = 1.0;
     for (algo, params) in cases {
@@ -321,6 +331,7 @@ mod tests {
                 .to_string_lossy()
                 .into_owned(),
             shrink: 8,
+            ..Default::default()
         }
     }
 

@@ -62,6 +62,50 @@ impl CostBreakdown {
     }
 }
 
+/// First-cut estimate of the adaptive-transpose crossover: after how many
+/// scatter `spmm_t` calls does building the explicit transposed CSR copy
+/// (paper §4.1.2) pay for itself?
+///
+/// Model (all costs in nnz-proportional memory sweeps, the right unit for
+/// these bandwidth-bound kernels):
+///
+/// * one scatter Aᵀ·X call costs ≈ `SCATTER_PENALTY` extra sweeps of the
+///   nnz stream per k-column group vs the gather kernel on the cached
+///   transpose (random writes into the n-length output columns defeat
+///   the write-combining the row-gather kernel gets for free);
+/// * the one-time transpose build costs ≈ `BUILD_SWEEPS` sweeps (parallel
+///   histogram + banded column fill, each re-scanning the index/value
+///   streams, plus the allocation traffic) — amortized further by the
+///   fact it runs on a background thread and only steals bandwidth;
+/// * wide-and-short matrices (cols ≫ rows) scatter into longer output
+///   columns with worse locality, captured by a mild aspect bump.
+///
+/// Crossover: `N · k · SCATTER_PENALTY ≥ BUILD_SWEEPS` ⇒
+/// `N ≈ BUILD_SWEEPS / (k · SCATTER_PENALTY)`, clamped to [1, 64] — with
+/// one nnz gate in front: operands whose value/index streams and output
+/// columns are cache-resident scatter as fast as they gather (the penalty
+/// model above is a DRAM-traffic argument), so the explicit copy would
+/// only pay memory rent; those stay on scatter (threshold pushed to the
+/// cap). The `TRUNKSVD_ADAPTIVE_SPMMT` env var still overrides the
+/// estimate (see `backend::AdaptiveTranspose`).
+pub fn adaptive_transpose_threshold(rows: usize, cols: usize, nnz: usize, k: usize) -> usize {
+    const BUILD_SWEEPS: f64 = 6.0;
+    const SCATTER_PENALTY: f64 = 1.0;
+    // Cache-residency gate: ~(nnz values + nnz indices + cols outputs)
+    // below a few hundred KiB means no DRAM round-trips to save.
+    if nnz.saturating_add(cols) < 32_768 {
+        return 64;
+    }
+    // Locality bump: scatter touches `cols` output cells per column; when
+    // the column space dwarfs the row count the scatter working set spills
+    // caches sooner, so the crossover comes earlier (divide the build
+    // sweeps over a larger per-call penalty).
+    let aspect = if rows > 0 && cols > 4 * rows { 2.0 } else { 1.0 };
+    let per_call = (k.max(1) as f64) * SCATTER_PENALTY * aspect;
+    let n = (BUILD_SWEEPS / per_call).ceil() as usize;
+    n.clamp(1, 64)
+}
+
 /// CA4: CholeskyQR2 on a q×b panel (Alg. 4).
 /// Two passes of: Gram (b²q) + POTRF (b³/3) + TRSM (b²q), plus the b³ TRMM.
 pub fn ca4(b: usize, q: usize) -> f64 {
@@ -150,6 +194,25 @@ mod tests {
     use super::*;
 
     const SP: Problem = Problem { m: 10_000, n: 4_000, nnz: Some(80_000) };
+
+    #[test]
+    fn adaptive_threshold_shape() {
+        // Wider column blocks amortize the build faster ⇒ lower threshold.
+        let t1 = adaptive_transpose_threshold(10_000, 4_000, 80_000, 1);
+        let t16 = adaptive_transpose_threshold(10_000, 4_000, 80_000, 16);
+        assert!(t16 <= t1, "k=16 {t16} vs k=1 {t1}");
+        assert!((1..=64).contains(&t1));
+        assert_eq!(t16, 1, "wide blocks should adopt almost immediately");
+        // Wide-and-short operands cross over no later than square ones.
+        let sq = adaptive_transpose_threshold(10_000, 10_000, 80_000, 2);
+        let wide = adaptive_transpose_threshold(512, 100_000, 80_000, 2);
+        assert!(wide <= sq, "wide {wide} vs square {sq}");
+        // Cache-resident operands never pay for the copy: threshold at cap.
+        assert_eq!(adaptive_transpose_threshold(500, 300, 9_000, 16), 64);
+        assert_eq!(adaptive_transpose_threshold(0, 0, 0, 0), 64);
+        // Degenerate k on a large operand stays sane.
+        assert!(adaptive_transpose_threshold(10, 10, 100_000, 0) >= 1);
+    }
 
     #[test]
     fn ca_functions_positive_and_monotone() {

@@ -8,6 +8,7 @@
 use crate::error::{Error, Result};
 use crate::gen::sparse::SparseSpec;
 use crate::util::json::{self, Json};
+use crate::util::scalar::DType;
 
 /// One sparse suite entry.
 #[derive(Clone, Debug)]
@@ -45,6 +46,9 @@ pub struct Suite {
     pub sparse: Vec<SparseEntry>,
     pub dense: Vec<DenseEntry>,
     pub buckets: Buckets,
+    /// Default solve precision for the experiment drivers (top-level
+    /// `"dtype"` key, default f64); overridable per run via `--dtype`.
+    pub default_dtype: DType,
 }
 
 /// Locate `config/suite.json`: `$TRUNKSVD_CONFIG`, then ./config, then the
@@ -126,7 +130,20 @@ impl Suite {
                 .collect(),
             b: req_usize(b, "b")?,
         };
-        Ok(Suite { sparse, dense, buckets })
+        let default_dtype = match doc.get("dtype") {
+            None => DType::F64,
+            Some(v) => {
+                let tag = v.as_str().ok_or(Error::Parse {
+                    what: "suite",
+                    detail: "field 'dtype' must be a string (f32|f64)".into(),
+                })?;
+                DType::parse(tag).ok_or(Error::Parse {
+                    what: "suite",
+                    detail: format!("unknown dtype '{tag}' (f32|f64)"),
+                })?
+            }
+        };
+        Ok(Suite { sparse, dense, buckets, default_dtype })
     }
 
     /// Look up a sparse entry by name.
@@ -177,6 +194,7 @@ mod tests {
         let s = Suite::load_default().unwrap();
         assert_eq!(s.sparse.len(), 46);
         assert_eq!(s.dense.len(), 4);
+        assert_eq!(s.default_dtype, DType::F64);
         assert_eq!(s.buckets.b, 16);
         assert!(s.buckets.s_buckets.contains(&256));
         // paper dims preserved

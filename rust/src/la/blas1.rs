@@ -1,14 +1,21 @@
 //! Level-1 vector kernels used across the building blocks.
+//!
+//! Generic over [`Scalar`] so the same kernels serve the f32 and f64
+//! substrates; accumulation happens in the element precision (the fp32
+//! path trades ~√n·ε_32 dot-product error for double the effective
+//! memory bandwidth, which the tolerance-driven stopping rules absorb).
+
+use crate::util::scalar::Scalar;
 
 /// Dot product.
 #[inline]
-pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+pub fn dot<S: Scalar>(x: &[S], y: &[S]) -> S {
     debug_assert_eq!(x.len(), y.len());
     // 4-way split accumulation: lets LLVM vectorize and improves the
     // rounding behaviour vs a single serial accumulator.
     let n = x.len();
     let n4 = n - n % 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let (mut s0, mut s1, mut s2, mut s3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
     let mut i = 0;
     while i < n4 {
         s0 += x[i] * y[i];
@@ -27,35 +34,36 @@ pub fn dot(x: &[f64], y: &[f64]) -> f64 {
 
 /// y += a * x
 #[inline]
-pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+pub fn axpy<S: Scalar>(a: S, x: &[S], y: &mut [S]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
+        *yi += a * *xi;
     }
 }
 
 /// x *= a
 #[inline]
-pub fn scal(a: f64, x: &mut [f64]) {
+pub fn scal<S: Scalar>(a: S, x: &mut [S]) {
     for xi in x.iter_mut() {
         *xi *= a;
     }
 }
 
 /// Euclidean norm with scaling against overflow/underflow.
-pub fn nrm2(x: &[f64]) -> f64 {
-    let amax = x.iter().fold(0.0f64, |m, v| m.max(v.abs()));
-    if amax == 0.0 || !amax.is_finite() {
+pub fn nrm2<S: Scalar>(x: &[S]) -> S {
+    let amax = x.iter().fold(S::ZERO, |m, v| m.max(v.abs()));
+    if amax == S::ZERO || !amax.is_finite() {
         return amax;
     }
-    // Fast path: comfortably inside the dynamic range.
-    if amax > 1e-140 && amax < 1e140 {
+    // Fast path: comfortably inside the dynamic range of S.
+    let (lo, hi) = S::safe_sq_range();
+    if amax > lo && amax < hi {
         return dot(x, x).sqrt();
     }
-    let inv = 1.0 / amax;
-    let mut s = 0.0;
+    let inv = S::ONE / amax;
+    let mut s = S::ZERO;
     for v in x {
-        let t = v * inv;
+        let t = *v * inv;
         s += t * t;
     }
     amax * s.sqrt()
@@ -91,6 +99,26 @@ mod tests {
         assert!((nrm2(&tiny) - expect).abs() / expect < 1e-12);
         let huge = vec![1e200, 1e200];
         assert!((nrm2(&huge) - 1e200 * 2.0f64.sqrt()).abs() / 1e200 < 1e-12);
-        assert_eq!(nrm2(&[]), 0.0);
+        assert_eq!(nrm2::<f64>(&[]), 0.0);
+    }
+
+    #[test]
+    fn f32_kernels_match_f64_to_f32_precision() {
+        let x64: Vec<f64> = (0..129).map(|i| ((i * 37 % 101) as f64 - 50.0) / 17.0).collect();
+        let y64: Vec<f64> = (0..129).map(|i| ((i * 11 % 97) as f64 - 48.0) / 13.0).collect();
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let y32: Vec<f32> = y64.iter().map(|&v| v as f32).collect();
+        let d64 = dot(&x64, &y64);
+        let d32 = dot(&x32, &y32) as f64;
+        assert!((d64 - d32).abs() < 1e-3 * d64.abs().max(1.0), "{d64} vs {d32}");
+        let n64 = nrm2(&x64);
+        let n32 = nrm2(&x32) as f64;
+        assert!((n64 - n32).abs() < 1e-4 * n64, "{n64} vs {n32}");
+        // f32 overflow guard: squares of 1e20 overflow f32, the scaled
+        // path must not.
+        let big = vec![1e20f32, 1e20f32];
+        let n = nrm2(&big);
+        assert!(n.is_finite());
+        assert!((n as f64 - 1e20 * 2.0f64.sqrt()).abs() / 1e20 < 1e-3);
     }
 }

@@ -19,6 +19,7 @@
 
 use super::mat::{Mat, MatRef};
 use crate::util::pool::{parallel_chunks_mut, parallel_reduce};
+use crate::util::scalar::Scalar;
 
 /// C = alpha * A * B + beta * C, with A: m×k, B: k×n, C: m×n.
 ///
@@ -27,7 +28,7 @@ use crate::util::pool::{parallel_chunks_mut, parallel_reduce};
 /// column-at-a-time kernel — the panel shapes here (n ≤ 16, k ≤ 512,
 /// m huge) are memory-bound on A. (§Perf: 4.2 → ~9 GF/s on the
 /// m=32768 orthogonalization panels.)
-pub fn gemm_nn(alpha: f64, a: MatRef, b: MatRef, beta: f64, c: &mut Mat) {
+pub fn gemm_nn<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, beta: S, c: &mut Mat<S>) {
     let (m, k) = (a.rows, a.cols);
     let n = b.cols;
     assert_eq!(b.rows, k, "gemm_nn inner dim");
@@ -41,9 +42,9 @@ pub fn gemm_nn(alpha: f64, a: MatRef, b: MatRef, beta: f64, c: &mut Mat) {
     parallel_chunks_mut(c.data_mut(), 4 * cm, |jg, cg| {
         let j0 = 4 * jg;
         let njb = cg.len() / cm; // 1..=4 columns in this group
-        if beta == 0.0 {
-            cg.fill(0.0);
-        } else if beta != 1.0 {
+        if beta == S::ZERO {
+            cg.fill(S::ZERO);
+        } else if beta != S::ONE {
             for x in cg.iter_mut() {
                 *x *= beta;
             }
@@ -139,7 +140,7 @@ pub fn gemm_nn(alpha: f64, a: MatRef, b: MatRef, beta: f64, c: &mut Mat) {
 /// streamed (A², B⁴) load pair feeds 8 FMAs, and B is streamed m/2 times
 /// instead of m — the projection H = PᵀQ here has m ≤ 256, n ≤ 16 with
 /// huge q, so traffic on the tall operands dominates. (§Perf log.)
-pub fn gemm_tn(alpha: f64, a: MatRef, b: MatRef, beta: f64, c: &mut Mat) {
+pub fn gemm_tn<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, beta: S, c: &mut Mat<S>) {
     let (q, m) = (a.rows, a.cols);
     let n = b.cols;
     assert_eq!(b.rows, q, "gemm_tn inner dim");
@@ -155,9 +156,9 @@ pub fn gemm_tn(alpha: f64, a: MatRef, b: MatRef, beta: f64, c: &mut Mat) {
         let j0 = 4 * jg;
         let njb = cg.len() / cm;
         // zero/scale the output group once; accumulate over row tiles.
-        if beta == 0.0 {
-            cg.fill(0.0);
-        } else if beta != 1.0 {
+        if beta == S::ZERO {
+            cg.fill(S::ZERO);
+        } else if beta != S::ONE {
             for x in cg.iter_mut() {
                 *x *= beta;
             }
@@ -168,7 +169,7 @@ pub fn gemm_tn(alpha: f64, a: MatRef, b: MatRef, beta: f64, c: &mut Mat) {
             let mut i = 0;
             while i < m {
                 let ni = (m - i).min(4);
-                let mut acc = [[0.0f64; 4]; 4];
+                let mut acc = [[S::ZERO; 4]; 4];
                 let a0 = &a.col(i)[t0..t0 + tl];
                 let a1 = if ni >= 2 { &a.col(i + 1)[t0..t0 + tl] } else { a0 };
                 let a2 = if ni >= 3 { &a.col(i + 2)[t0..t0 + tl] } else { a0 };
@@ -218,7 +219,7 @@ pub fn gemm_tn(alpha: f64, a: MatRef, b: MatRef, beta: f64, c: &mut Mat) {
                     for jj in 0..njb {
                         let bj = &b.col(j0 + jj)[t0..t0 + tl];
                         for (ii, av) in cols.iter().enumerate().take(ni) {
-                            let mut s0 = 0.0;
+                            let mut s0 = S::ZERO;
                             for t in 0..tl {
                                 s0 += av[t] * bj[t];
                             }
@@ -248,7 +249,7 @@ pub fn gemm_tn(alpha: f64, a: MatRef, b: MatRef, beta: f64, c: &mut Mat) {
 /// the tile from L1/L2, not RAM) and accumulates into a private b×b
 /// upper triangle. The partials are summed in the reduction and the
 /// triangle is mirrored once at the end.
-pub fn gram(q: MatRef) -> Mat {
+pub fn gram<S: Scalar>(q: MatRef<S>) -> Mat<S> {
     let (rows, b) = (q.rows, q.cols);
     let mut w = Mat::zeros(b, b);
     if b == 0 {
@@ -258,9 +259,9 @@ pub fn gram(q: MatRef) -> Mat {
     const TILE: usize = 256;
     let acc = parallel_reduce(
         rows,
-        vec![0.0f64; b * b],
+        vec![S::ZERO; b * b],
         |lo, hi| {
-            let mut acc = vec![0.0f64; b * b];
+            let mut acc = vec![S::ZERO; b * b];
             let mut t0 = lo;
             while t0 < hi {
                 let tl = TILE.min(hi - t0);
@@ -271,7 +272,7 @@ pub fn gram(q: MatRef) -> Mat {
                     while i + 1 <= j {
                         let qi0 = &q.col(i)[t0..t0 + tl];
                         let qi1 = &q.col(i + 1)[t0..t0 + tl];
-                        let (mut s0, mut s1) = (0.0, 0.0);
+                        let (mut s0, mut s1) = (S::ZERO, S::ZERO);
                         for t in 0..tl {
                             let x = qj[t];
                             s0 += qi0[t] * x;
@@ -283,7 +284,7 @@ pub fn gram(q: MatRef) -> Mat {
                     }
                     if i <= j {
                         let qi = &q.col(i)[t0..t0 + tl];
-                        let mut s = 0.0;
+                        let mut s = S::ZERO;
                         for t in 0..tl {
                             s += qi[t] * qj[t];
                         }
@@ -296,7 +297,7 @@ pub fn gram(q: MatRef) -> Mat {
         },
         |mut a, b_part| {
             for (x, y) in a.iter_mut().zip(&b_part) {
-                *x += y;
+                *x += *y;
             }
             a
         },
@@ -314,7 +315,7 @@ pub fn gram(q: MatRef) -> Mat {
 /// Q ← Q · L⁻ᵀ with L lower-triangular b×b (right-side TRSM of Alg. 4
 /// steps S3/S6). Column-recurrence on the upper-triangular U = Lᵀ:
 /// X[:,j] = (Q[:,j] − Σ_{i<j} X[:,i]·U[i,j]) / U[j,j],  U[i,j] = L[j,i].
-pub fn trsm_right_lt(l: &Mat, q: &mut Mat) {
+pub fn trsm_right_lt<S: Scalar>(l: &Mat<S>, q: &mut Mat<S>) {
     let b = l.rows();
     assert_eq!(l.cols(), b, "trsm L square");
     assert_eq!(q.cols(), b, "trsm panel cols");
@@ -323,28 +324,28 @@ pub fn trsm_right_lt(l: &Mat, q: &mut Mat) {
         // subtract contributions of already-solved columns
         for i in 0..j {
             let u_ij = l.at(j, i);
-            if u_ij != 0.0 {
+            if u_ij != S::ZERO {
                 let (head, tail) = q.data_mut().split_at_mut(j * rows);
                 let xi = &head[i * rows..(i + 1) * rows];
                 let xj = &mut tail[..rows];
                 super::blas1::axpy(-u_ij, xi, xj);
             }
         }
-        let inv = 1.0 / l.at(j, j);
+        let inv = S::ONE / l.at(j, j);
         super::blas1::scal(inv, q.col_mut(j));
     }
 }
 
 /// R = Lᵀ · L̄ᵀ for lower-triangular L, L̄ (b×b). This is the tiny TRMM of
 /// Alg. 4 step S7 / Alg. 5 step S11; the result is upper triangular.
-pub fn trmm_lt_lt(l: &Mat, lbar: &Mat) -> Mat {
+pub fn trmm_lt_lt<S: Scalar>(l: &Mat<S>, lbar: &Mat<S>) -> Mat<S> {
     let b = l.rows();
     assert_eq!(lbar.rows(), b);
     let mut r = Mat::zeros(b, b);
     // R[i,j] = Σ_t Lᵀ[i,t] · L̄ᵀ[t,j] = Σ_t L[t,i] · L̄[j,t]; nonzero for t in [max(i, ...), ..].
     for j in 0..b {
         for i in 0..=j {
-            let mut s = 0.0;
+            let mut s = S::ZERO;
             for t in i..=j {
                 s += l.at(t, i) * lbar.at(j, t);
             }
@@ -355,16 +356,16 @@ pub fn trmm_lt_lt(l: &Mat, lbar: &Mat) -> Mat {
 }
 
 /// Convenience: C = AᵀB as an owned matrix.
-pub fn mat_tn(a: &Mat, b: &Mat) -> Mat {
+pub fn mat_tn<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
     let mut c = Mat::zeros(a.cols(), b.cols());
-    gemm_tn(1.0, a.as_ref(), b.as_ref(), 0.0, &mut c);
+    gemm_tn(S::ONE, a.as_ref(), b.as_ref(), S::ZERO, &mut c);
     c
 }
 
 /// Convenience: C = A·B as an owned matrix.
-pub fn mat_nn(a: &Mat, b: &Mat) -> Mat {
+pub fn mat_nn<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
     let mut c = Mat::zeros(a.rows(), b.cols());
-    gemm_nn(1.0, a.as_ref(), b.as_ref(), 0.0, &mut c);
+    gemm_nn(S::ONE, a.as_ref(), b.as_ref(), S::ZERO, &mut c);
     c
 }
 

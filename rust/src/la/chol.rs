@@ -8,32 +8,34 @@
 
 use super::mat::Mat;
 use crate::error::{Error, Result};
+use crate::util::scalar::Scalar;
 
 /// Unblocked lower Cholesky: A = L·Lᵀ; returns L (strictly lower + diag),
 /// upper triangle zeroed. Errors with `CholeskyBreakdown` on a
 /// non-positive pivot.
-pub fn potrf_unblocked(a: &Mat) -> Result<Mat> {
+pub fn potrf_unblocked<S: Scalar>(a: &Mat<S>) -> Result<Mat<S>> {
     let n = a.rows();
     assert_eq!(a.cols(), n, "potrf needs square input");
     let mut l = a.clone();
     for j in 0..n {
-        // diagonal
+        // diagonal — fused multiply-add keeps the pivot accumulation at
+        // one rounding per term, which is what decides breakdown at f32
         let mut d = l.at(j, j);
         for k in 0..j {
             let v = l.at(j, k);
-            d -= v * v;
+            d = v.mul_add(-v, d);
         }
-        if d <= 0.0 || !d.is_finite() {
-            return Err(Error::CholeskyBreakdown { pivot: j, value: d });
+        if d <= S::ZERO || !d.is_finite() {
+            return Err(Error::CholeskyBreakdown { pivot: j, value: d.to_f64() });
         }
         let djj = d.sqrt();
         l.set(j, j, djj);
-        let inv = 1.0 / djj;
+        let inv = S::ONE / djj;
         // column update below the diagonal
         for i in (j + 1)..n {
             let mut s = l.at(i, j);
             for k in 0..j {
-                s -= l.at(i, k) * l.at(j, k);
+                s = l.at(i, k).mul_add(-l.at(j, k), s);
             }
             l.set(i, j, s * inv);
         }
@@ -41,7 +43,7 @@ pub fn potrf_unblocked(a: &Mat) -> Result<Mat> {
     // zero the upper triangle
     for j in 1..n {
         for i in 0..j {
-            l.set(i, j, 0.0);
+            l.set(i, j, S::ZERO);
         }
     }
     Ok(l)
@@ -49,7 +51,7 @@ pub fn potrf_unblocked(a: &Mat) -> Result<Mat> {
 
 /// Blocked right-looking lower Cholesky with panel width `nb`.
 /// Identical contract to [`potrf_unblocked`].
-pub fn potrf_blocked(a: &Mat, nb: usize) -> Result<Mat> {
+pub fn potrf_blocked<S: Scalar>(a: &Mat<S>, nb: usize) -> Result<Mat<S>> {
     let n = a.rows();
     if n <= nb {
         return potrf_unblocked(a);
@@ -98,14 +100,14 @@ pub fn potrf_blocked(a: &Mat, nb: usize) -> Result<Mat> {
     }
     for j in 1..n {
         for i in 0..j {
-            l.set(i, j, 0.0);
+            l.set(i, j, S::ZERO);
         }
     }
     Ok(l)
 }
 
 /// Default entry point: blocked for n > 64.
-pub fn potrf(a: &Mat) -> Result<Mat> {
+pub fn potrf<S: Scalar>(a: &Mat<S>) -> Result<Mat<S>> {
     if a.rows() > 64 {
         potrf_blocked(a, 32)
     } else {
@@ -153,7 +155,7 @@ mod tests {
     fn breakdown_detected_with_pivot_index() {
         // Rank-deficient: Gram of a matrix with a repeated column.
         let mut rng = Rng::new(9);
-        let mut g = Mat::randn(10, 4, &mut rng);
+        let mut g: Mat<f64> = Mat::randn(10, 4, &mut rng);
         let c0 = g.col(0).to_vec();
         g.col_mut(2).copy_from_slice(&c0);
         let w = mat_tn(&g, &g);

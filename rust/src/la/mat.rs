@@ -1,38 +1,56 @@
-//! Column-major dense matrix type.
+//! Column-major dense matrix type, generic over the element precision.
 //!
 //! Column-major is the natural layout for the paper's algorithms: every
 //! building block (CGS projections, CholeskyQR, Lanczos bases) operates on
 //! *column panels*, which are contiguous sub-slices in this layout, so
 //! panel views are zero-copy.
+//!
+//! ## The `Scalar` abstraction
+//!
+//! [`Mat<S>`] is generic over [`Scalar`] (`f32` or `f64`) with **`f64` as
+//! the default type parameter**, so `Mat` written bare in type positions
+//! means `Mat<f64>` and the f64-only layers (the XLA backend, MatrixMarket
+//! I/O defaults, the generators) compile unchanged. The GPU experiments in
+//! the paper run in single precision; the fp32 instantiation halves the
+//! element width of every memory-bound kernel (SpMM, SYRK, CholeskyQR2)
+//! and is selected at runtime via `--dtype f32` (see
+//! `coordinator::driver`). Precision boundaries:
+//!
+//! * element data is `S`; shapes/indices stay `usize`/`u32`;
+//! * norms and diagnostics return `S` (callers converting into reports go
+//!   through `Scalar::to_f64`);
+//! * [`Mat::cast`] is the explicit dtype conversion (rounds via f64).
 
 use crate::error::{shape_err, Result};
 use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
 
-/// Dense f64 matrix, column-major: element (i, j) is `data[j * rows + i]`.
+/// Dense matrix, column-major: element (i, j) is `data[j * rows + i]`.
+/// `S` is the element precision (default `f64`).
 #[derive(Clone, Debug, PartialEq)]
-pub struct Mat {
+pub struct Mat<S: Scalar = f64> {
     rows: usize,
     cols: usize,
-    data: Vec<f64>,
+    data: Vec<S>,
 }
 
-impl Mat {
+impl<S: Scalar> Mat<S> {
     /// Zero matrix of the given shape.
-    pub fn zeros(rows: usize, cols: usize) -> Mat {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    pub fn zeros(rows: usize, cols: usize) -> Mat<S> {
+        Mat { rows, cols, data: vec![S::ZERO; rows * cols] }
     }
 
     /// Identity (or rectangular identity) matrix.
-    pub fn eye(n: usize) -> Mat {
+    pub fn eye(n: usize) -> Mat<S> {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
-            m.data[i * n + i] = 1.0;
+            m.data[i * n + i] = S::ONE;
         }
         m
     }
 
     /// Build from a closure over (row, col).
-    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f64) -> Mat {
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> S) -> Mat<S> {
         let mut data = Vec::with_capacity(rows * cols);
         for j in 0..cols {
             for i in 0..rows {
@@ -43,7 +61,7 @@ impl Mat {
     }
 
     /// Wrap an existing column-major buffer.
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Mat> {
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<S>) -> Result<Mat<S>> {
         if data.len() != rows * cols {
             return Err(shape_err(
                 "from_vec",
@@ -53,18 +71,28 @@ impl Mat {
         Ok(Mat { rows, cols, data })
     }
 
-    /// Standard-normal random matrix.
-    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    /// Standard-normal random matrix (drawn from the shared f64 stream
+    /// and rounded to `S`; see `Rng::fill_normal`).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat<S> {
         let mut m = Mat::zeros(rows, cols);
         rng.fill_normal(&mut m.data);
         m
     }
 
     /// Centered-Poisson random matrix (paper's cuRAND init distribution).
-    pub fn rand_centered_poisson(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    pub fn rand_centered_poisson(rows: usize, cols: usize, rng: &mut Rng) -> Mat<S> {
         let mut m = Mat::zeros(rows, cols);
         rng.fill_centered_poisson(&mut m.data);
         m
+    }
+
+    /// Copy into another element precision (values round through f64).
+    pub fn cast<T: Scalar>(&self) -> Mat<T> {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| T::from_f64(v.to_f64())).collect(),
+        }
     }
 
     #[inline]
@@ -76,46 +104,46 @@ impl Mat {
         self.cols
     }
     #[inline]
-    pub fn data(&self) -> &[f64] {
+    pub fn data(&self) -> &[S] {
         &self.data
     }
     #[inline]
-    pub fn data_mut(&mut self) -> &mut [f64] {
+    pub fn data_mut(&mut self) -> &mut [S] {
         &mut self.data
     }
 
     #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> S {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[j * self.rows + i]
     }
 
     #[inline]
-    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+    pub fn set(&mut self, i: usize, j: usize, v: S) {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[j * self.rows + i] = v;
     }
 
     #[inline]
-    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+    pub fn add_at(&mut self, i: usize, j: usize, v: S) {
         debug_assert!(i < self.rows && j < self.cols);
         self.data[j * self.rows + i] += v;
     }
 
     /// Contiguous view of column `j`.
     #[inline]
-    pub fn col(&self, j: usize) -> &[f64] {
+    pub fn col(&self, j: usize) -> &[S] {
         &self.data[j * self.rows..(j + 1) * self.rows]
     }
 
     /// Mutable view of column `j`.
     #[inline]
-    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+    pub fn col_mut(&mut self, j: usize) -> &mut [S] {
         &mut self.data[j * self.rows..(j + 1) * self.rows]
     }
 
     /// Zero-copy read view of the column panel [j0, j0+k).
-    pub fn panel(&self, j0: usize, k: usize) -> MatRef<'_> {
+    pub fn panel(&self, j0: usize, k: usize) -> MatRef<'_, S> {
         assert!(j0 + k <= self.cols, "panel out of range");
         MatRef {
             rows: self.rows,
@@ -125,7 +153,7 @@ impl Mat {
     }
 
     /// Zero-copy mutable view of the column panel [j0, j0+k).
-    pub fn panel_mut(&mut self, j0: usize, k: usize) -> MatMut<'_> {
+    pub fn panel_mut(&mut self, j0: usize, k: usize) -> MatMut<'_, S> {
         assert!(j0 + k <= self.cols, "panel out of range");
         let rows = self.rows;
         MatMut {
@@ -136,17 +164,17 @@ impl Mat {
     }
 
     /// Whole-matrix read view.
-    pub fn as_ref(&self) -> MatRef<'_> {
+    pub fn as_ref(&self) -> MatRef<'_, S> {
         MatRef { rows: self.rows, cols: self.cols, data: &self.data }
     }
 
     /// Whole-matrix mutable view.
-    pub fn as_mut(&mut self) -> MatMut<'_> {
+    pub fn as_mut(&mut self) -> MatMut<'_, S> {
         MatMut { rows: self.rows, cols: self.cols, data: &mut self.data }
     }
 
     /// Copy of the column panel [j0, j0+k) as an owned matrix.
-    pub fn panel_owned(&self, j0: usize, k: usize) -> Mat {
+    pub fn panel_owned(&self, j0: usize, k: usize) -> Mat<S> {
         Mat {
             rows: self.rows,
             cols: k,
@@ -155,7 +183,7 @@ impl Mat {
     }
 
     /// Overwrite the column panel [j0, j0+k) from `src` (same rows).
-    pub fn set_panel(&mut self, j0: usize, src: &Mat) {
+    pub fn set_panel(&mut self, j0: usize, src: &Mat<S>) {
         assert_eq!(self.rows, src.rows, "set_panel rows");
         assert!(j0 + src.cols <= self.cols, "set_panel range");
         let dst = &mut self.data[j0 * self.rows..(j0 + src.cols) * self.rows];
@@ -163,27 +191,27 @@ impl Mat {
     }
 
     /// Explicit transpose (used by tests and small matrices only).
-    pub fn transpose(&self) -> Mat {
+    pub fn transpose(&self) -> Mat<S> {
         Mat::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
     }
 
     /// Frobenius norm.
-    pub fn fro_norm(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    pub fn fro_norm(&self) -> S {
+        self.data.iter().map(|x| *x * *x).sum::<S>().sqrt()
     }
 
     /// max |a_ij - b_ij|
-    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+    pub fn max_abs_diff(&self, other: &Mat<S>) -> S {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
             .iter()
             .zip(&other.data)
-            .map(|(a, b)| (a - b).abs())
-            .fold(0.0, f64::max)
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(S::ZERO, S::max)
     }
 
     /// Horizontal concatenation [A | B].
-    pub fn hcat(&self, other: &Mat) -> Mat {
+    pub fn hcat(&self, other: &Mat<S>) -> Mat<S> {
         assert_eq!(self.rows, other.rows, "hcat rows");
         let mut data = Vec::with_capacity(self.data.len() + other.data.len());
         data.extend_from_slice(&self.data);
@@ -192,7 +220,7 @@ impl Mat {
     }
 
     /// In-place scale.
-    pub fn scale(&mut self, a: f64) {
+    pub fn scale(&mut self, a: S) {
         for x in &mut self.data {
             *x *= a;
         }
@@ -201,26 +229,26 @@ impl Mat {
 
 /// Borrowed read-only column-major view (contiguous, leading dim == rows).
 #[derive(Clone, Copy, Debug)]
-pub struct MatRef<'a> {
+pub struct MatRef<'a, S: Scalar = f64> {
     pub rows: usize,
     pub cols: usize,
-    pub data: &'a [f64],
+    pub data: &'a [S],
 }
 
-impl<'a> MatRef<'a> {
+impl<'a, S: Scalar> MatRef<'a, S> {
     #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> S {
         self.data[j * self.rows + i]
     }
     #[inline]
-    pub fn col(&self, j: usize) -> &[f64] {
+    pub fn col(&self, j: usize) -> &[S] {
         &self.data[j * self.rows..(j + 1) * self.rows]
     }
-    pub fn to_owned(&self) -> Mat {
+    pub fn to_owned(&self) -> Mat<S> {
         Mat { rows: self.rows, cols: self.cols, data: self.data.to_vec() }
     }
     /// Sub-panel of this view.
-    pub fn panel(&self, j0: usize, k: usize) -> MatRef<'a> {
+    pub fn panel(&self, j0: usize, k: usize) -> MatRef<'a, S> {
         assert!(j0 + k <= self.cols);
         MatRef {
             rows: self.rows,
@@ -232,29 +260,29 @@ impl<'a> MatRef<'a> {
 
 /// Borrowed mutable column-major view (contiguous, leading dim == rows).
 #[derive(Debug)]
-pub struct MatMut<'a> {
+pub struct MatMut<'a, S: Scalar = f64> {
     pub rows: usize,
     pub cols: usize,
-    pub data: &'a mut [f64],
+    pub data: &'a mut [S],
 }
 
-impl<'a> MatMut<'a> {
+impl<'a, S: Scalar> MatMut<'a, S> {
     #[inline]
-    pub fn at(&self, i: usize, j: usize) -> f64 {
+    pub fn at(&self, i: usize, j: usize) -> S {
         self.data[j * self.rows + i]
     }
     #[inline]
-    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+    pub fn set(&mut self, i: usize, j: usize, v: S) {
         self.data[j * self.rows + i] = v;
     }
     #[inline]
-    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+    pub fn col_mut(&mut self, j: usize) -> &mut [S] {
         &mut self.data[j * self.rows..(j + 1) * self.rows]
     }
-    pub fn as_ref(&self) -> MatRef<'_> {
+    pub fn as_ref(&self) -> MatRef<'_, S> {
         MatRef { rows: self.rows, cols: self.cols, data: self.data }
     }
-    pub fn reborrow(&mut self) -> MatMut<'_> {
+    pub fn reborrow(&mut self) -> MatMut<'_, S> {
         MatMut { rows: self.rows, cols: self.cols, data: self.data }
     }
 }
@@ -282,7 +310,7 @@ mod tests {
 
     #[test]
     fn set_panel_roundtrip() {
-        let mut m = Mat::zeros(3, 4);
+        let mut m = Mat::<f64>::zeros(3, 4);
         let src = Mat::from_fn(3, 2, |i, j| 1.0 + (i + j) as f64);
         m.set_panel(2, &src);
         assert_eq!(m.panel_owned(2, 2), src);
@@ -294,14 +322,14 @@ mod tests {
         let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
         let t = m.transpose();
         assert_eq!(t.at(2, 1), m.at(1, 2));
-        let i3 = Mat::eye(3);
+        let i3 = Mat::<f64>::eye(3);
         assert_eq!(i3.at(1, 1), 1.0);
         assert_eq!(i3.at(0, 1), 0.0);
     }
 
     #[test]
     fn hcat_shapes() {
-        let a = Mat::zeros(3, 2);
+        let a = Mat::<f64>::zeros(3, 2);
         let b = Mat::from_fn(3, 1, |_, _| 5.0);
         let c = a.hcat(&b);
         assert_eq!((c.rows(), c.cols()), (3, 3));
@@ -310,7 +338,27 @@ mod tests {
 
     #[test]
     fn from_vec_checks_len() {
-        assert!(Mat::from_vec(2, 2, vec![0.0; 3]).is_err());
-        assert!(Mat::from_vec(2, 2, vec![0.0; 4]).is_ok());
+        assert!(Mat::from_vec(2, 2, vec![0.0f64; 3]).is_err());
+        assert!(Mat::from_vec(2, 2, vec![0.0f64; 4]).is_ok());
+    }
+
+    #[test]
+    fn f32_instantiation_and_cast() {
+        let m64 = Mat::from_fn(3, 2, |i, j| (i as f64 + 0.5) * (j as f64 + 1.0));
+        let m32: Mat<f32> = m64.cast();
+        assert_eq!((m32.rows(), m32.cols()), (3, 2));
+        for j in 0..2 {
+            for i in 0..3 {
+                assert_eq!(m32.at(i, j), m64.at(i, j) as f32, "({i},{j})");
+            }
+        }
+        // Round-trip back to f64 carries only f32 rounding.
+        let back: Mat<f64> = m32.cast();
+        assert!(back.max_abs_diff(&m64) <= f32::EPSILON as f64 * 4.0);
+        // Basic ops work at f32.
+        let z = Mat::<f32>::zeros(4, 4);
+        assert_eq!(z.fro_norm(), 0.0f32);
+        let e = Mat::<f32>::eye(2);
+        assert_eq!(e.at(0, 0), 1.0f32);
     }
 }

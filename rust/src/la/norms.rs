@@ -4,41 +4,42 @@ use super::blas1::nrm2;
 use super::blas3::{gram, mat_nn};
 use super::mat::Mat;
 use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
 
 /// ‖QᵀQ − I‖_F — the orthogonality defect used throughout the tests and
 /// the CholeskyQR2 quality checks.
-pub fn orth_error(q: &Mat) -> f64 {
+pub fn orth_error<S: Scalar>(q: &Mat<S>) -> f64 {
     let w = gram(q.as_ref());
     let n = q.cols();
-    let mut s = 0.0;
+    let mut s = S::ZERO;
     for j in 0..n {
         for i in 0..n {
-            let d = w.at(i, j) - if i == j { 1.0 } else { 0.0 };
+            let d = w.at(i, j) - if i == j { S::ONE } else { S::ZERO };
             s += d * d;
         }
     }
-    s.sqrt()
+    s.sqrt().to_f64()
 }
 
 /// Spectral-norm estimate of a dense matrix via power iteration on AᵀA.
-pub fn spectral_norm_est(a: &Mat, iters: usize, seed: u64) -> f64 {
+pub fn spectral_norm_est<S: Scalar>(a: &Mat<S>, iters: usize, seed: u64) -> f64 {
     let n = a.cols();
     let mut rng = Rng::new(seed);
-    let mut v = Mat::randn(n, 1, &mut rng);
+    let mut v: Mat<S> = Mat::randn(n, 1, &mut rng);
     let nv = nrm2(v.col(0));
-    if nv == 0.0 {
+    if nv == S::ZERO {
         return 0.0;
     }
     for x in v.col_mut(0) {
         *x /= nv;
     }
-    let mut sigma = 0.0;
+    let mut sigma = S::ZERO;
     for _ in 0..iters {
         let av = mat_nn(a, &v); // m×1
         let mut atav = Mat::zeros(n, 1);
-        super::blas3::gemm_tn(1.0, a.as_ref(), av.as_ref(), 0.0, &mut atav);
+        super::blas3::gemm_tn(S::ONE, a.as_ref(), av.as_ref(), S::ZERO, &mut atav);
         let nrm = nrm2(atav.col(0));
-        if nrm == 0.0 {
+        if nrm == S::ZERO {
             return 0.0;
         }
         sigma = nrm.sqrt();
@@ -47,21 +48,21 @@ pub fn spectral_norm_est(a: &Mat, iters: usize, seed: u64) -> f64 {
         }
         v = atav;
     }
-    sigma
+    sigma.to_f64()
 }
 
 /// Condition-number estimate κ₂(A) ≈ σ_max/σ_min via the small Gram SVD —
 /// only for skinny panels (cols ≤ 512); used in CholeskyQR2 diagnostics.
-pub fn panel_cond_est(a: &Mat) -> f64 {
+pub fn panel_cond_est<S: Scalar>(a: &Mat<S>) -> f64 {
     let w = gram(a.as_ref());
     match super::svd::jacobi_svd(&w) {
         Ok(svd) => {
-            let smax = svd.s.first().copied().unwrap_or(0.0);
-            let smin = svd.s.last().copied().unwrap_or(0.0);
-            if smin <= 0.0 {
+            let smax = svd.s.first().copied().unwrap_or(S::ZERO);
+            let smin = svd.s.last().copied().unwrap_or(S::ZERO);
+            if smin <= S::ZERO {
                 f64::INFINITY
             } else {
-                (smax / smin).sqrt()
+                (smax / smin).sqrt().to_f64()
             }
         }
         Err(_) => f64::INFINITY,
@@ -76,7 +77,7 @@ mod tests {
     #[test]
     fn orth_error_zero_for_orthonormal() {
         let mut rng = Rng::new(1);
-        let q = random_orthonormal(40, 8, &mut rng);
+        let q: Mat<f64> = random_orthonormal(40, 8, &mut rng);
         assert!(orth_error(&q) < 1e-13);
         let mut bad = q.clone();
         let c0 = bad.col(0).to_vec();
@@ -97,7 +98,7 @@ mod tests {
     #[test]
     fn cond_est_identityish() {
         let mut rng = Rng::new(2);
-        let q = random_orthonormal(30, 5, &mut rng);
+        let q: Mat<f64> = random_orthonormal(30, 5, &mut rng);
         let c = panel_cond_est(&q);
         assert!((c - 1.0).abs() < 1e-6, "cond {c}");
     }

@@ -9,40 +9,41 @@
 use super::blas1::{axpy, dot, nrm2, scal};
 use super::mat::Mat;
 use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
 
 /// Thin QR via Householder reflections: A (m×n, m ≥ n) → (Q m×n with
 /// orthonormal columns, R n×n upper triangular), A = Q·R.
-pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+pub fn householder_qr<S: Scalar>(a: &Mat<S>) -> (Mat<S>, Mat<S>) {
     let (m, n) = (a.rows(), a.cols());
     assert!(m >= n, "householder_qr needs m >= n");
     let mut work = a.clone();
     // v_k stored in-place below the diagonal; betas on the side.
-    let mut betas = vec![0.0; n];
-    let mut rdiag = vec![0.0; n];
+    let mut betas = vec![S::ZERO; n];
+    let mut rdiag = vec![S::ZERO; n];
     for k in 0..n {
         // Build the reflector for column k.
         let col = &work.col(k)[k..];
         let alpha = nrm2(col);
         let a0 = col[0];
-        let sign = if a0 >= 0.0 { 1.0 } else { -1.0 };
+        let sign = if a0 >= S::ZERO { S::ONE } else { -S::ONE };
         let r_kk = -sign * alpha;
         rdiag[k] = r_kk;
-        if alpha == 0.0 {
-            betas[k] = 0.0;
+        if alpha == S::ZERO {
+            betas[k] = S::ZERO;
             continue;
         }
         // v = x - r_kk * e1, normalized so v[0] = 1.
         let v0 = a0 - r_kk;
         let colm = &mut work.col_mut(k)[k..];
-        colm[0] = 1.0;
-        if v0 != 0.0 {
-            let inv = 1.0 / v0;
+        colm[0] = S::ONE;
+        if v0 != S::ZERO {
+            let inv = S::ONE / v0;
             for x in colm.iter_mut().skip(1) {
                 *x *= inv;
             }
         }
-        let vnorm2 = 1.0 + colm[1..].iter().map(|x| x * x).sum::<f64>();
-        betas[k] = 2.0 / vnorm2;
+        let vnorm2 = S::ONE + colm[1..].iter().map(|x| *x * *x).sum::<S>();
+        betas[k] = S::from_f64(2.0) / vnorm2;
         // Apply (I - beta v vᵀ) to the trailing columns.
         let rows = m;
         for j in (k + 1)..n {
@@ -72,13 +73,13 @@ pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
     // Form thin Q by applying reflectors to the first n columns of I.
     let mut q = Mat::zeros(m, n);
     for j in 0..n {
-        q.set(j, j, 1.0);
+        q.set(j, j, S::ONE);
     }
     for k in (0..n).rev() {
-        if betas[k] == 0.0 {
+        if betas[k] == S::ZERO {
             continue;
         }
-        let v: Vec<f64> = work.col(k)[k..].to_vec();
+        let v: Vec<S> = work.col(k)[k..].to_vec();
         for j in 0..n {
             let cj = &mut q.col_mut(j)[k..];
             let s = betas[k] * dot(&v, cj);
@@ -89,14 +90,14 @@ pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
 }
 
 /// Random matrix with Haar-ish orthonormal columns (QR of a Gaussian).
-pub fn random_orthonormal(m: usize, n: usize, rng: &mut Rng) -> Mat {
+pub fn random_orthonormal<S: Scalar>(m: usize, n: usize, rng: &mut Rng) -> Mat<S> {
     assert!(m >= n);
     let g = Mat::randn(m, n, rng);
     let (mut q, r) = householder_qr(&g);
     // Fix the sign convention (diag(R) > 0) so the distribution is Haar.
     for j in 0..n {
-        if r.at(j, j) < 0.0 {
-            scal(-1.0, q.col_mut(j));
+        if r.at(j, j) < S::ZERO {
+            scal(-S::ONE, q.col_mut(j));
         }
     }
     q

@@ -9,14 +9,15 @@
 use super::blas1::{dot, nrm2};
 use super::mat::Mat;
 use crate::error::{Error, Result};
+use crate::util::scalar::Scalar;
 
 /// Result of a (thin) SVD: A = U · diag(s) · Vᵀ with U m×n, s desc-sorted,
 /// V n×n.
 #[derive(Clone, Debug)]
-pub struct Svd {
-    pub u: Mat,
-    pub s: Vec<f64>,
-    pub v: Mat,
+pub struct Svd<S: Scalar = f64> {
+    pub u: Mat<S>,
+    pub s: Vec<S>,
+    pub v: Mat<S>,
 }
 
 /// One-sided Jacobi SVD of A (m×n, m ≥ n).
@@ -25,15 +26,15 @@ pub struct Svd {
 /// numerically orthogonal; then σ_j = ‖a_j‖, U = A·diag(1/σ), and V
 /// accumulates the rotations. Columns with σ below `n·ε·σ_max` are
 /// completed to an orthonormal set (their singular vectors are arbitrary).
-pub fn jacobi_svd(a: &Mat) -> Result<Svd> {
+pub fn jacobi_svd<S: Scalar>(a: &Mat<S>) -> Result<Svd<S>> {
     let (m, n) = (a.rows(), a.cols());
     assert!(m >= n, "jacobi_svd needs m >= n (got {m}x{n})");
     let mut w = a.clone();
     let mut v = Mat::eye(n);
-    let eps = f64::EPSILON;
+    let eps = S::EPSILON;
     let max_sweeps = 60;
     let mut converged = false;
-    let mut last_off = 0.0;
+    let mut last_off = S::ZERO;
     // Numerically-zero column threshold: pairs involving columns whose
     // norm has collapsed below n·ε·‖A‖ carry only rounding noise — their
     // "relative" off-diagonal never settles and would stall the cyclic
@@ -41,61 +42,62 @@ pub fn jacobi_svd(a: &Mat) -> Result<Svd> {
     // Cached squared column norms, updated analytically per rotation
     // (§Perf: cuts the per-pair dot count from 3 to 1; the cache is
     // refreshed every few sweeps to bound drift).
-    let mut norms: Vec<f64> = (0..n).map(|j| dot(w.col(j), w.col(j))).collect();
-    let colnorm_max0 = norms.iter().copied().fold(0.0f64, f64::max);
-    let tiny2 = (n as f64 * eps).powi(2) * colnorm_max0;
+    let mut norms: Vec<S> = (0..n).map(|j| dot(w.col(j), w.col(j))).collect();
+    let colnorm_max0 = norms.iter().copied().fold(S::ZERO, S::max);
+    let tiny2 = S::from_f64((n as f64 * eps.to_f64()).powi(2)) * colnorm_max0;
     for sweep in 0..max_sweeps {
         if sweep > 0 && sweep % 4 == 0 {
             for (j, nj) in norms.iter_mut().enumerate() {
                 *nj = dot(w.col(j), w.col(j));
             }
         }
-        let mut off = 0.0f64;
+        let mut off = S::ZERO;
         let mut rotated = false;
         for p in 0..n {
             for q in (p + 1)..n {
                 let (app, aqq) = (norms[p], norms[q]);
                 let denom = (app * aqq).sqrt();
-                if denom == 0.0 || app <= tiny2 || aqq <= tiny2 {
+                if denom == S::ZERO || app <= tiny2 || aqq <= tiny2 {
                     continue;
                 }
                 let apq = dot(w.col(p), w.col(q));
                 let rel = apq.abs() / denom;
                 off = off.max(rel);
-                if rel <= 1e2 * eps {
+                if rel <= S::from_f64(1e2) * eps {
                     continue;
                 }
                 rotated = true;
                 // Jacobi rotation that zeroes the (p,q) Gram entry.
                 // (sign(0) must be +1: equal-norm parallel columns would
                 // otherwise yield a null rotation and stall convergence.)
-                let tau = (aqq - app) / (2.0 * apq);
-                let sgn = if tau >= 0.0 { 1.0 } else { -1.0 };
-                let t = sgn / (tau.abs() + (1.0 + tau * tau).sqrt());
-                let c = 1.0 / (1.0 + t * t).sqrt();
+                let two = S::from_f64(2.0);
+                let tau = (aqq - app) / (two * apq);
+                let sgn = if tau >= S::ZERO { S::ONE } else { -S::ONE };
+                let t = sgn / (tau.abs() + (S::ONE + tau * tau).sqrt());
+                let c = S::ONE / (S::ONE + t * t).sqrt();
                 let s = c * t;
                 rotate_cols(&mut w, p, q, c, s);
                 rotate_cols(&mut v, p, q, c, s);
                 // norm updates under the rotation (exact in real arith.)
-                norms[p] = c * c * app - 2.0 * c * s * apq + s * s * aqq;
-                norms[q] = s * s * app + 2.0 * c * s * apq + c * c * aqq;
+                norms[p] = c * c * app - two * c * s * apq + s * s * aqq;
+                norms[q] = s * s * app + two * c * s * apq + c * c * aqq;
             }
         }
         last_off = off;
-        if !rotated || off <= 1e2 * eps {
+        if !rotated || off <= S::from_f64(1e2) * eps {
             converged = true;
             break;
         }
     }
     if !converged {
-        return Err(Error::SvdNoConvergence { sweeps: max_sweeps, off: last_off });
+        return Err(Error::SvdNoConvergence { sweeps: max_sweeps, off: last_off.to_f64() });
     }
 
     // Extract singular values and sort descending.
-    let mut svals: Vec<(f64, usize)> = (0..n).map(|j| (nrm2(w.col(j)), j)).collect();
+    let mut svals: Vec<(S, usize)> = (0..n).map(|j| (nrm2(w.col(j)), j)).collect();
     svals.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-    let smax = svals.first().map(|x| x.0).unwrap_or(0.0);
-    let tiny = (n as f64) * eps * smax;
+    let smax = svals.first().map(|x| x.0).unwrap_or(S::ZERO);
+    let tiny = S::from_f64(n as f64) * eps * smax;
 
     let mut u = Mat::zeros(m, n);
     let mut vout = Mat::zeros(n, n);
@@ -104,8 +106,8 @@ pub fn jacobi_svd(a: &Mat) -> Result<Svd> {
     for (out_j, &(sigma, src_j)) in svals.iter().enumerate() {
         s.push(sigma);
         vout.col_mut(out_j).copy_from_slice(v.col(src_j));
-        if sigma > tiny && sigma > 0.0 {
-            let inv = 1.0 / sigma;
+        if sigma > tiny && sigma > S::ZERO {
+            let inv = S::ONE / sigma;
             let src = w.col(src_j);
             let dst = u.col_mut(out_j);
             for i in 0..m {
@@ -123,7 +125,7 @@ pub fn jacobi_svd(a: &Mat) -> Result<Svd> {
     Ok(Svd { u, s, v: vout })
 }
 
-fn rotate_cols(m: &mut Mat, p: usize, q: usize, c: f64, s: f64) {
+fn rotate_cols<S: Scalar>(m: &mut Mat<S>, p: usize, q: usize, c: S, s: S) {
     let rows = m.rows();
     let data = m.data_mut();
     let (lo, hi) = if p < q { (p, q) } else { (q, p) };
@@ -143,14 +145,14 @@ fn rotate_cols(m: &mut Mat, p: usize, q: usize, c: f64, s: f64) {
 
 /// Fill the listed (near-zero) columns of U with unit vectors orthogonal
 /// to all other columns (Gram–Schmidt over coordinate seeds).
-fn complete_basis(u: &mut Mat, deficient: &[usize]) {
+fn complete_basis<S: Scalar>(u: &mut Mat<S>, deficient: &[usize]) {
     let m = u.rows();
     let n = u.cols();
     for &j in deficient {
-        let mut best: Option<Vec<f64>> = None;
+        let mut best: Option<Vec<S>> = None;
         for seed in 0..m.min(n + deficient.len() + 2) {
-            let mut cand = vec![0.0; m];
-            cand[seed] = 1.0;
+            let mut cand = vec![S::ZERO; m];
+            cand[seed] = S::ONE;
             // Orthogonalize twice (CGS2) against all other columns.
             for _ in 0..2 {
                 for k in 0..n {
@@ -164,7 +166,7 @@ fn complete_basis(u: &mut Mat, deficient: &[usize]) {
                 }
             }
             let nrm = nrm2(&cand);
-            if nrm > 0.5 {
+            if nrm > S::from_f64(0.5) {
                 for x in cand.iter_mut() {
                     *x /= nrm;
                 }
@@ -179,7 +181,7 @@ fn complete_basis(u: &mut Mat, deficient: &[usize]) {
 }
 
 /// Truncate an SVD to its leading `r` triplets.
-pub fn truncate(svd: &Svd, r: usize) -> Svd {
+pub fn truncate<S: Scalar>(svd: &Svd<S>, r: usize) -> Svd<S> {
     Svd {
         u: svd.u.panel_owned(0, r),
         s: svd.s[..r].to_vec(),
@@ -274,7 +276,7 @@ mod tests {
 
     #[test]
     fn truncate_keeps_leading() {
-        let a = Mat::randn(12, 6, &mut Rng::new(4));
+        let a: Mat<f64> = Mat::randn(12, 6, &mut Rng::new(4));
         let svd = jacobi_svd(&a).unwrap();
         let t = truncate(&svd, 3);
         assert_eq!(t.u.cols(), 3);

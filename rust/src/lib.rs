@@ -20,6 +20,7 @@ pub mod util {
     pub mod json;
     pub mod pool;
     pub mod rng;
+    pub mod scalar;
 }
 
 pub mod la {
@@ -56,6 +57,7 @@ pub mod metrics;
 pub use error::{Error, Result};
 pub use la::mat::Mat;
 pub use sparse::csr::Csr;
+pub use util::scalar::{DType, Scalar};
 
 /// Crate version string.
 pub fn version() -> &'static str {

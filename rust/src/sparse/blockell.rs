@@ -13,18 +13,19 @@
 use super::csr::Csr;
 use crate::error::{Error, Result};
 use crate::la::mat::Mat;
+use crate::util::scalar::Scalar;
 
 /// A block-ELL matrix: `blocks[(br*mbpr + s)*bs*bs ..]` is the s-th
 /// (row-major bs×bs) block of block-row `br`, with block-column index
 /// `idx[br*mbpr + s]`. Padding slots hold all-zero blocks (index 0).
 #[derive(Clone, Debug)]
-pub struct BlockEll {
+pub struct BlockEll<S: Scalar = f64> {
     pub bs: usize,
     pub nbr: usize,
     pub ncb: usize,
     pub mbpr: usize,
     /// row-major block payloads, len = nbr*mbpr*bs*bs
-    pub blocks: Vec<f64>,
+    pub blocks: Vec<S>,
     /// block-column indices, len = nbr*mbpr
     pub idx: Vec<i32>,
     /// original (unpadded) dimensions
@@ -32,11 +33,11 @@ pub struct BlockEll {
     pub cols: usize,
 }
 
-impl BlockEll {
+impl<S: Scalar> BlockEll<S> {
     /// Convert a CSR matrix; rows/cols are zero-padded to multiples of
     /// `bs`. `max_mbpr` bounds the ELL width (Err if exceeded — densely
     /// populated rows would blow up the padded storage).
-    pub fn from_csr(a: &Csr, bs: usize, max_mbpr: usize) -> Result<BlockEll> {
+    pub fn from_csr(a: &Csr<S>, bs: usize, max_mbpr: usize) -> Result<BlockEll<S>> {
         assert!(bs > 0);
         let nbr = a.rows().div_ceil(bs);
         let ncb = a.cols().div_ceil(bs);
@@ -63,7 +64,7 @@ impl BlockEll {
             )));
         }
         // Pass 2: fill payloads.
-        let mut blocks = vec![0.0f64; nbr * mbpr * bs * bs];
+        let mut blocks = vec![S::ZERO; nbr * mbpr * bs * bs];
         let mut idx = vec![0i32; nbr * mbpr];
         for (br, bcs) in block_cols.iter().enumerate() {
             for (s, &bc) in bcs.iter().enumerate() {
@@ -115,7 +116,7 @@ impl BlockEll {
     /// accumulation is private), with a 4-column register-blocked bs×bs
     /// micro-kernel — each block row load feeds 4 dots, and the inner
     /// contiguous length-bs dot auto-vectorizes.
-    pub fn spmm(&self, x: &Mat, y: &mut Mat) {
+    pub fn spmm(&self, x: &Mat<S>, y: &mut Mat<S>) {
         assert_eq!(x.rows(), self.padded_cols(), "block-ELL spmm X rows");
         assert_eq!(
             (y.rows(), y.cols()),
@@ -126,7 +127,7 @@ impl BlockEll {
         let bs = self.bs;
         let mbpr = self.mbpr;
         if k == 0 || self.nbr == 0 || self.ncb == 0 {
-            y.data_mut().fill(0.0);
+            y.data_mut().fill(S::ZERO);
             return;
         }
         let blocks = &self.blocks;
@@ -134,7 +135,7 @@ impl BlockEll {
         let rows_pad = self.padded_rows();
         crate::util::pool::parallel_row_blocks(y.data_mut(), rows_pad, bs, |r0, r1, cols| {
             for cb in cols.iter_mut() {
-                cb.fill(0.0);
+                cb.fill(S::ZERO);
             }
             let br0 = r0 / bs;
             for lb in 0..(r1 - r0) / bs {
@@ -153,7 +154,8 @@ impl BlockEll {
                         let [c0, c1, c2, c3] = &mut cols[j..j + 4] else { unreachable!() };
                         for ri in 0..bs {
                             let row = &blk[ri * bs..(ri + 1) * bs];
-                            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                            let (mut s0, mut s1) = (S::ZERO, S::ZERO);
+                            let (mut s2, mut s3) = (S::ZERO, S::ZERO);
                             for (t, &v) in row.iter().enumerate() {
                                 s0 += v * x0[t];
                                 s1 += v * x1[t];
@@ -173,7 +175,7 @@ impl BlockEll {
                         let cj = &mut cols[j];
                         for ri in 0..bs {
                             let row = &blk[ri * bs..(ri + 1) * bs];
-                            let mut acc = 0.0;
+                            let mut acc = S::ZERO;
                             for (t, &v) in row.iter().enumerate() {
                                 acc += v * xj[t];
                             }
@@ -188,7 +190,7 @@ impl BlockEll {
 
     /// Allocating wrapper around [`BlockEll::spmm`] — kept as the oracle
     /// entry point the AOT artifact integration tests call.
-    pub fn spmm_ref(&self, x: &Mat) -> Mat {
+    pub fn spmm_ref(&self, x: &Mat<S>) -> Mat<S> {
         let mut y = Mat::zeros(self.padded_rows(), x.cols());
         self.spmm(x, &mut y);
         y

@@ -1,19 +1,21 @@
 //! Coordinate-format sparse matrix (assembly / I/O staging format).
 
 use crate::error::{shape_err, Result};
+use crate::util::scalar::Scalar;
 
 /// COO triplet matrix. Duplicates are allowed until conversion (they sum).
+/// Generic over the element precision `S` (default `f64`).
 #[derive(Clone, Debug, Default)]
-pub struct Coo {
+pub struct Coo<S: Scalar = f64> {
     pub rows: usize,
     pub cols: usize,
     pub row_idx: Vec<u32>,
     pub col_idx: Vec<u32>,
-    pub values: Vec<f64>,
+    pub values: Vec<S>,
 }
 
-impl Coo {
-    pub fn new(rows: usize, cols: usize) -> Coo {
+impl<S: Scalar> Coo<S> {
+    pub fn new(rows: usize, cols: usize) -> Coo<S> {
         Coo { rows, cols, ..Default::default() }
     }
 
@@ -21,7 +23,7 @@ impl Coo {
         self.values.len()
     }
 
-    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+    pub fn push(&mut self, i: usize, j: usize, v: S) {
         debug_assert!(i < self.rows && j < self.cols);
         self.row_idx.push(i as u32);
         self.col_idx.push(j as u32);
@@ -42,7 +44,7 @@ impl Coo {
     }
 
     /// Transposed copy.
-    pub fn transpose(&self) -> Coo {
+    pub fn transpose(&self) -> Coo<S> {
         Coo {
             rows: self.cols,
             cols: self.rows,

@@ -26,6 +26,19 @@
 //!   (cheap, u32) index stream.
 //! * `from_coo` uses the same parallel histogram for the row-counting
 //!   pass and sorts/merges row segments in parallel over row blocks.
+//!
+//! ## Element precision (the `Scalar` abstraction)
+//!
+//! [`Csr<S>`] is generic over [`Scalar`] (`f32`/`f64`, default `f64`):
+//! indices stay `u32`/`usize`, only the value array changes width. The
+//! SpMM kernels here are memory-bandwidth-bound (each nonzero is touched
+//! once per dense-column group), so the fp32 instantiation moves roughly
+//! half the bytes per flop — the ~2× win the paper's single-precision GPU
+//! runs exploit, measured per-dtype by `bench_blocks`. The dtype is a
+//! runtime choice: matrices are generated/read as `Csr<f64>` and
+//! converted with [`Csr::cast`] when the driver is asked for `--dtype
+//! f32`; parity suites (`tests/test_dtype_parity.rs`) hold the f32 kernels
+//! to `S::EPSILON`-scaled agreement with the f64 reference.
 
 use super::coo::Coo;
 use crate::error::{shape_err, Result};
@@ -33,15 +46,17 @@ use crate::la::mat::Mat;
 use crate::util::pool::{
     num_threads, parallel_chunks_mut, parallel_histogram, parallel_reduce, parallel_row_blocks,
 };
+use crate::util::scalar::Scalar;
 
-/// Compressed sparse row matrix, f64 values, u32 column indices.
+/// Compressed sparse row matrix, `S` values (default `f64`), u32 column
+/// indices. See the module doc for the `Scalar`/dtype story.
 #[derive(Clone, Debug)]
-pub struct Csr {
+pub struct Csr<S: Scalar = f64> {
     rows: usize,
     cols: usize,
     indptr: Vec<usize>,
     indices: Vec<u32>,
-    values: Vec<f64>,
+    values: Vec<S>,
 }
 
 /// Split `[0, cols)` into up to `t` consecutive bands with roughly equal
@@ -72,9 +87,9 @@ fn balanced_bands(counts: &[usize], t: usize) -> Vec<(usize, usize)> {
     bands
 }
 
-impl Csr {
+impl<S: Scalar> Csr<S> {
     /// Build from COO, summing duplicates and sorting columns in each row.
-    pub fn from_coo(coo: &Coo) -> Result<Csr> {
+    pub fn from_coo(coo: &Coo<S>) -> Result<Csr<S>> {
         coo.validate()?;
         let rows = coo.rows;
         let nnz = coo.nnz();
@@ -90,7 +105,7 @@ impl Csr {
         // Stage entries into per-row segments (serial: random-target
         // writes; the expensive sort/merge below is the parallel part).
         let mut indices = vec![0u32; nnz];
-        let mut values = vec![0.0; nnz];
+        let mut values = vec![S::ZERO; nnz];
         let mut next = counts.clone();
         for k in 0..nnz {
             let i = coo.row_idx[k] as usize;
@@ -107,9 +122,9 @@ impl Csr {
             (Vec::new(), Vec::new(), Vec::new()),
             |lo, hi| {
                 let mut oi: Vec<u32> = Vec::with_capacity(counts[hi] - counts[lo]);
-                let mut ov: Vec<f64> = Vec::with_capacity(counts[hi] - counts[lo]);
+                let mut ov: Vec<S> = Vec::with_capacity(counts[hi] - counts[lo]);
                 let mut lens: Vec<usize> = Vec::with_capacity(hi - lo);
-                let mut scratch: Vec<(u32, f64)> = Vec::new();
+                let mut scratch: Vec<(u32, S)> = Vec::new();
                 for i in lo..hi {
                     let (s, e) = (counts[i], counts[i + 1]);
                     scratch.clear();
@@ -159,8 +174,8 @@ impl Csr {
         cols: usize,
         indptr: Vec<usize>,
         indices: Vec<u32>,
-        values: Vec<f64>,
-    ) -> Result<Csr> {
+        values: Vec<S>,
+    ) -> Result<Csr<S>> {
         if indptr.len() != rows + 1 || indices.len() != values.len() || indptr[rows] != indices.len()
         {
             return Err(shape_err("csr", "inconsistent indptr/indices/values"));
@@ -197,13 +212,26 @@ impl Csr {
         &self.indices
     }
     #[inline]
-    pub fn values(&self) -> &[f64] {
+    pub fn values(&self) -> &[S] {
         &self.values
+    }
+
+    /// Copy into another element precision (values round through f64);
+    /// the index structure is shared-shape, so this is the dtype
+    /// conversion used when `--dtype f32` is selected at the driver.
+    pub fn cast<T: Scalar>(&self) -> Csr<T> {
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            values: self.values.iter().map(|&v| T::from_f64(v.to_f64())).collect(),
+        }
     }
 
     /// Row view: (column indices, values).
     #[inline]
-    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+    pub fn row(&self, i: usize) -> (&[u32], &[S]) {
         let lo = self.indptr[i];
         let hi = self.indptr[i + 1];
         (&self.indices[lo..hi], &self.values[lo..hi])
@@ -214,7 +242,7 @@ impl Csr {
     /// Histogram and fill are both parallel (see the module doc); the
     /// fill partitions destination columns into nnz-balanced bands whose
     /// output ranges are contiguous, so bands write disjoint slices.
-    pub fn transpose(&self) -> Csr {
+    pub fn transpose(&self) -> Csr<S> {
         let nnz = self.nnz();
         let cols = self.cols;
         let mut counts = parallel_histogram(nnz, cols + 1, |lo, hi, c| {
@@ -226,7 +254,7 @@ impl Csr {
             counts[i + 1] += counts[i];
         }
         let mut indices = vec![0u32; nnz];
-        let mut values = vec![0.0; nnz];
+        let mut values = vec![S::ZERO; nnz];
         let t = num_threads().min(cols.max(1));
         if t <= 1 || nnz < 4096 {
             let mut next = counts.clone();
@@ -244,7 +272,7 @@ impl Csr {
             std::thread::scope(|scope| {
                 let counts = &counts;
                 let mut idx_rest: &mut [u32] = &mut indices;
-                let mut val_rest: &mut [f64] = &mut values;
+                let mut val_rest: &mut [S] = &mut values;
                 for &(c0, c1) in &bands {
                     let take = counts[c1] - counts[c0];
                     let (idx_band, idx_tail) = idx_rest.split_at_mut(take);
@@ -288,7 +316,7 @@ impl Csr {
     /// Parallel over contiguous row bands of Y; 4-column register blocking
     /// amortizes each index decode over 4 FMAs. Every output element is
     /// written exactly once, so no pre-zeroing pass is needed.
-    pub fn spmm(&self, x: &Mat, y: &mut Mat) {
+    pub fn spmm(&self, x: &Mat<S>, y: &mut Mat<S>) {
         assert_eq!(x.rows(), self.cols, "spmm inner dim");
         assert_eq!((y.rows(), y.cols()), (self.rows, x.cols()), "spmm out");
         let k = x.cols();
@@ -310,7 +338,7 @@ impl Csr {
                 for i in r0..r1 {
                     let lo = indptr[i];
                     let hi = indptr[i + 1];
-                    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+                    let (mut s0, mut s1, mut s2, mut s3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
                     for p in lo..hi {
                         let c = indices[p] as usize;
                         let v = values[p];
@@ -333,7 +361,7 @@ impl Csr {
                 for i in r0..r1 {
                     let lo = indptr[i];
                     let hi = indptr[i + 1];
-                    let (mut s0, mut s1) = (0.0, 0.0);
+                    let (mut s0, mut s1) = (S::ZERO, S::ZERO);
                     for p in lo..hi {
                         let c = indices[p] as usize;
                         let v = values[p];
@@ -351,7 +379,7 @@ impl Csr {
                 for i in r0..r1 {
                     let lo = indptr[i];
                     let hi = indptr[i + 1];
-                    let mut s0 = 0.0;
+                    let mut s0 = S::ZERO;
                     for p in lo..hi {
                         s0 += values[p] * x0[indices[p] as usize];
                     }
@@ -371,7 +399,7 @@ impl Csr {
     /// parallel path assigns whole output *columns* to threads, so each
     /// thread's scatter targets are private and the output-column /
     /// X-column borrows hoist out of the row loop.
-    pub fn spmm_t(&self, x: &Mat, y: &mut Mat) {
+    pub fn spmm_t(&self, x: &Mat<S>, y: &mut Mat<S>) {
         assert_eq!(x.rows(), self.rows, "spmm_t inner dim");
         assert_eq!((y.rows(), y.cols()), (self.cols, x.cols()), "spmm_t out");
         let n = self.cols;
@@ -382,10 +410,10 @@ impl Csr {
         let indices = &self.indices;
         let values = &self.values;
         parallel_chunks_mut(y.data_mut(), n, |j, yj| {
-            yj.fill(0.0);
+            yj.fill(S::ZERO);
             let xj = x.col(j);
             for (i, &xij) in xj.iter().enumerate() {
-                if xij == 0.0 {
+                if xij == S::ZERO {
                     continue;
                 }
                 let lo = indptr[i];
@@ -398,7 +426,7 @@ impl Csr {
     }
 
     /// Densify (tests / tiny matrices only).
-    pub fn to_dense(&self) -> Mat {
+    pub fn to_dense(&self) -> Mat<S> {
         let mut m = Mat::zeros(self.rows, self.cols);
         for i in 0..self.rows {
             let (cols, vals) = self.row(i);
@@ -410,8 +438,8 @@ impl Csr {
     }
 
     /// Frobenius norm.
-    pub fn fro_norm(&self) -> f64 {
-        self.values.iter().map(|v| v * v).sum::<f64>().sqrt()
+    pub fn fro_norm(&self) -> S {
+        self.values.iter().map(|v| *v * *v).sum::<S>().sqrt()
     }
 }
 

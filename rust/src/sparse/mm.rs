@@ -9,6 +9,7 @@ use std::io::{BufRead, BufWriter, Write};
 use super::coo::Coo;
 use super::csr::Csr;
 use crate::error::{Error, Result};
+use crate::util::scalar::Scalar;
 
 fn io_err(path: &str, e: std::io::Error) -> Error {
     Error::Io { path: path.to_string(), source: e }
@@ -111,8 +112,9 @@ pub fn read_csr(path: &str) -> Result<Csr> {
     Csr::from_coo(&read_coo(path)?)
 }
 
-/// Write a CSR matrix as `matrix coordinate real general`.
-pub fn write_csr(path: &str, a: &Csr) -> Result<()> {
+/// Write a CSR matrix (any precision) as `matrix coordinate real
+/// general`; values are emitted through f64 with full round-trip digits.
+pub fn write_csr<S: Scalar>(path: &str, a: &Csr<S>) -> Result<()> {
     let f = std::fs::File::create(path).map_err(|e| io_err(path, e))?;
     let mut w = BufWriter::new(f);
     (|| -> std::io::Result<()> {
@@ -122,7 +124,7 @@ pub fn write_csr(path: &str, a: &Csr) -> Result<()> {
         for i in 0..a.rows() {
             let (cols, vals) = a.row(i);
             for (&c, &v) in cols.iter().zip(vals) {
-                writeln!(w, "{} {} {:.17e}", i + 1, c as usize + 1, v)?;
+                writeln!(w, "{} {} {:.17e}", i + 1, c as usize + 1, v.to_f64())?;
             }
         }
         w.flush()

@@ -19,6 +19,10 @@
 //! * [`parallel_reduce`] — map contiguous ranges to partials, fold them
 //!   in worker order. Used by the row-tiled SYRK (Gram) reduction and
 //!   the CSR histogram passes.
+//!
+//! All helpers are generic over the element type (`T: Send` /
+//! `T` in the reduction), so the f32 and f64 instantiations of the
+//! `Scalar` substrate share one threading layer unchanged.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;

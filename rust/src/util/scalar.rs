@@ -1,0 +1,220 @@
+//! The `Scalar` value-type abstraction (f32 / f64).
+//!
+//! The paper's GPU experiments run in *single precision*: its headline
+//! kernels (SpMM, SYRK/Gram, CholeskyQR2) are memory-bandwidth-bound, so
+//! halving the element width roughly doubles effective bandwidth on every
+//! hot loop. This trait is the substrate that lets the whole numeric
+//! stack — `la::mat::Mat<S>`, the BLAS-1/3 kernels, the sparse formats,
+//! and the `algo` drivers — run end-to-end in either precision, with
+//! `f64` kept as the default type parameter everywhere so existing
+//! f64-only call sites compile unchanged.
+//!
+//! Design rules:
+//!
+//! * All *metrics and reports* (residuals, timings, JSON) stay `f64`;
+//!   `Scalar::to_f64` is the single conversion point.
+//! * Random fills draw from the shared f64 generator stream and round to
+//!   `S` (see [`crate::util::rng::Rng::fill_normal`]), so the f32 and f64
+//!   streams from one seed agree to f32 precision — the property the
+//!   cross-dtype parity tests pin down.
+//! * Tolerances in generic code scale with `S::EPSILON`, never hard-coded
+//!   f64 magnitudes.
+
+use crate::util::json::Json;
+
+/// Floating-point element type for the numeric substrate (f32 or f64).
+pub trait Scalar:
+    Copy
+    + Clone
+    + Send
+    + Sync
+    + 'static
+    + std::fmt::Debug
+    + std::fmt::Display
+    + PartialEq
+    + PartialOrd
+    + Default
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + std::ops::DivAssign
+    + std::iter::Sum<Self>
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Machine epsilon of the type (2⁻⁵² / 2⁻²³).
+    const EPSILON: Self;
+    /// dtype tag used in reports and `BENCH_kernels.json` ("f32"/"f64").
+    const DTYPE: &'static str;
+
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn mul_add(self, a: Self, b: Self) -> Self;
+    fn max(self, other: Self) -> Self;
+    fn is_finite(self) -> bool;
+
+    /// |x| range whose square stays comfortably inside the dynamic range
+    /// (used by the scaled `nrm2`): (lo, hi) with lo² above underflow and
+    /// hi² below overflow even after length-n accumulation.
+    fn safe_sq_range() -> (Self, Self);
+
+    /// JSON emission for reports (numbers are f64 on the wire).
+    fn to_json(self) -> Json {
+        Json::Num(self.to_f64())
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f64::EPSILON;
+    const DTYPE: &'static str = "f64";
+
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+    #[inline]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f64::mul_add(self, a, b)
+    }
+    #[inline]
+    fn max(self, other: Self) -> Self {
+        f64::max(self, other)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+    #[inline]
+    fn safe_sq_range() -> (Self, Self) {
+        (1e-140, 1e140)
+    }
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const EPSILON: Self = f32::EPSILON;
+    const DTYPE: &'static str = "f32";
+
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+    #[inline]
+    fn mul_add(self, a: Self, b: Self) -> Self {
+        f32::mul_add(self, a, b)
+    }
+    #[inline]
+    fn max(self, other: Self) -> Self {
+        f32::max(self, other)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+    #[inline]
+    fn safe_sq_range() -> (Self, Self) {
+        (1e-15, 1e15)
+    }
+}
+
+/// Runtime precision choice, plumbed from the CLI / `config/suite.json`
+/// down to the solve driver (`coordinator::driver`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    #[default]
+    F64,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+
+    /// Parse "f32"/"f64" (also accepts "single"/"double").
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" | "single" | "fp32" => Some(DType::F32),
+            "f64" | "double" | "fp64" => Some(DType::F64),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consts_and_conversions() {
+        assert_eq!(<f64 as Scalar>::DTYPE, "f64");
+        assert_eq!(<f32 as Scalar>::DTYPE, "f32");
+        assert_eq!(f32::from_f64(1.5), 1.5f32);
+        assert_eq!(Scalar::to_f64(2.5f32), 2.5f64);
+        assert!(<f32 as Scalar>::EPSILON.to_f64() > <f64 as Scalar>::EPSILON);
+    }
+
+    #[test]
+    fn ops_through_the_trait() {
+        fn hypot<S: Scalar>(a: S, b: S) -> S {
+            (a * a + b * b).sqrt()
+        }
+        assert!((hypot(3.0f32, 4.0f32) - 5.0).abs() < 1e-6);
+        assert!((hypot(3.0f64, 4.0f64) - 5.0).abs() < 1e-12);
+        fn fma<S: Scalar>(a: S, b: S, c: S) -> S {
+            a.mul_add(b, c)
+        }
+        assert_eq!(fma(2.0f64, 3.0, 1.0), 7.0);
+    }
+
+    #[test]
+    fn dtype_parse_and_name() {
+        assert_eq!(DType::parse("f32"), Some(DType::F32));
+        assert_eq!(DType::parse("double"), Some(DType::F64));
+        assert_eq!(DType::parse("bf16"), None);
+        assert_eq!(DType::default().name(), "f64");
+    }
+
+    #[test]
+    fn json_emission() {
+        assert_eq!(Scalar::to_json(1.5f32), Json::Num(1.5));
+        assert_eq!(Scalar::to_json(-3.0f64), Json::Num(-3.0));
+    }
+}

@@ -1,0 +1,229 @@
+//! f32-vs-f64 parity of the generic `Scalar` substrate.
+//!
+//! Mirrors `test_threaded_kernels.rs`: the same worker-thread sweep over
+//! the sparse/Gram kernels, but instantiated at *both* element precisions
+//! with tolerances scaled by `S::EPSILON` instead of hard-coded f64
+//! magnitudes, plus cross-dtype agreement (the f32 kernel outputs must
+//! match the f64 reference to f32 accuracy — deterministic because both
+//! dtypes draw from the same seeded f64 RNG stream and round).
+//!
+//! The end-to-end test runs `lancsvd`/`randsvd` at fp32 on a small
+//! synthetic problem and asserts the *measured* relative residuals meet
+//! the paper's 1e-4-class accuracy target — the same target the fp64 run
+//! is held to — validating the single-precision path rather than assuming
+//! it.
+
+use std::sync::Mutex;
+
+use trunksvd::algo::{lancsvd::lancsvd, randsvd::randsvd, residuals, LancSvdOpts, RandSvdOpts};
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::gen::dense::dense_with_spectrum;
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::la::blas3::{self, mat_nn, mat_tn};
+use trunksvd::la::mat::Mat;
+use trunksvd::la::norms::orth_error;
+use trunksvd::sparse::coo::Coo;
+use trunksvd::sparse::csr::Csr;
+use trunksvd::util::pool;
+use trunksvd::util::rng::Rng;
+use trunksvd::util::scalar::Scalar;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+const THREAD_SWEEP: [usize; 3] = [1, 2, 8];
+
+/// ε-scaled kernel tolerance: ~5e4·ε_S covers the accumulation error of
+/// the longest row/tile dots in these shapes with a wide margin while
+/// staying far below any real defect (f64 ≈ 1.1e-11, f32 ≈ 6.0e-3).
+fn kernel_tol<S: Scalar>() -> f64 {
+    5e4 * S::EPSILON.to_f64()
+}
+
+/// Restores the pool default even if the guarded closure panics.
+struct PoolReset;
+impl Drop for PoolReset {
+    fn drop(&mut self) {
+        pool::set_num_threads(0);
+    }
+}
+
+fn random_coo(rows: usize, cols: usize, nnz: usize, seed: u64) -> Coo {
+    let mut rng = Rng::new(seed);
+    let mut c = Coo::new(rows, cols);
+    for _ in 0..nnz {
+        c.push(rng.below(rows), rng.below(cols), rng.normal());
+    }
+    c
+}
+
+/// One full kernel-parity sweep at precision `S`: spmm / spmm_t /
+/// transpose-equivalence / gram against the dense reference at the same
+/// precision, across the thread sweep.
+fn kernel_parity_sweep<S: Scalar>() {
+    let tol = kernel_tol::<S>();
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 7, 4),
+        (37, 23, 150),
+        (129, 65, 1000),
+        (1000, 333, 12_000), // takes the parallel transpose fill path
+    ];
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        for (si, &(m, n, nnz)) in shapes.iter().enumerate() {
+            let a64 = Csr::from_coo(&random_coo(m, n, nnz, 140 + si as u64)).unwrap();
+            let a: Csr<S> = a64.cast();
+            let ad: Mat<S> = a.to_dense();
+            let mut rng = Rng::new(190 + si as u64);
+            for k in [1usize, 3, 8] {
+                let x: Mat<S> = Mat::randn(n, k, &mut rng);
+                let mut y: Mat<S> = Mat::zeros(m, k);
+                a.spmm(&x, &mut y);
+                let err = y.max_abs_diff(&mat_nn(&ad, &x)).to_f64();
+                assert!(err < tol, "spmm {} t={t} {m}x{n} k={k}: {err:.3e}", S::DTYPE);
+                let z: Mat<S> = Mat::randn(m, k, &mut rng);
+                let mut w: Mat<S> = Mat::zeros(n, k);
+                a.spmm_t(&z, &mut w);
+                let err = w.max_abs_diff(&mat_tn(&ad, &z)).to_f64();
+                assert!(err < tol, "spmm_t {} t={t} {m}x{n} k={k}: {err:.3e}", S::DTYPE);
+                // scatter == explicit-transpose gather at this precision
+                let at = a.transpose();
+                let mut w2: Mat<S> = Mat::zeros(n, k);
+                at.spmm(&z, &mut w2);
+                let err = w.max_abs_diff(&w2).to_f64();
+                assert!(err < tol, "transpose {} t={t} {m}x{n} k={k}: {err:.3e}", S::DTYPE);
+            }
+            let q: Mat<S> = Mat::randn(m, 7.min(m), &mut rng);
+            let g = blas3::gram(q.as_ref());
+            let err = g.max_abs_diff(&mat_tn(&q, &q)).to_f64();
+            assert!(err < tol, "gram {} t={t} rows={m}: {err:.3e}", S::DTYPE);
+        }
+    }
+}
+
+#[test]
+fn kernels_hold_eps_scaled_parity_in_both_dtypes() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    kernel_parity_sweep::<f64>();
+    kernel_parity_sweep::<f32>();
+}
+
+#[test]
+fn f32_kernels_match_f64_reference_across_threads() {
+    // Cross-dtype: the f32 outputs must agree with the f64 outputs of the
+    // *same* seeded inputs to f32 accuracy — deterministic because both
+    // dtypes round the same f64 RNG stream (see util::rng).
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    let tol = kernel_tol::<f32>();
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        let a64 = Csr::from_coo(&random_coo(400, 170, 6000, 77)).unwrap();
+        let a32: Csr<f32> = a64.cast();
+        for k in [1usize, 5, 8] {
+            let mut rng64 = Rng::new(33);
+            let mut rng32 = Rng::new(33);
+            let x64: Mat<f64> = Mat::randn(170, k, &mut rng64);
+            let x32: Mat<f32> = Mat::randn(170, k, &mut rng32);
+            let mut y64: Mat<f64> = Mat::zeros(400, k);
+            let mut y32: Mat<f32> = Mat::zeros(400, k);
+            a64.spmm(&x64, &mut y64);
+            a32.spmm(&x32, &mut y32);
+            let err = y64.cast::<f32>().max_abs_diff(&y32).to_f64();
+            assert!(err < tol, "spmm cross-dtype t={t} k={k}: {err:.3e}");
+            let z64: Mat<f64> = Mat::randn(400, k, &mut rng64);
+            let z32: Mat<f32> = Mat::randn(400, k, &mut rng32);
+            let mut w64: Mat<f64> = Mat::zeros(170, k);
+            let mut w32: Mat<f32> = Mat::zeros(170, k);
+            a64.spmm_t(&z64, &mut w64);
+            a32.spmm_t(&z32, &mut w32);
+            let err = w64.cast::<f32>().max_abs_diff(&w32).to_f64();
+            assert!(err < tol, "spmm_t cross-dtype t={t} k={k}: {err:.3e}");
+        }
+        let mut rng64 = Rng::new(44);
+        let mut rng32 = Rng::new(44);
+        let q64: Mat<f64> = Mat::randn(700, 9, &mut rng64);
+        let q32: Mat<f32> = Mat::randn(700, 9, &mut rng32);
+        let g64 = blas3::gram(q64.as_ref());
+        let g32 = blas3::gram(q32.as_ref());
+        // gram accumulates 700-term dots; scale the tolerance by the
+        // row count times the unit-variance entry magnitude.
+        let err = g64.cast::<f32>().max_abs_diff(&g32).to_f64();
+        assert!(err < 50.0 * tol, "gram cross-dtype t={t}: {err:.3e}");
+    }
+}
+
+/// Solve at precision `S` on a known mild spectrum and return the largest
+/// measured relative residual over the leading `wanted` triplets.
+fn lanc_residual_at<S: Scalar>(a64: &Mat, wanted: usize) -> f64 {
+    let a: Mat<S> = a64.cast();
+    let mut be: CpuBackend<S> = CpuBackend::new_dense(a.clone());
+    let opts = LancSvdOpts { r: 16, p: 5, b: 8, wanted, seed: 9, ..Default::default() };
+    let svd = lancsvd(&mut be, &opts).unwrap();
+    // Orthogonality defect scales like √ε of the working precision
+    // (≈1.5e-8 at f64, ≈3.5e-4 at f32) — generous vs the observed defect.
+    assert!(orth_error(&svd.u) < S::EPSILON.to_f64().sqrt(), "U orth ({})", S::DTYPE);
+    let mut check: CpuBackend<S> = CpuBackend::new_dense(a);
+    residuals(&mut check, &svd, wanted).iter().fold(0.0f64, |m, &x| m.max(x))
+}
+
+fn rand_residual_at<S: Scalar>(a64: &Mat, wanted: usize) -> f64 {
+    let a: Mat<S> = a64.cast();
+    let mut be: CpuBackend<S> = CpuBackend::new_dense(a.clone());
+    let opts = RandSvdOpts { r: 16, p: 12, b: 8, seed: 9, ..Default::default() };
+    let svd = randsvd(&mut be, &opts).unwrap();
+    let mut check: CpuBackend<S> = CpuBackend::new_dense(a);
+    residuals(&mut check, &svd, wanted).iter().fold(0.0f64, |m, &x| m.max(x))
+}
+
+#[test]
+fn end_to_end_fp32_meets_the_fp64_accuracy_target() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(2);
+    // Mildly conditioned dense problem (σ_i = 1/(1+i)): both precisions
+    // must reach the paper's 1e-4-class relative-residual target on the
+    // leading triplets.
+    const TARGET: f64 = 1e-4;
+    let sigma: Vec<f64> = (0..16).map(|i| 1.0 / (1.0 + i as f64)).collect();
+    let prob = dense_with_spectrum(150, 16, &sigma, 5);
+    let lanc64 = lanc_residual_at::<f64>(&prob.a, 4);
+    let lanc32 = lanc_residual_at::<f32>(&prob.a, 4);
+    assert!(lanc64 < TARGET, "lancsvd f64 residual {lanc64:.3e}");
+    assert!(lanc32 < TARGET, "lancsvd f32 residual {lanc32:.3e}");
+    let rand64 = rand_residual_at::<f64>(&prob.a, 4);
+    let rand32 = rand_residual_at::<f32>(&prob.a, 4);
+    assert!(rand64 < TARGET, "randsvd f64 residual {rand64:.3e}");
+    assert!(rand32 < TARGET, "randsvd f32 residual {rand32:.3e}");
+}
+
+#[test]
+fn fp32_lancsvd_on_sparse_operand() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(2);
+    let spec = SparseSpec {
+        rows: 200,
+        cols: 90,
+        nnz: 2500,
+        seed: 9,
+        value_decay: 1.0,
+        ..Default::default()
+    };
+    let a64 = generate(&spec);
+    let a32: Csr<f32> = a64.cast();
+    let mut be: CpuBackend<f32> = CpuBackend::new_sparse(a32.clone());
+    let opts = LancSvdOpts { r: 48, p: 3, b: 16, wanted: 8, seed: 1, ..Default::default() };
+    let svd = lancsvd(&mut be, &opts).unwrap();
+    let mut check: CpuBackend<f32> = CpuBackend::new_sparse(a32);
+    let res = residuals(&mut check, &svd, 8);
+    assert!(res.iter().all(|&x| x < 1e-3), "fp32 sparse lancsvd residuals {res:?}");
+    // Singular values agree with the f64 solve to f32-class accuracy.
+    let mut be64 = CpuBackend::new_sparse(a64.clone());
+    let svd64 = lancsvd(&mut be64, &opts).unwrap();
+    for i in 0..8 {
+        let s64 = svd64.sigma[i];
+        let s32 = svd.sigma[i].to_f64();
+        assert!((s64 - s32).abs() < 1e-3 * s64.max(1e-6), "sigma_{i}: f64 {s64} vs f32 {s32}");
+    }
+}

@@ -201,7 +201,7 @@ fn empty_and_degenerate_shapes() {
         assert_eq!(y.at(4, 0), 2.0, "t={t}");
         assert_eq!(y.at(2, 0), 0.0, "t={t}");
         // gram of an empty panel.
-        let w = blas3::gram(Mat::zeros(10, 0).as_ref());
+        let w = blas3::gram(Mat::<f64>::zeros(10, 0).as_ref());
         assert_eq!((w.rows(), w.cols()), (0, 0), "t={t}");
     }
 }
