@@ -10,6 +10,12 @@
 //! `BENCH_kernels.json` (each entry carries a `dtype` field) so the perf
 //! trajectory is tracked PR-over-PR.
 //!
+//! The `pool_dispatch` section measures the empty-job round-trip latency
+//! of the persistent worker pool against the PR 1 spawn-per-call
+//! baseline (`pool_dispatch_ns` vs `spawn_dispatch_ns` in the JSON);
+//! with `BENCH_ASSERT_DISPATCH=1` (set in CI) the bench *fails* unless
+//! the persistent pool dispatches faster than spawning.
+//!
 //! `BENCH_QUICK=1` (or the `--smoke` flag) shrinks the size sweep.
 
 use std::rc::Rc;
@@ -233,6 +239,68 @@ fn main() {
             ("f64_over_f32", json::num(ratio)),
         ]));
     }
+    banner(
+        "Pool dispatch (empty-job round trip)",
+        "persistent workers vs the spawn-per-call baseline",
+    );
+    {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // Dispatch needs >= 2 bands to involve the pool at all; pin the
+        // band count so a TRUNKSVD_THREADS=1 run still measures dispatch.
+        let tb = threads.max(2);
+        pool::set_num_threads(tb);
+        let sink = AtomicUsize::new(0);
+        let dispatch_iters = if quick { 2_000 } else { 10_000 };
+        // Warm call: spawns the persistent workers once, outside timing.
+        pool::parallel_for(tb, |_| {
+            sink.fetch_add(1, Ordering::Relaxed);
+        });
+        let t0 = std::time::Instant::now();
+        for _ in 0..dispatch_iters {
+            pool::parallel_for(tb, |w| {
+                if w == 0 {
+                    sink.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        let pool_ns = t0.elapsed().as_secs_f64() * 1e9 / dispatch_iters as f64;
+        // The spawn path is ~10× slower; fewer iterations keep the bench
+        // bounded without hurting the comparison.
+        let spawn_iters = (dispatch_iters / 10).max(100);
+        let t0 = std::time::Instant::now();
+        for _ in 0..spawn_iters {
+            pool::parallel_for_spawn_baseline(tb, |w| {
+                if w == 0 {
+                    sink.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        let spawn_ns = t0.elapsed().as_secs_f64() * 1e9 / spawn_iters as f64;
+        pool::set_num_threads(0);
+        let ratio = spawn_ns / pool_ns.max(1.0);
+        println!(
+            "pool_dispatch    t={tb}  persistent {pool_ns:>9.0} ns/call  \
+             spawn {spawn_ns:>9.0} ns/call  spawn/pool {ratio:>5.1}x  \
+             (sink {})",
+            sink.load(Ordering::Relaxed)
+        );
+        entries.push(json::obj(vec![
+            ("kernel", json::str("pool_dispatch")),
+            ("dtype", json::str("n/a")),
+            ("threads", json::num(tb as f64)),
+            ("pool_dispatch_ns", json::num(pool_ns)),
+            ("spawn_dispatch_ns", json::num(spawn_ns)),
+            ("spawn_over_pool", json::num(ratio)),
+        ]));
+        if env_usize("BENCH_ASSERT_DISPATCH", 0) == 1 {
+            assert!(
+                pool_ns < spawn_ns,
+                "persistent pool dispatch ({pool_ns:.0} ns/call) must beat \
+                 spawn-per-call ({spawn_ns:.0} ns/call)"
+            );
+        }
+    }
+
     let n_entries = entries.len();
     let doc = json::obj(vec![
         ("bench", json::str("kernels")),

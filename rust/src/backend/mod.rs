@@ -116,6 +116,12 @@ pub(crate) enum TransposeThreshold {
 /// as soon as it is ready, so no Aᵀ·X call ever waits on the build. Both
 /// backends embed one; the ablation benches disable it (`new(None)`) to
 /// keep the pure-scatter baseline measurable.
+///
+/// Threading interplay: the background build calls `Csr::transpose`,
+/// whose parallel passes submit to the same persistent `util::pool` the
+/// foreground kernels use. Submissions are serialized by the pool, so
+/// the build's bands simply queue between foreground SpMM jobs instead
+/// of oversubscribing the machine with a second thread set.
 pub(crate) struct AdaptiveTranspose<S: Scalar = f64> {
     at: Option<crate::sparse::csr::Csr<S>>,
     pending: Option<std::thread::JoinHandle<crate::sparse::csr::Csr<S>>>,

@@ -106,6 +106,29 @@ pub fn adaptive_transpose_threshold(rows: usize, cols: usize, nnz: usize, k: usi
     n.clamp(1, 64)
 }
 
+/// Minimum number of owned output elements per worker band before the
+/// persistent pool (`util::pool`) fans a kernel out, i.e. the serial
+/// fast-path threshold for small panels.
+///
+/// Model: one pool dispatch costs a condvar wake + join handshake,
+/// ~2–10 µs on a mainstream multicore host. The threaded kernels here
+/// are memory-bound and touch their output at ~0.5–2 ns per element
+/// (each output element also amortizes a bounded amount of operand
+/// traffic), so a band must own roughly
+/// `dispatch_cost / per_element_cost ≈ 5 µs / 2 ns ≈ 2.5 K` elements
+/// before perfect scaling merely breaks even — and the panels the
+/// paper's algorithms emit (q×b with b ≤ 32) hit the pool dozens of
+/// times per iteration, so dispatching below the crossover costs real
+/// wall time. We use 1024 as the grain: conservative enough that a
+/// 2-band split already owns ~2× the break-even work per extra thread,
+/// small enough that the m ≥ 4096 panels of the paper's sweeps fan out
+/// fully. Runtime overrides: `TRUNKSVD_PARALLEL_CUTOFF` or
+/// `pool::set_parallel_cutoff` (used by the tests to force the parallel
+/// path on tiny fixtures).
+pub fn parallel_cutoff() -> usize {
+    1024
+}
+
 /// CA4: CholeskyQR2 on a q×b panel (Alg. 4).
 /// Two passes of: Gram (b²q) + POTRF (b³/3) + TRSM (b²q), plus the b³ TRMM.
 pub fn ca4(b: usize, q: usize) -> f64 {
@@ -212,6 +235,15 @@ mod tests {
         assert_eq!(adaptive_transpose_threshold(0, 0, 0, 0), 64);
         // Degenerate k on a large operand stays sane.
         assert!(adaptive_transpose_threshold(10, 10, 100_000, 0) >= 1);
+    }
+
+    #[test]
+    fn parallel_cutoff_sane() {
+        // At least one element per band, and small enough that the
+        // paper-scale panels (m >= 4096, b >= 8) always fan out.
+        let c = parallel_cutoff();
+        assert!(c >= 1);
+        assert!(c <= 4096 * 8 / 2, "cutoff {c} would serialize paper-scale panels");
     }
 
     #[test]

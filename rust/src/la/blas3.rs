@@ -16,9 +16,19 @@
 //! summed with `parallel_reduce` — a SYRK is reduction-shaped, so row
 //! partitioning exposes q/tile-way parallelism where column partitioning
 //! would only expose b/4.
+//!
+//! All three run on the persistent worker pool (`util::pool`): the
+//! CholeskyQR2/CGS inner loops call these kernels dozens of times per
+//! iteration on q×b panels, which is exactly the repeated-small-launch
+//! pattern where spawn-per-call dispatch dominated (RSVDPACK's blocked
+//! multi-core observation). Panels below the `cost::parallel_cutoff`
+//! grain skip dispatch entirely and run serial; larger panels reuse the
+//! same static row/column bands per worker call after call (band
+//! affinity), and `parallel_reduce`'s fixed band partition + in-order
+//! fold keep `gram` bitwise-deterministic at a fixed thread count.
 
 use super::mat::{Mat, MatRef};
-use crate::util::pool::{parallel_chunks_mut, parallel_reduce};
+use crate::util::pool::{parallel_chunks_mut, parallel_reduce_work};
 use crate::util::scalar::Scalar;
 
 /// C = alpha * A * B + beta * C, with A: m×k, B: k×n, C: m×n.
@@ -257,8 +267,13 @@ pub fn gram<S: Scalar>(q: MatRef<S>) -> Mat<S> {
     }
     // 256 rows × b ≤ 32 cols × 8 B = 64 KiB worst case — L2-resident.
     const TILE: usize = 256;
-    let acc = parallel_reduce(
+    // Work estimate: each row contributes a b-element read re-used for
+    // b(b+1)/2 dot terms; rows·b elements is the bandwidth-side truth
+    // the serial-cutoff decision needs (the raw row count alone would
+    // serialize wide q×b panels).
+    let acc = parallel_reduce_work(
         rows,
+        rows * b,
         vec![S::ZERO; b * b],
         |lo, hi| {
             let mut acc = vec![S::ZERO; b * b];

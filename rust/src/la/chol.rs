@@ -1,7 +1,9 @@
 //! Cholesky factorization (the POTRF of Table 1).
 //!
 //! Operands here are tiny (b×b or r×r, b ≤ 256), matching the paper's
-//! hybrid design where POTRF runs on the host CPU. We still provide a
+//! hybrid design where POTRF runs on the host CPU — far below the
+//! `cost::parallel_cutoff` grain, so these factorizations never touch
+//! the worker pool; the surrounding CholeskyQR2 Gram/TRSM panels do. We still provide a
 //! blocked right-looking variant for the larger r×r case. Breakdown (a
 //! non-positive pivot) is reported as an error so the orthogonalization
 //! layer can fall back to re-orthogonalized CGS (paper §3.2).

@@ -5,6 +5,11 @@
 //! breaks down on an extremely ill-conditioned panel, and (b) the oracle
 //! the orthogonalization tests compare against. It is also used to
 //! generate Haar-distributed orthonormal test matrices.
+//!
+//! Threading: the reflector recurrence is inherently sequential, so this
+//! module stays serial by design; the parallel work in the fast
+//! orthogonalization path lives in the `blas3` kernels (Gram/GEMM) it
+//! falls back *from*, which run on the persistent `util::pool` workers.
 
 use super::blas1::{axpy, dot, nrm2, scal};
 use super::mat::Mat;

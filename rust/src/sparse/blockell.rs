@@ -7,12 +7,18 @@
 //! zero-padded), so the kernel is a regular gather + small-matmul loop
 //! with static shapes. This module is the production converter used to
 //! feed the AOT SpMM artifact from rust, plus a threaded host SpMM
-//! (parallel over block-row bands, 4-column register-blocked bs×bs
-//! micro-kernel) so the format is competitive on the CPU substrate too.
+//! (parallel over block-row bands on the persistent `util::pool` workers,
+//! 4-column register-blocked bs×bs micro-kernel) so the format is
+//! competitive on the CPU substrate too. The pool's static banding keeps
+//! each worker on the same bs-aligned block-row stripe across the
+//! repeated SpMM calls of an iteration (band affinity), and small panels
+//! below the `cost::parallel_cutoff` grain run serial without paying
+//! dispatch.
 
 use super::csr::Csr;
 use crate::error::{Error, Result};
 use crate::la::mat::Mat;
+use crate::util::pool::parallel_row_blocks_work;
 use crate::util::scalar::Scalar;
 
 /// A block-ELL matrix: `blocks[(br*mbpr + s)*bs*bs ..]` is the s-th
@@ -133,7 +139,10 @@ impl<S: Scalar> BlockEll<S> {
         let blocks = &self.blocks;
         let idx = &self.idx;
         let rows_pad = self.padded_rows();
-        crate::util::pool::parallel_row_blocks(y.data_mut(), rows_pad, bs, |r0, r1, cols| {
+        // Work estimate: every stored block entry is re-streamed once
+        // per 4-column group, plus the padded output writes.
+        let work = self.blocks.len() * k.div_ceil(4) + rows_pad * k;
+        parallel_row_blocks_work(y.data_mut(), rows_pad, bs, work, |r0, r1, cols| {
             for cb in cols.iter_mut() {
                 cb.fill(S::ZERO);
             }

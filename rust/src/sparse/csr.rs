@@ -8,7 +8,11 @@
 //! gives the alternative the paper tried ("explicitly storing a transposed
 //! copy"), which we also evaluate in the ablation bench.
 //!
-//! Threading model (every kernel here is parallel over `util::pool`):
+//! Threading model (every kernel here runs on the persistent worker pool
+//! in `util::pool` — no per-call thread spawn anywhere in the hot path,
+//! and the pool's static banding gives each worker the *same* row/column
+//! band of the same matrix call after call, so iterative algorithms keep
+//! their operand bands cache-warm per worker):
 //!
 //! * `spmm` partitions the *output rows* into contiguous bands
 //!   (`parallel_row_blocks`): each thread walks its sparse rows once per
@@ -44,7 +48,8 @@ use super::coo::Coo;
 use crate::error::{shape_err, Result};
 use crate::la::mat::Mat;
 use crate::util::pool::{
-    num_threads, parallel_chunks_mut, parallel_histogram, parallel_reduce, parallel_row_blocks,
+    num_threads, parallel_chunks_mut_work, parallel_histogram, parallel_reduce_work,
+    parallel_row_blocks_work, parallel_tasks,
 };
 use crate::util::scalar::Scalar;
 
@@ -116,9 +121,11 @@ impl<S: Scalar> Csr<S> {
         }
         // Sort each row by column and merge duplicates, in parallel over
         // contiguous row blocks; the ordered reduce concatenates blocks
-        // back in row order.
-        let (out_indices, out_values, row_lens) = parallel_reduce(
+        // back in row order. Work is nnz-proportional (each entry is
+        // scanned, sorted, and rewritten), not row-proportional.
+        let (out_indices, out_values, row_lens) = parallel_reduce_work(
             rows,
+            nnz,
             (Vec::new(), Vec::new(), Vec::new()),
             |lo, hi| {
                 let mut oi: Vec<u32> = Vec::with_capacity(counts[hi] - counts[lo]);
@@ -268,35 +275,39 @@ impl<S: Scalar> Csr<S> {
                 }
             }
         } else {
+            // nnz-balanced destination bands are unevenly sized, so they
+            // go to the pool as prepared per-band tasks (the low-level
+            // `parallel_tasks` primitive) rather than an even split.
             let bands = balanced_bands(&counts, t);
-            std::thread::scope(|scope| {
-                let counts = &counts;
+            let counts_ref = &counts;
+            let mut tasks = Vec::with_capacity(bands.len());
+            {
                 let mut idx_rest: &mut [u32] = &mut indices;
                 let mut val_rest: &mut [S] = &mut values;
                 for &(c0, c1) in &bands {
-                    let take = counts[c1] - counts[c0];
+                    let take = counts_ref[c1] - counts_ref[c0];
                     let (idx_band, idx_tail) = idx_rest.split_at_mut(take);
                     let (val_band, val_tail) = val_rest.split_at_mut(take);
                     idx_rest = idx_tail;
                     val_rest = val_tail;
-                    scope.spawn(move || {
-                        let base = counts[c0];
-                        let mut next: Vec<usize> =
-                            counts[c0..c1].iter().map(|&p| p - base).collect();
-                        for i in 0..self.rows {
-                            let (rc, rv) = self.row(i);
-                            for (&c, &v) in rc.iter().zip(rv) {
-                                let cu = c as usize;
-                                if cu < c0 || cu >= c1 {
-                                    continue;
-                                }
-                                let p = next[cu - c0];
-                                idx_band[p] = i as u32;
-                                val_band[p] = v;
-                                next[cu - c0] = p + 1;
-                            }
+                    tasks.push((c0, c1, idx_band, val_band));
+                }
+            }
+            parallel_tasks(tasks, |_w, (c0, c1, idx_band, val_band)| {
+                let base = counts_ref[c0];
+                let mut next: Vec<usize> = counts_ref[c0..c1].iter().map(|&p| p - base).collect();
+                for i in 0..self.rows {
+                    let (rc, rv) = self.row(i);
+                    for (&c, &v) in rc.iter().zip(rv) {
+                        let cu = c as usize;
+                        if cu < c0 || cu >= c1 {
+                            continue;
                         }
-                    });
+                        let p = next[cu - c0];
+                        idx_band[p] = i as u32;
+                        val_band[p] = v;
+                        next[cu - c0] = p + 1;
+                    }
                 }
             });
         }
@@ -327,7 +338,11 @@ impl<S: Scalar> Csr<S> {
         let indptr = &self.indptr;
         let indices = &self.indices;
         let values = &self.values;
-        parallel_row_blocks(y.data_mut(), m, 32, |r0, r1, cols| {
+        // Work estimate: the nnz stream dominates (each nonzero feeds k
+        // FMAs), plus the m×k output writes — the output size alone
+        // would serialize short-and-dense operands.
+        let work = self.nnz() * k + m * k;
+        parallel_row_blocks_work(y.data_mut(), m, 32, work, |r0, r1, cols| {
             let mut j = 0;
             while j + 3 < k {
                 let x0 = x.col(j);
@@ -409,7 +424,10 @@ impl<S: Scalar> Csr<S> {
         let indptr = &self.indptr;
         let indices = &self.indices;
         let values = &self.values;
-        parallel_chunks_mut(y.data_mut(), n, |j, yj| {
+        // Work estimate: every output column re-streams the whole nnz
+        // stream (scatter form), plus the n×k output writes.
+        let work = self.nnz() * x.cols() + n * x.cols();
+        parallel_chunks_mut_work(y.data_mut(), n, work, |j, yj| {
             yj.fill(S::ZERO);
             let xj = x.col(j);
             for (i, &xij) in xj.iter().enumerate() {

@@ -39,11 +39,12 @@ fn kernel_tol<S: Scalar>() -> f64 {
     5e4 * S::EPSILON.to_f64()
 }
 
-/// Restores the pool default even if the guarded closure panics.
+/// Restores the pool defaults even if the guarded closure panics.
 struct PoolReset;
 impl Drop for PoolReset {
     fn drop(&mut self) {
         pool::set_num_threads(0);
+        pool::set_parallel_cutoff(0);
     }
 }
 
@@ -104,6 +105,9 @@ fn kernel_parity_sweep<S: Scalar>() {
 fn kernels_hold_eps_scaled_parity_in_both_dtypes() {
     let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let _reset = PoolReset;
+    // Force the parallel path so the sweep covers the banded kernels on
+    // these small fixtures (the default cutoff would run them serial).
+    pool::set_parallel_cutoff(1);
     kernel_parity_sweep::<f64>();
     kernel_parity_sweep::<f32>();
 }
@@ -115,6 +119,7 @@ fn f32_kernels_match_f64_reference_across_threads() {
     // dtypes round the same f64 RNG stream (see util::rng).
     let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let _reset = PoolReset;
+    pool::set_parallel_cutoff(1); // cover the banded paths on small fixtures
     let tol = kernel_tol::<f32>();
     for &t in &THREAD_SWEEP {
         pool::set_num_threads(t);

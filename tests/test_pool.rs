@@ -1,0 +1,427 @@
+//! Property/stress tests for the persistent worker pool (`util::pool`).
+//!
+//! The pool is the threading substrate under every kernel, so these
+//! tests pin the contract the kernels rely on: complete and disjoint
+//! coverage for uneven partitions, graceful zero-length handling, serial
+//! degradation of nested calls (documented behavior, never a deadlock),
+//! cheap dispatch (a 10k-call smoke loop), safe `set_num_threads`
+//! resizing mid-process — including a resize storm interleaved with
+//! kernel calls and a concurrent submitter thread — and panic
+//! containment (a panicking job must propagate to its caller without
+//! wedging or poisoning the pool for the next call).
+//!
+//! The thread-count and cutoff overrides are process-global, so every
+//! test serializes on `POOL_LOCK` and restores the defaults on exit
+//! (panic-safe via the `PoolReset` drop guard). Tests that must exercise
+//! the *parallel* path on small fixtures force it with
+//! `set_parallel_cutoff(1)`; the default cost-model cutoff would send
+//! them down the serial fast path.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use trunksvd::la::blas3::mat_nn;
+use trunksvd::la::mat::Mat;
+use trunksvd::sparse::coo::Coo;
+use trunksvd::sparse::csr::Csr;
+use trunksvd::util::pool;
+use trunksvd::util::rng::Rng;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+const THREAD_SWEEP: [usize; 4] = [1, 2, 3, 8];
+
+/// Restores the pool defaults even if the guarded test panics.
+struct PoolReset;
+impl Drop for PoolReset {
+    fn drop(&mut self) {
+        pool::set_num_threads(0);
+        pool::set_parallel_cutoff(0);
+    }
+}
+
+#[test]
+fn parallel_for_uneven_and_zero_lengths() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        // n = 0 must not invoke the body at all.
+        pool::parallel_for(0, |_| panic!("t={t}: body must not run for n=0"));
+        for n in [1usize, 2, 3, 7, 97, 1000, 1023] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool::parallel_for(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "t={t} n={n} index {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn chunks_mut_uneven_partitions_cover_exactly_once() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_parallel_cutoff(1); // force the parallel path on tiny slices
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        for &(len, chunk) in &[
+            (0usize, 1usize),
+            (1, 3),
+            (10, 3),
+            (103, 10),
+            (1000, 7),
+            (64, 64),
+            (65, 64),
+            (1024, 1),
+            (17, 100), // single ragged chunk
+        ] {
+            let n_chunks = len.div_ceil(chunk);
+            let calls: Vec<AtomicU64> = (0..n_chunks).map(|_| AtomicU64::new(0)).collect();
+            let mut v = vec![u64::MAX; len];
+            pool::parallel_chunks_mut(&mut v, chunk, |ci, c| {
+                calls[ci].fetch_add(1, Ordering::Relaxed);
+                // Last chunk may be ragged; all others are full.
+                if ci + 1 < n_chunks {
+                    assert_eq!(c.len(), chunk, "t={t} len={len} chunk {ci}");
+                }
+                for x in c.iter_mut() {
+                    *x = ci as u64;
+                }
+            });
+            for (ci, c) in calls.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "t={t} len={len} chunk {ci}");
+            }
+            for (i, x) in v.iter().enumerate() {
+                assert_eq!(*x, (i / chunk) as u64, "t={t} len={len} elem {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn row_blocks_uneven_panels_cover_exactly_once() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_parallel_cutoff(1);
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        for &(rows, cols, align) in &[
+            (1usize, 1usize, 1usize),
+            (103, 5, 8),
+            (256, 4, 32),
+            (57, 3, 8),
+            (5, 9, 64), // fewer rows than one aligned block
+            (64, 2, 1),
+        ] {
+            let mut v = vec![0u64; rows * cols];
+            pool::parallel_row_blocks(&mut v, rows, align, |lo, hi, band| {
+                assert!(lo < hi && hi <= rows, "t={t} rows={rows} band [{lo},{hi})");
+                assert_eq!(band.len(), cols, "t={t} rows={rows}");
+                for (j, col) in band.iter_mut().enumerate() {
+                    assert_eq!(col.len(), hi - lo, "t={t} rows={rows} col {j}");
+                    for (o, x) in col.iter_mut().enumerate() {
+                        *x += 1 + ((lo + o) * 100 + j) as u64;
+                    }
+                }
+            });
+            for j in 0..cols {
+                for i in 0..rows {
+                    assert_eq!(
+                        v[j * rows + i],
+                        1 + (i * 100 + j) as u64,
+                        "t={t} rows={rows} ({i},{j})"
+                    );
+                }
+            }
+        }
+        // Zero-column panel: a single serial call with no columns.
+        let mut empty: Vec<u64> = Vec::new();
+        let calls = AtomicU64::new(0);
+        pool::parallel_row_blocks(&mut empty, 5, 2, |lo, hi, band| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            assert_eq!((lo, hi), (0, 5), "t={t}");
+            assert!(band.is_empty(), "t={t}");
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 1, "t={t}");
+    }
+}
+
+#[test]
+fn reduce_preserves_band_order_when_forced_parallel() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_parallel_cutoff(1);
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        for n in [0usize, 1, 2, 17, 257, 1000] {
+            let v = pool::parallel_reduce(
+                n,
+                Vec::new(),
+                |lo, hi| (lo..hi).collect::<Vec<usize>>(),
+                |mut a, mut b| {
+                    a.append(&mut b);
+                    a
+                },
+            );
+            assert_eq!(v, (0..n).collect::<Vec<usize>>(), "t={t} n={n}");
+        }
+    }
+}
+
+#[test]
+fn parallel_tasks_consumes_each_task_exactly_once() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        for n in [0usize, 1, 2, 5, 23] {
+            let tasks: Vec<Vec<usize>> = (0..n).map(|k| vec![k; k % 4]).collect();
+            let seen: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool::parallel_tasks(tasks, |k, task| {
+                assert_eq!(task.len(), k % 4, "t={t} n={n} task {k}");
+                assert!(task.iter().all(|&x| x == k), "t={t} n={n} task {k}");
+                seen[k].fetch_add(1, Ordering::Relaxed);
+            });
+            for (k, s) in seen.iter().enumerate() {
+                assert_eq!(s.load(Ordering::Relaxed), 1, "t={t} n={n} task {k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn nested_calls_run_serially_without_deadlock() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_parallel_cutoff(1);
+    pool::set_num_threads(4);
+    let total = AtomicU64::new(0);
+    pool::parallel_for(8, |i| {
+        // Nested entry points degrade to serial on this worker — they
+        // must complete and be correct, never deadlock on the pool.
+        let s = pool::parallel_reduce(
+            500,
+            0u64,
+            |lo, hi| (lo as u64..hi as u64).sum::<u64>(),
+            |a, b| a + b,
+        );
+        assert_eq!(s, 124_750, "outer index {i}");
+        let mut v = vec![0u64; 64];
+        pool::parallel_chunks_mut(&mut v, 8, |ci, c| {
+            for x in c.iter_mut() {
+                *x = ci as u64;
+            }
+        });
+        assert!(v.iter().enumerate().all(|(k, &x)| x == (k / 8) as u64), "outer index {i}");
+        total.fetch_add(s, Ordering::Relaxed);
+    });
+    assert_eq!(total.load(Ordering::Relaxed), 8 * 124_750);
+    assert!(!pool::in_parallel_job(), "in-job flag must clear after the call");
+}
+
+#[test]
+fn dispatch_smoke_10k_calls() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(4);
+    let count = AtomicU64::new(0);
+    let t0 = Instant::now();
+    for _ in 0..10_000 {
+        pool::parallel_for(4, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let elapsed = t0.elapsed();
+    assert_eq!(count.load(Ordering::Relaxed), 40_000);
+    // Spawn-per-call dispatch costs tens of µs per call; the persistent
+    // pool must stay well under that even on a loaded CI runner. This is
+    // a wedge/regression canary, not a microbenchmark (that lives in
+    // bench_blocks as pool_dispatch_ns).
+    assert!(
+        elapsed.as_secs_f64() < 30.0,
+        "10k dispatches took {:.2}s — pool dispatch has regressed to spawn-like cost",
+        elapsed.as_secs_f64()
+    );
+}
+
+#[test]
+fn resize_storm_interleaved_with_kernel_calls() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_parallel_cutoff(1);
+    // Reference kernel data: a small sparse matrix and its dense oracle.
+    let mut rng = Rng::new(0xB00);
+    let mut coo = Coo::new(120, 80);
+    for _ in 0..1500 {
+        coo.push(rng.below(120), rng.below(80), rng.normal());
+    }
+    let a = Csr::from_coo(&coo).unwrap();
+    let ad = a.to_dense();
+    let x = Mat::randn(80, 5, &mut rng);
+    let expect = mat_nn(&ad, &x);
+
+    // A concurrent submitter hammers the pool from another thread while
+    // the main thread storms `set_num_threads`; broadcasts from the two
+    // threads serialize on the pool's submit lock.
+    let side_count = AtomicU64::new(0);
+    let stop = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        let side = scope.spawn(|| {
+            while stop.load(Ordering::SeqCst) == 0 {
+                pool::parallel_for(64, |_| {
+                    side_count.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        for round in 0..200 {
+            // 0 clears the override (env/available default) — also a
+            // legal point in the storm.
+            pool::set_num_threads(round % 9);
+            let s = pool::parallel_reduce(
+                5000,
+                0u64,
+                |lo, hi| (lo as u64..hi as u64).sum::<u64>(),
+                |a, b| a + b,
+            );
+            assert_eq!(s, 12_497_500, "round {round}");
+            let mut y = Mat::zeros(120, 5);
+            a.spmm(&x, &mut y);
+            assert!(y.max_abs_diff(&expect) < 1e-12, "round {round}");
+        }
+        stop.store(1, Ordering::SeqCst);
+        side.join().expect("side submitter panicked");
+    });
+    assert_eq!(side_count.load(Ordering::Relaxed) % 64, 0);
+    assert!(side_count.load(Ordering::Relaxed) > 0);
+}
+
+#[test]
+fn panic_in_job_propagates_and_pool_survives() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_parallel_cutoff(1);
+    pool::set_num_threads(4);
+    // Silence the default per-thread panic banner for the deliberate
+    // panics below; restored before the verification phase.
+    let prev_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+
+    // Panic on a high index (a worker band at t=4).
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        pool::parallel_for(100, |i| {
+            if i >= 90 {
+                panic!("deliberate worker-band panic");
+            }
+        });
+    }));
+    assert!(r.is_err(), "worker-band panic must reach the caller");
+
+    // Panic on index 0 (the submitter's own band) — payload must be the
+    // original one.
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        pool::parallel_for(100, |i| {
+            if i == 0 {
+                panic!("deliberate band-0 panic");
+            }
+        });
+    }));
+    let payload = r.expect_err("band-0 panic must reach the caller");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .or_else(|| payload.downcast_ref::<String>().map(|s| s.as_str()))
+        .unwrap_or("");
+    assert!(msg.contains("band-0"), "submitter panic payload preserved, got {msg:?}");
+
+    // Panic inside a reduce map.
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        pool::parallel_reduce(
+            4000,
+            0u64,
+            |lo, _hi| {
+                if lo == 0 {
+                    panic!("deliberate reduce panic");
+                }
+                1u64
+            },
+            |a, b| a + b,
+        );
+    }));
+    assert!(r.is_err(), "reduce panic must reach the caller");
+
+    std::panic::set_hook(prev_hook);
+
+    // The pool must be fully functional afterwards: not wedged, not
+    // poisoned, full coverage, across repeated calls and a resize.
+    for round in 0..50 {
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        pool::parallel_for(257, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(
+            hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+            "post-panic round {round}"
+        );
+    }
+    pool::set_num_threads(2);
+    let s = pool::parallel_reduce(
+        3000,
+        0u64,
+        |lo, hi| (lo as u64..hi as u64).sum::<u64>(),
+        |a, b| a + b,
+    );
+    assert_eq!(s, 4_498_500, "post-panic resize");
+}
+
+#[test]
+fn band_affinity_stable_across_calls() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(4);
+    let n = 64;
+    let run = || {
+        let ids: Vec<Mutex<String>> = (0..n).map(|_| Mutex::new(String::new())).collect();
+        pool::parallel_for(n, |i| {
+            *ids[i].lock().unwrap() = format!("{:?}", std::thread::current().id());
+        });
+        ids.into_iter()
+            .map(|m| m.into_inner().unwrap())
+            .collect::<Vec<String>>()
+    };
+    // Warm call spawns the workers; the next calls must route every
+    // index to the same long-lived thread (sticky banding = the cache /
+    // NUMA affinity property).
+    let first = run();
+    for call in 0..5 {
+        assert_eq!(run(), first, "index→thread mapping drifted on call {call}");
+    }
+}
+
+#[test]
+fn overrides_round_trip_and_defaults() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    let t0 = {
+        pool::set_num_threads(0);
+        pool::num_threads()
+    };
+    assert!(t0 >= 1);
+    pool::set_num_threads(5);
+    assert_eq!(pool::num_threads(), 5);
+    pool::set_num_threads(0);
+    assert_eq!(pool::num_threads(), t0);
+    let c0 = {
+        pool::set_parallel_cutoff(0);
+        pool::parallel_cutoff()
+    };
+    assert!(c0 >= 1);
+    pool::set_parallel_cutoff(123);
+    assert_eq!(pool::parallel_cutoff(), 123);
+    pool::set_parallel_cutoff(0);
+    assert_eq!(pool::parallel_cutoff(), c0);
+}

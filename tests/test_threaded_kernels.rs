@@ -1,10 +1,18 @@
 //! Parity of the threaded sparse/Gram kernels against the dense
 //! reference across worker-thread counts (the `TRUNKSVD_THREADS`
 //! dimension, swept in-process via `pool::set_num_threads`), ragged
-//! shapes, k = 1, and empty-row matrices.
+//! shapes, k = 1, and empty-row matrices — plus a *determinism sweep*:
+//! at a fixed thread count, every threaded kernel must produce
+//! bitwise-identical output across repeated calls, in both element
+//! precisions. The persistent pool's band affinity is a static
+//! partition, so rerunning a kernel (even after resizing the pool away
+//! and back) may not perturb a single bit; only *changing* the thread
+//! count is allowed to change floating-point summation order (and only
+//! for reduction-shaped kernels).
 //!
-//! The thread override is process-global, so every test that touches it
-//! serializes on `POOL_LOCK` and restores the default before returning.
+//! The thread/cutoff overrides are process-global, so every test that
+//! touches them serializes on `POOL_LOCK` and restores the defaults
+//! before returning.
 
 use std::sync::Mutex;
 
@@ -15,6 +23,7 @@ use trunksvd::sparse::coo::Coo;
 use trunksvd::sparse::csr::Csr;
 use trunksvd::util::pool;
 use trunksvd::util::rng::Rng;
+use trunksvd::util::scalar::Scalar;
 
 static POOL_LOCK: Mutex<()> = Mutex::new(());
 
@@ -30,11 +39,12 @@ fn random_coo(rows: usize, cols: usize, nnz: usize, seed: u64) -> Coo {
     c
 }
 
-/// Restores the pool default even if the guarded closure panics.
+/// Restores the pool defaults even if the guarded closure panics.
 struct PoolReset;
 impl Drop for PoolReset {
     fn drop(&mut self) {
         pool::set_num_threads(0);
+        pool::set_parallel_cutoff(0);
     }
 }
 
@@ -42,6 +52,10 @@ impl Drop for PoolReset {
 fn csr_spmm_and_spmm_t_parity_across_threads() {
     let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let _reset = PoolReset;
+    // Force the parallel path: at the default cost-model cutoff most of
+    // these small fixtures would take the serial fast path and the
+    // sweep would stop covering the banded kernels.
+    pool::set_parallel_cutoff(1);
     // Ragged shapes (not multiples of any block/tile size), including a
     // 1-row and a 1-col matrix and one with many empty rows.
     let shapes: &[(usize, usize, usize)] = &[
@@ -82,6 +96,7 @@ fn csr_spmm_and_spmm_t_parity_across_threads() {
 fn csr_transpose_and_from_coo_parity_across_threads() {
     let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let _reset = PoolReset;
+    pool::set_parallel_cutoff(1); // cover the banded paths on small fixtures
     for &t in &THREAD_SWEEP {
         pool::set_num_threads(t);
         // from_coo: duplicates merge, columns sort, ragged shape.
@@ -116,6 +131,7 @@ fn csr_transpose_and_from_coo_parity_across_threads() {
 fn gram_parity_across_threads() {
     let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let _reset = PoolReset;
+    pool::set_parallel_cutoff(1); // cover the banded paths on small fixtures
     for &t in &THREAD_SWEEP {
         pool::set_num_threads(t);
         let mut rng = Rng::new(5);
@@ -142,6 +158,7 @@ fn gram_parity_across_threads() {
 fn blockell_spmm_parity_across_threads() {
     let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let _reset = PoolReset;
+    pool::set_parallel_cutoff(1); // cover the banded paths on small fixtures
     let a = Csr::from_coo(&random_coo(170, 90, 2000, 8)).unwrap();
     let ad = a.to_dense();
     for &t in &THREAD_SWEEP {
@@ -171,6 +188,93 @@ fn blockell_spmm_parity_across_threads() {
             }
         }
     }
+}
+
+/// Exact bit pattern of a scalar slice (f32 → f64 widening is exact, so
+/// the f64 bits are a faithful fingerprint for both dtypes).
+fn bits<S: Scalar>(v: &[S]) -> Vec<u64> {
+    v.iter().map(|x| x.to_f64().to_bits()).collect()
+}
+
+/// One pass over every threaded kernel, fingerprinted bit-exactly:
+/// gather SpMM, scatter SpMMᵀ, explicit transpose (values + structure),
+/// Gram/SYRK, and the Block-ELL SpMM.
+fn threaded_kernel_fingerprint<S: Scalar>(
+    a: &Csr<S>,
+    be: &BlockEll<S>,
+    x: &Mat<S>,
+    z: &Mat<S>,
+    q: &Mat<S>,
+    xp: &Mat<S>,
+) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut y = Mat::zeros(a.rows(), x.cols());
+    a.spmm(x, &mut y);
+    out.extend(bits(y.data()));
+    let mut w = Mat::zeros(a.cols(), z.cols());
+    a.spmm_t(z, &mut w);
+    out.extend(bits(w.data()));
+    let at = a.transpose();
+    out.extend(at.indptr().iter().map(|&p| p as u64));
+    out.extend(at.indices().iter().map(|&c| c as u64));
+    out.extend(bits(at.values()));
+    let g = blas3::gram(q.as_ref());
+    out.extend(bits(g.data()));
+    let mut yp = Mat::zeros(be.padded_rows(), xp.cols());
+    be.spmm(xp, &mut yp);
+    out.extend(bits(yp.data()));
+    out
+}
+
+/// Determinism sweep at one element precision: at every fixed thread
+/// count, repeated kernel calls are bitwise-identical — including after
+/// resizing the pool away and back (band affinity must not introduce
+/// run-to-run nondeterminism). The cutoff override forces the parallel
+/// path on the test-sized fixtures.
+fn determinism_sweep<S: Scalar>() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_parallel_cutoff(1);
+    // nnz >= 4096 so the transpose takes its banded parallel fill path.
+    let a: Csr<S> = Csr::from_coo(&random_coo(311, 257, 9000, 71)).unwrap().cast();
+    let be = BlockEll::from_csr(&a, 8, a.cols().div_ceil(8)).unwrap();
+    let mut rng = Rng::new(72);
+    let x: Mat<S> = Mat::randn(a.cols(), 5, &mut rng);
+    let z: Mat<S> = Mat::randn(a.rows(), 5, &mut rng);
+    let q: Mat<S> = Mat::randn(500, 9, &mut rng);
+    let xp: Mat<S> = Mat::randn(be.padded_cols(), 5, &mut rng);
+
+    let sweep: [usize; 4] = [1, 2, 3, 8];
+    let mut per_t = Vec::with_capacity(sweep.len());
+    for &t in &sweep {
+        pool::set_num_threads(t);
+        let first = threaded_kernel_fingerprint(&a, &be, &x, &z, &q, &xp);
+        for call in 0..2 {
+            let again = threaded_kernel_fingerprint(&a, &be, &x, &z, &q, &xp);
+            assert!(again == first, "dtype={} t={t} repeat {call} not bitwise equal", S::DTYPE);
+        }
+        per_t.push(first);
+    }
+    // Resize away and back: the t-specific bit patterns must reproduce.
+    for (i, &t) in sweep.iter().enumerate() {
+        pool::set_num_threads(t);
+        let again = threaded_kernel_fingerprint(&a, &be, &x, &z, &q, &xp);
+        assert!(
+            again == per_t[i],
+            "dtype={} t={t} after resize round-trip not bitwise equal",
+            S::DTYPE
+        );
+    }
+}
+
+#[test]
+fn determinism_sweep_f64() {
+    determinism_sweep::<f64>();
+}
+
+#[test]
+fn determinism_sweep_f32() {
+    determinism_sweep::<f32>();
 }
 
 #[test]
