@@ -37,7 +37,7 @@ fn main() {
     for choice in [BackendChoice::CpuScatter, BackendChoice::Cpu, BackendChoice::CpuExplicitT] {
         let rep = run(
             "ablA",
-            Operand::Sparse(a.clone()),
+            Operand::sparse(a.clone()),
             Algo::Lanc,
             &Params { r: 64, p: 2, b: 16, ..Default::default() },
             &choice,
@@ -56,7 +56,7 @@ fn main() {
     for b in [4usize, 8, 16, 32] {
         let rep = run(
             "ablB",
-            Operand::Sparse(a.clone()),
+            Operand::sparse(a.clone()),
             Algo::Lanc,
             &Params { r: 64, p: 2, b, wanted: 4, ..Default::default() },
             &BackendChoice::Cpu,
@@ -72,7 +72,7 @@ fn main() {
         }
         let rep = run(
             "ablC",
-            Operand::Sparse(a.clone()),
+            Operand::sparse(a.clone()),
             Algo::Lanc,
             &Params { r, p: 2, b: 16, ..Default::default() },
             &BackendChoice::Cpu,
@@ -109,7 +109,7 @@ fn main() {
     ] {
         let rep = run(
             "ablF",
-            Operand::Sparse(a.clone()),
+            Operand::sparse(a.clone()),
             Algo::Lanc,
             &Params { r: 64, p: 3, b: 16, restart, ..Default::default() },
             &BackendChoice::Cpu,

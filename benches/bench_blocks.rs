@@ -16,6 +16,13 @@
 //! with `BENCH_ASSERT_DISPATCH=1` (set in CI) the bench *fails* unless
 //! the persistent pool dispatches faster than spawning.
 //!
+//! The `alloc_probe` section pins the workspace refactor's contract in
+//! CI: this binary installs the counting global allocator and measures
+//! the heap-allocation delta between RandSVD solves that differ only in
+//! power-iteration count — `alloc_bytes_per_iter` must be zero in
+//! steady state — plus the peak RSS (`VmHWM`). `BENCH_ASSERT_NOALLOC=1`
+//! (set in CI) turns the zero-allocation check into a hard failure.
+//!
 //! `BENCH_QUICK=1` (or the `--smoke` flag) shrinks the size sweep.
 
 use std::rc::Rc;
@@ -23,17 +30,21 @@ use std::rc::Rc;
 use trunksvd::backend::cpu::CpuBackend;
 use trunksvd::backend::xla::XlaBackend;
 use trunksvd::backend::Backend;
-use trunksvd::bench_support::{auto_runs, banner, env_usize, gflops, time_runs};
+use trunksvd::bench_support::{auto_runs, banner, env_usize, gflops, peak_rss_kb, time_runs};
 use trunksvd::gen::sparse::{generate, SparseSpec};
 use trunksvd::la::blas3;
 use trunksvd::la::mat::Mat;
 use trunksvd::la::qr::random_orthonormal;
 use trunksvd::runtime::{default_artifact_dir, Runtime};
 use trunksvd::sparse::blockell::BlockEll;
+use trunksvd::util::counting_alloc::{self, CountingAllocator};
 use trunksvd::util::json::{self, Json};
 use trunksvd::util::pool;
 use trunksvd::util::rng::Rng;
 use trunksvd::util::scalar::Scalar;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
 
 /// Print one serial-vs-parallel comparison and record it as JSON.
 #[allow(clippy::too_many_arguments)]
@@ -89,24 +100,24 @@ fn bench_threaded_kernels<S: Scalar>(
         let x: Mat<S> = Mat::randn(n2, b, &mut rng);
         let mut y: Mat<S> = Mat::zeros(m2, b);
         pool::set_num_threads(1);
-        let s1 = time_runs(w, r, || a2.spmm(&x, &mut y));
+        let s1 = time_runs(w, r, || a2.spmm(x.as_ref(), y.as_mut()));
         pool::set_num_threads(threads);
-        let sp = time_runs(w, r, || a2.spmm(&x, &mut y));
+        let sp = time_runs(w, r, || a2.spmm(x.as_ref(), y.as_mut()));
         kernel_entry(entries, "spmm", S::DTYPE, m2, b, threads, s1.median, sp.median, fl);
         medians.push(("spmm".to_string(), m2, b, sp.median));
         // spmm_t: scatter vs cached explicit transpose
         let xm: Mat<S> = Mat::randn(m2, b, &mut rng);
         let mut yn: Mat<S> = Mat::zeros(n2, b);
         pool::set_num_threads(1);
-        let t1 = time_runs(w, r, || a2.spmm_t(&xm, &mut yn));
+        let t1 = time_runs(w, r, || a2.spmm_t(xm.as_ref(), yn.as_mut()));
         pool::set_num_threads(threads);
-        let tp = time_runs(w, r, || a2.spmm_t(&xm, &mut yn));
+        let tp = time_runs(w, r, || a2.spmm_t(xm.as_ref(), yn.as_mut()));
         kernel_entry(entries, "spmm_t_scatter", S::DTYPE, m2, b, threads, t1.median, tp.median, fl);
         medians.push(("spmm_t_scatter".to_string(), m2, b, tp.median));
         pool::set_num_threads(1);
-        let e1 = time_runs(w, r, || at2.spmm(&xm, &mut yn));
+        let e1 = time_runs(w, r, || at2.spmm(xm.as_ref(), yn.as_mut()));
         pool::set_num_threads(threads);
-        let ep = time_runs(w, r, || at2.spmm(&xm, &mut yn));
+        let ep = time_runs(w, r, || at2.spmm(xm.as_ref(), yn.as_mut()));
         kernel_entry(entries, "spmm_t_cachedT", S::DTYPE, m2, b, threads, e1.median, ep.median, fl);
         medians.push(("spmm_t_cachedT".to_string(), m2, b, ep.median));
         // gram (row-tiled parallel SYRK)
@@ -146,9 +157,9 @@ fn bench_threaded_kernels<S: Scalar>(
                 let xp: Mat<S> = Mat::randn(be.padded_cols(), b, &mut rng);
                 let mut yp: Mat<S> = Mat::zeros(be.padded_rows(), b);
                 pool::set_num_threads(1);
-                let b1 = time_runs(w, r, || be.spmm(&xp, &mut yp));
+                let b1 = time_runs(w, r, || be.spmm(xp.as_ref(), yp.as_mut()));
                 pool::set_num_threads(threads);
-                let bp = time_runs(w, r, || be.spmm(&xp, &mut yp));
+                let bp = time_runs(w, r, || be.spmm(xp.as_ref(), yp.as_mut()));
                 kernel_entry(
                     entries,
                     "blockell_spmm",
@@ -182,11 +193,11 @@ fn main() {
         let mut c = Mat::zeros(m, 16);
         let fl = 2.0 * (m * 512 * 16) as f64;
         let (w, r) = auto_runs(fl / 2e9);
-        let st = time_runs(w, r, || blas3::gemm_nn(1.0, a.as_ref(), b.as_ref(), 0.0, &mut c));
+        let st = time_runs(w, r, || blas3::gemm_nn(1.0, a.as_ref(), b.as_ref(), 0.0, c.as_mut()));
         println!("gemm_nn  m={m:>6}  {:.2} GF/s ({:.4}s)", gflops(fl, st.median), st.median);
         let mut h = Mat::zeros(512, 16);
         let x = Mat::randn(m, 16, &mut rng);
-        let st = time_runs(w, r, || blas3::gemm_tn(1.0, a.as_ref(), x.as_ref(), 0.0, &mut h));
+        let st = time_runs(w, r, || blas3::gemm_tn(1.0, a.as_ref(), x.as_ref(), 0.0, h.as_mut()));
         println!("gemm_tn  m={m:>6}  {:.2} GF/s ({:.4}s)", gflops(fl, st.median), st.median);
     }
 
@@ -206,11 +217,11 @@ fn main() {
     let mut y_m = Mat::zeros(a.rows(), 16);
     let mut y_n = Mat::zeros(a.cols(), 16);
     let (w, r) = auto_runs(fl / 1e9);
-    let st = time_runs(w, r, || a.spmm(&x_n, &mut y_m));
+    let st = time_runs(w, r, || a.spmm(x_n.as_ref(), y_m.as_mut()));
     println!("spmm   (gather)    {:.2} GF/s ({:.4}s)", gflops(fl, st.median), st.median);
-    let st_t = time_runs(w, r, || a.spmm_t(&x_m, &mut y_n));
+    let st_t = time_runs(w, r, || a.spmm_t(x_m.as_ref(), y_n.as_mut()));
     println!("spmm_t (scatter)   {:.2} GF/s ({:.4}s)", gflops(fl, st_t.median), st_t.median);
-    let st_e = time_runs(w, r, || at.spmm(&x_m, &mut y_n));
+    let st_e = time_runs(w, r, || at.spmm(x_m.as_ref(), y_n.as_mut()));
     println!("spmm_t (expl. T)   {:.2} GF/s ({:.4}s)", gflops(fl, st_e.median), st_e.median);
 
     banner(
@@ -297,6 +308,82 @@ fn main() {
                 pool_ns < spawn_ns,
                 "persistent pool dispatch ({pool_ns:.0} ns/call) must beat \
                  spawn-per-call ({spawn_ns:.0} ns/call)"
+            );
+        }
+    }
+
+    banner(
+        "Allocation probe (steady-state inner iterations)",
+        "alloc delta between p and p+10 RandSVD solves sharing one workspace; \
+         zero bytes/iter is the workspace contract (BENCH_ASSERT_NOALLOC=1 gates it)",
+    );
+    {
+        use trunksvd::algo::randsvd::randsvd_with;
+        use trunksvd::algo::RandSvdOpts;
+        use trunksvd::la::workspace::{Plan, Workspace};
+        // Pin to one thread: every kernel takes its serial fast path on
+        // this thread, so the thread-local counters see the whole solve
+        // (parallel dispatch bookkeeping is measured by pool_dispatch,
+        // not here — the contract is about per-iteration buffer churn).
+        pool::set_num_threads(1);
+        let rows = if quick { 2000 } else { 8000 };
+        let spec = SparseSpec {
+            rows,
+            cols: rows / 4,
+            nnz: rows * 10,
+            seed: 23,
+            ..Default::default()
+        };
+        let a = generate(&spec);
+        let (m, n) = (a.rows(), a.cols());
+        let (r, b) = (16usize, 8usize);
+        let ws: Workspace = Workspace::new(Plan::randsvd(m, n, r, 16, b));
+        let run_solve = |p: usize| -> (u64, u64) {
+            let mut be = CpuBackend::new_sparse(a.clone()).scatter_only();
+            let c0 = counting_alloc::thread_allocs();
+            let b0 = counting_alloc::thread_alloc_bytes();
+            let svd = randsvd_with(
+                &mut be,
+                &RandSvdOpts { r, p, b, seed: 5, ..Default::default() },
+                &ws,
+            )
+            .expect("alloc-probe solve");
+            assert_eq!(svd.iters, p);
+            (
+                counting_alloc::thread_allocs() - c0,
+                counting_alloc::thread_alloc_bytes() - b0,
+            )
+        };
+        let _ = run_solve(2); // warm lazy statics off-window
+        let extra_iters = 10u64;
+        let (c_lo, by_lo) = run_solve(3);
+        let (c_hi, by_hi) = run_solve(3 + extra_iters as usize);
+        pool::set_num_threads(0);
+        let d_allocs = c_hi.saturating_sub(c_lo);
+        let d_bytes = by_hi.saturating_sub(by_lo);
+        let allocs_per_iter = d_allocs as f64 / extra_iters as f64;
+        let alloc_bytes_per_iter = d_bytes as f64 / extra_iters as f64;
+        let rss = peak_rss_kb();
+        println!(
+            "alloc_probe      m={m:>6} r={r} b={b}  allocs/iter {allocs_per_iter:>6.1}  \
+             bytes/iter {alloc_bytes_per_iter:>8.0}  peak_rss {rss} kB"
+        );
+        entries.push(json::obj(vec![
+            ("kernel", json::str("alloc_probe")),
+            ("dtype", json::str("f64")),
+            ("m", json::num(m as f64)),
+            ("b", json::num(b as f64)),
+            ("threads", json::num(1.0)),
+            ("allocs_per_iter", json::num(allocs_per_iter)),
+            ("alloc_bytes_per_iter", json::num(alloc_bytes_per_iter)),
+            ("peak_rss_kb", json::num(rss as f64)),
+        ]));
+        if env_usize("BENCH_ASSERT_NOALLOC", 0) == 1 {
+            assert_eq!(
+                (d_allocs, d_bytes),
+                (0, 0),
+                "steady-state inner iterations must not allocate \
+                 ({d_allocs} allocs / {d_bytes} bytes across {extra_iters} extra iterations)"
             );
         }
     }

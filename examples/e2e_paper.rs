@@ -52,7 +52,7 @@ fn main() -> trunksvd::Result<()> {
     let mut speedups = Vec::new();
     for e in &entries {
         let a = generate(&e.spec);
-        let op = Operand::Sparse(a);
+        let op = Operand::sparse(a);
         let lanc = run(&e.name, op.clone(), Algo::Lanc, &lanc_params, &backend)?;
         let rand = run(&e.name, op, Algo::Rand, &rand_params, &backend)?;
         let speedup = rand.secs / lanc.secs;

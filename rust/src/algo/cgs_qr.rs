@@ -1,41 +1,53 @@
-//! CGS-QR: QR factorization via block Gram-Schmidt (Algorithm 3).
+//! CGS-QR: QR factorization via block Gram-Schmidt (Algorithm 3), in
+//! workspace-planned out-parameter form.
 //!
 //! Factors a tall-and-skinny q×r matrix as Q·R by orthonormalizing the
 //! first b-column block with CholeskyQR2 (Alg. 4) and each subsequent
 //! block against the already-built panel with CGS-CQR2 (Alg. 5). Q is
-//! formed explicitly (the paper's choice for GPU efficiency); R is
-//! assembled block-column-wise into an r×r upper-triangular factor.
+//! formed explicitly **in place inside the input panel** (the paper's
+//! choice for GPU efficiency): the current block and the history are
+//! disjoint column ranges of one buffer, split with
+//! [`MatMut::split_at_col`], so no block is ever copied out. R is
+//! assembled block-column-wise into a caller-provided r×r buffer, and
+//! the per-block H/R factors come from the workspace — zero heap
+//! allocations in steady state.
 
 use crate::backend::Backend;
 use crate::error::{Error, Result};
-use crate::la::mat::Mat;
+use crate::la::mat::{Mat, MatMut};
+use crate::la::workspace::{names, Plan, Workspace};
 use crate::util::scalar::Scalar;
 
-use super::orth::{cgs_cqr2, cholqr2};
-
-/// Blocked CGS QR factorization. `y` (q×r) is orthonormalized in place;
-/// the returned R (r×r, upper triangular) satisfies `Y_in ≈ Q_out · R`.
-/// `b` is the block size; `r` need not be a multiple of `b` (the last
-/// block is narrower).
-pub fn cgs_qr<S: Scalar, B: Backend<S> + ?Sized>(
+/// Blocked CGS QR factorization, out-parameter form. `y` (q×r) is
+/// orthonormalized in place; `r` (r×r, fully overwritten: upper
+/// triangle + zeros) satisfies `Y_in ≈ Q_out · R`. `b` is the block
+/// size; `y.cols` need not be a multiple of `b` (the last block is
+/// narrower). `ws` supplies the `orth.*` scratch.
+pub fn cgs_qr_into<S: Scalar, B: Backend<S> + ?Sized>(
     be: &mut B,
-    y: &mut Mat<S>,
+    mut y: MatMut<'_, S>,
+    mut r: MatMut<'_, S>,
     b: usize,
-) -> Result<Mat<S>> {
-    let r_cols = y.cols();
+    ws: &Workspace<S>,
+) -> Result<()> {
+    let r_cols = y.cols;
     if b == 0 {
         return Err(Error::InvalidParam("block size b must be >= 1".into()));
     }
-    let mut r = Mat::zeros(r_cols, r_cols);
+    assert_eq!((r.rows, r.cols), (r_cols, r_cols), "cgs_qr R shape");
+    r.fill(S::ZERO);
 
     // S1: first block via CholeskyQR2.
     let b0 = b.min(r_cols);
-    let mut q0 = y.panel_owned(0, b0);
-    let r0 = cholqr2(be, &mut q0)?;
-    y.set_panel(0, &q0);
-    for j in 0..b0 {
-        for i in 0..=j {
-            r.set(i, j, r0.at(i, j));
+    {
+        let q0 = y.panel_mut(0, b0);
+        let mut r0_buf = ws.buf(names::ORTH_R);
+        let mut r0 = r0_buf.view_mut(b0, b0);
+        be.orth_cholqr2_into(q0, r0.reborrow(), ws)?;
+        for j in 0..b0 {
+            for i in 0..=j {
+                r.set(i, j, r0.at(i, j));
+            }
         }
     }
 
@@ -43,23 +55,42 @@ pub fn cgs_qr<S: Scalar, B: Backend<S> + ?Sized>(
     let mut j0 = b0;
     while j0 < r_cols {
         let jb = b.min(r_cols - j0);
-        let mut qj = y.panel_owned(j0, jb);
-        let (h, rj) = {
-            let panel = y.panel(0, j0);
-            cgs_cqr2(be, &mut qj, panel)?
-        };
-        y.set_panel(j0, &qj);
-        // Assemble the block column of R: H stacked on R_j.
-        for j in 0..jb {
-            for i in 0..j0 {
-                r.set(i, j0 + j, h.at(i, j));
-            }
-            for i in 0..=j {
-                r.set(j0 + i, j0 + j, rj.at(i, j));
+        {
+            let (hist, mut rest) = y.split_at_col(j0);
+            let qj = rest.panel_mut(0, jb);
+            let mut h_buf = ws.buf(names::ORTH_H);
+            let mut h = h_buf.view_mut(j0, jb);
+            let mut rj_buf = ws.buf(names::ORTH_R);
+            let mut rj = rj_buf.view_mut(jb, jb);
+            be.orth_cgs_cqr2_into(qj, hist, h.reborrow(), rj.reborrow(), ws)?;
+            // Assemble the block column of R: H stacked on R_j.
+            for j in 0..jb {
+                for i in 0..j0 {
+                    r.set(i, j0 + j, h.at(i, j));
+                }
+                for i in 0..=j {
+                    r.set(j0 + i, j0 + j, rj.at(i, j));
+                }
             }
         }
         j0 += jb;
     }
+    Ok(())
+}
+
+/// Value-returning wrapper (tests / one-shot callers): allocates R and
+/// a throwaway orth workspace sized for this panel.
+pub fn cgs_qr<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    y: &mut Mat<S>,
+    b: usize,
+) -> Result<Mat<S>> {
+    if b == 0 {
+        return Err(Error::InvalidParam("block size b must be >= 1".into()));
+    }
+    let ws = Workspace::new(Plan::orth(y.rows(), y.cols(), b.min(y.cols().max(1))));
+    let mut r = Mat::zeros(y.cols(), y.cols());
+    cgs_qr_into(be, y.as_mut(), r.as_mut(), b, &ws)?;
     Ok(r)
 }
 
@@ -97,6 +128,25 @@ mod tests {
                     assert_eq!(r.at(i, j), 0.0, "R({i},{j})");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn into_form_reuses_one_workspace() {
+        // Repeated factorizations through one arena give the same
+        // numbers as fresh throwaway workspaces.
+        let mut be = dummy_backend();
+        let mut rng = Rng::new(13);
+        let ws = Workspace::new(Plan::orth(80, 12, 4));
+        for _ in 0..3 {
+            let y0 = Mat::randn(80, 12, &mut rng);
+            let mut y1 = y0.clone();
+            let r1 = cgs_qr(&mut be, &mut y1, 4).unwrap();
+            let mut y2 = y0.clone();
+            let mut r2 = Mat::zeros(12, 12);
+            cgs_qr_into(&mut be, y2.as_mut(), r2.as_mut(), 4, &ws).unwrap();
+            assert!(y1.max_abs_diff(&y2) == 0.0);
+            assert!(r1.max_abs_diff(&r2) == 0.0);
         }
     }
 

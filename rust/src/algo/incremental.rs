@@ -85,7 +85,7 @@ impl<S: Scalar> IncrementalSvd<S> {
         let (mut h, mut e) = if k > 0 {
             let h = be.proj(self.u.as_ref(), c.as_ref());
             let mut e = c.clone();
-            be.subtract_proj(&mut e, self.u.as_ref(), &h);
+            be.subtract_proj(e.as_mut(), self.u.as_ref(), h.as_ref());
             (h, e)
         } else {
             (Mat::zeros(0, cc), c.clone())
@@ -97,7 +97,7 @@ impl<S: Scalar> IncrementalSvd<S> {
         let mut r_e = cholqr2(be, &mut e)?;
         if k > 0 {
             let g = be.proj(self.u.as_ref(), e.as_ref());
-            be.subtract_proj(&mut e, self.u.as_ref(), &g);
+            be.subtract_proj(e.as_mut(), self.u.as_ref(), g.as_ref());
             let t = cholqr2(be, &mut e)?;
             let g_re = crate::la::blas3::mat_nn(&g, &r_e);
             for (hv, c) in h.data_mut().iter_mut().zip(g_re.data()) {

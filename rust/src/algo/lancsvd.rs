@@ -18,27 +18,38 @@
 //! The restart (paper §2.2, Golub/Luk/Overton) re-seeds the iteration with
 //! Q̄₁ = P̄·Ū₁, the current approximation of the b leading left singular
 //! vectors, preserving the most relevant search directions.
+//!
+//! ## Allocation-free steady state
+//!
+//! [`lancsvd`] computes a [`Plan`] from `(m, n, r, p, b)`, allocates a
+//! [`Workspace`] (banded first-touch through the worker pool), hands the
+//! plan to the backend, and runs [`lancsvd_with`]. Every inner-iteration
+//! operand is a borrow of a planned buffer: the new block Qᵢ is computed
+//! *in place inside the basis panel* (`split_at_col` separates it from
+//! the history it is orthogonalized against), the small factors land in
+//! `orth.*` scratch, and the current/next left blocks swap by pointer.
+//! Steady-state inner iterations therefore perform zero heap
+//! allocations on the CPU backend (pinned by `tests/test_workspace.rs`);
+//! per-restart host work (the r×r Jacobi SVD bookkeeping) stays O(r²)
+//! and off the device path. Callers with many solves of one shape pass
+//! their own workspace to [`lancsvd_with`] and pay setup once.
 
 use crate::backend::Backend;
 use crate::error::{Error, Result};
 use crate::la::blas1::nrm2;
 use crate::la::mat::Mat;
-use crate::la::svd::jacobi_svd;
+use crate::la::svd::jacobi_svd_into;
+use crate::la::workspace::{names, Plan, PlanKind, Workspace};
 use crate::metrics::{Block, Timer};
 use crate::util::rng::Rng;
 use crate::util::scalar::Scalar;
 
-use super::orth::{cgs_cqr2, cholqr2, random_orthonormal_panel};
 use super::{InitDist, LancSvdOpts, Restart, TruncatedSvd};
 
-/// Run LancSVD on the backend's operand matrix (any [`Scalar`]
-/// precision; the paper's GPU regime is `S = f32`).
-pub fn lancsvd<S: Scalar, B: Backend<S> + ?Sized>(
-    be: &mut B,
-    opts: &LancSvdOpts,
-) -> Result<TruncatedSvd<S>> {
-    let (m, n) = (be.m(), be.n());
-    let LancSvdOpts { r, p, b, seed, init, tol, wanted, restart } = opts.clone();
+/// Validate options against the operand shape; returns the rounded
+/// thick-restart keep count (0 for the basic restart).
+fn check_opts(m: usize, n: usize, opts: &LancSvdOpts) -> Result<usize> {
+    let LancSvdOpts { r, p, b, restart, .. } = *opts;
     if b == 0 || r == 0 || p == 0 {
         return Err(Error::InvalidParam("r, p, b must all be >= 1".into()));
     }
@@ -50,8 +61,8 @@ pub fn lancsvd<S: Scalar, B: Backend<S> + ?Sized>(
     }
     // Thick restart keeps `keep` Ritz pairs (rounded up to a b multiple);
     // at least one fresh block must fit after them.
-    let keep = match restart {
-        Restart::Basic => 0,
+    match restart {
+        Restart::Basic => Ok(0),
         Restart::Thick { keep } => {
             let k = keep.max(1).div_ceil(b) * b;
             if k + b > r {
@@ -59,29 +70,77 @@ pub fn lancsvd<S: Scalar, B: Backend<S> + ?Sized>(
                     "thick restart keep={keep} (rounded {k}) leaves no room in r={r}"
                 )));
             }
-            k
+            Ok(k)
         }
-    };
+    }
+}
+
+/// Run LancSVD on the backend's operand matrix (any [`Scalar`]
+/// precision; the paper's GPU regime is `S = f32`). Plans and allocates
+/// a fresh workspace; see [`lancsvd_with`] to reuse one across solves.
+pub fn lancsvd<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    opts: &LancSvdOpts,
+) -> Result<TruncatedSvd<S>> {
+    let (m, n) = (be.m(), be.n());
+    check_opts(m, n, opts)?;
+    let ws = Workspace::new(Plan::lancsvd(m, n, opts.r, opts.p, opts.b));
+    lancsvd_with(be, opts, &ws)
+}
+
+/// [`lancsvd`] over a caller-provided workspace (must have been
+/// allocated from a matching [`Plan::lancsvd`]); repeated solves reuse
+/// the arena and pay allocation + first-touch once.
+pub fn lancsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    opts: &LancSvdOpts,
+    ws: &Workspace<S>,
+) -> Result<TruncatedSvd<S>> {
+    let (m, n) = (be.m(), be.n());
+    let LancSvdOpts { r, p, b, seed, init, tol, wanted, restart } = opts.clone();
+    let keep = check_opts(m, n, opts)?;
+    ws.plan().require(PlanKind::LancSvd, m, n, r, b)?;
+    be.plan(ws.plan());
+
+    // Solve-state buffers, borrowed for the whole solve. The orth
+    // kernels borrow only their own `orth.{w,l1,l2,hbar,snap}` scratch,
+    // so no aliasing can occur; `orth.{h,r}` are borrowed here as the
+    // H/small-factor destinations.
+    let mut qbar = ws.mat(names::LANC_QBAR, m, b);
+    let mut qnext = ws.mat(names::LANC_QNEXT, m, b);
+    let mut p_basis = ws.mat(names::LANC_P, n, r);
+    let mut pbar_basis = ws.mat(names::LANC_PBAR, m, r);
+    let mut bmat = ws.mat(names::LANC_B, r, r);
+    let mut rk_last = ws.mat(names::LANC_RK, b, b);
+    let mut svd_u = ws.mat(names::SVD_U, r, r);
+    let mut svd_v = ws.mat(names::SVD_V, r, r);
+    let mut tmp = ws.buf(names::LANC_TMP);
+    let mut lt_buf = ws.buf(names::ORTH_R);
+    let mut h_buf = ws.buf(names::ORTH_H);
+
+    // Reset reused state (the arena may carry a previous solve).
+    p_basis.data_mut().fill(S::ZERO);
+    pbar_basis.data_mut().fill(S::ZERO);
+    bmat.data_mut().fill(S::ZERO);
+    rk_last.data_mut().fill(S::ZERO);
 
     // S1: random orthonormal start block Q̄₁ ∈ ℝ^{m×b}.
     be.profile_mut().set_phase(Block::Init);
     let mut rng = Rng::new(seed);
-    let mut qbar_cur = match init {
-        InitDist::CenteredPoisson => random_orthonormal_panel(be, m, b, &mut rng)?,
-        InitDist::Normal => {
-            let mut q = Mat::randn(m, b, &mut rng);
-            cholqr2(be, &mut q)?;
-            q
-        }
-    };
+    match init {
+        InitDist::CenteredPoisson => rng.fill_centered_poisson(qbar.data_mut()),
+        InitDist::Normal => rng.fill_normal(qbar.data_mut()),
+    }
+    {
+        let lt = lt_buf.view_mut(b, b);
+        be.orth_cholqr2_into(qbar.as_mut(), lt, ws)?;
+    }
 
-    let mut p_basis = Mat::zeros(n, r); // [Q₁ … Q_k]
-    let mut pbar_basis = Mat::zeros(m, r); // [Q̄₁ … Q̄_k]
-    let mut bmat = Mat::zeros(r, r);
-    let mut rk_last = Mat::zeros(b, b);
-    let mut svd_b = None;
+    let mut svals: Vec<S> = Vec::with_capacity(r);
+    let mut have_svd = false;
     let mut iters = 0;
-    let mut est_res: Vec<f64> = Vec::new();
+    let mut est_res: Vec<f64> = Vec::with_capacity(wanted);
+    let mut coupling_tail = vec![S::ZERO; b];
     // Columns of the bases already valid at loop entry (0, or `keep`
     // after a thick restart).
     let mut filled = 0usize;
@@ -92,83 +151,86 @@ pub fn lancsvd<S: Scalar, B: Backend<S> + ?Sized>(
         while filled < r {
             let s = filled;
             // Record Q̄ᵢ into P̄ before extending the m-side basis.
-            pbar_basis.set_panel(s, &qbar_cur);
+            pbar_basis.set_panel(s, &qbar);
 
-            // S2: Qᵢ = Aᵀ·Q̄ᵢ
+            // S2: Qᵢ = Aᵀ·Q̄ᵢ, computed in place inside the P panel.
             be.profile_mut().set_phase(Block::MultAt);
-            let mut qi = be.apply_at(qbar_cur.as_ref());
+            {
+                let (hist, mut rest) = p_basis.split_at_col(s);
+                let mut qi = rest.panel_mut(0, b);
+                be.apply_at_into(qbar.as_ref(), qi.reborrow());
 
-            // S3: orthogonalize in the n dimension → Lᵢᵀ (upper).
-            be.profile_mut().set_phase(Block::OrthN);
-            let lt = if s == 0 {
-                cholqr2(be, &mut qi)? // S3a
-            } else {
-                let (_h, lt) = {
-                    let panel = p_basis.panel(0, s);
-                    cgs_cqr2(be, &mut qi, panel)? // S3b
-                };
-                lt
-            };
-            p_basis.set_panel(s, &qi);
-            // B diagonal block: Lᵢ = (Lᵢᵀ)ᵀ, lower triangular.
-            for jj in 0..b {
-                for ii in jj..b {
-                    bmat.set(s + ii, s + jj, lt.at(jj, ii));
+                // S3: orthogonalize in the n dimension → Lᵢᵀ (upper).
+                be.profile_mut().set_phase(Block::OrthN);
+                let mut lt = lt_buf.view_mut(b, b);
+                if s == 0 {
+                    be.orth_cholqr2_into(qi, lt.reborrow(), ws)?; // S3a
+                } else {
+                    let h = h_buf.view_mut(s, b);
+                    be.orth_cgs_cqr2_into(qi, hist, h, lt.reborrow(), ws)?; // S3b
+                }
+                // B diagonal block: Lᵢ = (Lᵢᵀ)ᵀ, lower triangular.
+                for jj in 0..b {
+                    for ii in jj..b {
+                        bmat.set(s + ii, s + jj, lt.at(jj, ii));
+                    }
                 }
             }
 
             // S4: Q̄ᵢ₊₁ = A·Qᵢ
             be.profile_mut().set_phase(Block::MultA);
-            let mut qbar_next = be.apply_a(qi.as_ref());
+            be.apply_a_into(p_basis.panel(s, b), qnext.as_mut());
 
             // S5: orthogonalize in the m dimension against P̄ᵢ → Rᵢ.
             be.profile_mut().set_phase(Block::OrthM);
-            let (_hbar, ri) = {
-                let panel = pbar_basis.panel(0, s + b);
-                cgs_cqr2(be, &mut qbar_next, panel)?
-            };
-            if s + b < r {
-                // B sub-diagonal block (upper-triangular Rᵢ).
-                for jj in 0..b {
-                    for ii in 0..=jj {
-                        bmat.set(s + b + ii, s + jj, ri.at(ii, jj));
+            {
+                let hist = pbar_basis.panel(0, s + b);
+                let h = h_buf.view_mut(s + b, b);
+                let mut ri = lt_buf.view_mut(b, b);
+                be.orth_cgs_cqr2_into(qnext.as_mut(), hist, h, ri.reborrow(), ws)?;
+                if s + b < r {
+                    // B sub-diagonal block (upper-triangular Rᵢ).
+                    for jj in 0..b {
+                        for ii in 0..=jj {
+                            bmat.set(s + b + ii, s + jj, ri.at(ii, jj));
+                        }
                     }
+                } else {
+                    // ‖R_k‖ drives the residual estimate.
+                    rk_last.data_mut().copy_from_slice(ri.data);
                 }
-            } else {
-                rk_last = ri; // ‖R_k‖ drives the residual estimate
             }
-            qbar_cur = qbar_next;
+            std::mem::swap(&mut *qbar, &mut *qnext);
             filled += b;
         }
 
-        // S6: SVD of B_k on the host.
+        // S6: SVD of B_k on the host, into the planned Ū/V̄ buffers.
         be.profile_mut().set_phase(Block::SmallSvd);
         let t = Timer::start(9.0 * (r * r * r) as f64);
-        let svd = jacobi_svd(&bmat)?;
+        jacobi_svd_into(bmat.as_ref(), svd_u.as_mut(), &mut svals, svd_v.as_mut())?;
         t.stop(be.profile_mut());
+        have_svd = true;
 
         // Free residual estimates: ‖A·(P v̄ᵢ) − σᵢ·(P̄ ūᵢ)‖ = ‖R_k·v̄ᵢ[r−b..r]‖.
-        let coupling = |i: usize| -> Vec<S> {
-            let mut tail = vec![S::ZERO; b];
+        let coupling = |i: usize, tail: &mut [S]| {
             for (t_i, tv) in tail.iter_mut().enumerate() {
                 let mut acc = S::ZERO;
                 for c in 0..b {
-                    acc += rk_last.at(t_i, c) * svd.v.at(r - b + c, i);
+                    acc += rk_last.at(t_i, c) * svd_v.at(r - b + c, i);
                 }
                 *tv = acc;
             }
-            tail
         };
-        est_res = (0..wanted.min(r))
-            .map(|i| {
-                let sigma = svd.s[i];
-                if sigma > S::ZERO {
-                    (nrm2(&coupling(i)) / sigma).to_f64()
-                } else {
-                    f64::INFINITY
-                }
-            })
-            .collect();
+        est_res.clear();
+        for i in 0..wanted.min(r) {
+            let sigma = svals[i];
+            if sigma > S::ZERO {
+                coupling(i, &mut coupling_tail);
+                est_res.push((nrm2(&coupling_tail) / sigma).to_f64());
+            } else {
+                est_res.push(f64::INFINITY);
+            }
+        }
 
         let converged = tol
             .map(|t| est_res.iter().take(wanted).all(|&x| x < t))
@@ -179,9 +241,10 @@ pub fn lancsvd<S: Scalar, B: Backend<S> + ?Sized>(
             match restart {
                 Restart::Basic => {
                     // S7: Q̄₁ ← P̄·Ū₁ (first b columns of Ū), rebuild all.
-                    qbar_cur = be.gemm_nn(pbar_basis.as_ref(), svd.u.panel(0, b));
+                    be.gemm_nn_into(pbar_basis.as_ref(), svd_u.panel(0, b), qbar.as_mut());
                     be.profile_mut().set_phase(Block::OrthM);
-                    cholqr2(be, &mut qbar_cur)?;
+                    let lt = lt_buf.view_mut(b, b);
+                    be.orth_cholqr2_into(qbar.as_mut(), lt, ws)?;
                     bmat.data_mut().fill(S::ZERO);
                     filled = 0;
                 }
@@ -191,44 +254,52 @@ pub fn lancsvd<S: Scalar, B: Backend<S> + ?Sized>(
                     // the residual coupling S = R_k·V̄[last b, :keep] in
                     // the first sub-row block; the continuation block is
                     // the *existing* residual Q̄_{k+1} (already ⊥ P̄·Ū).
-                    let p_new = be.gemm_nn(p_basis.as_ref(), svd.v.panel(0, keep));
-                    let pbar_new = be.gemm_nn(pbar_basis.as_ref(), svd.u.panel(0, keep));
-                    p_basis.data_mut().fill(S::ZERO);
-                    pbar_basis.data_mut().fill(S::ZERO);
-                    p_basis.set_panel(0, &p_new);
-                    pbar_basis.set_panel(0, &pbar_new);
+                    {
+                        let mut p_new = tmp.view_mut(n, keep);
+                        be.gemm_nn_into(p_basis.as_ref(), svd_v.panel(0, keep), p_new.reborrow());
+                        p_basis.data_mut().fill(S::ZERO);
+                        p_basis.set_panel_ref(0, p_new.as_ref());
+                    }
+                    {
+                        let mut pbar_new = tmp.view_mut(m, keep);
+                        be.gemm_nn_into(
+                            pbar_basis.as_ref(),
+                            svd_u.panel(0, keep),
+                            pbar_new.reborrow(),
+                        );
+                        pbar_basis.data_mut().fill(S::ZERO);
+                        pbar_basis.set_panel_ref(0, pbar_new.as_ref());
+                    }
                     bmat.data_mut().fill(S::ZERO);
                     for i in 0..keep {
-                        bmat.set(i, i, svd.s[i]);
+                        bmat.set(i, i, svals[i]);
                     }
                     for i in 0..keep {
-                        let s_col = coupling(i);
-                        for (t_i, &v) in s_col.iter().enumerate() {
+                        coupling(i, &mut coupling_tail);
+                        for (t_i, &v) in coupling_tail.iter().enumerate() {
                             bmat.set(keep + t_i, i, v);
                         }
                     }
                     filled = keep;
-                    // qbar_cur is already the residual block Q̄_{k+1}.
+                    // qbar is already the residual block Q̄_{k+1}.
                 }
             }
-            svd_b = Some(svd);
-        } else {
-            svd_b = Some(svd);
-            if converged {
-                break;
-            }
+        } else if converged {
+            break;
         }
     }
 
-    let svd = svd_b.expect("at least one outer iteration ran");
+    debug_assert!(have_svd, "at least one outer iteration ran");
     // S8/S9: map back to the problem space: U = P̄·Ū, V = P·V̄.
     be.profile_mut().set_phase(Block::Finalize);
-    let u_t = be.gemm_nn(pbar_basis.as_ref(), svd.u.as_ref());
-    let v_t = be.gemm_nn(p_basis.as_ref(), svd.v.as_ref());
+    let mut u_t = Mat::zeros(m, r);
+    be.gemm_nn_into(pbar_basis.as_ref(), svd_u.as_ref(), u_t.as_mut());
+    let mut v_t = Mat::zeros(n, r);
+    be.gemm_nn_into(p_basis.as_ref(), svd_v.as_ref(), v_t.as_mut());
 
     Ok(TruncatedSvd {
         u: u_t,
-        sigma: svd.s,
+        sigma: svals,
         v: v_t,
         profile: be.take_profile(),
         iters,
@@ -267,6 +338,31 @@ mod tests {
         let mut be2 = CpuBackend::new_dense(prob.a);
         let res = residuals(&mut be2, &svd, 6);
         assert!(res.iter().all(|&x| x < 1e-8), "residuals {res:?}");
+    }
+
+    #[test]
+    fn workspace_reuse_across_solves_is_exact() {
+        // Two solves through one arena must equal a fresh-workspace
+        // solve bitwise (plan reuse across restarts/solves).
+        let prob = paper_dense(120, 40, 6);
+        let opts = LancSvdOpts { r: 16, p: 3, b: 8, wanted: 5, ..Default::default() };
+        let mut be = CpuBackend::new_dense(prob.a.clone());
+        let fresh = lancsvd(&mut be, &opts).unwrap();
+        let ws = Workspace::new(Plan::lancsvd(120, 40, 16, 3, 8));
+        let mut be1 = CpuBackend::new_dense(prob.a.clone());
+        let first = lancsvd_with(&mut be1, &opts, &ws).unwrap();
+        let mut be2 = CpuBackend::new_dense(prob.a.clone());
+        let second = lancsvd_with(&mut be2, &opts, &ws).unwrap();
+        for i in 0..5 {
+            assert_eq!(fresh.sigma[i], first.sigma[i], "fresh vs first sigma_{i}");
+            assert_eq!(first.sigma[i], second.sigma[i], "first vs second sigma_{i}");
+        }
+        assert_eq!(first.u.data(), second.u.data(), "U must be reproducible");
+        assert_eq!(first.v.data(), second.v.data(), "V must be reproducible");
+        // A mismatched workspace is rejected, not misused.
+        let bad = Workspace::new(Plan::lancsvd(120, 40, 32, 3, 8));
+        let mut be3 = CpuBackend::new_dense(prob.a);
+        assert!(lancsvd_with(&mut be3, &opts, &bad).is_err());
     }
 
     #[test]

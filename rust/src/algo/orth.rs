@@ -1,137 +1,207 @@
-//! Orthogonalization building blocks (Algorithms 4 and 5 of the paper).
+//! Orthogonalization building blocks (Algorithms 4 and 5 of the paper),
+//! in workspace-planned out-parameter form.
 //!
-//! * [`cholqr2`] — CholeskyQR2 (Alg. 4): Gram → POTRF → TRSM, twice.
-//! * [`cgs_cqr2`] — block classical Gram-Schmidt against a fixed panel
-//!   followed by CholeskyQR2, with a full second pass (Alg. 5).
+//! * [`cholqr2_into`] — CholeskyQR2 (Alg. 4): Gram → POTRF → TRSM, twice,
+//!   in place on a borrowed panel, R written into a caller buffer.
+//! * [`cgs_cqr2_into`] — block classical Gram-Schmidt against a fixed
+//!   panel followed by CholeskyQR2, with a full second pass (Alg. 5);
+//!   H and R written into caller buffers.
+//!
+//! All per-pass scratch (the b×b Gram/Cholesky factors, the second-pass
+//! projection block, and the breakdown snapshot) comes from the solve's
+//! [`Workspace`] (`orth.*` entries), so in steady state these kernels
+//! perform **zero heap allocations** — the breakdown fallback path is
+//! the only exception and is exercised only on rank-deficient panels.
+//! The legacy value-returning forms ([`cholqr2`], [`cgs_cqr2`]) remain
+//! as thin wrappers for tests and one-shot callers.
 //!
 //! Both keep the paper's hybrid split: the Gram products, CGS projections
 //! and triangular solves run on the device [`Backend`]; the tiny b×b
-//! Cholesky runs on the host. On a Cholesky breakdown (rank-deficient
-//! panel) the code falls back to column-wise CGS2 (paper §3.2), completing
-//! dead columns with fresh random directions so the returned Q always has
-//! orthonormal columns.
+//! Cholesky runs on the host (in place on a workspace buffer). On a
+//! Cholesky breakdown (rank-deficient panel) the code falls back to
+//! column-wise CGS2 (paper §3.2), completing dead columns with fresh
+//! random directions so the returned Q always has orthonormal columns.
 
 use crate::backend::Backend;
 use crate::error::{Error, Result};
 use crate::la::blas1::{axpy, dot, nrm2, scal};
-use crate::la::blas3::trmm_lt_lt;
-use crate::la::chol::potrf;
-use crate::la::mat::{Mat, MatRef};
+use crate::la::chol::potrf_into;
+use crate::la::mat::{Mat, MatMut, MatRef};
+use crate::la::workspace::{names, Workspace};
 use crate::metrics::Timer;
 use crate::util::rng::Rng;
 use crate::util::scalar::Scalar;
 
-/// One CholeskyQR pass: W = QᵀQ, L = chol(W), Q ← Q·L⁻ᵀ. Returns L.
-/// The POTRF is charged to the current phase as host (small-factor) work.
-fn cholqr_pass<S: Scalar, B: Backend<S> + ?Sized>(be: &mut B, q: &mut Mat<S>) -> Result<Mat<S>> {
-    let w = be.gram(q.as_ref());
-    let b = w.rows();
-    let t = Timer::start(b as f64 * b as f64 * b as f64 / 3.0);
-    let l = potrf(&w);
-    t.stop(be.profile_mut());
-    let l = l?;
-    be.tri_solve_right(q, &l);
-    Ok(l)
+/// One CholeskyQR pass: W = QᵀQ, L = chol(W), Q ← Q·L⁻ᵀ. W comes from
+/// the workspace; L is written into the caller's buffer (it outlives
+/// the pass — the factor product needs both passes' L). The POTRF is
+/// charged to the current phase as host (small-factor) work.
+fn cholqr_pass_into<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    q: &mut MatMut<'_, S>,
+    l: &mut MatMut<'_, S>,
+    ws: &Workspace<S>,
+) -> Result<()> {
+    let b = q.cols;
+    {
+        let mut w_buf = ws.buf(names::ORTH_W);
+        let mut w = w_buf.view_mut(b, b);
+        be.gram_into(q.as_ref(), w.reborrow());
+        let t = Timer::start(b as f64 * b as f64 * b as f64 / 3.0);
+        let res = potrf_into(w.as_ref(), l.reborrow());
+        t.stop(be.profile_mut());
+        res?;
+    }
+    be.tri_solve_right(q.reborrow(), l.as_ref());
+    Ok(())
 }
 
-/// CholeskyQR2 (Alg. 4). Orthonormalizes the q×b panel `q` in place and
-/// returns the upper-triangular R (b×b) with `Q_in = Q_out · R`.
+/// CholeskyQR2 (Alg. 4), host composition (the trait's default for
+/// [`Backend::orth_cholqr2_into`]). Orthonormalizes the q×b panel in
+/// place and writes the upper-triangular R (b×b, `Q_in = Q_out·R`) into
+/// `r`.
 ///
 /// Note on Alg. 4 step S7: the paper prints `R = Lᵀ·L̄ᵀ`, but from
 /// Q₀ = Q₁Lᵀ and Q₁ = Q₂L̄ᵀ it follows Q₀ = Q₂·(L̄ᵀLᵀ), so the factor
 /// consistent with `Q_in = Q_out·R` is `R = L̄ᵀ·Lᵀ`; we compute that and
 /// verify it by reconstruction in the tests.
-pub fn cholqr2_host<S: Scalar, B: Backend<S> + ?Sized>(
+pub fn cholqr2_into_host<S: Scalar, B: Backend<S> + ?Sized>(
     be: &mut B,
-    q: &mut Mat<S>,
-) -> Result<Mat<S>> {
-    let snapshot = q.clone();
-    let l1 = match cholqr_pass(be, q) {
-        Ok(l) => l,
+    mut q: MatMut<'_, S>,
+    r: MatMut<'_, S>,
+    ws: &Workspace<S>,
+) -> Result<()> {
+    let b = q.cols;
+    assert_eq!((r.rows, r.cols), (b, b), "cholqr2 R shape");
+    // Snapshot for the breakdown fallback (restores Q_in exactly).
+    let mut snap_buf = ws.buf(names::ORTH_SNAP);
+    let mut snap = snap_buf.view_mut(q.rows, b);
+    snap.data.copy_from_slice(q.data);
+    let mut l1_buf = ws.buf(names::ORTH_L1);
+    let mut l1 = l1_buf.view_mut(b, b);
+    let mut l2_buf = ws.buf(names::ORTH_L2);
+    let mut l2 = l2_buf.view_mut(b, b);
+    match cholqr_pass_into(be, &mut q, &mut l1, ws) {
+        Ok(()) => {}
         Err(Error::CholeskyBreakdown { .. }) => {
-            *q = snapshot;
-            return cgs2_fallback(be, q, None);
+            q.data.copy_from_slice(snap.data);
+            return cgs2_fallback(be, q, None, r);
         }
         Err(e) => return Err(e),
-    };
-    let l2 = match cholqr_pass(be, q) {
-        Ok(l) => l,
+    }
+    match cholqr_pass_into(be, &mut q, &mut l2, ws) {
+        Ok(()) => {}
         Err(Error::CholeskyBreakdown { .. }) => {
-            *q = snapshot;
-            return cgs2_fallback(be, q, None);
+            q.data.copy_from_slice(snap.data);
+            return cgs2_fallback(be, q, None, r);
         }
         Err(e) => return Err(e),
-    };
+    }
     // R = L̄ᵀ·Lᵀ (upper triangular; see doc comment). Charged at the
     // Table-1 TRMM cost (b³) so model == instrumentation exactly.
-    let b = l1.rows();
     let t = Timer::start((b * b * b) as f64);
-    let r = trmm_lt_lt(&l2, &l1);
+    crate::la::blas3::trmm_lt_lt_into(l2.as_ref(), l1.as_ref(), r);
     t.stop(be.profile_mut());
-    Ok(r)
+    Ok(())
 }
 
-/// CGS + CholeskyQR2 orthogonalization against a fixed panel (Alg. 5).
+/// CGS + CholeskyQR2 orthogonalization against a fixed panel (Alg. 5),
+/// host composition (the trait's default for
+/// [`Backend::orth_cgs_cqr2_into`]).
 ///
-/// Orthogonalizes the q×b panel `q` against `p` (q×s, orthonormal) and
-/// within itself, in place, with a full second pass. Returns `(H, R)` with
-/// H s×b, R b×b upper triangular such that `Q_in ≈ P·H + Q_out·R`.
-/// Following the paper's step S12, H is accumulated as H + H̄ (the exact
+/// Orthogonalizes the q×b panel against `p` (q×s, orthonormal) and
+/// within itself, in place, with a full second pass. Writes H (s×b) and
+/// R (b×b upper triangular) such that `Q_in ≈ P·H + Q_out·R`. Following
+/// the paper's step S12, H is accumulated as H + H̄ (the exact
 /// correction H + H̄·Lᵀ differs at rounding level only).
-pub fn cgs_cqr2_host<S: Scalar, B: Backend<S> + ?Sized>(
+pub fn cgs_cqr2_into_host<S: Scalar, B: Backend<S> + ?Sized>(
     be: &mut B,
-    q: &mut Mat<S>,
+    mut q: MatMut<'_, S>,
     p: MatRef<'_, S>,
-) -> Result<(Mat<S>, Mat<S>)> {
-    assert_eq!(p.rows, q.rows(), "cgs_cqr2 panel rows");
-    let snapshot = q.clone();
+    mut h: MatMut<'_, S>,
+    mut r: MatMut<'_, S>,
+    ws: &Workspace<S>,
+) -> Result<()> {
+    assert_eq!(p.rows, q.rows, "cgs_cqr2 panel rows");
+    let b = q.cols;
+    assert_eq!((h.rows, h.cols), (p.cols, b), "cgs_cqr2 H shape");
+    assert_eq!((r.rows, r.cols), (b, b), "cgs_cqr2 R shape");
+    let mut snap_buf = ws.buf(names::ORTH_SNAP);
+    let mut snap = snap_buf.view_mut(q.rows, b);
+    snap.data.copy_from_slice(q.data);
     // First pass: project out P, then CholeskyQR.
-    let mut h = be.proj(p, q.as_ref()); // S1
-    be.subtract_proj(q, p, &h); // S2
-    let l1 = match cholqr_pass(be, q) {
-        Ok(l) => l,
+    be.proj_into(p, q.as_ref(), h.reborrow()); // S1
+    be.subtract_proj(q.reborrow(), p, h.as_ref()); // S2
+    let mut l1_buf = ws.buf(names::ORTH_L1);
+    let mut l1 = l1_buf.view_mut(b, b);
+    let mut l2_buf = ws.buf(names::ORTH_L2);
+    let mut l2 = l2_buf.view_mut(b, b);
+    match cholqr_pass_into(be, &mut q, &mut l1, ws) {
+        Ok(()) => {}
         Err(Error::CholeskyBreakdown { .. }) => {
             // For the fallback path H is recomputed directly from the
             // snapshot: H = Pᵀ·Q_in (P orthonormal).
-            let h = be.proj(p, snapshot.as_ref());
-            *q = snapshot;
-            let r = cgs2_fallback(be, q, Some(p))?;
-            return Ok((h, r));
+            be.proj_into(p, snap.as_ref(), h.reborrow());
+            q.data.copy_from_slice(snap.data);
+            return cgs2_fallback(be, q, Some(p), r);
         }
         Err(e) => return Err(e),
-    };
+    }
     // Second pass: re-project and re-normalize.
-    let hbar = be.proj(p, q.as_ref()); // S6
-    be.subtract_proj(q, p, &hbar); // S7
-    let l2 = match cholqr_pass(be, q) {
-        Ok(l) => l,
+    let mut hbar_buf = ws.buf(names::ORTH_HBAR);
+    let mut hbar = hbar_buf.view_mut(p.cols, b);
+    be.proj_into(p, q.as_ref(), hbar.reborrow()); // S6
+    be.subtract_proj(q.reborrow(), p, hbar.as_ref()); // S7
+    match cholqr_pass_into(be, &mut q, &mut l2, ws) {
+        Ok(()) => {}
         Err(Error::CholeskyBreakdown { .. }) => {
-            *q = snapshot.clone();
-            let r = cgs2_fallback(be, q, Some(p))?;
-            let h = be.proj(p, snapshot.as_ref());
-            return Ok((h, r));
+            be.proj_into(p, snap.as_ref(), h.reborrow());
+            q.data.copy_from_slice(snap.data);
+            return cgs2_fallback(be, q, Some(p), r);
         }
         Err(e) => return Err(e),
-    };
+    }
     // S11: R = L̄ᵀ·Lᵀ (see cholqr2 note); S12: H += H̄. Charged at the
     // Table-1 costs (b³ TRMM + s·b add) for exact model validation.
-    let b = l1.rows();
-    let t = Timer::start((b * b * b) as f64 + (h.rows() * h.cols()) as f64);
-    let r = trmm_lt_lt(&l2, &l1);
-    for (hv, hb) in h.data_mut().iter_mut().zip(hbar.data()) {
+    let t = Timer::start((b * b * b) as f64 + (h.rows * h.cols) as f64);
+    crate::la::blas3::trmm_lt_lt_into(l2.as_ref(), l1.as_ref(), r.reborrow());
+    for (hv, hb) in h.data.iter_mut().zip(hbar.data.iter()) {
         *hv += *hb;
     }
     t.stop(be.profile_mut());
-    Ok((h, r))
+    Ok(())
 }
 
-/// Backend-dispatching entry point for Alg. 4 (the XLA backend overrides
-/// the trait method with its fused AOT graph).
+/// Backend-dispatching entry point for the out-parameter Alg. 4 (the
+/// XLA backend overrides the trait method with its fused AOT graph).
+pub fn cholqr2_into<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    q: MatMut<'_, S>,
+    r: MatMut<'_, S>,
+    ws: &Workspace<S>,
+) -> Result<()> {
+    be.orth_cholqr2_into(q, r, ws)
+}
+
+/// Backend-dispatching entry point for the out-parameter Alg. 5.
+pub fn cgs_cqr2_into<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    q: MatMut<'_, S>,
+    p: MatRef<'_, S>,
+    h: MatMut<'_, S>,
+    r: MatMut<'_, S>,
+    ws: &Workspace<S>,
+) -> Result<()> {
+    be.orth_cgs_cqr2_into(q, p, h, r, ws)
+}
+
+/// Value-returning Alg. 4 wrapper (tests / examples / one-shot callers;
+/// allocates a throwaway workspace through the trait wrapper).
 pub fn cholqr2<S: Scalar, B: Backend<S> + ?Sized>(be: &mut B, q: &mut Mat<S>) -> Result<Mat<S>> {
     be.orth_cholqr2(q)
 }
 
-/// Backend-dispatching entry point for Alg. 5.
+/// Value-returning Alg. 5 wrapper (tests / examples / one-shot callers).
 pub fn cgs_cqr2<S: Scalar, B: Backend<S> + ?Sized>(
     be: &mut B,
     q: &mut Mat<S>,
@@ -142,18 +212,22 @@ pub fn cgs_cqr2<S: Scalar, B: Backend<S> + ?Sized>(
 
 /// Column-wise classical Gram-Schmidt with re-orthogonalization — the
 /// breakdown fallback of paper §3.2. Orthonormalizes `q` in place against
-/// `p` (if given) and itself; returns the triangular factor R. Columns
-/// that vanish (exact rank deficiency) are replaced by fresh random
-/// directions (their R column is zero).
+/// `p` (if given) and itself; writes the triangular factor into `r`.
+/// Columns that vanish (exact rank deficiency) are replaced by fresh
+/// random directions (their R column is zero). This path only runs on
+/// rank-deficient panels, so its small bookkeeping allocations are off
+/// the steady-state contract.
 pub fn cgs2_fallback<S: Scalar, B: Backend<S> + ?Sized>(
     be: &mut B,
-    q: &mut Mat<S>,
+    mut q: MatMut<'_, S>,
     p: Option<MatRef<'_, S>>,
-) -> Result<Mat<S>> {
-    let rows = q.rows();
-    let b = q.cols();
+    mut r: MatMut<'_, S>,
+) -> Result<()> {
+    let rows = q.rows;
+    let b = q.cols;
+    assert_eq!((r.rows, r.cols), (b, b), "cgs2 fallback R shape");
     let t = Timer::start(0.0); // wall-time only; flop count folded into R
-    let mut r = Mat::zeros(b, b);
+    r.fill(S::ZERO);
     let mut rng = Rng::new(0x5EED_FA11);
     for j in 0..b {
         let mut norm_orig = nrm2(q.col(j));
@@ -167,17 +241,17 @@ pub fn cgs2_fallback<S: Scalar, B: Backend<S> + ?Sized>(
                 if let Some(pp) = p {
                     for kcol in 0..pp.cols {
                         let coef = dot(pp.col(kcol), q.col(j));
-                        let pc = pp.col(kcol).to_vec();
-                        axpy(-coef, &pc, q.col_mut(j));
+                        axpy(-coef, pp.col(kcol), q.col_mut(j));
                     }
                 }
                 for i in 0..j {
                     let coef = dot(q.col(i), q.col(j));
                     if _pass == 0 && attempts == 0 {
-                        r.add_at(i, j, coef);
+                        let prev = r.at(i, j);
+                        r.set(i, j, prev + coef);
                     }
-                    let ci = q.col(i).to_vec();
-                    axpy(-coef, &ci, q.col_mut(j));
+                    let (ci, cj) = q.col_pair_mut(i, j);
+                    axpy(-coef, ci, cj);
                 }
             }
             let nn = nrm2(q.col(j));
@@ -197,23 +271,19 @@ pub fn cgs2_fallback<S: Scalar, B: Backend<S> + ?Sized>(
                     "cgs2 fallback could not complete column {j} of a {rows}x{b} panel"
                 )));
             }
-            let mut fresh = vec![S::ZERO; rows];
-            rng.fill_normal(&mut fresh);
-            q.col_mut(j).copy_from_slice(&fresh);
-            for ri in 0..b {
-                if ri != j {
-                    r.set(ri, j, if ri < j { r.at(ri, j) } else { S::ZERO });
-                }
+            rng.fill_normal(q.col_mut(j));
+            for ri in j..b {
+                r.set(ri, j, S::ZERO);
             }
-            r.set(j, j, S::ZERO);
         }
     }
     t.stop(be.profile_mut());
-    Ok(r)
+    Ok(())
 }
 
 /// Generate a random orthonormal q×b panel via the backend (paper Alg. 2
-/// step S1: random init + Alg. 4 orthonormalization).
+/// step S1: random init + Alg. 4 orthonormalization). Setup-phase
+/// helper; the solve loops fill their workspace buffers directly.
 pub fn random_orthonormal_panel<S: Scalar, B: Backend<S> + ?Sized>(
     be: &mut B,
     rows: usize,
@@ -231,6 +301,7 @@ mod tests {
     use crate::backend::cpu::CpuBackend;
     use crate::la::blas3::{mat_nn, mat_tn};
     use crate::la::norms::orth_error;
+    use crate::la::workspace::Plan;
 
     fn dummy_backend() -> CpuBackend {
         // The operand matrix is irrelevant for orthogonalization ops.
@@ -255,6 +326,39 @@ mod tests {
                     assert_eq!(r.at(i, j), 0.0);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn into_form_matches_wrapper_with_shared_workspace() {
+        // The workspace-reusing into-form must produce the same numbers
+        // as the throwaway-workspace wrapper, across repeated calls on
+        // one arena (plan reuse).
+        let mut be = dummy_backend();
+        let mut rng = Rng::new(41);
+        let ws = Workspace::new(Plan::orth(120, 24, 8));
+        for trial in 0..3 {
+            let y = Mat::randn(120, 8, &mut rng);
+            let mut q1 = y.clone();
+            let r1 = cholqr2(&mut be, &mut q1).unwrap();
+            let mut q2 = y.clone();
+            let mut r2 = Mat::zeros(8, 8);
+            cholqr2_into(&mut be, q2.as_mut(), r2.as_mut(), &ws).unwrap();
+            assert!(q1.max_abs_diff(&q2) == 0.0, "trial {trial} Q");
+            assert!(r1.max_abs_diff(&r2) == 0.0, "trial {trial} R");
+
+            let p = crate::la::qr::random_orthonormal(120, 24, &mut rng);
+            let z = Mat::randn(120, 8, &mut rng);
+            let mut q3 = z.clone();
+            let (h3, r3) = cgs_cqr2(&mut be, &mut q3, p.as_ref()).unwrap();
+            let mut q4 = z.clone();
+            let mut h4 = Mat::zeros(24, 8);
+            let mut r4 = Mat::zeros(8, 8);
+            cgs_cqr2_into(&mut be, q4.as_mut(), p.as_ref(), h4.as_mut(), r4.as_mut(), &ws)
+                .unwrap();
+            assert!(q3.max_abs_diff(&q4) == 0.0, "trial {trial} Q (cgs)");
+            assert!(h3.max_abs_diff(&h4) == 0.0, "trial {trial} H");
+            assert!(r3.max_abs_diff(&r4) == 0.0, "trial {trial} R (cgs)");
         }
     }
 

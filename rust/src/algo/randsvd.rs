@@ -5,26 +5,33 @@
 //! and re-orthonormalizes both tall-and-skinny factors with CGS-QR
 //! (Alg. 3); after the loop an r×r SVD of the last triangular factor
 //! yields the truncated decomposition (Eqs. 4–6 of the paper).
+//!
+//! ## Allocation-free steady state
+//!
+//! [`randsvd`] computes a [`Plan`] from `(m, n, r, p, b)`, allocates a
+//! [`Workspace`] (banded first-touch through the worker pool), hands
+//! the plan to the backend, and runs [`randsvd_with`]. The two sketches
+//! and the triangular factor live in planned buffers; `apply_a_into` /
+//! `apply_at_into` write one sketch from the other, and `cgs_qr_into`
+//! orthonormalizes in place — each power iteration performs zero heap
+//! allocations on the CPU backend (pinned by `tests/test_workspace.rs`,
+//! which asserts the total allocation count of a solve is *independent
+//! of p*). Callers with many solves of one shape pass their own
+//! workspace to [`randsvd_with`] and pay setup once.
 
 use crate::backend::Backend;
 use crate::error::{Error, Result};
-use crate::la::mat::Mat;
-use crate::la::svd::jacobi_svd;
+use crate::la::svd::jacobi_svd_into;
+use crate::la::workspace::{names, Plan, PlanKind, Workspace};
 use crate::metrics::{Block, Timer};
 use crate::util::rng::Rng;
 use crate::util::scalar::Scalar;
 
-use super::cgs_qr::cgs_qr;
+use super::cgs_qr::cgs_qr_into;
 use super::{InitDist, RandSvdOpts, TruncatedSvd};
 
-/// Run RandSVD on the backend's operand matrix (any [`Scalar`]
-/// precision; the paper's GPU regime is `S = f32`).
-pub fn randsvd<S: Scalar, B: Backend<S> + ?Sized>(
-    be: &mut B,
-    opts: &RandSvdOpts,
-) -> Result<TruncatedSvd<S>> {
-    let (m, n) = (be.m(), be.n());
-    let RandSvdOpts { r, p, b, seed, init } = *opts;
+fn check_opts(m: usize, n: usize, opts: &RandSvdOpts) -> Result<()> {
+    let RandSvdOpts { r, p, b, .. } = *opts;
     if r == 0 || r > n.min(m) {
         return Err(Error::InvalidParam(format!("r={r} out of range for {m}x{n}")));
     }
@@ -34,49 +41,86 @@ pub fn randsvd<S: Scalar, B: Backend<S> + ?Sized>(
     if b == 0 {
         return Err(Error::InvalidParam("b must be >= 1".into()));
     }
+    Ok(())
+}
 
-    // Initial random sketch Q0 ∈ R^{n×r}.
+/// Run RandSVD on the backend's operand matrix (any [`Scalar`]
+/// precision; the paper's GPU regime is `S = f32`). Plans and allocates
+/// a fresh workspace; see [`randsvd_with`] to reuse one across solves.
+pub fn randsvd<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    opts: &RandSvdOpts,
+) -> Result<TruncatedSvd<S>> {
+    let (m, n) = (be.m(), be.n());
+    check_opts(m, n, opts)?;
+    let ws = Workspace::new(Plan::randsvd(m, n, opts.r, opts.p, opts.b));
+    randsvd_with(be, opts, &ws)
+}
+
+/// [`randsvd`] over a caller-provided workspace (must have been
+/// allocated from a matching [`Plan::randsvd`]).
+pub fn randsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    opts: &RandSvdOpts,
+    ws: &Workspace<S>,
+) -> Result<TruncatedSvd<S>> {
+    let (m, n) = (be.m(), be.n());
+    let RandSvdOpts { r, p, b, seed, init } = *opts;
+    check_opts(m, n, opts)?;
+    ws.plan().require(PlanKind::RandSvd, m, n, r, b)?;
+    be.plan(ws.plan());
+
+    let mut q = ws.mat(names::RAND_Q, n, r);
+    let mut qbar = ws.mat(names::RAND_QBAR, m, r);
+    let mut r_last = ws.mat(names::RAND_R, r, r);
+    let mut svd_u = ws.mat(names::SVD_U, r, r);
+    let mut svd_v = ws.mat(names::SVD_V, r, r);
+
+    // Initial random sketch Q0 ∈ R^{n×r}, drawn straight into the
+    // planned buffer.
     be.profile_mut().set_phase(Block::Init);
     let t = Timer::start(0.0);
     let mut rng = Rng::new(seed);
-    let mut q = match init {
-        InitDist::CenteredPoisson => Mat::rand_centered_poisson(n, r, &mut rng),
-        InitDist::Normal => Mat::randn(n, r, &mut rng),
-    };
+    match init {
+        InitDist::CenteredPoisson => rng.fill_centered_poisson(q.data_mut()),
+        InitDist::Normal => rng.fill_normal(q.data_mut()),
+    }
     t.stop(be.profile_mut());
 
-    let mut qbar = Mat::zeros(m, r);
-    let mut r_last = Mat::zeros(r, r);
     for _j in 1..=p {
         // S1: Ȳ = A·Q
         be.profile_mut().set_phase(Block::MultA);
-        qbar = be.apply_a(q.as_ref());
-        // S2: Ȳ = Q̄·R̄ (orthogonalization in the m dimension)
+        be.apply_a_into(q.as_ref(), qbar.as_mut());
+        // S2: Ȳ = Q̄·R̄ (orthogonalization in the m dimension; R̄ is
+        // discarded — the buffer is overwritten by S4's factor).
         be.profile_mut().set_phase(Block::OrthM);
-        let _rbar = cgs_qr(be, &mut qbar, b)?;
+        cgs_qr_into(be, qbar.as_mut(), r_last.as_mut(), b, ws)?;
         // S3: Y = Aᵀ·Q̄
         be.profile_mut().set_phase(Block::MultAt);
-        q = be.apply_at(qbar.as_ref());
+        be.apply_at_into(qbar.as_ref(), q.as_mut());
         // S4: Y = Q·R (orthogonalization in the n dimension)
         be.profile_mut().set_phase(Block::OrthN);
-        r_last = cgs_qr(be, &mut q, b)?;
+        cgs_qr_into(be, q.as_mut(), r_last.as_mut(), b, ws)?;
     }
 
-    // S5: SVD of the small r×r factor on the host.
+    // S5: SVD of the small r×r factor on the host, into planned buffers.
     be.profile_mut().set_phase(Block::SmallSvd);
     let t = Timer::start(9.0 * (r * r * r) as f64); // O(r³) bookkeeping
-    let svd = jacobi_svd(&r_last)?;
+    let mut sigma: Vec<S> = Vec::with_capacity(r);
+    jacobi_svd_into(r_last.as_ref(), svd_u.as_mut(), &mut sigma, svd_v.as_mut())?;
     t.stop(be.profile_mut());
 
     // S6/S7: U_T = Q̄·V̄, V_T = Q·Ū.
     // From AᵀQ̄ = QR: A ≈ Q̄·Rᵀ·Qᵀ = Q̄·(V̄ΣŪᵀ)·Qᵀ = (Q̄V̄)·Σ·(QŪ)ᵀ.
     be.profile_mut().set_phase(Block::Finalize);
-    let u_t = be.gemm_nn(qbar.as_ref(), svd.v.as_ref());
-    let v_t = be.gemm_nn(q.as_ref(), svd.u.as_ref());
+    let mut u_t = crate::la::mat::Mat::zeros(m, r);
+    be.gemm_nn_into(qbar.as_ref(), svd_v.as_ref(), u_t.as_mut());
+    let mut v_t = crate::la::mat::Mat::zeros(n, r);
+    be.gemm_nn_into(q.as_ref(), svd_u.as_ref(), v_t.as_mut());
 
     Ok(TruncatedSvd {
         u: u_t,
-        sigma: svd.s,
+        sigma,
         v: v_t,
         profile: be.take_profile(),
         iters: p,
@@ -112,6 +156,26 @@ mod tests {
         let mut be2 = CpuBackend::new_dense(prob.a);
         let res = residuals(&mut be2, &svd, 4);
         assert!(res.iter().all(|&x| x < 1e-8), "residuals {res:?}");
+    }
+
+    #[test]
+    fn workspace_reuse_across_solves_is_exact() {
+        let prob = paper_dense(90, 30, 4);
+        let opts = RandSvdOpts { r: 12, p: 6, b: 4, seed: 11, ..Default::default() };
+        let mut be = CpuBackend::new_dense(prob.a.clone());
+        let fresh = randsvd(&mut be, &opts).unwrap();
+        let ws = Workspace::new(Plan::randsvd(90, 30, 12, 6, 4));
+        let mut be1 = CpuBackend::new_dense(prob.a.clone());
+        let first = randsvd_with(&mut be1, &opts, &ws).unwrap();
+        let mut be2 = CpuBackend::new_dense(prob.a.clone());
+        let second = randsvd_with(&mut be2, &opts, &ws).unwrap();
+        assert_eq!(fresh.sigma, first.sigma);
+        assert_eq!(first.sigma, second.sigma);
+        assert_eq!(first.u.data(), second.u.data());
+        assert_eq!(first.v.data(), second.v.data());
+        let bad = Workspace::new(Plan::randsvd(90, 30, 8, 6, 4));
+        let mut be3 = CpuBackend::new_dense(prob.a);
+        assert!(randsvd_with(&mut be3, &opts, &bad).is_err());
     }
 
     #[test]

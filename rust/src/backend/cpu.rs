@@ -1,18 +1,27 @@
 //! Pure-rust reference backend.
 //!
-//! Implements the [`Backend`] op set over the native dense/sparse
-//! substrates. The transposed product `apply_at` starts on the scatter
-//! kernel (the cuSPARSE-like "implicit transpose" the paper identifies
-//! as the bottleneck) and *adaptively* switches to a pre-transposed CSR
-//! copy built on a background thread once enough Aᵀ·X calls have been
-//! observed (paper §4.1.2's explicit-copy trade-off, amortized).
-//! [`CpuBackend::with_explicit_transpose`] builds the copy eagerly and
-//! [`CpuBackend::scatter_only`] pins the scatter baseline — both are
-//! kept so the ablation benches can compare all three strategies.
+//! Implements the out-parameter [`Backend`] op set over the native
+//! dense/sparse substrates: every `*_into` kernel writes straight into
+//! the caller's workspace buffer (or basis-panel view), so the
+//! steady-state inner iterations of both algorithms run with **zero
+//! heap allocations** on this backend — the property the counting-
+//! allocator test and the `BENCH_ASSERT_NOALLOC` gate pin.
+//!
+//! The transposed product `apply_at_into` starts on the scatter kernel
+//! (the cuSPARSE-like "implicit transpose" the paper identifies as the
+//! bottleneck) and *adaptively* switches to a pre-transposed CSR copy
+//! built on a background thread once enough Aᵀ·X calls have been
+//! observed (paper §4.1.2's explicit-copy trade-off, amortized; the
+//! operand is shared into the builder via `Arc`, and a pending build is
+//! joined on drop). [`CpuBackend::with_explicit_transpose`] builds the
+//! copy eagerly and [`CpuBackend::scatter_only`] pins the scatter
+//! baseline — both are kept so the ablation benches can compare all
+//! three strategies.
 
 use super::{AdaptiveTranspose, Backend, Operand};
 use crate::la::blas3;
-use crate::la::mat::{Mat, MatRef};
+use crate::la::mat::{Mat, MatMut, MatRef};
+use crate::la::workspace::Plan;
 use crate::metrics::{Profile, Timer};
 use crate::sparse::csr::Csr;
 use crate::util::scalar::Scalar;
@@ -23,14 +32,20 @@ pub struct CpuBackend<S: Scalar = f64> {
     a: Operand<S>,
     /// Explicit-Aᵀ strategy state (adaptive by default).
     at: AdaptiveTranspose<S>,
+    /// The plan of the current solve, recorded by [`Backend::plan`].
+    /// The CPU backend needs no device staging — the caller's workspace
+    /// buffers are its "device memory" — but keeping the plan makes the
+    /// hook observable (tests) and feeds future per-plan tuning.
+    planned: Option<Plan>,
     profile: Profile,
 }
 
 impl<S: Scalar> CpuBackend<S> {
-    pub fn new_sparse(a: Csr<S>) -> CpuBackend<S> {
+    pub fn new_sparse(a: impl Into<std::sync::Arc<Csr<S>>>) -> CpuBackend<S> {
         CpuBackend {
-            a: Operand::Sparse(a),
+            a: Operand::Sparse(a.into()),
             at: AdaptiveTranspose::from_env(),
+            planned: None,
             profile: Profile::new(),
         }
     }
@@ -39,6 +54,7 @@ impl<S: Scalar> CpuBackend<S> {
         CpuBackend {
             a: Operand::Dense(a),
             at: AdaptiveTranspose::new(None),
+            planned: None,
             profile: Profile::new(),
         }
     }
@@ -77,6 +93,11 @@ impl<S: Scalar> CpuBackend<S> {
     pub fn operand(&self) -> &Operand<S> {
         &self.a
     }
+
+    /// The plan recorded by the last [`Backend::plan`] call, if any.
+    pub fn planned(&self) -> Option<&Plan> {
+        self.planned.as_ref()
+    }
 }
 
 impl<S: Scalar> Backend<S> for CpuBackend<S> {
@@ -90,73 +111,64 @@ impl<S: Scalar> Backend<S> for CpuBackend<S> {
         self.a.nnz()
     }
 
-    fn apply_a(&mut self, x: MatRef<S>) -> Mat<S> {
-        let t = Timer::start(self.mult_flops(x.cols));
-        let mut y = Mat::zeros(self.m(), x.cols);
-        let xo = x.to_owned();
-        match &self.a {
-            Operand::Sparse(a) => a.spmm(&xo, &mut y),
-            Operand::Dense(a) => blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, &mut y),
-        }
-        t.stop(&mut self.profile);
-        y
+    fn plan(&mut self, plan: &Plan) {
+        self.planned = Some(plan.clone());
     }
 
-    fn apply_at(&mut self, x: MatRef<S>) -> Mat<S> {
+    fn apply_a_into(&mut self, x: MatRef<S>, y: MatMut<S>) {
         let t = Timer::start(self.mult_flops(x.cols));
-        let mut y = Mat::zeros(self.n(), x.cols);
         match &self.a {
-            Operand::Sparse(a) => {
-                let xo = x.to_owned();
-                match self.at.advance(a, x.cols) {
-                    Some(at) => at.spmm(&xo, &mut y),
-                    None => a.spmm_t(&xo, &mut y),
-                }
-            }
-            Operand::Dense(a) => blas3::gemm_tn(S::ONE, a.as_ref(), x, S::ZERO, &mut y),
+            Operand::Sparse(a) => a.spmm(x, y),
+            Operand::Dense(a) => blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, y),
         }
         t.stop(&mut self.profile);
-        y
     }
 
-    fn gram(&mut self, q: MatRef<S>) -> Mat<S> {
+    fn apply_at_into(&mut self, x: MatRef<S>, y: MatMut<S>) {
+        let t = Timer::start(self.mult_flops(x.cols));
+        match &self.a {
+            Operand::Sparse(a) => match self.at.advance(a, x.cols) {
+                Some(at) => at.spmm(x, y),
+                None => a.spmm_t(x, y),
+            },
+            Operand::Dense(a) => blas3::gemm_tn(S::ONE, a.as_ref(), x, S::ZERO, y),
+        }
+        t.stop(&mut self.profile);
+    }
+
+    fn gram_into(&mut self, q: MatRef<S>, w: MatMut<S>) {
         let flops = q.cols as f64 * q.cols as f64 * q.rows as f64; // syrk: b²q
         let t = Timer::start(flops);
-        let w = blas3::gram(q);
+        blas3::gram_into(q, w);
         t.stop(&mut self.profile);
-        w
     }
 
-    fn proj(&mut self, p: MatRef<S>, q: MatRef<S>) -> Mat<S> {
+    fn proj_into(&mut self, p: MatRef<S>, q: MatRef<S>, h: MatMut<S>) {
         let flops = 2.0 * p.rows as f64 * p.cols as f64 * q.cols as f64;
         let t = Timer::start(flops);
-        let mut h = Mat::zeros(p.cols, q.cols);
-        blas3::gemm_tn(S::ONE, p, q, S::ZERO, &mut h);
+        blas3::gemm_tn(S::ONE, p, q, S::ZERO, h);
         t.stop(&mut self.profile);
-        h
     }
 
-    fn subtract_proj(&mut self, q: &mut Mat<S>, p: MatRef<S>, h: &Mat<S>) {
-        let flops = 2.0 * p.rows as f64 * p.cols as f64 * h.cols() as f64;
+    fn subtract_proj(&mut self, q: MatMut<S>, p: MatRef<S>, h: MatRef<S>) {
+        let flops = 2.0 * p.rows as f64 * p.cols as f64 * h.cols as f64;
         let t = Timer::start(flops);
-        blas3::gemm_nn(-S::ONE, p, h.as_ref(), S::ONE, q);
+        blas3::gemm_nn(-S::ONE, p, h, S::ONE, q);
         t.stop(&mut self.profile);
     }
 
-    fn tri_solve_right(&mut self, q: &mut Mat<S>, l: &Mat<S>) {
-        let flops = q.cols() as f64 * q.cols() as f64 * q.rows() as f64; // b²q
+    fn tri_solve_right(&mut self, q: MatMut<S>, l: MatRef<S>) {
+        let flops = q.cols as f64 * q.cols as f64 * q.rows as f64; // b²q
         let t = Timer::start(flops);
         blas3::trsm_right_lt(l, q);
         t.stop(&mut self.profile);
     }
 
-    fn gemm_nn(&mut self, a: MatRef<S>, b: MatRef<S>) -> Mat<S> {
+    fn gemm_nn_into(&mut self, a: MatRef<S>, b: MatRef<S>, c: MatMut<S>) {
         let flops = 2.0 * a.rows as f64 * a.cols as f64 * b.cols as f64;
         let t = Timer::start(flops);
-        let mut c = Mat::zeros(a.rows, b.cols);
-        blas3::gemm_nn(S::ONE, a, b, S::ZERO, &mut c);
+        blas3::gemm_nn(S::ONE, a, b, S::ZERO, c);
         t.stop(&mut self.profile);
-        c
     }
 
     fn profile_mut(&mut self) -> &mut Profile {
@@ -210,6 +222,39 @@ mod tests {
     }
 
     #[test]
+    fn into_ops_write_into_panels() {
+        // The out-parameter forms target arbitrary panel views — here
+        // the middle columns of a wider buffer — without disturbing the
+        // rest of the buffer.
+        let a = small_sparse(21);
+        let ad = a.to_dense();
+        let mut be = CpuBackend::new_sparse(a);
+        let mut rng = Rng::new(22);
+        let x = Mat::randn(12, 2, &mut rng);
+        let mut buf = Mat::from_fn(20, 4, |_, _| 7.0);
+        be.apply_a_into(x.as_ref(), buf.panel_mut(1, 2));
+        let expect = mat_nn(&ad, &x);
+        for j in 0..2 {
+            for i in 0..20 {
+                assert!((buf.at(i, 1 + j) - expect.at(i, j)).abs() < 1e-12, "({i},{j})");
+            }
+        }
+        // untouched columns keep their sentinel
+        assert!(buf.col(0).iter().all(|&v| v == 7.0));
+        assert!(buf.col(3).iter().all(|&v| v == 7.0));
+    }
+
+    #[test]
+    fn plan_hook_records_plan() {
+        let mut be = CpuBackend::new_dense(Mat::zeros(30, 10));
+        assert!(be.planned().is_none());
+        let plan = Plan::lancsvd(30, 10, 8, 2, 4);
+        be.plan(&plan);
+        let seen = be.planned().expect("plan recorded");
+        assert_eq!((seen.m, seen.n, seen.r, seen.b), (30, 10, 8, 4));
+    }
+
+    #[test]
     fn explicit_transpose_same_numbers() {
         let a = small_sparse(3);
         let mut b1 = CpuBackend::new_sparse(a.clone()).scatter_only();
@@ -244,6 +289,18 @@ mod tests {
             std::thread::sleep(std::time::Duration::from_millis(2));
         }
         panic!("adaptive transpose was never adopted");
+    }
+
+    #[test]
+    fn drop_before_adoption_is_clean() {
+        // A backend dropped while its background transpose build is
+        // pending must join the builder (no detached thread, no panic).
+        let a = small_sparse(15);
+        let mut be = CpuBackend::new_sparse(a).with_adaptive_threshold(0);
+        let mut rng = Rng::new(16);
+        let z = Mat::randn(20, 2, &mut rng);
+        let _ = be.apply_at(z.as_ref()); // spawns the build
+        drop(be);
     }
 
     #[test]

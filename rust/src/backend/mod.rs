@@ -1,15 +1,41 @@
-//! Compute-backend abstraction.
+//! Compute-backend abstraction: an out-parameter op set over a planned
+//! workspace.
 //!
 //! The paper builds RandSVD and LancSVD from a fixed set of device
 //! building blocks (Table 1): multiplications with A/Aᵀ (cuSPARSE SpMM or
 //! cuBLAS GEMM), Gram products, CGS projections, and right-side triangular
 //! solves — with the tiny POTRF/GESVD factorizations staying on the host.
+//! Crucially, every operand of those blocks lives in a **preallocated
+//! device buffer**: the iteration loop launches kernels against resident
+//! memory and never allocates.
 //!
-//! [`Backend`] is exactly that op set. Two implementations exist:
-//! [`cpu::CpuBackend`] (pure-rust substrate, the reference) and
+//! [`Backend`] mirrors that contract. The primitive ops are
+//! **out-parameter `*_into` kernels** — `apply_a_into(x, y)` writes
+//! A·X into a caller-provided [`MatMut`] view instead of returning a
+//! fresh `Mat` — and the operand views come from a
+//! [`Workspace`](crate::la::workspace::Workspace) planned once per solve
+//! from `(m, n, r, p, b)` (see `la::workspace` for the plan lifecycle).
+//! [`Backend::plan`] hands the backend that [`Plan`] before the solve so
+//! it can stage device buffers for exactly the shapes that will flow
+//! through; the steady-state inner iterations of both algorithms then
+//! run with **zero heap allocations** on the CPU backend (pinned by
+//! `tests/test_workspace.rs` and the `BENCH_ASSERT_NOALLOC` gate).
+//!
+//! This is the enabling shape for the ROADMAP's device-resident GPU
+//! backend: a device target implements the `*_into` set against
+//! device-resident handles staged in `plan`, without ever materializing
+//! host matrices mid-iteration — something the old value-returning op
+//! set (`fn apply_a(..) -> Mat`) made structurally impossible.
+//!
+//! Thin value-returning wrappers (`apply_a`, `gram`, `orth_cholqr2`, …)
+//! remain as default methods for tests, examples, and one-shot callers;
+//! they allocate the output and delegate to the `*_into` form.
+//!
+//! Two implementations exist: [`cpu::CpuBackend`] (pure-rust substrate,
+//! the reference — allocation-free in steady state) and
 //! [`xla::XlaBackend`] (AOT JAX/Pallas artifacts through PJRT — the
-//! GPU-library stand-in). All operands are host `Mat`s; backends may stage
-//! them to device buffers internally.
+//! GPU-library stand-in; its artifact paths stage host literals, so the
+//! into-ops copy results into the caller's buffers).
 //!
 //! Every op self-records wall time and Table-1 flops into the backend's
 //! [`Profile`] under the phase set by the running algorithm, which is how
@@ -18,11 +44,16 @@
 pub mod cpu;
 pub mod xla;
 
-use crate::la::mat::{Mat, MatRef};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::la::mat::{Mat, MatMut, MatRef};
+use crate::la::workspace::{Plan, Workspace};
 use crate::metrics::Profile;
 use crate::util::scalar::Scalar;
 
-/// The device building-block set shared by both SVD algorithms.
+/// The device building-block set shared by both SVD algorithms, in
+/// out-parameter form over a planned workspace.
 ///
 /// Generic over the element precision `S` (default `f64`), so a bound of
 /// `B: Backend` keeps meaning the f64 op set while the algorithm drivers
@@ -37,38 +68,122 @@ pub trait Backend<S: Scalar = f64> {
     /// Non-zeros if the operand is sparse, `None` for dense.
     fn nnz(&self) -> Option<usize>;
 
-    /// Y = A · X  with X n×k (SpMM / GEMM).
-    fn apply_a(&mut self, x: MatRef<S>) -> Mat<S>;
-    /// Y = Aᵀ · X  with X m×k (transposed SpMM / GEMM).
-    fn apply_at(&mut self, x: MatRef<S>) -> Mat<S>;
-    /// W = QᵀQ (SYRK-shaped Gram product).
-    fn gram(&mut self, q: MatRef<S>) -> Mat<S>;
-    /// H = PᵀQ (block-CGS projection).
-    fn proj(&mut self, p: MatRef<S>, q: MatRef<S>) -> Mat<S>;
-    /// Q ← Q − P·H (block-CGS update).
-    fn subtract_proj(&mut self, q: &mut Mat<S>, p: MatRef<S>, h: &Mat<S>);
-    /// Q ← Q·L⁻ᵀ with L lower-triangular b×b (the TRSM of CholeskyQR2).
-    fn tri_solve_right(&mut self, q: &mut Mat<S>, l: &Mat<S>);
-    /// C = A·B (the finalize GEMMs forming U_T / V_T and the restart).
-    fn gemm_nn(&mut self, a: MatRef<S>, b: MatRef<S>) -> Mat<S>;
+    /// Stage for a planned solve: called once per solve, before the
+    /// iteration starts, with the [`Plan`] the workspace was allocated
+    /// from. Device backends allocate/stage resident buffers for these
+    /// shapes here; the CPU backend records the plan (its buffers *are*
+    /// the workspace). Default: no-op.
+    fn plan(&mut self, plan: &Plan) {
+        let _ = plan;
+    }
 
-    /// CholeskyQR2 orthonormalization of a q×b panel (Alg. 4), returning
-    /// R with `Q_in = Q_out·R`. The default composes the fine-grained ops
-    /// with the host POTRF; the XLA backend overrides it with the fused
-    /// AOT graph (falling back here on breakdown or unbucketable shapes).
-    fn orth_cholqr2(&mut self, q: &mut Mat<S>) -> crate::error::Result<Mat<S>> {
-        crate::algo::orth::cholqr2_host(self, q)
+    /// Y ← A · X  with X n×k, Y m×k (SpMM / GEMM).
+    fn apply_a_into(&mut self, x: MatRef<S>, y: MatMut<S>);
+    /// Y ← Aᵀ · X  with X m×k, Y n×k (transposed SpMM / GEMM).
+    fn apply_at_into(&mut self, x: MatRef<S>, y: MatMut<S>);
+    /// W ← QᵀQ (SYRK-shaped Gram product, W b×b).
+    fn gram_into(&mut self, q: MatRef<S>, w: MatMut<S>);
+    /// H ← PᵀQ (block-CGS projection, H s×b).
+    fn proj_into(&mut self, p: MatRef<S>, q: MatRef<S>, h: MatMut<S>);
+    /// Q ← Q − P·H (block-CGS update, in place).
+    fn subtract_proj(&mut self, q: MatMut<S>, p: MatRef<S>, h: MatRef<S>);
+    /// Q ← Q·L⁻ᵀ with L lower-triangular b×b (the TRSM of CholeskyQR2,
+    /// in place).
+    fn tri_solve_right(&mut self, q: MatMut<S>, l: MatRef<S>);
+    /// C ← A·B (the finalize GEMMs forming U_T / V_T and the restart).
+    fn gemm_nn_into(&mut self, a: MatRef<S>, b: MatRef<S>, c: MatMut<S>);
+
+    /// CholeskyQR2 orthonormalization of a q×b panel (Alg. 4), in place,
+    /// writing R (b×b, `Q_in = Q_out·R`) into the caller's buffer.
+    ///
+    /// **Workspace contract:** an implementation may borrow only the
+    /// internal scratch entries `orth.{w,l1,l2,hbar,snap}` from `ws`.
+    /// The algorithm loops keep `orth.{h,r}` (and every `lanc.*` /
+    /// `rand.*` / `svd.*` buffer) borrowed across this call as the
+    /// out-parameter destinations — touching them from inside an
+    /// override trips the arena's runtime aliasing guard. Backends
+    /// needing more scratch should stage their own in [`Backend::plan`].
+    ///
+    /// The default composes the fine-grained ops with the host
+    /// POTRF; the XLA backend overrides it with the fused AOT graph
+    /// (falling back here on breakdown or unbucketable shapes).
+    fn orth_cholqr2_into(
+        &mut self,
+        q: MatMut<S>,
+        r: MatMut<S>,
+        ws: &Workspace<S>,
+    ) -> crate::error::Result<()> {
+        crate::algo::orth::cholqr2_into_host(self, q, r, ws)
     }
 
     /// CGS + CholeskyQR2 orthogonalization against a history panel
-    /// (Alg. 5), returning (H, R) with `Q_in ≈ P·H + Q_out·R`. Override
-    /// semantics as for [`Backend::orth_cholqr2`].
+    /// (Alg. 5), in place, writing H (s×b) and R (b×b) with
+    /// `Q_in ≈ P·H + Q_out·R` into the caller's buffers. Override
+    /// semantics — including the workspace contract on which `orth.*`
+    /// entries may be borrowed — as for [`Backend::orth_cholqr2_into`].
+    fn orth_cgs_cqr2_into(
+        &mut self,
+        q: MatMut<S>,
+        p: MatRef<'_, S>,
+        h: MatMut<S>,
+        r: MatMut<S>,
+        ws: &Workspace<S>,
+    ) -> crate::error::Result<()> {
+        crate::algo::orth::cgs_cqr2_into_host(self, q, p, h, r, ws)
+    }
+
+    // ---- thin value-returning wrappers (tests / examples / one-shot) --
+
+    /// Allocating wrapper over [`Backend::apply_a_into`].
+    fn apply_a(&mut self, x: MatRef<S>) -> Mat<S> {
+        let mut y = Mat::zeros(self.m(), x.cols);
+        self.apply_a_into(x, y.as_mut());
+        y
+    }
+    /// Allocating wrapper over [`Backend::apply_at_into`].
+    fn apply_at(&mut self, x: MatRef<S>) -> Mat<S> {
+        let mut y = Mat::zeros(self.n(), x.cols);
+        self.apply_at_into(x, y.as_mut());
+        y
+    }
+    /// Allocating wrapper over [`Backend::gram_into`].
+    fn gram(&mut self, q: MatRef<S>) -> Mat<S> {
+        let mut w = Mat::zeros(q.cols, q.cols);
+        self.gram_into(q, w.as_mut());
+        w
+    }
+    /// Allocating wrapper over [`Backend::proj_into`].
+    fn proj(&mut self, p: MatRef<S>, q: MatRef<S>) -> Mat<S> {
+        let mut h = Mat::zeros(p.cols, q.cols);
+        self.proj_into(p, q, h.as_mut());
+        h
+    }
+    /// Allocating wrapper over [`Backend::gemm_nn_into`].
+    fn gemm_nn(&mut self, a: MatRef<S>, b: MatRef<S>) -> Mat<S> {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        self.gemm_nn_into(a, b, c.as_mut());
+        c
+    }
+    /// Allocating wrapper over [`Backend::orth_cholqr2_into`] with a
+    /// throwaway orth workspace.
+    fn orth_cholqr2(&mut self, q: &mut Mat<S>) -> crate::error::Result<Mat<S>> {
+        let ws = Workspace::new(Plan::orth(q.rows(), 0, q.cols()));
+        let mut r = Mat::zeros(q.cols(), q.cols());
+        self.orth_cholqr2_into(q.as_mut(), r.as_mut(), &ws)?;
+        Ok(r)
+    }
+    /// Allocating wrapper over [`Backend::orth_cgs_cqr2_into`] with a
+    /// throwaway orth workspace.
     fn orth_cgs_cqr2(
         &mut self,
         q: &mut Mat<S>,
         p: MatRef<'_, S>,
     ) -> crate::error::Result<(Mat<S>, Mat<S>)> {
-        crate::algo::orth::cgs_cqr2_host(self, q, p)
+        let ws = Workspace::new(Plan::orth(q.rows(), p.cols, q.cols()));
+        let mut h = Mat::zeros(p.cols, q.cols());
+        let mut r = Mat::zeros(q.cols(), q.cols());
+        self.orth_cgs_cqr2_into(q.as_mut(), p, h.as_mut(), r.as_mut(), &ws)?;
+        Ok((h, r))
     }
 
     /// The per-block profile (phase is set by the algorithms).
@@ -104,6 +219,15 @@ pub(crate) enum TransposeThreshold {
     Auto,
 }
 
+/// A transpose build in flight on a background thread. The operand is
+/// shared into the builder via `Arc` (no deep CSR clone), and the build
+/// is joined — or cancelled, if it has not started — when the owner is
+/// dropped, so no detached thread ever outlives its backend.
+struct PendingBuild<S: Scalar> {
+    cancel: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<Option<crate::sparse::csr::Csr<S>>>,
+}
+
 /// Adaptive explicit-transpose cache for the sparse Aᵀ·X path.
 ///
 /// The paper mitigates the scatter SpMMᵀ bottleneck by "explicitly
@@ -117,6 +241,14 @@ pub(crate) enum TransposeThreshold {
 /// backends embed one; the ablation benches disable it (`new(None)`) to
 /// keep the pure-scatter baseline measurable.
 ///
+/// Lifecycle: the builder thread receives the operand as an `Arc`
+/// clone — a pointer bump, not a deep copy of the nnz arrays — and a
+/// cancel flag. Dropping the `AdaptiveTranspose` (backend teardown
+/// before adoption) sets the flag and *joins* the handle: a build that
+/// has not started is skipped, one in flight finishes and is discarded.
+/// Either way the thread never outlives the backend and the Arc is
+/// released deterministically.
+///
 /// Threading interplay: the background build calls `Csr::transpose`,
 /// whose parallel passes submit to the same persistent `util::pool` the
 /// foreground kernels use. Submissions are serialized by the pool, so
@@ -124,7 +256,7 @@ pub(crate) enum TransposeThreshold {
 /// of oversubscribing the machine with a second thread set.
 pub(crate) struct AdaptiveTranspose<S: Scalar = f64> {
     at: Option<crate::sparse::csr::Csr<S>>,
-    pending: Option<std::thread::JoinHandle<crate::sparse::csr::Csr<S>>>,
+    pending: Option<PendingBuild<S>>,
     calls: usize,
     after: TransposeThreshold,
     /// Cost-model estimate, cached on the first `advance` in Auto mode.
@@ -169,10 +301,11 @@ impl<S: Scalar> AdaptiveTranspose<S> {
 
     /// Record one Aᵀ·X call against operand `a` with a `k`-column dense
     /// block; returns the cached transpose if it is available (caller
-    /// then uses gather-SpMM).
+    /// then uses gather-SpMM). The operand arrives as an `Arc` so the
+    /// background build shares it instead of deep-cloning the CSR.
     pub fn advance(
         &mut self,
-        a: &crate::sparse::csr::Csr<S>,
+        a: &Arc<crate::sparse::csr::Csr<S>>,
         k: usize,
     ) -> Option<&crate::sparse::csr::Csr<S>> {
         if self.at.is_none() {
@@ -183,14 +316,27 @@ impl<S: Scalar> AdaptiveTranspose<S> {
                     crate::cost::adaptive_transpose_threshold(a.rows(), a.cols(), a.nnz(), k)
                 })),
             };
-            if let Some(h) = &self.pending {
-                if h.is_finished() {
-                    let h = self.pending.take().expect("pending checked above");
-                    self.at = Some(h.join().expect("transpose builder panicked"));
+            if let Some(p) = &self.pending {
+                if p.handle.is_finished() {
+                    let p = self.pending.take().expect("pending checked above");
+                    // `None` means the build was cancelled before it
+                    // started (only possible via drop, which also joins —
+                    // but be tolerant).
+                    if let Some(at) = p.handle.join().expect("transpose builder panicked") {
+                        self.at = Some(at);
+                    }
                 }
             } else if threshold.is_some_and(|n| self.calls >= n) {
-                let a = a.clone();
-                self.pending = Some(std::thread::spawn(move || a.transpose()));
+                let a = Arc::clone(a);
+                let cancel = Arc::new(AtomicBool::new(false));
+                let cancel_in = Arc::clone(&cancel);
+                let handle = std::thread::spawn(move || {
+                    if cancel_in.load(Ordering::Acquire) {
+                        return None;
+                    }
+                    Some(a.transpose())
+                });
+                self.pending = Some(PendingBuild { cancel, handle });
             }
         }
         self.calls += 1;
@@ -206,16 +352,44 @@ impl<S: Scalar> AdaptiveTranspose<S> {
     pub fn enabled(&self) -> bool {
         !matches!(self.after, TransposeThreshold::Disabled) || self.at.is_some()
     }
+
+    /// Is a background build currently pending (spawned, not adopted)?
+    #[cfg(test)]
+    pub fn pending(&self) -> bool {
+        self.pending.is_some()
+    }
 }
 
-/// The operand matrix a backend is constructed around.
+impl<S: Scalar> Drop for AdaptiveTranspose<S> {
+    fn drop(&mut self) {
+        if let Some(p) = self.pending.take() {
+            // Ask a not-yet-started build to skip the work, then join so
+            // the thread (and its Arc on the operand) cannot outlive us.
+            p.cancel.store(true, Ordering::Release);
+            let _ = p.handle.join();
+        }
+    }
+}
+
+/// The operand matrix a backend is constructed around. Sparse operands
+/// are held behind an `Arc` so backends, residual checkers, and the
+/// background transpose build all share one copy of the index/value
+/// arrays (cloning an `Operand` is a pointer bump for sparse).
 #[derive(Clone, Debug)]
 pub enum Operand<S: Scalar = f64> {
-    Sparse(crate::sparse::csr::Csr<S>),
+    Sparse(Arc<crate::sparse::csr::Csr<S>>),
     Dense(Mat<S>),
 }
 
 impl<S: Scalar> Operand<S> {
+    /// Wrap a CSR operand (shared ownership).
+    pub fn sparse(a: crate::sparse::csr::Csr<S>) -> Operand<S> {
+        Operand::Sparse(Arc::new(a))
+    }
+    /// Wrap a dense operand.
+    pub fn dense(a: Mat<S>) -> Operand<S> {
+        Operand::Dense(a)
+    }
     pub fn shape(&self) -> (usize, usize) {
         match self {
             Operand::Sparse(a) => (a.rows(), a.cols()),
@@ -231,8 +405,92 @@ impl<S: Scalar> Operand<S> {
     /// Copy into another element precision (the `--dtype` conversion).
     pub fn cast<T: Scalar>(&self) -> Operand<T> {
         match self {
-            Operand::Sparse(a) => Operand::Sparse(a.cast()),
+            Operand::Sparse(a) => Operand::Sparse(Arc::new(a.cast())),
             Operand::Dense(a) => Operand::Dense(a.cast()),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::coo::Coo;
+    use crate::sparse::csr::Csr;
+    use crate::util::rng::Rng;
+
+    fn biggish_sparse(seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(400, 300);
+        for _ in 0..20_000 {
+            coo.push(rng.below(400), rng.below(300), rng.normal());
+        }
+        Csr::from_coo(&coo).unwrap()
+    }
+
+    /// Large enough that the background transpose cannot finish inside
+    /// the few microseconds between spawn and assertion.
+    fn huge_sparse(seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(3000, 2500);
+        for _ in 0..400_000 {
+            coo.push(rng.below(3000), rng.below(2500), rng.normal());
+        }
+        Csr::from_coo(&coo).unwrap()
+    }
+
+    #[test]
+    fn advance_shares_operand_via_arc() {
+        let a = Arc::new(huge_sparse(1));
+        let mut at: AdaptiveTranspose = AdaptiveTranspose::new(Some(0));
+        assert!(at.advance(&a, 4).is_none(), "first call spawns, no adoption yet");
+        // The builder thread holds an Arc *clone* of the operand — a
+        // pointer bump, not a deep copy. While the build is in flight
+        // the strong count is therefore ≥ 2; a regression back to deep
+        // cloning would leave it at 1 here.
+        assert!(at.pending(), "build must be pending after the spawning call");
+        assert!(
+            Arc::strong_count(&a) >= 2,
+            "builder must share the operand via Arc, not deep-clone it"
+        );
+        // Eventually adopted, and numerically the real transpose.
+        for _ in 0..20_000 {
+            if at.advance(&a, 4).is_some() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let adopted = at.advance(&a, 4).expect("background transpose adopted");
+        assert_eq!((adopted.rows(), adopted.cols()), (2500, 3000));
+        assert_eq!(adopted.nnz(), a.nnz());
+    }
+
+    #[test]
+    fn drop_joins_pending_build() {
+        // Dropping right after the spawn must join (not detach) the
+        // builder; this is a no-hang/no-leak smoke test.
+        for seed in 0..4 {
+            let a = Arc::new(biggish_sparse(10 + seed));
+            let mut at: AdaptiveTranspose = AdaptiveTranspose::new(Some(0));
+            let _ = at.advance(&a, 8);
+            drop(at);
+            // The operand Arc is ours again after the join completes
+            // (drop is synchronous), modulo the adopted-copy case where
+            // the build finished first and was discarded.
+            assert_eq!(Arc::strong_count(&a), 1);
+        }
+    }
+
+    #[test]
+    fn operand_clone_is_shallow_for_sparse() {
+        let op: Operand = Operand::sparse(biggish_sparse(7));
+        let c = op.clone();
+        match (&op, &c) {
+            (Operand::Sparse(a), Operand::Sparse(b)) => {
+                assert!(Arc::ptr_eq(a, b), "sparse operand clones must share storage");
+            }
+            _ => panic!("expected sparse operands"),
+        }
+        assert_eq!(op.shape(), (400, 300));
+        assert!(op.nnz().unwrap() > 0);
     }
 }

@@ -2,15 +2,20 @@
 //!
 //! Executes the paper's device building blocks through AOT-compiled
 //! JAX/Pallas graphs (see `python/compile/`) on the PJRT CPU client — the
-//! role cuBLAS/cuSPARSE play on the paper's A100. Semantics:
+//! role cuBLAS/cuSPARSE play on the paper's A100. Implements the
+//! out-parameter [`Backend`] op set: the artifact paths stage host
+//! literals in and out of PJRT (those transfers allocate — that is the
+//! nature of this stand-in), then copy the result into the caller's
+//! workspace buffer; every fallback path writes into the caller's
+//! buffer directly through the CPU substrate. Semantics:
 //!
-//! * **Fused orthogonalization** — `orth_cholqr2` / `orth_cgs_cqr2`
-//!   dispatch to the whole-graph artifacts (Gram→Cholesky→TRSM ×2 fused,
-//!   with the b×b Cholesky *in-graph*), padding q to its power-of-two
-//!   bucket and the history width s to its bucket with zeros (exact
-//!   no-ops — asserted in the python tests). Breakdown is detected as
-//!   NaN in the returned factor → fall back to the host path (which runs
-//!   the paper's CGS2 fallback).
+//! * **Fused orthogonalization** — `orth_cholqr2_into` /
+//!   `orth_cgs_cqr2_into` dispatch to the whole-graph artifacts
+//!   (Gram→Cholesky→TRSM ×2 fused, with the b×b Cholesky *in-graph*),
+//!   padding q to its power-of-two bucket and the history width s to its
+//!   bucket with zeros (exact no-ops — asserted in the python tests).
+//!   Breakdown is detected as NaN in the returned factor → fall back to
+//!   the host path (which runs the paper's CGS2 fallback).
 //! * **Dense multiplications** — A is staged once into a device-resident
 //!   padded buffer; apply_a/apply_at run the matmul artifacts via
 //!   `execute_b` (no per-call A transfer). Missing shapes fall back to
@@ -19,18 +24,22 @@
 //!   SpMM runs on the host substrate (the block-ELL Pallas kernel exists
 //!   and is integration-tested, see `tests/test_xla_runtime.rs`, but CSR
 //!   is the production path). The Aᵀ·X fallback carries the same
-//!   adaptive cached-transpose strategy as the CPU backend. Documented
-//!   in DESIGN.md §3.
+//!   adaptive cached-transpose strategy as the CPU backend (operand
+//!   shared via `Arc`, pending build joined on drop). Documented in
+//!   DESIGN.md §3.
 
 use std::rc::Rc;
+use std::sync::Arc;
 
 use super::{AdaptiveTranspose, Backend, Operand};
 use crate::error::{Error, Result};
 use crate::la::blas3;
-use crate::la::mat::{Mat, MatRef};
+use crate::la::mat::{Mat, MatMut, MatRef};
+use crate::la::workspace::{Plan, Workspace};
 use crate::metrics::{Profile, Timer};
-use crate::runtime::convert::{literal_to_mat, mat_to_literal, pow2_bucket};
+use crate::runtime::convert::{literal_to_mat, mat_to_literal, matref_to_literal, pow2_bucket};
 use crate::runtime::{builder_ops, Runtime};
+use crate::sparse::csr::Csr;
 
 /// Bucketing limits (mirror config/suite.json artifact_buckets).
 const Q_MIN: usize = 512;
@@ -58,6 +67,9 @@ pub struct XlaBackend {
     /// substrate — with the same scatter→cached-gather adaptivity as
     /// the CPU backend).
     at_cache: AdaptiveTranspose,
+    /// Plan of the current solve ([`Backend::plan`]); a real device
+    /// target would stage per-shape buffers here.
+    planned: Option<Plan>,
     profile: Profile,
 }
 
@@ -85,19 +97,21 @@ impl XlaBackend {
             _a_lit: a_lit,
             m_pad,
             at_cache: AdaptiveTranspose::new(None),
+            planned: None,
             profile: Profile::new(),
         })
     }
 
     /// Wrap a sparse operand (CSR SpMM runs on the host substrate).
-    pub fn new_sparse(rt: Rc<Runtime>, a: crate::sparse::csr::Csr) -> XlaBackend {
+    pub fn new_sparse(rt: Rc<Runtime>, a: impl Into<Arc<Csr>>) -> XlaBackend {
         XlaBackend {
             rt,
-            a: Operand::Sparse(a),
+            a: Operand::Sparse(a.into()),
             a_buf: None,
             _a_lit: None,
             m_pad: 0,
             at_cache: AdaptiveTranspose::from_env(),
+            planned: None,
             profile: Profile::new(),
         }
     }
@@ -106,10 +120,15 @@ impl XlaBackend {
         &self.rt
     }
 
+    /// The plan recorded by the last [`Backend::plan`] call, if any.
+    pub fn planned(&self) -> Option<&Plan> {
+        self.planned.as_ref()
+    }
+
     /// Fused-orth artifact path for Alg. 4. Returns None when no artifact
     /// applies (wrong b, q too large) so the caller can fall back.
-    fn try_cholqr2_artifact(&mut self, q: &mut Mat) -> Result<Option<Mat>> {
-        let (qr, b) = (q.rows(), q.cols());
+    fn try_cholqr2_artifact(&mut self, q: &mut MatMut<'_>) -> Result<Option<Mat>> {
+        let (qr, b) = (q.rows, q.cols);
         if b != B_ART || qr > Q_MAX {
             return Ok(None);
         }
@@ -120,7 +139,7 @@ impl XlaBackend {
         }
         let flops = crate::cost::ca4(b, qr);
         let t = Timer::start(flops);
-        let lit = mat_to_literal(q, q_pad, b)?;
+        let lit = matref_to_literal(q.as_ref(), q_pad, b)?;
         let outs = self.rt.run_artifact("cholqr2", &[&in_shape], &[lit])?;
         let q_out = literal_to_mat(&outs[0], qr, b)?;
         let r_out = literal_to_mat(&outs[1], b, b)?;
@@ -128,17 +147,17 @@ impl XlaBackend {
         if !mat_finite(&r_out) || !mat_finite(&q_out) {
             return Ok(None); // breakdown: NaN signal → host fallback
         }
-        *q = q_out;
+        q.data.copy_from_slice(q_out.data());
         Ok(Some(r_out))
     }
 
     /// Fused-orth artifact path for Alg. 5 (None → fall back).
     fn try_cgs_cqr2_artifact(
         &mut self,
-        q: &mut Mat,
+        q: &mut MatMut<'_>,
         p: MatRef<'_>,
     ) -> Result<Option<(Mat, Mat)>> {
-        let (qr, b) = (q.rows(), q.cols());
+        let (qr, b) = (q.rows, q.cols);
         let s = p.cols;
         if b != B_ART || qr > Q_MAX || s > S_MAX {
             return Ok(None);
@@ -152,8 +171,8 @@ impl XlaBackend {
         }
         let flops = crate::cost::ca5(b, qr, s);
         let t = Timer::start(flops);
-        let ql = mat_to_literal(q, q_pad, b)?;
-        let pl = mat_to_literal(&p.to_owned(), q_pad, s_pad)?;
+        let ql = matref_to_literal(q.as_ref(), q_pad, b)?;
+        let pl = matref_to_literal(p, q_pad, s_pad)?;
         let outs = self.rt.run_artifact("cgs_cqr2", &[&q_shape, &p_shape], &[ql, pl])?;
         let q_out = literal_to_mat(&outs[0], qr, b)?;
         let h_out = literal_to_mat(&outs[1], s, b)?;
@@ -162,7 +181,7 @@ impl XlaBackend {
         if !mat_finite(&q_out) || !mat_finite(&r_out) {
             return Ok(None);
         }
-        *q = q_out;
+        q.data.copy_from_slice(q_out.data());
         Ok(Some((h_out, r_out)))
     }
 
@@ -181,8 +200,7 @@ impl XlaBackend {
         if !self.rt.has_artifact(op, &[&a_shape, &x_shape]) {
             return Ok(None);
         }
-        let xo = x.to_owned();
-        let xl = mat_to_literal(&xo, x_shape[0], x_shape[1])?;
+        let xl = matref_to_literal(x, x_shape[0], x_shape[1])?;
         let x_buf = self.rt.stage(&xl)?;
         let outs = self.rt.run_artifact_b(op, &[&a_shape, &x_shape], &[a_buf, &x_buf])?;
         let y = literal_to_mat(&outs[0], out_rows, k)?;
@@ -205,122 +223,125 @@ impl Backend for XlaBackend {
         self.a.nnz()
     }
 
-    fn apply_a(&mut self, x: MatRef) -> Mat {
+    fn plan(&mut self, plan: &Plan) {
+        self.planned = Some(plan.clone());
+    }
+
+    fn apply_a_into(&mut self, x: MatRef, mut y: MatMut) {
+        // Same out-shape contract the CPU kernels assert.
+        assert_eq!((y.rows, y.cols), (self.m(), x.cols), "apply_a_into out shape");
         let t = Timer::start(self.mult_flops(x.cols));
-        let y = match self.dense_apply_artifact(x, false) {
-            Ok(Some(y)) => y,
+        match self.dense_apply_artifact(x, false) {
+            Ok(Some(out)) => y.data.copy_from_slice(out.data()),
             _ => match &self.a {
                 // Host CSR SpMM (documented substitution) or CPU fallback.
-                Operand::Sparse(a) => {
-                    let mut y = Mat::zeros(a.rows(), x.cols);
-                    a.spmm(&x.to_owned(), &mut y);
-                    y
-                }
-                Operand::Dense(a) => {
-                    builder_ops::matmul_nn(&self.rt, a, &x.to_owned()).unwrap_or_else(|_| {
-                        let mut y = Mat::zeros(a.rows(), x.cols);
-                        blas3::gemm_nn(1.0, a.as_ref(), x, 0.0, &mut y);
-                        y
-                    })
-                }
+                Operand::Sparse(a) => a.spmm(x, y),
+                Operand::Dense(a) => match builder_ops::matmul_nn(&self.rt, a, &x.to_owned()) {
+                    Ok(out) => y.data.copy_from_slice(out.data()),
+                    Err(_) => blas3::gemm_nn(1.0, a.as_ref(), x, 0.0, y),
+                },
             },
-        };
+        }
         t.stop(&mut self.profile);
-        y
     }
 
-    fn apply_at(&mut self, x: MatRef) -> Mat {
+    fn apply_at_into(&mut self, x: MatRef, mut y: MatMut) {
+        assert_eq!((y.rows, y.cols), (self.n(), x.cols), "apply_at_into out shape");
         let t = Timer::start(self.mult_flops(x.cols));
-        let y = match self.dense_apply_artifact(x, true) {
-            Ok(Some(y)) => y,
+        match self.dense_apply_artifact(x, true) {
+            Ok(Some(out)) => y.data.copy_from_slice(out.data()),
             _ => match &self.a {
-                Operand::Sparse(a) => {
-                    let xo = x.to_owned();
-                    let mut y = Mat::zeros(a.cols(), x.cols);
-                    match self.at_cache.advance(a, x.cols) {
-                        Some(at) => at.spmm(&xo, &mut y),
-                        None => a.spmm_t(&xo, &mut y),
-                    }
-                    y
-                }
-                Operand::Dense(a) => {
-                    builder_ops::matmul_tn(&self.rt, a, &x.to_owned()).unwrap_or_else(|_| {
-                        let mut y = Mat::zeros(a.cols(), x.cols);
-                        blas3::gemm_tn(1.0, a.as_ref(), x, 0.0, &mut y);
-                        y
-                    })
-                }
+                Operand::Sparse(a) => match self.at_cache.advance(a, x.cols) {
+                    Some(at) => at.spmm(x, y),
+                    None => a.spmm_t(x, y),
+                },
+                Operand::Dense(a) => match builder_ops::matmul_tn(&self.rt, a, &x.to_owned()) {
+                    Ok(out) => y.data.copy_from_slice(out.data()),
+                    Err(_) => blas3::gemm_tn(1.0, a.as_ref(), x, 0.0, y),
+                },
             },
-        };
+        }
         t.stop(&mut self.profile);
-        y
     }
 
-    fn gram(&mut self, q: MatRef) -> Mat {
+    fn gram_into(&mut self, q: MatRef, w: MatMut) {
         // Fine-grained op (only reached on the host fallback path).
         let flops = q.cols as f64 * q.cols as f64 * q.rows as f64;
         let t = Timer::start(flops);
-        let w = blas3::gram(q);
+        blas3::gram_into(q, w);
         t.stop(&mut self.profile);
-        w
     }
 
-    fn proj(&mut self, p: MatRef, q: MatRef) -> Mat {
+    fn proj_into(&mut self, p: MatRef, q: MatRef, h: MatMut) {
         let flops = 2.0 * p.rows as f64 * p.cols as f64 * q.cols as f64;
         let t = Timer::start(flops);
-        let mut h = Mat::zeros(p.cols, q.cols);
-        blas3::gemm_tn(1.0, p, q, 0.0, &mut h);
+        blas3::gemm_tn(1.0, p, q, 0.0, h);
         t.stop(&mut self.profile);
-        h
     }
 
-    fn subtract_proj(&mut self, q: &mut Mat, p: MatRef, h: &Mat) {
-        let flops = 2.0 * p.rows as f64 * p.cols as f64 * h.cols() as f64;
+    fn subtract_proj(&mut self, q: MatMut, p: MatRef, h: MatRef) {
+        let flops = 2.0 * p.rows as f64 * p.cols as f64 * h.cols as f64;
         let t = Timer::start(flops);
-        blas3::gemm_nn(-1.0, p, h.as_ref(), 1.0, q);
+        blas3::gemm_nn(-1.0, p, h, 1.0, q);
         t.stop(&mut self.profile);
     }
 
-    fn tri_solve_right(&mut self, q: &mut Mat, l: &Mat) {
-        let flops = q.cols() as f64 * q.cols() as f64 * q.rows() as f64;
+    fn tri_solve_right(&mut self, q: MatMut, l: MatRef) {
+        let flops = q.cols as f64 * q.cols as f64 * q.rows as f64;
         let t = Timer::start(flops);
         blas3::trsm_right_lt(l, q);
         t.stop(&mut self.profile);
     }
 
-    fn gemm_nn(&mut self, a: MatRef, b: MatRef) -> Mat {
+    fn gemm_nn_into(&mut self, a: MatRef, b: MatRef, mut c: MatMut) {
+        assert_eq!((c.rows, c.cols), (a.rows, b.cols), "gemm_nn_into out shape");
         let flops = 2.0 * a.rows as f64 * a.cols as f64 * b.cols as f64;
         let t = Timer::start(flops);
         // Runtime-built GEMM keeps this on the XLA path for any shape.
         let ao = a.to_owned();
         let bo = b.to_owned();
-        let c = builder_ops::matmul_nn(&self.rt, &ao, &bo).unwrap_or_else(|_| {
-            let mut c = Mat::zeros(a.rows, b.cols);
-            blas3::gemm_nn(1.0, a, b, 0.0, &mut c);
-            c
-        });
+        match builder_ops::matmul_nn(&self.rt, &ao, &bo) {
+            Ok(out) => c.data.copy_from_slice(out.data()),
+            Err(_) => blas3::gemm_nn(1.0, a, b, 0.0, c),
+        }
         t.stop(&mut self.profile);
-        c
     }
 
-    fn orth_cholqr2(&mut self, q: &mut Mat) -> Result<Mat> {
-        match self.try_cholqr2_artifact(q) {
-            Ok(Some(r)) => Ok(r),
-            Ok(None) => crate::algo::orth::cholqr2_host(self, q),
+    fn orth_cholqr2_into(&mut self, mut q: MatMut, mut r: MatMut, ws: &Workspace) -> Result<()> {
+        assert_eq!((r.rows, r.cols), (q.cols, q.cols), "orth_cholqr2_into R shape");
+        match self.try_cholqr2_artifact(&mut q) {
+            Ok(Some(r_out)) => {
+                r.data.copy_from_slice(r_out.data());
+                Ok(())
+            }
+            Ok(None) => crate::algo::orth::cholqr2_into_host(self, q, r, ws),
             Err(Error::Xla(_)) => {
                 // Runtime trouble (missing file, compile failure): degrade
                 // to the host path rather than abort the solve.
-                crate::algo::orth::cholqr2_host(self, q)
+                crate::algo::orth::cholqr2_into_host(self, q, r, ws)
             }
             Err(e) => Err(e),
         }
     }
 
-    fn orth_cgs_cqr2(&mut self, q: &mut Mat, p: MatRef<'_>) -> Result<(Mat, Mat)> {
-        match self.try_cgs_cqr2_artifact(q, p) {
-            Ok(Some(hr)) => Ok(hr),
-            Ok(None) => crate::algo::orth::cgs_cqr2_host(self, q, p),
-            Err(Error::Xla(_)) => crate::algo::orth::cgs_cqr2_host(self, q, p),
+    fn orth_cgs_cqr2_into(
+        &mut self,
+        mut q: MatMut,
+        p: MatRef<'_>,
+        mut h: MatMut,
+        mut r: MatMut,
+        ws: &Workspace,
+    ) -> Result<()> {
+        assert_eq!((h.rows, h.cols), (p.cols, q.cols), "orth_cgs_cqr2_into H shape");
+        assert_eq!((r.rows, r.cols), (q.cols, q.cols), "orth_cgs_cqr2_into R shape");
+        match self.try_cgs_cqr2_artifact(&mut q, p) {
+            Ok(Some((h_out, r_out))) => {
+                h.data.copy_from_slice(h_out.data());
+                r.data.copy_from_slice(r_out.data());
+                Ok(())
+            }
+            Ok(None) => crate::algo::orth::cgs_cqr2_into_host(self, q, p, h, r, ws),
+            Err(Error::Xla(_)) => crate::algo::orth::cgs_cqr2_into_host(self, q, p, h, r, ws),
             Err(e) => Err(e),
         }
     }

@@ -68,6 +68,29 @@ pub fn banner(name: &str, detail: &str) {
     }
 }
 
+/// Peak resident set size of this process in KiB (Linux `VmHWM` from
+/// `/proc/self/status`; 0 where unavailable). Used by the `alloc_probe`
+/// section of `bench_blocks` to track the steady-state memory ceiling
+/// alongside the allocation counters.
+pub fn peak_rss_kb() -> u64 {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+            for line in status.lines() {
+                if let Some(rest) = line.strip_prefix("VmHWM:") {
+                    return rest
+                        .trim()
+                        .trim_end_matches("kB")
+                        .trim()
+                        .parse::<u64>()
+                        .unwrap_or(0);
+                }
+            }
+        }
+    }
+    0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

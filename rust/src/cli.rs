@@ -186,9 +186,9 @@ fn cmd_solve(args: &Args) -> Result<()> {
             what: "cli",
             detail: format!("unknown suite matrix '{n}'"),
         })?;
-        (n.to_string(), Operand::Sparse(generate(&e.spec)))
+        (n.to_string(), Operand::sparse(generate(&e.spec)))
     } else if let Some(f) = args.get("mtx") {
-        (f.to_string(), Operand::Sparse(crate::sparse::mm::read_csr(f)?))
+        (f.to_string(), Operand::sparse(crate::sparse::mm::read_csr(f)?))
     } else if args.get("dense").is_some() {
         let m = args.get_usize("dense", 0)?;
         let n = args.get_usize("n", 500.min(m))?;

@@ -329,7 +329,7 @@ mod tests {
             for choice in [BackendChoice::Cpu, BackendChoice::CpuExplicitT] {
                 let rep = run(
                     "toy-sparse",
-                    Operand::Sparse(a.clone()),
+                    Operand::sparse(a.clone()),
                     algo,
                     &Params {
                         p: if algo == Algo::Rand { 30 } else { 2 },

@@ -77,7 +77,7 @@ pub fn fig1(suite: &Suite, o: &ExpOpts) -> Result<String> {
     for e in entries {
         let a = generate(&e.spec);
         let lanc =
-            run(&e.name, Operand::Sparse(a.clone()), Algo::Lanc, &lanc_params(o), &o.backend)?;
+            run(&e.name, Operand::sparse(a.clone()), Algo::Lanc, &lanc_params(o), &o.backend)?;
         let mut cells = vec![
             e.name.clone(),
             e.spec.rows.to_string(),
@@ -87,7 +87,7 @@ pub fn fig1(suite: &Suite, o: &ExpOpts) -> Result<String> {
             sci(*lanc.residuals.last().unwrap()),
         ];
         for (_, params) in rand_configs(o) {
-            let rep = run(&e.name, Operand::Sparse(a.clone()), Algo::Rand, &params, &o.backend)?;
+            let rep = run(&e.name, Operand::sparse(a.clone()), Algo::Rand, &params, &o.backend)?;
             cells.push(sci(rep.residuals[0]));
             cells.push(sci(*rep.residuals.last().unwrap()));
         }
@@ -119,8 +119,8 @@ pub fn fig2(suite: &Suite, o: &ExpOpts) -> Result<String> {
     for e in entries {
         let a = generate(&e.spec);
         let lanc =
-            run(&e.name, Operand::Sparse(a.clone()), Algo::Lanc, &lanc_params(o), &o.backend)?;
-        let rand = run(&e.name, Operand::Sparse(a), Algo::Rand, &rand_p, &o.backend)?;
+            run(&e.name, Operand::sparse(a.clone()), Algo::Lanc, &lanc_params(o), &o.backend)?;
+        let rand = run(&e.name, Operand::sparse(a), Algo::Rand, &rand_p, &o.backend)?;
         let speedup = rand.secs / lanc.secs;
         // Model time on the paper's platform (kernel-rate asymmetry the
         // scalar CPU testbed lacks — DESIGN.md §3).
@@ -265,7 +265,7 @@ pub fn table1(o: &ExpOpts) -> Result<String> {
             Algo::Lanc => cost::lancsvd_cost(prob, params.r, params.p, params.b),
             Algo::Rand => cost::randsvd_cost(prob, params.r, params.p, params.b),
         };
-        let rep = run("model-check", Operand::Sparse(a.clone()), algo, &params, &BackendChoice::Cpu)?;
+        let rep = run("model-check", Operand::sparse(a.clone()), algo, &params, &BackendChoice::Cpu)?;
         let pairs = [
             ("mult_A", c.mult_a, rep.profile.stat(Block::MultA).flops),
             ("mult_At", c.mult_at, rep.profile.stat(Block::MultAt).flops),

@@ -27,29 +27,32 @@
 //! affinity), and `parallel_reduce`'s fixed band partition + in-order
 //! fold keep `gram` bitwise-deterministic at a fixed thread count.
 
-use super::mat::{Mat, MatRef};
-use crate::util::pool::{parallel_chunks_mut, parallel_reduce_work};
+use super::mat::{Mat, MatMut, MatRef};
+use crate::util::pool::{self, parallel_chunks_mut, parallel_reduce_work};
 use crate::util::scalar::Scalar;
 
 /// C = alpha * A * B + beta * C, with A: m×k, B: k×n, C: m×n.
+///
+/// Out-parameter form: C is a borrowed [`MatMut`] view, so callers hand
+/// in workspace buffers or basis panels and the kernel never allocates.
 ///
 /// Register-blocked over *pairs of output-column pairs*: each pass over A
 /// updates 4 columns of C at once, cutting A's memory traffic 4× vs a
 /// column-at-a-time kernel — the panel shapes here (n ≤ 16, k ≤ 512,
 /// m huge) are memory-bound on A. (§Perf: 4.2 → ~9 GF/s on the
 /// m=32768 orthogonalization panels.)
-pub fn gemm_nn<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, beta: S, c: &mut Mat<S>) {
+pub fn gemm_nn<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, beta: S, c: MatMut<S>) {
     let (m, k) = (a.rows, a.cols);
     let n = b.cols;
     assert_eq!(b.rows, k, "gemm_nn inner dim");
-    assert_eq!((c.rows(), c.cols()), (m, n), "gemm_nn output shape");
-    let cm = c.rows();
+    assert_eq!((c.rows, c.cols), (m, n), "gemm_nn output shape");
+    let cm = c.rows;
     // Row tile: the A tile (≤128×k) is pulled into L2 once and reused for
     // every output-column group, so A's RAM traffic is a single stream
     // regardless of n (§Perf iteration 4).
     const ROW_TILE: usize = 128;
     // Parallel over groups of 4 output columns.
-    parallel_chunks_mut(c.data_mut(), 4 * cm, |jg, cg| {
+    parallel_chunks_mut(c.data, 4 * cm, |jg, cg| {
         let j0 = 4 * jg;
         let njb = cg.len() / cm; // 1..=4 columns in this group
         if beta == S::ZERO {
@@ -150,19 +153,20 @@ pub fn gemm_nn<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, beta: S, c: &mut
 /// streamed (A², B⁴) load pair feeds 8 FMAs, and B is streamed m/2 times
 /// instead of m — the projection H = PᵀQ here has m ≤ 256, n ≤ 16 with
 /// huge q, so traffic on the tall operands dominates. (§Perf log.)
-pub fn gemm_tn<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, beta: S, c: &mut Mat<S>) {
+/// Out-parameter form: C is a borrowed [`MatMut`] (see [`gemm_nn`]).
+pub fn gemm_tn<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, beta: S, c: MatMut<S>) {
     let (q, m) = (a.rows, a.cols);
     let n = b.cols;
     assert_eq!(b.rows, q, "gemm_tn inner dim");
-    assert_eq!((c.rows(), c.cols()), (m, n), "gemm_tn output shape");
-    let cm = c.rows();
+    assert_eq!((c.rows, c.cols), (m, n), "gemm_tn output shape");
+    let cm = c.rows;
     // Row-tiled so the skinny B panel stays cache-resident while the tall
     // A panel streams exactly once: without tiling B is re-streamed m/2
     // times (512 MB of traffic on the m-side projections). Tile of 1024
     // rows × n ≤ 16 cols = 128 KiB — comfortably L2.
     const ROW_TILE: usize = 1024;
     // One task per group of 4 output columns (B columns).
-    parallel_chunks_mut(c.data_mut(), 4 * cm, |jg, cg| {
+    parallel_chunks_mut(c.data, 4 * cm, |jg, cg| {
         let j0 = 4 * jg;
         let njb = cg.len() / cm;
         // zero/scale the output group once; accumulate over row tiles.
@@ -249,65 +253,87 @@ pub fn gemm_tn<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, beta: S, c: &mut
     });
 }
 
-/// Gram matrix W = QᵀQ (b×b), exploiting symmetry (computes the upper
-/// triangle then mirrors). This is the SYRK of Alg. 4 steps S1/S4 and
-/// sits inside every CholeskyQR2 call.
+/// Upper-triangle tile accumulation shared by the serial and banded
+/// Gram paths: adds Q[t0+lo..t0+hi, :]ᵀ·Q[…] into `acc` (column-major
+/// b×b, upper triangle only), walking cache-resident row tiles.
+fn gram_accumulate<S: Scalar>(q: MatRef<S>, lo: usize, hi: usize, acc: &mut [S]) {
+    let b = q.cols;
+    // 256 rows × b ≤ 32 cols × 8 B = 64 KiB worst case — L2-resident.
+    const TILE: usize = 256;
+    let mut t0 = lo;
+    while t0 < hi {
+        let tl = TILE.min(hi - t0);
+        for j in 0..b {
+            let qj = &q.col(j)[t0..t0 + tl];
+            // Two (i, j) entries per pass over qj.
+            let mut i = 0;
+            while i + 1 <= j {
+                let qi0 = &q.col(i)[t0..t0 + tl];
+                let qi1 = &q.col(i + 1)[t0..t0 + tl];
+                let (mut s0, mut s1) = (S::ZERO, S::ZERO);
+                for t in 0..tl {
+                    let x = qj[t];
+                    s0 += qi0[t] * x;
+                    s1 += qi1[t] * x;
+                }
+                acc[j * b + i] += s0;
+                acc[j * b + i + 1] += s1;
+                i += 2;
+            }
+            if i <= j {
+                let qi = &q.col(i)[t0..t0 + tl];
+                let mut s = S::ZERO;
+                for t in 0..tl {
+                    s += qi[t] * qj[t];
+                }
+                acc[j * b + i] += s;
+            }
+        }
+        t0 += tl;
+    }
+}
+
+/// Gram matrix W = QᵀQ into a caller-provided b×b buffer, exploiting
+/// symmetry (computes the upper triangle then mirrors). This is the
+/// SYRK of Alg. 4 steps S1/S4 and sits inside every CholeskyQR2 call.
 ///
 /// Row-tiled parallel SYRK: the q rows are split across threads
 /// (`parallel_reduce`); each thread walks its row band in tiles small
 /// enough to stay cache-resident (so the b(b+1)/2 column-pair dots read
 /// the tile from L1/L2, not RAM) and accumulates into a private b×b
 /// upper triangle. The partials are summed in the reduction and the
-/// triangle is mirrored once at the end.
-pub fn gram<S: Scalar>(q: MatRef<S>) -> Mat<S> {
+/// triangle is mirrored once at the end. Panels under the pool's
+/// serial cutoff accumulate *directly into W* — the same op order as a
+/// one-band reduction (bitwise identical) with zero heap allocation,
+/// which is what keeps the steady-state inner iterations alloc-free.
+pub fn gram_into<S: Scalar>(q: MatRef<S>, mut w: MatMut<S>) {
     let (rows, b) = (q.rows, q.cols);
-    let mut w = Mat::zeros(b, b);
+    assert_eq!((w.rows, w.cols), (b, b), "gram_into output shape");
     if b == 0 {
-        return w;
+        return;
     }
-    // 256 rows × b ≤ 32 cols × 8 B = 64 KiB worst case — L2-resident.
-    const TILE: usize = 256;
     // Work estimate: each row contributes a b-element read re-used for
     // b(b+1)/2 dot terms; rows·b elements is the bandwidth-side truth
     // the serial-cutoff decision needs (the raw row count alone would
     // serialize wide q×b panels).
+    if pool::planned_bands(rows * b, rows) <= 1 {
+        w.fill(S::ZERO);
+        gram_accumulate(q, 0, rows, w.data);
+        for j in 0..b {
+            for i in 0..=j {
+                let s = w.data[j * b + i];
+                w.set(j, i, s);
+            }
+        }
+        return;
+    }
     let acc = parallel_reduce_work(
         rows,
         rows * b,
         vec![S::ZERO; b * b],
         |lo, hi| {
             let mut acc = vec![S::ZERO; b * b];
-            let mut t0 = lo;
-            while t0 < hi {
-                let tl = TILE.min(hi - t0);
-                for j in 0..b {
-                    let qj = &q.col(j)[t0..t0 + tl];
-                    // Two (i, j) entries per pass over qj.
-                    let mut i = 0;
-                    while i + 1 <= j {
-                        let qi0 = &q.col(i)[t0..t0 + tl];
-                        let qi1 = &q.col(i + 1)[t0..t0 + tl];
-                        let (mut s0, mut s1) = (S::ZERO, S::ZERO);
-                        for t in 0..tl {
-                            let x = qj[t];
-                            s0 += qi0[t] * x;
-                            s1 += qi1[t] * x;
-                        }
-                        acc[j * b + i] += s0;
-                        acc[j * b + i + 1] += s1;
-                        i += 2;
-                    }
-                    if i <= j {
-                        let qi = &q.col(i)[t0..t0 + tl];
-                        let mut s = S::ZERO;
-                        for t in 0..tl {
-                            s += qi[t] * qj[t];
-                        }
-                        acc[j * b + i] += s;
-                    }
-                }
-                t0 += tl;
-            }
+            gram_accumulate(q, lo, hi, &mut acc);
             acc
         },
         |mut a, b_part| {
@@ -324,25 +350,29 @@ pub fn gram<S: Scalar>(q: MatRef<S>) -> Mat<S> {
             w.set(j, i, s);
         }
     }
+}
+
+/// Allocating convenience wrapper around [`gram_into`].
+pub fn gram<S: Scalar>(q: MatRef<S>) -> Mat<S> {
+    let mut w = Mat::zeros(q.cols, q.cols);
+    gram_into(q, w.as_mut());
     w
 }
 
 /// Q ← Q · L⁻ᵀ with L lower-triangular b×b (right-side TRSM of Alg. 4
-/// steps S3/S6). Column-recurrence on the upper-triangular U = Lᵀ:
+/// steps S3/S6), fully in place on a borrowed panel view.
+/// Column-recurrence on the upper-triangular U = Lᵀ:
 /// X[:,j] = (Q[:,j] − Σ_{i<j} X[:,i]·U[i,j]) / U[j,j],  U[i,j] = L[j,i].
-pub fn trsm_right_lt<S: Scalar>(l: &Mat<S>, q: &mut Mat<S>) {
-    let b = l.rows();
-    assert_eq!(l.cols(), b, "trsm L square");
-    assert_eq!(q.cols(), b, "trsm panel cols");
-    let rows = q.rows();
+pub fn trsm_right_lt<S: Scalar>(l: MatRef<S>, mut q: MatMut<S>) {
+    let b = l.rows;
+    assert_eq!(l.cols, b, "trsm L square");
+    assert_eq!(q.cols, b, "trsm panel cols");
     for j in 0..b {
         // subtract contributions of already-solved columns
         for i in 0..j {
             let u_ij = l.at(j, i);
             if u_ij != S::ZERO {
-                let (head, tail) = q.data_mut().split_at_mut(j * rows);
-                let xi = &head[i * rows..(i + 1) * rows];
-                let xj = &mut tail[..rows];
+                let (xi, xj) = q.col_pair_mut(i, j);
                 super::blas1::axpy(-u_ij, xi, xj);
             }
         }
@@ -351,36 +381,48 @@ pub fn trsm_right_lt<S: Scalar>(l: &Mat<S>, q: &mut Mat<S>) {
     }
 }
 
-/// R = Lᵀ · L̄ᵀ for lower-triangular L, L̄ (b×b). This is the tiny TRMM of
-/// Alg. 4 step S7 / Alg. 5 step S11; the result is upper triangular.
-pub fn trmm_lt_lt<S: Scalar>(l: &Mat<S>, lbar: &Mat<S>) -> Mat<S> {
-    let b = l.rows();
-    assert_eq!(lbar.rows(), b);
-    let mut r = Mat::zeros(b, b);
-    // R[i,j] = Σ_t Lᵀ[i,t] · L̄ᵀ[t,j] = Σ_t L[t,i] · L̄[j,t]; nonzero for t in [max(i, ...), ..].
+/// R = Lᵀ · L̄ᵀ for lower-triangular L, L̄ (b×b), written into a
+/// caller-provided b×b buffer (every entry is written: the upper
+/// triangle gets the product, the strict lower triangle zeros). This is
+/// the tiny TRMM of Alg. 4 step S7 / Alg. 5 step S11.
+pub fn trmm_lt_lt_into<S: Scalar>(l: MatRef<S>, lbar: MatRef<S>, mut r: MatMut<S>) {
+    let b = l.rows;
+    assert_eq!(lbar.rows, b, "trmm factor shapes");
+    assert_eq!((r.rows, r.cols), (b, b), "trmm output shape");
+    // R[i,j] = Σ_t Lᵀ[i,t] · L̄ᵀ[t,j] = Σ_t L[t,i] · L̄[j,t], t in [i, j].
     for j in 0..b {
-        for i in 0..=j {
-            let mut s = S::ZERO;
-            for t in i..=j {
-                s += l.at(t, i) * lbar.at(j, t);
+        for i in 0..b {
+            if i <= j {
+                let mut s = S::ZERO;
+                for t in i..=j {
+                    s += l.at(t, i) * lbar.at(j, t);
+                }
+                r.set(i, j, s);
+            } else {
+                r.set(i, j, S::ZERO);
             }
-            r.set(i, j, s);
         }
     }
+}
+
+/// Allocating convenience wrapper around [`trmm_lt_lt_into`].
+pub fn trmm_lt_lt<S: Scalar>(l: &Mat<S>, lbar: &Mat<S>) -> Mat<S> {
+    let mut r = Mat::zeros(l.rows(), l.rows());
+    trmm_lt_lt_into(l.as_ref(), lbar.as_ref(), r.as_mut());
     r
 }
 
 /// Convenience: C = AᵀB as an owned matrix.
 pub fn mat_tn<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
     let mut c = Mat::zeros(a.cols(), b.cols());
-    gemm_tn(S::ONE, a.as_ref(), b.as_ref(), S::ZERO, &mut c);
+    gemm_tn(S::ONE, a.as_ref(), b.as_ref(), S::ZERO, c.as_mut());
     c
 }
 
 /// Convenience: C = A·B as an owned matrix.
 pub fn mat_nn<S: Scalar>(a: &Mat<S>, b: &Mat<S>) -> Mat<S> {
     let mut c = Mat::zeros(a.rows(), b.cols());
-    gemm_nn(S::ONE, a.as_ref(), b.as_ref(), S::ZERO, &mut c);
+    gemm_nn(S::ONE, a.as_ref(), b.as_ref(), S::ZERO, c.as_mut());
     c
 }
 
@@ -412,7 +454,7 @@ mod tests {
                 }
                 e
             };
-            gemm_nn(2.0, a.as_ref(), b.as_ref(), 0.5, &mut c);
+            gemm_nn(2.0, a.as_ref(), b.as_ref(), 0.5, c.as_mut());
             assert!(c.max_abs_diff(&expect) < 1e-10, "shape {m}x{k}x{n}");
         }
     }
@@ -424,7 +466,7 @@ mod tests {
             let a = Mat::randn(q, m, &mut rng);
             let b = Mat::randn(q, n, &mut rng);
             let mut c = Mat::zeros(m, n);
-            gemm_tn(1.0, a.as_ref(), b.as_ref(), 0.0, &mut c);
+            gemm_tn(1.0, a.as_ref(), b.as_ref(), 0.0, c.as_mut());
             let expect = naive_nn(&a.transpose(), &b);
             assert!(c.max_abs_diff(&expect) < 1e-10, "shape {q}x{m}x{n}");
         }
@@ -472,7 +514,7 @@ mod tests {
         // Q = X_true * Lᵀ
         let q0 = mat_nn(&x_true, &l.transpose());
         let mut q = q0.clone();
-        trsm_right_lt(&l, &mut q);
+        trsm_right_lt(l.as_ref(), q.as_mut());
         assert!(q.max_abs_diff(&x_true) < 1e-10);
     }
 

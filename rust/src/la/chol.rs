@@ -8,9 +8,104 @@
 //! non-positive pivot) is reported as an error so the orthogonalization
 //! layer can fall back to re-orthogonalized CGS (paper §3.2).
 
-use super::mat::Mat;
+use super::mat::{Mat, MatMut, MatRef};
 use crate::error::{Error, Result};
 use crate::util::scalar::Scalar;
+
+/// Factor columns [j0, j0+jb) of `l` in place (lower Cholesky of the
+/// diagonal block, which previous panel updates have already reduced),
+/// reading/writing only within the block. The k-sums run over the
+/// block-local columns, matching the copy-out-and-factor step of the
+/// blocked algorithm without the copy.
+fn potrf_in_place_range<S: Scalar>(l: &mut MatMut<S>, j0: usize, jb: usize) -> Result<()> {
+    for j in j0..j0 + jb {
+        // diagonal — fused multiply-add keeps the pivot accumulation at
+        // one rounding per term, which is what decides breakdown at f32
+        let mut d = l.at(j, j);
+        for k in j0..j {
+            let v = l.at(j, k);
+            d = v.mul_add(-v, d);
+        }
+        if d <= S::ZERO || !d.is_finite() {
+            return Err(Error::CholeskyBreakdown { pivot: j, value: d.to_f64() });
+        }
+        let djj = d.sqrt();
+        l.set(j, j, djj);
+        let inv = S::ONE / djj;
+        // column update below the diagonal (within the block)
+        for i in (j + 1)..j0 + jb {
+            let mut s = l.at(i, j);
+            for k in j0..j {
+                s = l.at(i, k).mul_add(-l.at(j, k), s);
+            }
+            l.set(i, j, s * inv);
+        }
+    }
+    Ok(())
+}
+
+/// Lower Cholesky fully in place on a borrowed square view: A = L·Lᵀ
+/// with L overwriting A (upper triangle zeroed). Blocked right-looking
+/// for n > 64, with the diagonal-block factorization running in place —
+/// no temporaries, which is what keeps the CholeskyQR2 passes inside
+/// the iteration loops allocation-free. Breakdown (non-positive pivot)
+/// is reported as an error so the orthogonalization layer can fall back
+/// to re-orthogonalized CGS (paper §3.2).
+pub fn potrf_in_place<S: Scalar>(l: &mut MatMut<S>) -> Result<()> {
+    let n = l.rows;
+    assert_eq!(l.cols, n, "potrf needs square input");
+    let nb = 32usize;
+    if n <= 64 {
+        potrf_in_place_range(l, 0, n)?;
+    } else {
+        let mut j0 = 0;
+        while j0 < n {
+            let jb = nb.min(n - j0);
+            potrf_in_place_range(l, j0, jb)?;
+            let rest = n - j0 - jb;
+            if rest > 0 {
+                // L21 = A21 · L11⁻ᵀ  (solve X L11ᵀ = A21, row-block)
+                for j in 0..jb {
+                    for i in 0..rest {
+                        let mut s = l.at(j0 + jb + i, j0 + j);
+                        for k in 0..j {
+                            s -= l.at(j0 + jb + i, j0 + k) * l.at(j0 + j, j0 + k);
+                        }
+                        l.set(j0 + jb + i, j0 + j, s / l.at(j0 + j, j0 + j));
+                    }
+                }
+                // A22 −= L21 · L21ᵀ (lower triangle only)
+                for jj in 0..rest {
+                    for ii in jj..rest {
+                        let mut s = l.at(j0 + jb + ii, j0 + jb + jj);
+                        for k in 0..jb {
+                            s -= l.at(j0 + jb + ii, j0 + k) * l.at(j0 + jb + jj, j0 + k);
+                        }
+                        l.set(j0 + jb + ii, j0 + jb + jj, s);
+                    }
+                }
+            }
+            j0 += jb;
+        }
+    }
+    // zero the upper triangle
+    for j in 1..n {
+        for i in 0..j {
+            l.set(i, j, S::ZERO);
+        }
+    }
+    Ok(())
+}
+
+/// Out-parameter POTRF: copy `a` into the caller-provided `l` and
+/// factor in place ([`potrf_in_place`]). The orthogonalization layer
+/// calls this with workspace buffers so no allocation happens per pass.
+pub fn potrf_into<S: Scalar>(a: MatRef<S>, mut l: MatMut<S>) -> Result<()> {
+    assert_eq!(a.rows, a.cols, "potrf needs square input");
+    assert_eq!((l.rows, l.cols), (a.rows, a.cols), "potrf_into output shape");
+    l.data.copy_from_slice(a.data);
+    potrf_in_place(&mut l)
+}
 
 /// Unblocked lower Cholesky: A = L·Lᵀ; returns L (strictly lower + diag),
 /// upper triangle zeroed. Errors with `CholeskyBreakdown` on a
@@ -108,13 +203,13 @@ pub fn potrf_blocked<S: Scalar>(a: &Mat<S>, nb: usize) -> Result<Mat<S>> {
     Ok(l)
 }
 
-/// Default entry point: blocked for n > 64.
+/// Default allocating entry point: blocked for n > 64. Thin wrapper
+/// over [`potrf_into`]; the hot paths call the into/in-place forms with
+/// workspace buffers directly.
 pub fn potrf<S: Scalar>(a: &Mat<S>) -> Result<Mat<S>> {
-    if a.rows() > 64 {
-        potrf_blocked(a, 32)
-    } else {
-        potrf_unblocked(a)
-    }
+    let mut l = Mat::zeros(a.rows(), a.cols());
+    potrf_into(a.as_ref(), l.as_mut())?;
+    Ok(l)
 }
 
 #[cfg(test)]
@@ -162,6 +257,31 @@ mod tests {
         g.col_mut(2).copy_from_slice(&c0);
         let w = mat_tn(&g, &g);
         match potrf(&w) {
+            Err(Error::CholeskyBreakdown { pivot, .. }) => assert_eq!(pivot, 2),
+            other => panic!("expected breakdown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn into_form_matches_allocating_form_bitwise() {
+        for n in [1usize, 5, 33, 64, 100, 130] {
+            let a = spd(n, 300 + n as u64);
+            let l1 = if n > 64 { potrf_blocked(&a, 32).unwrap() } else { potrf_unblocked(&a).unwrap() };
+            let mut l2 = Mat::zeros(n, n);
+            potrf_into(a.as_ref(), l2.as_mut()).unwrap();
+            assert_eq!(l1.data(), l2.data(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn into_form_reports_breakdown_pivot() {
+        let mut rng = Rng::new(10);
+        let mut g: Mat<f64> = Mat::randn(10, 4, &mut rng);
+        let c0 = g.col(0).to_vec();
+        g.col_mut(2).copy_from_slice(&c0);
+        let w = mat_tn(&g, &g);
+        let mut l = Mat::zeros(4, 4);
+        match potrf_into(w.as_ref(), l.as_mut()) {
             Err(Error::CholeskyBreakdown { pivot, .. }) => assert_eq!(pivot, 2),
             other => panic!("expected breakdown, got {other:?}"),
         }

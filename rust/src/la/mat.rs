@@ -163,6 +163,36 @@ impl<S: Scalar> Mat<S> {
         }
     }
 
+    /// Split at column `j` into a read view of columns [0, j) and a
+    /// mutable view of columns [j, cols). The workhorse of the
+    /// allocation-free algorithm loops: orthogonalize the current block
+    /// *in place inside the basis panel* against the already-built
+    /// history without copying either out.
+    pub fn split_at_col(&mut self, j: usize) -> (MatRef<'_, S>, MatMut<'_, S>) {
+        assert!(j <= self.cols, "split_at_col out of range");
+        let rows = self.rows;
+        let (head, tail) = self.data.split_at_mut(j * rows);
+        (
+            MatRef { rows, cols: j, data: head },
+            MatMut { rows, cols: self.cols - j, data: tail },
+        )
+    }
+
+    /// Reinterpret the leading rows·cols elements of this matrix's
+    /// storage as a rows×cols column-major view. Workspace buffers are
+    /// planned at their capacity shape and viewed at the live shape
+    /// (e.g. the s×b projection block inside an r×b scratch buffer).
+    pub fn view_mut(&mut self, rows: usize, cols: usize) -> MatMut<'_, S> {
+        assert!(
+            rows * cols <= self.data.len(),
+            "view_mut {}x{} exceeds buffer capacity {}",
+            rows,
+            cols,
+            self.data.len()
+        );
+        MatMut { rows, cols, data: &mut self.data[..rows * cols] }
+    }
+
     /// Whole-matrix read view.
     pub fn as_ref(&self) -> MatRef<'_, S> {
         MatRef { rows: self.rows, cols: self.cols, data: &self.data }
@@ -184,10 +214,15 @@ impl<S: Scalar> Mat<S> {
 
     /// Overwrite the column panel [j0, j0+k) from `src` (same rows).
     pub fn set_panel(&mut self, j0: usize, src: &Mat<S>) {
+        self.set_panel_ref(j0, src.as_ref());
+    }
+
+    /// [`Mat::set_panel`] from a borrowed view (no owned source needed).
+    pub fn set_panel_ref(&mut self, j0: usize, src: MatRef<'_, S>) {
         assert_eq!(self.rows, src.rows, "set_panel rows");
         assert!(j0 + src.cols <= self.cols, "set_panel range");
         let dst = &mut self.data[j0 * self.rows..(j0 + src.cols) * self.rows];
-        dst.copy_from_slice(&src.data);
+        dst.copy_from_slice(src.data);
     }
 
     /// Explicit transpose (used by tests and small matrices only).
@@ -276,8 +311,45 @@ impl<'a, S: Scalar> MatMut<'a, S> {
         self.data[j * self.rows + i] = v;
     }
     #[inline]
+    pub fn col(&self, j: usize) -> &[S] {
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+    #[inline]
     pub fn col_mut(&mut self, j: usize) -> &mut [S] {
         &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+    /// Disjoint (read col `i`, write col `j`) pair, `i != j` — lets the
+    /// CGS fallbacks project one column out of another without copying
+    /// the source column to satisfy the borrow checker.
+    pub fn col_pair_mut(&mut self, i: usize, j: usize) -> (&[S], &mut [S]) {
+        assert!(i != j, "col_pair_mut needs distinct columns");
+        let rows = self.rows;
+        if i < j {
+            let (head, tail) = self.data.split_at_mut(j * rows);
+            (&head[i * rows..(i + 1) * rows], &mut tail[..rows])
+        } else {
+            // Order of returns is (read, write) regardless of layout.
+            let (head, tail) = self.data.split_at_mut(i * rows);
+            (&tail[..rows], &mut head[j * rows..(j + 1) * rows])
+        }
+    }
+    /// Mutable sub-panel [j0, j0+k) of this view.
+    pub fn panel_mut(&mut self, j0: usize, k: usize) -> MatMut<'_, S> {
+        assert!(j0 + k <= self.cols, "panel_mut out of range");
+        let rows = self.rows;
+        MatMut { rows, cols: k, data: &mut self.data[j0 * rows..(j0 + k) * rows] }
+    }
+    /// Split at column `j`: (read view of [0, j), mut view of [j, cols)).
+    pub fn split_at_col(&mut self, j: usize) -> (MatRef<'_, S>, MatMut<'_, S>) {
+        assert!(j <= self.cols, "split_at_col out of range");
+        let rows = self.rows;
+        let cols = self.cols;
+        let (head, tail) = self.data.split_at_mut(j * rows);
+        (MatRef { rows, cols: j, data: head }, MatMut { rows, cols: cols - j, data: tail })
+    }
+    /// Fill every element with `v`.
+    pub fn fill(&mut self, v: S) {
+        self.data.fill(v);
     }
     pub fn as_ref(&self) -> MatRef<'_, S> {
         MatRef { rows: self.rows, cols: self.cols, data: self.data }

@@ -37,7 +37,7 @@ pub fn spectral_norm_est<S: Scalar>(a: &Mat<S>, iters: usize, seed: u64) -> f64 
     for _ in 0..iters {
         let av = mat_nn(a, &v); // m×1
         let mut atav = Mat::zeros(n, 1);
-        super::blas3::gemm_tn(S::ONE, a.as_ref(), av.as_ref(), S::ZERO, &mut atav);
+        super::blas3::gemm_tn(S::ONE, a.as_ref(), av.as_ref(), S::ZERO, atav.as_mut());
         let nrm = nrm2(atav.col(0));
         if nrm == S::ZERO {
             return 0.0;

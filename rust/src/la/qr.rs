@@ -12,16 +12,26 @@
 //! falls back *from*, which run on the persistent `util::pool` workers.
 
 use super::blas1::{axpy, dot, nrm2, scal};
-use super::mat::Mat;
+use super::mat::{Mat, MatMut, MatRef};
 use crate::util::rng::Rng;
 use crate::util::scalar::Scalar;
 
-/// Thin QR via Householder reflections: A (m×n, m ≥ n) → (Q m×n with
-/// orthonormal columns, R n×n upper triangular), A = Q·R.
-pub fn householder_qr<S: Scalar>(a: &Mat<S>) -> (Mat<S>, Mat<S>) {
-    let (m, n) = (a.rows(), a.cols());
+/// Thin QR via Householder reflections, out-parameter form: A (m×n,
+/// m ≥ n) is factored as A = Q·R with Q (m×n, orthonormal columns) and
+/// R (n×n upper triangular, lower triangle zeroed) written into
+/// caller-provided buffers. `q` doubles as the reflector workspace —
+/// A is copied into it, the vₖ are stored below the diagonal, and Q is
+/// then formed *in place* over the reflector storage (LAPACK `orgqr`
+/// style, right-to-left). O(n) beta/diagonal bookkeeping and one
+/// reflector copy per column still allocate — this is the host
+/// comparator/fallback path, not a device building block.
+pub fn householder_qr_into<S: Scalar>(a: MatRef<S>, mut q: MatMut<S>, mut r: MatMut<S>) {
+    let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "householder_qr needs m >= n");
-    let mut work = a.clone();
+    assert_eq!((q.rows, q.cols), (m, n), "householder_qr_into Q shape");
+    assert_eq!((r.rows, r.cols), (n, n), "householder_qr_into R shape");
+    q.data.copy_from_slice(a.data);
+    let work = &mut q;
     // v_k stored in-place below the diagonal; betas on the side.
     let mut betas = vec![S::ZERO; n];
     let mut rdiag = vec![S::ZERO; n];
@@ -53,10 +63,8 @@ pub fn householder_qr<S: Scalar>(a: &Mat<S>) -> (Mat<S>, Mat<S>) {
         let rows = m;
         for j in (k + 1)..n {
             let (vpart, cpart) = {
-                let data = work.data_mut();
-                let (lo, hi) = if k < j { (k, j) } else { (j, k) };
-                let (head, tail) = data.split_at_mut(hi * rows);
-                let v = &head[lo * rows + k..(lo + 1) * rows];
+                let (head, tail) = work.data.split_at_mut(j * rows);
+                let v = &head[k * rows + k..(k + 1) * rows];
                 let c = &mut tail[k..rows];
                 (v, c)
             };
@@ -64,33 +72,50 @@ pub fn householder_qr<S: Scalar>(a: &Mat<S>) -> (Mat<S>, Mat<S>) {
             axpy(-s, vpart, cpart);
         }
     }
-    // Extract R.
-    let mut r = Mat::zeros(n, n);
+    // Extract R (upper triangle + diagonal; strict lower zeroed).
     for j in 0..n {
-        for i in 0..j.min(n) {
-            r.set(i, j, work.at(i, j));
-        }
-        r.set(j, j, rdiag[j]);
-        for i in 0..j {
-            r.set(i, j, work.at(i, j));
+        for i in 0..n {
+            if i < j {
+                r.set(i, j, work.at(i, j));
+            } else if i == j {
+                r.set(i, j, rdiag[j]);
+            } else {
+                r.set(i, j, S::ZERO);
+            }
         }
     }
-    // Form thin Q by applying reflectors to the first n columns of I.
-    let mut q = Mat::zeros(m, n);
-    for j in 0..n {
-        q.set(j, j, S::ONE);
-    }
+    // Form thin Q in place over the reflector storage (orgqr):
+    // right-to-left, apply reflector k to the already-formed columns
+    // k+1..n, then column k itself becomes (I − βₖ vₖ vₖᵀ)·e_k.
     for k in (0..n).rev() {
-        if betas[k] == S::ZERO {
-            continue;
-        }
+        let beta = betas[k];
         let v: Vec<S> = work.col(k)[k..].to_vec();
-        for j in 0..n {
-            let cj = &mut q.col_mut(j)[k..];
-            let s = betas[k] * dot(&v, cj);
-            axpy(-s, &v, cj);
+        if beta != S::ZERO {
+            for j in (k + 1)..n {
+                let cj = &mut work.col_mut(j)[k..];
+                let s = beta * dot(&v, cj);
+                axpy(-s, &v, cj);
+            }
+        }
+        let ck = work.col_mut(k);
+        ck.fill(S::ZERO);
+        if beta == S::ZERO {
+            ck[k] = S::ONE;
+        } else {
+            for (i, &vi) in v.iter().enumerate() {
+                ck[k + i] = -beta * vi;
+            }
+            ck[k] += S::ONE; // v[0] = 1 ⇒ Q[k,k] = 1 − β
         }
     }
+}
+
+/// Allocating wrapper around [`householder_qr_into`].
+pub fn householder_qr<S: Scalar>(a: &Mat<S>) -> (Mat<S>, Mat<S>) {
+    let (m, n) = (a.rows(), a.cols());
+    let mut q = Mat::zeros(m, n);
+    let mut r = Mat::zeros(n, n);
+    householder_qr_into(a.as_ref(), q.as_mut(), r.as_mut());
     (q, r)
 }
 

@@ -7,7 +7,7 @@
 //! cost" role for this block.
 
 use super::blas1::{dot, nrm2};
-use super::mat::Mat;
+use super::mat::{Mat, MatMut, MatRef};
 use crate::error::{Error, Result};
 use crate::util::scalar::Scalar;
 
@@ -20,17 +20,36 @@ pub struct Svd<S: Scalar = f64> {
     pub v: Mat<S>,
 }
 
-/// One-sided Jacobi SVD of A (m×n, m ≥ n).
+/// One-sided Jacobi SVD of A (m×n, m ≥ n), out-parameter form.
 ///
-/// Rotates column pairs of a working copy of A until all pairs are
-/// numerically orthogonal; then σ_j = ‖a_j‖, U = A·diag(1/σ), and V
-/// accumulates the rotations. Columns with σ below `n·ε·σ_max` are
-/// completed to an orthonormal set (their singular vectors are arbitrary).
-pub fn jacobi_svd<S: Scalar>(a: &Mat<S>) -> Result<Svd<S>> {
-    let (m, n) = (a.rows(), a.cols());
+/// `u` (m×n) doubles as the rotation workspace — A is copied into it and
+/// rotated in place — and `v` (n×n) accumulates the rotations, so the
+/// caller can hand in planned workspace buffers and the big factors
+/// never hit the allocator (the per-restart call in LancSVD writes
+/// straight into `svd.u`/`svd.v` workspace slots). `s` is cleared and
+/// refilled; O(n) sorting/permutation bookkeeping still allocates — this
+/// is the tiny host GESVD of Table 1, outside the device loop.
+///
+/// Rotates column pairs until all pairs are numerically orthogonal; then
+/// σ_j = ‖a_j‖, U = A·diag(1/σ), and V accumulates the rotations.
+/// Columns with σ below `n·ε·σ_max` are completed to an orthonormal set
+/// (their singular vectors are arbitrary).
+pub fn jacobi_svd_into<S: Scalar>(
+    a: MatRef<S>,
+    mut u: MatMut<S>,
+    s_out: &mut Vec<S>,
+    mut v: MatMut<S>,
+) -> Result<()> {
+    let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "jacobi_svd needs m >= n (got {m}x{n})");
-    let mut w = a.clone();
-    let mut v = Mat::eye(n);
+    assert_eq!((u.rows, u.cols), (m, n), "jacobi_svd_into U shape");
+    assert_eq!((v.rows, v.cols), (n, n), "jacobi_svd_into V shape");
+    let w = &mut u; // rotation workspace aliases the U output
+    w.data.copy_from_slice(a.data);
+    v.fill(S::ZERO);
+    for i in 0..n {
+        v.set(i, i, S::ONE);
+    }
     let eps = S::EPSILON;
     let max_sweeps = 60;
     let mut converged = false;
@@ -76,7 +95,7 @@ pub fn jacobi_svd<S: Scalar>(a: &Mat<S>) -> Result<Svd<S>> {
                 let t = sgn / (tau.abs() + (S::ONE + tau * tau).sqrt());
                 let c = S::ONE / (S::ONE + t * t).sqrt();
                 let s = c * t;
-                rotate_cols(&mut w, p, q, c, s);
+                rotate_cols(w, p, q, c, s);
                 rotate_cols(&mut v, p, q, c, s);
                 // norm updates under the rotation (exact in real arith.)
                 norms[p] = c * c * app - two * c * s * apq + s * s * aqq;
@@ -99,42 +118,83 @@ pub fn jacobi_svd<S: Scalar>(a: &Mat<S>) -> Result<Svd<S>> {
     let smax = svals.first().map(|x| x.0).unwrap_or(S::ZERO);
     let tiny = S::from_f64(n as f64) * eps * smax;
 
-    let mut u = Mat::zeros(m, n);
-    let mut vout = Mat::zeros(n, n);
-    let mut s = Vec::with_capacity(n);
+    s_out.clear();
+    s_out.extend(svals.iter().map(|x| x.0));
+    // Reorder U (= rotated A) and V columns into descending-σ order in
+    // place (cycle-following permutation, one column of scratch).
+    let perm: Vec<usize> = svals.iter().map(|x| x.1).collect();
+    permute_columns(w, &perm);
+    permute_columns(&mut v, &perm);
+
     let mut deficient = Vec::new();
-    for (out_j, &(sigma, src_j)) in svals.iter().enumerate() {
-        s.push(sigma);
-        vout.col_mut(out_j).copy_from_slice(v.col(src_j));
+    for (out_j, &sigma) in s_out.iter().enumerate() {
         if sigma > tiny && sigma > S::ZERO {
             let inv = S::ONE / sigma;
-            let src = w.col(src_j);
-            let dst = u.col_mut(out_j);
-            for i in 0..m {
-                dst[i] = src[i] * inv;
+            for x in w.col_mut(out_j) {
+                *x *= inv;
             }
         } else {
+            // Zero the collapsed column (it carries only rounding noise)
+            // so basis completion sees exactly what the allocating form
+            // always saw.
+            w.col_mut(out_j).fill(S::ZERO);
             deficient.push(out_j);
         }
     }
     // Complete rank-deficient directions to an orthonormal basis via
     // Gram-Schmidt against the existing columns of U.
     if !deficient.is_empty() {
-        complete_basis(&mut u, &deficient);
+        complete_basis(w, &deficient);
     }
-    Ok(Svd { u, s, v: vout })
+    Ok(())
 }
 
-fn rotate_cols<S: Scalar>(m: &mut Mat<S>, p: usize, q: usize, c: S, s: S) {
-    let rows = m.rows();
-    let data = m.data_mut();
-    let (lo, hi) = if p < q { (p, q) } else { (q, p) };
-    let (head, tail) = data.split_at_mut(hi * rows);
-    let (cp, cq) = if p < q {
-        (&mut head[lo * rows..(lo + 1) * rows], &mut tail[..rows])
-    } else {
-        unreachable!()
-    };
+/// Allocating wrapper around [`jacobi_svd_into`] (tests / one-shot
+/// callers; the solve loops pass workspace buffers to the into form).
+pub fn jacobi_svd<S: Scalar>(a: &Mat<S>) -> Result<Svd<S>> {
+    let (m, n) = (a.rows(), a.cols());
+    let mut u = Mat::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut v = Mat::zeros(n, n);
+    jacobi_svd_into(a.as_ref(), u.as_mut(), &mut s, v.as_mut())?;
+    Ok(Svd { u, s, v })
+}
+
+/// Apply the column permutation `out column j ← source column perm[j]`
+/// in place (cycle following; `perm` must be a permutation of 0..n).
+fn permute_columns<S: Scalar>(m: &mut MatMut<S>, perm: &[usize]) {
+    let rows = m.rows;
+    let n = perm.len();
+    let mut done = vec![false; n];
+    let mut tmp = vec![S::ZERO; rows];
+    for start in 0..n {
+        if done[start] || perm[start] == start {
+            done[start] = true;
+            continue;
+        }
+        tmp.copy_from_slice(m.col(start));
+        let mut j = start;
+        loop {
+            let src = perm[j];
+            if src == start {
+                m.col_mut(j).copy_from_slice(&tmp);
+                done[j] = true;
+                break;
+            }
+            let (s_col, d_col) = m.col_pair_mut(src, j);
+            d_col.copy_from_slice(s_col);
+            done[j] = true;
+            j = src;
+        }
+    }
+}
+
+fn rotate_cols<S: Scalar>(m: &mut MatMut<S>, p: usize, q: usize, c: S, s: S) {
+    let rows = m.rows;
+    assert!(p < q, "rotate_cols expects p < q");
+    let (head, tail) = m.data.split_at_mut(q * rows);
+    let cp = &mut head[p * rows..(p + 1) * rows];
+    let cq = &mut tail[..rows];
     for i in 0..rows {
         let xp = cp[i];
         let xq = cq[i];
@@ -145,9 +205,9 @@ fn rotate_cols<S: Scalar>(m: &mut Mat<S>, p: usize, q: usize, c: S, s: S) {
 
 /// Fill the listed (near-zero) columns of U with unit vectors orthogonal
 /// to all other columns (Gram–Schmidt over coordinate seeds).
-fn complete_basis<S: Scalar>(u: &mut Mat<S>, deficient: &[usize]) {
-    let m = u.rows();
-    let n = u.cols();
+fn complete_basis<S: Scalar>(u: &mut MatMut<S>, deficient: &[usize]) {
+    let m = u.rows;
+    let n = u.cols;
     for &j in deficient {
         let mut best: Option<Vec<S>> = None;
         for seed in 0..m.min(n + deficient.len() + 2) {

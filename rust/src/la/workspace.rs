@@ -1,0 +1,431 @@
+//! Workspace planning: preallocated, shape-checked buffers for the
+//! allocation-free steady state.
+//!
+//! The paper assembles RandSVD and LancSVD from device building blocks
+//! whose operands live in **preallocated GPU buffers** — the iteration
+//! loop never allocates. RSVDPACK and the out-of-core block-RSVD work
+//! likewise size every panel and scratch block up front, because
+//! allocation inside the iteration is what kills GPU (and NUMA-CPU)
+//! throughput. This module is the host-side analogue:
+//!
+//! * a [`Plan`] is computed **once per solve** from the problem and
+//!   algorithm parameters `(m, n, r, p, b)` and lists every named buffer
+//!   the solve will touch, with its exact shape;
+//! * a [`Workspace`] materializes the plan as an arena of named,
+//!   shape-checked, `RefCell`-guarded `Mat` buffers. Algorithms and the
+//!   orthogonalization kernels borrow buffers by name; borrowing the
+//!   same buffer twice panics (runtime aliasing rejection), and
+//!   [`Workspace::mat`] additionally panics on a shape mismatch.
+//!
+//! ## Plan lifecycle
+//!
+//! 1. the algorithm entry point builds the `Plan` from `(m, n, r, p, b)`;
+//! 2. `Workspace::new(plan)` allocates every buffer with **banded
+//!    first-touch** (below);
+//! 3. the algorithm hands the plan to the backend via
+//!    [`crate::backend::Backend::plan`] so device backends can stage
+//!    buffers for exactly these shapes;
+//! 4. the solve runs: every inner-iteration operand is a borrow of a
+//!    planned buffer (or a panel view of one) and every kernel is an
+//!    out-parameter `*_into` op — zero heap allocations in steady state
+//!    (pinned by `tests/test_workspace.rs` and the
+//!    `BENCH_ASSERT_NOALLOC` gate in `bench_blocks`);
+//! 5. the workspace outlives the solve and can be handed to the next
+//!    solve with the same plan (`lancsvd_with` / `randsvd_with`), so
+//!    repeated solves — restarts, parameter sweeps, services — pay the
+//!    allocation and page-fault cost once.
+//!
+//! ## Banded first-touch (NUMA placement)
+//!
+//! On first-touch NUMA systems a page belongs to the node of the thread
+//! that faults it in. PR 3's pool gives every `(rows, threads)`
+//! partition a *static* banding — band `w` is always the same row range
+//! on the same long-lived worker. [`Workspace::new`] therefore
+//! zero-fills each buffer through the pool in page-aligned **row
+//! bands** (the `parallel_row_blocks` decomposition the gather SpMM and
+//! the row-tiled SYRK use), so each page of a worker's row band is
+//! faulted by that worker — instead of every page landing on the
+//! submitting thread's node, which is what `Mat::zeros` inside the
+//! iteration did before this refactor. Column-group-partitioned GEMM
+//! outputs see a compromise placement (their workers own columns); the
+//! row-banded choice follows the paper's sparse hot path, where the
+//! SpMM/SYRK row streams dominate bandwidth.
+
+use std::cell::{RefCell, RefMut};
+use std::mem::MaybeUninit;
+
+use super::mat::Mat;
+use crate::error::{Error, Result};
+use crate::util::pool;
+use crate::util::scalar::Scalar;
+
+/// Canonical buffer names. Kept as constants so algorithm and kernel
+/// layers agree on spelling and the planner can size them in one place.
+pub mod names {
+    /// b×b Gram matrix W = QᵀQ (CholeskyQR pass scratch).
+    pub const ORTH_W: &str = "orth.w";
+    /// b×b first-pass Cholesky factor L.
+    pub const ORTH_L1: &str = "orth.l1";
+    /// b×b second-pass Cholesky factor L̄.
+    pub const ORTH_L2: &str = "orth.l2";
+    /// b×b small triangular factor destination (R of Alg. 4/5 blocks).
+    /// Caller-owned: the algorithm loops hold this while calling the
+    /// backend orth kernels — backend overrides must not borrow it
+    /// (see the workspace contract on `Backend::orth_cholqr2_into`).
+    pub const ORTH_R: &str = "orth.r";
+    /// History-projection coefficients H (capacity s_max×b, viewed
+    /// s×b). Caller-owned, as for [`ORTH_R`].
+    pub const ORTH_H: &str = "orth.h";
+    /// Second-pass projection coefficients H̄ (capacity s_max×b).
+    pub const ORTH_HBAR: &str = "orth.hbar";
+    /// Panel snapshot for the Cholesky-breakdown fallback (capacity
+    /// q_max×b, viewed rows×b).
+    pub const ORTH_SNAP: &str = "orth.snap";
+
+    /// LancSVD: right Lanczos basis P = [Q₁ … Q_k] (n×r).
+    pub const LANC_P: &str = "lanc.p";
+    /// LancSVD: left Lanczos basis P̄ = [Q̄₁ … Q̄_k] (m×r).
+    pub const LANC_PBAR: &str = "lanc.pbar";
+    /// LancSVD: block-bidiagonal B_k (r×r).
+    pub const LANC_B: &str = "lanc.b";
+    /// LancSVD: last sub-diagonal block R_k (b×b, residual estimates).
+    pub const LANC_RK: &str = "lanc.rk";
+    /// LancSVD: current left block Q̄ᵢ (m×b).
+    pub const LANC_QBAR: &str = "lanc.qbar";
+    /// LancSVD: next left block Q̄ᵢ₊₁ (m×b).
+    pub const LANC_QNEXT: &str = "lanc.qnext";
+    /// LancSVD: restart rotation scratch (capacity max(m,n)×r).
+    pub const LANC_TMP: &str = "lanc.tmp";
+
+    /// RandSVD: right sketch Q (n×r).
+    pub const RAND_Q: &str = "rand.q";
+    /// RandSVD: left sketch Q̄ (m×r).
+    pub const RAND_QBAR: &str = "rand.qbar";
+    /// RandSVD: last triangular factor R (r×r).
+    pub const RAND_R: &str = "rand.r";
+
+    /// Host GESVD: left factor Ū of the small r×r SVD (r×r).
+    pub const SVD_U: &str = "svd.u";
+    /// Host GESVD: right factor V̄ of the small r×r SVD (r×r).
+    pub const SVD_V: &str = "svd.v";
+}
+
+/// Which solve a [`Plan`] was computed for (shapes differ per algorithm).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanKind {
+    /// LancSVD (Alg. 2): Lanczos bases + B_k + restart scratch.
+    LancSvd,
+    /// RandSVD (Alg. 1): the two sketches + triangular factor.
+    RandSvd,
+    /// Standalone orthogonalization (the thin value-returning wrappers
+    /// and the orth/cgs_qr unit paths).
+    Orth,
+}
+
+#[derive(Clone, Debug)]
+struct PlanEntry {
+    name: &'static str,
+    rows: usize,
+    cols: usize,
+}
+
+/// The buffer plan of one solve: computed once from `(m, n, r, p, b)`,
+/// consumed by [`Workspace::new`] and handed to
+/// [`crate::backend::Backend::plan`] so backends can stage device
+/// buffers for exactly these shapes.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub kind: PlanKind,
+    /// Operand row count.
+    pub m: usize,
+    /// Operand column count.
+    pub n: usize,
+    /// Subspace / Krylov width.
+    pub r: usize,
+    /// Outer-iteration budget (does not affect any buffer shape; carried
+    /// so backends can size per-iteration device queues if they want).
+    pub p: usize,
+    /// Block width of the orthogonalization panels.
+    pub b: usize,
+    entries: Vec<PlanEntry>,
+}
+
+impl Plan {
+    fn push(&mut self, name: &'static str, rows: usize, cols: usize) {
+        debug_assert!(
+            self.entries.iter().all(|e| e.name != name),
+            "plan: duplicate buffer '{name}'"
+        );
+        self.entries.push(PlanEntry { name, rows, cols });
+    }
+
+    /// The orthogonalization scratch set shared by every plan: Gram /
+    /// Cholesky factors at the block width, projection coefficients up
+    /// to history width `s_max`, and the breakdown snapshot at panel
+    /// height `q_max`.
+    fn push_orth(&mut self, q_max: usize, s_max: usize, b: usize) {
+        let s_max = s_max.max(1);
+        let b = b.max(1);
+        self.push(names::ORTH_W, b, b);
+        self.push(names::ORTH_L1, b, b);
+        self.push(names::ORTH_L2, b, b);
+        self.push(names::ORTH_R, b, b);
+        self.push(names::ORTH_H, s_max, b);
+        self.push(names::ORTH_HBAR, s_max, b);
+        self.push(names::ORTH_SNAP, q_max.max(1), b);
+    }
+
+    /// Plan for one LancSVD solve (Alg. 2) on an m×n operand with Krylov
+    /// width r, restart budget p, block width b.
+    pub fn lancsvd(m: usize, n: usize, r: usize, p: usize, b: usize) -> Plan {
+        let q_max = m.max(n);
+        let mut plan = Plan { kind: PlanKind::LancSvd, m, n, r, p, b, entries: Vec::new() };
+        plan.push_orth(q_max, r, b);
+        plan.push(names::LANC_P, n, r);
+        plan.push(names::LANC_PBAR, m, r);
+        plan.push(names::LANC_B, r, r);
+        plan.push(names::LANC_RK, b, b);
+        plan.push(names::LANC_QBAR, m, b);
+        plan.push(names::LANC_QNEXT, m, b);
+        plan.push(names::LANC_TMP, q_max, r);
+        plan.push(names::SVD_U, r, r);
+        plan.push(names::SVD_V, r, r);
+        plan
+    }
+
+    /// Plan for one RandSVD solve (Alg. 1) on an m×n operand with sketch
+    /// width r, power-iteration budget p, CGS-QR block width b.
+    pub fn randsvd(m: usize, n: usize, r: usize, p: usize, b: usize) -> Plan {
+        let q_max = m.max(n);
+        let mut plan = Plan { kind: PlanKind::RandSvd, m, n, r, p, b, entries: Vec::new() };
+        plan.push_orth(q_max, r, b.min(r.max(1)));
+        plan.push(names::RAND_Q, n, r);
+        plan.push(names::RAND_QBAR, m, r);
+        plan.push(names::RAND_R, r, r);
+        plan.push(names::SVD_U, r, r);
+        plan.push(names::SVD_V, r, r);
+        plan
+    }
+
+    /// Plan for standalone orthogonalization of rows×b panels against
+    /// histories up to s_max columns (the thin value-returning wrappers).
+    pub fn orth(rows: usize, s_max: usize, b: usize) -> Plan {
+        let mut plan =
+            Plan { kind: PlanKind::Orth, m: rows, n: rows, r: s_max.max(b), p: 1, b, entries: Vec::new() };
+        plan.push_orth(rows, s_max, b);
+        plan
+    }
+
+    /// Declared shape of a named buffer, if the plan has it.
+    pub fn shape_of(&self, name: &str) -> Option<(usize, usize)> {
+        self.entries.iter().find(|e| e.name == name).map(|e| (e.rows, e.cols))
+    }
+
+    /// Total planned elements (diagnostics / memory budgeting).
+    pub fn total_elems(&self) -> usize {
+        self.entries.iter().map(|e| e.rows * e.cols).sum()
+    }
+
+    /// Validate that this plan covers a solve of the given kind and
+    /// shape — the guard the `*_with` algorithm entry points run before
+    /// reusing a caller-provided workspace.
+    pub fn require(&self, kind: PlanKind, m: usize, n: usize, r: usize, b: usize) -> Result<()> {
+        if self.kind != kind || self.m != m || self.n != n || self.r != r || self.b != b {
+            return Err(Error::InvalidParam(format!(
+                "workspace plan mismatch: plan is {:?} (m={}, n={}, r={}, b={}), \
+                 solve needs {:?} (m={m}, n={n}, r={r}, b={b})",
+                self.kind, self.m, self.n, self.r, self.b, kind
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Arena of named, shape-checked buffers backing one solve (see the
+/// module docs for the plan lifecycle). Buffers sit behind `RefCell`s,
+/// so a `&Workspace` can hand out disjoint mutable borrows while the
+/// `&mut Backend` is live; double-borrowing one buffer panics.
+pub struct Workspace<S: Scalar = f64> {
+    plan: Plan,
+    bufs: Vec<RefCell<Mat<S>>>,
+}
+
+impl<S: Scalar> Workspace<S> {
+    /// Allocate every planned buffer with banded first-touch through the
+    /// worker pool (see the module docs). Throwaway [`PlanKind::Orth`]
+    /// arenas — built per call by the legacy value-returning wrappers —
+    /// skip the pooled first-touch: their buffers are short-lived
+    /// write-before-read scratch, so paying a pool dispatch to place
+    /// their pages would be pure overhead.
+    pub fn new(plan: Plan) -> Workspace<S> {
+        let banded = !matches!(plan.kind, PlanKind::Orth);
+        let bufs = plan
+            .entries
+            .iter()
+            .map(|e| RefCell::new(first_touch_mat(e.rows, e.cols, banded)))
+            .collect();
+        Workspace { plan, bufs }
+    }
+
+    /// The plan this workspace was allocated for.
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Total allocated elements across all buffers.
+    pub fn total_elems(&self) -> usize {
+        self.plan.total_elems()
+    }
+
+    fn index(&self, name: &str) -> usize {
+        self.plan
+            .entries
+            .iter()
+            .position(|e| e.name == name)
+            .unwrap_or_else(|| panic!("workspace: no buffer '{name}' in a {:?} plan", self.plan.kind))
+    }
+
+    /// Borrow a buffer mutably by name, with no shape requirement (use
+    /// [`Mat::view_mut`] on the result for sub-shape scratch views).
+    /// Panics if the buffer is already borrowed — the aliasing guard.
+    pub fn buf(&self, name: &str) -> RefMut<'_, Mat<S>> {
+        let i = self.index(name);
+        self.bufs[i].try_borrow_mut().unwrap_or_else(|_| {
+            panic!("workspace: buffer '{name}' is already borrowed (aliasing rejected)")
+        })
+    }
+
+    /// Borrow a buffer mutably by name, panicking unless its planned
+    /// shape is exactly `rows`×`cols` — the shape-checked entry point
+    /// the algorithms use for their full-size state buffers.
+    pub fn mat(&self, name: &str, rows: usize, cols: usize) -> RefMut<'_, Mat<S>> {
+        let b = self.buf(name);
+        assert!(
+            b.rows() == rows && b.cols() == cols,
+            "workspace: buffer '{name}' is {}x{}, caller expects {rows}x{cols}",
+            b.rows(),
+            b.cols()
+        );
+        b
+    }
+}
+
+/// Allocate a zeroed rows×cols matrix. With `banded` set, pages are
+/// first-touched in page-aligned **row bands** on the pool workers —
+/// the decomposition [`pool::parallel_row_blocks`] hands the gather
+/// SpMM and the row-tiled SYRK, whose workers stream the same row range
+/// of every column call after call — so each page of a worker's row
+/// band is faulted (and on a first-touch NUMA host, placed) by that
+/// worker. Column-group-partitioned GEMM outputs see a compromise
+/// placement (their workers own columns, not rows); the row-banded
+/// choice follows the paper's sparse hot path, where the SpMM stream is
+/// the bandwidth that matters. Small buffers fall under the pool's
+/// serial cutoff and are touched by the caller — they are
+/// cache-resident anyway. Without `banded`, the caller zero-fills
+/// directly (throwaway scratch arenas).
+fn first_touch_mat<S: Scalar>(rows: usize, cols: usize, banded: bool) -> Mat<S> {
+    let len = rows * cols;
+    let mut data: Vec<S> = Vec::with_capacity(len);
+    {
+        let spare = &mut data.spare_capacity_mut()[..len];
+        let page_elems = (4096 / std::mem::size_of::<S>()).max(1);
+        if banded && rows > 0 {
+            pool::parallel_row_blocks_work(
+                spare,
+                rows,
+                page_elems,
+                len,
+                |_r0, _r1, cols: &mut [&mut [MaybeUninit<S>]]| {
+                    for col in cols.iter_mut() {
+                        for x in col.iter_mut() {
+                            x.write(S::ZERO);
+                        }
+                    }
+                },
+            );
+        } else {
+            for x in spare.iter_mut() {
+                x.write(S::ZERO);
+            }
+        }
+    }
+    // SAFETY: all `len` elements were initialized just above.
+    unsafe { data.set_len(len) };
+    Mat::from_vec(rows, cols, data).expect("first_touch_mat sized its buffer")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_lists_expected_buffers() {
+        let plan = Plan::lancsvd(100, 40, 16, 4, 8);
+        assert_eq!(plan.shape_of(names::LANC_P), Some((40, 16)));
+        assert_eq!(plan.shape_of(names::LANC_PBAR), Some((100, 16)));
+        assert_eq!(plan.shape_of(names::ORTH_SNAP), Some((100, 8)));
+        assert_eq!(plan.shape_of(names::ORTH_H), Some((16, 8)));
+        assert_eq!(plan.shape_of("nope"), None);
+        assert!(plan.total_elems() > 0);
+
+        let plan = Plan::randsvd(100, 40, 16, 4, 8);
+        assert_eq!(plan.shape_of(names::RAND_Q), Some((40, 16)));
+        assert_eq!(plan.shape_of(names::RAND_QBAR), Some((100, 16)));
+        assert_eq!(plan.shape_of(names::RAND_R), Some((16, 16)));
+    }
+
+    #[test]
+    fn workspace_buffers_are_zeroed_and_shaped() {
+        let ws: Workspace = Workspace::new(Plan::lancsvd(33, 21, 8, 2, 4));
+        let b = ws.mat(names::LANC_B, 8, 8);
+        assert_eq!(b.fro_norm(), 0.0);
+        drop(b);
+        let p = ws.mat(names::LANC_P, 21, 8);
+        assert!(p.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn require_matches_and_rejects() {
+        let plan = Plan::lancsvd(50, 30, 16, 3, 8);
+        assert!(plan.require(PlanKind::LancSvd, 50, 30, 16, 8).is_ok());
+        assert!(plan.require(PlanKind::LancSvd, 50, 30, 16, 4).is_err());
+        assert!(plan.require(PlanKind::RandSvd, 50, 30, 16, 8).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "aliasing rejected")]
+    fn double_borrow_panics() {
+        let ws: Workspace = Workspace::new(Plan::orth(32, 8, 4));
+        let _a = ws.buf(names::ORTH_W);
+        let _b = ws.buf(names::ORTH_W);
+    }
+
+    #[test]
+    #[should_panic(expected = "caller expects")]
+    fn shape_mismatch_panics() {
+        let ws: Workspace = Workspace::new(Plan::orth(32, 8, 4));
+        let _w = ws.mat(names::ORTH_W, 5, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "no buffer")]
+    fn unknown_name_panics() {
+        let ws: Workspace = Workspace::new(Plan::orth(32, 8, 4));
+        let _w = ws.buf(names::LANC_P);
+    }
+
+    #[test]
+    fn first_touch_covers_large_buffers() {
+        // Large enough to clear the pool's serial cutoff with threads > 1.
+        for banded in [true, false] {
+            let m = first_touch_mat::<f64>(4096, 64, banded);
+            assert_eq!((m.rows(), m.cols()), (4096, 64));
+            assert!(m.data().iter().all(|&x| x == 0.0), "banded={banded}");
+        }
+        // Degenerate shapes stay well-formed.
+        let z = first_touch_mat::<f64>(0, 5, true);
+        assert_eq!((z.rows(), z.cols()), (0, 5));
+        let z = first_touch_mat::<f32>(7, 0, true);
+        assert_eq!((z.rows(), z.cols()), (7, 0));
+    }
+}

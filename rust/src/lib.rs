@@ -17,6 +17,7 @@
 pub mod error;
 
 pub mod util {
+    pub mod counting_alloc;
     pub mod json;
     pub mod pool;
     pub mod rng;
@@ -31,6 +32,7 @@ pub mod la {
     pub mod norms;
     pub mod qr;
     pub mod svd;
+    pub mod workspace;
 }
 
 pub mod sparse {
@@ -56,6 +58,7 @@ pub mod metrics;
 
 pub use error::{Error, Result};
 pub use la::mat::Mat;
+pub use la::workspace::{Plan, Workspace};
 pub use sparse::csr::Csr;
 pub use util::scalar::{DType, Scalar};
 

@@ -9,7 +9,7 @@
 //! tests and revalidated by the backend-parity integration tests.
 
 use crate::error::Result;
-use crate::la::mat::Mat;
+use crate::la::mat::{Mat, MatRef};
 
 /// Column-major Mat → row-major flat buffer.
 pub fn to_row_major(m: &Mat) -> Vec<f64> {
@@ -41,12 +41,20 @@ pub fn from_row_major(rows: usize, cols: usize, data: &[f64]) -> Mat {
 /// Mat → row-major XLA literal of shape [rows, cols], with optional
 /// zero padding to [pad_rows, pad_cols].
 pub fn mat_to_literal(m: &Mat, pad_rows: usize, pad_cols: usize) -> Result<xla::Literal> {
-    let (r, c) = (m.rows(), m.cols());
+    matref_to_literal(m.as_ref(), pad_rows, pad_cols)
+}
+
+/// [`mat_to_literal`] over a borrowed view — the staging copy into the
+/// literal is unavoidable (layout transpose + padding), but the source
+/// panel is only read, so callers with `MatRef`/`MatMut` views (the
+/// out-parameter backend ops) stage without first materializing an
+/// owned `Mat`.
+pub fn matref_to_literal(m: MatRef<'_>, pad_rows: usize, pad_cols: usize) -> Result<xla::Literal> {
+    let (r, c) = (m.rows, m.cols);
     assert!(pad_rows >= r && pad_cols >= c, "padding must not truncate");
     let mut buf = vec![0.0f64; pad_rows * pad_cols];
-    let src = m.data();
     for j in 0..c {
-        let col = &src[j * r..(j + 1) * r];
+        let col = m.col(j);
         for i in 0..r {
             buf[i * pad_cols + j] = col[i];
         }

@@ -17,7 +17,7 @@
 
 use super::csr::Csr;
 use crate::error::{Error, Result};
-use crate::la::mat::Mat;
+use crate::la::mat::{Mat, MatMut, MatRef};
 use crate::util::pool::parallel_row_blocks_work;
 use crate::util::scalar::Scalar;
 
@@ -115,25 +115,26 @@ impl<S: Scalar> BlockEll<S> {
         (self.nbr * self.mbpr * self.bs * self.bs) as f64 / nnz.max(1) as f64
     }
 
-    /// Y = A·X on the host (Y is padded_rows×k, X is padded_cols×k).
+    /// Y = A·X on the host (Y is padded_rows×k, X is padded_cols×k;
+    /// borrowed views so callers pass workspace buffers allocation-free).
     ///
     /// Production kernel: parallel over contiguous *block-row* bands
     /// (each thread owns whole bs-row stripes of Y, so block-scatter
     /// accumulation is private), with a 4-column register-blocked bs×bs
     /// micro-kernel — each block row load feeds 4 dots, and the inner
     /// contiguous length-bs dot auto-vectorizes.
-    pub fn spmm(&self, x: &Mat<S>, y: &mut Mat<S>) {
-        assert_eq!(x.rows(), self.padded_cols(), "block-ELL spmm X rows");
+    pub fn spmm(&self, x: MatRef<S>, mut y: MatMut<S>) {
+        assert_eq!(x.rows, self.padded_cols(), "block-ELL spmm X rows");
         assert_eq!(
-            (y.rows(), y.cols()),
-            (self.padded_rows(), x.cols()),
+            (y.rows, y.cols),
+            (self.padded_rows(), x.cols),
             "block-ELL spmm out"
         );
-        let k = x.cols();
+        let k = x.cols;
         let bs = self.bs;
         let mbpr = self.mbpr;
         if k == 0 || self.nbr == 0 || self.ncb == 0 {
-            y.data_mut().fill(S::ZERO);
+            y.fill(S::ZERO);
             return;
         }
         let blocks = &self.blocks;
@@ -142,7 +143,7 @@ impl<S: Scalar> BlockEll<S> {
         // Work estimate: every stored block entry is re-streamed once
         // per 4-column group, plus the padded output writes.
         let work = self.blocks.len() * k.div_ceil(4) + rows_pad * k;
-        parallel_row_blocks_work(y.data_mut(), rows_pad, bs, work, |r0, r1, cols| {
+        parallel_row_blocks_work(y.data, rows_pad, bs, work, |r0, r1, cols| {
             for cb in cols.iter_mut() {
                 cb.fill(S::ZERO);
             }
@@ -201,7 +202,7 @@ impl<S: Scalar> BlockEll<S> {
     /// entry point the AOT artifact integration tests call.
     pub fn spmm_ref(&self, x: &Mat<S>) -> Mat<S> {
         let mut y = Mat::zeros(self.padded_rows(), x.cols());
-        self.spmm(x, &mut y);
+        self.spmm(x.as_ref(), y.as_mut());
         y
     }
 }

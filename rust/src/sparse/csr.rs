@@ -46,7 +46,7 @@
 
 use super::coo::Coo;
 use crate::error::{shape_err, Result};
-use crate::la::mat::Mat;
+use crate::la::mat::{Mat, MatMut, MatRef};
 use crate::util::pool::{
     num_threads, parallel_chunks_mut_work, parallel_histogram, parallel_reduce_work,
     parallel_row_blocks_work, parallel_tasks,
@@ -322,15 +322,19 @@ impl<S: Scalar> Csr<S> {
 
     /// Y = A · X  (SpMM; X is n×k, Y is m×k, both column-major dense).
     ///
+    /// Out-parameter form over borrowed views: X is a [`MatRef`] and Y a
+    /// [`MatMut`], so the backends pass workspace buffers / basis panels
+    /// straight through with no staging copy and no allocation.
+    ///
     /// Row-gather form: for each output row, accumulate dot products of the
     /// sparse row against the k dense columns. Fast path of the paper.
     /// Parallel over contiguous row bands of Y; 4-column register blocking
     /// amortizes each index decode over 4 FMAs. Every output element is
     /// written exactly once, so no pre-zeroing pass is needed.
-    pub fn spmm(&self, x: &Mat<S>, y: &mut Mat<S>) {
-        assert_eq!(x.rows(), self.cols, "spmm inner dim");
-        assert_eq!((y.rows(), y.cols()), (self.rows, x.cols()), "spmm out");
-        let k = x.cols();
+    pub fn spmm(&self, x: MatRef<S>, y: MatMut<S>) {
+        assert_eq!(x.rows, self.cols, "spmm inner dim");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols), "spmm out");
+        let k = x.cols;
         let m = self.rows;
         if m == 0 || k == 0 {
             return;
@@ -342,7 +346,7 @@ impl<S: Scalar> Csr<S> {
         // FMAs), plus the m×k output writes — the output size alone
         // would serialize short-and-dense operands.
         let work = self.nnz() * k + m * k;
-        parallel_row_blocks_work(y.data_mut(), m, 32, work, |r0, r1, cols| {
+        parallel_row_blocks_work(y.data, m, 32, work, |r0, r1, cols| {
             let mut j = 0;
             while j + 3 < k {
                 let x0 = x.col(j);
@@ -404,7 +408,8 @@ impl<S: Scalar> Csr<S> {
         });
     }
 
-    /// Y = Aᵀ · X  (transposed SpMM; X is m×k, Y is n×k).
+    /// Y = Aᵀ · X  (transposed SpMM; X is m×k, Y is n×k; borrowed views
+    /// as for [`Csr::spmm`]).
     ///
     /// Scatter form: walks A's rows and scatters updates into Y — the
     /// structurally slow kernel the paper identifies as the bottleneck
@@ -414,11 +419,11 @@ impl<S: Scalar> Csr<S> {
     /// parallel path assigns whole output *columns* to threads, so each
     /// thread's scatter targets are private and the output-column /
     /// X-column borrows hoist out of the row loop.
-    pub fn spmm_t(&self, x: &Mat<S>, y: &mut Mat<S>) {
-        assert_eq!(x.rows(), self.rows, "spmm_t inner dim");
-        assert_eq!((y.rows(), y.cols()), (self.cols, x.cols()), "spmm_t out");
+    pub fn spmm_t(&self, x: MatRef<S>, y: MatMut<S>) {
+        assert_eq!(x.rows, self.rows, "spmm_t inner dim");
+        assert_eq!((y.rows, y.cols), (self.cols, x.cols), "spmm_t out");
         let n = self.cols;
-        if n == 0 || x.cols() == 0 {
+        if n == 0 || x.cols == 0 {
             return;
         }
         let indptr = &self.indptr;
@@ -426,8 +431,8 @@ impl<S: Scalar> Csr<S> {
         let values = &self.values;
         // Work estimate: every output column re-streams the whole nnz
         // stream (scatter form), plus the n×k output writes.
-        let work = self.nnz() * x.cols() + n * x.cols();
-        parallel_chunks_mut_work(y.data_mut(), n, work, |j, yj| {
+        let work = self.nnz() * x.cols + n * x.cols;
+        parallel_chunks_mut_work(y.data, n, work, |j, yj| {
             yj.fill(S::ZERO);
             let xj = x.col(j);
             for (i, &xij) in xj.iter().enumerate() {
@@ -502,7 +507,7 @@ mod tests {
         for k in [1, 2, 3, 4, 5, 6, 7, 8] {
             let x = Mat::randn(17, k, &mut rng);
             let mut y = Mat::zeros(23, k);
-            a.spmm(&x, &mut y);
+            a.spmm(x.as_ref(), y.as_mut());
             let expect = mat_nn(&ad, &x);
             assert!(y.max_abs_diff(&expect) < 1e-12, "k={k}");
         }
@@ -517,7 +522,7 @@ mod tests {
         for k in [1, 5] {
             let x = Mat::randn(19, k, &mut rng);
             let mut y = Mat::zeros(29, k);
-            a.spmm_t(&x, &mut y);
+            a.spmm_t(x.as_ref(), y.as_mut());
             let expect = mat_tn(&ad, &x);
             assert!(y.max_abs_diff(&expect) < 1e-12, "k={k}");
         }
@@ -535,8 +540,8 @@ mod tests {
         let x = Mat::randn(31, 4, &mut rng);
         let mut y1 = Mat::zeros(11, 4);
         let mut y2 = Mat::zeros(11, 4);
-        a.spmm_t(&x, &mut y1);
-        at.spmm(&x, &mut y2);
+        a.spmm_t(x.as_ref(), y1.as_mut());
+        at.spmm(x.as_ref(), y2.as_mut());
         assert!(y1.max_abs_diff(&y2) < 1e-12);
     }
 
@@ -563,7 +568,7 @@ mod tests {
         let a = Csr::from_coo(&c).unwrap();
         let x = Mat::eye(4);
         let mut y = Mat::zeros(4, 4);
-        a.spmm(&x, &mut y);
+        a.spmm(x.as_ref(), y.as_mut());
         assert_eq!(y.at(1, 1), 2.0);
         assert_eq!(y.fro_norm(), 2.0);
     }

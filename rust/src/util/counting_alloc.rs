@@ -1,0 +1,115 @@
+//! Allocation-counting global allocator (test/bench instrumentation).
+//!
+//! The allocation-free-steady-state contract of the workspace refactor
+//! is *pinned*, not assumed: `tests/test_workspace.rs` and the
+//! `alloc_probe` section of `bench_blocks` install [`CountingAllocator`]
+//! as their binary's `#[global_allocator]` and assert that the inner
+//! iterations of both algorithms perform zero heap allocations on the
+//! CPU backend. The library itself never installs it — the type lives
+//! here so the test and bench binaries (which are separate crates)
+//! share one implementation.
+//!
+//! Counters are kept **per thread** (`const`-initialized TLS `Cell`s, so
+//! the counting path itself never allocates and never recurses) plus a
+//! process-wide total. Thread-local counting is what makes the
+//! steady-state assertions robust inside a multi-threaded test harness:
+//! the measured ops run on the asserting thread (the serial fast path of
+//! the pool at `TRUNKSVD_THREADS=1`), so allocations from unrelated
+//! concurrent tests cannot pollute the window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static GLOBAL_COUNT: AtomicU64 = AtomicU64::new(0);
+static GLOBAL_BYTES: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static TL_COUNT: Cell<u64> = const { Cell::new(0) };
+    static TL_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocations performed by the *current thread* since it started.
+/// Measure a window by differencing two reads.
+pub fn thread_allocs() -> u64 {
+    TL_COUNT.with(|c| c.get())
+}
+
+/// Bytes allocated by the current thread since it started.
+pub fn thread_alloc_bytes() -> u64 {
+    TL_BYTES.with(|c| c.get())
+}
+
+/// Process-wide allocation count (all threads).
+pub fn total_allocs() -> u64 {
+    GLOBAL_COUNT.load(Ordering::Relaxed)
+}
+
+/// Process-wide allocated bytes (all threads).
+pub fn total_alloc_bytes() -> u64 {
+    GLOBAL_BYTES.load(Ordering::Relaxed)
+}
+
+#[inline]
+fn count(bytes: usize) {
+    GLOBAL_COUNT.fetch_add(1, Ordering::Relaxed);
+    GLOBAL_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    TL_COUNT.with(|c| c.set(c.get() + 1));
+    TL_BYTES.with(|c| c.set(c.get() + bytes as u64));
+}
+
+/// System-allocator wrapper that counts every allocation (including
+/// grow-reallocs) per thread and process-wide. Install in a test/bench
+/// binary with:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: trunksvd::util::counting_alloc::CountingAllocator =
+///     trunksvd::util::counting_alloc::CountingAllocator;
+/// ```
+pub struct CountingAllocator;
+
+// SAFETY: defers entirely to `System` for memory management; the
+// counter updates are atomic / thread-local and never allocate.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        count(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        count(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A shrink is free in this accounting; a grow is one allocation.
+        if new_size > layout.size() {
+            count(new_size);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The library's unit-test binary does not install the allocator, so
+    // the counters just read zero here; the real coverage lives in
+    // tests/test_workspace.rs which does install it.
+    use super::*;
+
+    #[test]
+    fn counters_are_readable() {
+        let c = thread_allocs();
+        let b = thread_alloc_bytes();
+        let _v: Vec<u8> = Vec::with_capacity(128);
+        assert!(thread_allocs() >= c);
+        assert!(thread_alloc_bytes() >= b);
+        assert!(total_allocs() >= c);
+        let _ = total_alloc_bytes();
+    }
+}

@@ -366,6 +366,15 @@ fn plan_tasks(n: usize) -> usize {
     t.min(n).min(MAX_WORKERS + 1)
 }
 
+/// Band count a slice-partitioned helper would use for `work` elements
+/// over `tasks` atomic units (1 = the serial fast path). Public so
+/// kernels with a dedicated allocation-free serial variant (the SYRK's
+/// direct-accumulation path in `blas3::gram_into`) can make the same
+/// decision the pool would.
+pub fn planned_bands(work: usize, tasks: usize) -> usize {
+    plan_work(work, tasks)
+}
+
 /// Band count for a slice-partitioned helper owning `work` elements
 /// split across at most `tasks` atomic units: scale bands so each owns
 /// at least [`parallel_cutoff`] elements, capped by the thread count.
@@ -610,8 +619,32 @@ pub fn parallel_row_blocks_work<T, F>(
     let n_blocks = col_len.div_ceil(align);
     let bands = plan_work(work, n_blocks);
     if bands <= 1 {
-        let mut cols: Vec<&mut [T]> = data.chunks_mut(col_len).collect();
-        body(0, col_len, &mut cols);
+        // Serial fast path. The per-column slice table lives on the
+        // stack for every width the pipeline emits — orth panels are
+        // b ≤ 32, but the SpMM outputs are r-wide sketches and r is
+        // bucketed at ≤ 256 throughout (CLI sweeps, artifact buckets,
+        // default LancSvdOpts) — keeping this path allocation-free in
+        // steady state (4 KiB of stack); wider panels fall back to a
+        // heap table.
+        const STACK_COLS: usize = 256;
+        if n_cols <= STACK_COLS {
+            // (`[const { MaybeUninit::uninit() }; N]` would be tidier but
+            // needs Rust 1.79; the crate's MSRV is 1.75.)
+            let mut store: [std::mem::MaybeUninit<&mut [T]>; STACK_COLS] =
+                std::array::from_fn(|_| std::mem::MaybeUninit::uninit());
+            for (i, c) in data.chunks_mut(col_len).enumerate() {
+                store[i].write(c);
+            }
+            // SAFETY: the first n_cols entries were initialized just
+            // above, and MaybeUninit<&mut [T]> has the layout of &mut [T].
+            let cols: &mut [&mut [T]] = unsafe {
+                std::slice::from_raw_parts_mut(store.as_mut_ptr() as *mut &mut [T], n_cols)
+            };
+            body(0, col_len, cols);
+        } else {
+            let mut cols: Vec<&mut [T]> = data.chunks_mut(col_len).collect();
+            body(0, col_len, &mut cols);
+        }
         return;
     }
     // Aligned row bounds per band: ceil(n_blocks / bands) blocks each.

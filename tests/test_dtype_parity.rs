@@ -78,18 +78,18 @@ fn kernel_parity_sweep<S: Scalar>() {
             for k in [1usize, 3, 8] {
                 let x: Mat<S> = Mat::randn(n, k, &mut rng);
                 let mut y: Mat<S> = Mat::zeros(m, k);
-                a.spmm(&x, &mut y);
+                a.spmm(x.as_ref(), y.as_mut());
                 let err = y.max_abs_diff(&mat_nn(&ad, &x)).to_f64();
                 assert!(err < tol, "spmm {} t={t} {m}x{n} k={k}: {err:.3e}", S::DTYPE);
                 let z: Mat<S> = Mat::randn(m, k, &mut rng);
                 let mut w: Mat<S> = Mat::zeros(n, k);
-                a.spmm_t(&z, &mut w);
+                a.spmm_t(z.as_ref(), w.as_mut());
                 let err = w.max_abs_diff(&mat_tn(&ad, &z)).to_f64();
                 assert!(err < tol, "spmm_t {} t={t} {m}x{n} k={k}: {err:.3e}", S::DTYPE);
                 // scatter == explicit-transpose gather at this precision
                 let at = a.transpose();
                 let mut w2: Mat<S> = Mat::zeros(n, k);
-                at.spmm(&z, &mut w2);
+                at.spmm(z.as_ref(), w2.as_mut());
                 let err = w.max_abs_diff(&w2).to_f64();
                 assert!(err < tol, "transpose {} t={t} {m}x{n} k={k}: {err:.3e}", S::DTYPE);
             }
@@ -132,16 +132,16 @@ fn f32_kernels_match_f64_reference_across_threads() {
             let x32: Mat<f32> = Mat::randn(170, k, &mut rng32);
             let mut y64: Mat<f64> = Mat::zeros(400, k);
             let mut y32: Mat<f32> = Mat::zeros(400, k);
-            a64.spmm(&x64, &mut y64);
-            a32.spmm(&x32, &mut y32);
+            a64.spmm(x64.as_ref(), y64.as_mut());
+            a32.spmm(x32.as_ref(), y32.as_mut());
             let err = y64.cast::<f32>().max_abs_diff(&y32).to_f64();
             assert!(err < tol, "spmm cross-dtype t={t} k={k}: {err:.3e}");
             let z64: Mat<f64> = Mat::randn(400, k, &mut rng64);
             let z32: Mat<f32> = Mat::randn(400, k, &mut rng32);
             let mut w64: Mat<f64> = Mat::zeros(170, k);
             let mut w32: Mat<f32> = Mat::zeros(170, k);
-            a64.spmm_t(&z64, &mut w64);
-            a32.spmm_t(&z32, &mut w32);
+            a64.spmm_t(z64.as_ref(), w64.as_mut());
+            a32.spmm_t(z32.as_ref(), w32.as_mut());
             let err = w64.cast::<f32>().max_abs_diff(&w32).to_f64();
             assert!(err < tol, "spmm_t cross-dtype t={t} k={k}: {err:.3e}");
         }
@@ -231,4 +231,124 @@ fn fp32_lancsvd_on_sparse_operand() {
         let s32 = svd.sigma[i].to_f64();
         assert!((s64 - s32).abs() < 1e-3 * s64.max(1e-6), "sigma_{i}: f64 {s64} vs f32 {s32}");
     }
+}
+
+/// ε-scaled parity of the out-parameter (`*_into`) kernel paths at one
+/// precision: the workspace-planned forms must agree with the dense
+/// reference compositions to the same tolerance class as the
+/// value-returning forms they replaced.
+fn into_path_parity_sweep<S: Scalar>() {
+    use trunksvd::backend::Backend;
+    use trunksvd::la::chol::potrf_into;
+    use trunksvd::la::norms::orth_error;
+    use trunksvd::la::workspace::{Plan, Workspace};
+
+    let tol = kernel_tol::<S>();
+    let rows = 150usize;
+    let (s_hist, b) = (12usize, 6usize);
+    let mut rng = Rng::new(314);
+    let ws: Workspace<S> = Workspace::new(Plan::orth(rows, s_hist, b));
+    let mut be: CpuBackend<S> = CpuBackend::new_dense(Mat::<S>::zeros(1, 1));
+
+    // gram_into == QᵀQ.
+    let q: Mat<S> = Mat::randn(rows, b, &mut rng);
+    let mut w: Mat<S> = Mat::zeros(b, b);
+    be.gram_into(q.as_ref(), w.as_mut());
+    let err = w.max_abs_diff(&mat_tn(&q, &q)).to_f64();
+    assert!(err < tol, "gram_into {}: {err:.3e}", S::DTYPE);
+
+    // proj_into / subtract_proj: Q − P·(PᵀQ) == reference.
+    let p: Mat<S> = trunksvd::la::qr::random_orthonormal(rows, s_hist, &mut rng);
+    let y0: Mat<S> = Mat::randn(rows, b, &mut rng);
+    let mut h: Mat<S> = Mat::zeros(s_hist, b);
+    be.proj_into(p.as_ref(), y0.as_ref(), h.as_mut());
+    let err = h.max_abs_diff(&mat_tn(&p, &y0)).to_f64();
+    assert!(err < tol, "proj_into {}: {err:.3e}", S::DTYPE);
+    let mut y = y0.clone();
+    be.subtract_proj(y.as_mut(), p.as_ref(), h.as_ref());
+    let mut expect = y0.clone();
+    let ph = mat_nn(&p, &h);
+    for (e, c) in expect.data_mut().iter_mut().zip(ph.data()) {
+        *e -= *c;
+    }
+    let err = y.max_abs_diff(&expect).to_f64();
+    assert!(err < tol, "subtract_proj {}: {err:.3e}", S::DTYPE);
+
+    // potrf_into reconstructs an SPD Gram matrix.
+    let g: Mat<S> = Mat::randn(rows, b, &mut rng);
+    let mut spd = mat_tn(&g, &g);
+    for i in 0..b {
+        let v = spd.at(i, i) + S::from_f64(1e-2);
+        spd.set(i, i, v);
+    }
+    let mut l: Mat<S> = Mat::zeros(b, b);
+    potrf_into(spd.as_ref(), l.as_mut()).unwrap();
+    let back = mat_nn(&l, &l.transpose());
+    let err = back.max_abs_diff(&spd).to_f64();
+    assert!(err < 100.0 * tol, "potrf_into {}: {err:.3e}", S::DTYPE);
+
+    // Full orth pipeline through the workspace: Q orthonormal (to √ε of
+    // the working precision) and Y ≈ P·H + Q·R.
+    let y0: Mat<S> = Mat::randn(rows, b, &mut rng);
+    let mut qq = y0.clone();
+    let mut hh: Mat<S> = Mat::zeros(s_hist, b);
+    let mut rr: Mat<S> = Mat::zeros(b, b);
+    be.orth_cgs_cqr2_into(qq.as_mut(), p.as_ref(), hh.as_mut(), rr.as_mut(), &ws).unwrap();
+    let oe = orth_error(&qq).to_f64();
+    assert!(oe < S::EPSILON.to_f64().sqrt(), "cgs_cqr2_into orth {}: {oe:.3e}", S::DTYPE);
+    let mut back = mat_nn(&p, &hh);
+    let qr = mat_nn(&qq, &rr);
+    for (a_, c) in back.data_mut().iter_mut().zip(qr.data()) {
+        *a_ += *c;
+    }
+    let rel = (back.max_abs_diff(&y0) / y0.fro_norm()).to_f64();
+    assert!(rel < tol, "cgs_cqr2_into reconstruct {}: {rel:.3e}", S::DTYPE);
+}
+
+#[test]
+fn into_kernels_hold_eps_scaled_parity_in_both_dtypes() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_parallel_cutoff(1); // cover the banded paths on small fixtures
+    for &t in &THREAD_SWEEP {
+        pool::set_num_threads(t);
+        into_path_parity_sweep::<f64>();
+        into_path_parity_sweep::<f32>();
+    }
+}
+
+#[test]
+fn f32_into_paths_match_f64_reference() {
+    // Cross-dtype: the f32 *_into outputs agree with the f64 outputs of
+    // the same seeded inputs to f32 accuracy, matching the guarantee the
+    // value-returning forms carried before the workspace refactor.
+    use trunksvd::backend::Backend;
+    use trunksvd::la::workspace::{Plan, Workspace};
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(2);
+    let tol = kernel_tol::<f32>();
+    let rows = 200usize;
+    let b = 8usize;
+    let mut rng64 = Rng::new(77);
+    let mut rng32 = Rng::new(77);
+    let y64: Mat<f64> = Mat::randn(rows, b, &mut rng64);
+    let y32: Mat<f32> = Mat::randn(rows, b, &mut rng32);
+
+    let ws64: Workspace<f64> = Workspace::new(Plan::orth(rows, 0, b));
+    let ws32: Workspace<f32> = Workspace::new(Plan::orth(rows, 0, b));
+    let mut be64: CpuBackend<f64> = CpuBackend::new_dense(Mat::zeros(1, 1));
+    let mut be32: CpuBackend<f32> = CpuBackend::new_dense(Mat::<f32>::zeros(1, 1));
+
+    let mut q64 = y64.clone();
+    let mut r64: Mat<f64> = Mat::zeros(b, b);
+    be64.orth_cholqr2_into(q64.as_mut(), r64.as_mut(), &ws64).unwrap();
+    let mut q32 = y32.clone();
+    let mut r32: Mat<f32> = Mat::zeros(b, b);
+    be32.orth_cholqr2_into(q32.as_mut(), r32.as_mut(), &ws32).unwrap();
+
+    let err_q = q64.cast::<f32>().max_abs_diff(&q32).to_f64();
+    let err_r = r64.cast::<f32>().max_abs_diff(&r32).to_f64() / r64.fro_norm().max(1.0);
+    assert!(err_q < 50.0 * tol, "cholqr2_into Q cross-dtype: {err_q:.3e}");
+    assert!(err_r < 50.0 * tol, "cholqr2_into R cross-dtype: {err_r:.3e}");
 }

@@ -290,7 +290,7 @@ fn resize_storm_interleaved_with_kernel_calls() {
             );
             assert_eq!(s, 12_497_500, "round {round}");
             let mut y = Mat::zeros(120, 5);
-            a.spmm(&x, &mut y);
+            a.spmm(x.as_ref(), y.as_mut());
             assert!(y.max_abs_diff(&expect) < 1e-12, "round {round}");
         }
         stop.store(1, Ordering::SeqCst);

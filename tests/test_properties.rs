@@ -171,14 +171,14 @@ fn prop_spmm_pair_consistency() {
         let z = Mat::randn(rows, k, &mut rng);
         let ad = a.to_dense();
         let mut y = Mat::zeros(rows, k);
-        a.spmm(&x, &mut y);
+        a.spmm(x.as_ref(), y.as_mut());
         assert!(y.max_abs_diff(&mat_nn(&ad, &x)) < 1e-11, "case {case} spmm");
         let mut w = Mat::zeros(cols, k);
-        a.spmm_t(&z, &mut w);
+        a.spmm_t(z.as_ref(), w.as_mut());
         assert!(w.max_abs_diff(&mat_tn(&ad, &z)) < 1e-11, "case {case} spmm_t");
         // scatter == explicit transpose
         let mut w2 = Mat::zeros(cols, k);
-        a.transpose().spmm(&z, &mut w2);
+        a.transpose().spmm(z.as_ref(), w2.as_mut());
         assert!(w.max_abs_diff(&w2) < 1e-11, "case {case} transpose equivalence");
     }
 }

@@ -75,14 +75,14 @@ fn csr_spmm_and_spmm_t_parity_across_threads() {
             for k in [1usize, 2, 3, 5, 8, 16] {
                 let x = Mat::randn(n, k, &mut rng);
                 let mut y = Mat::zeros(m, k);
-                a.spmm(&x, &mut y);
+                a.spmm(x.as_ref(), y.as_mut());
                 assert!(
                     y.max_abs_diff(&mat_nn(&ad, &x)) < TOL,
                     "spmm t={t} shape {m}x{n} k={k}"
                 );
                 let z = Mat::randn(m, k, &mut rng);
                 let mut w = Mat::zeros(n, k);
-                a.spmm_t(&z, &mut w);
+                a.spmm_t(z.as_ref(), w.as_mut());
                 assert!(
                     w.max_abs_diff(&mat_tn(&ad, &z)) < TOL,
                     "spmm_t t={t} shape {m}x{n} k={k}"
@@ -174,7 +174,7 @@ fn blockell_spmm_parity_across_threads() {
                     }
                 }
                 let mut y = Mat::zeros(be.padded_rows(), k);
-                be.spmm(&x, &mut y);
+                be.spmm(x.as_ref(), y.as_mut());
                 // Unpadded corner matches dense A · X.
                 for j in 0..k {
                     for i in 0..a.rows() {
@@ -209,10 +209,10 @@ fn threaded_kernel_fingerprint<S: Scalar>(
 ) -> Vec<u64> {
     let mut out = Vec::new();
     let mut y = Mat::zeros(a.rows(), x.cols());
-    a.spmm(x, &mut y);
+    a.spmm(x.as_ref(), y.as_mut());
     out.extend(bits(y.data()));
     let mut w = Mat::zeros(a.cols(), z.cols());
-    a.spmm_t(z, &mut w);
+    a.spmm_t(z.as_ref(), w.as_mut());
     out.extend(bits(w.data()));
     let at = a.transpose();
     out.extend(at.indptr().iter().map(|&p| p as u64));
@@ -221,7 +221,7 @@ fn threaded_kernel_fingerprint<S: Scalar>(
     let g = blas3::gram(q.as_ref());
     out.extend(bits(g.data()));
     let mut yp = Mat::zeros(be.padded_rows(), xp.cols());
-    be.spmm(xp, &mut yp);
+    be.spmm(xp.as_ref(), yp.as_mut());
     out.extend(bits(yp.data()));
     out
 }
@@ -287,11 +287,11 @@ fn empty_and_degenerate_shapes() {
         let a = Csr::from_parts(6, 4, vec![0; 7], vec![], vec![]).unwrap();
         let x = Mat::from_fn(4, 3, |i, j| (i + j) as f64);
         let mut y = Mat::from_fn(6, 3, |_, _| 7.0);
-        a.spmm(&x, &mut y);
+        a.spmm(x.as_ref(), y.as_mut());
         assert_eq!(y.fro_norm(), 0.0, "t={t} spmm over empty matrix");
         let z = Mat::from_fn(6, 3, |i, j| (i * j) as f64);
         let mut w = Mat::from_fn(4, 3, |_, _| 7.0);
-        a.spmm_t(&z, &mut w);
+        a.spmm_t(z.as_ref(), w.as_mut());
         assert_eq!(w.fro_norm(), 0.0, "t={t} spmm_t over empty matrix");
         // Single column output (k = 1) on a matrix with empty rows.
         let mut c = Coo::new(5, 5);
@@ -300,7 +300,7 @@ fn empty_and_degenerate_shapes() {
         let a = Csr::from_coo(&c).unwrap();
         let x = Mat::from_fn(5, 1, |i, _| i as f64 + 1.0);
         let mut y = Mat::zeros(5, 1);
-        a.spmm(&x, &mut y);
+        a.spmm(x.as_ref(), y.as_mut());
         assert_eq!(y.at(0, 0), 15.0, "t={t}");
         assert_eq!(y.at(4, 0), 2.0, "t={t}");
         assert_eq!(y.at(2, 0), 0.0, "t={t}");

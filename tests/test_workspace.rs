@@ -1,0 +1,280 @@
+//! The allocation-free-steady-state contract, pinned.
+//!
+//! This binary installs the counting global allocator
+//! (`util::counting_alloc`) and asserts the workspace refactor's core
+//! guarantee: once a solve's [`Workspace`] is planned and warmed, the
+//! inner iterations of both algorithms perform **zero heap
+//! allocations** on the CPU backend. Counters are per-thread and every
+//! measured region runs with the pool pinned to one thread (all kernels
+//! take their serial fast paths on the calling thread), so concurrent
+//! tests in this binary cannot pollute a measurement window.
+//!
+//! Also covered here at the integration level: `Workspace`/`Plan`
+//! shape-mismatch and aliasing panics, plan reuse across solves, and
+//! the plan hook reaching the backend.
+
+use std::sync::Mutex;
+
+use trunksvd::algo::randsvd::randsvd_with;
+use trunksvd::algo::{lancsvd::lancsvd, LancSvdOpts, RandSvdOpts};
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::backend::Backend;
+use trunksvd::gen::dense::paper_dense;
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::la::mat::Mat;
+use trunksvd::la::workspace::{names, Plan, PlanKind, Workspace};
+use trunksvd::util::counting_alloc::{thread_alloc_bytes, thread_allocs, CountingAllocator};
+use trunksvd::util::pool;
+use trunksvd::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Serializes tests that pin the global pool thread count.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+struct PoolReset;
+impl Drop for PoolReset {
+    fn drop(&mut self) {
+        pool::set_num_threads(0);
+    }
+}
+
+/// One LancSVD inner block-step (S2–S5 of Alg. 2) against a warmed
+/// workspace, exactly as `lancsvd_with` runs it mid-basis.
+fn lanc_inner_step<S, B>(be: &mut B, ws: &Workspace<S>, s: usize, b: usize)
+where
+    S: trunksvd::Scalar,
+    B: Backend<S> + ?Sized,
+{
+    let mut qbar = ws.buf(names::LANC_QBAR);
+    let mut qnext = ws.buf(names::LANC_QNEXT);
+    let mut p_basis = ws.buf(names::LANC_P);
+    let mut pbar_basis = ws.buf(names::LANC_PBAR);
+    let mut lt_buf = ws.buf(names::ORTH_R);
+    let mut h_buf = ws.buf(names::ORTH_H);
+
+    pbar_basis.set_panel(s, &qbar);
+    {
+        let (hist, mut rest) = p_basis.split_at_col(s);
+        let mut qi = rest.panel_mut(0, b);
+        be.apply_at_into(qbar.as_ref(), qi.reborrow());
+        let lt = lt_buf.view_mut(b, b);
+        if s == 0 {
+            be.orth_cholqr2_into(qi, lt, ws).unwrap();
+        } else {
+            let h = h_buf.view_mut(s, b);
+            be.orth_cgs_cqr2_into(qi, hist, h, lt, ws).unwrap();
+        }
+    }
+    be.apply_a_into(p_basis.panel(s, b), qnext.as_mut());
+    {
+        let hist = pbar_basis.panel(0, s + b);
+        let h = h_buf.view_mut(s + b, b);
+        let ri = lt_buf.view_mut(b, b);
+        be.orth_cgs_cqr2_into(qnext.as_mut(), hist, h, ri, ws).unwrap();
+    }
+    std::mem::swap(&mut *qbar, &mut *qnext);
+}
+
+/// Measure allocations across `iters` inner block-steps after `warm`
+/// warm-up steps; returns (allocs, bytes) of the measured window.
+fn measure_lanc_steps<S, B>(
+    be: &mut B,
+    ws: &Workspace<S>,
+    s: usize,
+    b: usize,
+    warm: usize,
+    iters: usize,
+) -> (u64, u64)
+where
+    S: trunksvd::Scalar,
+    B: Backend<S> + ?Sized,
+{
+    for _ in 0..warm {
+        lanc_inner_step(be, ws, s, b);
+    }
+    let (c0, b0) = (thread_allocs(), thread_alloc_bytes());
+    for _ in 0..iters {
+        lanc_inner_step(be, ws, s, b);
+    }
+    (thread_allocs() - c0, thread_alloc_bytes() - b0)
+}
+
+fn lanc_fixture_dense(m: usize, n: usize, b: usize, r: usize) -> (CpuBackend, Workspace) {
+    let prob = paper_dense(m, n, 33);
+    let mut be = CpuBackend::new_dense(prob.a);
+    let ws: Workspace = Workspace::new(Plan::lancsvd(m, n, r, 2, b));
+    be.plan(ws.plan());
+    // Seed Q̄ with a random orthonormal block so the steps are well posed.
+    let mut rng = Rng::new(7);
+    {
+        let mut qbar = ws.buf(names::LANC_QBAR);
+        rng.fill_normal(qbar.data_mut());
+        let mut lt_buf = ws.buf(names::ORTH_R);
+        let lt = lt_buf.view_mut(b, b);
+        be.orth_cholqr2_into(qbar.as_mut(), lt, &ws).unwrap();
+    }
+    (be, ws)
+}
+
+#[test]
+fn lancsvd_inner_iteration_is_allocation_free_dense() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(1); // serial fast paths: all work on this thread
+    let (m, n, b, r) = (200usize, 80usize, 8usize, 16usize);
+    let (mut be, ws) = lanc_fixture_dense(m, n, b, r);
+    let (allocs, bytes) = measure_lanc_steps(&mut be, &ws, 8, b, 3, 40);
+    assert_eq!(
+        (allocs, bytes),
+        (0, 0),
+        "dense LancSVD inner step must not allocate in steady state"
+    );
+}
+
+#[test]
+fn lancsvd_inner_iteration_is_allocation_free_sparse() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(1);
+    let spec = SparseSpec { rows: 300, cols: 120, nnz: 5000, seed: 4, ..Default::default() };
+    let a = generate(&spec);
+    let (b, r) = (8usize, 16usize);
+    // Scatter arm: the Aᵀ·X kernel stays on spmm_t.
+    {
+        let mut be = CpuBackend::new_sparse(a.clone()).scatter_only();
+        let ws: Workspace = Workspace::new(Plan::lancsvd(300, 120, r, 2, b));
+        be.plan(ws.plan());
+        seed_qbar(&mut be, &ws, b);
+        let (allocs, bytes) = measure_lanc_steps(&mut be, &ws, 8, b, 3, 40);
+        assert_eq!((allocs, bytes), (0, 0), "sparse scatter inner step allocated");
+    }
+    // Cached-gather arm: the eager explicit transpose (built at setup).
+    {
+        let mut be = CpuBackend::new_sparse(a).with_explicit_transpose();
+        let ws: Workspace = Workspace::new(Plan::lancsvd(300, 120, r, 2, b));
+        be.plan(ws.plan());
+        seed_qbar(&mut be, &ws, b);
+        let (allocs, bytes) = measure_lanc_steps(&mut be, &ws, 8, b, 3, 40);
+        assert_eq!((allocs, bytes), (0, 0), "sparse gather inner step allocated");
+    }
+}
+
+fn seed_qbar<S: trunksvd::Scalar>(be: &mut CpuBackend<S>, ws: &Workspace<S>, b: usize) {
+    let mut rng = Rng::new(9);
+    let mut qbar = ws.buf(names::LANC_QBAR);
+    rng.fill_normal(qbar.data_mut());
+    let mut lt_buf = ws.buf(names::ORTH_R);
+    let lt = lt_buf.view_mut(b, b);
+    be.orth_cholqr2_into(qbar.as_mut(), lt, ws).unwrap();
+}
+
+#[test]
+fn randsvd_allocation_count_is_independent_of_p() {
+    // End-to-end form of the steady-state contract: a solve with 13
+    // power iterations must allocate exactly as much as a solve with 3 —
+    // i.e. the per-iteration allocation count is zero.
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(1);
+    let prob = paper_dense(120, 50, 21);
+    let ws: Workspace = Workspace::new(Plan::randsvd(120, 50, 12, 16, 4));
+    let solve_allocs = |p: usize, a: &Mat| -> (u64, u64) {
+        let opts = RandSvdOpts { r: 12, p, b: 4, seed: 3, ..Default::default() };
+        let mut be = CpuBackend::new_dense(a.clone());
+        let (c0, b0) = (thread_allocs(), thread_alloc_bytes());
+        let svd = randsvd_with(&mut be, &opts, &ws).unwrap();
+        let out = (thread_allocs() - c0, thread_alloc_bytes() - b0);
+        assert_eq!(svd.iters, p);
+        out
+    };
+    // Warm lazy statics (env lookups, cost-model OnceLocks) off-window.
+    let _ = solve_allocs(2, &prob.a);
+    let (c3, by3) = solve_allocs(3, &prob.a);
+    let (c13, by13) = solve_allocs(13, &prob.a);
+    assert_eq!(c3, c13, "allocation count must not scale with p ({c3} vs {c13})");
+    assert_eq!(by3, by13, "allocated bytes must not scale with p ({by3} vs {by13})");
+}
+
+#[test]
+fn wide_sketch_iterations_are_allocation_free() {
+    // r > 64: the SpMM outputs are r columns wide (not b), exercising
+    // the breadth of the pool serial path's stack column table — a
+    // regression here would silently re-allocate per iteration for the
+    // wider half of the documented parameter range.
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(1);
+    let spec = SparseSpec { rows: 300, cols: 150, nnz: 6000, seed: 8, ..Default::default() };
+    let a = generate(&spec);
+    let ws: Workspace = Workspace::new(Plan::randsvd(300, 150, 96, 8, 16));
+    let solve_allocs = |p: usize| -> (u64, u64) {
+        let opts = RandSvdOpts { r: 96, p, b: 16, seed: 4, ..Default::default() };
+        let mut be = CpuBackend::new_sparse(a.clone()).scatter_only();
+        let (c0, b0) = (thread_allocs(), thread_alloc_bytes());
+        let svd = randsvd_with(&mut be, &opts, &ws).unwrap();
+        assert_eq!(svd.iters, p);
+        (thread_allocs() - c0, thread_alloc_bytes() - b0)
+    };
+    let _ = solve_allocs(2); // warm lazy statics off-window
+    let (c2, by2) = solve_allocs(2);
+    let (c6, by6) = solve_allocs(6);
+    assert_eq!(c2, c6, "wide-sketch allocation count must not scale with p");
+    assert_eq!(by2, by6, "wide-sketch allocated bytes must not scale with p");
+}
+
+#[test]
+fn plan_reuse_matches_fresh_workspace_end_to_end() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(1);
+    let prob = paper_dense(100, 40, 12);
+    let opts = LancSvdOpts { r: 16, p: 3, b: 8, wanted: 5, ..Default::default() };
+    let mut be = CpuBackend::new_dense(prob.a.clone());
+    let fresh = lancsvd(&mut be, &opts).unwrap();
+    let ws: Workspace = Workspace::new(Plan::lancsvd(100, 40, 16, 3, 8));
+    for round in 0..3 {
+        let mut be = CpuBackend::new_dense(prob.a.clone());
+        let again = trunksvd::algo::lancsvd::lancsvd_with(&mut be, &opts, &ws).unwrap();
+        assert_eq!(fresh.sigma, again.sigma, "round {round} sigma drifted");
+        assert_eq!(fresh.u.data(), again.u.data(), "round {round} U drifted");
+        assert_eq!(fresh.v.data(), again.v.data(), "round {round} V drifted");
+    }
+}
+
+#[test]
+fn plan_hook_reaches_backend_through_solves() {
+    let prob = paper_dense(60, 24, 5);
+    let mut be = CpuBackend::new_dense(prob.a);
+    assert!(be.planned().is_none());
+    let opts = LancSvdOpts { r: 8, p: 1, b: 4, wanted: 3, ..Default::default() };
+    let _ = lancsvd(&mut be, &opts).unwrap();
+    let plan = be.planned().expect("lancsvd must hand its plan to the backend");
+    assert_eq!(plan.kind, PlanKind::LancSvd);
+    assert_eq!((plan.m, plan.n, plan.r, plan.b), (60, 24, 8, 4));
+}
+
+#[test]
+#[should_panic(expected = "aliasing rejected")]
+fn integration_double_borrow_panics() {
+    let ws: Workspace = Workspace::new(Plan::orth(64, 16, 8));
+    let _one = ws.buf(names::ORTH_SNAP);
+    let _two = ws.buf(names::ORTH_SNAP);
+}
+
+#[test]
+#[should_panic(expected = "caller expects")]
+fn integration_shape_mismatch_panics() {
+    let ws: Workspace = Workspace::new(Plan::lancsvd(50, 20, 8, 2, 4));
+    let _p = ws.mat(names::LANC_P, 50, 8); // planned as 20x8
+}
+
+#[test]
+fn workspace_rejects_wrong_plan_kind() {
+    let prob = paper_dense(60, 24, 5);
+    let mut be = CpuBackend::new_dense(prob.a);
+    let opts = LancSvdOpts { r: 8, p: 1, b: 4, wanted: 3, ..Default::default() };
+    let wrong: Workspace = Workspace::new(Plan::randsvd(60, 24, 8, 1, 4));
+    assert!(trunksvd::algo::lancsvd::lancsvd_with(&mut be, &opts, &wrong).is_err());
+}
