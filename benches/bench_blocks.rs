@@ -388,6 +388,74 @@ fn main() {
         }
     }
 
+    banner(
+        "Staged-backend transfer ledger (device-contract simulation)",
+        "host<->arena crossings per solve; zero hot-loop panel transfers is the \
+         contract (BENCH_ASSERT_NOTRANSFER=1 gates it)",
+    );
+    {
+        use trunksvd::algo::lancsvd::lancsvd;
+        use trunksvd::algo::LancSvdOpts;
+        use trunksvd::backend::staged::StagedBackend;
+        let rows = if quick { 2000 } else { 8000 };
+        let spec = SparseSpec {
+            rows,
+            cols: rows / 4,
+            nnz: rows * 10,
+            seed: 29,
+            ..Default::default()
+        };
+        let a = generate(&spec);
+        let (r, b, p) = (16usize, 8usize, 3usize);
+        // Two solves differing only in restart count isolate the
+        // per-outer-iteration crossing cost, exactly like alloc_probe
+        // isolates per-iteration allocations.
+        let solve = |p: usize| {
+            let mut be = StagedBackend::new_sparse(a.clone());
+            let opts = LancSvdOpts { r, p, b, wanted: 8, seed: 7, ..Default::default() };
+            lancsvd(&mut be, &opts).expect("staged ledger solve");
+            (be.ledger().totals(), be.device_format().unwrap_or("?"))
+        };
+        let (t_lo, fmt) = solve(p);
+        let (t_hi, _) = solve(p + 2);
+        let d_cross = t_hi.hot_factor_crossings - t_lo.hot_factor_crossings;
+        let d_bytes = t_hi.hot_factor_bytes - t_lo.hot_factor_bytes;
+        let cross_per_iter = d_cross as f64 / 2.0;
+        let bytes_per_iter = d_bytes as f64 / 2.0;
+        println!(
+            "staged_ledger    m={rows:>6} r={r} b={b} fmt={fmt}  hot_panel {}  \
+             factor_crossings/iter {cross_per_iter:>6.1}  factor_bytes/iter {bytes_per_iter:>8.0}  \
+             staged_operand {} B  arena_memcpy {} B",
+            t_hi.hot_panel_transfers, t_hi.staged_operand_bytes, t_hi.a2a_bytes
+        );
+        entries.push(json::obj(vec![
+            ("kernel", json::str("staged_ledger")),
+            ("dtype", json::str("f64")),
+            ("m", json::num(rows as f64)),
+            ("b", json::num(b as f64)),
+            ("threads", json::num(threads as f64)),
+            ("device_format", json::str(fmt)),
+            ("hot_panel_transfers", json::num(t_hi.hot_panel_transfers as f64)),
+            ("hot_factor_crossings_per_iter", json::num(cross_per_iter)),
+            ("hot_factor_bytes_per_iter", json::num(bytes_per_iter)),
+            ("h2a_bytes", json::num(t_hi.h2a_bytes as f64)),
+            ("a2h_bytes", json::num(t_hi.a2h_bytes as f64)),
+            ("a2a_bytes", json::num(t_hi.a2a_bytes as f64)),
+            ("staged_operand_bytes", json::num(t_hi.staged_operand_bytes as f64)),
+        ]));
+        if env_usize("BENCH_ASSERT_NOTRANSFER", 0) == 1 {
+            assert_eq!(
+                (t_lo.hot_panel_transfers, t_hi.hot_panel_transfers),
+                (0, 0),
+                "staged backend must perform zero hot-loop panel transfers"
+            );
+            assert!(
+                d_cross > 0 && d_cross % 2 == 0,
+                "factor crossings must be constant per outer iteration (delta {d_cross})"
+            );
+        }
+    }
+
     let n_entries = entries.len();
     let doc = json::obj(vec![
         ("bench", json::str("kernels")),

@@ -124,13 +124,16 @@ pub fn lancsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
     bmat.data_mut().fill(S::ZERO);
     rk_last.data_mut().fill(S::ZERO);
 
-    // S1: random orthonormal start block Q̄₁ ∈ ℝ^{m×b}.
+    // S1: random orthonormal start block Q̄₁ ∈ ℝ^{m×b}. The host RNG
+    // fill is declared to the backend (`stage_in` uploads it on device
+    // targets) before the first device op touches it.
     be.profile_mut().set_phase(Block::Init);
     let mut rng = Rng::new(seed);
     match init {
         InitDist::CenteredPoisson => rng.fill_centered_poisson(qbar.data_mut()),
         InitDist::Normal => rng.fill_normal(qbar.data_mut()),
     }
+    be.stage_in(qbar.as_ref());
     {
         let lt = lt_buf.view_mut(b, b);
         be.orth_cholqr2_into(qbar.as_mut(), lt, ws)?;
@@ -150,8 +153,9 @@ pub fn lancsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
         // Extend the bases block-by-block until the Krylov width is full.
         while filled < r {
             let s = filled;
-            // Record Q̄ᵢ into P̄ before extending the m-side basis.
-            pbar_basis.set_panel(s, &qbar);
+            // Record Q̄ᵢ into P̄ before extending the m-side basis — a
+            // device-to-device panel copy, never a host round trip.
+            be.copy_into(qbar.as_ref(), pbar_basis.panel_mut(s, b));
 
             // S2: Qᵢ = Aᵀ·Q̄ᵢ, computed in place inside the P panel.
             be.profile_mut().set_phase(Block::MultAt);
@@ -258,7 +262,7 @@ pub fn lancsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
                         let mut p_new = tmp.view_mut(n, keep);
                         be.gemm_nn_into(p_basis.as_ref(), svd_v.panel(0, keep), p_new.reborrow());
                         p_basis.data_mut().fill(S::ZERO);
-                        p_basis.set_panel_ref(0, p_new.as_ref());
+                        be.copy_into(p_new.as_ref(), p_basis.panel_mut(0, keep));
                     }
                     {
                         let mut pbar_new = tmp.view_mut(m, keep);
@@ -268,7 +272,7 @@ pub fn lancsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
                             pbar_new.reborrow(),
                         );
                         pbar_basis.data_mut().fill(S::ZERO);
-                        pbar_basis.set_panel_ref(0, pbar_new.as_ref());
+                        be.copy_into(pbar_new.as_ref(), pbar_basis.panel_mut(0, keep));
                     }
                     bmat.data_mut().fill(S::ZERO);
                     for i in 0..keep {

@@ -77,7 +77,9 @@ pub fn randsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
     let mut svd_v = ws.mat(names::SVD_V, r, r);
 
     // Initial random sketch Q0 ∈ R^{n×r}, drawn straight into the
-    // planned buffer.
+    // planned buffer and declared to the backend (`stage_in` uploads it
+    // on device targets) while still inside the setup phase — the first
+    // hot-loop A·Q must find the sketch device-resident.
     be.profile_mut().set_phase(Block::Init);
     let t = Timer::start(0.0);
     let mut rng = Rng::new(seed);
@@ -85,6 +87,7 @@ pub fn randsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
         InitDist::CenteredPoisson => rng.fill_centered_poisson(q.data_mut()),
         InitDist::Normal => rng.fill_normal(q.data_mut()),
     }
+    be.stage_in(q.as_ref());
     t.stop(be.profile_mut());
 
     for _j in 1..=p {

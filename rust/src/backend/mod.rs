@@ -1,5 +1,6 @@
 //! Compute-backend abstraction: an out-parameter op set over a planned
-//! workspace.
+//! workspace — and the **normative contract** a backend author must
+//! satisfy.
 //!
 //! The paper builds RandSVD and LancSVD from a fixed set of device
 //! building blocks (Table 1): multiplications with A/Aᵀ (cuSPARSE SpMM or
@@ -7,41 +8,104 @@
 //! solves — with the tiny POTRF/GESVD factorizations staying on the host.
 //! Crucially, every operand of those blocks lives in a **preallocated
 //! device buffer**: the iteration loop launches kernels against resident
-//! memory and never allocates.
+//! memory and never allocates or transfers.
 //!
-//! [`Backend`] mirrors that contract. The primitive ops are
-//! **out-parameter `*_into` kernels** — `apply_a_into(x, y)` writes
-//! A·X into a caller-provided [`MatMut`] view instead of returning a
-//! fresh `Mat` — and the operand views come from a
-//! [`Workspace`](crate::la::workspace::Workspace) planned once per solve
-//! from `(m, n, r, p, b)` (see `la::workspace` for the plan lifecycle).
-//! [`Backend::plan`] hands the backend that [`Plan`] before the solve so
-//! it can stage device buffers for exactly the shapes that will flow
-//! through; the steady-state inner iterations of both algorithms then
-//! run with **zero heap allocations** on the CPU backend (pinned by
-//! `tests/test_workspace.rs` and the `BENCH_ASSERT_NOALLOC` gate).
+//! # Backend author's contract
 //!
-//! This is the enabling shape for the ROADMAP's device-resident GPU
-//! backend: a device target implements the `*_into` set against
-//! device-resident handles staged in `plan`, without ever materializing
-//! host matrices mid-iteration — something the old value-returning op
-//! set (`fn apply_a(..) -> Mat`) made structurally impossible.
+//! A conforming [`Backend`] implementation obeys the following rules.
+//! They are enforced mechanically: `tests/test_backend_conformance.rs`
+//! runs every backend through the same battery (op parity vs
+//! [`cpu::CpuBackend`] at ε-scaled tolerances, plan lifecycle, end-to-end
+//! residual targets, transfer-ledger discipline), and
+//! [`staged::StagedBackend`] — the CPU-resident device simulation — turns
+//! rule violations into panics in test builds.
 //!
-//! Thin value-returning wrappers (`apply_a`, `gram`, `orth_cholqr2`, …)
-//! remain as default methods for tests, examples, and one-shot callers;
-//! they allocate the output and delegate to the `*_into` form.
+//! ## 1. Plan lifecycle
 //!
-//! Two implementations exist: [`cpu::CpuBackend`] (pure-rust substrate,
-//! the reference — allocation-free in steady state) and
-//! [`xla::XlaBackend`] (AOT JAX/Pallas artifacts through PJRT — the
-//! GPU-library stand-in; its artifact paths stage host literals, so the
-//! into-ops copy results into the caller's buffers).
+//! * [`Backend::plan`] is called **once per solve**, after the caller's
+//!   [`Workspace`] exists and before any solve op runs, with the same
+//!   [`Plan`] the workspace was allocated from. Stage device buffers for
+//!   exactly the planned shapes here (operand residency, padded staging
+//!   panels, per-shape queues). `plan` may allocate; nothing after it may.
+//! * A backend must also accept **ops before any `plan` call** (the thin
+//!   value-returning wrappers and one-shot unit callers): stage lazily or
+//!   run a fallback path — never reject. Steady-state guarantees apply
+//!   only to planned solves.
+//! * A second `plan` call — same or different shapes — must restage
+//!   cleanly (workspace reuse across solves, re-plan on shape change).
+//!   Solves must be reproducible across restaging: the same planned solve
+//!   through one backend yields bitwise-identical results.
+//!
+//! ## 2. Op semantics and aliasing
+//!
+//! * Every `*_into` op writes **exactly** its declared output view and
+//!   touches nothing else; out-shapes are asserted, not inferred.
+//! * Operand views come from the caller's workspace (or panels of it) and
+//!   may alias *disjointly* (e.g. the history and the current block of
+//!   one basis panel via `split_at_col`). An op must never retain a view
+//!   past its call, and an `orth_*` override may borrow only the
+//!   internal scratch entries `orth.{w,l1,l2,hbar,snap}` from the passed
+//!   workspace — the algorithm loops hold `orth.{h,r}` and every
+//!   `lanc.*`/`rand.*`/`svd.*` buffer across the call, and the arena's
+//!   `RefCell` guard panics on a double borrow (runtime aliasing
+//!   rejection). Backends needing more scratch stage their own in `plan`.
+//! * Data movement between planned buffers goes through
+//!   [`Backend::copy_into`] (device-to-device on a device target), and
+//!   host-initialized data (RNG sketches) is declared with
+//!   [`Backend::stage_in`] before the first device op reads it.
+//!
+//! ## 3. Sanctioned host crossings
+//!
+//! Only the paper's two host factorizations may move data across the
+//! host↔device boundary during the iteration loop:
+//!
+//! * **POTRF** — the b×b Gram factor W crosses to the host, the Cholesky
+//!   factor L crosses back (inside the `orth_*` kernels);
+//! * **GESVD** — the r×r bidiagonal/triangular factor crosses to the
+//!   host, Ū/V̄ cross back (between outer iterations).
+//!
+//! Everything else — the m×b / n×b blocks, the n×r / m×r bases, the
+//! sketches — stays device-resident from `plan` to the final U/V
+//! formation. "Factor-sized" means `rows ≤ r`; anything with `rows ∈
+//! {m, n}` is a panel and must never cross mid-loop.
+//!
+//! ## 4. Ledger expectations
+//!
+//! A device(-simulating) backend keeps a transfer ledger
+//! ([`staged::TransferLedger`]) recording every host↔arena copy with op
+//! name, direction, and bytes. For one planned `lancsvd`/`randsvd`
+//! solve the ledger must show **zero hot-loop panel transfers**: during
+//! the `MultA`/`MultAt`/`OrthM`/`OrthN` phases only factor-sized
+//! crossings (rule 3) may appear. [`staged::StagedBackend`] enforces
+//! this with a panic in test builds and exports the counters to
+//! `BENCH_kernels.json` (`staged_ledger` entry) so CI gates on them.
+//!
+//! ## 5. Instrumentation
 //!
 //! Every op self-records wall time and Table-1 flops into the backend's
-//! [`Profile`] under the phase set by the running algorithm, which is how
-//! Figs. 2–3's breakdowns are measured.
+//! [`Profile`] under the phase set by the running algorithm (Figs. 2–3
+//! breakdowns), and zero-heap-allocation steady state is expected of
+//! host-resident backends (pinned by `tests/test_workspace.rs` and the
+//! `BENCH_ASSERT_NOALLOC` gate).
+//!
+//! # Implementations
+//!
+//! * [`cpu::CpuBackend`] — pure-rust substrate, the conformance
+//!   reference; allocation-free in steady state.
+//! * [`xla::XlaBackend`] — AOT JAX/Pallas graphs through PJRT (the
+//!   GPU-library stand-in); artifact paths stage host literals (those
+//!   transfers are the nature of this stand-in), fallback paths run the
+//!   host substrate. Generic over the element precision; the PJRT
+//!   interchange literal is f64, so f32 solves round through it on the
+//!   artifact paths.
+//! * [`staged::StagedBackend`] — simulates a device target on the CPU:
+//!   stages the operand (CSR→Block-ELL) into a private arena, tracks
+//!   buffer residency, and ledgers every host↔arena crossing. The
+//!   drop-in scaffold for the real GPU port: replace its arena memcpys
+//!   with `cudaMemcpy` and its kernels with device launches.
 
 pub mod cpu;
+pub mod staged;
 pub mod xla;
 
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -92,6 +156,25 @@ pub trait Backend<S: Scalar = f64> {
     fn tri_solve_right(&mut self, q: MatMut<S>, l: MatRef<S>);
     /// C ← A·B (the finalize GEMMs forming U_T / V_T and the restart).
     fn gemm_nn_into(&mut self, a: MatRef<S>, b: MatRef<S>, c: MatMut<S>);
+
+    /// dst ← src between planned buffers (same shape). On a device
+    /// target this is a **device-to-device** copy — the algorithms route
+    /// every panel copy (basis recording, thick-restart compaction)
+    /// through it so no panel ever round-trips the host mid-loop.
+    /// Default: plain host memcpy (correct for host-resident backends).
+    fn copy_into(&mut self, src: MatRef<S>, mut dst: MatMut<S>) {
+        assert_eq!((src.rows, src.cols), (dst.rows, dst.cols), "copy_into shape");
+        dst.data.copy_from_slice(src.data);
+    }
+
+    /// Declare a host-initialized buffer (an RNG-filled sketch or start
+    /// block) ready for device use. Device backends upload it here —
+    /// once, inside the setup phase — so the first iteration op finds it
+    /// resident instead of paying (and a ledger flagging) a hot-loop
+    /// transfer. Default: no-op for host-resident backends.
+    fn stage_in(&mut self, src: MatRef<S>) {
+        let _ = src;
+    }
 
     /// CholeskyQR2 orthonormalization of a q×b panel (Alg. 4), in place,
     /// writing R (b×b, `Q_in = Q_out·R`) into the caller's buffer.

@@ -1,0 +1,946 @@
+//! Device-contract staged backend: a CPU-resident simulation of a real
+//! device target, with a transfer ledger that *enforces* the backend
+//! author's contract (see the `backend` module docs).
+//!
+//! The paper's GPU execution model keeps every hot-loop operand in
+//! preallocated device memory: the operand matrix is staged once (into
+//! the hardware-friendly Block-ELL layout for the Pallas SpMM kernel),
+//! every planned buffer is device-resident for the whole solve, and only
+//! the tiny POTRF/GESVD factors cross the host boundary per iteration.
+//! [`StagedBackend`] simulates exactly that on the CPU so the contract
+//! can be proven and regression-tested *before* a real device port:
+//!
+//! * **Operand staging** — `new_sparse` + [`Backend::plan`] stage the
+//!   CSR operand into a private arena as a pair of [`BlockEll`] matrices
+//!   (A and the explicit Aᵀ, paper §4.1.2 — the natural device trade),
+//!   falling back to an arena CSR when the ELL fill factor would blow
+//!   the memory budget (the cuSPARSE-CSR regime). Dense operands stage a
+//!   dense arena copy.
+//! * **Residency tracking** — the caller's workspace buffers play the
+//!   role of arena memory, and a byte-interval set records which ranges
+//!   the "device" has produced. Every op input is checked against it:
+//!   reading a non-resident **panel** (`rows ∈ {m, n}`) is a host→arena
+//!   transfer; doing so inside a hot phase (`MultA`/`MultAt`/`OrthM`/
+//!   `OrthN`) is a contract violation and **panics** when enforcement is
+//!   on (the default). Factor-sized data (`rows ≤ r`) crosses freely —
+//!   that is the sanctioned POTRF/GESVD traffic — and is ledgered, not
+//!   punished.
+//! * **Transfer ledger** — every host↔arena copy is recorded with op
+//!   name, direction, bytes, phase, and panel/factor class
+//!   ([`TransferLedger`]); intra-arena staging memcpys (the pad copies
+//!   around the Block-ELL kernel, [`Backend::copy_into`] panel moves)
+//!   are counted separately as arena→arena traffic. `bench_blocks`
+//!   exports the counters to `BENCH_kernels.json` and the conformance
+//!   suite asserts **zero hot-loop panel transfers** per solve.
+//!
+//! The real GPU port starts from this file: replace the arena memcpys
+//! with `cudaMemcpy`, the Block-ELL host kernel with the Pallas/cuSPARSE
+//! launch, and keep the ledger in debug builds.
+//!
+//! Known simulation limits (documented, deliberate): host-side reads of
+//! device-written factors (e.g. POTRF consuming the Gram matrix) cannot
+//! be observed directly, so the arena→host half of each factor crossing
+//! is recorded when the factor is *produced* by a device op; host writes
+//! into resident buffers (the algorithms' defensive zero-fills inside
+//! sanctioned windows) are invisible to the ledger, which is safe here
+//! because arena and host share storage.
+
+use std::sync::Arc;
+
+use super::{Backend, Operand};
+use crate::la::blas3;
+use crate::la::mat::{Mat, MatMut, MatRef};
+use crate::la::workspace::{names, Plan, Workspace};
+use crate::metrics::{Block, Profile, Timer};
+use crate::sparse::blockell::BlockEll;
+use crate::sparse::csr::Csr;
+use crate::util::scalar::Scalar;
+
+/// Transfer direction across (or within) the simulated arena boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Host memory → device arena (upload).
+    HostToArena,
+    /// Device arena → host memory (download).
+    ArenaToHost,
+    /// Intra-arena staging copy (device-to-device; `cudaMemcpyD2D`).
+    ArenaToArena,
+}
+
+/// One ledgered copy.
+#[derive(Clone, Debug)]
+pub struct TransferEvent {
+    /// Backend op that triggered the copy.
+    pub op: &'static str,
+    pub dir: Direction,
+    pub bytes: usize,
+    /// Profile phase the copy happened under.
+    pub phase: Block,
+    /// Panel-sized (`rows ∈ {m, n}`) vs factor-sized (`rows ≤ r`).
+    pub panel: bool,
+}
+
+/// Aggregated ledger counters (cheap to snapshot for per-solve deltas).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LedgerTotals {
+    pub h2a_count: u64,
+    pub h2a_bytes: u64,
+    pub a2h_count: u64,
+    pub a2h_bytes: u64,
+    pub a2a_count: u64,
+    pub a2a_bytes: u64,
+    /// Panel-sized host↔arena transfers inside a hot phase — contract
+    /// violations. Stays 0 on conforming solves (and panics instead,
+    /// unless enforcement was turned off).
+    pub hot_panel_transfers: u64,
+    /// Factor-sized host↔arena crossings inside hot phases — the
+    /// sanctioned POTRF traffic.
+    pub hot_factor_crossings: u64,
+    pub hot_factor_bytes: u64,
+    /// One-time operand staging volume (CSR arrays / dense payload).
+    pub staged_operand_bytes: u64,
+    /// Number of `plan()` calls (solve staging events).
+    pub plans: u64,
+}
+
+const EVENT_CAP: usize = 4096;
+
+/// Records every host↔arena copy the staged backend performs. Event
+/// storage is capacity-bounded (the counters keep accumulating past the
+/// cap), so steady-state solves never reallocate it.
+#[derive(Debug)]
+pub struct TransferLedger {
+    totals: LedgerTotals,
+    events: Vec<TransferEvent>,
+    dropped: u64,
+}
+
+impl Default for TransferLedger {
+    fn default() -> Self {
+        TransferLedger {
+            totals: LedgerTotals::default(),
+            events: Vec::with_capacity(EVENT_CAP),
+            dropped: 0,
+        }
+    }
+}
+
+impl TransferLedger {
+    fn record(
+        &mut self,
+        op: &'static str,
+        dir: Direction,
+        bytes: usize,
+        phase: Block,
+        panel: bool,
+    ) {
+        let hot = is_hot(phase);
+        match dir {
+            Direction::HostToArena => {
+                self.totals.h2a_count += 1;
+                self.totals.h2a_bytes += bytes as u64;
+            }
+            Direction::ArenaToHost => {
+                self.totals.a2h_count += 1;
+                self.totals.a2h_bytes += bytes as u64;
+            }
+            Direction::ArenaToArena => {
+                self.totals.a2a_count += 1;
+                self.totals.a2a_bytes += bytes as u64;
+            }
+        }
+        if hot && dir != Direction::ArenaToArena {
+            if panel {
+                self.totals.hot_panel_transfers += 1;
+            } else {
+                self.totals.hot_factor_crossings += 1;
+                self.totals.hot_factor_bytes += bytes as u64;
+            }
+        }
+        if self.events.len() < EVENT_CAP {
+            self.events.push(TransferEvent { op, dir, bytes, phase, panel });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    pub fn totals(&self) -> LedgerTotals {
+        self.totals
+    }
+
+    /// The recorded events (bounded at an internal cap; see
+    /// [`TransferLedger::dropped_events`]).
+    pub fn events(&self) -> &[TransferEvent] {
+        &self.events
+    }
+
+    /// Events past the storage cap (counters still include them).
+    pub fn dropped_events(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Panel-sized hot-loop transfers — 0 on a conforming solve.
+    pub fn hot_panel_transfers(&self) -> u64 {
+        self.totals.hot_panel_transfers
+    }
+}
+
+fn is_hot(phase: Block) -> bool {
+    matches!(phase, Block::MultA | Block::MultAt | Block::OrthM | Block::OrthN)
+}
+
+/// Sorted, disjoint byte-interval set over host addresses: which ranges
+/// of the caller's workspace the simulated device currently owns.
+#[derive(Debug, Default)]
+struct IntervalSet {
+    spans: Vec<(usize, usize)>,
+}
+
+impl IntervalSet {
+    fn clear(&mut self) {
+        self.spans.clear();
+    }
+
+    fn insert(&mut self, lo: usize, hi: usize) {
+        if lo >= hi {
+            return;
+        }
+        // First span that could merge (end >= lo), then every span that
+        // starts inside the merged range.
+        let i = self.spans.partition_point(|&(_, e)| e < lo);
+        let mut nlo = lo;
+        let mut nhi = hi;
+        let mut j = i;
+        while j < self.spans.len() && self.spans[j].0 <= nhi {
+            nlo = nlo.min(self.spans[j].0);
+            nhi = nhi.max(self.spans[j].1);
+            j += 1;
+        }
+        self.spans.splice(i..j, std::iter::once((nlo, nhi)));
+    }
+
+    /// Bytes of [lo, hi) not covered by any span.
+    fn uncovered(&self, lo: usize, hi: usize) -> usize {
+        if lo >= hi {
+            return 0;
+        }
+        let mut missing = hi - lo;
+        let start = self.spans.partition_point(|&(_, e)| e <= lo);
+        for &(s, e) in &self.spans[start..] {
+            if s >= hi {
+                break;
+            }
+            missing -= e.min(hi) - s.max(lo);
+        }
+        missing
+    }
+}
+
+/// The arena-staged form of the operand.
+enum DeviceOperand<S: Scalar> {
+    /// Paper layout: Block-ELL of A and of the explicit Aᵀ (§4.1.2).
+    BlockEll { a: BlockEll<S>, at: BlockEll<S> },
+    /// ELL-hostile operands stay CSR in the arena (the cuSPARSE regime);
+    /// A itself is shared with the host copy (arena == host storage in
+    /// this simulation), the gather transpose is arena-built.
+    Csr { at: Csr<S> },
+    /// Dense arena copy.
+    Dense(Mat<S>),
+}
+
+impl<S: Scalar> DeviceOperand<S> {
+    fn format(&self) -> &'static str {
+        match self {
+            DeviceOperand::BlockEll { .. } => "blockell",
+            DeviceOperand::Csr { .. } => "csr",
+            DeviceOperand::Dense(_) => "dense",
+        }
+    }
+}
+
+/// Zero-padded staging panels around the Block-ELL kernel (the arena
+/// memcpys a real port replaces with `cudaMemcpy`).
+struct StagePad<S: Scalar> {
+    x: Mat<S>,
+    y: Mat<S>,
+}
+
+fn csr_bytes<S: Scalar>(a: &Csr<S>) -> usize {
+    a.nnz() * (std::mem::size_of::<S>() + std::mem::size_of::<u32>())
+        + (a.rows() + 1) * std::mem::size_of::<usize>()
+}
+
+/// Stage `x` into the zero-padded arena panel, run the Block-ELL SpMM,
+/// and unpad the result into `y`. Shared by A·X and Aᵀ·X (which differ
+/// only in which staged [`BlockEll`] they launch). Returns the bytes
+/// moved by the two arena memcpys for the caller's ledger record.
+fn blockell_apply<S: Scalar>(
+    ell: &BlockEll<S>,
+    pad: &mut StagePad<S>,
+    x: MatRef<S>,
+    y: &mut MatMut<S>,
+) -> usize {
+    let k = x.cols;
+    let mut xp = pad.x.view_mut(ell.padded_cols(), k);
+    for j in 0..k {
+        let src = x.col(j);
+        let dst = xp.col_mut(j);
+        dst[..src.len()].copy_from_slice(src);
+        dst[src.len()..].fill(S::ZERO);
+    }
+    let mut yp = pad.y.view_mut(ell.padded_rows(), k);
+    ell.spmm(xp.as_ref(), yp.reborrow());
+    for j in 0..k {
+        y.col_mut(j).copy_from_slice(&yp.col(j)[..y.rows]);
+    }
+    std::mem::size_of::<S>() * k * (x.rows + y.rows)
+}
+
+/// Simulated-device backend: arena-staged operand, residency-checked
+/// `*_into` ops, transfer ledger. See the module docs.
+pub struct StagedBackend<S: Scalar = f64> {
+    a: Operand<S>,
+    dev: Option<DeviceOperand<S>>,
+    pad: Option<StagePad<S>>,
+    /// Block-ELL block size for sparse operand staging.
+    bs: usize,
+    /// Fill-factor cap above which sparse staging falls back to CSR.
+    fill_cap: f64,
+    planned: Option<Plan>,
+    resident: IntervalSet,
+    ledger: TransferLedger,
+    enforce: bool,
+    profile: Profile,
+}
+
+impl<S: Scalar> StagedBackend<S> {
+    pub fn new_sparse(a: impl Into<Arc<Csr<S>>>) -> StagedBackend<S> {
+        StagedBackend::new(Operand::Sparse(a.into()))
+    }
+
+    pub fn new_dense(a: Mat<S>) -> StagedBackend<S> {
+        StagedBackend::new(Operand::Dense(a))
+    }
+
+    pub fn new(a: Operand<S>) -> StagedBackend<S> {
+        StagedBackend {
+            a,
+            dev: None,
+            pad: None,
+            bs: 8,
+            fill_cap: 16.0,
+            planned: None,
+            resident: IntervalSet::default(),
+            ledger: TransferLedger::default(),
+            enforce: true,
+            profile: Profile::new(),
+        }
+    }
+
+    /// Block-ELL block size for the sparse operand staging (default 8).
+    pub fn with_block_size(mut self, bs: usize) -> StagedBackend<S> {
+        assert!(bs > 0, "block size must be >= 1");
+        assert!(self.dev.is_none(), "operand already staged");
+        self.bs = bs;
+        self
+    }
+
+    /// Fill-factor cap for the Block-ELL staging (default 16×nnz); above
+    /// it the operand stays CSR in the arena.
+    pub fn with_fill_cap(mut self, cap: f64) -> StagedBackend<S> {
+        assert!(self.dev.is_none(), "operand already staged");
+        self.fill_cap = cap;
+        self
+    }
+
+    /// Toggle hot-loop transfer enforcement (panics on violation when
+    /// on; on by default). With enforcement off, violations only count
+    /// in [`LedgerTotals::hot_panel_transfers`].
+    pub fn enforce_transfers(mut self, on: bool) -> StagedBackend<S> {
+        self.enforce = on;
+        self
+    }
+
+    pub fn operand(&self) -> &Operand<S> {
+        &self.a
+    }
+
+    /// The plan recorded by the last [`Backend::plan`] call, if any.
+    pub fn planned(&self) -> Option<&Plan> {
+        self.planned.as_ref()
+    }
+
+    /// Arena layout the operand was staged into
+    /// ("blockell"/"csr"/"dense"), or `None` before staging.
+    pub fn device_format(&self) -> Option<&'static str> {
+        self.dev.as_ref().map(|d| d.format())
+    }
+
+    pub fn ledger(&self) -> &TransferLedger {
+        &self.ledger
+    }
+
+    /// Take the ledger, resetting it (the residency map is untouched).
+    pub fn take_ledger(&mut self) -> TransferLedger {
+        std::mem::take(&mut self.ledger)
+    }
+
+    fn ensure_staged(&mut self) {
+        if self.dev.is_some() {
+            return;
+        }
+        let dev = match &self.a {
+            Operand::Dense(a) => {
+                let bytes = std::mem::size_of_val(a.data());
+                self.ledger.record(
+                    "plan.stage_operand",
+                    Direction::HostToArena,
+                    bytes,
+                    self.profile.phase(),
+                    true,
+                );
+                self.ledger.totals.staged_operand_bytes += bytes as u64;
+                DeviceOperand::Dense(a.clone())
+            }
+            Operand::Sparse(a) => {
+                let bytes = csr_bytes(a.as_ref());
+                self.ledger.record(
+                    "plan.stage_operand",
+                    Direction::HostToArena,
+                    bytes,
+                    self.profile.phase(),
+                    true,
+                );
+                self.ledger.totals.staged_operand_bytes += bytes as u64;
+                let at = a.transpose();
+                let ell_a = BlockEll::from_csr_auto(a, self.bs);
+                let ell_at = BlockEll::from_csr_auto(&at, self.bs);
+                let nnz = a.nnz();
+                if ell_a.fill_factor(nnz) <= self.fill_cap
+                    && ell_at.fill_factor(nnz) <= self.fill_cap
+                {
+                    DeviceOperand::BlockEll { a: ell_a, at: ell_at }
+                } else {
+                    DeviceOperand::Csr { at }
+                }
+            }
+        };
+        self.dev = Some(dev);
+    }
+
+    /// Make sure the padded staging panels cover `k` columns (planned
+    /// solves size them once in `plan`; unplanned one-shot calls grow
+    /// them lazily — allocation outside the steady state is allowed).
+    fn ensure_pads(&mut self, k: usize) {
+        let Some(DeviceOperand::BlockEll { a, at }) = &self.dev else { return };
+        let x_rows = a.padded_cols().max(at.padded_cols());
+        let y_rows = a.padded_rows().max(at.padded_rows());
+        let need = match &self.pad {
+            Some(p) => p.x.rows() < x_rows || p.y.rows() < y_rows || p.x.cols() < k,
+            None => true,
+        };
+        if need {
+            let k_cap = k.max(self.pad.as_ref().map_or(0, |p| p.x.cols()));
+            self.pad = Some(StagePad {
+                x: Mat::zeros(x_rows, k_cap),
+                y: Mat::zeros(y_rows, k_cap),
+            });
+        }
+    }
+
+    fn is_panel(&self, rows: usize, cols: usize) -> bool {
+        let (m, n) = self.a.shape();
+        let r = self.planned.as_ref().map_or(0, |p| p.r);
+        (rows == m || rows == n) && rows.max(cols) > r
+    }
+
+    /// Residency check for one op input. A non-resident range is a
+    /// host→arena transfer; a panel-sized one inside a hot phase is a
+    /// contract violation (panic under enforcement).
+    fn note_read(&mut self, op: &'static str, rows: usize, cols: usize, data: &[S]) {
+        let lo = data.as_ptr() as usize;
+        let hi = lo + std::mem::size_of_val(data);
+        let missing = self.resident.uncovered(lo, hi);
+        if missing == 0 {
+            return;
+        }
+        let panel = self.is_panel(rows, cols);
+        let phase = self.profile.phase();
+        self.ledger.record(op, Direction::HostToArena, missing, phase, panel);
+        if panel {
+            if is_hot(phase) && self.enforce && self.planned.is_some() {
+                panic!(
+                    "staged backend: op '{op}' read a non-resident {rows}x{cols} panel \
+                     ({missing} bytes) in hot phase {phase:?} — unsanctioned host→arena \
+                     transfer; only POTRF/GESVD factor crossings may cross mid-loop \
+                     (see backend module docs, rule 3)"
+                );
+            }
+            // The uploaded panel is arena-resident from here on.
+            self.resident.insert(lo, hi);
+        }
+        // Factor-sized host data deliberately stays non-resident: the
+        // POTRF/GESVD factors re-cross on every call, as on real hardware.
+    }
+
+    /// Mark one op output arena-resident. Factor-sized outputs also
+    /// record the arena→host half of their crossing (the host consumes
+    /// them: POTRF reads the Gram factor, the assembly loops read H/R).
+    fn note_write(
+        &mut self,
+        op: &'static str,
+        rows: usize,
+        cols: usize,
+        data: &[S],
+        host_consumed: bool,
+    ) {
+        let lo = data.as_ptr() as usize;
+        let hi = lo + std::mem::size_of_val(data);
+        self.resident.insert(lo, hi);
+        if host_consumed && !self.is_panel(rows, cols) {
+            self.ledger.record(
+                op,
+                Direction::ArenaToHost,
+                hi - lo,
+                self.profile.phase(),
+                false,
+            );
+        }
+    }
+
+    /// Pre-mark the orth snapshot buffer arena-resident: the host
+    /// composition snapshots the panel into `orth.snap` (a device-side
+    /// copy on real hardware) and the breakdown fallback feeds it back
+    /// through `proj_into`.
+    fn mark_snap_resident(&mut self, ws: &Workspace<S>) {
+        let (lo, hi) = {
+            let snap = ws.buf(names::ORTH_SNAP);
+            let lo = snap.data().as_ptr() as usize;
+            (lo, lo + std::mem::size_of_val(snap.data()))
+        };
+        self.resident.insert(lo, hi);
+    }
+}
+
+impl<S: Scalar> Backend<S> for StagedBackend<S> {
+    fn m(&self) -> usize {
+        self.a.shape().0
+    }
+    fn n(&self) -> usize {
+        self.a.shape().1
+    }
+    fn nnz(&self) -> Option<usize> {
+        self.a.nnz()
+    }
+
+    fn plan(&mut self, plan: &Plan) {
+        self.ensure_staged();
+        self.planned = Some(plan.clone());
+        self.ensure_pads(plan.r.max(plan.b).max(1));
+        // Fresh solve: the previous solve's residency is stale (the
+        // algorithms host-initialize their state buffers before the
+        // first staged upload).
+        self.resident.clear();
+        self.ledger.totals.plans += 1;
+    }
+
+    fn apply_a_into(&mut self, x: MatRef<S>, mut y: MatMut<S>) {
+        assert_eq!((y.rows, y.cols), (self.m(), x.cols), "apply_a_into out shape");
+        self.ensure_staged();
+        self.ensure_pads(x.cols);
+        self.note_read("apply_a", x.rows, x.cols, x.data);
+        let t = Timer::start(self.mult_flops(x.cols));
+        match self.dev.as_ref().expect("operand staged above") {
+            DeviceOperand::Dense(a) => {
+                blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, y.reborrow())
+            }
+            DeviceOperand::Csr { .. } => {
+                let Operand::Sparse(a) = &self.a else { unreachable!("csr arena, sparse host") };
+                a.spmm(x, y.reborrow());
+            }
+            DeviceOperand::BlockEll { a, .. } => {
+                let pad = self.pad.as_mut().expect("pads sized above");
+                let moved = blockell_apply(a, pad, x, &mut y);
+                self.ledger.record(
+                    "apply_a",
+                    Direction::ArenaToArena,
+                    moved,
+                    self.profile.phase(),
+                    true,
+                );
+            }
+        }
+        t.stop(&mut self.profile);
+        self.note_write("apply_a", y.rows, y.cols, y.data, true);
+    }
+
+    fn apply_at_into(&mut self, x: MatRef<S>, mut y: MatMut<S>) {
+        assert_eq!((y.rows, y.cols), (self.n(), x.cols), "apply_at_into out shape");
+        self.ensure_staged();
+        self.ensure_pads(x.cols);
+        self.note_read("apply_at", x.rows, x.cols, x.data);
+        let t = Timer::start(self.mult_flops(x.cols));
+        match self.dev.as_ref().expect("operand staged above") {
+            DeviceOperand::Dense(a) => {
+                blas3::gemm_tn(S::ONE, a.as_ref(), x, S::ZERO, y.reborrow())
+            }
+            // Arena-resident explicit transpose: gather SpMM, never the
+            // scatter kernel (the device already paid the §4.1.2 trade).
+            DeviceOperand::Csr { at } => at.spmm(x, y.reborrow()),
+            DeviceOperand::BlockEll { at, .. } => {
+                let pad = self.pad.as_mut().expect("pads sized above");
+                let moved = blockell_apply(at, pad, x, &mut y);
+                self.ledger.record(
+                    "apply_at",
+                    Direction::ArenaToArena,
+                    moved,
+                    self.profile.phase(),
+                    true,
+                );
+            }
+        }
+        t.stop(&mut self.profile);
+        self.note_write("apply_at", y.rows, y.cols, y.data, true);
+    }
+
+    fn gram_into(&mut self, q: MatRef<S>, mut w: MatMut<S>) {
+        self.note_read("gram", q.rows, q.cols, q.data);
+        let flops = q.cols as f64 * q.cols as f64 * q.rows as f64;
+        let t = Timer::start(flops);
+        blas3::gram_into(q, w.reborrow());
+        t.stop(&mut self.profile);
+        self.note_write("gram", w.rows, w.cols, w.data, true);
+    }
+
+    fn proj_into(&mut self, p: MatRef<S>, q: MatRef<S>, mut h: MatMut<S>) {
+        self.note_read("proj", p.rows, p.cols, p.data);
+        self.note_read("proj", q.rows, q.cols, q.data);
+        let flops = 2.0 * p.rows as f64 * p.cols as f64 * q.cols as f64;
+        let t = Timer::start(flops);
+        blas3::gemm_tn(S::ONE, p, q, S::ZERO, h.reborrow());
+        t.stop(&mut self.profile);
+        self.note_write("proj", h.rows, h.cols, h.data, true);
+    }
+
+    fn subtract_proj(&mut self, mut q: MatMut<S>, p: MatRef<S>, h: MatRef<S>) {
+        self.note_read("subtract_proj", q.rows, q.cols, q.data);
+        self.note_read("subtract_proj", p.rows, p.cols, p.data);
+        self.note_read("subtract_proj", h.rows, h.cols, h.data);
+        let flops = 2.0 * p.rows as f64 * p.cols as f64 * h.cols as f64;
+        let t = Timer::start(flops);
+        blas3::gemm_nn(-S::ONE, p, h, S::ONE, q.reborrow());
+        t.stop(&mut self.profile);
+        self.note_write("subtract_proj", q.rows, q.cols, q.data, false);
+    }
+
+    fn tri_solve_right(&mut self, mut q: MatMut<S>, l: MatRef<S>) {
+        self.note_read("tri_solve_right", q.rows, q.cols, q.data);
+        // The host-computed Cholesky factor crossing back to the device —
+        // the sanctioned POTRF upload (factor-sized, never residency-
+        // cached, so it re-records every call as on real hardware).
+        self.note_read("tri_solve_right", l.rows, l.cols, l.data);
+        let flops = q.cols as f64 * q.cols as f64 * q.rows as f64;
+        let t = Timer::start(flops);
+        blas3::trsm_right_lt(l, q.reborrow());
+        t.stop(&mut self.profile);
+        self.note_write("tri_solve_right", q.rows, q.cols, q.data, false);
+    }
+
+    fn gemm_nn_into(&mut self, a: MatRef<S>, b: MatRef<S>, mut c: MatMut<S>) {
+        assert_eq!((c.rows, c.cols), (a.rows, b.cols), "gemm_nn_into out shape");
+        self.note_read("gemm_nn", a.rows, a.cols, a.data);
+        self.note_read("gemm_nn", b.rows, b.cols, b.data);
+        let flops = 2.0 * a.rows as f64 * a.cols as f64 * b.cols as f64;
+        let t = Timer::start(flops);
+        blas3::gemm_nn(S::ONE, a, b, S::ZERO, c.reborrow());
+        t.stop(&mut self.profile);
+        self.note_write("gemm_nn", c.rows, c.cols, c.data, false);
+    }
+
+    fn copy_into(&mut self, src: MatRef<S>, mut dst: MatMut<S>) {
+        assert_eq!((src.rows, src.cols), (dst.rows, dst.cols), "copy_into shape");
+        self.note_read("copy_into", src.rows, src.cols, src.data);
+        dst.data.copy_from_slice(src.data);
+        self.ledger.record(
+            "copy_into",
+            Direction::ArenaToArena,
+            std::mem::size_of_val(src.data),
+            self.profile.phase(),
+            self.is_panel(src.rows, src.cols),
+        );
+        self.note_write("copy_into", dst.rows, dst.cols, dst.data, false);
+    }
+
+    fn stage_in(&mut self, src: MatRef<S>) {
+        let lo = src.data.as_ptr() as usize;
+        let hi = lo + std::mem::size_of_val(src.data);
+        let missing = self.resident.uncovered(lo, hi);
+        if missing > 0 {
+            self.ledger.record(
+                "stage_in",
+                Direction::HostToArena,
+                missing,
+                self.profile.phase(),
+                self.is_panel(src.rows, src.cols),
+            );
+        }
+        self.resident.insert(lo, hi);
+    }
+
+    fn orth_cholqr2_into(
+        &mut self,
+        q: MatMut<S>,
+        r: MatMut<S>,
+        ws: &Workspace<S>,
+    ) -> crate::error::Result<()> {
+        self.mark_snap_resident(ws);
+        crate::algo::orth::cholqr2_into_host(self, q, r, ws)
+    }
+
+    fn orth_cgs_cqr2_into(
+        &mut self,
+        q: MatMut<S>,
+        p: MatRef<'_, S>,
+        h: MatMut<S>,
+        r: MatMut<S>,
+        ws: &Workspace<S>,
+    ) -> crate::error::Result<()> {
+        self.mark_snap_resident(ws);
+        crate::algo::orth::cgs_cqr2_into_host(self, q, p, h, r, ws)
+    }
+
+    fn profile_mut(&mut self) -> &mut Profile {
+        &mut self.profile
+    }
+
+    fn take_profile(&mut self) -> Profile {
+        std::mem::take(&mut self.profile)
+    }
+
+    fn name(&self) -> &'static str {
+        "staged"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::lancsvd::lancsvd;
+    use crate::algo::randsvd::randsvd;
+    use crate::algo::{residuals, LancSvdOpts, RandSvdOpts};
+    use crate::backend::cpu::CpuBackend;
+    use crate::gen::sparse::{generate, SparseSpec};
+    use crate::la::blas3::{mat_nn, mat_tn};
+    use crate::sparse::coo::Coo;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn interval_set_insert_merge_uncovered() {
+        let mut s = IntervalSet::default();
+        assert_eq!(s.uncovered(10, 20), 10);
+        s.insert(10, 20);
+        assert_eq!(s.uncovered(10, 20), 0);
+        assert_eq!(s.uncovered(5, 25), 10);
+        s.insert(30, 40);
+        s.insert(18, 32); // bridges both spans
+        assert_eq!(s.spans, vec![(10, 40)]);
+        assert_eq!(s.uncovered(0, 50), 20);
+        s.insert(40, 45); // adjacent: merges
+        assert_eq!(s.spans, vec![(10, 45)]);
+        s.insert(0, 5);
+        assert_eq!(s.spans, vec![(0, 5), (10, 45)]);
+        assert_eq!(s.uncovered(3, 12), 5);
+        s.clear();
+        assert_eq!(s.uncovered(10, 20), 10);
+        // Degenerate ranges are no-ops.
+        s.insert(7, 7);
+        assert!(s.spans.is_empty());
+        assert_eq!(s.uncovered(7, 7), 0);
+    }
+
+    fn small_sparse(seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(40, 24);
+        for _ in 0..300 {
+            coo.push(rng.below(40), rng.below(24), rng.normal());
+        }
+        Csr::from_coo(&coo).unwrap()
+    }
+
+    #[test]
+    fn sparse_ops_match_cpu_reference() {
+        let a = small_sparse(1);
+        let ad = a.to_dense();
+        let mut be = StagedBackend::new_sparse(a);
+        assert_eq!(be.device_format(), None, "staged lazily");
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(24, 4, &mut rng);
+        let y = be.apply_a(x.as_ref());
+        assert!(y.max_abs_diff(&mat_nn(&ad, &x)) < 1e-12);
+        let z = Mat::randn(40, 4, &mut rng);
+        let w = be.apply_at(z.as_ref());
+        assert!(w.max_abs_diff(&mat_tn(&ad, &z)) < 1e-12);
+        assert!(be.device_format().is_some());
+        // The operand staging was ledgered.
+        assert!(be.ledger().totals().staged_operand_bytes > 0);
+    }
+
+    #[test]
+    fn fill_cap_falls_back_to_csr() {
+        // A low-density operand at a tiny fill cap stages as CSR; a
+        // generous cap admits Block-ELL. Numbers agree either way.
+        let spec = SparseSpec { rows: 96, cols: 64, nnz: 300, seed: 3, ..Default::default() };
+        let a = generate(&spec);
+        let ad = a.to_dense();
+        let mut rng = Rng::new(4);
+        let x = Mat::randn(64, 3, &mut rng);
+        let mut ell = StagedBackend::new_sparse(a.clone()).with_fill_cap(1e9);
+        let mut csr = StagedBackend::new_sparse(a).with_fill_cap(1.0);
+        let ye = ell.apply_a(x.as_ref());
+        let yc = csr.apply_a(x.as_ref());
+        assert_eq!(ell.device_format(), Some("blockell"));
+        assert_eq!(csr.device_format(), Some("csr"));
+        assert!(ye.max_abs_diff(&mat_nn(&ad, &x)) < 1e-12);
+        assert!(yc.max_abs_diff(&mat_nn(&ad, &x)) < 1e-12);
+        // Only the Block-ELL path pays arena staging memcpys.
+        assert!(ell.ledger().totals().a2a_bytes > 0);
+        assert_eq!(csr.ledger().totals().a2a_bytes, 0);
+    }
+
+    #[test]
+    fn lancsvd_ledger_zero_hot_panel_transfers() {
+        let spec = SparseSpec { rows: 120, cols: 60, nnz: 1400, seed: 7, ..Default::default() };
+        let a = generate(&spec);
+        let mut be = StagedBackend::new_sparse(a.clone());
+        let opts = LancSvdOpts { r: 16, p: 3, b: 8, wanted: 5, ..Default::default() };
+        let svd = lancsvd(&mut be, &opts).unwrap();
+        let t = be.ledger().totals();
+        assert_eq!(t.hot_panel_transfers, 0, "hot-loop panels must stay resident: {t:?}");
+        assert!(t.hot_factor_crossings > 0, "POTRF factor crossings expected: {t:?}");
+        assert_eq!(t.plans, 1);
+        let mut check = CpuBackend::new_sparse(a);
+        let res = residuals(&mut check, &svd, 5);
+        assert!(res.iter().all(|&x| x < 1e-4), "residuals {res:?}");
+    }
+
+    #[test]
+    fn randsvd_ledger_zero_hot_panel_transfers_and_matches_cpu() {
+        let spec = SparseSpec { rows: 100, cols: 50, nnz: 1000, seed: 9, ..Default::default() };
+        let a = generate(&spec);
+        let opts = RandSvdOpts { r: 12, p: 10, b: 4, seed: 5, ..Default::default() };
+        let mut sbe = StagedBackend::new_sparse(a.clone());
+        let svd_s = randsvd(&mut sbe, &opts).unwrap();
+        assert_eq!(sbe.ledger().hot_panel_transfers(), 0);
+        let mut cbe = CpuBackend::new_sparse(a);
+        let svd_c = randsvd(&mut cbe, &opts).unwrap();
+        // Same algorithm, same arithmetic order in every kernel the two
+        // backends share — sigmas agree to rounding. (The Block-ELL SpMM
+        // sums in a different order than CSR, so not bitwise.)
+        for i in 0..6 {
+            assert!(
+                (svd_s.sigma[i] - svd_c.sigma[i]).abs() <= 1e-9 * svd_c.sigma[0],
+                "sigma_{i}: staged {} cpu {}",
+                svd_s.sigma[i],
+                svd_c.sigma[i]
+            );
+        }
+    }
+
+    #[test]
+    fn hot_panel_violation_panics() {
+        let a = small_sparse(11);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut be = StagedBackend::new_sparse(a);
+            be.plan(&Plan::lancsvd(40, 24, 8, 2, 4));
+            be.profile_mut().set_phase(Block::MultA);
+            // A fresh host matrix was never staged: reading it in a hot
+            // phase is the contract violation the backend must reject.
+            let x = Mat::from_fn(24, 4, |i, j| (i + j) as f64);
+            let mut y = Mat::zeros(40, 4);
+            be.apply_a_into(x.as_ref(), y.as_mut());
+        }));
+        let err = result.expect_err("unsanctioned hot-loop transfer must panic");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("unsanctioned"), "panic message: {msg}");
+    }
+
+    #[test]
+    fn enforcement_off_counts_instead_of_panicking() {
+        let a = small_sparse(12);
+        let mut be = StagedBackend::new_sparse(a).enforce_transfers(false);
+        be.plan(&Plan::lancsvd(40, 24, 8, 2, 4));
+        be.profile_mut().set_phase(Block::MultA);
+        let x = Mat::from_fn(24, 4, |i, j| (i * j) as f64);
+        let mut y = Mat::zeros(40, 4);
+        be.apply_a_into(x.as_ref(), y.as_mut());
+        assert_eq!(be.ledger().hot_panel_transfers(), 1);
+        // Staged via stage_in, the same read is clean.
+        be.take_ledger();
+        be.stage_in(x.as_ref());
+        be.apply_a_into(x.as_ref(), y.as_mut());
+        assert_eq!(be.ledger().hot_panel_transfers(), 0);
+    }
+
+    #[test]
+    fn stage_in_and_copy_into_keep_panels_resident() {
+        let a = small_sparse(13);
+        let mut be = StagedBackend::new_sparse(a);
+        be.plan(&Plan::randsvd(40, 24, 8, 2, 4));
+        let x = Mat::from_fn(24, 8, |i, j| (i as f64) - (j as f64));
+        be.stage_in(x.as_ref());
+        let t0 = be.ledger().totals();
+        assert_eq!(t0.h2a_count, 2, "operand staging + stage_in");
+        // copy_into between resident and fresh arena destinations is
+        // arena→arena traffic, not a host crossing.
+        let mut dst = Mat::zeros(24, 8);
+        be.copy_into(x.as_ref(), dst.as_mut());
+        let t1 = be.ledger().totals();
+        assert_eq!(t1.h2a_count, t0.h2a_count, "no new host crossing");
+        assert!(t1.a2a_bytes > t0.a2a_bytes);
+        // Re-staging resident data records nothing.
+        be.stage_in(x.as_ref());
+        assert_eq!(be.ledger().totals().h2a_count, t1.h2a_count);
+    }
+
+    #[test]
+    fn dense_backend_stages_arena_copy() {
+        let mut rng = Rng::new(21);
+        let ad: Mat = Mat::randn(30, 18, &mut rng);
+        let mut be = StagedBackend::new_dense(ad.clone());
+        let x = Mat::randn(18, 3, &mut rng);
+        let y = be.apply_a(x.as_ref());
+        assert!(y.max_abs_diff(&mat_nn(&ad, &x)) < 1e-12);
+        assert_eq!(be.device_format(), Some("dense"));
+        assert_eq!(
+            be.ledger().totals().staged_operand_bytes,
+            (30 * 18 * std::mem::size_of::<f64>()) as u64
+        );
+        let z = Mat::randn(30, 3, &mut rng);
+        let w = be.apply_at(z.as_ref());
+        assert!(w.max_abs_diff(&mat_tn(&ad, &z)) < 1e-12);
+    }
+
+    #[test]
+    fn f32_instantiation_solves() {
+        let spec = SparseSpec { rows: 90, cols: 45, nnz: 900, seed: 17, ..Default::default() };
+        let a: Csr<f32> = generate(&spec).cast();
+        let mut be = StagedBackend::<f32>::new_sparse(a.clone());
+        let opts = LancSvdOpts { r: 12, p: 3, b: 4, wanted: 4, ..Default::default() };
+        let svd = lancsvd(&mut be, &opts).unwrap();
+        assert_eq!(be.ledger().hot_panel_transfers(), 0);
+        let mut check = CpuBackend::<f32>::new_sparse(a);
+        let res = residuals(&mut check, &svd, 4);
+        assert!(res.iter().all(|&x| x < 1e-3), "f32 residuals {res:?}");
+    }
+
+    #[test]
+    fn event_log_is_bounded() {
+        let mut led = TransferLedger::default();
+        for _ in 0..(EVENT_CAP + 10) {
+            led.record("x", Direction::HostToArena, 8, Block::Other, false);
+        }
+        assert_eq!(led.events().len(), EVENT_CAP);
+        assert_eq!(led.dropped_events(), 10);
+        assert_eq!(led.totals().h2a_count as usize, EVENT_CAP + 10);
+    }
+}

@@ -27,6 +27,15 @@
 //!   adaptive cached-transpose strategy as the CPU backend (operand
 //!   shared via `Arc`, pending build joined on drop). Documented in
 //!   DESIGN.md §3.
+//!
+//! Generic over the element precision `S` (default f64). The PJRT
+//! interchange literal is always f64 — the precision the artifacts were
+//! lowered at — so an `S = f32` solve rounds through f64 on the
+//! artifact/builder paths (values match a native-f32 device to f32
+//! rounding, pinned by the conformance suite's ε-scaled tolerances); the
+//! host fallback paths run natively at `S`. A runtime without a PJRT
+//! client ([`Runtime::host_only`]) degrades every op to the host
+//! substrate, which is how this backend runs in offline/stub builds.
 
 use std::rc::Rc;
 use std::sync::Arc;
@@ -37,9 +46,10 @@ use crate::la::blas3;
 use crate::la::mat::{Mat, MatMut, MatRef};
 use crate::la::workspace::{Plan, Workspace};
 use crate::metrics::{Profile, Timer};
-use crate::runtime::convert::{literal_to_mat, mat_to_literal, matref_to_literal, pow2_bucket};
+use crate::runtime::convert::{literal_to_mat_s, matref_to_literal_s, pow2_bucket};
 use crate::runtime::{builder_ops, Runtime};
 use crate::sparse::csr::Csr;
+use crate::util::scalar::Scalar;
 
 /// Bucketing limits (mirror config/suite.json artifact_buckets).
 const Q_MIN: usize = 512;
@@ -49,10 +59,11 @@ const B_ART: usize = 16;
 const N_PAD: usize = 512;
 const R_BUCKETS: [usize; 3] = [16, 64, 256];
 
-/// The XLA/PJRT compute backend.
-pub struct XlaBackend {
+/// The XLA/PJRT compute backend (generic element precision; the device
+/// interchange runs at f64 — see the module docs).
+pub struct XlaBackend<S: Scalar = f64> {
     rt: Rc<Runtime>,
-    a: Operand,
+    a: Operand<S>,
     /// Device-resident padded A (dense operands only), shape m_pad×N_PAD.
     a_buf: Option<xla::PjRtBuffer>,
     /// Host literal backing `a_buf`. The PJRT CPU client copies from the
@@ -66,7 +77,7 @@ pub struct XlaBackend {
     /// CPU has no cuSPARSE analogue, so sparse products run on the host
     /// substrate — with the same scatter→cached-gather adaptivity as
     /// the CPU backend).
-    at_cache: AdaptiveTranspose,
+    at_cache: AdaptiveTranspose<S>,
     /// Plan of the current solve ([`Backend::plan`]); a real device
     /// target would stage per-shape buffers here.
     planned: Option<Plan>,
@@ -77,14 +88,17 @@ fn r_bucket(r: usize) -> Option<usize> {
     R_BUCKETS.iter().copied().find(|&b| b >= r)
 }
 
-impl XlaBackend {
+impl<S: Scalar> XlaBackend<S> {
     /// Wrap a dense operand; stages the (padded) matrix to the device if
-    /// an artifact family covers its shape.
-    pub fn new_dense(rt: Rc<Runtime>, a: Mat) -> Result<XlaBackend> {
+    /// an artifact family covers its shape. A host-only runtime (no PJRT
+    /// client) skips staging and runs on the fallback paths; a *real*
+    /// client's staging failure still propagates — silent demotion to
+    /// the host substrate would mask device faults.
+    pub fn new_dense(rt: Rc<Runtime>, a: Mat<S>) -> Result<XlaBackend<S>> {
         let m_pad = pow2_bucket(a.rows(), Q_MIN, Q_MAX);
         let stageable = a.rows() <= m_pad && a.cols() <= N_PAD;
-        let (a_buf, a_lit) = if stageable {
-            let lit = mat_to_literal(&a, m_pad, N_PAD)?;
+        let (a_buf, a_lit) = if stageable && rt.has_client() {
+            let lit = matref_to_literal_s(a.as_ref(), m_pad, N_PAD)?;
             let buf = rt.stage(&lit)?;
             (Some(buf), Some(lit))
         } else {
@@ -103,7 +117,7 @@ impl XlaBackend {
     }
 
     /// Wrap a sparse operand (CSR SpMM runs on the host substrate).
-    pub fn new_sparse(rt: Rc<Runtime>, a: impl Into<Arc<Csr>>) -> XlaBackend {
+    pub fn new_sparse(rt: Rc<Runtime>, a: impl Into<Arc<Csr<S>>>) -> XlaBackend<S> {
         XlaBackend {
             rt,
             a: Operand::Sparse(a.into()),
@@ -113,6 +127,14 @@ impl XlaBackend {
             at_cache: AdaptiveTranspose::from_env(),
             planned: None,
             profile: Profile::new(),
+        }
+    }
+
+    /// Wrap either operand kind.
+    pub fn new(rt: Rc<Runtime>, a: Operand<S>) -> Result<XlaBackend<S>> {
+        match a {
+            Operand::Dense(a) => XlaBackend::new_dense(rt, a),
+            Operand::Sparse(a) => Ok(XlaBackend::new_sparse(rt, a)),
         }
     }
 
@@ -127,7 +149,7 @@ impl XlaBackend {
 
     /// Fused-orth artifact path for Alg. 4. Returns None when no artifact
     /// applies (wrong b, q too large) so the caller can fall back.
-    fn try_cholqr2_artifact(&mut self, q: &mut MatMut<'_>) -> Result<Option<Mat>> {
+    fn try_cholqr2_artifact(&mut self, q: &mut MatMut<'_, S>) -> Result<Option<Mat<S>>> {
         let (qr, b) = (q.rows, q.cols);
         if b != B_ART || qr > Q_MAX {
             return Ok(None);
@@ -139,10 +161,10 @@ impl XlaBackend {
         }
         let flops = crate::cost::ca4(b, qr);
         let t = Timer::start(flops);
-        let lit = matref_to_literal(q.as_ref(), q_pad, b)?;
+        let lit = matref_to_literal_s(q.as_ref(), q_pad, b)?;
         let outs = self.rt.run_artifact("cholqr2", &[&in_shape], &[lit])?;
-        let q_out = literal_to_mat(&outs[0], qr, b)?;
-        let r_out = literal_to_mat(&outs[1], b, b)?;
+        let q_out: Mat<S> = literal_to_mat_s(&outs[0], qr, b)?;
+        let r_out: Mat<S> = literal_to_mat_s(&outs[1], b, b)?;
         t.stop(&mut self.profile);
         if !mat_finite(&r_out) || !mat_finite(&q_out) {
             return Ok(None); // breakdown: NaN signal → host fallback
@@ -154,9 +176,9 @@ impl XlaBackend {
     /// Fused-orth artifact path for Alg. 5 (None → fall back).
     fn try_cgs_cqr2_artifact(
         &mut self,
-        q: &mut MatMut<'_>,
-        p: MatRef<'_>,
-    ) -> Result<Option<(Mat, Mat)>> {
+        q: &mut MatMut<'_, S>,
+        p: MatRef<'_, S>,
+    ) -> Result<Option<(Mat<S>, Mat<S>)>> {
         let (qr, b) = (q.rows, q.cols);
         let s = p.cols;
         if b != B_ART || qr > Q_MAX || s > S_MAX {
@@ -171,12 +193,12 @@ impl XlaBackend {
         }
         let flops = crate::cost::ca5(b, qr, s);
         let t = Timer::start(flops);
-        let ql = matref_to_literal(q.as_ref(), q_pad, b)?;
-        let pl = matref_to_literal(p, q_pad, s_pad)?;
+        let ql = matref_to_literal_s(q.as_ref(), q_pad, b)?;
+        let pl = matref_to_literal_s(p, q_pad, s_pad)?;
         let outs = self.rt.run_artifact("cgs_cqr2", &[&q_shape, &p_shape], &[ql, pl])?;
-        let q_out = literal_to_mat(&outs[0], qr, b)?;
-        let h_out = literal_to_mat(&outs[1], s, b)?;
-        let r_out = literal_to_mat(&outs[2], b, b)?;
+        let q_out: Mat<S> = literal_to_mat_s(&outs[0], qr, b)?;
+        let h_out: Mat<S> = literal_to_mat_s(&outs[1], s, b)?;
+        let r_out: Mat<S> = literal_to_mat_s(&outs[2], b, b)?;
         t.stop(&mut self.profile);
         if !mat_finite(&q_out) || !mat_finite(&r_out) {
             return Ok(None);
@@ -186,7 +208,11 @@ impl XlaBackend {
     }
 
     /// Dense apply through the staged buffer + matmul artifact.
-    fn dense_apply_artifact(&mut self, x: MatRef<'_>, transposed: bool) -> Result<Option<Mat>> {
+    fn dense_apply_artifact(
+        &mut self,
+        x: MatRef<'_, S>,
+        transposed: bool,
+    ) -> Result<Option<Mat<S>>> {
         let Operand::Dense(a) = &self.a else { return Ok(None) };
         let Some(a_buf) = &self.a_buf else { return Ok(None) };
         let (m, n) = (a.rows(), a.cols());
@@ -200,19 +226,19 @@ impl XlaBackend {
         if !self.rt.has_artifact(op, &[&a_shape, &x_shape]) {
             return Ok(None);
         }
-        let xl = matref_to_literal(x, x_shape[0], x_shape[1])?;
+        let xl = matref_to_literal_s(x, x_shape[0], x_shape[1])?;
         let x_buf = self.rt.stage(&xl)?;
         let outs = self.rt.run_artifact_b(op, &[&a_shape, &x_shape], &[a_buf, &x_buf])?;
-        let y = literal_to_mat(&outs[0], out_rows, k)?;
+        let y = literal_to_mat_s(&outs[0], out_rows, k)?;
         Ok(Some(y))
     }
 }
 
-fn mat_finite(m: &Mat) -> bool {
+fn mat_finite<S: Scalar>(m: &Mat<S>) -> bool {
     m.data().iter().all(|x| x.is_finite())
 }
 
-impl Backend for XlaBackend {
+impl<S: Scalar> Backend<S> for XlaBackend<S> {
     fn m(&self) -> usize {
         self.a.shape().0
     }
@@ -227,7 +253,7 @@ impl Backend for XlaBackend {
         self.planned = Some(plan.clone());
     }
 
-    fn apply_a_into(&mut self, x: MatRef, mut y: MatMut) {
+    fn apply_a_into(&mut self, x: MatRef<S>, mut y: MatMut<S>) {
         // Same out-shape contract the CPU kernels assert.
         assert_eq!((y.rows, y.cols), (self.m(), x.cols), "apply_a_into out shape");
         let t = Timer::start(self.mult_flops(x.cols));
@@ -236,16 +262,21 @@ impl Backend for XlaBackend {
             _ => match &self.a {
                 // Host CSR SpMM (documented substitution) or CPU fallback.
                 Operand::Sparse(a) => a.spmm(x, y),
+                // Without a client the builder path cannot ever succeed:
+                // skip its per-call operand clones and go straight host.
+                Operand::Dense(a) if !self.rt.has_client() => {
+                    blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, y)
+                }
                 Operand::Dense(a) => match builder_ops::matmul_nn(&self.rt, a, &x.to_owned()) {
                     Ok(out) => y.data.copy_from_slice(out.data()),
-                    Err(_) => blas3::gemm_nn(1.0, a.as_ref(), x, 0.0, y),
+                    Err(_) => blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, y),
                 },
             },
         }
         t.stop(&mut self.profile);
     }
 
-    fn apply_at_into(&mut self, x: MatRef, mut y: MatMut) {
+    fn apply_at_into(&mut self, x: MatRef<S>, mut y: MatMut<S>) {
         assert_eq!((y.rows, y.cols), (self.n(), x.cols), "apply_at_into out shape");
         let t = Timer::start(self.mult_flops(x.cols));
         match self.dense_apply_artifact(x, true) {
@@ -255,16 +286,19 @@ impl Backend for XlaBackend {
                     Some(at) => at.spmm(x, y),
                     None => a.spmm_t(x, y),
                 },
+                Operand::Dense(a) if !self.rt.has_client() => {
+                    blas3::gemm_tn(S::ONE, a.as_ref(), x, S::ZERO, y)
+                }
                 Operand::Dense(a) => match builder_ops::matmul_tn(&self.rt, a, &x.to_owned()) {
                     Ok(out) => y.data.copy_from_slice(out.data()),
-                    Err(_) => blas3::gemm_tn(1.0, a.as_ref(), x, 0.0, y),
+                    Err(_) => blas3::gemm_tn(S::ONE, a.as_ref(), x, S::ZERO, y),
                 },
             },
         }
         t.stop(&mut self.profile);
     }
 
-    fn gram_into(&mut self, q: MatRef, w: MatMut) {
+    fn gram_into(&mut self, q: MatRef<S>, w: MatMut<S>) {
         // Fine-grained op (only reached on the host fallback path).
         let flops = q.cols as f64 * q.cols as f64 * q.rows as f64;
         let t = Timer::start(flops);
@@ -272,42 +306,51 @@ impl Backend for XlaBackend {
         t.stop(&mut self.profile);
     }
 
-    fn proj_into(&mut self, p: MatRef, q: MatRef, h: MatMut) {
+    fn proj_into(&mut self, p: MatRef<S>, q: MatRef<S>, h: MatMut<S>) {
         let flops = 2.0 * p.rows as f64 * p.cols as f64 * q.cols as f64;
         let t = Timer::start(flops);
-        blas3::gemm_tn(1.0, p, q, 0.0, h);
+        blas3::gemm_tn(S::ONE, p, q, S::ZERO, h);
         t.stop(&mut self.profile);
     }
 
-    fn subtract_proj(&mut self, q: MatMut, p: MatRef, h: MatRef) {
+    fn subtract_proj(&mut self, q: MatMut<S>, p: MatRef<S>, h: MatRef<S>) {
         let flops = 2.0 * p.rows as f64 * p.cols as f64 * h.cols as f64;
         let t = Timer::start(flops);
-        blas3::gemm_nn(-1.0, p, h, 1.0, q);
+        blas3::gemm_nn(-S::ONE, p, h, S::ONE, q);
         t.stop(&mut self.profile);
     }
 
-    fn tri_solve_right(&mut self, q: MatMut, l: MatRef) {
+    fn tri_solve_right(&mut self, q: MatMut<S>, l: MatRef<S>) {
         let flops = q.cols as f64 * q.cols as f64 * q.rows as f64;
         let t = Timer::start(flops);
         blas3::trsm_right_lt(l, q);
         t.stop(&mut self.profile);
     }
 
-    fn gemm_nn_into(&mut self, a: MatRef, b: MatRef, mut c: MatMut) {
+    fn gemm_nn_into(&mut self, a: MatRef<S>, b: MatRef<S>, mut c: MatMut<S>) {
         assert_eq!((c.rows, c.cols), (a.rows, b.cols), "gemm_nn_into out shape");
         let flops = 2.0 * a.rows as f64 * a.cols as f64 * b.cols as f64;
         let t = Timer::start(flops);
-        // Runtime-built GEMM keeps this on the XLA path for any shape.
-        let ao = a.to_owned();
-        let bo = b.to_owned();
-        match builder_ops::matmul_nn(&self.rt, &ao, &bo) {
-            Ok(out) => c.data.copy_from_slice(out.data()),
-            Err(_) => blas3::gemm_nn(1.0, a, b, 0.0, c),
+        if self.rt.has_client() {
+            // Runtime-built GEMM keeps this on the XLA path for any shape.
+            let ao = a.to_owned();
+            let bo = b.to_owned();
+            match builder_ops::matmul_nn(&self.rt, &ao, &bo) {
+                Ok(out) => c.data.copy_from_slice(out.data()),
+                Err(_) => blas3::gemm_nn(S::ONE, a, b, S::ZERO, c),
+            }
+        } else {
+            blas3::gemm_nn(S::ONE, a, b, S::ZERO, c);
         }
         t.stop(&mut self.profile);
     }
 
-    fn orth_cholqr2_into(&mut self, mut q: MatMut, mut r: MatMut, ws: &Workspace) -> Result<()> {
+    fn orth_cholqr2_into(
+        &mut self,
+        mut q: MatMut<S>,
+        mut r: MatMut<S>,
+        ws: &Workspace<S>,
+    ) -> Result<()> {
         assert_eq!((r.rows, r.cols), (q.cols, q.cols), "orth_cholqr2_into R shape");
         match self.try_cholqr2_artifact(&mut q) {
             Ok(Some(r_out)) => {
@@ -326,11 +369,11 @@ impl Backend for XlaBackend {
 
     fn orth_cgs_cqr2_into(
         &mut self,
-        mut q: MatMut,
-        p: MatRef<'_>,
-        mut h: MatMut,
-        mut r: MatMut,
-        ws: &Workspace,
+        mut q: MatMut<S>,
+        p: MatRef<'_, S>,
+        mut h: MatMut<S>,
+        mut r: MatMut<S>,
+        ws: &Workspace<S>,
     ) -> Result<()> {
         assert_eq!((h.rows, h.cols), (p.cols, q.cols), "orth_cgs_cqr2_into H shape");
         assert_eq!((r.rows, r.cols), (q.cols, q.cols), "orth_cgs_cqr2_into R shape");
@@ -356,5 +399,56 @@ impl Backend for XlaBackend {
 
     fn name(&self) -> &'static str {
         "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::la::blas3::{mat_nn, mat_tn};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn host_only_runtime_runs_dense_fallbacks() {
+        // No PJRT client: construction succeeds (staging degrades) and
+        // every op lands on the host substrate with correct numbers.
+        let rt = Rc::new(Runtime::host_only());
+        let mut rng = Rng::new(1);
+        let ad: Mat = Mat::randn(60, 20, &mut rng);
+        let mut be = XlaBackend::new_dense(rt, ad.clone()).unwrap();
+        assert!(be.a_buf.is_none(), "staging must degrade without a client");
+        let x = Mat::randn(20, 4, &mut rng);
+        assert!(be.apply_a(x.as_ref()).max_abs_diff(&mat_nn(&ad, &x)) < 1e-12);
+        let z = Mat::randn(60, 4, &mut rng);
+        assert!(be.apply_at(z.as_ref()).max_abs_diff(&mat_tn(&ad, &z)) < 1e-12);
+        let mut q = Mat::randn(60, 8, &mut rng);
+        let r = be.orth_cholqr2(&mut q).unwrap();
+        assert!(crate::la::norms::orth_error(&q) < 1e-12);
+        assert_eq!((r.rows(), r.cols()), (8, 8));
+    }
+
+    #[test]
+    fn host_only_runtime_runs_f32() {
+        let rt = Rc::new(Runtime::host_only());
+        let mut rng = Rng::new(2);
+        let ad: Mat<f32> = Mat::randn(40, 16, &mut rng);
+        let mut be = XlaBackend::<f32>::new_dense(rt, ad.clone()).unwrap();
+        let x: Mat<f32> = Mat::randn(16, 3, &mut rng);
+        let y = be.apply_a(x.as_ref());
+        let mut expect: Mat<f32> = Mat::zeros(40, 3);
+        blas3::gemm_nn(1.0f32, ad.as_ref(), x.as_ref(), 0.0f32, expect.as_mut());
+        assert!(y.max_abs_diff(&expect) < 1e-5);
+        assert_eq!(be.name(), "xla");
+    }
+
+    #[test]
+    fn plan_hook_records_plan() {
+        let rt = Rc::new(Runtime::host_only());
+        let mut be = XlaBackend::new_dense(rt, Mat::<f64>::zeros(30, 10)).unwrap();
+        assert!(be.planned().is_none());
+        let plan = Plan::randsvd(30, 10, 6, 2, 3);
+        be.plan(&plan);
+        let seen = be.planned().expect("plan recorded");
+        assert_eq!((seen.m, seen.n, seen.r, seen.b), (30, 10, 6, 3));
     }
 }

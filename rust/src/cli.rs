@@ -8,7 +8,7 @@
 //! trunksvd solve (--suite NAME | --mtx FILE | --dense M N) \
 //!                [--algo lanc|rand] [--r R] [--p P] [--b B] [--seed S] \
 //!                [--tol T] [--wanted K] [--dtype f32|f64] \
-//!                [--backend cpu|cpu-scatter|cpu-expt|xla]
+//!                [--backend cpu|cpu-scatter|cpu-expt|staged|xla]
 //! trunksvd experiment fig1|fig2|fig3|fig4|table1|table2|all \
 //!                [--subset N] [--shrink S] [--out DIR] [--dtype f32|f64] \
 //!                [--backend ...]
@@ -85,13 +85,14 @@ fn backend_choice(args: &Args) -> Result<BackendChoice> {
         "cpu" => Ok(BackendChoice::Cpu),
         "cpu-scatter" => Ok(BackendChoice::CpuScatter),
         "cpu-expt" => Ok(BackendChoice::CpuExplicitT),
+        "staged" => Ok(BackendChoice::Staged),
         "xla" => {
             let rt = Runtime::new(&default_artifact_dir())?;
             Ok(BackendChoice::Xla(Rc::new(rt)))
         }
         other => Err(Error::Parse {
             what: "cli",
-            detail: format!("unknown backend '{other}' (cpu|cpu-scatter|cpu-expt|xla)"),
+            detail: format!("unknown backend '{other}' (cpu|cpu-scatter|cpu-expt|staged|xla)"),
         }),
     }
 }
@@ -103,7 +104,7 @@ const USAGE: &str = "usage: trunksvd <info|suite|gen|solve|experiment> [options]
   solve --suite NAME | --mtx FILE | --dense M N
         [--algo lanc|rand] [--r R] [--p P] [--b B] [--seed S]
         [--tol T] [--wanted K] [--restart basic|thick] [--keep K]
-        [--dtype f32|f64] [--backend cpu|cpu-scatter|cpu-expt|xla]
+        [--dtype f32|f64] [--backend cpu|cpu-scatter|cpu-expt|staged|xla]
   experiment fig1|fig2|fig3|fig4|table1|table2|all
         [--subset N] [--shrink S] [--out DIR] [--dtype f32|f64] [--backend ...]";
 
@@ -143,7 +144,7 @@ fn cmd_info() -> Result<()> {
         Ok(rt) => println!(
             "artifacts: {} entries at {dir} (platform {})",
             rt.artifact_count(),
-            rt.client().platform_name()
+            rt.platform_name()
         ),
         Err(e) => println!("artifacts: unavailable ({e})"),
     }
@@ -341,6 +342,21 @@ mod tests {
         assert_eq!(
             main_with_args(argv("solve --dense 600 --n 64 --algo lanc --r 32 --p 2 --wanted 5")),
             0
+        );
+    }
+
+    #[test]
+    fn solve_tiny_dense_staged_backend() {
+        assert_eq!(
+            main_with_args(argv(
+                "solve --dense 300 --n 32 --algo lanc --r 16 --p 2 --wanted 4 --backend staged"
+            )),
+            0
+        );
+        assert_eq!(
+            main_with_args(argv("solve --dense 100 --n 16 --backend warp")),
+            1,
+            "unknown backend must be rejected"
         );
     }
 

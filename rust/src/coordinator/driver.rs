@@ -10,6 +10,7 @@ use crate::algo::{
     lancsvd::lancsvd, randsvd::randsvd, residuals, LancSvdOpts, RandSvdOpts, TruncatedSvd,
 };
 use crate::backend::cpu::CpuBackend;
+use crate::backend::staged::StagedBackend;
 use crate::backend::xla::XlaBackend;
 use crate::backend::{Backend, Operand};
 use crate::error::{Error, Result};
@@ -47,6 +48,9 @@ pub enum BackendChoice {
     /// Pure-rust with an eager explicit transposed CSR copy (paper's
     /// §4.1.2 strategy — ablation arm).
     CpuExplicitT,
+    /// Device-contract simulation: arena-staged operand (CSR→Block-ELL),
+    /// residency-tracked buffers, transfer ledger (`backend::staged`).
+    Staged,
     /// AOT JAX/Pallas graphs through PJRT.
     Xla(Rc<Runtime>),
 }
@@ -57,6 +61,7 @@ impl BackendChoice {
             BackendChoice::Cpu => "cpu",
             BackendChoice::CpuScatter => "cpu-scatter",
             BackendChoice::CpuExplicitT => "cpu+expT",
+            BackendChoice::Staged => "staged",
             BackendChoice::Xla(_) => "xla",
         }
     }
@@ -150,33 +155,28 @@ impl RunReport {
     }
 }
 
-/// CPU-family backend construction at any precision — the single place
-/// the `BackendChoice`-to-`CpuBackend` policy lives (the f64 path reuses
-/// it through [`make_backend`]).
-fn make_cpu_backend<S: Scalar>(op: Operand<S>, choice: &BackendChoice) -> Result<CpuBackend<S>> {
+/// Backend construction at any precision — the single place the
+/// `BackendChoice` policy lives. Every backend family is generic over
+/// the element type now, so `--dtype f32` combines with every
+/// `--backend` (the XLA backend's PJRT interchange stays f64; see its
+/// module docs).
+pub fn make_backend_at<S: Scalar>(
+    op: Operand<S>,
+    choice: &BackendChoice,
+) -> Result<Box<dyn Backend<S>>> {
     Ok(match choice {
-        BackendChoice::Cpu => CpuBackend::new(op),
-        BackendChoice::CpuScatter => CpuBackend::new(op).scatter_only(),
-        BackendChoice::CpuExplicitT => CpuBackend::new(op).with_explicit_transpose(),
-        BackendChoice::Xla(_) => {
-            return Err(Error::InvalidParam(
-                "the xla backend is f64-only; use --dtype f64 or a cpu backend".into(),
-            ))
-        }
+        BackendChoice::Cpu => Box::new(CpuBackend::new(op)),
+        BackendChoice::CpuScatter => Box::new(CpuBackend::new(op).scatter_only()),
+        BackendChoice::CpuExplicitT => Box::new(CpuBackend::new(op).with_explicit_transpose()),
+        BackendChoice::Staged => Box::new(StagedBackend::new(op)),
+        BackendChoice::Xla(rt) => Box::new(XlaBackend::new(rt.clone(), op)?),
     })
 }
 
-/// Build a backend for an operand.
+/// Build an f64 backend for an operand (compatibility shim over
+/// [`make_backend_at`]).
 pub fn make_backend(op: Operand, choice: &BackendChoice) -> Result<Box<dyn Backend>> {
-    Ok(match (choice, op) {
-        (BackendChoice::Xla(rt), Operand::Dense(a)) => {
-            Box::new(XlaBackend::new_dense(rt.clone(), a)?)
-        }
-        (BackendChoice::Xla(rt), Operand::Sparse(a)) => {
-            Box::new(XlaBackend::new_sparse(rt.clone(), a))
-        }
-        (choice, op) => Box::new(make_cpu_backend(op, choice)?),
-    })
+    make_backend_at::<f64>(op, choice)
 }
 
 /// Dispatch one solve on an already-built backend (any precision).
@@ -249,13 +249,13 @@ pub fn run(
     let nnz = op.nnz();
     let (secs, profile, sigma, res, est_res, iters) = match params.dtype {
         DType::F64 => {
-            let mut be = make_backend(op.clone(), choice)?;
+            let mut be = make_backend_at::<f64>(op.clone(), choice)?;
             run_at(op, be.as_mut(), algo, params)?
         }
         DType::F32 => {
             let op32: Operand<f32> = op.cast();
-            let mut be = make_cpu_backend(op32.clone(), choice)?;
-            run_at(op32, &mut be, algo, params)?
+            let mut be = make_backend_at::<f32>(op32.clone(), choice)?;
+            run_at(op32, be.as_mut(), algo, params)?
         }
     };
     Ok(RunReport {
@@ -318,6 +318,29 @@ mod tests {
             assert!((s64 - s32).abs() < 1e-3 * s64.max(1e-6), "{s64} vs {s32}");
         }
         assert!(r32.summary().contains("f32"));
+    }
+
+    #[test]
+    fn staged_backend_runs_both_dtypes() {
+        let spec = SparseSpec { rows: 150, cols: 70, nnz: 1800, seed: 13, ..Default::default() };
+        let a = generate(&spec);
+        let params = Params { r: 16, p: 3, b: 8, wanted: 4, ..Default::default() };
+        let r64 = run(
+            "staged-sp",
+            Operand::sparse(a.clone()),
+            Algo::Lanc,
+            &params,
+            &BackendChoice::Staged,
+        )
+        .unwrap();
+        assert_eq!(r64.backend, "staged");
+        assert!(r64.max_residual() < 1e-4, "residuals {:?}", r64.residuals);
+        let p32 = Params { dtype: crate::util::scalar::DType::F32, ..params };
+        let r32 =
+            run("staged-sp32", Operand::sparse(a), Algo::Lanc, &p32, &BackendChoice::Staged)
+                .unwrap();
+        assert_eq!((r32.backend.as_str(), r32.dtype), ("staged", "f32"));
+        assert!(r32.max_residual() < 1e-3, "f32 residuals {:?}", r32.residuals);
     }
 
     #[test]

@@ -210,8 +210,15 @@ impl Plan {
     /// Plan for standalone orthogonalization of rows×b panels against
     /// histories up to s_max columns (the thin value-returning wrappers).
     pub fn orth(rows: usize, s_max: usize, b: usize) -> Plan {
-        let mut plan =
-            Plan { kind: PlanKind::Orth, m: rows, n: rows, r: s_max.max(b), p: 1, b, entries: Vec::new() };
+        let mut plan = Plan {
+            kind: PlanKind::Orth,
+            m: rows,
+            n: rows,
+            r: s_max.max(b),
+            p: 1,
+            b,
+            entries: Vec::new(),
+        };
         plan.push_orth(rows, s_max, b);
         plan
     }
@@ -219,6 +226,14 @@ impl Plan {
     /// Declared shape of a named buffer, if the plan has it.
     pub fn shape_of(&self, name: &str) -> Option<(usize, usize)> {
         self.entries.iter().find(|e| e.name == name).map(|e| (e.rows, e.cols))
+    }
+
+    /// Iterate every planned buffer as `(name, rows, cols)` — the
+    /// enumeration a device backend walks in [`plan`] staging
+    /// (`crate::backend::Backend::plan`) to reserve arena space for
+    /// exactly the shapes the solve will touch.
+    pub fn entries(&self) -> impl Iterator<Item = (&'static str, usize, usize)> + '_ {
+        self.entries.iter().map(|e| (e.name, e.rows, e.cols))
     }
 
     /// Total planned elements (diagnostics / memory budgeting).
@@ -278,11 +293,9 @@ impl<S: Scalar> Workspace<S> {
     }
 
     fn index(&self, name: &str) -> usize {
-        self.plan
-            .entries
-            .iter()
-            .position(|e| e.name == name)
-            .unwrap_or_else(|| panic!("workspace: no buffer '{name}' in a {:?} plan", self.plan.kind))
+        self.plan.entries.iter().position(|e| e.name == name).unwrap_or_else(|| {
+            panic!("workspace: no buffer '{name}' in a {:?} plan", self.plan.kind)
+        })
     }
 
     /// Borrow a buffer mutably by name, with no shape requirement (use
@@ -372,6 +385,22 @@ mod tests {
         assert_eq!(plan.shape_of(names::RAND_Q), Some((40, 16)));
         assert_eq!(plan.shape_of(names::RAND_QBAR), Some((100, 16)));
         assert_eq!(plan.shape_of(names::RAND_R), Some((16, 16)));
+    }
+
+    #[test]
+    fn entries_enumerate_every_buffer() {
+        let plan = Plan::lancsvd(100, 40, 16, 4, 8);
+        let entries: Vec<_> = plan.entries().collect();
+        assert!(entries.iter().any(|&(n, r, c)| (n, r, c) == (names::LANC_P, 40, 16)));
+        assert_eq!(
+            entries.iter().map(|&(_, r, c)| r * c).sum::<usize>(),
+            plan.total_elems(),
+            "entries must cover the whole arena"
+        );
+        // Names are unique — a device arena can key on them.
+        for (i, &(n, ..)) in entries.iter().enumerate() {
+            assert!(entries[..i].iter().all(|&(m, ..)| m != n), "duplicate '{n}'");
+        }
     }
 
     #[test]

@@ -4,10 +4,11 @@
 
 use std::rc::Rc;
 
-use super::convert::{literal_to_mat, mat_to_literal};
+use super::convert::{literal_to_mat_s, matref_to_literal_s};
 use super::Runtime;
 use crate::error::Result;
 use crate::la::mat::Mat;
+use crate::util::scalar::Scalar;
 
 fn f64_shape(dims: &[usize]) -> xla::Shape {
     xla::Shape::array::<f64>(dims.iter().map(|&d| d as i64).collect())
@@ -28,8 +29,10 @@ fn build_matmul_tn(q: usize, a_cols: usize, b_cols: usize) -> Result<xla::XlaCom
     Ok(at.matmul(&x)?.build()?)
 }
 
-/// C = A·B through a runtime-built, cached executable.
-pub fn matmul_nn(rt: &Runtime, a: &Mat, b: &Mat) -> Result<Mat> {
+/// C = A·B through a runtime-built, cached executable. Generic over the
+/// caller's element precision; the device graph runs at the f64
+/// interchange precision (values round through the literal staging).
+pub fn matmul_nn<S: Scalar>(rt: &Runtime, a: &Mat<S>, b: &Mat<S>) -> Result<Mat<S>> {
     let (m, k) = (a.rows(), a.cols());
     let n = b.cols();
     assert_eq!(b.rows(), k, "matmul_nn inner dim");
@@ -37,8 +40,9 @@ pub fn matmul_nn(rt: &Runtime, a: &Mat, b: &Mat) -> Result<Mat> {
     run2(rt, &exe, a, b, m, n)
 }
 
-/// C = Aᵀ·B through a runtime-built, cached executable.
-pub fn matmul_tn(rt: &Runtime, a: &Mat, b: &Mat) -> Result<Mat> {
+/// C = Aᵀ·B through a runtime-built, cached executable (precision
+/// semantics as [`matmul_nn`]).
+pub fn matmul_tn<S: Scalar>(rt: &Runtime, a: &Mat<S>, b: &Mat<S>) -> Result<Mat<S>> {
     let (q, ac) = (a.rows(), a.cols());
     let bc = b.cols();
     assert_eq!(b.rows(), q, "matmul_tn inner dim");
@@ -46,20 +50,20 @@ pub fn matmul_tn(rt: &Runtime, a: &Mat, b: &Mat) -> Result<Mat> {
     run2(rt, &exe, a, b, ac, bc)
 }
 
-fn run2(
+fn run2<S: Scalar>(
     rt: &Runtime,
     exe: &Rc<xla::PjRtLoadedExecutable>,
-    a: &Mat,
-    b: &Mat,
+    a: &Mat<S>,
+    b: &Mat<S>,
     out_rows: usize,
     out_cols: usize,
-) -> Result<Mat> {
-    let la = mat_to_literal(a, a.rows(), a.cols())?;
-    let lb = mat_to_literal(b, b.rows(), b.cols())?;
+) -> Result<Mat<S>> {
+    let la = matref_to_literal_s(a.as_ref(), a.rows(), a.cols())?;
+    let lb = matref_to_literal_s(b.as_ref(), b.rows(), b.cols())?;
     rt.note_builder_exec();
     let out = exe.execute::<xla::Literal>(&[la, lb])?;
     let lit = out[0][0].to_literal_sync()?;
-    literal_to_mat(&lit, out_rows, out_cols)
+    literal_to_mat_s(&lit, out_rows, out_cols)
 }
 
 #[cfg(test)]

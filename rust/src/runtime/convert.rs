@@ -10,6 +10,7 @@
 
 use crate::error::Result;
 use crate::la::mat::{Mat, MatRef};
+use crate::util::scalar::Scalar;
 
 /// Column-major Mat → row-major flat buffer.
 pub fn to_row_major(m: &Mat) -> Vec<f64> {
@@ -50,13 +51,25 @@ pub fn mat_to_literal(m: &Mat, pad_rows: usize, pad_cols: usize) -> Result<xla::
 /// out-parameter backend ops) stage without first materializing an
 /// owned `Mat`.
 pub fn matref_to_literal(m: MatRef<'_>, pad_rows: usize, pad_cols: usize) -> Result<xla::Literal> {
+    matref_to_literal_s(m, pad_rows, pad_cols)
+}
+
+/// Generic-precision [`matref_to_literal`]: the staged literal is always
+/// f64 (the interchange precision of the AOT artifacts), so an `S = f32`
+/// view rounds up during the unavoidable padding/layout copy — no extra
+/// pass over the data.
+pub fn matref_to_literal_s<S: Scalar>(
+    m: MatRef<'_, S>,
+    pad_rows: usize,
+    pad_cols: usize,
+) -> Result<xla::Literal> {
     let (r, c) = (m.rows, m.cols);
     assert!(pad_rows >= r && pad_cols >= c, "padding must not truncate");
     let mut buf = vec![0.0f64; pad_rows * pad_cols];
     for j in 0..c {
         let col = m.col(j);
         for i in 0..r {
-            buf[i * pad_cols + j] = col[i];
+            buf[i * pad_cols + j] = col[i].to_f64();
         }
     }
     let lit = xla::Literal::vec1(&buf).reshape(&[pad_rows as i64, pad_cols as i64])?;
@@ -66,6 +79,12 @@ pub fn matref_to_literal(m: MatRef<'_>, pad_rows: usize, pad_cols: usize) -> Res
 /// Row-major literal of shape [pr, pc] → Mat, keeping the leading
 /// rows×cols corner (the unpadding step).
 pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    literal_to_mat_s(lit, rows, cols)
+}
+
+/// Generic-precision [`literal_to_mat`]: rounds the f64 interchange
+/// literal down to `S` during the unpadding copy.
+pub fn literal_to_mat_s<S: Scalar>(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat<S>> {
     let shape = lit.array_shape()?;
     let dims = shape.dims();
     assert_eq!(dims.len(), 2, "expected rank-2 literal");
@@ -76,7 +95,7 @@ pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Ma
     let dst = m.data_mut();
     for i in 0..rows {
         for j in 0..cols {
-            dst[j * rows + i] = data[i * pc + j];
+            dst[j * rows + i] = S::from_f64(data[i * pc + j]);
         }
     }
     Ok(m)
@@ -112,6 +131,20 @@ mod tests {
         assert_eq!(pow2_bucket(513, 512, 65536), 1024);
         assert_eq!(pow2_bucket(512, 512, 65536), 512);
         assert_eq!(pow2_bucket(1 << 30, 512, 65536), 65536);
+    }
+
+    #[test]
+    fn generic_literal_roundtrip_f32() {
+        let mut rng = Rng::new(9);
+        let m: Mat<f32> = Mat::randn(6, 3, &mut rng);
+        let lit = matref_to_literal_s(m.as_ref(), 8, 4).unwrap();
+        assert_eq!(lit.array_shape().unwrap().dims(), &[8, 4]);
+        let back: Mat<f32> = literal_to_mat_s(&lit, 6, 3).unwrap();
+        // f32 → f64 → f32 is exact.
+        assert_eq!(back.max_abs_diff(&m), 0.0);
+        // And the f64 view of the same literal carries only the f32 value.
+        let wide: Mat<f64> = literal_to_mat_s(&lit, 6, 3).unwrap();
+        assert!(wide.max_abs_diff(&m.cast()) == 0.0);
     }
 
     #[test]

@@ -42,8 +42,14 @@ fn shape_key(op: &str, shapes: &[&[usize]]) -> String {
 
 /// The PJRT runtime handle. Not `Sync` (PJRT types are single-threaded
 /// here); the coordinator owns exactly one.
+///
+/// `client` is `None` for a [`Runtime::host_only`] runtime: every
+/// device-side entry point reports unavailable, so the backends degrade
+/// to their host-substrate fallbacks. This is how the XLA backend's
+/// fallback ("stub") paths are exercised in environments with no PJRT
+/// plugin at all — e.g. the cross-backend conformance suite.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    client: Option<xla::PjRtClient>,
     dir: String,
     manifest: HashMap<String, ArtifactEntry>,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
@@ -63,7 +69,7 @@ pub struct RuntimeStats {
 impl Runtime {
     /// Create a runtime over an artifact directory (with manifest.json).
     pub fn new(artifact_dir: &str) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()?;
+        let client = Some(xla::PjRtClient::cpu()?);
         let mut manifest = HashMap::new();
         let man_path = format!("{artifact_dir}/manifest.json");
         if std::path::Path::new(&man_path).exists() {
@@ -87,7 +93,7 @@ impl Runtime {
     /// Create a runtime with *no* artifacts (builder fallback only).
     pub fn without_artifacts() -> Result<Runtime> {
         Ok(Runtime {
-            client: xla::PjRtClient::cpu()?,
+            client: Some(xla::PjRtClient::cpu()?),
             dir: String::new(),
             manifest: HashMap::new(),
             cache: RefCell::new(HashMap::new()),
@@ -96,8 +102,41 @@ impl Runtime {
         })
     }
 
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
+    /// Create a runtime with no PJRT client and no artifacts: every
+    /// device entry point reports unavailable and the backends fall back
+    /// to the host substrate. Always constructible, even against the
+    /// offline `xla_stub` crate — the conformance suite uses this to
+    /// drive the XLA backend's fallback paths deterministically.
+    pub fn host_only() -> Runtime {
+        Runtime {
+            client: None,
+            dir: String::new(),
+            manifest: HashMap::new(),
+            cache: RefCell::new(HashMap::new()),
+            builder_cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        }
+    }
+
+    fn client_ref(&self) -> Result<&xla::PjRtClient> {
+        // `Error::Xla` so the backends treat it as "runtime unavailable"
+        // and degrade to their host fallbacks.
+        self.client
+            .as_ref()
+            .ok_or_else(|| Error::Xla("host-only runtime: no PJRT client".into()))
+    }
+
+    /// Does this runtime have a live PJRT client?
+    pub fn has_client(&self) -> bool {
+        self.client.is_some()
+    }
+
+    /// PJRT platform name, or "host-only" when no client exists.
+    pub fn platform_name(&self) -> String {
+        match &self.client {
+            Some(c) => c.platform_name(),
+            None => "host-only".to_string(),
+        }
     }
 
     pub fn stats(&self) -> RuntimeStats {
@@ -130,7 +169,7 @@ impl Runtime {
         let path = format!("{}/{}", self.dir, entry.file);
         let proto = xla::HloModuleProto::from_text_file(&path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp)?);
+        let exe = Rc::new(self.client_ref()?.compile(&comp)?);
         self.stats.borrow_mut().compiles += 1;
         self.cache.borrow_mut().insert(key, exe.clone());
         Ok(exe)
@@ -168,7 +207,7 @@ impl Runtime {
     /// Stage a host literal into a device buffer (for persistent operands
     /// like the problem matrix A).
     pub fn stage(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_literal(None, lit)?)
+        Ok(self.client_ref()?.buffer_from_host_literal(None, lit)?)
     }
 
     /// Fetch (compile-once) a runtime-built executable; `build` constructs
@@ -182,7 +221,7 @@ impl Runtime {
             return Ok(e.clone());
         }
         let comp = build()?;
-        let exe = Rc::new(self.client.compile(&comp)?);
+        let exe = Rc::new(self.client_ref()?.compile(&comp)?);
         self.stats.borrow_mut().compiles += 1;
         self.builder_cache.borrow_mut().insert(key, exe.clone());
         Ok(exe)
@@ -232,6 +271,24 @@ mod tests {
         let b = [5usize];
         assert_eq!(shape_key("op", &[&a, &b]), "op|4x5|5");
         assert_eq!(shape_key("op", &[]), "op");
+    }
+
+    #[test]
+    fn host_only_runtime_fails_soft() {
+        let rt = Runtime::host_only();
+        assert!(!rt.has_client());
+        assert_eq!(rt.platform_name(), "host-only");
+        assert_eq!(rt.artifact_count(), 0);
+        let q = [512usize, 16];
+        assert!(!rt.has_artifact("cholqr2", &[&q]));
+        // Every device entry point reports an Xla-class error (the
+        // signal the backends treat as "degrade to host").
+        match rt.artifact_exec("cholqr2", &[&q]) {
+            Err(Error::MissingArtifact { .. }) | Err(Error::Xla(_)) => {}
+            other => panic!("expected unavailable, got {:?}", other.is_ok()),
+        }
+        let lit = xla::Literal::vec1(&[0.0f64; 4]);
+        assert!(matches!(rt.stage(&lit), Err(Error::Xla(_))));
     }
 
     #[test]

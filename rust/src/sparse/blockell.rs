@@ -100,6 +100,17 @@ impl<S: Scalar> BlockEll<S> {
         })
     }
 
+    /// [`BlockEll::from_csr`] with the width cap at the block-column
+    /// count — the conversion itself can then never fail (a fully dense
+    /// block-row is representable), leaving the *fill-factor* check to
+    /// the caller. This is the staging entry point device backends use:
+    /// convert, inspect [`BlockEll::fill_factor`], and fall back to an
+    /// arena CSR when the ELL padding would blow the memory budget.
+    pub fn from_csr_auto(a: &Csr<S>, bs: usize) -> BlockEll<S> {
+        let ncb = a.cols().div_ceil(bs).max(1);
+        BlockEll::from_csr(a, bs, ncb).expect("width cap at ncb cannot be exceeded")
+    }
+
     /// Padded shape of the dense right-hand side the SpMM artifact
     /// expects: (ncb·bs, k).
     pub fn padded_cols(&self) -> usize {
@@ -268,6 +279,36 @@ mod tests {
         }
         for i in 130..be.padded_rows() {
             assert_eq!(y.at(i, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn from_csr_auto_never_fails() {
+        // Even the ELL-hostile close-to-dense-row matrix converts when
+        // the cap sits at ncb; parity with the capped constructor.
+        let spec = SparseSpec {
+            rows: 64,
+            cols: 256,
+            nnz: 1600,
+            seed: 7,
+            skew: 2.0,
+            ..Default::default()
+        };
+        let a = generate(&spec);
+        let be = BlockEll::from_csr_auto(&a, 16);
+        assert!(be.mbpr <= a.cols().div_ceil(16));
+        let mut rng = Rng::new(8);
+        let mut x = Mat::zeros(be.padded_cols(), 2);
+        for j in 0..2 {
+            for i in 0..256 {
+                x.set(i, j, rng.normal());
+            }
+        }
+        let y = be.spmm_ref(&x);
+        for i in 0..64 {
+            let (cols, vals) = a.row(i);
+            let e: f64 = cols.iter().zip(vals).map(|(&c, &v)| v * x.at(c as usize, 0)).sum();
+            assert!((y.at(i, 0) - e).abs() < 1e-10, "row {i}");
         }
     }
 

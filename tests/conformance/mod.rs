@@ -1,0 +1,291 @@
+//! Shared backend-conformance batteries.
+//!
+//! One parameterized test set, executed over every `Backend`
+//! implementation × element precision by `test_backend_conformance.rs`:
+//!
+//! * [`op_parity_battery`] — every primitive op against the
+//!   `CpuBackend` reference at ε-scaled tolerances, on sparse and dense
+//!   operands;
+//! * [`lifecycle_battery`] — plan-lifecycle rules: ops before `plan()`
+//!   work (lazy staging), workspace reuse across solves on *one*
+//!   backend is bitwise-reproducible, re-plan on shape change restages,
+//!   plan mismatches are rejected;
+//! * [`e2e_battery`] — end-to-end `lancsvd`/`randsvd` residual targets
+//!   on the `gen/` scenario zoo (prescribed-decay dense spectra, the
+//!   sparse suite generator) at per-dtype targets.
+//!
+//! The staged backend's ledger assertions live in the test file itself
+//! (they are not generic — only `StagedBackend` has a ledger).
+
+use std::rc::Rc;
+
+use trunksvd::algo::lancsvd::{lancsvd, lancsvd_with};
+use trunksvd::algo::randsvd::randsvd;
+use trunksvd::algo::{residuals, LancSvdOpts, RandSvdOpts};
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::backend::staged::StagedBackend;
+use trunksvd::backend::xla::XlaBackend;
+use trunksvd::backend::{Backend, Operand};
+use trunksvd::gen::dense::{dense_with_spectrum, paper_dense};
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::la::mat::Mat;
+use trunksvd::la::workspace::{Plan, Workspace};
+use trunksvd::runtime::Runtime;
+use trunksvd::util::rng::Rng;
+use trunksvd::util::scalar::Scalar;
+use trunksvd::Csr;
+
+/// Backend under conformance test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Cpu,
+    Xla,
+    Staged,
+}
+
+/// Construct a backend of the given kind over an operand. The XLA
+/// backend runs over a host-only runtime (no PJRT client), which pins
+/// its fallback ("stub") paths deterministically regardless of whether
+/// AOT artifacts exist in the environment.
+pub fn make<S: Scalar>(kind: Kind, op: Operand<S>) -> Box<dyn Backend<S>> {
+    match kind {
+        Kind::Cpu => Box::new(CpuBackend::new(op)),
+        Kind::Staged => Box::new(StagedBackend::new(op)),
+        Kind::Xla => {
+            let rt = Rc::new(Runtime::host_only());
+            let be = XlaBackend::new(rt, op).expect("host-only xla always constructs");
+            Box::new(be)
+        }
+    }
+}
+
+/// ε-scaled relative tolerance for kernel parity over `dim`-length
+/// accumulations.
+pub fn kernel_tol<S: Scalar>(dim: usize) -> f64 {
+    S::EPSILON.to_f64() * 32.0 * (dim.max(1) as f64).sqrt()
+}
+
+/// Per-dtype end-to-end residual targets `(dense, sparse)` — fp32 is
+/// held to the paper's single-precision accuracy class, fp64 to the
+/// reference class the repo's existing algorithm tests pin.
+pub fn e2e_targets<S: Scalar>() -> (f64, f64) {
+    if S::DTYPE == "f32" {
+        (1e-3, 1e-2)
+    } else {
+        (1e-8, 1e-5)
+    }
+}
+
+fn assert_close<S: Scalar>(what: &str, got: &Mat<S>, want: &Mat<S>, tol: f64) {
+    assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()), "{what} shape");
+    let scale = 1.0 + want.fro_norm().to_f64();
+    let diff = got.max_abs_diff(want).to_f64();
+    assert!(diff <= tol * scale, "{what}: diff {diff:.3e} > tol {:.3e}", tol * scale);
+}
+
+fn sparse_fixture<S: Scalar>(seed: u64) -> Csr<S> {
+    let spec = SparseSpec { rows: 150, cols: 80, nnz: 2200, seed, ..Default::default() };
+    generate(&spec).cast()
+}
+
+/// Well-conditioned lower-triangular b×b factor for the TRSM parity leg.
+fn lower_factor<S: Scalar>(b: usize, rng: &mut Rng) -> Mat<S> {
+    let g: Mat<S> = Mat::randn(b, b, rng);
+    Mat::from_fn(b, b, |i, j| {
+        if i == j {
+            S::from_f64(1.0 + i as f64)
+        } else if i > j {
+            S::from_f64(0.25) * g.at(i, j)
+        } else {
+            S::ZERO
+        }
+    })
+}
+
+/// Battery 1: every primitive op vs the CPU reference, sparse + dense.
+pub fn op_parity_battery<S: Scalar>(kind: Kind) {
+    for sparse in [true, false] {
+        let (op, label): (Operand<S>, &str) = if sparse {
+            (Operand::sparse(sparse_fixture::<S>(31)), "sparse")
+        } else {
+            let mut rng = Rng::new(32);
+            (Operand::Dense(Mat::randn(150, 80, &mut rng)), "dense")
+        };
+        let (m, n) = op.shape();
+        let mut be = make(kind, op.clone());
+        let mut cpu = CpuBackend::new(op);
+        let mut rng = Rng::new(33);
+        let tol = kernel_tol::<S>(m.max(n));
+
+        // A·X and (twice, to engage cached-transpose/staged paths) Aᵀ·X.
+        let x: Mat<S> = Mat::randn(n, 6, &mut rng);
+        assert_close(
+            &format!("{label} apply_a"),
+            &be.apply_a(x.as_ref()),
+            &cpu.apply_a(x.as_ref()),
+            tol,
+        );
+        let z: Mat<S> = Mat::randn(m, 6, &mut rng);
+        for pass in 0..2 {
+            assert_close(
+                &format!("{label} apply_at pass {pass}"),
+                &be.apply_at(z.as_ref()),
+                &cpu.apply_at(z.as_ref()),
+                tol,
+            );
+        }
+
+        // Gram, projection, update, TRSM, GEMM.
+        let q: Mat<S> = Mat::randn(m, 8, &mut rng);
+        assert_close(
+            &format!("{label} gram"),
+            &be.gram(q.as_ref()),
+            &cpu.gram(q.as_ref()),
+            tol,
+        );
+        let p: Mat<S> = Mat::randn(m, 12, &mut rng);
+        let h_b = be.proj(p.as_ref(), q.as_ref());
+        let h_c = cpu.proj(p.as_ref(), q.as_ref());
+        assert_close(&format!("{label} proj"), &h_b, &h_c, tol);
+        let mut qb = q.clone();
+        let mut qc = q.clone();
+        be.subtract_proj(qb.as_mut(), p.as_ref(), h_b.as_ref());
+        cpu.subtract_proj(qc.as_mut(), p.as_ref(), h_c.as_ref());
+        assert_close(&format!("{label} subtract_proj"), &qb, &qc, tol);
+        let l = lower_factor::<S>(8, &mut rng);
+        let mut tb = q.clone();
+        let mut tc = q.clone();
+        be.tri_solve_right(tb.as_mut(), l.as_ref());
+        cpu.tri_solve_right(tc.as_mut(), l.as_ref());
+        assert_close(&format!("{label} tri_solve_right"), &tb, &tc, tol);
+        let g1: Mat<S> = Mat::randn(m, 10, &mut rng);
+        let g2: Mat<S> = Mat::randn(10, 7, &mut rng);
+        assert_close(
+            &format!("{label} gemm_nn"),
+            &be.gemm_nn(g1.as_ref(), g2.as_ref()),
+            &cpu.gemm_nn(g1.as_ref(), g2.as_ref()),
+            tol,
+        );
+
+        // copy_into is a semantic copy on every backend.
+        let src: Mat<S> = Mat::randn(m, 4, &mut rng);
+        let mut dst: Mat<S> = Mat::zeros(m, 4);
+        be.copy_into(src.as_ref(), dst.as_mut());
+        assert_eq!(dst.data(), src.data(), "{label} copy_into is exact");
+
+        // Fused orthogonalization kernels (value wrappers drive the
+        // *_into forms with a throwaway workspace).
+        let y0: Mat<S> = Mat::randn(m, 8, &mut rng);
+        let mut yb = y0.clone();
+        let mut yc = y0.clone();
+        let rb = be.orth_cholqr2(&mut yb).unwrap();
+        let rc = cpu.orth_cholqr2(&mut yc).unwrap();
+        assert_close(&format!("{label} cholqr2 Q"), &yb, &yc, tol * 16.0);
+        assert_close(&format!("{label} cholqr2 R"), &rb, &rc, tol * 16.0);
+        let hist = {
+            let mut hpanel: Mat<S> = Mat::randn(m, 8, &mut rng);
+            cpu.orth_cholqr2(&mut hpanel).unwrap();
+            hpanel
+        };
+        let w0: Mat<S> = Mat::randn(m, 8, &mut rng);
+        let mut wb = w0.clone();
+        let mut wc = w0.clone();
+        let (hb, rb) = be.orth_cgs_cqr2(&mut wb, hist.as_ref()).unwrap();
+        let (hc, rc) = cpu.orth_cgs_cqr2(&mut wc, hist.as_ref()).unwrap();
+        assert_close(&format!("{label} cgs_cqr2 Q"), &wb, &wc, tol * 16.0);
+        assert_close(&format!("{label} cgs_cqr2 H"), &hb, &hc, tol * 16.0);
+        assert_close(&format!("{label} cgs_cqr2 R"), &rb, &rc, tol * 16.0);
+    }
+}
+
+/// Battery 2: plan-lifecycle rules.
+pub fn lifecycle_battery<S: Scalar>(kind: Kind) {
+    // (a) Ops before any plan() must work (lazy staging / fallback).
+    let a = sparse_fixture::<S>(41);
+    let (m, n) = (a.rows(), a.cols());
+    let mut be = make(kind, Operand::sparse(a));
+    let mut rng = Rng::new(42);
+    let x: Mat<S> = Mat::randn(n, 3, &mut rng);
+    let y = be.apply_a(x.as_ref());
+    assert_eq!((y.rows(), y.cols()), (m, 3), "unplanned op must run");
+
+    // (b) One backend, one workspace, two planned solves: bitwise
+    // reproducible (dense operand — no adaptive-transpose timing state).
+    let prob = paper_dense(96, 32, 5);
+    let ad: Mat<S> = prob.a.cast();
+    let opts = LancSvdOpts { r: 16, p: 2, b: 8, wanted: 4, ..Default::default() };
+    let ws: Workspace<S> = Workspace::new(Plan::lancsvd(96, 32, 16, 2, 8));
+    let mut be = make(kind, Operand::Dense(ad));
+    let s1 = lancsvd_with(be.as_mut(), &opts, &ws).unwrap();
+    let s2 = lancsvd_with(be.as_mut(), &opts, &ws).unwrap();
+    assert_eq!(s1.sigma, s2.sigma, "workspace-reuse sigmas must reproduce bitwise");
+    assert_eq!(s1.u.data(), s2.u.data(), "workspace-reuse U must reproduce bitwise");
+    assert_eq!(s1.v.data(), s2.v.data(), "workspace-reuse V must reproduce bitwise");
+
+    // (c) Re-plan on shape change: the same backend accepts a larger
+    // plan and still meets the residual target.
+    let opts2 = LancSvdOpts { r: 24, p: 3, b: 8, wanted: 6, ..Default::default() };
+    let ws2: Workspace<S> = Workspace::new(Plan::lancsvd(96, 32, 24, 3, 8));
+    let s3 = lancsvd_with(be.as_mut(), &opts2, &ws2).unwrap();
+    let mut check = CpuBackend::new_dense(prob.a.cast::<S>());
+    let res = residuals(&mut check, &s3, 6);
+    let (dense_target, _) = e2e_targets::<S>();
+    assert!(res.iter().all(|&r| r < dense_target), "re-planned solve residuals {res:?}");
+
+    // (d) A mismatched workspace is rejected, not misused.
+    assert!(lancsvd_with(be.as_mut(), &opts, &ws2).is_err(), "plan mismatch must error");
+}
+
+/// Battery 3: end-to-end residual targets on the scenario zoo.
+pub fn e2e_battery<S: Scalar>(kind: Kind) {
+    let (dense_target, sparse_target) = e2e_targets::<S>();
+
+    // Prescribed geometric decay: leading sigmas must be recovered.
+    let sigma: Vec<f64> = (0..16).map(|i| 2.0f64.powi(-(i as i32))).collect();
+    let prob = dense_with_spectrum(100, 16, &sigma, 1);
+    let mut be = make(kind, Operand::Dense(prob.a.cast::<S>()));
+    let opts = LancSvdOpts { r: 16, p: 6, b: 8, wanted: 6, ..Default::default() };
+    let svd = lancsvd(be.as_mut(), &opts).unwrap();
+    for i in 0..6 {
+        let rel = (svd.sigma[i].to_f64() - sigma[i]).abs() / sigma[i];
+        assert!(rel < dense_target.sqrt(), "sigma_{i} rel err {rel:.3e}");
+    }
+    let mut check = CpuBackend::new_dense(prob.a.cast::<S>());
+    let res = residuals(&mut check, &svd, 6);
+    assert!(res.iter().all(|&r| r < dense_target), "decay-dense residuals {res:?}");
+
+    // The paper's Eq. 15/16 dense problem.
+    let prob = paper_dense(120, 40, 7);
+    let mut be = make(kind, Operand::Dense(prob.a.cast::<S>()));
+    let opts = LancSvdOpts { r: 16, p: 4, b: 8, wanted: 5, ..Default::default() };
+    let svd = lancsvd(be.as_mut(), &opts).unwrap();
+    let mut check = CpuBackend::new_dense(prob.a.cast::<S>());
+    let res = residuals(&mut check, &svd, 5);
+    assert!(res.iter().all(|&r| r < dense_target), "paper-dense residuals {res:?}");
+
+    // Sparse suite scenarios: a default-profile matrix and a heavy-row
+    // skewed one, through both algorithms.
+    for (seed, skew) in [(51u64, 0.8f64), (52, 1.6)] {
+        let spec = SparseSpec { rows: 180, cols: 90, nnz: 2600, seed, skew, ..Default::default() };
+        let a: Csr<S> = generate(&spec).cast();
+        let mut be = make(kind, Operand::sparse(a.clone()));
+        let opts = LancSvdOpts { r: 24, p: 3, b: 8, wanted: 6, seed: 3, ..Default::default() };
+        let svd = lancsvd(be.as_mut(), &opts).unwrap();
+        let mut check = CpuBackend::new_sparse(a.clone());
+        let res = residuals(&mut check, &svd, 6);
+        assert!(
+            res.iter().all(|&r| r < sparse_target),
+            "lancsvd sparse (skew {skew}) residuals {res:?}"
+        );
+
+        let mut be = make(kind, Operand::sparse(a.clone()));
+        let opts = RandSvdOpts { r: 12, p: 16, b: 4, seed: 3, ..Default::default() };
+        let svd = randsvd(be.as_mut(), &opts).unwrap();
+        let mut check = CpuBackend::new_sparse(a);
+        let res = residuals(&mut check, &svd, 4);
+        assert!(
+            res.iter().all(|&r| r < sparse_target),
+            "randsvd sparse (skew {skew}) residuals {res:?}"
+        );
+    }
+}

@@ -1,0 +1,256 @@
+//! Cross-backend conformance suite: one parameterized battery executed
+//! over `CpuBackend`, `XlaBackend` (host-only runtime → stub/fallback
+//! paths), and `StagedBackend`, in both element precisions — plus the
+//! staged backend's transfer-ledger assertions (zero hot-loop panel
+//! transfers per inner iteration; only POTRF/GESVD factor crossings).
+//!
+//! The shared batteries live in `tests/conformance/mod.rs`; the
+//! normative contract they check is documented in `backend/mod.rs`
+//! ("Backend author's contract").
+
+mod conformance;
+
+use conformance::{e2e_battery, lifecycle_battery, op_parity_battery, Kind};
+use trunksvd::algo::lancsvd::lancsvd;
+use trunksvd::algo::randsvd::randsvd;
+use trunksvd::algo::{LancSvdOpts, RandSvdOpts};
+use trunksvd::backend::staged::{Direction, LedgerTotals, StagedBackend};
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::metrics::Block;
+use trunksvd::util::scalar::Scalar;
+use trunksvd::Csr;
+
+// ---- battery 1: op-level parity vs CpuBackend --------------------------
+
+#[test]
+fn op_parity_cpu_f64() {
+    op_parity_battery::<f64>(Kind::Cpu);
+}
+
+#[test]
+fn op_parity_cpu_f32() {
+    op_parity_battery::<f32>(Kind::Cpu);
+}
+
+#[test]
+fn op_parity_xla_f64() {
+    op_parity_battery::<f64>(Kind::Xla);
+}
+
+#[test]
+fn op_parity_xla_f32() {
+    op_parity_battery::<f32>(Kind::Xla);
+}
+
+#[test]
+fn op_parity_staged_f64() {
+    op_parity_battery::<f64>(Kind::Staged);
+}
+
+#[test]
+fn op_parity_staged_f32() {
+    op_parity_battery::<f32>(Kind::Staged);
+}
+
+// ---- battery 2: plan lifecycle -----------------------------------------
+
+#[test]
+fn lifecycle_cpu_f64() {
+    lifecycle_battery::<f64>(Kind::Cpu);
+}
+
+#[test]
+fn lifecycle_cpu_f32() {
+    lifecycle_battery::<f32>(Kind::Cpu);
+}
+
+#[test]
+fn lifecycle_xla_f64() {
+    lifecycle_battery::<f64>(Kind::Xla);
+}
+
+#[test]
+fn lifecycle_xla_f32() {
+    lifecycle_battery::<f32>(Kind::Xla);
+}
+
+#[test]
+fn lifecycle_staged_f64() {
+    lifecycle_battery::<f64>(Kind::Staged);
+}
+
+#[test]
+fn lifecycle_staged_f32() {
+    lifecycle_battery::<f32>(Kind::Staged);
+}
+
+// ---- battery 3: end-to-end residual targets ----------------------------
+
+#[test]
+fn e2e_cpu_f64() {
+    e2e_battery::<f64>(Kind::Cpu);
+}
+
+#[test]
+fn e2e_cpu_f32() {
+    e2e_battery::<f32>(Kind::Cpu);
+}
+
+#[test]
+fn e2e_xla_f64() {
+    e2e_battery::<f64>(Kind::Xla);
+}
+
+#[test]
+fn e2e_xla_f32() {
+    e2e_battery::<f32>(Kind::Xla);
+}
+
+#[test]
+fn e2e_staged_f64() {
+    e2e_battery::<f64>(Kind::Staged);
+}
+
+#[test]
+fn e2e_staged_f32() {
+    e2e_battery::<f32>(Kind::Staged);
+}
+
+// ---- battery 4: staged-backend transfer-ledger discipline --------------
+
+fn ledger_fixture<S: Scalar>(seed: u64) -> Csr<S> {
+    let spec = SparseSpec { rows: 140, cols: 70, nnz: 1800, seed, ..Default::default() };
+    generate(&spec).cast()
+}
+
+fn randsvd_totals<S: Scalar>(p: usize) -> LedgerTotals {
+    let mut be = StagedBackend::new_sparse(ledger_fixture::<S>(61));
+    let opts = RandSvdOpts { r: 12, p, b: 4, seed: 9, ..Default::default() };
+    randsvd(&mut be, &opts).unwrap();
+    be.ledger().totals()
+}
+
+fn lancsvd_totals<S: Scalar>(p: usize) -> LedgerTotals {
+    let mut be = StagedBackend::new_sparse(ledger_fixture::<S>(62));
+    let opts = LancSvdOpts { r: 16, p, b: 8, wanted: 4, seed: 9, ..Default::default() };
+    lancsvd(&mut be, &opts).unwrap();
+    be.ledger().totals()
+}
+
+/// Zero hot-loop panel transfers, and the sanctioned factor crossings
+/// grow *linearly* with the power-iteration count — i.e. each inner
+/// iteration performs exactly the same fixed set of POTRF crossings and
+/// nothing else crosses.
+fn randsvd_ledger_linear<S: Scalar>() {
+    let t4 = randsvd_totals::<S>(4);
+    let t5 = randsvd_totals::<S>(5);
+    let t8 = randsvd_totals::<S>(8);
+    for t in [&t4, &t5, &t8] {
+        assert_eq!(t.hot_panel_transfers, 0, "hot-loop panel transfer: {t:?}");
+        assert_eq!(t.plans, 1);
+        assert!(t.staged_operand_bytes > 0);
+    }
+    let per_iter_count = t5.hot_factor_crossings - t4.hot_factor_crossings;
+    let per_iter_bytes = t5.hot_factor_bytes - t4.hot_factor_bytes;
+    assert!(per_iter_count > 0, "POTRF crossings expected every iteration");
+    assert_eq!(
+        t8.hot_factor_crossings - t4.hot_factor_crossings,
+        4 * per_iter_count,
+        "factor crossings must be constant per inner iteration"
+    );
+    assert_eq!(
+        t8.hot_factor_bytes - t4.hot_factor_bytes,
+        4 * per_iter_bytes,
+        "factor crossing volume must be constant per inner iteration"
+    );
+}
+
+#[test]
+fn staged_ledger_randsvd_linear_f64() {
+    randsvd_ledger_linear::<f64>();
+}
+
+#[test]
+fn staged_ledger_randsvd_linear_f32() {
+    randsvd_ledger_linear::<f32>();
+}
+
+#[test]
+fn staged_ledger_lancsvd_linear_f64() {
+    let t2 = lancsvd_totals::<f64>(2);
+    let t3 = lancsvd_totals::<f64>(3);
+    let t5 = lancsvd_totals::<f64>(5);
+    for t in [&t2, &t3, &t5] {
+        assert_eq!(t.hot_panel_transfers, 0, "hot-loop panel transfer: {t:?}");
+    }
+    let per_outer = t3.hot_factor_crossings - t2.hot_factor_crossings;
+    assert!(per_outer > 0, "POTRF crossings expected every outer iteration");
+    assert_eq!(
+        t5.hot_factor_crossings - t2.hot_factor_crossings,
+        3 * per_outer,
+        "factor crossings must be constant per outer iteration"
+    );
+}
+
+/// Event-level view of the same contract: every panel-sized host→arena
+/// upload happens in a setup/finalize window (operand staging, RNG
+/// sketch `stage_in`) — never under a hot phase — while hot phases see
+/// only factor-sized crossings.
+#[test]
+fn staged_ledger_panel_uploads_only_in_setup_windows() {
+    let mut be = StagedBackend::new_sparse(ledger_fixture::<f64>(63));
+    let opts = LancSvdOpts { r: 16, p: 3, b: 8, wanted: 4, seed: 5, ..Default::default() };
+    lancsvd(&mut be, &opts).unwrap();
+    let hot = [Block::MultA, Block::MultAt, Block::OrthM, Block::OrthN];
+    let mut saw_panel_upload = false;
+    let mut saw_hot_factor = false;
+    for ev in be.ledger().events() {
+        if ev.dir == Direction::ArenaToArena {
+            continue;
+        }
+        if ev.panel {
+            saw_panel_upload = true;
+            assert!(
+                !hot.contains(&ev.phase),
+                "panel-sized {:?} transfer for op '{}' in hot phase {:?}",
+                ev.dir,
+                ev.op,
+                ev.phase
+            );
+        } else if hot.contains(&ev.phase) {
+            saw_hot_factor = true;
+        }
+    }
+    assert!(saw_panel_upload, "operand staging / stage_in must appear in the ledger");
+    assert!(saw_hot_factor, "POTRF factor crossings must appear in the ledger");
+    // Arena staging memcpys exist on the Block-ELL path and are cheap to
+    // distinguish from host crossings.
+    assert_eq!(be.device_format(), Some("blockell"));
+    assert!(be.ledger().totals().a2a_bytes > 0);
+}
+
+/// All three backends agree on the computed spectrum of one problem —
+/// the cross-backend sanity check the per-op parity battery implies.
+#[test]
+fn backends_agree_on_spectrum() {
+    use trunksvd::backend::Operand;
+    let a = ledger_fixture::<f64>(64);
+    let opts = LancSvdOpts { r: 16, p: 3, b: 8, wanted: 6, seed: 11, ..Default::default() };
+    let sigmas: Vec<Vec<f64>> = [Kind::Cpu, Kind::Xla, Kind::Staged]
+        .into_iter()
+        .map(|kind| {
+            let mut be = conformance::make::<f64>(kind, Operand::sparse(a.clone()));
+            lancsvd(be.as_mut(), &opts).unwrap().sigma[..6].to_vec()
+        })
+        .collect();
+    for (i, other) in sigmas.iter().enumerate().skip(1) {
+        for j in 0..6 {
+            assert!(
+                (sigmas[0][j] - other[j]).abs() <= 1e-8 * sigmas[0][0],
+                "backend {i} sigma_{j}: {} vs {}",
+                other[j],
+                sigmas[0][j]
+            );
+        }
+    }
+}

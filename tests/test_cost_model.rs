@@ -1,0 +1,118 @@
+//! Property tests for the cost model's *policy* functions — the
+//! adaptive-transpose threshold and the pool's serial cutoff. Future
+//! calibration of the model constants from `BENCH_kernels.json`
+//! measurements must not be able to silently invert these policies:
+//! monotonicity and crossover shape are pinned here, not exact values.
+
+use trunksvd::cost::{
+    adaptive_transpose_threshold, ca3, ca4, ca5, lancsvd_cost, parallel_cutoff, randsvd_cost,
+    Problem,
+};
+
+const CAP: usize = 64;
+
+#[test]
+fn threshold_monotone_in_block_width() {
+    // Wider column blocks amortize the one-time build over more scatter
+    // traffic per call ⇒ the threshold is non-increasing in k, for every
+    // operand profile in a sweep.
+    for &(rows, cols, nnz) in &[
+        (10_000usize, 4_000usize, 80_000usize),
+        (2_000, 50_000, 300_000),
+        (100_000, 100_000, 1_000_000),
+    ] {
+        let mut prev = usize::MAX;
+        for k in [1usize, 2, 4, 8, 16, 32, 64] {
+            let t = adaptive_transpose_threshold(rows, cols, nnz, k);
+            assert!((1..=CAP).contains(&t), "threshold {t} out of [1, {CAP}]");
+            assert!(
+                t <= prev,
+                "threshold must not grow with k: k={k} gives {t}, previous {prev} \
+                 (rows {rows} cols {cols} nnz {nnz})"
+            );
+            prev = t;
+        }
+    }
+}
+
+#[test]
+fn threshold_nnz_sweep_has_unique_crossover() {
+    // Sweeping nnz upward at fixed shape/k, the policy starts in the
+    // cache-resident regime (threshold pinned at the cap: never build)
+    // and drops to the DRAM-crossover estimate exactly once — a single
+    // downward step, never a re-ascent (a re-ascent would mean the
+    // policy re-disables the build for *larger* operands).
+    for k in [2usize, 8, 16] {
+        let mut saw_drop = false;
+        let mut prev = CAP;
+        for e in 0..=24 {
+            // nnz from 2^8 to 2^32: spans both sides of the gate.
+            let nnz = 1usize << (8 + e);
+            let t = adaptive_transpose_threshold(50_000, 20_000, nnz, k);
+            if t < prev {
+                assert!(!saw_drop, "second drop at nnz {nnz} (k {k}): {prev} -> {t}");
+                saw_drop = true;
+            } else {
+                assert_eq!(t, prev, "threshold re-ascended at nnz {nnz} (k {k})");
+            }
+            prev = t;
+        }
+        assert!(saw_drop, "crossover must exist inside the sweep (k {k})");
+        assert!(prev < CAP, "post-crossover threshold must leave the cap (k {k})");
+    }
+}
+
+#[test]
+fn threshold_aspect_bump_orders_wide_operands() {
+    // Wide-and-short operands scatter with worse locality: their
+    // crossover must come no later than the square operand's at every k.
+    for k in [1usize, 2, 4, 8] {
+        let square = adaptive_transpose_threshold(30_000, 30_000, 500_000, k);
+        let wide = adaptive_transpose_threshold(1_000, 200_000, 500_000, k);
+        assert!(wide <= square, "k={k}: wide {wide} > square {square}");
+    }
+}
+
+#[test]
+fn threshold_degenerate_inputs_stay_in_range() {
+    let cases = [
+        (0usize, 0usize, 0usize, 0usize),
+        (1, 1, 1, 1),
+        (10, 10, usize::MAX / 2, 0),
+        (0, 1 << 20, 1 << 20, 64),
+    ];
+    for (rows, cols, nnz, k) in cases {
+        let t = adaptive_transpose_threshold(rows, cols, nnz, k);
+        assert!((1..=CAP).contains(&t), "({rows},{cols},{nnz},{k}) gave {t}");
+    }
+}
+
+#[test]
+fn parallel_cutoff_sits_between_dispatch_and_panel_scale() {
+    let c = parallel_cutoff();
+    // Lower bound: a band must own at least a cache line of work, or
+    // dispatch cost dominates trivially.
+    assert!(c >= 64, "cutoff {c} below any plausible dispatch break-even");
+    // Upper bound: the paper-scale panels (m >= 4096, b >= 8) must fan
+    // out even split across two bands.
+    assert!(c <= 4096 * 8 / 2, "cutoff {c} would serialize paper-scale panels");
+    // Stability: the policy is a pure function (no hidden global state).
+    assert_eq!(c, parallel_cutoff());
+}
+
+#[test]
+fn table1_costs_are_monotone_in_every_argument() {
+    // CA4/CA5/CA3 monotonicity: calibration cannot flip a cost's sign
+    // or direction without breaking these.
+    assert!(ca4(16, 2000) > ca4(16, 1000));
+    assert!(ca4(32, 1000) > ca4(16, 1000));
+    assert!(ca5(16, 1000, 64) > ca5(16, 1000, 16));
+    assert!(ca5(16, 2000, 64) > ca5(16, 1000, 64));
+    assert!(ca3(16, 1000, 256) > ca3(16, 1000, 64));
+    // And the algorithm totals grow with every solve parameter.
+    let prob = Problem { m: 20_000, n: 8_000, nnz: Some(160_000) };
+    assert!(randsvd_cost(prob, 16, 8, 16).total() > randsvd_cost(prob, 16, 4, 16).total());
+    assert!(randsvd_cost(prob, 32, 4, 16).total() > randsvd_cost(prob, 16, 4, 16).total());
+    assert!(lancsvd_cost(prob, 64, 4, 16).total() > lancsvd_cost(prob, 64, 2, 16).total());
+    assert!(lancsvd_cost(prob, 128, 2, 16).total() > lancsvd_cost(prob, 64, 2, 16).total());
+}

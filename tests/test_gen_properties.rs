@@ -1,0 +1,236 @@
+//! Property tests for the `gen/` scenario zoo: the conformance suite's
+//! end-to-end targets are only meaningful if the generated problems
+//! actually have the spectra and sparsity structure they claim.
+//!
+//! Dense: `dense_with_spectrum` must *realize* its prescribed singular
+//! values (decay law, condition number) with orthonormal factors, and
+//! `paper_spectrum` must follow Eq. 16 exactly. Sparse: `generate` must
+//! honor its nnz/shape/structure invariants (degree clamps, sorted
+//! unique columns, skew ordering, value-decay spread) and stay
+//! transpose-consistent (the invariant the staged backend's arena Aᵀ
+//! build rests on).
+
+use trunksvd::gen::dense::{dense_with_spectrum, paper_dense, paper_spectrum};
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::la::blas3::mat_tn;
+use trunksvd::la::norms::orth_error;
+use trunksvd::la::svd::jacobi_svd;
+
+// ---- dense generators --------------------------------------------------
+
+#[test]
+fn dense_realizes_prescribed_decay_laws() {
+    // Geometric, algebraic, and clustered decay profiles: the SVD of the
+    // generated matrix must reproduce each spectrum to f64 rounding.
+    let geometric: Vec<f64> = (0..12).map(|i| 3.0f64.powi(-(i as i32))).collect();
+    let algebraic: Vec<f64> = (1..=12).map(|i| 1.0 / (i as f64).powi(2)).collect();
+    let clustered: Vec<f64> = (0..12).map(|i| if i < 6 { 1.0 } else { 1e-3 }).collect();
+    for (label, sigma) in
+        [("geometric", geometric), ("algebraic", algebraic), ("clustered", clustered)]
+    {
+        let prob = dense_with_spectrum(60, 12, &sigma, 11);
+        let svd = jacobi_svd(&prob.a).unwrap();
+        for i in 0..12 {
+            let rel = (svd.s[i] - sigma[i]).abs() / sigma[i];
+            assert!(rel < 1e-10, "{label}: sigma_{i} rel err {rel:.3e}");
+        }
+        // The factors really are orthonormal and really diagonalize A:
+        // UᵀAV = diag(sigma).
+        assert!(orth_error(&prob.u) < 1e-12, "{label}: U orth");
+        assert!(orth_error(&prob.v) < 1e-12, "{label}: V orth");
+        let core = mat_tn(&prob.u, &trunksvd::la::blas3::mat_nn(&prob.a, &prob.v));
+        for i in 0..12 {
+            for j in 0..12 {
+                let want = if i == j { sigma[i] } else { 0.0 };
+                assert!(
+                    (core.at(i, j) - want).abs() < 1e-10,
+                    "{label}: core({i},{j}) = {} want {want}",
+                    core.at(i, j)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_realizes_prescribed_condition_number() {
+    // cond(A) = sigma_max / sigma_min must match the request across
+    // several orders of magnitude.
+    for decades in [2i32, 5, 8] {
+        let cond = 10f64.powi(decades);
+        let n = 10;
+        let sigma: Vec<f64> =
+            (0..n).map(|i| cond.powf(-(i as f64) / (n as f64 - 1.0))).collect();
+        let prob = dense_with_spectrum(40, n, &sigma, 7);
+        let svd = jacobi_svd(&prob.a).unwrap();
+        let measured = svd.s[0] / svd.s[n - 1];
+        let rel = (measured - cond).abs() / cond;
+        assert!(rel < 1e-6, "cond 1e{decades}: measured {measured:.6e} rel err {rel:.2e}");
+    }
+}
+
+#[test]
+fn paper_spectrum_follows_eq16() {
+    let n = 64;
+    let half = n / 2;
+    let s = paper_spectrum(n);
+    assert_eq!(s.len(), n);
+    // Top half: descending geometric with ratio 10^(15/half); the i-th
+    // largest is 10^(15·(half−i)/half − 14).
+    for i in 0..half {
+        let expect = 10f64.powf(15.0 * (half - i) as f64 / half as f64 - 14.0);
+        assert!(
+            (s[i] - expect).abs() / expect < 1e-12,
+            "paper spectrum [{i}] = {} want {expect}",
+            s[i]
+        );
+    }
+    // Bottom half sits at the 1e-14 floor.
+    for (i, &v) in s.iter().enumerate().skip(half) {
+        assert_eq!(v, 1e-14, "floor entry {i}");
+    }
+    // paper_dense realizes the top of that spectrum (floor entries are
+    // below Jacobi's resolution, the leading ones are exact).
+    let prob = paper_dense(48, 16, 3);
+    let svd = jacobi_svd(&prob.a).unwrap();
+    let expect = paper_spectrum(16);
+    for i in 0..6 {
+        let rel = (svd.s[i] - expect[i]).abs() / expect[i];
+        assert!(rel < 1e-9, "paper_dense sigma_{i} rel err {rel:.2e}");
+    }
+}
+
+// ---- sparse generator --------------------------------------------------
+
+#[test]
+fn sparse_honors_shape_and_nnz_across_profiles() {
+    for (rows, cols, nnz, skew) in [
+        (200usize, 90usize, 1500usize, 0.0f64),
+        (120, 300, 4000, 0.8),
+        (500, 60, 3000, 1.6),
+    ] {
+        let spec = SparseSpec { rows, cols, nnz, seed: 21, skew, ..Default::default() };
+        let a = generate(&spec);
+        assert_eq!((a.rows(), a.cols()), (rows, cols), "shape");
+        let requested = nnz.min(rows * cols / 2).max(rows.max(cols));
+        let got = a.nnz() as isize;
+        assert!(
+            (got - requested as isize).unsigned_abs() <= rows / 2 + 32,
+            "nnz {got} vs requested {requested} (rows {rows} cols {cols} skew {skew})"
+        );
+        // Structural invariants: sorted, unique, in-range column indices
+        // per row; no row exceeds the column count.
+        for i in 0..rows {
+            let (ci, _) = a.row(i);
+            assert!(ci.len() <= cols, "row {i} degree {} > cols", ci.len());
+            for w in ci.windows(2) {
+                assert!(w[0] < w[1], "row {i}: unsorted/duplicate columns");
+            }
+            if let Some(&last) = ci.last() {
+                assert!((last as usize) < cols, "row {i}: column out of range");
+            }
+        }
+    }
+}
+
+#[test]
+fn sparse_nnz_request_is_clamped_not_overflowed() {
+    // Requests above the rows*cols/2 density cap clamp; requests below
+    // max(rows, cols) are raised to it (every suite entry stays
+    // rank-coverable).
+    let over = generate(&SparseSpec {
+        rows: 40,
+        cols: 40,
+        nnz: 10_000,
+        seed: 1,
+        ..Default::default()
+    });
+    assert!(over.nnz() <= 40 * 40 / 2 + 40, "over-dense clamp: {}", over.nnz());
+    let under = generate(&SparseSpec { rows: 80, cols: 30, nnz: 1, seed: 1, ..Default::default() });
+    assert!(under.nnz() >= 80 - 40, "sparse floor: {}", under.nnz());
+}
+
+#[test]
+fn sparse_skew_orders_max_degree_monotonically() {
+    // The Zipf exponent must *order* the heavy-row tail: higher skew ⇒
+    // heavier heaviest row (weak monotonicity with slack for rounding).
+    let max_deg = |skew: f64| {
+        let a = generate(&SparseSpec {
+            rows: 300,
+            cols: 200,
+            nnz: 3000,
+            seed: 5,
+            skew,
+            ..Default::default()
+        });
+        (0..a.rows()).map(|i| a.row(i).0.len()).max().unwrap()
+    };
+    let d0 = max_deg(0.0);
+    let d1 = max_deg(0.8);
+    let d2 = max_deg(1.6);
+    assert!(d1 >= d0, "skew 0.8 ({d1}) vs 0.0 ({d0})");
+    assert!(d2 > d1, "skew 1.6 ({d2}) vs 0.8 ({d1})");
+}
+
+#[test]
+fn sparse_value_decay_controls_magnitude_spread() {
+    let spread = |decay: f64| {
+        let a = generate(&SparseSpec {
+            rows: 300,
+            cols: 150,
+            nnz: 3000,
+            seed: 9,
+            value_decay: decay,
+            ..Default::default()
+        });
+        let mags: Vec<f64> = a.values().iter().map(|v| v.abs()).filter(|&v| v > 0.0).collect();
+        let max = mags.iter().cloned().fold(0.0, f64::max);
+        let min = mags.iter().cloned().fold(f64::INFINITY, f64::min);
+        max / min
+    };
+    // Row+column scalings each span `decay` decades, so the spread grows
+    // steeply with the requested decay (and is tiny without it).
+    let s1 = spread(1.0);
+    let s6 = spread(6.0);
+    assert!(s6 > s1 * 1e3, "decay 6 spread {s6:.1e} vs decay 1 spread {s1:.1e}");
+    assert!(s6 > 1e6, "decay 6 spread {s6:.1e}");
+}
+
+#[test]
+fn sparse_transpose_is_involutive_and_preserves_structure() {
+    // The staged backend's arena Aᵀ (and the adaptive-transpose cache)
+    // rely on transpose being an exact structural involution.
+    let spec = SparseSpec {
+        rows: 180,
+        cols: 77,
+        nnz: 2100,
+        seed: 13,
+        skew: 1.2,
+        ..Default::default()
+    };
+    let a = generate(&spec);
+    let at = a.transpose();
+    assert_eq!((at.rows(), at.cols()), (77, 180));
+    assert_eq!(at.nnz(), a.nnz());
+    let aa = at.transpose();
+    assert_eq!(aa.indptr(), a.indptr());
+    assert_eq!(aa.indices(), a.indices());
+    assert_eq!(aa.values(), a.values());
+    // And numerically: (Aᵀ)ᵀ == A densely.
+    assert_eq!(aa.to_dense().max_abs_diff(&a.to_dense()), 0.0);
+}
+
+#[test]
+fn generators_are_deterministic_in_seed() {
+    let spec = SparseSpec { rows: 150, cols: 60, nnz: 1200, seed: 17, ..Default::default() };
+    let a = generate(&spec);
+    let b = generate(&spec);
+    assert_eq!(a.indptr(), b.indptr());
+    assert_eq!(a.indices(), b.indices());
+    assert_eq!(a.values(), b.values());
+    let other = generate(&SparseSpec { seed: 18, ..spec });
+    assert_ne!(a.values(), other.values(), "different seeds must differ");
+    let d1 = dense_with_spectrum(30, 8, &[8.0, 4.0, 2.0, 1.0, 0.5, 0.25, 0.125, 0.0625], 23);
+    let d2 = dense_with_spectrum(30, 8, &[8.0, 4.0, 2.0, 1.0, 0.5, 0.25, 0.125, 0.0625], 23);
+    assert_eq!(d1.a.data(), d2.a.data());
+}
