@@ -23,6 +23,18 @@
 //! steady state — plus the peak RSS (`VmHWM`). `BENCH_ASSERT_NOALLOC=1`
 //! (set in CI) turns the zero-allocation check into a hard failure.
 //!
+//! The SIMD section times the scalar reference (`TRUNKSVD_SIMD=off`
+//! equivalent) against the detected ISA path for the serial spmm, gram
+//! and Block-ELL kernels at both precisions, recording `*_simd_speedup`
+//! entries; `BENCH_ASSERT_SIMD=1` (set in CI) fails the bench if the
+//! SIMD path is slower than scalar on spmm/gram.
+//!
+//! The `cost_calibration` section measures the real dispatch-grain and
+//! adaptive-transpose crossovers on this host and emits them in the
+//! layout `cost::load_calibration` reads — point
+//! `TRUNKSVD_COST_CALIB=BENCH_kernels.json` at the output to replace the
+//! desk-estimate constants. `--calibrate` adds a finer k-sweep array.
+//!
 //! `BENCH_QUICK=1` (or the `--smoke` flag) shrinks the size sweep.
 
 use std::rc::Rc;
@@ -76,6 +88,116 @@ fn kernel_entry(
         ("speedup", json::num(speedup)),
         ("gflops_parallel", json::num(gflops(flops, parallel))),
     ]));
+}
+
+/// Scalar-reference vs detected-ISA timing for one serial kernel: emits
+/// a `*_simd_speedup` entry, and with `assert_fast` (BENCH_ASSERT_SIMD=1)
+/// enforces that the SIMD path is not slower than the scalar reference.
+/// Min-of-runs timing plus up-to-5 retries (keeping the best ratio, early
+/// exit at >= 1.0) make the gate robust to scheduler noise — the scalar
+/// reference is itself lane-blocked and auto-vectorizes, so the two paths
+/// can be genuinely close on some kernels.
+#[allow(clippy::too_many_arguments)]
+fn simd_speedup_entry(
+    entries: &mut Vec<Json>,
+    kernel: &str,
+    dtype: &str,
+    m: usize,
+    b: usize,
+    fl: f64,
+    assert_fast: bool,
+    mut f: impl FnMut(),
+) {
+    use trunksvd::util::simd::{self, SimdLevel};
+    let detected = simd::detected_level();
+    let (w, r) = auto_runs(fl / 1e9);
+    let attempts = if assert_fast { 5 } else { 1 };
+    let (mut best, mut t_off, mut t_on) = (0.0f64, f64::INFINITY, f64::INFINITY);
+    for _ in 0..attempts {
+        simd::set_level(Some(SimdLevel::Off));
+        let off = time_runs(w, r, &mut f);
+        simd::set_level(Some(detected));
+        let on = time_runs(w, r, &mut f);
+        let ratio = off.min / on.min.max(1e-12);
+        if ratio > best {
+            best = ratio;
+            t_off = off.min;
+            t_on = on.min;
+        }
+        if best >= 1.0 {
+            break;
+        }
+    }
+    simd::set_level(None);
+    println!(
+        "{kernel:<16} {dtype} m={m:>6} b={b:>3}  scalar {t_off:>9.5}s  {:<5} {t_on:>9.5}s  \
+         simd/scalar {best:>5.2}x",
+        detected.name()
+    );
+    entries.push(json::obj(vec![
+        ("kernel", json::str(format!("{kernel}_simd_speedup"))),
+        ("dtype", json::str(dtype)),
+        ("m", json::num(m as f64)),
+        ("b", json::num(b as f64)),
+        ("threads", json::num(1.0)),
+        ("simd_level", json::str(detected.name())),
+        ("scalar_s", json::num(t_off)),
+        ("simd_s", json::num(t_on)),
+        ("simd_over_scalar", json::num(best)),
+    ]));
+    if assert_fast && detected != SimdLevel::Off {
+        assert!(
+            best >= 1.0,
+            "{kernel} {dtype}: SIMD path ({t_on:.5}s) must not be slower than the scalar \
+             reference ({t_off:.5}s) — ratio {best:.3}"
+        );
+    }
+}
+
+/// SIMD-vs-scalar sweep at one element precision. Serial (1 thread) so
+/// the measurement isolates the microkernel effect from band fan-out.
+fn bench_simd_kernels<S: Scalar>(entries: &mut Vec<Json>, quick: bool, gate: bool) {
+    let mut rng = Rng::new(41);
+    let m = if quick { 8192 } else { 32768 };
+    let b = 8usize;
+    let spec = SparseSpec { rows: m, cols: m / 4, nnz: m * 25, seed: 41, ..Default::default() };
+    let a: trunksvd::Csr<S> = generate(&spec).cast();
+    pool::set_num_threads(1);
+    {
+        let fl = 2.0 * a.nnz() as f64 * b as f64;
+        let x: Mat<S> = Mat::randn(a.cols(), b, &mut rng);
+        let mut y: Mat<S> = Mat::zeros(a.rows(), b);
+        simd_speedup_entry(entries, "spmm", S::DTYPE, m, b, fl, gate, || {
+            a.spmm(x.as_ref(), y.as_mut())
+        });
+    }
+    {
+        let q: Mat<S> = Mat::randn(m, b, &mut rng);
+        let flg = (b * b) as f64 * m as f64;
+        simd_speedup_entry(entries, "gram", S::DTYPE, m, b, flg, gate, || {
+            let _ = blas3::gram(q.as_ref());
+        });
+    }
+    {
+        let m3 = if quick { 4096 } else { 8192 };
+        let spec3 = SparseSpec {
+            rows: m3,
+            cols: m3 / 4,
+            nnz: m3 * 6,
+            seed: 7,
+            skew: 0.2,
+            ..Default::default()
+        };
+        let a3: trunksvd::Csr<S> = generate(&spec3).cast();
+        let be = BlockEll::from_csr_auto(&a3, 16);
+        let fl3 = 2.0 * a3.nnz() as f64 * b as f64;
+        let x: Mat<S> = Mat::randn(be.padded_cols(), b, &mut rng);
+        let mut y: Mat<S> = Mat::zeros(be.padded_rows(), b);
+        simd_speedup_entry(entries, "blockell_spmm", S::DTYPE, m3, b, fl3, false, || {
+            be.spmm(x.as_ref(), y.as_mut())
+        });
+    }
+    pool::set_num_threads(0);
 }
 
 /// Threaded sparse/Gram kernel sweep at one element precision. Returns
@@ -251,9 +373,18 @@ fn main() {
         ]));
     }
     banner(
+        "SIMD microkernels: scalar reference vs detected ISA",
+        "serial, 1 thread; BENCH_ASSERT_SIMD=1 gates spmm/gram >= 1.0x",
+    );
+    let simd_gate = env_usize("BENCH_ASSERT_SIMD", 0) == 1;
+    bench_simd_kernels::<f64>(&mut entries, quick, simd_gate);
+    bench_simd_kernels::<f32>(&mut entries, quick, simd_gate);
+
+    banner(
         "Pool dispatch (empty-job round trip)",
         "persistent workers vs the spawn-per-call baseline",
     );
+    let pool_dispatch_ns: f64;
     {
         use std::sync::atomic::{AtomicUsize, Ordering};
         // Dispatch needs >= 2 bands to involve the pool at all; pin the
@@ -288,6 +419,7 @@ fn main() {
         }
         let spawn_ns = t0.elapsed().as_secs_f64() * 1e9 / spawn_iters as f64;
         pool::set_num_threads(0);
+        pool_dispatch_ns = pool_ns;
         let ratio = spawn_ns / pool_ns.max(1.0);
         println!(
             "pool_dispatch    t={tb}  persistent {pool_ns:>9.0} ns/call  \
@@ -456,15 +588,99 @@ fn main() {
         }
     }
 
+    banner(
+        "Cost-model calibration",
+        "measured dispatch/scatter/build crossovers -> cost_calibration section \
+         (load with TRUNKSVD_COST_CALIB=BENCH_kernels.json; --calibrate adds a k-sweep)",
+    );
+    let calibrate = std::env::args().any(|a| a == "--calibrate");
+    let cal_section = {
+        pool::set_num_threads(1);
+        // Per-element streaming cost from a serial axpy sweep: the
+        // denominator of the dispatch-grain crossover.
+        let nvec = 1usize << 20;
+        let xsrc = vec![1.000001f64; nvec];
+        let mut ydst = vec![0.0f64; nvec];
+        let st = time_runs(2, 7, || trunksvd::la::blas1::axpy(0.5, &xsrc, &mut ydst));
+        let elem_ns = st.min * 1e9 / nvec as f64;
+        let cutoff = (pool_dispatch_ns / elem_ns.max(1e-3)).clamp(64.0, 16384.0).round() as usize;
+        // Scatter penalty and transpose-build cost at the shape the
+        // adaptive-transpose decision actually sees (tall sparse, k=8).
+        let mc = if quick { 4096 } else { 8192 };
+        let kc = 8usize;
+        let spec =
+            SparseSpec { rows: mc, cols: mc / 2, nnz: mc * 20, seed: 57, ..Default::default() };
+        let ac = generate(&spec);
+        let measure = |k: usize| -> (f64, f64, f64) {
+            let mut rng = Rng::new(71);
+            let xm: Mat<f64> = Mat::randn(ac.rows(), k, &mut rng);
+            let mut yn: Mat<f64> = Mat::zeros(ac.cols(), k);
+            let fl = 2.0 * ac.nnz() as f64 * k as f64;
+            let (w, r) = auto_runs(fl / 1e9);
+            let t_scatter = time_runs(w, r, || ac.spmm_t(xm.as_ref(), yn.as_mut())).min;
+            let t_build = time_runs(1, 3, || {
+                let _ = ac.transpose();
+            })
+            .min;
+            let at = ac.transpose();
+            let t_gather = time_runs(w, r, || at.spmm(xm.as_ref(), yn.as_mut())).min;
+            (t_scatter, t_gather, t_build)
+        };
+        let (ts, tg, tb) = measure(kc);
+        // Model units (see cost::adaptive_transpose_threshold): one
+        // gather call ~= k column sweeps of the nnz stream, so the
+        // per-sweep time is t_gather/k; the scatter penalty is the extra
+        // fraction per call and the build cost is in sweeps.
+        let scatter_penalty = ((ts - tg) / tg.max(1e-12)).clamp(0.05, 16.0);
+        let build_sweeps = (kc as f64 * tb / tg.max(1e-12)).clamp(1.0, 64.0);
+        let mut fields = vec![
+            ("build_sweeps", json::num(build_sweeps)),
+            ("scatter_penalty", json::num(scatter_penalty)),
+            ("parallel_cutoff", json::num(cutoff as f64)),
+            ("dispatch_ns", json::num(pool_dispatch_ns)),
+            ("elem_ns", json::num(elem_ns)),
+            ("m", json::num(mc as f64)),
+            ("k", json::num(kc as f64)),
+        ];
+        println!(
+            "cost_calibration  build_sweeps {build_sweeps:>5.2}  scatter_penalty \
+             {scatter_penalty:>5.2}  parallel_cutoff {cutoff:>5}  \
+             (dispatch {pool_dispatch_ns:.0} ns, elem {elem_ns:.2} ns)"
+        );
+        if calibrate {
+            let mut sweep = Vec::new();
+            for &k in &[1usize, 2, 4, 8, 16] {
+                let (ts, tg, tb) = measure(k);
+                let pen = ((ts - tg) / tg.max(1e-12)).max(0.0);
+                println!(
+                    "  sweep k={k:>2}  scatter {ts:>9.5}s  gather {tg:>9.5}s  \
+                     build {tb:>9.5}s  penalty {pen:>5.2}"
+                );
+                sweep.push(json::obj(vec![
+                    ("k", json::num(k as f64)),
+                    ("scatter_s", json::num(ts)),
+                    ("gather_s", json::num(tg)),
+                    ("build_s", json::num(tb)),
+                    ("scatter_penalty", json::num(pen)),
+                    ("build_sweeps", json::num((k as f64 * tb / tg.max(1e-12)).max(0.0))),
+                ]));
+            }
+            fields.push(("sweep", json::arr(sweep)));
+        }
+        pool::set_num_threads(0);
+        json::obj(fields)
+    };
+
     let n_entries = entries.len();
     let doc = json::obj(vec![
         ("bench", json::str("kernels")),
         ("threads", json::num(threads as f64)),
         ("quick", json::num(if quick { 1.0 } else { 0.0 })),
+        ("cost_calibration", cal_section),
         ("kernels", json::arr(entries)),
     ]);
     std::fs::write("BENCH_kernels.json", json::write(&doc)).expect("write BENCH_kernels.json");
-    println!("wrote BENCH_kernels.json ({n_entries} entries)");
+    println!("wrote BENCH_kernels.json ({n_entries} entries + cost_calibration)");
 
     banner("Orthogonalization (q x 16 panel)", "CholeskyQR2 and CGS-CQR2 (s=128)");
     let qs: &[usize] = if quick { &[4096] } else { &[4096, 32768] };

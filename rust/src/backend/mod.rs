@@ -88,6 +88,32 @@
 //! host-resident backends (pinned by `tests/test_workspace.rs` and the
 //! `BENCH_ASSERT_NOALLOC` gate).
 //!
+//! ## 6. CPU microkernels
+//!
+//! Host-resident backends (and host fallback paths of device backends)
+//! reach the shared SIMD microkernel layer in [`crate::util::simd`]
+//! through the `la::blas*` / `sparse::*` kernels rather than open-coding
+//! inner loops. The layer's contract matters to conformance:
+//!
+//! * **Bitwise level-independence.** Every microkernel uses one
+//!   lane-blocked accumulator layout and one reduction tree across the
+//!   scalar reference and all ISA paths (no FMA), so `TRUNKSVD_SIMD=off`
+//!   and every ISA produce bitwise-identical results at a fixed thread
+//!   count. A backend op built on these kernels inherits rule 1's
+//!   reproducibility guarantee for free; an op that hand-rolls its inner
+//!   loops must match the reference kernels bitwise or it will fail the
+//!   cross-backend determinism battery (`tests/test_simd_kernels.rs`,
+//!   `tests/test_threaded_kernels.rs`).
+//! * **Dispatch is process-global.** The active level resolves from
+//!   `TRUNKSVD_SIMD` once (tests override in-process via
+//!   `simd::set_level`); backends must not cache kernel choices keyed on
+//!   a level they sampled earlier.
+//! * **Threading composition.** Microkernels are serial building blocks;
+//!   parallelism comes from the `util::pool` band partitioning above
+//!   them (whose worker pinning is governed by `TRUNKSVD_PIN`, see
+//!   `util::pool` docs). Backends should not nest their own threads
+//!   around pool-dispatching kernels — nested calls degrade serial.
+//!
 //! # Implementations
 //!
 //! * [`cpu::CpuBackend`] — pure-rust substrate, the conformance

@@ -6,8 +6,97 @@
 //! `bench_table1_cost` can validate model == measured-counter exactly.
 //! Fig. 3 (flop distribution across building blocks) is generated directly
 //! from [`randsvd_cost`] / [`lancsvd_cost`] breakdowns.
+//!
+//! The dispatch heuristics ([`adaptive_transpose_threshold`],
+//! [`parallel_cutoff`]) ship with desk-estimate constants that a
+//! measured [`CostCalibration`] (from `bench_blocks --calibrate`, loaded
+//! via `TRUNKSVD_COST_CALIB`) can replace at runtime.
 
 pub mod device;
+
+use crate::util::json::Json;
+use std::sync::OnceLock;
+
+/// Measured overrides for the dispatch-heuristic constants baked into
+/// [`adaptive_transpose_threshold`] and [`parallel_cutoff`].
+///
+/// The built-in constants are desk estimates (memory-sweep counts, a
+/// 5 µs dispatch guess); `bench_blocks` measures the real crossovers on
+/// the host it runs on and emits them as a `cost_calibration` section in
+/// `BENCH_kernels.json`. Pointing `TRUNKSVD_COST_CALIB` at that file (or
+/// any JSON holding the section, or the bare section object) swaps the
+/// constants for the measured values — clamped to the same sanity ranges
+/// the tests pin, so a corrupt or wildly-off calibration can degrade
+/// quality but never break the dispatch invariants.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostCalibration {
+    /// One-time transpose-build cost in nnz-proportional memory sweeps
+    /// (clamped to [1, 64]).
+    pub build_sweeps: f64,
+    /// Extra sweeps per scatter `spmm_t` call vs the gather kernel,
+    /// per k-column (clamped to [0.05, 16]).
+    pub scatter_penalty: f64,
+    /// Pool serial/parallel grain in output elements per band
+    /// (clamped to [64, 16384] — the range `test_cost_model` pins).
+    pub parallel_cutoff: usize,
+}
+
+impl CostCalibration {
+    /// The built-in desk-estimate constants.
+    pub const DEFAULT: CostCalibration =
+        CostCalibration { build_sweeps: 6.0, scatter_penalty: 1.0, parallel_cutoff: 1024 };
+
+    fn clamped(self) -> CostCalibration {
+        CostCalibration {
+            build_sweeps: self.build_sweeps.clamp(1.0, 64.0),
+            scatter_penalty: self.scatter_penalty.clamp(0.05, 16.0),
+            parallel_cutoff: self.parallel_cutoff.clamp(64, 16384),
+        }
+    }
+
+    /// Parse from a JSON value: either the bare calibration object or a
+    /// document with a `cost_calibration` section (the `BENCH_kernels`
+    /// layout). Missing/non-numeric fields fall back to the defaults;
+    /// non-finite values are rejected the same way.
+    pub fn from_json(doc: &Json) -> Option<CostCalibration> {
+        let obj = doc.get("cost_calibration").unwrap_or(doc);
+        let field = |key: &str| obj.get(key).and_then(Json::as_f64).filter(|v| v.is_finite());
+        let d = CostCalibration::DEFAULT;
+        let build_sweeps = field("build_sweeps").unwrap_or(d.build_sweeps);
+        let scatter_penalty = field("scatter_penalty").unwrap_or(d.scatter_penalty);
+        let parallel_cutoff = field("parallel_cutoff")
+            .map(|v| v.max(0.0) as usize)
+            .unwrap_or(d.parallel_cutoff);
+        // A doc with none of the fields is not a calibration at all.
+        if field("build_sweeps").is_none()
+            && field("scatter_penalty").is_none()
+            && field("parallel_cutoff").is_none()
+        {
+            return None;
+        }
+        Some(CostCalibration { build_sweeps, scatter_penalty, parallel_cutoff }.clamped())
+    }
+}
+
+/// Load a calibration from a JSON file (`BENCH_kernels.json` or a bare
+/// calibration object). Returns `None` on unreadable/unparseable files
+/// or files without any calibration field.
+pub fn load_calibration(path: &str) -> Option<CostCalibration> {
+    let doc = crate::util::json::parse_file(path).ok()?;
+    CostCalibration::from_json(&doc)
+}
+
+/// The active calibration: `TRUNKSVD_COST_CALIB=<file>` if set and
+/// loadable, else the built-in defaults. Resolved once per process.
+pub fn calibration() -> CostCalibration {
+    static CAL: OnceLock<CostCalibration> = OnceLock::new();
+    *CAL.get_or_init(|| {
+        std::env::var("TRUNKSVD_COST_CALIB")
+            .ok()
+            .and_then(|p| load_calibration(&p))
+            .unwrap_or(CostCalibration::DEFAULT)
+    })
+}
 
 /// Problem description for the cost model.
 #[derive(Clone, Copy, Debug)]
@@ -89,8 +178,7 @@ impl CostBreakdown {
 /// cap). The `TRUNKSVD_ADAPTIVE_SPMMT` env var still overrides the
 /// estimate (see `backend::AdaptiveTranspose`).
 pub fn adaptive_transpose_threshold(rows: usize, cols: usize, nnz: usize, k: usize) -> usize {
-    const BUILD_SWEEPS: f64 = 6.0;
-    const SCATTER_PENALTY: f64 = 1.0;
+    let cal = calibration();
     // Cache-residency gate: ~(nnz values + nnz indices + cols outputs)
     // below a few hundred KiB means no DRAM round-trips to save.
     if nnz.saturating_add(cols) < 32_768 {
@@ -101,8 +189,8 @@ pub fn adaptive_transpose_threshold(rows: usize, cols: usize, nnz: usize, k: usi
     // caches sooner, so the crossover comes earlier (divide the build
     // sweeps over a larger per-call penalty).
     let aspect = if rows > 0 && cols > 4 * rows { 2.0 } else { 1.0 };
-    let per_call = (k.max(1) as f64) * SCATTER_PENALTY * aspect;
-    let n = (BUILD_SWEEPS / per_call).ceil() as usize;
+    let per_call = (k.max(1) as f64) * cal.scatter_penalty * aspect;
+    let n = (cal.build_sweeps / per_call).ceil() as usize;
     n.clamp(1, 64)
 }
 
@@ -122,11 +210,12 @@ pub fn adaptive_transpose_threshold(rows: usize, cols: usize, nnz: usize, k: usi
 /// wall time. We use 1024 as the grain: conservative enough that a
 /// 2-band split already owns ~2× the break-even work per extra thread,
 /// small enough that the m ≥ 4096 panels of the paper's sweeps fan out
-/// fully. Runtime overrides: `TRUNKSVD_PARALLEL_CUTOFF` or
-/// `pool::set_parallel_cutoff` (used by the tests to force the parallel
-/// path on tiny fixtures).
+/// fully. A measured value from `TRUNKSVD_COST_CALIB` (see
+/// [`CostCalibration`]) replaces the 1024 desk estimate. Runtime
+/// overrides: `TRUNKSVD_PARALLEL_CUTOFF` or `pool::set_parallel_cutoff`
+/// (used by the tests to force the parallel path on tiny fixtures).
 pub fn parallel_cutoff() -> usize {
-    1024
+    calibration().parallel_cutoff
 }
 
 /// CA4: CholeskyQR2 on a q×b panel (Alg. 4).
@@ -301,5 +390,77 @@ mod tests {
     fn dense_mult_cost() {
         let dp = Problem { m: 1000, n: 500, nnz: None };
         assert_eq!(dp.mult_cost(16), 2.0 * 1000.0 * 500.0 * 16.0);
+    }
+
+    #[test]
+    fn calibration_from_json_forms() {
+        use crate::util::json;
+        // Bare object.
+        let bare = json::parse(
+            r#"{"build_sweeps": 4.5, "scatter_penalty": 0.8, "parallel_cutoff": 2048}"#,
+        )
+        .unwrap();
+        let c = CostCalibration::from_json(&bare).unwrap();
+        assert_eq!(
+            c,
+            CostCalibration { build_sweeps: 4.5, scatter_penalty: 0.8, parallel_cutoff: 2048 }
+        );
+        // BENCH_kernels layout: wrapped in a cost_calibration section.
+        let doc = json::parse(
+            r#"{"bench": "kernels", "cost_calibration": {"build_sweeps": 12.0}}"#,
+        )
+        .unwrap();
+        let c = CostCalibration::from_json(&doc).unwrap();
+        assert_eq!(c.build_sweeps, 12.0);
+        assert_eq!(c.scatter_penalty, CostCalibration::DEFAULT.scatter_penalty);
+        assert_eq!(c.parallel_cutoff, CostCalibration::DEFAULT.parallel_cutoff);
+        // A document without any calibration field is not a calibration.
+        let other = json::parse(r#"{"results": []}"#).unwrap();
+        assert!(CostCalibration::from_json(&other).is_none());
+    }
+
+    #[test]
+    fn calibration_clamps_to_pinned_ranges() {
+        use crate::util::json;
+        let wild = json::parse(
+            r#"{"build_sweeps": 1e9, "scatter_penalty": -3.0, "parallel_cutoff": 7}"#,
+        )
+        .unwrap();
+        let c = CostCalibration::from_json(&wild).unwrap();
+        assert_eq!(c.build_sweeps, 64.0);
+        assert_eq!(c.scatter_penalty, 0.05);
+        assert_eq!(c.parallel_cutoff, 64);
+        let huge = json::parse(r#"{"parallel_cutoff": 1000000}"#).unwrap();
+        assert_eq!(CostCalibration::from_json(&huge).unwrap().parallel_cutoff, 16384);
+    }
+
+    #[test]
+    fn load_calibration_file_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("trunksvd_test_cost_calib.json");
+        let path = path.to_str().unwrap();
+        std::fs::write(
+            path,
+            r#"{"cost_calibration": {"build_sweeps": 8.0, "scatter_penalty": 2.0, "parallel_cutoff": 512}}"#,
+        )
+        .unwrap();
+        let c = load_calibration(path).unwrap();
+        assert_eq!(
+            c,
+            CostCalibration { build_sweeps: 8.0, scatter_penalty: 2.0, parallel_cutoff: 512 }
+        );
+        let _ = std::fs::remove_file(path);
+        assert!(load_calibration("/nonexistent/trunksvd_calib.json").is_none());
+    }
+
+    #[test]
+    fn default_calibration_active_without_env() {
+        // The test binary never sets TRUNKSVD_COST_CALIB, so the resolved
+        // calibration must be the built-in defaults (this also pins the
+        // parallel_cutoff() == 1024 behaviour the pool tests assume).
+        if std::env::var("TRUNKSVD_COST_CALIB").is_err() {
+            assert_eq!(calibration(), CostCalibration::DEFAULT);
+            assert_eq!(parallel_cutoff(), 1024);
+        }
     }
 }

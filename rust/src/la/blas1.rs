@@ -4,49 +4,33 @@
 //! substrates; accumulation happens in the element precision (the fp32
 //! path trades ~√n·ε_32 dot-product error for double the effective
 //! memory bandwidth, which the tolerance-driven stopping rules absorb).
+//!
+//! All three hot kernels delegate to the `util::simd` microkernel layer
+//! (`Scalar::simd_dot` / `simd_axpy` / `simd_scal`): the dot's
+//! lane-blocked accumulators and fixed reduction tree are pinned there,
+//! so results are bitwise identical between the scalar reference and
+//! every ISA path (see `util::simd` module docs).
 
 use crate::util::scalar::Scalar;
 
-/// Dot product.
+/// Dot product (lane-blocked accumulation; see `util::simd`).
 #[inline]
 pub fn dot<S: Scalar>(x: &[S], y: &[S]) -> S {
     debug_assert_eq!(x.len(), y.len());
-    // 4-way split accumulation: lets LLVM vectorize and improves the
-    // rounding behaviour vs a single serial accumulator.
-    let n = x.len();
-    let n4 = n - n % 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
-    let mut i = 0;
-    while i < n4 {
-        s0 += x[i] * y[i];
-        s1 += x[i + 1] * y[i + 1];
-        s2 += x[i + 2] * y[i + 2];
-        s3 += x[i + 3] * y[i + 3];
-        i += 4;
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    while i < n {
-        s += x[i] * y[i];
-        i += 1;
-    }
-    s
+    S::simd_dot(x, y)
 }
 
 /// y += a * x
 #[inline]
 pub fn axpy<S: Scalar>(a: S, x: &[S], y: &mut [S]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * *xi;
-    }
+    S::simd_axpy(a, x, y)
 }
 
 /// x *= a
 #[inline]
 pub fn scal<S: Scalar>(a: S, x: &mut [S]) {
-    for xi in x.iter_mut() {
-        *xi *= a;
-    }
+    S::simd_scal(a, x)
 }
 
 /// Euclidean norm with scaling against overflow/underflow.

@@ -6,7 +6,12 @@
 //!
 //! Layout notes: everything is column-major with leading dimension ==
 //! rows, so `gemm_nn` is an axpy-panel kernel (streams contiguous columns)
-//! and `gemm_tn` is a dot-panel kernel — both auto-vectorize well.
+//! and `gemm_tn` is a dot-panel kernel — both auto-vectorize well. The
+//! reduction-shaped kernels (`gram`'s column-pair dots, the TRMM row
+//! dots) run on the explicit `util::simd` microkernels so their
+//! lane-blocked reduction order is pinned independently of what the
+//! auto-vectorizer chooses — that is what makes `TRUNKSVD_SIMD=off`
+//! bitwise-reproducible against every ISA path.
 //!
 //! Threading model: the GEMMs partition *output columns* in groups of 4
 //! (`parallel_chunks_mut` on C's storage — column groups are contiguous
@@ -265,28 +270,20 @@ fn gram_accumulate<S: Scalar>(q: MatRef<S>, lo: usize, hi: usize, acc: &mut [S])
         let tl = TILE.min(hi - t0);
         for j in 0..b {
             let qj = &q.col(j)[t0..t0 + tl];
-            // Two (i, j) entries per pass over qj.
+            // Two (i, j) entries per pass over qj, each pair running on
+            // the `util::simd` dot2 microkernel.
             let mut i = 0;
             while i + 1 <= j {
                 let qi0 = &q.col(i)[t0..t0 + tl];
                 let qi1 = &q.col(i + 1)[t0..t0 + tl];
-                let (mut s0, mut s1) = (S::ZERO, S::ZERO);
-                for t in 0..tl {
-                    let x = qj[t];
-                    s0 += qi0[t] * x;
-                    s1 += qi1[t] * x;
-                }
+                let (s0, s1) = S::simd_dot2(qi0, qi1, qj);
                 acc[j * b + i] += s0;
                 acc[j * b + i + 1] += s1;
                 i += 2;
             }
             if i <= j {
                 let qi = &q.col(i)[t0..t0 + tl];
-                let mut s = S::ZERO;
-                for t in 0..tl {
-                    s += qi[t] * qj[t];
-                }
-                acc[j * b + i] += s;
+                acc[j * b + i] += S::simd_dot(qi, qj);
             }
         }
         t0 += tl;
@@ -363,6 +360,10 @@ pub fn gram<S: Scalar>(q: MatRef<S>) -> Mat<S> {
 /// steps S3/S6), fully in place on a borrowed panel view.
 /// Column-recurrence on the upper-triangular U = Lᵀ:
 /// X[:,j] = (Q[:,j] − Σ_{i<j} X[:,i]·U[i,j]) / U[j,j],  U[i,j] = L[j,i].
+///
+/// The tall-column work is entirely `blas1::axpy`/`scal`, so this picks
+/// up the `util::simd` elementwise microkernels transitively (axpy/scal
+/// are bitwise-safe under any vector width — no reductions involved).
 pub fn trsm_right_lt<S: Scalar>(l: MatRef<S>, mut q: MatMut<S>) {
     let b = l.rows;
     assert_eq!(l.cols, b, "trsm L square");
@@ -390,16 +391,38 @@ pub fn trmm_lt_lt_into<S: Scalar>(l: MatRef<S>, lbar: MatRef<S>, mut r: MatMut<S
     assert_eq!(lbar.rows, b, "trmm factor shapes");
     assert_eq!((r.rows, r.cols), (b, b), "trmm output shape");
     // R[i,j] = Σ_t Lᵀ[i,t] · L̄ᵀ[t,j] = Σ_t L[t,i] · L̄[j,t], t in [i, j].
-    for j in 0..b {
-        for i in 0..b {
-            if i <= j {
-                let mut s = S::ZERO;
-                for t in i..=j {
-                    s += l.at(t, i) * lbar.at(j, t);
+    // L̄'s row j is strided in column-major storage; stage it once per j
+    // into a stack buffer so every (i, j) dot is contiguous×contiguous
+    // and runs on the `util::simd` dot microkernel. The buffer is fixed
+    // size to keep the kernel allocation-free (alloc-probed steady
+    // state); panels wider than ROW_BUF fall back to the strided loop.
+    const ROW_BUF: usize = 256;
+    if b <= ROW_BUF {
+        let mut rowj = [S::ZERO; ROW_BUF];
+        for j in 0..b {
+            for (t, slot) in rowj.iter_mut().enumerate().take(j + 1) {
+                *slot = lbar.at(j, t);
+            }
+            for i in 0..b {
+                if i <= j {
+                    r.set(i, j, S::simd_dot(&l.col(i)[i..=j], &rowj[i..=j]));
+                } else {
+                    r.set(i, j, S::ZERO);
                 }
-                r.set(i, j, s);
-            } else {
-                r.set(i, j, S::ZERO);
+            }
+        }
+    } else {
+        for j in 0..b {
+            for i in 0..b {
+                if i <= j {
+                    let mut s = S::ZERO;
+                    for t in i..=j {
+                        s += l.at(t, i) * lbar.at(j, t);
+                    }
+                    r.set(i, j, s);
+                } else {
+                    r.set(i, j, S::ZERO);
+                }
             }
         }
     }

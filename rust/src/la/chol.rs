@@ -48,7 +48,10 @@ fn potrf_in_place_range<S: Scalar>(l: &mut MatMut<S>, j0: usize, jb: usize) -> R
 /// with L overwriting A (upper triangle zeroed). Blocked right-looking
 /// for n > 64, with the diagonal-block factorization running in place —
 /// no temporaries, which is what keeps the CholeskyQR2 passes inside
-/// the iteration loops allocation-free. Breakdown (non-positive pivot)
+/// the iteration loops allocation-free. The panel update (L21 solve +
+/// A22 rank-jb update) runs in column axpy form on the `util::simd`
+/// microkernels while staying bitwise-identical to the scalar
+/// recurrence (see inline comments). Breakdown (non-positive pivot)
 /// is reported as an error so the orthogonalization layer can fall back
 /// to re-orthogonalized CGS (paper §3.2).
 pub fn potrf_in_place<S: Scalar>(l: &mut MatMut<S>) -> Result<()> {
@@ -64,24 +67,28 @@ pub fn potrf_in_place<S: Scalar>(l: &mut MatMut<S>) -> Result<()> {
             potrf_in_place_range(l, j0, jb)?;
             let rest = n - j0 - jb;
             if rest > 0 {
-                // L21 = A21 · L11⁻ᵀ  (solve X L11ᵀ = A21, row-block)
+                // L21 = A21 · L11⁻ᵀ  (solve X L11ᵀ = A21), column axpy
+                // form on the `util::simd` microkernels. Per element this
+                // is the same k-ordered recurrence as the scalar loop and
+                // s + (−ljk)·lik ≡ s − ljk·lik bitwise (negation is
+                // exact), so the blocked/unblocked parity is preserved.
                 for j in 0..jb {
-                    for i in 0..rest {
-                        let mut s = l.at(j0 + jb + i, j0 + j);
-                        for k in 0..j {
-                            s -= l.at(j0 + jb + i, j0 + k) * l.at(j0 + j, j0 + k);
-                        }
-                        l.set(j0 + jb + i, j0 + j, s / l.at(j0 + j, j0 + j));
+                    for k in 0..j {
+                        let ljk = l.at(j0 + j, j0 + k);
+                        let (ck, cj) = l.col_pair_mut(j0 + k, j0 + j);
+                        S::simd_axpy(-ljk, &ck[j0 + jb..n], &mut cj[j0 + jb..n]);
+                    }
+                    let d = l.at(j0 + j, j0 + j);
+                    for v in l.col_mut(j0 + j)[j0 + jb..n].iter_mut() {
+                        *v /= d;
                     }
                 }
-                // A22 −= L21 · L21ᵀ (lower triangle only)
+                // A22 −= L21 · L21ᵀ (lower triangle only), same axpy form.
                 for jj in 0..rest {
-                    for ii in jj..rest {
-                        let mut s = l.at(j0 + jb + ii, j0 + jb + jj);
-                        for k in 0..jb {
-                            s -= l.at(j0 + jb + ii, j0 + k) * l.at(j0 + jb + jj, j0 + k);
-                        }
-                        l.set(j0 + jb + ii, j0 + jb + jj, s);
+                    for k in 0..jb {
+                        let f = l.at(j0 + jb + jj, j0 + k);
+                        let (ck, cj) = l.col_pair_mut(j0 + k, j0 + jb + jj);
+                        S::simd_axpy(-f, &ck[j0 + jb + jj..n], &mut cj[j0 + jb + jj..n]);
                     }
                 }
             }

@@ -10,6 +10,9 @@
 //! module stays serial by design; the parallel work in the fast
 //! orthogonalization path lives in the `blas3` kernels (Gram/GEMM) it
 //! falls back *from*, which run on the persistent `util::pool` workers.
+//! The per-reflector column work (dots, axpy updates) goes through
+//! `blas1`, so it picks up the `util::simd` microkernels transitively —
+//! serial but still vectorized.
 
 use super::blas1::{axpy, dot, nrm2, scal};
 use super::mat::{Mat, MatMut, MatRef};

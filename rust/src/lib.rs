@@ -22,6 +22,7 @@ pub mod util {
     pub mod pool;
     pub mod rng;
     pub mod scalar;
+    pub mod simd;
 }
 
 pub mod la {

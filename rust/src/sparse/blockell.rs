@@ -133,7 +133,8 @@ impl<S: Scalar> BlockEll<S> {
     /// (each thread owns whole bs-row stripes of Y, so block-scatter
     /// accumulation is private), with a 4-column register-blocked bs×bs
     /// micro-kernel — each block row load feeds 4 dots, and the inner
-    /// contiguous length-bs dot auto-vectorizes.
+    /// contiguous length-bs dots run on the `util::simd` vector
+    /// microkernels (`Scalar::simd_dot4` / `simd_dot`).
     pub fn spmm(&self, x: MatRef<S>, mut y: MatMut<S>) {
         assert_eq!(x.rows, self.padded_cols(), "block-ELL spmm X rows");
         assert_eq!(
@@ -175,14 +176,7 @@ impl<S: Scalar> BlockEll<S> {
                         let [c0, c1, c2, c3] = &mut cols[j..j + 4] else { unreachable!() };
                         for ri in 0..bs {
                             let row = &blk[ri * bs..(ri + 1) * bs];
-                            let (mut s0, mut s1) = (S::ZERO, S::ZERO);
-                            let (mut s2, mut s3) = (S::ZERO, S::ZERO);
-                            for (t, &v) in row.iter().enumerate() {
-                                s0 += v * x0[t];
-                                s1 += v * x1[t];
-                                s2 += v * x2[t];
-                                s3 += v * x3[t];
-                            }
+                            let (s0, s1, s2, s3) = S::simd_dot4(row, x0, x1, x2, x3);
                             let o = lb * bs + ri;
                             c0[o] += s0;
                             c1[o] += s1;
@@ -196,11 +190,7 @@ impl<S: Scalar> BlockEll<S> {
                         let cj = &mut cols[j];
                         for ri in 0..bs {
                             let row = &blk[ri * bs..(ri + 1) * bs];
-                            let mut acc = S::ZERO;
-                            for (t, &v) in row.iter().enumerate() {
-                                acc += v * xj[t];
-                            }
-                            cj[lb * bs + ri] += acc;
+                            cj[lb * bs + ri] += S::simd_dot(row, xj);
                         }
                         j += 1;
                     }

@@ -14,11 +14,15 @@
 //! band of the same matrix call after call, so iterative algorithms keep
 //! their operand bands cache-warm per worker):
 //!
-//! * `spmm` partitions the *output rows* into contiguous bands
-//!   (`parallel_row_blocks`): each thread walks its sparse rows once per
-//!   group of 4 dense columns (register blocking matching the `gemm_nn`
-//!   idiom), so writes are disjoint by construction and A's row stream
-//!   is read k/4 times instead of k.
+//! * `spmm` partitions the *output rows* into contiguous bands: each
+//!   thread walks its sparse rows once per group of 4 dense columns
+//!   (register blocking matching the `gemm_nn` idiom), so writes are
+//!   disjoint by construction and A's row stream is read k/4 times
+//!   instead of k. The row×column-group dots run on the
+//!   `util::simd` gathered microkernels, and the parallel partition is
+//!   nnz-balanced and *memoized per operand* (pointer + generation key;
+//!   see `band_plan`), so repeat solves against the same A skip the
+//!   balancing scan entirely.
 //! * `spmm_t` partitions the *output columns* across threads: column j
 //!   of Y only accumulates `A[i,:]ᵀ · X[i,j]` terms, so a thread that
 //!   owns whole columns scatters race-free. The per-call borrows of the
@@ -44,24 +48,186 @@
 //! f32`; parity suites (`tests/test_dtype_parity.rs`) hold the f32 kernels
 //! to `S::EPSILON`-scaled agreement with the f64 reference.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
 use super::coo::Coo;
 use crate::error::{shape_err, Result};
 use crate::la::mat::{Mat, MatMut, MatRef};
 use crate::util::pool::{
-    num_threads, parallel_chunks_mut_work, parallel_histogram, parallel_reduce_work,
-    parallel_row_blocks_work, parallel_tasks,
+    self, num_threads, parallel_chunks_mut_work, parallel_histogram, parallel_reduce_work,
+    parallel_row_blocks_bounds, parallel_row_blocks_work, parallel_tasks,
 };
 use crate::util::scalar::Scalar;
 
 /// Compressed sparse row matrix, `S` values (default `f64`), u32 column
 /// indices. See the module doc for the `Scalar`/dtype story.
-#[derive(Clone, Debug)]
+///
+/// Every `Csr` carries a process-unique *generation* stamp assigned at
+/// construction (cloning assigns a fresh one): `(data pointer, gen)` is
+/// a collision-free identity key, which the band-plan cache below uses
+/// to recognize "the same A as last call" without hashing the operand.
+#[derive(Debug)]
 pub struct Csr<S: Scalar = f64> {
     rows: usize,
     cols: usize,
     indptr: Vec<usize>,
     indices: Vec<u32>,
     values: Vec<S>,
+    gen: u64,
+}
+
+impl<S: Scalar> Clone for Csr<S> {
+    fn clone(&self) -> Self {
+        Csr {
+            rows: self.rows,
+            cols: self.cols,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            values: self.values.clone(),
+            gen: fresh_gen(),
+        }
+    }
+}
+
+/// Next matrix generation stamp. Process-unique, so a `(ptr, gen)` pair
+/// can never suffer pointer-reuse (ABA) confusion: a freed-and-reused
+/// allocation necessarily belongs to a younger generation.
+fn fresh_gen() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One cached row-band partition: nnz-balanced `spmm` bounds for a
+/// specific operand at a specific band count.
+struct BandPlan {
+    key: (usize, u64, usize), // (indptr ptr, generation, bands)
+    bounds: Arc<Vec<usize>>,
+}
+
+/// Small global memo of band plans, keyed by matrix identity
+/// (pointer + generation — see [`Csr::generation`]) and band count.
+/// Iterative solvers hit the same handful of operands thousands of
+/// times; the linear scan over <= 32 entries is noise next to the
+/// O(log rows) × bands partition it avoids recomputing, and eviction is
+/// FIFO (dead generations age out naturally).
+static BAND_PLANS: Mutex<Vec<BandPlan>> = Mutex::new(Vec::new());
+const BAND_PLAN_CAP: usize = 32;
+
+/// Row bounds (strictly increasing, `0 .. rows`) splitting `indptr`'s
+/// rows into `bands` contiguous bands of roughly equal `nnz + rows`
+/// weight (the spmm work model), rounded to `align`-row boundaries so
+/// bands don't shear cache lines / first-touch pages.
+fn balanced_row_bounds(indptr: &[usize], bands: usize, align: usize) -> Vec<usize> {
+    let rows = indptr.len() - 1;
+    let total = indptr[rows] + rows;
+    let mut bounds = Vec::with_capacity(bands + 1);
+    bounds.push(0usize);
+    for w in 1..bands {
+        let target = (total as u128 * w as u128 / bands as u128) as usize;
+        // First row where the cumulative weight reaches the target
+        // (indptr[r] + r is strictly increasing in r).
+        let prev = *bounds.last().unwrap();
+        let (mut lo, mut hi) = (prev, rows);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if indptr[mid] + mid < target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        let aligned = ((lo + align / 2) / align) * align; // round to nearest boundary
+        if aligned > prev && aligned < rows {
+            bounds.push(aligned);
+        }
+    }
+    bounds.push(rows);
+    bounds
+}
+
+/// Fetch (or compute and memoize) the nnz-balanced spmm band plan for
+/// `a` at `bands` bands. Returns `None` when balancing degenerates to a
+/// single band (caller should use the uniform helper's serial path).
+fn band_plan<S: Scalar>(a: &Csr<S>, bands: usize) -> Option<Arc<Vec<usize>>> {
+    let key = (a.indptr.as_ptr() as usize, a.gen, bands);
+    {
+        let plans = BAND_PLANS.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(p) = plans.iter().find(|p| p.key == key) {
+            return Some(Arc::clone(&p.bounds));
+        }
+    }
+    let bounds = Arc::new(balanced_row_bounds(&a.indptr, bands, 32));
+    if bounds.len() < 3 {
+        // Everything collapsed into one band (tiny or degenerate
+        // operand): not worth caching, not worth banding.
+        return None;
+    }
+    let mut plans = BAND_PLANS.lock().unwrap_or_else(|e| e.into_inner());
+    if !plans.iter().any(|p| p.key == key) {
+        if plans.len() >= BAND_PLAN_CAP {
+            plans.remove(0);
+        }
+        plans.push(BandPlan { key, bounds: Arc::clone(&bounds) });
+    }
+    Some(bounds)
+}
+
+/// The spmm band body: gather rows `[r0, r1)` of `A·X` into `cols`
+/// (the band's sub-slices of the output columns). Shared by the uniform
+/// and cached-band-plan partitions; the inner dots are the
+/// `simd_gather_dot*` microkernels, 4-column register-blocked.
+fn spmm_rows<S: Scalar>(
+    indptr: &[usize],
+    indices: &[u32],
+    values: &[S],
+    x: &MatRef<S>,
+    r0: usize,
+    r1: usize,
+    cols: &mut [&mut [S]],
+) {
+    let k = x.cols;
+    let mut j = 0;
+    while j + 3 < k {
+        let x0 = x.col(j);
+        let x1 = x.col(j + 1);
+        let x2 = x.col(j + 2);
+        let x3 = x.col(j + 3);
+        let [c0, c1, c2, c3] = &mut cols[j..j + 4] else { unreachable!() };
+        for i in r0..r1 {
+            let lo = indptr[i];
+            let hi = indptr[i + 1];
+            let (s0, s1, s2, s3) =
+                S::simd_gather_dot4(&values[lo..hi], &indices[lo..hi], x0, x1, x2, x3);
+            c0[i - r0] = s0;
+            c1[i - r0] = s1;
+            c2[i - r0] = s2;
+            c3[i - r0] = s3;
+        }
+        j += 4;
+    }
+    if j + 1 < k {
+        let x0 = x.col(j);
+        let x1 = x.col(j + 1);
+        let [c0, c1] = &mut cols[j..j + 2] else { unreachable!() };
+        for i in r0..r1 {
+            let lo = indptr[i];
+            let hi = indptr[i + 1];
+            let (s0, s1) = S::simd_gather_dot2(&values[lo..hi], &indices[lo..hi], x0, x1);
+            c0[i - r0] = s0;
+            c1[i - r0] = s1;
+        }
+        j += 2;
+    }
+    if j < k {
+        let x0 = x.col(j);
+        let cj = &mut cols[j];
+        for i in r0..r1 {
+            let lo = indptr[i];
+            let hi = indptr[i + 1];
+            cj[i - r0] = S::simd_gather_dot1(&values[lo..hi], &indices[lo..hi], x0);
+        }
+    }
 }
 
 /// Split `[0, cols)` into up to `t` consecutive bands with roughly equal
@@ -172,6 +338,7 @@ impl<S: Scalar> Csr<S> {
             indptr: out_indptr,
             indices: out_indices,
             values: out_values,
+            gen: fresh_gen(),
         })
     }
 
@@ -195,7 +362,7 @@ impl<S: Scalar> Csr<S> {
         if indices.iter().any(|&c| c as usize >= cols) {
             return Err(shape_err("csr", "column index out of range"));
         }
-        Ok(Csr { rows, cols, indptr, indices, values })
+        Ok(Csr { rows, cols, indptr, indices, values, gen: fresh_gen() })
     }
 
     #[inline]
@@ -223,6 +390,14 @@ impl<S: Scalar> Csr<S> {
         &self.values
     }
 
+    /// Process-unique identity stamp (fresh per construction and per
+    /// clone): together with the data pointer this keys the band-plan
+    /// cache, immune to allocator address reuse.
+    #[inline]
+    pub fn generation(&self) -> u64 {
+        self.gen
+    }
+
     /// Copy into another element precision (values round through f64);
     /// the index structure is shared-shape, so this is the dtype
     /// conversion used when `--dtype f32` is selected at the driver.
@@ -233,6 +408,7 @@ impl<S: Scalar> Csr<S> {
             indptr: self.indptr.clone(),
             indices: self.indices.clone(),
             values: self.values.iter().map(|&v| T::from_f64(v.to_f64())).collect(),
+            gen: fresh_gen(),
         }
     }
 
@@ -317,6 +493,7 @@ impl<S: Scalar> Csr<S> {
             indptr: counts,
             indices,
             values,
+            gen: fresh_gen(),
         }
     }
 
@@ -329,8 +506,14 @@ impl<S: Scalar> Csr<S> {
     /// Row-gather form: for each output row, accumulate dot products of the
     /// sparse row against the k dense columns. Fast path of the paper.
     /// Parallel over contiguous row bands of Y; 4-column register blocking
-    /// amortizes each index decode over 4 FMAs. Every output element is
-    /// written exactly once, so no pre-zeroing pass is needed.
+    /// amortizes each index decode over 4 multiply-adds, and each row×
+    /// column-group dot runs on the `Scalar::simd_gather_dot*`
+    /// microkernels (AVX2 hardware gathers where available; every level
+    /// is bitwise-identical, see `util::simd`). Every output element is
+    /// written exactly once, so no pre-zeroing pass is needed — which
+    /// also makes *any* row partition bit-safe, so the parallel path
+    /// uses nnz-balanced bands from the per-operand plan cache
+    /// ([`Csr::generation`]) instead of a uniform split.
     pub fn spmm(&self, x: MatRef<S>, y: MatMut<S>) {
         assert_eq!(x.rows, self.cols, "spmm inner dim");
         assert_eq!((y.rows, y.cols), (self.rows, x.cols), "spmm out");
@@ -346,65 +529,17 @@ impl<S: Scalar> Csr<S> {
         // FMAs), plus the m×k output writes — the output size alone
         // would serialize short-and-dense operands.
         let work = self.nnz() * k + m * k;
+        let bands = pool::planned_bands(work, m.div_ceil(32));
+        if bands > 1 {
+            if let Some(bounds) = band_plan(self, bands) {
+                parallel_row_blocks_bounds(y.data, m, &bounds, |r0, r1, cols| {
+                    spmm_rows(indptr, indices, values, &x, r0, r1, cols)
+                });
+                return;
+            }
+        }
         parallel_row_blocks_work(y.data, m, 32, work, |r0, r1, cols| {
-            let mut j = 0;
-            while j + 3 < k {
-                let x0 = x.col(j);
-                let x1 = x.col(j + 1);
-                let x2 = x.col(j + 2);
-                let x3 = x.col(j + 3);
-                let [c0, c1, c2, c3] = &mut cols[j..j + 4] else { unreachable!() };
-                for i in r0..r1 {
-                    let lo = indptr[i];
-                    let hi = indptr[i + 1];
-                    let (mut s0, mut s1, mut s2, mut s3) = (S::ZERO, S::ZERO, S::ZERO, S::ZERO);
-                    for p in lo..hi {
-                        let c = indices[p] as usize;
-                        let v = values[p];
-                        s0 += v * x0[c];
-                        s1 += v * x1[c];
-                        s2 += v * x2[c];
-                        s3 += v * x3[c];
-                    }
-                    c0[i - r0] = s0;
-                    c1[i - r0] = s1;
-                    c2[i - r0] = s2;
-                    c3[i - r0] = s3;
-                }
-                j += 4;
-            }
-            if j + 1 < k {
-                let x0 = x.col(j);
-                let x1 = x.col(j + 1);
-                let [c0, c1] = &mut cols[j..j + 2] else { unreachable!() };
-                for i in r0..r1 {
-                    let lo = indptr[i];
-                    let hi = indptr[i + 1];
-                    let (mut s0, mut s1) = (S::ZERO, S::ZERO);
-                    for p in lo..hi {
-                        let c = indices[p] as usize;
-                        let v = values[p];
-                        s0 += v * x0[c];
-                        s1 += v * x1[c];
-                    }
-                    c0[i - r0] = s0;
-                    c1[i - r0] = s1;
-                }
-                j += 2;
-            }
-            if j < k {
-                let x0 = x.col(j);
-                let cj = &mut cols[j];
-                for i in r0..r1 {
-                    let lo = indptr[i];
-                    let hi = indptr[i + 1];
-                    let mut s0 = S::ZERO;
-                    for p in lo..hi {
-                        s0 += values[p] * x0[indices[p] as usize];
-                    }
-                    cj[i - r0] = s0;
-                }
-            }
+            spmm_rows(indptr, indices, values, &x, r0, r1, cols)
         });
     }
 
@@ -578,5 +713,77 @@ mod tests {
         assert!(Csr::from_parts(2, 2, vec![0, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_ok());
         assert!(Csr::from_parts(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 2.0]).is_err());
         assert!(Csr::from_parts(2, 2, vec![0, 1, 2], vec![0, 5], vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn generation_is_unique_per_construction_and_clone() {
+        let a = Csr::from_coo(&random_coo(10, 10, 30, 1)).unwrap();
+        let b = a.clone();
+        let c: Csr<f32> = a.cast();
+        let t = a.transpose();
+        assert_ne!(a.generation(), b.generation(), "clone must get a fresh stamp");
+        assert_ne!(a.generation(), c.generation());
+        assert_ne!(a.generation(), t.generation());
+        assert_ne!(b.generation(), t.generation());
+    }
+
+    #[test]
+    fn balanced_row_bounds_shape() {
+        // A skewed operand: first rows dense, rest nearly empty.
+        let rows = 640usize;
+        let mut indptr = vec![0usize; rows + 1];
+        for i in 0..rows {
+            let row_nnz = if i < 64 { 100 } else { 1 };
+            indptr[i + 1] = indptr[i] + row_nnz;
+        }
+        let bounds = balanced_row_bounds(&indptr, 4, 32);
+        assert_eq!(*bounds.first().unwrap(), 0);
+        assert_eq!(*bounds.last().unwrap(), rows);
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "{bounds:?}");
+        assert!(bounds[1..bounds.len() - 1].iter().all(|b| b % 32 == 0), "{bounds:?}");
+        // The heavy head must be split finer than a uniform partition
+        // would: the first band cannot own all 64 dense rows *and* a
+        // proportional share of the tail.
+        assert!(bounds[1] <= 64, "nnz balancing ignored the dense head: {bounds:?}");
+        // Degenerate: everything in one aligned block collapses.
+        let tiny = vec![0usize, 1, 2, 3];
+        assert_eq!(balanced_row_bounds(&tiny, 4, 32), vec![0, 3]);
+    }
+
+    #[test]
+    fn band_plan_caches_per_identity() {
+        let a = Csr::from_coo(&random_coo(512, 64, 8000, 17)).unwrap();
+        let p1 = band_plan(&a, 4).expect("plan for a 512-row operand");
+        let p2 = band_plan(&a, 4).expect("second lookup");
+        assert!(Arc::ptr_eq(&p1, &p2), "same identity + bands must hit the cache");
+        assert_eq!(*p1.last().unwrap(), 512);
+        // A clone is a distinct identity: same bounds values, distinct plan.
+        let b = a.clone();
+        let p3 = band_plan(&b, 4).expect("plan for the clone");
+        assert!(!Arc::ptr_eq(&p1, &p3));
+        assert_eq!(*p1, *p3, "clone has identical structure, so identical bounds");
+        // Different band count = different plan key.
+        if let Some(p4) = band_plan(&a, 2) {
+            assert_ne!(p1.len(), p4.len());
+        }
+    }
+
+    /// Repeat spmm calls (the cache-hit path) stay bitwise identical to
+    /// the first call, and match the dense reference.
+    #[test]
+    fn spmm_band_cache_repeat_calls_identical() {
+        let a = Csr::from_coo(&random_coo(700, 200, 20_000, 23)).unwrap();
+        let ad = a.to_dense();
+        let mut rng = Rng::new(24);
+        let x = Mat::randn(200, 6, &mut rng);
+        let mut y1 = Mat::zeros(700, 6);
+        a.spmm(x.as_ref(), y1.as_mut());
+        assert!(y1.max_abs_diff(&mat_nn(&ad, &x)) < 1e-12);
+        for _ in 0..3 {
+            let mut y2 = Mat::zeros(700, 6);
+            a.spmm(x.as_ref(), y2.as_mut());
+            let same = y1.data().iter().zip(y2.data()).all(|(p, q)| p.to_bits() == q.to_bits());
+            assert!(same, "repeat spmm changed bits");
+        }
     }
 }

@@ -28,19 +28,50 @@
 //! background build racing the foreground iteration) queue up rather than
 //! interleave bands.
 //!
-//! ## Band affinity (NUMA-style)
+//! ## Band affinity and worker pinning (NUMA model)
 //!
 //! Work is split *statically*: band `w` of a given `(n, threads)`
 //! partition is always the same index range and always runs on the same
 //! long-lived worker thread (band 0 on the caller). Repeated SpMM/Gram
 //! calls on the same operand therefore re-touch the same row bands on the
-//! same OS thread call after call — warm private caches today on
-//! uniform-memory hosts, and the natural hook for real NUMA node pinning
-//! later (give worker `w` a node and first-touch its bands). Static
-//! partitioning also makes every helper deterministic: a fixed
-//! `(n, num_threads, parallel_cutoff)` triple yields bitwise-identical
-//! results call after call (pinned by the determinism sweep in
-//! `tests/test_threaded_kernels.rs`).
+//! same OS thread call after call. Static partitioning also makes every
+//! helper deterministic: a fixed `(n, num_threads, parallel_cutoff)`
+//! triple yields bitwise-identical results call after call (pinned by
+//! the determinism sweep in `tests/test_threaded_kernels.rs`).
+//!
+//! Through PR 5 that affinity was *advisory*: the OS scheduler was free
+//! to migrate a worker, dragging its warm cache lines and — worse — its
+//! first-touched pages (the steady-state buffers of PR 4 are touched
+//! first by the band that owns them, so they are resident on that
+//! band's NUMA node) to a remote node. `TRUNKSVD_PIN` upgrades it to
+//! enforced placement, in three levels:
+//!
+//! * `off` (default) — no syscalls; scheduler placement, as before.
+//!   The default because CI runners and oversubscribed hosts degrade
+//!   badly when pinned threads fight unrelated load for one core.
+//! * `core` — worker `w` is pinned to exactly one CPU
+//!   (`sched_setaffinity`, Linux only; a no-op elsewhere). Bands are
+//!   dealt to the flattened, node-ordered CPU list round-robin, so
+//!   consecutive bands fill one NUMA node's cores before spilling to
+//!   the next: a band and the pages it first-touched stay node-local,
+//!   and the L1/L2 a band warmed stays *its* L1/L2.
+//! * `node` — worker `w` may float over all CPUs of its assigned NUMA
+//!   node (same node-ordered assignment, looser mask): keeps the
+//!   memory-locality benefit while tolerating core-level load spikes.
+//!
+//! Node topology comes from `/sys/devices/system/node/node*/cpulist`,
+//! with a single synthetic node (all CPUs) as the fallback on
+//! non-Linux / non-NUMA hosts. Only spawned workers are pinned; band 0
+//! runs on the submitting thread, which belongs to the caller and is
+//! never touched. Pin failures are silently ignored (the thread just
+//! stays unpinned) — pinning is a performance hint, never a
+//! correctness dependency.
+//!
+//! Alongside pinning, the band *partition* itself is cacheable:
+//! [`parallel_row_blocks_bounds`] accepts a precomputed bounds vector,
+//! which `sparse::csr` memoizes per `(operand identity, band count)` so
+//! repeat solves against the same matrix skip the nnz-balancing scan
+//! (see `csr::band_plan`).
 //!
 //! ## Serial fast path
 //!
@@ -84,6 +115,8 @@
 //!   (column groups of a column-major panel): dense GEMMs, scatter SpMMᵀ.
 //! * [`parallel_row_blocks`] — disjoint *row bands* of a column-major
 //!   panel: the gather SpMM kernels, where threads own output rows.
+//!   [`parallel_row_blocks_bounds`] is the caller-partitioned variant
+//!   (explicit, possibly nnz-balanced, row bounds).
 //! * [`parallel_reduce`] — map contiguous ranges to partials, fold in
 //!   band (= index) order: the row-tiled SYRK and the CSR histograms.
 //! * [`parallel_tasks`] — the low-level primitive under the others: run
@@ -168,6 +201,187 @@ pub fn parallel_cutoff() -> usize {
     })
 }
 
+// ---------------------------------------------------------------------
+// Worker pinning (TRUNKSVD_PIN): see the module docs for the model.
+// ---------------------------------------------------------------------
+
+/// Worker→CPU pinning policy (`TRUNKSVD_PIN`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PinLevel {
+    /// No pinning (default): scheduler placement.
+    Off,
+    /// Pin each worker to one CPU, node-ordered round-robin.
+    Core,
+    /// Pin each worker to all CPUs of its assigned NUMA node.
+    Node,
+}
+
+impl PinLevel {
+    /// Name used in reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            PinLevel::Off => "off",
+            PinLevel::Core => "core",
+            PinLevel::Node => "node",
+        }
+    }
+
+    /// Parse a `TRUNKSVD_PIN` value; unknown strings map to `None`
+    /// (treated as `Off` by [`pin_level`]).
+    pub fn parse(s: &str) -> Option<PinLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "0" | "none" => Some(PinLevel::Off),
+            "core" => Some(PinLevel::Core),
+            "node" => Some(PinLevel::Node),
+            _ => None,
+        }
+    }
+}
+
+/// The pinning policy for this process (`TRUNKSVD_PIN`, default `off`;
+/// resolved once — pinning happens at worker spawn, so a mid-process
+/// change could not be honored anyway).
+pub fn pin_level() -> PinLevel {
+    static LEVEL: OnceLock<PinLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        std::env::var("TRUNKSVD_PIN")
+            .ok()
+            .and_then(|v| PinLevel::parse(&v))
+            .unwrap_or(PinLevel::Off)
+    })
+}
+
+/// Host CPU topology: per-NUMA-node CPU id lists plus the flattened,
+/// node-ordered `(node, cpu)` sequence bands are dealt onto.
+pub struct Topology {
+    /// CPU ids per NUMA node, node-major (`nodes[n]` = node n's CPUs).
+    pub nodes: Vec<Vec<usize>>,
+    flat: Vec<(usize, usize)>,
+}
+
+impl Topology {
+    /// Number of NUMA nodes (>= 1; non-NUMA hosts report one node).
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Parse a sysfs cpulist (`"0-3,8,10-11"`) into CPU ids. Malformed
+/// fragments are skipped rather than failing the whole list.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = part.split_once('-') {
+            if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                for c in a..=b.min(a + 4096) {
+                    out.push(c);
+                }
+            }
+        } else if let Ok(c) = part.parse::<usize>() {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn detect_topology() -> Topology {
+    let mut nodes: Vec<Vec<usize>> = Vec::new();
+    #[cfg(target_os = "linux")]
+    for n in 0..MAX_WORKERS {
+        match std::fs::read_to_string(format!("/sys/devices/system/node/node{n}/cpulist")) {
+            Ok(s) => {
+                let cpus = parse_cpulist(&s);
+                // Memory-only nodes (no CPUs) exist; skip but keep going.
+                if !cpus.is_empty() {
+                    nodes.push(cpus);
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    if nodes.is_empty() {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        nodes.push((0..n).collect());
+    }
+    let mut flat = Vec::new();
+    for (ni, cpus) in nodes.iter().enumerate() {
+        for &c in cpus {
+            flat.push((ni, c));
+        }
+    }
+    Topology { nodes, flat }
+}
+
+/// The host topology, detected once.
+pub fn topology() -> &'static Topology {
+    static TOPO: OnceLock<Topology> = OnceLock::new();
+    TOPO.get_or_init(detect_topology)
+}
+
+#[cfg(target_os = "linux")]
+mod affinity {
+    // std already links libc on Linux, so a direct extern declaration
+    // gives us the syscall without a new crate dependency.
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+
+    /// Pin the calling thread to `cpus` (ids >= 1024 ignored). Returns
+    /// false when the mask is empty or the kernel rejects it; failure
+    /// leaves the thread unpinned, which is always safe.
+    pub fn pin_to_cpus(cpus: &[usize]) -> bool {
+        let mut mask = [0u64; 16]; // 1024-CPU mask
+        let mut any = false;
+        for &c in cpus {
+            if c < 1024 {
+                mask[c / 64] |= 1u64 << (c % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+        // SAFETY: pid 0 addresses the calling thread; the mask buffer
+        // outlives the call and the length matches.
+        unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod affinity {
+    /// Pinning is Linux-only; everywhere else this is a no-op.
+    pub fn pin_to_cpus(_cpus: &[usize]) -> bool {
+        false
+    }
+}
+
+/// Apply `TRUNKSVD_PIN` to worker `band` (1-based; band 0 is the
+/// submitting thread, which belongs to the caller and is never pinned).
+/// Bands map round-robin onto the flattened node-ordered CPU list, so
+/// consecutive bands pack one NUMA node before spilling to the next.
+fn pin_worker(band: usize) {
+    let level = pin_level();
+    if level == PinLevel::Off || band == 0 {
+        return;
+    }
+    let topo = topology();
+    if topo.flat.is_empty() {
+        return;
+    }
+    let (node, cpu) = topo.flat[(band - 1) % topo.flat.len()];
+    let _pinned = match level {
+        PinLevel::Off => return,
+        PinLevel::Core => affinity::pin_to_cpus(&[cpu]),
+        PinLevel::Node => affinity::pin_to_cpus(&topo.nodes[node]),
+    };
+    // Failure (cgroup-restricted mask, exotic kernel) is harmless: the
+    // worker runs unpinned exactly as under `off`.
+}
+
 thread_local! {
     /// True while this thread is executing a pool job band (worker or
     /// submitter). Nested entry-point calls check it and degrade to
@@ -244,6 +458,7 @@ fn global() -> &'static Pool {
 /// starts at the generation current when the worker was registered, so a
 /// job published immediately after spawn is observed exactly once.
 fn worker_loop(band: usize, mut seen: u64) {
+    pin_worker(band);
     let pool = global();
     loop {
         let job = {
@@ -676,6 +891,51 @@ pub fn parallel_row_blocks_work<T, F>(
     parallel_tasks(tasks, |_w, (lo, hi, mut cols)| body(lo, hi, &mut cols));
 }
 
+/// [`parallel_row_blocks`] with caller-supplied row bounds: a strictly
+/// increasing `0 = bounds[0] < … < bounds[last] = col_len` sequence,
+/// one band per consecutive pair. This is the entry point for cached
+/// (e.g. nnz-balanced) band plans — the caller has already decided the
+/// partition, so no work estimate or alignment applies here; pass a
+/// 2-entry bounds vector to force the serial path. Band `w` lands on
+/// the same worker for a fixed partition (band affinity), and serial
+/// fallbacks (single band, nested call, one configured thread) run the
+/// bands in index order on the calling thread.
+pub fn parallel_row_blocks_bounds<T, F>(data: &mut [T], col_len: usize, bounds: &[usize], body: F)
+where
+    T: Send,
+    F: Fn(usize, usize, &mut [&mut [T]]) + Sync,
+{
+    assert!(col_len > 0, "parallel_row_blocks_bounds: empty columns");
+    assert_eq!(data.len() % col_len, 0, "parallel_row_blocks_bounds: ragged panel");
+    assert!(
+        bounds.len() >= 2 && bounds[0] == 0 && *bounds.last().unwrap() == col_len,
+        "parallel_row_blocks_bounds: bounds must span [0, col_len]"
+    );
+    let n_cols = data.len() / col_len;
+    let nw = bounds.len() - 1;
+    if nw == 1 {
+        // Defer to the aligned helper's allocation-free serial path
+        // (work estimate 0 always plans one band).
+        parallel_row_blocks_work(data, col_len, 1, 0, body);
+        return;
+    }
+    let mut tasks = Vec::with_capacity(nw);
+    for w in 0..nw {
+        debug_assert!(bounds[w] < bounds[w + 1], "bounds must strictly increase");
+        tasks.push((bounds[w], bounds[w + 1], Vec::with_capacity(n_cols)));
+    }
+    for col in data.chunks_mut(col_len) {
+        let mut rest = col;
+        for task in tasks.iter_mut() {
+            let take = task.1 - task.0;
+            let (head, tail) = rest.split_at_mut(take);
+            task.2.push(head);
+            rest = tail;
+        }
+    }
+    parallel_tasks(tasks, |_w, (lo, hi, mut cols)| body(lo, hi, &mut cols));
+}
+
 /// PR 1's spawn-per-call dispatch (`std::thread::scope` on every call),
 /// kept only as the baseline arm of the `pool_dispatch_ns` microbench in
 /// `bench_blocks`. Not used by any kernel.
@@ -838,6 +1098,60 @@ mod tests {
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
         // Empty task list is a no-op.
         parallel_tasks(Vec::<usize>::new(), |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn pin_level_parse() {
+        assert_eq!(PinLevel::parse("off"), Some(PinLevel::Off));
+        assert_eq!(PinLevel::parse(" CORE "), Some(PinLevel::Core));
+        assert_eq!(PinLevel::parse("node"), Some(PinLevel::Node));
+        assert_eq!(PinLevel::parse("aggressive"), None);
+        assert_eq!(PinLevel::Node.name(), "node");
+        // The process default must resolve without panicking.
+        let _ = pin_level();
+    }
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3,8,10-11\n"), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("2-1,junk,7"), vec![7]); // bad fragments skipped
+    }
+
+    #[test]
+    fn topology_covers_at_least_one_cpu() {
+        let topo = topology();
+        assert!(topo.num_nodes() >= 1);
+        assert!(topo.nodes.iter().all(|n| !n.is_empty()));
+        assert!(!topo.flat.is_empty());
+        // Flat order is node-major: node indices are non-decreasing.
+        assert!(topo.flat.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn row_blocks_bounds_cover_panel() {
+        // Uneven explicit bounds: every element visited exactly once
+        // with correct row coordinates, same contract as the aligned
+        // helper.
+        let (rows, cols_n) = (103usize, 4usize);
+        for bounds in [vec![0usize, 103], vec![0, 7, 64, 103], vec![0, 1, 2, 3, 103]] {
+            let mut v = vec![0u64; rows * cols_n];
+            parallel_row_blocks_bounds(&mut v, rows, &bounds, |lo, hi, cols| {
+                assert_eq!(cols.len(), cols_n);
+                for (j, col) in cols.iter_mut().enumerate() {
+                    assert_eq!(col.len(), hi - lo);
+                    for (o, x) in col.iter_mut().enumerate() {
+                        *x += 1 + ((lo + o) * 10 + j) as u64;
+                    }
+                }
+            });
+            for j in 0..cols_n {
+                for i in 0..rows {
+                    assert_eq!(v[j * rows + i], 1 + (i * 10 + j) as u64, "({i},{j}) {bounds:?}");
+                }
+            }
+        }
     }
 
     #[test]

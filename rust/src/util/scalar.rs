@@ -69,6 +69,45 @@ pub trait Scalar:
     fn to_json(self) -> Json {
         Json::Num(self.to_f64())
     }
+
+    // SIMD microkernel dispatch (see [`crate::util::simd`]). These are
+    // the only vocabulary the hot kernels use; every implementation —
+    // scalar reference, AVX2, NEON — computes bitwise-identical results,
+    // so callers may treat the `TRUNKSVD_SIMD` level as a pure speed
+    // knob. The gathered forms take `u32` column indices (CSR layout);
+    // every index must be in-bounds for the right-hand slices.
+
+    /// `Σ x[i]·y[i]` in the canonical lane-blocked order.
+    fn simd_dot(x: &[Self], y: &[Self]) -> Self;
+    /// Two dots sharing the right-hand side: `(x0·y, x1·y)`.
+    fn simd_dot2(x0: &[Self], x1: &[Self], y: &[Self]) -> (Self, Self);
+    /// Four dots sharing the left-hand side: `(w·x0, …, w·x3)`.
+    #[allow(clippy::type_complexity)]
+    fn simd_dot4(
+        w: &[Self],
+        x0: &[Self],
+        x1: &[Self],
+        x2: &[Self],
+        x3: &[Self],
+    ) -> (Self, Self, Self, Self);
+    /// `Σ vals[p]·x[idx[p]]` (one CSR row × one dense column).
+    fn simd_gather_dot1(vals: &[Self], idx: &[u32], x: &[Self]) -> Self;
+    /// Gathered dot over two dense columns.
+    fn simd_gather_dot2(vals: &[Self], idx: &[u32], x0: &[Self], x1: &[Self]) -> (Self, Self);
+    /// Gathered dot over four dense columns (the SpMM register block).
+    #[allow(clippy::type_complexity)]
+    fn simd_gather_dot4(
+        vals: &[Self],
+        idx: &[u32],
+        x0: &[Self],
+        x1: &[Self],
+        x2: &[Self],
+        x3: &[Self],
+    ) -> (Self, Self, Self, Self);
+    /// `y += a·x` (elementwise, no FMA).
+    fn simd_axpy(a: Self, x: &[Self], y: &mut [Self]);
+    /// `x *= a` (elementwise).
+    fn simd_scal(a: Self, x: &mut [Self]);
 }
 
 impl Scalar for f64 {
@@ -109,6 +148,52 @@ impl Scalar for f64 {
     fn safe_sq_range() -> (Self, Self) {
         (1e-140, 1e140)
     }
+
+    #[inline]
+    fn simd_dot(x: &[Self], y: &[Self]) -> Self {
+        crate::util::simd::dot_f64(x, y)
+    }
+    #[inline]
+    fn simd_dot2(x0: &[Self], x1: &[Self], y: &[Self]) -> (Self, Self) {
+        crate::util::simd::dot2_f64(x0, x1, y)
+    }
+    #[inline]
+    fn simd_dot4(
+        w: &[Self],
+        x0: &[Self],
+        x1: &[Self],
+        x2: &[Self],
+        x3: &[Self],
+    ) -> (Self, Self, Self, Self) {
+        crate::util::simd::dot4_f64(w, x0, x1, x2, x3)
+    }
+    #[inline]
+    fn simd_gather_dot1(vals: &[Self], idx: &[u32], x: &[Self]) -> Self {
+        crate::util::simd::gather_dot1_f64(vals, idx, x)
+    }
+    #[inline]
+    fn simd_gather_dot2(vals: &[Self], idx: &[u32], x0: &[Self], x1: &[Self]) -> (Self, Self) {
+        crate::util::simd::gather_dot2_f64(vals, idx, x0, x1)
+    }
+    #[inline]
+    fn simd_gather_dot4(
+        vals: &[Self],
+        idx: &[u32],
+        x0: &[Self],
+        x1: &[Self],
+        x2: &[Self],
+        x3: &[Self],
+    ) -> (Self, Self, Self, Self) {
+        crate::util::simd::gather_dot4_f64(vals, idx, x0, x1, x2, x3)
+    }
+    #[inline]
+    fn simd_axpy(a: Self, x: &[Self], y: &mut [Self]) {
+        crate::util::simd::axpy_f64(a, x, y)
+    }
+    #[inline]
+    fn simd_scal(a: Self, x: &mut [Self]) {
+        crate::util::simd::scal_f64(a, x)
+    }
 }
 
 impl Scalar for f32 {
@@ -148,6 +233,52 @@ impl Scalar for f32 {
     #[inline]
     fn safe_sq_range() -> (Self, Self) {
         (1e-15, 1e15)
+    }
+
+    #[inline]
+    fn simd_dot(x: &[Self], y: &[Self]) -> Self {
+        crate::util::simd::dot_f32(x, y)
+    }
+    #[inline]
+    fn simd_dot2(x0: &[Self], x1: &[Self], y: &[Self]) -> (Self, Self) {
+        crate::util::simd::dot2_f32(x0, x1, y)
+    }
+    #[inline]
+    fn simd_dot4(
+        w: &[Self],
+        x0: &[Self],
+        x1: &[Self],
+        x2: &[Self],
+        x3: &[Self],
+    ) -> (Self, Self, Self, Self) {
+        crate::util::simd::dot4_f32(w, x0, x1, x2, x3)
+    }
+    #[inline]
+    fn simd_gather_dot1(vals: &[Self], idx: &[u32], x: &[Self]) -> Self {
+        crate::util::simd::gather_dot1_f32(vals, idx, x)
+    }
+    #[inline]
+    fn simd_gather_dot2(vals: &[Self], idx: &[u32], x0: &[Self], x1: &[Self]) -> (Self, Self) {
+        crate::util::simd::gather_dot2_f32(vals, idx, x0, x1)
+    }
+    #[inline]
+    fn simd_gather_dot4(
+        vals: &[Self],
+        idx: &[u32],
+        x0: &[Self],
+        x1: &[Self],
+        x2: &[Self],
+        x3: &[Self],
+    ) -> (Self, Self, Self, Self) {
+        crate::util::simd::gather_dot4_f32(vals, idx, x0, x1, x2, x3)
+    }
+    #[inline]
+    fn simd_axpy(a: Self, x: &[Self], y: &mut [Self]) {
+        crate::util::simd::axpy_f32(a, x, y)
+    }
+    #[inline]
+    fn simd_scal(a: Self, x: &mut [Self]) {
+        crate::util::simd::scal_f32(a, x)
     }
 }
 

@@ -1,0 +1,1443 @@
+//! Explicit-SIMD microkernel layer for the CPU backend's hot loops.
+//!
+//! The paper's building blocks (SpMM, SpMMᵀ, the Gram/SYRK inside
+//! CholeskyQR2) are bandwidth-bound; what the scalar code leaves on the
+//! table is *instruction* throughput in the register-blocked inner
+//! loops. This module provides the small fixed vocabulary those loops
+//! need — dot products over 1/2/4 right-hand columns, their gathered
+//! (indexed) forms for CSR rows, and the elementwise `axpy`/`scal` —
+//! as runtime-dispatched microkernels with three implementations:
+//!
+//! * a **scalar reference** (`reference`), written in a canonical
+//!   lane-blocked order (4 independent accumulator lanes for f64, 8 for
+//!   f32, no FMA, a fixed reduction tree);
+//! * **AVX2** (`x86_64`), whose vector accumulators and extract-halves
+//!   reductions reproduce the reference arithmetic *bitwise*;
+//! * **NEON** (`aarch64`), using register pairs to model the same 4/8
+//!   logical lanes and the same reduction tree, also bitwise-identical.
+//!
+//! Bitwise equality between `TRUNKSVD_SIMD=off` and every ISA path is a
+//! hard invariant (pinned by `tests/test_simd_kernels.rs`): the SIMD
+//! flag must never change a result, only its speed. That is why the
+//! kernels avoid FMA — fused multiply-add contracts the rounding step
+//! and would fork the bit patterns between paths.
+//!
+//! Dispatch: the active level is resolved once from `TRUNKSVD_SIMD`
+//! (`auto` | `off` | `avx2` | `neon`, default `auto` = best detected)
+//! and cached in a `OnceLock`; [`set_level`] installs a process-wide
+//! override so benches and tests can sweep levels in-process. Requesting
+//! an ISA the host lacks silently degrades to the scalar reference.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::util::scalar::Scalar;
+
+/// Active microkernel implementation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Scalar reference path (canonical lane-blocked arithmetic).
+    Off,
+    /// AVX2 256-bit path (x86_64).
+    Avx2,
+    /// NEON 128-bit-pair path (aarch64).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Name used in reports / `BENCH_kernels.json`.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Off => "off",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Parse a `TRUNKSVD_SIMD` value. `auto` (and anything unknown)
+    /// maps to `None`, meaning "use the detected best level".
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "scalar" | "0" => Some(SimdLevel::Off),
+            "avx2" => Some(SimdLevel::Avx2),
+            "neon" => Some(SimdLevel::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Best level supported by the running CPU, ignoring the environment
+/// and any [`set_level`] override.
+pub fn detected_level() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+        SimdLevel::Off
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        SimdLevel::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        SimdLevel::Off
+    }
+}
+
+/// Clamp a requested level to what the host can actually run.
+fn supported(requested: SimdLevel) -> SimdLevel {
+    match requested {
+        SimdLevel::Off => SimdLevel::Off,
+        SimdLevel::Avx2 => {
+            if detected_level() == SimdLevel::Avx2 {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Off
+            }
+        }
+        SimdLevel::Neon => {
+            if detected_level() == SimdLevel::Neon {
+                SimdLevel::Neon
+            } else {
+                SimdLevel::Off
+            }
+        }
+    }
+}
+
+/// `TRUNKSVD_SIMD` default, resolved once.
+fn env_level() -> SimdLevel {
+    static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+    *LEVEL.get_or_init(|| match std::env::var("TRUNKSVD_SIMD") {
+        Ok(v) => match SimdLevel::parse(&v) {
+            Some(l) => supported(l),
+            None => detected_level(), // "auto" / unknown
+        },
+        Err(_) => detected_level(),
+    })
+}
+
+/// Process-wide override installed by [`set_level`]:
+/// 0 = none (env default), 1 = Off, 2 = Avx2, 3 = Neon.
+static LEVEL_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Override the dispatch level for this process (benches/tests sweep
+/// SIMD-off vs SIMD-on in-process with this). `None` restores the
+/// `TRUNKSVD_SIMD` environment default. Requests for an unsupported ISA
+/// degrade to `Off`.
+pub fn set_level(level: Option<SimdLevel>) {
+    let code = match level.map(supported) {
+        None => 0,
+        Some(SimdLevel::Off) => 1,
+        Some(SimdLevel::Avx2) => 2,
+        Some(SimdLevel::Neon) => 3,
+    };
+    LEVEL_OVERRIDE.store(code, Ordering::Relaxed);
+}
+
+/// The level kernels dispatch on right now.
+pub fn level() -> SimdLevel {
+    match LEVEL_OVERRIDE.load(Ordering::Relaxed) {
+        1 => SimdLevel::Off,
+        2 => SimdLevel::Avx2,
+        3 => SimdLevel::Neon,
+        _ => env_level(),
+    }
+}
+
+/// AVX2's 32-bit gather indices are signed: fall back to the reference
+/// path when a right-hand operand is long enough for u32 → i32
+/// reinterpretation to go negative.
+#[cfg(target_arch = "x86_64")]
+const GATHER_MAX_LEN: usize = i32::MAX as usize;
+
+// ---------------------------------------------------------------------
+// Scalar reference: the canonical arithmetic every ISA must reproduce.
+// ---------------------------------------------------------------------
+
+/// Canonical lane-blocked scalar kernels. `L` is the logical lane count
+/// (4 for f64, 8 for f32 — one 256-bit register). The reduction tree is
+/// "fold the high half onto the low half, repeatedly", which is exactly
+/// what the AVX2 extract/NEON pairwise reductions compute; the tail is
+/// always *reduce lanes first, then accumulate the remainder serially*.
+pub mod reference {
+    use super::Scalar;
+
+    #[inline(always)]
+    #[allow(clippy::assign_op_pattern)] // `buf[l] = buf[l] + buf[l + h]` mirrors the ISA tree
+    fn reduce<S: Scalar, const L: usize>(acc: [S; L]) -> S {
+        let mut buf = acc;
+        let mut h = L;
+        while h > 1 {
+            h /= 2;
+            for l in 0..h {
+                buf[l] = buf[l] + buf[l + h];
+            }
+        }
+        buf[0]
+    }
+
+    #[inline]
+    pub fn dot<S: Scalar, const L: usize>(x: &[S], y: &[S]) -> S {
+        let n = x.len();
+        debug_assert_eq!(n, y.len());
+        let mut acc = [S::ZERO; L];
+        let nl = n - n % L;
+        let mut i = 0;
+        while i < nl {
+            for l in 0..L {
+                acc[l] += x[i + l] * y[i + l];
+            }
+            i += L;
+        }
+        let mut s = reduce(acc);
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[inline]
+    pub fn dot2<S: Scalar, const L: usize>(x0: &[S], x1: &[S], y: &[S]) -> (S, S) {
+        let n = y.len();
+        debug_assert!(x0.len() == n && x1.len() == n);
+        let mut a0 = [S::ZERO; L];
+        let mut a1 = [S::ZERO; L];
+        let nl = n - n % L;
+        let mut i = 0;
+        while i < nl {
+            for l in 0..L {
+                let v = y[i + l];
+                a0[l] += x0[i + l] * v;
+                a1[l] += x1[i + l] * v;
+            }
+            i += L;
+        }
+        let mut s0 = reduce(a0);
+        let mut s1 = reduce(a1);
+        while i < n {
+            let v = y[i];
+            s0 += x0[i] * v;
+            s1 += x1[i] * v;
+            i += 1;
+        }
+        (s0, s1)
+    }
+
+    #[inline]
+    #[allow(clippy::type_complexity)]
+    pub fn dot4<S: Scalar, const L: usize>(
+        w: &[S],
+        x0: &[S],
+        x1: &[S],
+        x2: &[S],
+        x3: &[S],
+    ) -> (S, S, S, S) {
+        let n = w.len();
+        debug_assert!(x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n);
+        let mut a0 = [S::ZERO; L];
+        let mut a1 = [S::ZERO; L];
+        let mut a2 = [S::ZERO; L];
+        let mut a3 = [S::ZERO; L];
+        let nl = n - n % L;
+        let mut i = 0;
+        while i < nl {
+            for l in 0..L {
+                let v = w[i + l];
+                a0[l] += v * x0[i + l];
+                a1[l] += v * x1[i + l];
+                a2[l] += v * x2[i + l];
+                a3[l] += v * x3[i + l];
+            }
+            i += L;
+        }
+        let mut s0 = reduce(a0);
+        let mut s1 = reduce(a1);
+        let mut s2 = reduce(a2);
+        let mut s3 = reduce(a3);
+        while i < n {
+            let v = w[i];
+            s0 += v * x0[i];
+            s1 += v * x1[i];
+            s2 += v * x2[i];
+            s3 += v * x3[i];
+            i += 1;
+        }
+        (s0, s1, s2, s3)
+    }
+
+    #[inline]
+    pub fn gather_dot1<S: Scalar, const L: usize>(vals: &[S], idx: &[u32], x: &[S]) -> S {
+        let n = vals.len();
+        debug_assert_eq!(n, idx.len());
+        let mut acc = [S::ZERO; L];
+        let nl = n - n % L;
+        let mut i = 0;
+        while i < nl {
+            for l in 0..L {
+                acc[l] += vals[i + l] * x[idx[i + l] as usize];
+            }
+            i += L;
+        }
+        let mut s = reduce(acc);
+        while i < n {
+            s += vals[i] * x[idx[i] as usize];
+            i += 1;
+        }
+        s
+    }
+
+    #[inline]
+    pub fn gather_dot2<S: Scalar, const L: usize>(
+        vals: &[S],
+        idx: &[u32],
+        x0: &[S],
+        x1: &[S],
+    ) -> (S, S) {
+        let n = vals.len();
+        debug_assert_eq!(n, idx.len());
+        let mut a0 = [S::ZERO; L];
+        let mut a1 = [S::ZERO; L];
+        let nl = n - n % L;
+        let mut i = 0;
+        while i < nl {
+            for l in 0..L {
+                let c = idx[i + l] as usize;
+                let v = vals[i + l];
+                a0[l] += v * x0[c];
+                a1[l] += v * x1[c];
+            }
+            i += L;
+        }
+        let mut s0 = reduce(a0);
+        let mut s1 = reduce(a1);
+        while i < n {
+            let c = idx[i] as usize;
+            let v = vals[i];
+            s0 += v * x0[c];
+            s1 += v * x1[c];
+            i += 1;
+        }
+        (s0, s1)
+    }
+
+    #[inline]
+    #[allow(clippy::type_complexity)]
+    pub fn gather_dot4<S: Scalar, const L: usize>(
+        vals: &[S],
+        idx: &[u32],
+        x0: &[S],
+        x1: &[S],
+        x2: &[S],
+        x3: &[S],
+    ) -> (S, S, S, S) {
+        let n = vals.len();
+        debug_assert_eq!(n, idx.len());
+        let mut a0 = [S::ZERO; L];
+        let mut a1 = [S::ZERO; L];
+        let mut a2 = [S::ZERO; L];
+        let mut a3 = [S::ZERO; L];
+        let nl = n - n % L;
+        let mut i = 0;
+        while i < nl {
+            for l in 0..L {
+                let c = idx[i + l] as usize;
+                let v = vals[i + l];
+                a0[l] += v * x0[c];
+                a1[l] += v * x1[c];
+                a2[l] += v * x2[c];
+                a3[l] += v * x3[c];
+            }
+            i += L;
+        }
+        let mut s0 = reduce(a0);
+        let mut s1 = reduce(a1);
+        let mut s2 = reduce(a2);
+        let mut s3 = reduce(a3);
+        while i < n {
+            let c = idx[i] as usize;
+            let v = vals[i];
+            s0 += v * x0[c];
+            s1 += v * x1[c];
+            s2 += v * x2[c];
+            s3 += v * x3[c];
+            i += 1;
+        }
+        (s0, s1, s2, s3)
+    }
+
+    /// `y += a·x`. Elementwise (no reduction): any vector width computes
+    /// identical bits, so this one form serves as reference for every
+    /// ISA (given no FMA).
+    #[inline]
+    pub fn axpy<S: Scalar>(a: S, x: &[S], y: &mut [S]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+            *yi += a * xi;
+        }
+    }
+
+    /// `x *= a`. Elementwise, like [`axpy`].
+    #[inline]
+    pub fn scal<S: Scalar>(a: S, x: &mut [S]) {
+        for xi in x.iter_mut() {
+            *xi *= a;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2 (x86_64): 256-bit registers = 4×f64 / 8×f32 lanes.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Reduce 4 f64 lanes as `(a0+a2)+(a1+a3)` — the reference tree.
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers are `target_feature(avx2)` fns).
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce_pd(acc: __m256d) -> f64 {
+        let lo = _mm256_castpd256_pd128(acc); // [a0, a1]
+        let hi = _mm256_extractf128_pd(acc, 1); // [a2, a3]
+        let s = _mm_add_pd(lo, hi); // [a0+a2, a1+a3]
+        _mm_cvtsd_f64(_mm_add_sd(s, _mm_unpackhi_pd(s, s)))
+    }
+
+    /// Reduce 8 f32 lanes as `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7))`.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce_ps(acc: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(acc); // [a0..a3]
+        let hi = _mm256_extractf128_ps(acc, 1); // [a4..a7]
+        let s = _mm_add_ps(lo, hi); // [a0+a4, a1+a5, a2+a6, a3+a7]
+        let s2 = _mm_add_ps(s, _mm_movehl_ps(s, s)); // lane0 = (a0+a4)+(a2+a6), lane1 = (a1+a5)+(a3+a7)
+        _mm_cvtss_f32(_mm_add_ss(s2, _mm_movehdup_ps(s2)))
+    }
+
+    /// # Safety
+    /// Requires AVX2; `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f64(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len();
+        let nl = n - n % 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < nl {
+            let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+            let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(vx, vy));
+            i += 4;
+        }
+        let mut s = reduce_pd(acc);
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires AVX2; `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len();
+        let nl = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < nl {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vx, vy));
+            i += 8;
+        }
+        let mut s = reduce_ps(acc);
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Requires AVX2; all slices the same length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot2_f64(x0: &[f64], x1: &[f64], y: &[f64]) -> (f64, f64) {
+        let n = y.len();
+        let nl = n - n % 4;
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < nl {
+            let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+            a0 = _mm256_add_pd(a0, _mm256_mul_pd(_mm256_loadu_pd(x0.as_ptr().add(i)), vy));
+            a1 = _mm256_add_pd(a1, _mm256_mul_pd(_mm256_loadu_pd(x1.as_ptr().add(i)), vy));
+            i += 4;
+        }
+        let mut s0 = reduce_pd(a0);
+        let mut s1 = reduce_pd(a1);
+        while i < n {
+            let v = y[i];
+            s0 += x0[i] * v;
+            s1 += x1[i] * v;
+            i += 1;
+        }
+        (s0, s1)
+    }
+
+    /// # Safety
+    /// Requires AVX2; all slices the same length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot2_f32(x0: &[f32], x1: &[f32], y: &[f32]) -> (f32, f32) {
+        let n = y.len();
+        let nl = n - n % 8;
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < nl {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(_mm256_loadu_ps(x0.as_ptr().add(i)), vy));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(_mm256_loadu_ps(x1.as_ptr().add(i)), vy));
+            i += 8;
+        }
+        let mut s0 = reduce_ps(a0);
+        let mut s1 = reduce_ps(a1);
+        while i < n {
+            let v = y[i];
+            s0 += x0[i] * v;
+            s1 += x1[i] * v;
+            i += 1;
+        }
+        (s0, s1)
+    }
+
+    /// # Safety
+    /// Requires AVX2; all slices the same length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4_f64(
+        w: &[f64],
+        x0: &[f64],
+        x1: &[f64],
+        x2: &[f64],
+        x3: &[f64],
+    ) -> (f64, f64, f64, f64) {
+        let n = w.len();
+        let nl = n - n % 4;
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut a2 = _mm256_setzero_pd();
+        let mut a3 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < nl {
+            let vw = _mm256_loadu_pd(w.as_ptr().add(i));
+            a0 = _mm256_add_pd(a0, _mm256_mul_pd(vw, _mm256_loadu_pd(x0.as_ptr().add(i))));
+            a1 = _mm256_add_pd(a1, _mm256_mul_pd(vw, _mm256_loadu_pd(x1.as_ptr().add(i))));
+            a2 = _mm256_add_pd(a2, _mm256_mul_pd(vw, _mm256_loadu_pd(x2.as_ptr().add(i))));
+            a3 = _mm256_add_pd(a3, _mm256_mul_pd(vw, _mm256_loadu_pd(x3.as_ptr().add(i))));
+            i += 4;
+        }
+        let mut s0 = reduce_pd(a0);
+        let mut s1 = reduce_pd(a1);
+        let mut s2 = reduce_pd(a2);
+        let mut s3 = reduce_pd(a3);
+        while i < n {
+            let v = w[i];
+            s0 += v * x0[i];
+            s1 += v * x1[i];
+            s2 += v * x2[i];
+            s3 += v * x3[i];
+            i += 1;
+        }
+        (s0, s1, s2, s3)
+    }
+
+    /// # Safety
+    /// Requires AVX2; all slices the same length.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4_f32(
+        w: &[f32],
+        x0: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+    ) -> (f32, f32, f32, f32) {
+        let n = w.len();
+        let nl = n - n % 8;
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < nl {
+            let vw = _mm256_loadu_ps(w.as_ptr().add(i));
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(vw, _mm256_loadu_ps(x0.as_ptr().add(i))));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(vw, _mm256_loadu_ps(x1.as_ptr().add(i))));
+            a2 = _mm256_add_ps(a2, _mm256_mul_ps(vw, _mm256_loadu_ps(x2.as_ptr().add(i))));
+            a3 = _mm256_add_ps(a3, _mm256_mul_ps(vw, _mm256_loadu_ps(x3.as_ptr().add(i))));
+            i += 8;
+        }
+        let mut s0 = reduce_ps(a0);
+        let mut s1 = reduce_ps(a1);
+        let mut s2 = reduce_ps(a2);
+        let mut s3 = reduce_ps(a3);
+        while i < n {
+            let v = w[i];
+            s0 += v * x0[i];
+            s1 += v * x1[i];
+            s2 += v * x2[i];
+            s3 += v * x3[i];
+            i += 1;
+        }
+        (s0, s1, s2, s3)
+    }
+
+    /// # Safety
+    /// Requires AVX2; `vals.len() == idx.len()`, every index in-bounds
+    /// for `x`, and `x.len() <= i32::MAX` (checked by the dispatcher).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_dot1_f64(vals: &[f64], idx: &[u32], x: &[f64]) -> f64 {
+        let n = vals.len();
+        let nl = n - n % 4;
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < nl {
+            let vv = _mm256_loadu_pd(vals.as_ptr().add(i));
+            let vi = _mm_loadu_si128(idx.as_ptr().add(i) as *const __m128i);
+            let g = _mm256_i32gather_pd::<8>(x.as_ptr(), vi);
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(vv, g));
+            i += 4;
+        }
+        let mut s = reduce_pd(acc);
+        while i < n {
+            s += vals[i] * x[idx[i] as usize];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Same contract as [`gather_dot1_f64`], for f32 / 8 lanes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_dot1_f32(vals: &[f32], idx: &[u32], x: &[f32]) -> f32 {
+        let n = vals.len();
+        let nl = n - n % 8;
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < nl {
+            let vv = _mm256_loadu_ps(vals.as_ptr().add(i));
+            let vi = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+            let g = _mm256_i32gather_ps::<4>(x.as_ptr(), vi);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vv, g));
+            i += 8;
+        }
+        let mut s = reduce_ps(acc);
+        while i < n {
+            s += vals[i] * x[idx[i] as usize];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Same contract as [`gather_dot1_f64`], over two right-hand columns.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_dot2_f64(
+        vals: &[f64],
+        idx: &[u32],
+        x0: &[f64],
+        x1: &[f64],
+    ) -> (f64, f64) {
+        let n = vals.len();
+        let nl = n - n % 4;
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < nl {
+            let vv = _mm256_loadu_pd(vals.as_ptr().add(i));
+            let vi = _mm_loadu_si128(idx.as_ptr().add(i) as *const __m128i);
+            a0 = _mm256_add_pd(a0, _mm256_mul_pd(vv, _mm256_i32gather_pd::<8>(x0.as_ptr(), vi)));
+            a1 = _mm256_add_pd(a1, _mm256_mul_pd(vv, _mm256_i32gather_pd::<8>(x1.as_ptr(), vi)));
+            i += 4;
+        }
+        let mut s0 = reduce_pd(a0);
+        let mut s1 = reduce_pd(a1);
+        while i < n {
+            let c = idx[i] as usize;
+            let v = vals[i];
+            s0 += v * x0[c];
+            s1 += v * x1[c];
+            i += 1;
+        }
+        (s0, s1)
+    }
+
+    /// # Safety
+    /// Same contract as [`gather_dot1_f64`], for f32 over two columns.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_dot2_f32(
+        vals: &[f32],
+        idx: &[u32],
+        x0: &[f32],
+        x1: &[f32],
+    ) -> (f32, f32) {
+        let n = vals.len();
+        let nl = n - n % 8;
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < nl {
+            let vv = _mm256_loadu_ps(vals.as_ptr().add(i));
+            let vi = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(vv, _mm256_i32gather_ps::<4>(x0.as_ptr(), vi)));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(vv, _mm256_i32gather_ps::<4>(x1.as_ptr(), vi)));
+            i += 8;
+        }
+        let mut s0 = reduce_ps(a0);
+        let mut s1 = reduce_ps(a1);
+        while i < n {
+            let c = idx[i] as usize;
+            let v = vals[i];
+            s0 += v * x0[c];
+            s1 += v * x1[c];
+            i += 1;
+        }
+        (s0, s1)
+    }
+
+    /// # Safety
+    /// Same contract as [`gather_dot1_f64`], over four right-hand columns.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_dot4_f64(
+        vals: &[f64],
+        idx: &[u32],
+        x0: &[f64],
+        x1: &[f64],
+        x2: &[f64],
+        x3: &[f64],
+    ) -> (f64, f64, f64, f64) {
+        let n = vals.len();
+        let nl = n - n % 4;
+        let mut a0 = _mm256_setzero_pd();
+        let mut a1 = _mm256_setzero_pd();
+        let mut a2 = _mm256_setzero_pd();
+        let mut a3 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i < nl {
+            let vv = _mm256_loadu_pd(vals.as_ptr().add(i));
+            let vi = _mm_loadu_si128(idx.as_ptr().add(i) as *const __m128i);
+            a0 = _mm256_add_pd(a0, _mm256_mul_pd(vv, _mm256_i32gather_pd::<8>(x0.as_ptr(), vi)));
+            a1 = _mm256_add_pd(a1, _mm256_mul_pd(vv, _mm256_i32gather_pd::<8>(x1.as_ptr(), vi)));
+            a2 = _mm256_add_pd(a2, _mm256_mul_pd(vv, _mm256_i32gather_pd::<8>(x2.as_ptr(), vi)));
+            a3 = _mm256_add_pd(a3, _mm256_mul_pd(vv, _mm256_i32gather_pd::<8>(x3.as_ptr(), vi)));
+            i += 4;
+        }
+        let mut s0 = reduce_pd(a0);
+        let mut s1 = reduce_pd(a1);
+        let mut s2 = reduce_pd(a2);
+        let mut s3 = reduce_pd(a3);
+        while i < n {
+            let c = idx[i] as usize;
+            let v = vals[i];
+            s0 += v * x0[c];
+            s1 += v * x1[c];
+            s2 += v * x2[c];
+            s3 += v * x3[c];
+            i += 1;
+        }
+        (s0, s1, s2, s3)
+    }
+
+    /// # Safety
+    /// Same contract as [`gather_dot1_f64`], for f32 over four columns.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_dot4_f32(
+        vals: &[f32],
+        idx: &[u32],
+        x0: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+    ) -> (f32, f32, f32, f32) {
+        let n = vals.len();
+        let nl = n - n % 8;
+        let mut a0 = _mm256_setzero_ps();
+        let mut a1 = _mm256_setzero_ps();
+        let mut a2 = _mm256_setzero_ps();
+        let mut a3 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < nl {
+            let vv = _mm256_loadu_ps(vals.as_ptr().add(i));
+            let vi = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+            a0 = _mm256_add_ps(a0, _mm256_mul_ps(vv, _mm256_i32gather_ps::<4>(x0.as_ptr(), vi)));
+            a1 = _mm256_add_ps(a1, _mm256_mul_ps(vv, _mm256_i32gather_ps::<4>(x1.as_ptr(), vi)));
+            a2 = _mm256_add_ps(a2, _mm256_mul_ps(vv, _mm256_i32gather_ps::<4>(x2.as_ptr(), vi)));
+            a3 = _mm256_add_ps(a3, _mm256_mul_ps(vv, _mm256_i32gather_ps::<4>(x3.as_ptr(), vi)));
+            i += 8;
+        }
+        let mut s0 = reduce_ps(a0);
+        let mut s1 = reduce_ps(a1);
+        let mut s2 = reduce_ps(a2);
+        let mut s3 = reduce_ps(a3);
+        while i < n {
+            let c = idx[i] as usize;
+            let v = vals[i];
+            s0 += v * x0[c];
+            s1 += v * x1[c];
+            s2 += v * x2[c];
+            s3 += v * x3[c];
+            i += 1;
+        }
+        (s0, s1, s2, s3)
+    }
+
+    /// # Safety
+    /// Requires AVX2; `x.len() == y.len()`. No FMA, so bitwise equal to
+    /// the scalar form per element.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f64(a: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let nl = n - n % 4;
+        let va = _mm256_set1_pd(a);
+        let mut i = 0;
+        while i < nl {
+            let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+            let vy = _mm256_loadu_pd(y.as_ptr().add(i));
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2; `x.len() == y.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let nl = n - n % 8;
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i < nl {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+            i += 8;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scal_f64(a: f64, x: &mut [f64]) {
+        let n = x.len();
+        let nl = n - n % 4;
+        let va = _mm256_set1_pd(a);
+        let mut i = 0;
+        while i < nl {
+            let vx = _mm256_loadu_pd(x.as_ptr().add(i));
+            _mm256_storeu_pd(x.as_mut_ptr().add(i), _mm256_mul_pd(vx, va));
+            i += 4;
+        }
+        while i < n {
+            x[i] *= a;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scal_f32(a: f32, x: &mut [f32]) {
+        let n = x.len();
+        let nl = n - n % 8;
+        let va = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i < nl {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), _mm256_mul_ps(vx, va));
+            i += 8;
+        }
+        while i < n {
+            x[i] *= a;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON (aarch64): 128-bit register *pairs* model the same 4 f64 / 8 f32
+// logical lanes, so the reductions land on the identical tree. NEON has
+// no hardware gather; the gathered forms use the scalar reference,
+// which is bitwise-identical by construction.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// # Safety
+    /// `x.len() == y.len()`. NEON is baseline on aarch64.
+    pub unsafe fn dot_f64(x: &[f64], y: &[f64]) -> f64 {
+        let n = x.len();
+        let nl = n - n % 4;
+        let mut a01 = vdupq_n_f64(0.0); // lanes 0,1
+        let mut a23 = vdupq_n_f64(0.0); // lanes 2,3
+        let mut i = 0;
+        while i < nl {
+            let x01 = vld1q_f64(x.as_ptr().add(i));
+            let x23 = vld1q_f64(x.as_ptr().add(i + 2));
+            let y01 = vld1q_f64(y.as_ptr().add(i));
+            let y23 = vld1q_f64(y.as_ptr().add(i + 2));
+            a01 = vaddq_f64(a01, vmulq_f64(x01, y01));
+            a23 = vaddq_f64(a23, vmulq_f64(x23, y23));
+            i += 4;
+        }
+        // [a0+a2, a1+a3] then lane0 + lane1: the reference tree.
+        let p = vaddq_f64(a01, a23);
+        let mut s = vgetq_lane_f64::<0>(p) + vgetq_lane_f64::<1>(p);
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// `x.len() == y.len()`.
+    pub unsafe fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len();
+        let nl = n - n % 8;
+        let mut a03 = vdupq_n_f32(0.0); // lanes 0..3
+        let mut a47 = vdupq_n_f32(0.0); // lanes 4..7
+        let mut i = 0;
+        while i < nl {
+            let x03 = vld1q_f32(x.as_ptr().add(i));
+            let x47 = vld1q_f32(x.as_ptr().add(i + 4));
+            let y03 = vld1q_f32(y.as_ptr().add(i));
+            let y47 = vld1q_f32(y.as_ptr().add(i + 4));
+            a03 = vaddq_f32(a03, vmulq_f32(x03, y03));
+            a47 = vaddq_f32(a47, vmulq_f32(x47, y47));
+            i += 8;
+        }
+        // [a0+a4, a1+a5, a2+a6, a3+a7], fold high pair onto low pair,
+        // then lane0 + lane1: the reference tree.
+        let q = vaddq_f32(a03, a47);
+        let d = vadd_f32(vget_low_f32(q), vget_high_f32(q));
+        let mut s = vget_lane_f32::<0>(d) + vget_lane_f32::<1>(d);
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// All slices the same length.
+    pub unsafe fn dot2_f64(x0: &[f64], x1: &[f64], y: &[f64]) -> (f64, f64) {
+        let n = y.len();
+        let nl = n - n % 4;
+        let mut a0_01 = vdupq_n_f64(0.0);
+        let mut a0_23 = vdupq_n_f64(0.0);
+        let mut a1_01 = vdupq_n_f64(0.0);
+        let mut a1_23 = vdupq_n_f64(0.0);
+        let mut i = 0;
+        while i < nl {
+            let y01 = vld1q_f64(y.as_ptr().add(i));
+            let y23 = vld1q_f64(y.as_ptr().add(i + 2));
+            a0_01 = vaddq_f64(a0_01, vmulq_f64(vld1q_f64(x0.as_ptr().add(i)), y01));
+            a0_23 = vaddq_f64(a0_23, vmulq_f64(vld1q_f64(x0.as_ptr().add(i + 2)), y23));
+            a1_01 = vaddq_f64(a1_01, vmulq_f64(vld1q_f64(x1.as_ptr().add(i)), y01));
+            a1_23 = vaddq_f64(a1_23, vmulq_f64(vld1q_f64(x1.as_ptr().add(i + 2)), y23));
+            i += 4;
+        }
+        let p0 = vaddq_f64(a0_01, a0_23);
+        let p1 = vaddq_f64(a1_01, a1_23);
+        let mut s0 = vgetq_lane_f64::<0>(p0) + vgetq_lane_f64::<1>(p0);
+        let mut s1 = vgetq_lane_f64::<0>(p1) + vgetq_lane_f64::<1>(p1);
+        while i < n {
+            let v = y[i];
+            s0 += x0[i] * v;
+            s1 += x1[i] * v;
+            i += 1;
+        }
+        (s0, s1)
+    }
+
+    /// # Safety
+    /// All slices the same length.
+    pub unsafe fn dot2_f32(x0: &[f32], x1: &[f32], y: &[f32]) -> (f32, f32) {
+        let n = y.len();
+        let nl = n - n % 8;
+        let mut a0_03 = vdupq_n_f32(0.0);
+        let mut a0_47 = vdupq_n_f32(0.0);
+        let mut a1_03 = vdupq_n_f32(0.0);
+        let mut a1_47 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i < nl {
+            let y03 = vld1q_f32(y.as_ptr().add(i));
+            let y47 = vld1q_f32(y.as_ptr().add(i + 4));
+            a0_03 = vaddq_f32(a0_03, vmulq_f32(vld1q_f32(x0.as_ptr().add(i)), y03));
+            a0_47 = vaddq_f32(a0_47, vmulq_f32(vld1q_f32(x0.as_ptr().add(i + 4)), y47));
+            a1_03 = vaddq_f32(a1_03, vmulq_f32(vld1q_f32(x1.as_ptr().add(i)), y03));
+            a1_47 = vaddq_f32(a1_47, vmulq_f32(vld1q_f32(x1.as_ptr().add(i + 4)), y47));
+            i += 8;
+        }
+        let q0 = vaddq_f32(a0_03, a0_47);
+        let q1 = vaddq_f32(a1_03, a1_47);
+        let d0 = vadd_f32(vget_low_f32(q0), vget_high_f32(q0));
+        let d1 = vadd_f32(vget_low_f32(q1), vget_high_f32(q1));
+        let mut s0 = vget_lane_f32::<0>(d0) + vget_lane_f32::<1>(d0);
+        let mut s1 = vget_lane_f32::<0>(d1) + vget_lane_f32::<1>(d1);
+        while i < n {
+            let v = y[i];
+            s0 += x0[i] * v;
+            s1 += x1[i] * v;
+            i += 1;
+        }
+        (s0, s1)
+    }
+
+    /// # Safety
+    /// All slices the same length.
+    pub unsafe fn dot4_f64(
+        w: &[f64],
+        x0: &[f64],
+        x1: &[f64],
+        x2: &[f64],
+        x3: &[f64],
+    ) -> (f64, f64, f64, f64) {
+        let n = w.len();
+        let nl = n - n % 4;
+        let mut acc = [[vdupq_n_f64(0.0); 2]; 4];
+        let xs = [x0, x1, x2, x3];
+        let mut i = 0;
+        while i < nl {
+            let w01 = vld1q_f64(w.as_ptr().add(i));
+            let w23 = vld1q_f64(w.as_ptr().add(i + 2));
+            for (j, xj) in xs.iter().enumerate() {
+                acc[j][0] = vaddq_f64(acc[j][0], vmulq_f64(w01, vld1q_f64(xj.as_ptr().add(i))));
+                acc[j][1] =
+                    vaddq_f64(acc[j][1], vmulq_f64(w23, vld1q_f64(xj.as_ptr().add(i + 2))));
+            }
+            i += 4;
+        }
+        let mut s = [0.0f64; 4];
+        for j in 0..4 {
+            let p = vaddq_f64(acc[j][0], acc[j][1]);
+            s[j] = vgetq_lane_f64::<0>(p) + vgetq_lane_f64::<1>(p);
+        }
+        while i < n {
+            let v = w[i];
+            for (j, xj) in xs.iter().enumerate() {
+                s[j] += v * xj[i];
+            }
+            i += 1;
+        }
+        (s[0], s[1], s[2], s[3])
+    }
+
+    /// # Safety
+    /// All slices the same length.
+    pub unsafe fn dot4_f32(
+        w: &[f32],
+        x0: &[f32],
+        x1: &[f32],
+        x2: &[f32],
+        x3: &[f32],
+    ) -> (f32, f32, f32, f32) {
+        let n = w.len();
+        let nl = n - n % 8;
+        let mut acc = [[vdupq_n_f32(0.0); 2]; 4];
+        let xs = [x0, x1, x2, x3];
+        let mut i = 0;
+        while i < nl {
+            let w03 = vld1q_f32(w.as_ptr().add(i));
+            let w47 = vld1q_f32(w.as_ptr().add(i + 4));
+            for (j, xj) in xs.iter().enumerate() {
+                acc[j][0] = vaddq_f32(acc[j][0], vmulq_f32(w03, vld1q_f32(xj.as_ptr().add(i))));
+                acc[j][1] =
+                    vaddq_f32(acc[j][1], vmulq_f32(w47, vld1q_f32(xj.as_ptr().add(i + 4))));
+            }
+            i += 8;
+        }
+        let mut s = [0.0f32; 4];
+        for j in 0..4 {
+            let q = vaddq_f32(acc[j][0], acc[j][1]);
+            let d = vadd_f32(vget_low_f32(q), vget_high_f32(q));
+            s[j] = vget_lane_f32::<0>(d) + vget_lane_f32::<1>(d);
+        }
+        while i < n {
+            let v = w[i];
+            for (j, xj) in xs.iter().enumerate() {
+                s[j] += v * xj[i];
+            }
+            i += 1;
+        }
+        (s[0], s[1], s[2], s[3])
+    }
+
+    /// # Safety
+    /// `x.len() == y.len()`.
+    pub unsafe fn axpy_f64(a: f64, x: &[f64], y: &mut [f64]) {
+        let n = x.len();
+        let nl = n - n % 2;
+        let va = vdupq_n_f64(a);
+        let mut i = 0;
+        while i < nl {
+            let vx = vld1q_f64(x.as_ptr().add(i));
+            let vy = vld1q_f64(y.as_ptr().add(i));
+            vst1q_f64(y.as_mut_ptr().add(i), vaddq_f64(vy, vmulq_f64(va, vx)));
+            i += 2;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// `x.len() == y.len()`.
+    pub unsafe fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let nl = n - n % 4;
+        let va = vdupq_n_f32(a);
+        let mut i = 0;
+        while i < nl {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(vy, vmulq_f32(va, vx)));
+            i += 4;
+        }
+        while i < n {
+            y[i] += a * x[i];
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Plain elementwise scale.
+    pub unsafe fn scal_f64(a: f64, x: &mut [f64]) {
+        let n = x.len();
+        let nl = n - n % 2;
+        let va = vdupq_n_f64(a);
+        let mut i = 0;
+        while i < nl {
+            let vx = vld1q_f64(x.as_ptr().add(i));
+            vst1q_f64(x.as_mut_ptr().add(i), vmulq_f64(vx, va));
+            i += 2;
+        }
+        while i < n {
+            x[i] *= a;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// Plain elementwise scale.
+    pub unsafe fn scal_f32(a: f32, x: &mut [f32]) {
+        let n = x.len();
+        let nl = n - n % 4;
+        let va = vdupq_n_f32(a);
+        let mut i = 0;
+        while i < nl {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            vst1q_f32(x.as_mut_ptr().add(i), vmulq_f32(vx, va));
+            i += 4;
+        }
+        while i < n {
+            x[i] *= a;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatchers (one per concrete type × kernel). The `Scalar` trait's
+// `simd_*` methods forward here; generic kernel code never names an ISA.
+// ---------------------------------------------------------------------
+
+macro_rules! dispatch {
+    // Non-gather kernels: every level has an impl on its own arch.
+    ($lvl:expr => avx2 $ax:expr, neon $ne:expr, ref $rf:expr) => {{
+        match $lvl {
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => unsafe { $ax },
+            #[cfg(target_arch = "aarch64")]
+            SimdLevel::Neon => unsafe { $ne },
+            _ => $rf,
+        }
+    }};
+}
+
+pub fn dot_f64(x: &[f64], y: &[f64]) -> f64 {
+    dispatch!(level() => avx2 avx2::dot_f64(x, y), neon neon::dot_f64(x, y),
+              ref reference::dot::<f64, 4>(x, y))
+}
+
+pub fn dot_f32(x: &[f32], y: &[f32]) -> f32 {
+    dispatch!(level() => avx2 avx2::dot_f32(x, y), neon neon::dot_f32(x, y),
+              ref reference::dot::<f32, 8>(x, y))
+}
+
+pub fn dot2_f64(x0: &[f64], x1: &[f64], y: &[f64]) -> (f64, f64) {
+    dispatch!(level() => avx2 avx2::dot2_f64(x0, x1, y), neon neon::dot2_f64(x0, x1, y),
+              ref reference::dot2::<f64, 4>(x0, x1, y))
+}
+
+pub fn dot2_f32(x0: &[f32], x1: &[f32], y: &[f32]) -> (f32, f32) {
+    dispatch!(level() => avx2 avx2::dot2_f32(x0, x1, y), neon neon::dot2_f32(x0, x1, y),
+              ref reference::dot2::<f32, 8>(x0, x1, y))
+}
+
+pub fn dot4_f64(w: &[f64], x0: &[f64], x1: &[f64], x2: &[f64], x3: &[f64]) -> (f64, f64, f64, f64) {
+    dispatch!(level() => avx2 avx2::dot4_f64(w, x0, x1, x2, x3),
+              neon neon::dot4_f64(w, x0, x1, x2, x3),
+              ref reference::dot4::<f64, 4>(w, x0, x1, x2, x3))
+}
+
+pub fn dot4_f32(w: &[f32], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32]) -> (f32, f32, f32, f32) {
+    dispatch!(level() => avx2 avx2::dot4_f32(w, x0, x1, x2, x3),
+              neon neon::dot4_f32(w, x0, x1, x2, x3),
+              ref reference::dot4::<f32, 8>(w, x0, x1, x2, x3))
+}
+
+pub fn gather_dot1_f64(vals: &[f64], idx: &[u32], x: &[f64]) -> f64 {
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx2 && x.len() <= GATHER_MAX_LEN {
+        return unsafe { avx2::gather_dot1_f64(vals, idx, x) };
+    }
+    reference::gather_dot1::<f64, 4>(vals, idx, x)
+}
+
+pub fn gather_dot1_f32(vals: &[f32], idx: &[u32], x: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx2 && x.len() <= GATHER_MAX_LEN {
+        return unsafe { avx2::gather_dot1_f32(vals, idx, x) };
+    }
+    reference::gather_dot1::<f32, 8>(vals, idx, x)
+}
+
+pub fn gather_dot2_f64(vals: &[f64], idx: &[u32], x0: &[f64], x1: &[f64]) -> (f64, f64) {
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx2 && x0.len() <= GATHER_MAX_LEN {
+        return unsafe { avx2::gather_dot2_f64(vals, idx, x0, x1) };
+    }
+    reference::gather_dot2::<f64, 4>(vals, idx, x0, x1)
+}
+
+pub fn gather_dot2_f32(vals: &[f32], idx: &[u32], x0: &[f32], x1: &[f32]) -> (f32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx2 && x0.len() <= GATHER_MAX_LEN {
+        return unsafe { avx2::gather_dot2_f32(vals, idx, x0, x1) };
+    }
+    reference::gather_dot2::<f32, 8>(vals, idx, x0, x1)
+}
+
+pub fn gather_dot4_f64(
+    vals: &[f64],
+    idx: &[u32],
+    x0: &[f64],
+    x1: &[f64],
+    x2: &[f64],
+    x3: &[f64],
+) -> (f64, f64, f64, f64) {
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx2 && x0.len() <= GATHER_MAX_LEN {
+        return unsafe { avx2::gather_dot4_f64(vals, idx, x0, x1, x2, x3) };
+    }
+    reference::gather_dot4::<f64, 4>(vals, idx, x0, x1, x2, x3)
+}
+
+pub fn gather_dot4_f32(
+    vals: &[f32],
+    idx: &[u32],
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+) -> (f32, f32, f32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    if level() == SimdLevel::Avx2 && x0.len() <= GATHER_MAX_LEN {
+        return unsafe { avx2::gather_dot4_f32(vals, idx, x0, x1, x2, x3) };
+    }
+    reference::gather_dot4::<f32, 8>(vals, idx, x0, x1, x2, x3)
+}
+
+pub fn axpy_f64(a: f64, x: &[f64], y: &mut [f64]) {
+    dispatch!(level() => avx2 avx2::axpy_f64(a, x, y), neon neon::axpy_f64(a, x, y),
+              ref reference::axpy(a, x, y))
+}
+
+pub fn axpy_f32(a: f32, x: &[f32], y: &mut [f32]) {
+    dispatch!(level() => avx2 avx2::axpy_f32(a, x, y), neon neon::axpy_f32(a, x, y),
+              ref reference::axpy(a, x, y))
+}
+
+pub fn scal_f64(a: f64, x: &mut [f64]) {
+    dispatch!(level() => avx2 avx2::scal_f64(a, x), neon neon::scal_f64(a, x),
+              ref reference::scal(a, x))
+}
+
+pub fn scal_f32(a: f32, x: &mut [f32]) {
+    dispatch!(level() => avx2 avx2::scal_f32(a, x), neon neon::scal_f32(a, x),
+              ref reference::scal(a, x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::Mutex;
+
+    /// Tests that move the dispatch level serialize here and restore
+    /// the env default before returning.
+    static LEVEL_LOCK: Mutex<()> = Mutex::new(());
+
+    struct LevelReset;
+    impl Drop for LevelReset {
+        fn drop(&mut self) {
+            set_level(None);
+        }
+    }
+
+    fn randvec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn parse_and_names() {
+        assert_eq!(SimdLevel::parse("off"), Some(SimdLevel::Off));
+        assert_eq!(SimdLevel::parse(" AVX2 "), Some(SimdLevel::Avx2));
+        assert_eq!(SimdLevel::parse("neon"), Some(SimdLevel::Neon));
+        assert_eq!(SimdLevel::parse("auto"), None);
+        assert_eq!(SimdLevel::parse("bogus"), None);
+        assert_eq!(SimdLevel::Off.name(), "off");
+    }
+
+    #[test]
+    fn unsupported_isa_degrades_to_off() {
+        // At most one of the two ISAs is the host's; the other must
+        // clamp to Off instead of dispatching into missing intrinsics.
+        let foreign = match detected_level() {
+            SimdLevel::Neon => SimdLevel::Avx2,
+            _ => SimdLevel::Neon,
+        };
+        assert_eq!(super::supported(foreign), SimdLevel::Off);
+    }
+
+    /// Every kernel, every tail length, both dtypes: the detected ISA
+    /// path must be bitwise-identical to the scalar reference.
+    #[test]
+    fn isa_paths_match_reference_bitwise() {
+        let _guard = LEVEL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _reset = LevelReset;
+        let best = detected_level();
+        let cols = 512;
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 16, 31, 64, 129] {
+            let w = randvec(n, 1);
+            let xs: Vec<Vec<f64>> = (0..4).map(|j| randvec(n, 10 + j)).collect();
+            let big: Vec<Vec<f64>> = (0..4).map(|j| randvec(cols, 20 + j)).collect();
+            let mut rng = Rng::new(n as u64 + 99);
+            let idx: Vec<u32> = (0..n).map(|_| rng.below(cols) as u32).collect();
+            let wf: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+            let xf: Vec<Vec<f32>> =
+                xs.iter().map(|c| c.iter().map(|&v| v as f32).collect()).collect();
+            let bf: Vec<Vec<f32>> =
+                big.iter().map(|c| c.iter().map(|&v| v as f32).collect()).collect();
+
+            set_level(Some(SimdLevel::Off));
+            let d_off = dot_f64(&w, &xs[0]);
+            let d2_off = dot2_f64(&xs[0], &xs[1], &w);
+            let d4_off = dot4_f64(&w, &xs[0], &xs[1], &xs[2], &xs[3]);
+            let g1_off = gather_dot1_f64(&w, &idx, &big[0]);
+            let g2_off = gather_dot2_f64(&w, &idx, &big[0], &big[1]);
+            let g4_off = gather_dot4_f64(&w, &idx, &big[0], &big[1], &big[2], &big[3]);
+            let df_off = dot_f32(&wf, &xf[0]);
+            let d4f_off = dot4_f32(&wf, &xf[0], &xf[1], &xf[2], &xf[3]);
+            let g4f_off = gather_dot4_f32(&wf, &idx, &bf[0], &bf[1], &bf[2], &bf[3]);
+            let mut y_off = randvec(n, 500);
+            axpy_f64(0.37, &w, &mut y_off);
+            let mut z_off = randvec(n, 501);
+            scal_f64(-1.25, &mut z_off);
+
+            set_level(Some(best));
+            assert_eq!(d_off.to_bits(), dot_f64(&w, &xs[0]).to_bits(), "dot n={n}");
+            let d2 = dot2_f64(&xs[0], &xs[1], &w);
+            assert_eq!((d2_off.0.to_bits(), d2_off.1.to_bits()), (d2.0.to_bits(), d2.1.to_bits()));
+            let d4 = dot4_f64(&w, &xs[0], &xs[1], &xs[2], &xs[3]);
+            assert_eq!(d4_off.0.to_bits(), d4.0.to_bits(), "dot4.0 n={n}");
+            assert_eq!(d4_off.3.to_bits(), d4.3.to_bits(), "dot4.3 n={n}");
+            assert_eq!(g1_off.to_bits(), gather_dot1_f64(&w, &idx, &big[0]).to_bits());
+            let g2 = gather_dot2_f64(&w, &idx, &big[0], &big[1]);
+            assert_eq!(g2_off.1.to_bits(), g2.1.to_bits(), "gather2 n={n}");
+            let g4 = gather_dot4_f64(&w, &idx, &big[0], &big[1], &big[2], &big[3]);
+            assert_eq!(g4_off.0.to_bits(), g4.0.to_bits(), "gather4.0 n={n}");
+            assert_eq!(g4_off.2.to_bits(), g4.2.to_bits(), "gather4.2 n={n}");
+            assert_eq!(df_off.to_bits(), dot_f32(&wf, &xf[0]).to_bits(), "dot f32 n={n}");
+            let d4f = dot4_f32(&wf, &xf[0], &xf[1], &xf[2], &xf[3]);
+            assert_eq!(d4f_off.1.to_bits(), d4f.1.to_bits(), "dot4 f32 n={n}");
+            let g4f = gather_dot4_f32(&wf, &idx, &bf[0], &bf[1], &bf[2], &bf[3]);
+            assert_eq!(g4f_off.3.to_bits(), g4f.3.to_bits(), "gather4 f32 n={n}");
+            let mut y_on = randvec(n, 500);
+            axpy_f64(0.37, &w, &mut y_on);
+            assert_eq!(
+                y_off.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y_on.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "axpy n={n}"
+            );
+            let mut z_on = randvec(n, 501);
+            scal_f64(-1.25, &mut z_on);
+            assert_eq!(
+                z_off.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                z_on.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "scal n={n}"
+            );
+        }
+    }
+
+    /// Gathered forms with repeated indices (CSR rows can't repeat a
+    /// column, but the microkernel contract shouldn't depend on it).
+    #[test]
+    fn gather_handles_duplicate_indices() {
+        let vals = [1.0f64, 2.0, 3.0, 4.0, 5.0];
+        let idx = [3u32, 3, 0, 1, 3];
+        let x = [10.0f64, 20.0, 30.0, 40.0];
+        let expect = 1.0 * 40.0 + 2.0 * 40.0 + 3.0 * 10.0 + 4.0 * 20.0 + 5.0 * 40.0;
+        let got = gather_dot1_f64(&vals, &idx, &x);
+        assert!((got - expect).abs() < 1e-12, "{got} vs {expect}");
+    }
+
+    /// dot against a naive sequential sum — value-level, not bitwise
+    /// (the lane-blocked order differs from naive order by design).
+    #[test]
+    fn dot_matches_naive_to_tolerance() {
+        let x = randvec(257, 7);
+        let y = randvec(257, 8);
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot_f64(&x, &y) - naive).abs() < 1e-10 * x.len() as f64);
+    }
+
+    #[test]
+    fn set_level_roundtrip() {
+        let _guard = LEVEL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let _reset = LevelReset;
+        set_level(Some(SimdLevel::Off));
+        assert_eq!(level(), SimdLevel::Off);
+        set_level(None);
+        assert_eq!(level(), env_level());
+    }
+}

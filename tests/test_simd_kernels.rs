@@ -1,0 +1,312 @@
+//! SIMD microkernel layer: cross-ISA bitwise parity and remainder-lane
+//! audit for the rewritten hot kernels (CSR SpMM, Block-ELL SpMM,
+//! Gram/SYRK, the CholeskyQR2 panel update path and POTRF).
+//!
+//! The contract under test (see `util::simd` module docs): for a fixed
+//! thread count, `TRUNKSVD_SIMD=off` (the lane-blocked scalar reference)
+//! and every ISA path produce **bitwise identical** results — the
+//! microkernels share one accumulator layout and one reduction tree and
+//! never use FMA, so vectorization changes speed, not bits. Tests flip
+//! the level in-process via `simd::set_level`, which mirrors the env
+//! override.
+//!
+//! The level/thread/cutoff overrides are process-global, so every test
+//! serializes on `SIMD_LOCK` and restores the defaults before returning
+//! (including on panic, via the `Reset` drop guard).
+
+use std::sync::Mutex;
+
+use trunksvd::cost;
+use trunksvd::la::blas1;
+use trunksvd::la::blas3::{self, mat_nn, mat_tn};
+use trunksvd::la::chol;
+use trunksvd::la::mat::Mat;
+use trunksvd::sparse::blockell::BlockEll;
+use trunksvd::sparse::coo::Coo;
+use trunksvd::sparse::csr::Csr;
+use trunksvd::util::pool;
+use trunksvd::util::rng::Rng;
+use trunksvd::util::scalar::Scalar;
+use trunksvd::util::simd::{self, SimdLevel};
+
+static SIMD_LOCK: Mutex<()> = Mutex::new(());
+
+/// Restores the SIMD level and pool defaults even on panic.
+struct Reset;
+impl Drop for Reset {
+    fn drop(&mut self) {
+        simd::set_level(None);
+        pool::set_num_threads(0);
+        pool::set_parallel_cutoff(0);
+    }
+}
+
+fn random_coo(rows: usize, cols: usize, nnz: usize, seed: u64) -> Coo {
+    let mut rng = Rng::new(seed);
+    let mut c = Coo::new(rows, cols);
+    for _ in 0..nnz {
+        c.push(rng.below(rows), rng.below(cols), rng.normal());
+    }
+    c
+}
+
+fn bits<S: Scalar>(v: &[S]) -> Vec<u64> {
+    v.iter().map(|x| x.to_f64().to_bits()).collect()
+}
+
+/// Shared fixtures for the parity fingerprint, built once per dtype so
+/// every level/thread combination sees identical inputs.
+struct Fixtures<S: Scalar> {
+    a: Csr<S>,
+    be: BlockEll<S>,
+    x: Mat<S>,
+    z: Mat<S>,
+    q: Mat<S>,
+    xp: Mat<S>,
+    l: Mat<S>,
+    lbar: Mat<S>,
+    panel: Mat<S>,
+    spd: Mat<S>,
+}
+
+fn fixtures<S: Scalar>() -> Fixtures<S> {
+    let a: Csr<S> = Csr::from_coo(&random_coo(311, 257, 9000, 71)).unwrap().cast();
+    let be = BlockEll::from_csr(&a, 8, a.cols().div_ceil(8)).unwrap();
+    let mut rng = Rng::new(72);
+    let x: Mat<S> = Mat::randn(a.cols(), 5, &mut rng);
+    let z: Mat<S> = Mat::randn(a.rows(), 5, &mut rng);
+    let q: Mat<S> = Mat::randn(500, 9, &mut rng);
+    let xp: Mat<S> = Mat::randn(be.padded_cols(), 5, &mut rng);
+    // Well-conditioned lower-triangular factors for the TRSM/TRMM path.
+    let b = 9;
+    let mut l: Mat<S> = Mat::zeros(b, b);
+    let mut lbar: Mat<S> = Mat::zeros(b, b);
+    for j in 0..b {
+        for i in j..b {
+            let d = if i == j { 2.0 + j as f64 } else { 0.3 * rng.normal() };
+            l.set(i, j, S::from_f64(d));
+            lbar.set(i, j, S::from_f64(0.5 * rng.normal()));
+        }
+    }
+    let panel: Mat<S> = Mat::randn(200, b, &mut rng);
+    // SPD operand big enough for the blocked POTRF path (n > 64).
+    let g: Mat<S> = Mat::randn(110, 100, &mut rng);
+    let mut spd = mat_tn(&g, &g);
+    // Generous diagonal boost: keeps the f32 POTRF far from breakdown so
+    // the fingerprint never depends on marginal pivots.
+    for i in 0..100 {
+        spd.add_at(i, i, S::from_f64(1.0));
+    }
+    Fixtures { a, be, x, z, q, xp, l, lbar, panel, spd }
+}
+
+/// One pass over every SIMD-rewritten kernel, fingerprinted bit-exactly:
+/// gather SpMM, scatter SpMMᵀ, Block-ELL SpMM, Gram/SYRK, the CholQR2
+/// panel update (TRSM + TRMM), blocked POTRF, and the blas1 dot/axpy.
+fn simd_fingerprint<S: Scalar>(f: &Fixtures<S>) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut y = Mat::zeros(f.a.rows(), f.x.cols());
+    f.a.spmm(f.x.as_ref(), y.as_mut());
+    out.extend(bits(y.data()));
+    let mut w = Mat::zeros(f.a.cols(), f.z.cols());
+    f.a.spmm_t(f.z.as_ref(), w.as_mut());
+    out.extend(bits(w.data()));
+    let mut yp = Mat::zeros(f.be.padded_rows(), f.xp.cols());
+    f.be.spmm(f.xp.as_ref(), yp.as_mut());
+    out.extend(bits(yp.data()));
+    let g = blas3::gram(f.q.as_ref());
+    out.extend(bits(g.data()));
+    let mut qp = f.panel.clone();
+    blas3::trsm_right_lt(f.l.as_ref(), qp.as_mut());
+    out.extend(bits(qp.data()));
+    let r = blas3::trmm_lt_lt(&f.l, &f.lbar);
+    out.extend(bits(r.data()));
+    let mut lc = Mat::zeros(f.spd.rows(), f.spd.cols());
+    chol::potrf_into(f.spd.as_ref(), lc.as_mut()).unwrap();
+    out.extend(bits(lc.data()));
+    out.push(blas1::dot(f.q.col(0), f.q.col(1)).to_f64().to_bits());
+    let mut acc = f.q.col(2).to_vec();
+    blas1::axpy(S::from_f64(-0.75), f.q.col(3), &mut acc);
+    blas1::scal(S::from_f64(1.25), &mut acc);
+    out.extend(bits(&acc));
+    out
+}
+
+/// Satellite 3: for each fixed thread count, the scalar reference and
+/// every ISA path (detected, plus each named level — unsupported ones
+/// clamp to the reference, making the check vacuous there by design)
+/// produce bitwise-identical results on all rewritten kernels.
+fn parity_off_vs_isa<S: Scalar>() {
+    let _guard = SIMD_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = Reset;
+    pool::set_parallel_cutoff(1); // force the banded paths on small fixtures
+    let f = fixtures::<S>();
+    let detected = simd::detected_level();
+    for &t in &[1usize, 2, 8] {
+        pool::set_num_threads(t);
+        simd::set_level(Some(SimdLevel::Off));
+        let reference = simd_fingerprint(&f);
+        for lvl in [detected, SimdLevel::Avx2, SimdLevel::Neon] {
+            simd::set_level(Some(lvl));
+            let got = simd_fingerprint(&f);
+            assert!(
+                got == reference,
+                "dtype={} t={t} level={} not bitwise equal to scalar reference",
+                S::DTYPE,
+                lvl.name()
+            );
+        }
+        // Auto (env default in this test binary) must also agree.
+        simd::set_level(None);
+        let auto = simd_fingerprint(&f);
+        assert!(auto == reference, "dtype={} t={t} auto level disagrees", S::DTYPE);
+    }
+}
+
+#[test]
+fn simd_off_vs_isa_bitwise_f64() {
+    parity_off_vs_isa::<f64>();
+}
+
+#[test]
+fn simd_off_vs_isa_bitwise_f32() {
+    parity_off_vs_isa::<f32>();
+}
+
+/// Satellite 1: remainder-lane audit. Edge column counts around the
+/// 4-column register blocking (k in {1,2,3,5,7}) on row counts that are
+/// not multiples of the band alignment (32) or the ELL block size (8),
+/// at both precisions, against the dense reference.
+fn edge_shapes<S: Scalar>() {
+    let _guard = SIMD_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = Reset;
+    pool::set_parallel_cutoff(1);
+    let tol = if S::DTYPE == "f32" { 1e-3 } else { 1e-10 };
+    for &t in &[1usize, 3] {
+        pool::set_num_threads(t);
+        for (si, &(m, n, nnz)) in [(33usize, 17usize, 150usize), (61, 40, 500), (127, 63, 1200)]
+            .iter()
+            .enumerate()
+        {
+            let a: Csr<S> = Csr::from_coo(&random_coo(m, n, nnz, 80 + si as u64)).unwrap().cast();
+            let ad = a.to_dense();
+            let be = BlockEll::from_csr(&a, 8, a.cols().div_ceil(8)).unwrap();
+            let mut rng = Rng::new(91 + si as u64);
+            for k in [1usize, 2, 3, 5, 7] {
+                let x: Mat<S> = Mat::randn(n, k, &mut rng);
+                let mut y: Mat<S> = Mat::zeros(m, k);
+                a.spmm(x.as_ref(), y.as_mut());
+                let expect = mat_nn(&ad, &x);
+                assert!(
+                    y.max_abs_diff(&expect) < S::from_f64(tol),
+                    "spmm dtype={} t={t} {m}x{n} k={k}",
+                    S::DTYPE
+                );
+                let mut xp: Mat<S> = Mat::zeros(be.padded_cols(), k);
+                for j in 0..k {
+                    for i in 0..n {
+                        xp.set(i, j, x.at(i, j));
+                    }
+                }
+                let mut yp: Mat<S> = Mat::zeros(be.padded_rows(), k);
+                be.spmm(xp.as_ref(), yp.as_mut());
+                for j in 0..k {
+                    for i in 0..m {
+                        let d = (yp.at(i, j) - expect.at(i, j)).abs().to_f64();
+                        assert!(
+                            d < tol,
+                            "blockell dtype={} t={t} {m}x{n} k={k} ({i},{j})",
+                            S::DTYPE
+                        );
+                    }
+                    for i in m..be.padded_rows() {
+                        assert_eq!(yp.at(i, j).to_f64(), 0.0, "padding t={t} k={k}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn remainder_lane_edge_shapes_f64() {
+    edge_shapes::<f64>();
+}
+
+#[test]
+fn remainder_lane_edge_shapes_f32() {
+    edge_shapes::<f32>();
+}
+
+/// Tentpole (b): the per-operand band-plan cache. Repeat solves against
+/// the same operand are bitwise-identical call over call (the cached
+/// partition is deterministic), clones get distinct cache identities but
+/// the same results, and the answers match the dense reference.
+#[test]
+fn band_plan_cache_repeat_and_clone_solves() {
+    let _guard = SIMD_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = Reset;
+    pool::set_parallel_cutoff(1);
+    pool::set_num_threads(4);
+    let a = Csr::from_coo(&random_coo(900, 300, 30_000, 13)).unwrap();
+    let ad = a.to_dense();
+    let mut rng = Rng::new(14);
+    let x = Mat::randn(300, 6, &mut rng);
+    let expect = mat_nn(&ad, &x);
+    let mut y = Mat::zeros(900, 6);
+    a.spmm(x.as_ref(), y.as_mut());
+    assert!(y.max_abs_diff(&expect) < 1e-10);
+    let first = bits(y.data());
+    for _ in 0..4 {
+        let mut again = Mat::zeros(900, 6);
+        a.spmm(x.as_ref(), again.as_mut());
+        assert_eq!(bits(again.data()), first, "repeat solve drifted");
+    }
+    let b = a.clone();
+    assert_ne!(a.generation(), b.generation(), "clone must get a fresh cache identity");
+    let mut yc = Mat::zeros(900, 6);
+    b.spmm(x.as_ref(), yc.as_mut());
+    assert_eq!(bits(yc.data()), first, "clone solve drifted");
+}
+
+/// The calibration loader: file round-trip through the public API, both
+/// document layouts, clamping, and rejection of non-calibration files.
+#[test]
+fn cost_calibration_loader() {
+    let dir = std::env::temp_dir();
+    let path = dir.join("trunksvd_simd_test_calib.json");
+    let path = path.to_str().unwrap().to_string();
+    std::fs::write(
+        &path,
+        r#"{"bench": "kernels",
+            "cost_calibration": {"build_sweeps": 9.5, "scatter_penalty": 1.5,
+                                 "parallel_cutoff": 100000},
+            "kernels": []}"#,
+    )
+    .unwrap();
+    let c = cost::load_calibration(&path).expect("calibration should load");
+    assert_eq!(c.build_sweeps, 9.5);
+    assert_eq!(c.scatter_penalty, 1.5);
+    assert_eq!(c.parallel_cutoff, 16384, "out-of-range cutoff must clamp");
+    let _ = std::fs::remove_file(&path);
+    assert!(cost::load_calibration(&path).is_none(), "missing file");
+}
+
+/// TRUNKSVD_PIN / TRUNKSVD_SIMD surface sanity: the parsers accept the
+/// documented spellings and the resolved defaults are callable.
+#[test]
+fn env_knob_parsers() {
+    use pool::PinLevel;
+    assert_eq!(PinLevel::parse("off"), Some(PinLevel::Off));
+    assert_eq!(PinLevel::parse("core"), Some(PinLevel::Core));
+    assert_eq!(PinLevel::parse("NODE"), Some(PinLevel::Node));
+    assert_eq!(PinLevel::parse("bogus"), None);
+    assert_eq!(SimdLevel::parse("off"), Some(SimdLevel::Off));
+    assert_eq!(SimdLevel::parse("avx2"), Some(SimdLevel::Avx2));
+    assert_eq!(SimdLevel::parse("auto"), None);
+    // Resolved once per process; just exercise the lookups.
+    let _ = pool::pin_level();
+    let topo = pool::topology();
+    assert!(topo.num_nodes() >= 1);
+    assert_eq!(pool::parse_cpulist("0-2,5"), vec![0, 1, 2, 5]);
+}
