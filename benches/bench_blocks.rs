@@ -29,6 +29,16 @@
 //! entries; `BENCH_ASSERT_SIMD=1` (set in CI) fails the bench if the
 //! SIMD path is slower than scalar on spmm/gram.
 //!
+//! The `out_of_core` section shards a generated operand to disk, solves
+//! it under a resident-bytes cap tight enough that every pass re-streams
+//! the whole operand, and records the three-tier transfer picture:
+//! disk-tier bytes/loads from the staged ledger, host↔arena bytes,
+//! `overlap_efficiency` (1 − stall/load) from the prefetch pipeline, the
+//! sharded-vs-in-core slowdown, and bitwise sigma parity against the
+//! scatter-only in-core solve. `BENCH_ASSERT_OVERLAP=1` (set in CI)
+//! gates parity, overlap, cap enforcement, and exactly-once disk
+//! accounting.
+//!
 //! The `cost_calibration` section measures the real dispatch-grain and
 //! adaptive-transpose crossovers on this host and emits them in the
 //! layout `cost::load_calibration` reads — point
@@ -589,6 +599,134 @@ fn main() {
     }
 
     banner(
+        "Out-of-core sharded operand (double-buffered prefetch)",
+        "disk-tier bytes per pass, overlap efficiency, sharded-vs-in-core parity \
+         and slowdown (BENCH_ASSERT_OVERLAP=1 gates overlap + parity + accounting)",
+    );
+    let ooc_section = {
+        use std::sync::Arc;
+        use trunksvd::algo::lancsvd::lancsvd;
+        use trunksvd::algo::LancSvdOpts;
+        use trunksvd::backend::staged::StagedBackend;
+        use trunksvd::backend::Operand;
+        use trunksvd::sparse::shard;
+
+        let rows = if quick { 4000 } else { 16000 };
+        let spec = SparseSpec {
+            rows,
+            cols: rows / 4,
+            nnz: rows * 12,
+            seed: 31,
+            ..Default::default()
+        };
+        let a = generate(&spec);
+        let dir_path = std::env::temp_dir().join("trunksvd_bench_shards");
+        let _ = std::fs::remove_dir_all(&dir_path);
+        let dirs = dir_path.to_str().expect("utf8 temp path").to_string();
+        let n_shards = 6usize;
+        let sd = Arc::new(shard::write_shards_from_csr(&dirs, &a, n_shards).expect("write shards"));
+        // The tightest cap that still runs the prefetch pipeline: two
+        // streaming slots, zero pinned prefix — every pass re-streams
+        // the whole operand from disk, so overlap is actually exercised.
+        let cap = 2 * sd.max_resident_bytes::<f64>();
+        let opts = LancSvdOpts { r: 16, p: 3, b: 8, wanted: 8, seed: 7, ..Default::default() };
+
+        // In-core reference: the scatter-only CPU backend is the bitwise
+        // parity anchor (sharded Aᵀ·X is a global-row-order scatter).
+        let mut be_in = CpuBackend::new_sparse(a.clone()).scatter_only();
+        let t0 = std::time::Instant::now();
+        let svd_in = lancsvd(&mut be_in, &opts).expect("in-core solve");
+        let t_incore = t0.elapsed().as_secs_f64();
+
+        // Sharded CPU solve under the cap.
+        let mut be_sh = CpuBackend::new(Operand::sharded(Arc::clone(&sd), cap));
+        be_sh.ensure_operand_resident().expect("shard manifest resolves under cap");
+        let t0 = std::time::Instant::now();
+        let svd_sh = lancsvd(&mut be_sh, &opts).expect("sharded solve");
+        let t_sharded = t0.elapsed().as_secs_f64();
+        let stats = be_sh.shard_stats().expect("sharded backend has stats");
+        let slowdown = t_sharded / t_incore.max(1e-12);
+        let overlap = stats.overlap_efficiency();
+        let parity = svd_in.sigma.len() == svd_sh.sigma.len()
+            && svd_in
+                .sigma
+                .iter()
+                .zip(&svd_sh.sigma)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+
+        // Staged sharded solve: the three-tier ledger (disk↔host↔arena).
+        let mut be_st: StagedBackend = StagedBackend::new_sharded(Arc::clone(&sd), cap);
+        be_st.ensure_operand_resident().expect("staged shard staging");
+        lancsvd(&mut be_st, &opts).expect("staged sharded solve");
+        let totals = be_st.ledger().totals();
+        let st_stats = be_st.shard_stats().expect("staged sharded stats");
+        let file_bytes = sd.total_file_bytes();
+
+        println!(
+            "out_of_core      m={rows:>6} shards={n_shards} cap={cap}  passes {}  \
+             stream {} B  overlap {overlap:>5.2}  peak {} B  slowdown {slowdown:>5.2}x  \
+             parity {}  disk(ledger) {} B in {} loads  hot_panel {}",
+            stats.passes,
+            stats.stream_bytes,
+            stats.peak_resident_bytes,
+            if parity { "ok" } else { "MISMATCH" },
+            totals.disk_bytes,
+            totals.disk_count,
+            totals.hot_panel_transfers
+        );
+        if env_usize("BENCH_ASSERT_OVERLAP", 0) == 1 {
+            assert!(parity, "sharded sigma must be bitwise-identical to the in-core solve");
+            assert!(
+                overlap >= 0.25,
+                "prefetch must hide most of the shard I/O (overlap {overlap:.2})"
+            );
+            assert!(
+                stats.peak_resident_bytes <= cap,
+                "resident cap violated: peak {} > cap {cap}",
+                stats.peak_resident_bytes
+            );
+            // Each pass streams each shard's file exactly once — no
+            // re-reads, no partial reads — and the staged ledger sees
+            // every one of those loads on the disk tier.
+            assert_eq!(
+                totals.disk_bytes,
+                (st_stats.pin_bytes + st_stats.stream_bytes) as u64,
+                "ledger disk bytes must equal the loader's byte count"
+            );
+            assert_eq!(
+                st_stats.stream_bytes,
+                st_stats.passes * file_bytes,
+                "each pass must stream each shard exactly once"
+            );
+            assert_eq!(totals.hot_panel_transfers, 0, "disk tier must not touch panel rule 3");
+        }
+        let _ = std::fs::remove_dir_all(&dir_path);
+        json::obj(vec![
+            ("m", json::num(rows as f64)),
+            ("shards", json::num(n_shards as f64)),
+            ("resident_cap", json::num(cap as f64)),
+            ("shard_file_bytes", json::num(file_bytes as f64)),
+            ("passes", json::num(stats.passes as f64)),
+            ("pin_bytes", json::num(stats.pin_bytes as f64)),
+            ("stream_bytes", json::num(stats.stream_bytes as f64)),
+            ("load_secs", json::num(stats.load_secs)),
+            ("stall_secs", json::num(stats.stall_secs)),
+            ("overlap_efficiency", json::num(overlap)),
+            ("peak_resident_bytes", json::num(stats.peak_resident_bytes as f64)),
+            ("incore_s", json::num(t_incore)),
+            ("sharded_s", json::num(t_sharded)),
+            ("sharded_over_incore", json::num(slowdown)),
+            ("bitwise_parity", json::num(if parity { 1.0 } else { 0.0 })),
+            ("disk_bytes", json::num(totals.disk_bytes as f64)),
+            ("disk_count", json::num(totals.disk_count as f64)),
+            ("h2a_bytes", json::num(totals.h2a_bytes as f64)),
+            ("a2h_bytes", json::num(totals.a2h_bytes as f64)),
+            ("a2a_bytes", json::num(totals.a2a_bytes as f64)),
+            ("hot_panel_transfers", json::num(totals.hot_panel_transfers as f64)),
+        ])
+    };
+
+    banner(
         "Cost-model calibration",
         "measured dispatch/scatter/build crossovers -> cost_calibration section \
          (load with TRUNKSVD_COST_CALIB=BENCH_kernels.json; --calibrate adds a k-sweep)",
@@ -677,6 +815,7 @@ fn main() {
         ("threads", json::num(threads as f64)),
         ("quick", json::num(if quick { 1.0 } else { 0.0 })),
         ("cost_calibration", cal_section),
+        ("out_of_core", ooc_section),
         ("kernels", json::arr(entries)),
     ]);
     std::fs::write("BENCH_kernels.json", json::write(&doc)).expect("write BENCH_kernels.json");

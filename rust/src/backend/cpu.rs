@@ -24,6 +24,7 @@ use crate::la::mat::{Mat, MatMut, MatRef};
 use crate::la::workspace::Plan;
 use crate::metrics::{Profile, Timer};
 use crate::sparse::csr::Csr;
+use crate::sparse::shard::{ShardStats, ShardedOperand};
 use crate::util::scalar::Scalar;
 
 /// Reference CPU backend, generic over the element precision (default
@@ -37,6 +38,9 @@ pub struct CpuBackend<S: Scalar = f64> {
     /// buffers are its "device memory" — but keeping the plan makes the
     /// hook observable (tests) and feeds future per-plan tuning.
     planned: Option<Plan>,
+    /// Streaming state for an [`Operand::Sharded`] operand (loader
+    /// thread, pin cache, stats); `None` for in-core operands.
+    sharded: Option<ShardedOperand<S>>,
     profile: Profile,
 }
 
@@ -46,6 +50,7 @@ impl<S: Scalar> CpuBackend<S> {
             a: Operand::Sparse(a.into()),
             at: AdaptiveTranspose::from_env(),
             planned: None,
+            sharded: None,
             profile: Profile::new(),
         }
     }
@@ -55,6 +60,7 @@ impl<S: Scalar> CpuBackend<S> {
             a: Operand::Dense(a),
             at: AdaptiveTranspose::new(None),
             planned: None,
+            sharded: None,
             profile: Profile::new(),
         }
     }
@@ -63,7 +69,33 @@ impl<S: Scalar> CpuBackend<S> {
         match a {
             Operand::Sparse(a) => CpuBackend::new_sparse(a),
             Operand::Dense(a) => CpuBackend::new_dense(a),
+            Operand::Sharded { dir, resident_cap } => CpuBackend {
+                sharded: Some(ShardedOperand::new(std::sync::Arc::clone(&dir), resident_cap)),
+                a: Operand::Sharded { dir, resident_cap },
+                // No in-core copy exists to transpose; Aᵀ·X always runs
+                // the streaming scatter (bitwise-identical to in-core
+                // scatter-only at a fixed thread count).
+                at: AdaptiveTranspose::new(None),
+                planned: None,
+                profile: Profile::new(),
+            },
         }
+    }
+
+    /// For sharded operands: validate the resident cap and stage the
+    /// pin prefix + loader thread now, so cap misconfiguration surfaces
+    /// as an `Err` at build time instead of a panic inside the first
+    /// (infallible) solve op. No-op for in-core operands.
+    pub fn ensure_operand_resident(&mut self) -> crate::error::Result<()> {
+        match &mut self.sharded {
+            Some(op) => op.ensure_resident(),
+            None => Ok(()),
+        }
+    }
+
+    /// Streaming counters of a sharded operand (`None` when in-core).
+    pub fn shard_stats(&self) -> Option<ShardStats> {
+        self.sharded.as_ref().map(|op| op.stats())
     }
 
     /// Store an explicit transposed CSR copy *eagerly* and use
@@ -115,16 +147,22 @@ impl<S: Scalar> Backend<S> for CpuBackend<S> {
         self.planned = Some(plan.clone());
     }
 
-    fn apply_a_into(&mut self, x: MatRef<S>, y: MatMut<S>) {
+    fn apply_a_into(&mut self, x: MatRef<S>, mut y: MatMut<S>) {
         let t = Timer::start(self.mult_flops(x.cols));
         match &self.a {
             Operand::Sparse(a) => a.spmm(x, y),
             Operand::Dense(a) => blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, y),
+            Operand::Sharded { .. } => self
+                .sharded
+                .as_mut()
+                .expect("sharded operand state")
+                .spmm(x, &mut y)
+                .expect("sharded operand I/O during apply_a"),
         }
         t.stop(&mut self.profile);
     }
 
-    fn apply_at_into(&mut self, x: MatRef<S>, y: MatMut<S>) {
+    fn apply_at_into(&mut self, x: MatRef<S>, mut y: MatMut<S>) {
         let t = Timer::start(self.mult_flops(x.cols));
         match &self.a {
             Operand::Sparse(a) => match self.at.advance(a, x.cols) {
@@ -132,6 +170,12 @@ impl<S: Scalar> Backend<S> for CpuBackend<S> {
                 None => a.spmm_t(x, y),
             },
             Operand::Dense(a) => blas3::gemm_tn(S::ONE, a.as_ref(), x, S::ZERO, y),
+            Operand::Sharded { .. } => self
+                .sharded
+                .as_mut()
+                .expect("sharded operand state")
+                .spmm_t(x, &mut y)
+                .expect("sharded operand I/O during apply_at"),
         }
         t.stop(&mut self.profile);
     }
@@ -180,7 +224,9 @@ impl<S: Scalar> Backend<S> for CpuBackend<S> {
     }
 
     fn name(&self) -> &'static str {
-        if self.at.built() {
+        if self.sharded.is_some() {
+            "cpu-ooc"
+        } else if self.at.built() {
             "cpu+expT"
         } else if self.at.enabled() || matches!(self.a, Operand::Dense(_)) {
             "cpu"

@@ -88,7 +88,44 @@
 //! host-resident backends (pinned by `tests/test_workspace.rs` and the
 //! `BENCH_ASSERT_NOALLOC` gate).
 //!
-//! ## 6. CPU microkernels
+//! ## 6. Memory tiers & out-of-core operands
+//!
+//! With [`Operand::Sharded`] the operand lives on a third tier below the
+//! host: **disk ↔ host ↔ arena**. The sanctioned crossings per tier:
+//!
+//! * **disk → host** — whole row-band shards only, loaded by the
+//!   dedicated loader thread of [`crate::sparse::shard::ShardedOperand`]
+//!   (never by a compute worker on the prefetch path), at most once per
+//!   shard per `apply_a`/`apply_at` pass, plus the one-time pin-prefix
+//!   staging at `plan`. The resident decoded bytes must stay under the
+//!   configured `--resident-cap` at all times (pinned prefix + compute
+//!   slot + prefetch slot).
+//! * **host ↔ arena** — unchanged: rule 3's factor-sized crossings only
+//!   during the hot loop. Shard traffic is *operand* traffic and must
+//!   never appear as a panel crossing; the staged ledger records it
+//!   under the disk direction with `panel = false`, so the
+//!   zero-hot-loop-panel-transfer guarantee (rule 4) is unaffected.
+//! * **overlap discipline** — compute on shard *i* must not reorder
+//!   around the load of shard *i+1*: prefetch overlaps *I/O*, never
+//!   *arithmetic*. Shards tile the operand on the same 32-row-aligned
+//!   nnz-balanced bounds as the pool's spmm banding, so a sharded solve
+//!   is **bitwise-identical** to the in-core solve at a fixed thread
+//!   count (gather spmm is partition-independent; scatter spmmᵀ runs
+//!   shards in increasing row order with a first-shard-only zero fill).
+//!   The ledger reports `overlap_efficiency` (fraction of loader time
+//!   hidden behind compute); `BENCH_ASSERT_OVERLAP=1` gates it.
+//!
+//! **GPU port mapping.** The loader thread is the CPU stand-in for an
+//! async copy engine: a CUDA port replaces the request channel with
+//! `cudaMemcpyAsync` on a dedicated copy *stream* into the second of two
+//! device-resident shard slots, the `recv` with a `cudaEvent` wait on
+//! that stream, and keeps the same depth-1 double buffer — compute
+//! stream consumes slot `i % 2` while the copy stream fills
+//! `(i + 1) % 2`. Pinned-prefix shards map to buffers uploaded once at
+//! `plan` and left device-resident; `overlap_efficiency` maps to
+//! `1 − (event-wait time) / (copy-stream busy time)` unchanged.
+//!
+//! ## 7. CPU microkernels
 //!
 //! Host-resident backends (and host fallback paths of device backends)
 //! reach the shared SIMD microkernel layer in [`crate::util::simd`]
@@ -488,6 +525,11 @@ impl<S: Scalar> Drop for AdaptiveTranspose<S> {
 pub enum Operand<S: Scalar = f64> {
     Sparse(Arc<crate::sparse::csr::Csr<S>>),
     Dense(Mat<S>),
+    /// A disk-resident CSR operand tiled into row-band shards
+    /// (`sparse::shard`), streamed under a resident-bytes cap
+    /// (`0` = unlimited). Values are stored f64 on disk and cast to `S`
+    /// at load, so `cast()` is a metadata re-tag, not a copy.
+    Sharded { dir: Arc<crate::sparse::shard::ShardDir>, resident_cap: usize },
 }
 
 impl<S: Scalar> Operand<S> {
@@ -499,16 +541,22 @@ impl<S: Scalar> Operand<S> {
     pub fn dense(a: Mat<S>) -> Operand<S> {
         Operand::Dense(a)
     }
+    /// Wrap an out-of-core shard directory under a resident-bytes cap.
+    pub fn sharded(dir: Arc<crate::sparse::shard::ShardDir>, resident_cap: usize) -> Operand<S> {
+        Operand::Sharded { dir, resident_cap }
+    }
     pub fn shape(&self) -> (usize, usize) {
         match self {
             Operand::Sparse(a) => (a.rows(), a.cols()),
             Operand::Dense(a) => (a.rows(), a.cols()),
+            Operand::Sharded { dir, .. } => (dir.rows(), dir.cols()),
         }
     }
     pub fn nnz(&self) -> Option<usize> {
         match self {
             Operand::Sparse(a) => Some(a.nnz()),
             Operand::Dense(_) => None,
+            Operand::Sharded { dir, .. } => Some(dir.nnz()),
         }
     }
     /// Copy into another element precision (the `--dtype` conversion).
@@ -516,6 +564,9 @@ impl<S: Scalar> Operand<S> {
         match self {
             Operand::Sparse(a) => Operand::Sparse(Arc::new(a.cast())),
             Operand::Dense(a) => Operand::Dense(a.cast()),
+            Operand::Sharded { dir, resident_cap } => {
+                Operand::Sharded { dir: Arc::clone(dir), resident_cap: *resident_cap }
+            }
         }
     }
 }

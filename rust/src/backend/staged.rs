@@ -54,9 +54,11 @@ use crate::la::workspace::{names, Plan, Workspace};
 use crate::metrics::{Block, Profile, Timer};
 use crate::sparse::blockell::BlockEll;
 use crate::sparse::csr::Csr;
+use crate::sparse::shard::{ShardStats, ShardedOperand};
 use crate::util::scalar::Scalar;
 
-/// Transfer direction across (or within) the simulated arena boundary.
+/// Transfer direction across (or within) the simulated memory tiers
+/// (disk ↔ host ↔ arena; see backend module docs §6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
     /// Host memory → device arena (upload).
@@ -65,6 +67,9 @@ pub enum Direction {
     ArenaToHost,
     /// Intra-arena staging copy (device-to-device; `cudaMemcpyD2D`).
     ArenaToArena,
+    /// Disk tier → host: one out-of-core shard load (whole row-band CSR
+    /// segments only — never panel traffic, so always `panel = false`).
+    DiskToHost,
 }
 
 /// One ledgered copy.
@@ -97,8 +102,13 @@ pub struct LedgerTotals {
     /// sanctioned POTRF traffic.
     pub hot_factor_crossings: u64,
     pub hot_factor_bytes: u64,
-    /// One-time operand staging volume (CSR arrays / dense payload).
+    /// One-time operand staging volume (CSR arrays / dense payload; for
+    /// sharded operands, the pinned-prefix shard bytes).
     pub staged_operand_bytes: u64,
+    /// Disk-tier traffic: out-of-core shard loads (count and file
+    /// bytes). Stays 0 for in-core operands.
+    pub disk_count: u64,
+    pub disk_bytes: u64,
     /// Number of `plan()` calls (solve staging events).
     pub plans: u64,
 }
@@ -148,8 +158,15 @@ impl TransferLedger {
                 self.totals.a2a_count += 1;
                 self.totals.a2a_bytes += bytes as u64;
             }
+            Direction::DiskToHost => {
+                self.totals.disk_count += 1;
+                self.totals.disk_bytes += bytes as u64;
+            }
         }
-        if hot && dir != Direction::ArenaToArena {
+        // Disk-tier shard traffic is sanctioned operand streaming, never
+        // a host↔arena contract crossing — keep it out of the hot-loop
+        // panel/factor accounting.
+        if hot && matches!(dir, Direction::HostToArena | Direction::ArenaToHost) {
             if panel {
                 self.totals.hot_panel_transfers += 1;
             } else {
@@ -246,6 +263,10 @@ enum DeviceOperand<S: Scalar> {
     Csr { at: Csr<S> },
     /// Dense arena copy.
     Dense(Mat<S>),
+    /// Out-of-core operand: only a pinned prefix + two streaming slots
+    /// of row-band shards are ever arena-resident (disk tier below the
+    /// arena; loads are ledgered as [`Direction::DiskToHost`]).
+    Sharded(ShardedOperand<S>),
 }
 
 impl<S: Scalar> DeviceOperand<S> {
@@ -254,6 +275,7 @@ impl<S: Scalar> DeviceOperand<S> {
             DeviceOperand::BlockEll { .. } => "blockell",
             DeviceOperand::Csr { .. } => "csr",
             DeviceOperand::Dense(_) => "dense",
+            DeviceOperand::Sharded(_) => "sharded",
         }
     }
 }
@@ -322,6 +344,16 @@ impl<S: Scalar> StagedBackend<S> {
         StagedBackend::new(Operand::Dense(a))
     }
 
+    /// Out-of-core construction: the operand stays on disk as a shard
+    /// directory and streams through the prefetch pipeline under
+    /// `resident_cap` bytes (`0` = unlimited).
+    pub fn new_sharded(
+        dir: Arc<crate::sparse::shard::ShardDir>,
+        resident_cap: usize,
+    ) -> StagedBackend<S> {
+        StagedBackend::new(Operand::Sharded { dir, resident_cap })
+    }
+
     pub fn new(a: Operand<S>) -> StagedBackend<S> {
         StagedBackend {
             a,
@@ -385,6 +417,46 @@ impl<S: Scalar> StagedBackend<S> {
         std::mem::take(&mut self.ledger)
     }
 
+    /// Streaming counters of a sharded operand (`None` when in-core).
+    /// `overlap_efficiency()` on the stats is the ledger's third-tier
+    /// overlap figure: the fraction of loader time hidden behind
+    /// compute.
+    pub fn shard_stats(&self) -> Option<ShardStats> {
+        match &self.dev {
+            Some(DeviceOperand::Sharded(sh)) => Some(sh.stats()),
+            _ => None,
+        }
+    }
+
+    /// For sharded operands: validate the resident cap and stage the
+    /// pinned prefix + loader thread, ledgering the pin loads. Surfaces
+    /// cap misconfiguration as an `Err` instead of a panic inside the
+    /// first solve op. No-op (Ok) for in-core operands.
+    pub fn ensure_operand_resident(&mut self) -> crate::error::Result<()> {
+        self.ensure_staged();
+        if let Some(DeviceOperand::Sharded(sh)) = self.dev.as_mut() {
+            sh.ensure_resident()?;
+        }
+        self.drain_shard_events("plan.stage_operand");
+        Ok(())
+    }
+
+    /// Move buffered shard-load events into the ledger: pinned-prefix
+    /// loads count as one-time operand staging, streamed loads as
+    /// disk-tier traffic under `op`.
+    fn drain_shard_events(&mut self, op: &'static str) {
+        let Some(DeviceOperand::Sharded(sh)) = self.dev.as_mut() else { return };
+        let events = sh.take_load_events();
+        let phase = self.profile.phase();
+        for e in events {
+            let name = if e.pinned { "plan.stage_operand" } else { op };
+            self.ledger.record(name, Direction::DiskToHost, e.file_bytes, phase, false);
+            if e.pinned {
+                self.ledger.totals.staged_operand_bytes += e.file_bytes as u64;
+            }
+        }
+    }
+
     fn ensure_staged(&mut self) {
         if self.dev.is_some() {
             return;
@@ -423,6 +495,12 @@ impl<S: Scalar> StagedBackend<S> {
                 } else {
                     DeviceOperand::Csr { at }
                 }
+            }
+            // No bytes move at staging time for a sharded operand: the
+            // pin-prefix loads happen (and are ledgered) when
+            // `ensure_operand_resident` / the first pass runs.
+            Operand::Sharded { dir, resident_cap } => {
+                DeviceOperand::Sharded(ShardedOperand::new(Arc::clone(dir), *resident_cap))
             }
         };
         self.dev = Some(dev);
@@ -535,6 +613,7 @@ impl<S: Scalar> Backend<S> for StagedBackend<S> {
 
     fn plan(&mut self, plan: &Plan) {
         self.ensure_staged();
+        self.ensure_operand_resident().expect("sharded operand staging at plan");
         self.planned = Some(plan.clone());
         self.ensure_pads(plan.r.max(plan.b).max(1));
         // Fresh solve: the previous solve's residency is stale (the
@@ -550,7 +629,7 @@ impl<S: Scalar> Backend<S> for StagedBackend<S> {
         self.ensure_pads(x.cols);
         self.note_read("apply_a", x.rows, x.cols, x.data);
         let t = Timer::start(self.mult_flops(x.cols));
-        match self.dev.as_ref().expect("operand staged above") {
+        match self.dev.as_mut().expect("operand staged above") {
             DeviceOperand::Dense(a) => {
                 blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, y.reborrow())
             }
@@ -569,8 +648,12 @@ impl<S: Scalar> Backend<S> for StagedBackend<S> {
                     true,
                 );
             }
+            DeviceOperand::Sharded(sh) => {
+                sh.spmm(x, &mut y).expect("sharded operand I/O during apply_a");
+            }
         }
         t.stop(&mut self.profile);
+        self.drain_shard_events("apply_a");
         self.note_write("apply_a", y.rows, y.cols, y.data, true);
     }
 
@@ -580,7 +663,7 @@ impl<S: Scalar> Backend<S> for StagedBackend<S> {
         self.ensure_pads(x.cols);
         self.note_read("apply_at", x.rows, x.cols, x.data);
         let t = Timer::start(self.mult_flops(x.cols));
-        match self.dev.as_ref().expect("operand staged above") {
+        match self.dev.as_mut().expect("operand staged above") {
             DeviceOperand::Dense(a) => {
                 blas3::gemm_tn(S::ONE, a.as_ref(), x, S::ZERO, y.reborrow())
             }
@@ -598,8 +681,14 @@ impl<S: Scalar> Backend<S> for StagedBackend<S> {
                     true,
                 );
             }
+            // No in-core transpose exists: stream the row-order scatter
+            // (bitwise-identical to the in-core scatter kernel).
+            DeviceOperand::Sharded(sh) => {
+                sh.spmm_t(x, &mut y).expect("sharded operand I/O during apply_at");
+            }
         }
         t.stop(&mut self.profile);
+        self.drain_shard_events("apply_at");
         self.note_write("apply_at", y.rows, y.cols, y.data, true);
     }
 

@@ -130,11 +130,18 @@ impl<S: Scalar> XlaBackend<S> {
         }
     }
 
-    /// Wrap either operand kind.
+    /// Wrap either in-core operand kind. Sharded (out-of-core) operands
+    /// are rejected: the AOT artifact paths need the whole operand as a
+    /// device literal (use the cpu or staged backend to stream shards).
     pub fn new(rt: Rc<Runtime>, a: Operand<S>) -> Result<XlaBackend<S>> {
         match a {
             Operand::Dense(a) => XlaBackend::new_dense(rt, a),
             Operand::Sparse(a) => Ok(XlaBackend::new_sparse(rt, a)),
+            Operand::Sharded { .. } => Err(crate::error::Error::InvalidParam(
+                "the xla backend cannot stream a sharded operand; \
+                 use --backend cpu or --backend staged"
+                    .into(),
+            )),
         }
     }
 

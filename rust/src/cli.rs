@@ -5,7 +5,9 @@
 //! trunksvd info
 //! trunksvd suite --list
 //! trunksvd gen --name rel8 --out rel8.mtx
-//! trunksvd solve (--suite NAME | --mtx FILE | --dense M N) \
+//! trunksvd shard --mtx F.mtx --out DIR [--shards N] [--resident-cap BYTES]
+//! trunksvd solve (--suite NAME | --mtx FILE | --dense M N | --operand-shards DIR) \
+//!                [--resident-cap BYTES] \
 //!                [--algo lanc|rand] [--r R] [--p P] [--b B] [--seed S] \
 //!                [--tol T] [--wanted K] [--dtype f32|f64] \
 //!                [--backend cpu|cpu-scatter|cpu-expt|staged|xla]
@@ -97,11 +99,14 @@ fn backend_choice(args: &Args) -> Result<BackendChoice> {
     }
 }
 
-const USAGE: &str = "usage: trunksvd <info|suite|gen|solve|experiment> [options]
+const USAGE: &str = "usage: trunksvd <info|suite|gen|shard|solve|experiment> [options]
   info                         versions, artifact inventory
   suite --list                 print the Table-2 suite registry
   gen --name M --out F.mtx     generate a suite matrix to MatrixMarket
-  solve --suite NAME | --mtx FILE | --dense M N
+  shard --mtx F.mtx --out DIR  stream-convert to an out-of-core shard dir
+        [--shards N] [--resident-cap BYTES]   (N defaults from the cost model)
+  solve --suite NAME | --mtx FILE | --dense M N | --operand-shards DIR
+        [--resident-cap BYTES]  out-of-core host-RAM budget (0 = unlimited)
         [--algo lanc|rand] [--r R] [--p P] [--b B] [--seed S]
         [--tol T] [--wanted K] [--restart basic|thick] [--keep K]
         [--dtype f32|f64] [--backend cpu|cpu-scatter|cpu-expt|staged|xla]
@@ -127,6 +132,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "info" => cmd_info(),
         "suite" => cmd_suite(),
         "gen" => cmd_gen(&args),
+        "shard" => cmd_shard(&args),
         "solve" => cmd_solve(&args),
         "experiment" => cmd_experiment(&args),
         "help" | "--help" => {
@@ -180,9 +186,50 @@ fn cmd_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `shard`: stream-convert a MatrixMarket file into an out-of-core
+/// row-band shard directory (`sparse::shard`). Shard count defaults
+/// from the cost model's disk-tier sizing ([`DeviceModel::shard_count`])
+/// given the operand's on-disk footprint and the `--resident-cap`
+/// budget the solve will run under.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let mtx = args
+        .get("mtx")
+        .ok_or(Error::Parse { what: "cli", detail: "shard requires --mtx".into() })?;
+    let out = args
+        .get("out")
+        .ok_or(Error::Parse { what: "cli", detail: "shard requires --out".into() })?;
+    let cap = args.get_usize("resident-cap", 0)?;
+    let shards = match args.get("shards") {
+        Some(_) => args.get_usize("shards", 0)?.max(1),
+        None => {
+            let h = crate::sparse::mm::MmStream::open(mtx)?.header();
+            // Emitted entries (symmetric files expand ≤ 2×); per-entry
+            // shard-file cost is one u32 index + one f64 value, plus the
+            // u64 row-pointer array.
+            let nnz = if h.symmetric { 2 * h.entries } else { h.entries };
+            let total = 8 * (h.rows + 1) + 12 * nnz;
+            crate::cost::device::DeviceModel::a100().shard_count(total, cap)
+        }
+    };
+    let sd = crate::sparse::shard::convert_mtx_to_shards(mtx, out, shards)?;
+    println!(
+        "wrote {} shard(s) ({}x{}, nnz {}, {} file bytes) to {out}",
+        sd.num_shards(),
+        sd.rows(),
+        sd.cols(),
+        sd.nnz(),
+        sd.total_file_bytes()
+    );
+    Ok(())
+}
+
 fn cmd_solve(args: &Args) -> Result<()> {
     let suite = Suite::load_default()?;
-    let (name, op): (String, Operand) = if let Some(n) = args.get("suite") {
+    let (name, op): (String, Operand) = if let Some(d) = args.get("operand-shards") {
+        let dir = crate::sparse::shard::ShardDir::open(d)?;
+        let cap = args.get_usize("resident-cap", 0)?;
+        (d.to_string(), Operand::sharded(std::sync::Arc::new(dir), cap))
+    } else if let Some(n) = args.get("suite") {
         let e = suite.sparse_by_name(n).ok_or(Error::Parse {
             what: "cli",
             detail: format!("unknown suite matrix '{n}'"),
@@ -358,6 +405,63 @@ mod tests {
             1,
             "unknown backend must be rejected"
         );
+    }
+
+    #[test]
+    fn shard_then_solve_out_of_core() {
+        let base = std::env::temp_dir().join("trunksvd_cli_shard_test");
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+        let mtx = base.join("a.mtx");
+        let shards = base.join("shards");
+        let spec = crate::gen::sparse::SparseSpec {
+            rows: 220,
+            cols: 90,
+            nnz: 2600,
+            seed: 5,
+            ..Default::default()
+        };
+        crate::sparse::mm::write_csr(mtx.to_str().unwrap(), &generate(&spec)).unwrap();
+        // Explicit shard count.
+        assert_eq!(
+            main_with_args(argv(&format!(
+                "shard --mtx {} --out {} --shards 3",
+                mtx.display(),
+                shards.display()
+            ))),
+            0
+        );
+        // Solve out-of-core under a cap, both backends that support it.
+        for backend in ["cpu", "staged"] {
+            assert_eq!(
+                main_with_args(argv(&format!(
+                    "solve --operand-shards {} --resident-cap 1000000 --algo lanc \
+                     --r 16 --p 2 --wanted 4 --backend {backend}",
+                    shards.display()
+                ))),
+                0,
+                "backend {backend}"
+            );
+        }
+        // cpu-expt cannot build its transpose out-of-core.
+        assert_eq!(
+            main_with_args(argv(&format!(
+                "solve --operand-shards {} --backend cpu-expt",
+                shards.display()
+            ))),
+            1
+        );
+        // Model-driven default shard count also works.
+        let shards2 = base.join("shards2");
+        assert_eq!(
+            main_with_args(argv(&format!(
+                "shard --mtx {} --out {}",
+                mtx.display(),
+                shards2.display()
+            ))),
+            0
+        );
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

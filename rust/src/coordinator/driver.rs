@@ -164,10 +164,34 @@ pub fn make_backend_at<S: Scalar>(
     op: Operand<S>,
     choice: &BackendChoice,
 ) -> Result<Box<dyn Backend<S>>> {
+    let sharded = matches!(op, Operand::Sharded { .. });
     Ok(match choice {
+        BackendChoice::Cpu | BackendChoice::CpuScatter if sharded => {
+            // Sharded Aᵀ·X is always the global-row-order scatter (the
+            // bitwise parity reference), so `cpu` and `cpu-scatter`
+            // coincide out-of-core. Resolve the shard manifest eagerly:
+            // a cap smaller than the largest shard (or an unreadable
+            // shard directory) must surface as `Err` here, not as a
+            // panic inside the first infallible solve op.
+            let mut be = CpuBackend::new(op);
+            be.ensure_operand_resident()?;
+            Box::new(be)
+        }
         BackendChoice::Cpu => Box::new(CpuBackend::new(op)),
         BackendChoice::CpuScatter => Box::new(CpuBackend::new(op).scatter_only()),
+        BackendChoice::CpuExplicitT if sharded => {
+            return Err(Error::InvalidParam(
+                "cpu-expt needs the whole operand in core to build the explicit \
+                 transpose; sharded operands support cpu, cpu-scatter, or staged"
+                    .into(),
+            ))
+        }
         BackendChoice::CpuExplicitT => Box::new(CpuBackend::new(op).with_explicit_transpose()),
+        BackendChoice::Staged if sharded => {
+            let mut be = StagedBackend::new(op);
+            be.ensure_operand_resident()?;
+            Box::new(be)
+        }
         BackendChoice::Staged => Box::new(StagedBackend::new(op)),
         BackendChoice::Xla(rt) => Box::new(XlaBackend::new(rt.clone(), op)?),
     })

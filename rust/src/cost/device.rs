@@ -30,6 +30,9 @@ pub struct DeviceModel {
     pub host_rate: f64,
     /// per-kernel-launch + transfer latency (s) — GPU only
     pub launch_latency: f64,
+    /// disk-tier streaming bandwidth (bytes/s) for out-of-core shard
+    /// loads (NVMe-class sequential reads)
+    pub disk_bw: f64,
 }
 
 impl DeviceModel {
@@ -46,6 +49,7 @@ impl DeviceModel {
             spmm_t_rate: 1.5e10,
             host_rate: 2.0e10,
             launch_latency: 1.0e-5,
+            disk_bw: 2.0e9,
         }
     }
 
@@ -59,7 +63,36 @@ impl DeviceModel {
             spmm_t_rate: 1.0e9,
             host_rate: 2.0e9,
             launch_latency: 0.0,
+            disk_bw: 5.0e8,
         }
+    }
+
+    /// Disk-tier shard sizing: pick the row-band shard size for the
+    /// out-of-core pipeline (`sparse::shard`) from the model. Load and
+    /// compute are both linear in shard bytes, so rate matching drops
+    /// out; what remains is
+    ///
+    /// * a **latency floor** — each shard must stream long enough to
+    ///   amortize the per-request latency (seek + syscall / async-copy
+    ///   launch, modeled by `launch_latency`): ≥ 20 latencies' worth of
+    ///   `disk_bw` streaming, and
+    /// * a **cap ceiling** — two streaming slots plus pinned slack must
+    ///   fit the resident cap: ≤ cap/4 (so ≥ half the cap stays for the
+    ///   pinned prefix). Without a cap, target a ~16-deep pipeline so
+    ///   the prefetch slot always has a next shard to hide.
+    pub fn shard_bytes(&self, total_bytes: usize, resident_cap: usize) -> usize {
+        let floor = (20.0 * self.launch_latency * self.disk_bw).max(1.0) as usize;
+        let mut bytes = floor.max(total_bytes.div_ceil(16)).max(1);
+        if resident_cap > 0 {
+            bytes = bytes.min((resident_cap / 4).max(1));
+        }
+        bytes.min(total_bytes.max(1))
+    }
+
+    /// Number of row-band shards [`DeviceModel::shard_bytes`] implies
+    /// for an operand of `total_bytes`.
+    pub fn shard_count(&self, total_bytes: usize, resident_cap: usize) -> usize {
+        total_bytes.div_ceil(self.shard_bytes(total_bytes, resident_cap)).max(1)
     }
 
     fn rate(&self, b: Block, sparse: bool) -> f64 {
@@ -137,6 +170,28 @@ mod tests {
         let rand = dm.sim_time_breakdown(&randsvd_cost(prob, 16, 24, 16), false);
         let speedup = rand / lanc;
         assert!(speedup > 0.8 && speedup < 4.0, "dense speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn shard_sizing_respects_latency_floor_and_cap() {
+        let dm = DeviceModel::a100();
+        // Latency floor: 20 × 10 µs × 2 GB/s = 400 KB per shard minimum.
+        let floor = (20.0 * dm.launch_latency * dm.disk_bw) as usize;
+        assert_eq!(floor, 400_000);
+        // Uncapped: a 1 GB operand targets the 16-deep pipeline.
+        let total = 1usize << 30;
+        assert_eq!(dm.shard_count(total, 0), 16);
+        assert!(dm.shard_bytes(total, 0) >= floor);
+        // A tight cap shrinks shards (cap/4) and multiplies their count.
+        let cap = 16 << 20; // 16 MB resident
+        assert_eq!(dm.shard_bytes(total, cap), cap / 4);
+        assert!(dm.shard_count(total, cap) > dm.shard_count(total, 0));
+        // Tiny operands never split below one shard of everything.
+        assert_eq!(dm.shard_count(1000, 0), 1);
+        assert_eq!(dm.shard_bytes(1000, 0), 1000);
+        // Zero-latency testbed model: floor degenerates, cap still binds.
+        let cm = DeviceModel::cpu_1core();
+        assert_eq!(cm.shard_bytes(total, cap), cap / 4);
     }
 
     #[test]

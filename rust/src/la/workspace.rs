@@ -336,26 +336,35 @@ impl<S: Scalar> Workspace<S> {
 /// serial cutoff and are touched by the caller — they are
 /// cache-resident anyway. Without `banded`, the caller zero-fills
 /// directly (throwaway scratch arenas).
+///
+/// When worker pinning is on (`TRUNKSVD_PIN=core|node`) the banded
+/// path switches from the work-estimated partition to
+/// [`pool::first_touch_bounds`]: one page-aligned band per configured
+/// worker, so small buffers can't collapse to the serial path and
+/// leave all their pages on the caller's node.
 fn first_touch_mat<S: Scalar>(rows: usize, cols: usize, banded: bool) -> Mat<S> {
     let len = rows * cols;
     let mut data: Vec<S> = Vec::with_capacity(len);
     {
         let spare = &mut data.spare_capacity_mut()[..len];
         let page_elems = (4096 / std::mem::size_of::<S>()).max(1);
-        if banded && rows > 0 {
-            pool::parallel_row_blocks_work(
-                spare,
-                rows,
-                page_elems,
-                len,
-                |_r0, _r1, cols: &mut [&mut [MaybeUninit<S>]]| {
-                    for col in cols.iter_mut() {
-                        for x in col.iter_mut() {
-                            x.write(S::ZERO);
-                        }
-                    }
-                },
-            );
+        let zero_band = |_r0: usize, _r1: usize, cols: &mut [&mut [MaybeUninit<S>]]| {
+            for col in cols.iter_mut() {
+                for x in col.iter_mut() {
+                    x.write(S::ZERO);
+                }
+            }
+        };
+        if banded && rows > 0 && pool::pin_level() != pool::PinLevel::Off {
+            // Pinned workers: force exactly one page-aligned band per
+            // worker regardless of the work estimate, so every page of
+            // band `w` is faulted (NUMA first-touch placed) on the
+            // worker pinned to band `w`'s node — the same worker the
+            // banded kernels hand that row range to.
+            let bounds = pool::first_touch_bounds(rows, page_elems);
+            pool::parallel_row_blocks_bounds(spare, rows, &bounds, zero_band);
+        } else if banded && rows > 0 {
+            pool::parallel_row_blocks_work(spare, rows, page_elems, len, zero_band);
         } else {
             for x in spare.iter_mut() {
                 x.write(S::ZERO);

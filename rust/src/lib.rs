@@ -41,6 +41,7 @@ pub mod sparse {
     pub mod coo;
     pub mod csr;
     pub mod mm;
+    pub mod shard;
 }
 
 pub mod gen {

@@ -117,8 +117,10 @@ const BAND_PLAN_CAP: usize = 32;
 /// Row bounds (strictly increasing, `0 .. rows`) splitting `indptr`'s
 /// rows into `bands` contiguous bands of roughly equal `nnz + rows`
 /// weight (the spmm work model), rounded to `align`-row boundaries so
-/// bands don't shear cache lines / first-touch pages.
-fn balanced_row_bounds(indptr: &[usize], bands: usize, align: usize) -> Vec<usize> {
+/// bands don't shear cache lines / first-touch pages. Shared with the
+/// out-of-core shard writer (`sparse::shard`), which cuts row-band
+/// shards on the same 32-row-aligned nnz-balanced boundaries.
+pub(crate) fn balanced_row_bounds(indptr: &[usize], bands: usize, align: usize) -> Vec<usize> {
     let rows = indptr.len() - 1;
     let total = indptr[rows] + rows;
     let mut bounds = Vec::with_capacity(bands + 1);
@@ -175,9 +177,13 @@ fn band_plan<S: Scalar>(a: &Csr<S>, bands: usize) -> Option<Arc<Vec<usize>>> {
 
 /// The spmm band body: gather rows `[r0, r1)` of `A·X` into `cols`
 /// (the band's sub-slices of the output columns). Shared by the uniform
-/// and cached-band-plan partitions; the inner dots are the
+/// and cached-band-plan partitions — and by the out-of-core sharded
+/// spmm (`sparse::shard`), which runs it on shard-local CSR arrays;
+/// every output element is written exactly once by a fixed-order dot,
+/// so any row partition (in-core bands or disk shards) produces
+/// bitwise-identical results. The inner dots are the
 /// `simd_gather_dot*` microkernels, 4-column register-blocked.
-fn spmm_rows<S: Scalar>(
+pub(crate) fn spmm_rows<S: Scalar>(
     indptr: &[usize],
     indices: &[u32],
     values: &[S],

@@ -3,6 +3,17 @@
 //! Supports the subset used by the SuiteSparse collection for this paper:
 //! `matrix coordinate real|integer|pattern general|symmetric`. Symmetric
 //! inputs are expanded to general storage on read.
+//!
+//! Two entry points share one parser:
+//!
+//! * [`read_coo`] / [`read_csr`] materialize the whole matrix (the
+//!   in-core path);
+//! * [`MmStream`] visits entries one at a time without building a COO —
+//!   the out-of-core shard converter (`sparse::shard`) runs two such
+//!   passes over files that do not fit in memory.
+//!
+//! Parse errors report **1-based line numbers** (`line N: ...`) so a bad
+//! entry in a multi-gigabyte file is locatable.
 
 use std::io::{BufRead, BufWriter, Write};
 
@@ -19,91 +30,150 @@ fn parse_err(detail: impl Into<String>) -> Error {
     Error::Parse { what: "matrixmarket", detail: detail.into() }
 }
 
-/// Read a MatrixMarket file into COO.
-pub fn read_coo(path: &str) -> Result<Coo> {
-    let f = std::fs::File::open(path).map_err(|e| io_err(path, e))?;
-    let reader = std::io::BufReader::new(f);
-    let mut lines = reader.lines();
+fn parse_err_at(lineno: usize, detail: impl std::fmt::Display) -> Error {
+    parse_err(format!("line {lineno}: {detail}"))
+}
 
-    // Header line.
-    let header = lines
-        .next()
-        .ok_or_else(|| parse_err("empty file"))?
-        .map_err(|e| io_err(path, e))?;
-    let h = header.to_ascii_lowercase();
-    let toks: Vec<&str> = h.split_whitespace().collect();
-    if toks.len() < 5 || toks[0] != "%%matrixmarket" || toks[1] != "matrix" {
-        return Err(parse_err(format!("bad header: {header}")));
-    }
-    if toks[2] != "coordinate" {
-        return Err(parse_err("only coordinate format supported"));
-    }
-    let field = toks[3]; // real | integer | pattern
-    let symmetry = toks[4]; // general | symmetric
-    if !matches!(field, "real" | "integer" | "pattern") {
-        return Err(parse_err(format!("unsupported field type {field}")));
-    }
-    if !matches!(symmetry, "general" | "symmetric") {
-        return Err(parse_err(format!("unsupported symmetry {symmetry}")));
-    }
+/// Parsed MatrixMarket header + size line.
+#[derive(Clone, Copy, Debug)]
+pub struct MmHeader {
+    pub rows: usize,
+    pub cols: usize,
+    /// Declared *stored* entry count (the size-line nnz). Symmetric files
+    /// expand to up to twice this many emitted entries.
+    pub entries: usize,
+    pub pattern: bool,
+    pub symmetric: bool,
+}
 
-    // Size line (skipping comments).
-    let mut size_line = None;
-    for line in lines.by_ref() {
-        let line = line.map_err(|e| io_err(path, e))?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('%') {
-            continue;
-        }
-        size_line = Some(line);
-        break;
-    }
-    let size_line = size_line.ok_or_else(|| parse_err("missing size line"))?;
-    let dims: Vec<usize> = size_line
-        .split_whitespace()
-        .map(|t| t.parse::<usize>().map_err(|_| parse_err("bad size line")))
-        .collect::<Result<_>>()?;
-    if dims.len() != 3 {
-        return Err(parse_err("size line needs 3 fields"));
-    }
-    let (rows, cols, nnz) = (dims[0], dims[1], dims[2]);
+/// Streaming MatrixMarket reader: header and size line are parsed by
+/// [`MmStream::open`]; [`MmStream::for_each`] then visits every stored
+/// entry (with symmetric expansion) without materializing the file.
+pub struct MmStream {
+    path: String,
+    lines: std::io::Lines<std::io::BufReader<std::fs::File>>,
+    lineno: usize,
+    header: MmHeader,
+}
 
-    let mut coo = Coo::new(rows, cols);
-    let mut seen = 0usize;
-    for line in lines {
-        let line = line.map_err(|e| io_err(path, e))?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('%') {
-            continue;
-        }
-        let mut it = t.split_whitespace();
-        let i: usize = it
+impl MmStream {
+    /// Open `path` and parse the banner + size line (skipping comments).
+    pub fn open(path: &str) -> Result<MmStream> {
+        let f = std::fs::File::open(path).map_err(|e| io_err(path, e))?;
+        let reader = std::io::BufReader::new(f);
+        let mut lines = reader.lines();
+        let mut lineno = 0usize;
+
+        // Banner line.
+        lineno += 1;
+        let banner = lines
             .next()
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| parse_err(format!("bad entry line: {t}")))?;
-        let j: usize = it
-            .next()
-            .and_then(|s| s.parse().ok())
-            .ok_or_else(|| parse_err(format!("bad entry line: {t}")))?;
-        let v: f64 = if field == "pattern" {
-            1.0
-        } else {
-            it.next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| parse_err(format!("bad value in: {t}")))?
+            .ok_or_else(|| parse_err("empty file"))?
+            .map_err(|e| io_err(path, e))?;
+        let h = banner.to_ascii_lowercase();
+        let toks: Vec<&str> = h.split_whitespace().collect();
+        if toks.len() < 5 || toks[0] != "%%matrixmarket" || toks[1] != "matrix" {
+            return Err(parse_err_at(lineno, format!("bad header: {banner}")));
+        }
+        if toks[2] != "coordinate" {
+            return Err(parse_err_at(lineno, "only coordinate format supported"));
+        }
+        let field = toks[3]; // real | integer | pattern
+        let symmetry = toks[4]; // general | symmetric
+        if !matches!(field, "real" | "integer" | "pattern") {
+            return Err(parse_err_at(lineno, format!("unsupported field type {field}")));
+        }
+        if !matches!(symmetry, "general" | "symmetric") {
+            return Err(parse_err_at(lineno, format!("unsupported symmetry {symmetry}")));
+        }
+
+        // Size line (skipping comments).
+        let mut size_line = None;
+        for line in lines.by_ref() {
+            lineno += 1;
+            let line = line.map_err(|e| io_err(path, e))?;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            size_line = Some(line);
+            break;
+        }
+        let size_line = size_line.ok_or_else(|| parse_err("missing size line"))?;
+        let dims: Vec<usize> = size_line
+            .split_whitespace()
+            .map(|t| t.parse::<usize>().map_err(|_| parse_err_at(lineno, "bad size line")))
+            .collect::<Result<_>>()?;
+        if dims.len() != 3 {
+            return Err(parse_err_at(lineno, "size line needs 3 fields"));
+        }
+        let header = MmHeader {
+            rows: dims[0],
+            cols: dims[1],
+            entries: dims[2],
+            pattern: field == "pattern",
+            symmetric: symmetry == "symmetric",
         };
-        if i == 0 || j == 0 || i > rows || j > cols {
-            return Err(parse_err(format!("index out of range: {t}")));
-        }
-        coo.push(i - 1, j - 1, v);
-        if symmetry == "symmetric" && i != j {
-            coo.push(j - 1, i - 1, v);
-        }
-        seen += 1;
+        Ok(MmStream { path: path.to_string(), lines, lineno, header })
     }
-    if seen != nnz {
-        return Err(parse_err(format!("expected {nnz} entries, found {seen}")));
+
+    #[inline]
+    pub fn header(&self) -> MmHeader {
+        self.header
     }
+
+    /// Visit every stored entry as `emit(row, col, value)` with 0-based
+    /// indices; symmetric inputs additionally emit the mirrored
+    /// off-diagonal entry. Validates the declared entry count at EOF.
+    pub fn for_each(self, mut emit: impl FnMut(usize, usize, f64)) -> Result<()> {
+        let MmStream { path, lines, mut lineno, header } = self;
+        let MmHeader { rows, cols, entries, pattern, symmetric } = header;
+        let mut seen = 0usize;
+        for line in lines {
+            lineno += 1;
+            let line = line.map_err(|e| io_err(&path, e))?;
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let i: usize = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| parse_err_at(lineno, format!("bad entry line: {t}")))?;
+            let j: usize = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| parse_err_at(lineno, format!("bad entry line: {t}")))?;
+            let v: f64 = if pattern {
+                1.0
+            } else {
+                it.next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| parse_err_at(lineno, format!("bad value in: {t}")))?
+            };
+            if i == 0 || j == 0 || i > rows || j > cols {
+                return Err(parse_err_at(lineno, format!("index out of range: {t}")));
+            }
+            emit(i - 1, j - 1, v);
+            if symmetric && i != j {
+                emit(j - 1, i - 1, v);
+            }
+            seen += 1;
+        }
+        if seen != entries {
+            return Err(parse_err(format!("expected {entries} entries, found {seen}")));
+        }
+        Ok(())
+    }
+}
+
+/// Read a MatrixMarket file into COO (in-core path over [`MmStream`]).
+pub fn read_coo(path: &str) -> Result<Coo> {
+    let stream = MmStream::open(path)?;
+    let h = stream.header();
+    let mut coo = Coo::new(h.rows, h.cols);
+    stream.for_each(|i, j, v| coo.push(i, j, v))?;
     Ok(coo)
 }
 
@@ -188,5 +258,54 @@ mod tests {
         std::fs::write(&path, "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 3.0\n")
             .unwrap();
         assert!(read_coo(&path).is_err(), "nnz mismatch");
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        // Bad entry on physical line 4 (banner, comment, size, entry).
+        let path = tmp("lineno1.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n% c\n2 2 2\n1 1 3.0\n9 9 1.0\n",
+        )
+        .unwrap();
+        let e = read_coo(&path).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("line 5"), "out-of-range index location missing: {msg}");
+        // Malformed value, line 3 (banner, size, entry).
+        let path = tmp("lineno2.mtx");
+        std::fs::write(&path, "%%MatrixMarket matrix coordinate real general\n1 1 1\n1 1 x\n")
+            .unwrap();
+        let msg = format!("{}", read_coo(&path).unwrap_err());
+        assert!(msg.contains("line 3"), "bad value location missing: {msg}");
+        // Bad size line keeps its own location too.
+        let path = tmp("lineno3.mtx");
+        std::fs::write(&path, "%%MatrixMarket matrix coordinate real general\n% c\nnope\n")
+            .unwrap();
+        let msg = format!("{}", MmStream::open(&path).unwrap_err());
+        assert!(msg.contains("line 3"), "size-line location missing: {msg}");
+    }
+
+    #[test]
+    fn stream_matches_read_coo() {
+        let mut rng = Rng::new(9);
+        let mut coo = Coo::new(21, 15);
+        for _ in 0..60 {
+            coo.push(rng.below(21), rng.below(15), rng.normal());
+        }
+        let a = Csr::from_coo(&coo).unwrap();
+        let path = tmp("stream.mtx");
+        write_csr(&path, &a).unwrap();
+        let stream = MmStream::open(&path).unwrap();
+        let h = stream.header();
+        assert_eq!((h.rows, h.cols, h.entries), (21, 15, a.nnz()));
+        assert!(!h.pattern && !h.symmetric);
+        let mut streamed = Coo::new(h.rows, h.cols);
+        stream.for_each(|i, j, v| streamed.push(i, j, v)).unwrap();
+        let b = Csr::from_coo(&streamed).unwrap();
+        let c = read_csr(&path).unwrap();
+        assert_eq!(b.indptr(), c.indptr());
+        assert_eq!(b.indices(), c.indices());
+        assert_eq!(b.values(), c.values());
     }
 }

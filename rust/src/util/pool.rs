@@ -590,6 +590,32 @@ pub fn planned_bands(work: usize, tasks: usize) -> usize {
     plan_work(work, tasks)
 }
 
+/// Page-aligned first-touch row bounds: one band per configured worker
+/// (at most one per `page_elems`-sized page run), strictly increasing
+/// and spanning `[0, rows]`. Under `TRUNKSVD_PIN` the workspace arena
+/// zero-fills through [`parallel_row_blocks_bounds`] with these bounds
+/// so band `w`'s pages are faulted — and, on a first-touch NUMA host,
+/// placed — by the same pinned worker that will stream them in the
+/// banded kernels ([`parallel_row_blocks_work`] plans its bands from
+/// the identical thread count, so the partitions coincide whenever the
+/// work estimate saturates the pool).
+pub fn first_touch_bounds(rows: usize, page_elems: usize) -> Vec<usize> {
+    let page = page_elems.max(1);
+    let pages = rows.div_ceil(page).max(1);
+    let nb = num_threads().min(pages).max(1);
+    let per = pages.div_ceil(nb);
+    let mut bounds = Vec::with_capacity(nb + 1);
+    bounds.push(0usize);
+    for w in 0..nb {
+        let hi = ((w + 1) * per * page).min(rows);
+        if hi > *bounds.last().unwrap() {
+            bounds.push(hi);
+        }
+    }
+    debug_assert_eq!(*bounds.last().unwrap(), rows);
+    bounds
+}
+
 /// Band count for a slice-partitioned helper owning `work` elements
 /// split across at most `tasks` atomic units: scale bands so each owns
 /// at least [`parallel_cutoff`] elements, capped by the thread count.
@@ -1152,6 +1178,30 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn first_touch_bounds_invariants() {
+        for rows in [1usize, 7, 512, 513, 4096, 100_003] {
+            for page in [1usize, 64, 512, 1024] {
+                let b = first_touch_bounds(rows, page);
+                assert!(b.len() >= 2, "rows={rows} page={page}: {b:?}");
+                assert_eq!(b[0], 0);
+                assert_eq!(*b.last().unwrap(), rows);
+                assert!(b.windows(2).all(|w| w[0] < w[1]), "{b:?}");
+                // Interior bounds are page-aligned (only the final bound
+                // may land mid-page, at `rows` itself).
+                assert!(
+                    b[1..b.len() - 1].iter().all(|&x| x % page == 0),
+                    "rows={rows} page={page}: {b:?}"
+                );
+                // One band per worker at most.
+                assert!(b.len() - 1 <= num_threads().max(1));
+            }
+        }
+        // Fewer page runs than workers: never split below one page.
+        let b = first_touch_bounds(10, 4096);
+        assert_eq!(b, vec![0, 10]);
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Out-of-core sharded-operand integration suite.
+//!
+//! The normative claim (ISSUE 7 / `backend/mod.rs` §6): a solve over a
+//! row-band shard directory under any admissible resident-bytes cap is
+//! **bitwise-identical** to the in-core solve at a fixed thread count —
+//! the prefetch pipeline overlaps I/O only, it never reorders compute.
+//! The bitwise anchor is the scatter-only CPU backend (sharded Aᵀ·X is
+//! a global-row-order scatter by construction).
+//!
+//! Also covered here: the staged backend's three-tier ledger (each
+//! shard's file bytes hit the disk tier exactly once per pass; the disk
+//! tier never pollutes the host↔arena hot-loop accounting), resident-cap
+//! enforcement (peak decoded bytes ≤ cap; an inadmissible cap is an
+//! `Err` from the driver, not a panic), the streaming MatrixMarket
+//! converter at solve level, and driver/backend policy (`cpu-expt` is
+//! rejected out-of-core).
+//!
+//! Every test that touches the global pool serializes on `POOL_LOCK`
+//! and restores defaults on exit (same idiom as `test_threaded_kernels`).
+
+use std::sync::{Arc, Mutex};
+
+use trunksvd::algo::lancsvd::lancsvd;
+use trunksvd::algo::randsvd::randsvd;
+use trunksvd::algo::{LancSvdOpts, RandSvdOpts, TruncatedSvd};
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::backend::staged::StagedBackend;
+use trunksvd::backend::Operand;
+use trunksvd::coordinator::driver::{make_backend_at, BackendChoice};
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::sparse::shard::{self, ShardDir};
+use trunksvd::util::pool;
+use trunksvd::util::scalar::Scalar;
+use trunksvd::Csr;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+struct PoolReset;
+impl Drop for PoolReset {
+    fn drop(&mut self) {
+        pool::set_num_threads(0);
+    }
+}
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("trunksvd_ooc_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.to_str().unwrap().to_string()
+}
+
+fn test_matrix() -> Csr {
+    generate(&SparseSpec { rows: 600, cols: 220, nnz: 7000, seed: 41, ..Default::default() })
+}
+
+fn assert_bitwise_svd<S: Scalar>(a: &TruncatedSvd<S>, b: &TruncatedSvd<S>, what: &str) {
+    assert_eq!(a.iters, b.iters, "{what}: iteration counts differ");
+    assert_eq!(a.sigma.len(), b.sigma.len(), "{what}: rank differs");
+    for (i, (x, y)) in a.sigma.iter().zip(&b.sigma).enumerate() {
+        assert_eq!(x.to_f64().to_bits(), y.to_f64().to_bits(), "{what}: sigma[{i}]");
+    }
+    for (m, (x, y)) in [("u", (&a.u, &b.u)), ("v", (&a.v, &b.v))] {
+        assert_eq!(x.data().len(), y.data().len(), "{what}: {m} shape");
+        for (i, (p, q)) in x.data().iter().zip(y.data()).enumerate() {
+            assert_eq!(p.to_f64().to_bits(), q.to_f64().to_bits(), "{what}: {m}[{i}]");
+        }
+    }
+}
+
+/// Solve in-core (scatter-only) and sharded-under-cap at one precision,
+/// both algorithms, asserting bitwise-identical factors throughout.
+fn parity_at<S: Scalar>(a: &Csr<S>, sd: &Arc<ShardDir>, cap: usize) {
+    let lopts = LancSvdOpts { r: 16, p: 3, b: 8, wanted: 6, seed: 7, ..Default::default() };
+    let ropts = RandSvdOpts { r: 12, p: 6, b: 8, seed: 7, ..Default::default() };
+
+    let mut be_in = CpuBackend::new_sparse(a.clone()).scatter_only();
+    let lanc_in = lancsvd(&mut be_in, &lopts).unwrap();
+    let mut be_in = CpuBackend::new_sparse(a.clone()).scatter_only();
+    let rand_in = randsvd(&mut be_in, &ropts).unwrap();
+
+    let mut be_sh = CpuBackend::<S>::new(Operand::sharded(Arc::clone(sd), cap));
+    be_sh.ensure_operand_resident().unwrap();
+    let lanc_sh = lancsvd(&mut be_sh, &lopts).unwrap();
+    let mut be_sh = CpuBackend::<S>::new(Operand::sharded(Arc::clone(sd), cap));
+    let rand_sh = randsvd(&mut be_sh, &ropts).unwrap();
+
+    assert_bitwise_svd(&lanc_in, &lanc_sh, "lancsvd");
+    assert_bitwise_svd(&rand_in, &rand_sh, "randsvd");
+}
+
+#[test]
+fn sharded_solves_bitwise_match_incore_both_dtypes() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(3);
+    let a = test_matrix();
+    let dir = tmp("parity");
+    let sd = Arc::new(shard::write_shards_from_csr(&dir, &a, 5).unwrap());
+    assert_eq!(sd.num_shards(), 5);
+    // Tight cap: zero pinned prefix, every pass streams through the
+    // double-buffered prefetch slots.
+    let cap64 = 2 * sd.max_resident_bytes::<f64>();
+    parity_at::<f64>(&a, &sd, cap64);
+    // Unlimited cap (pin everything, no loader thread) must also match.
+    parity_at::<f64>(&a, &sd, 0);
+    // f32: disk stores f64; the shard load's from_f64 cast is the same
+    // cast `Csr::cast` applies, so parity holds at f32 too.
+    let a32: Csr<f32> = a.cast();
+    let cap32 = 2 * sd.max_resident_bytes::<f32>();
+    parity_at::<f32>(&a32, &sd, cap32);
+}
+
+#[test]
+fn converted_mtx_shards_solve_bitwise_like_the_file() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(2);
+    let a = test_matrix();
+    let dir = tmp("convert");
+    let mtx = format!("{dir}/a.mtx");
+    trunksvd::sparse::mm::write_csr(&mtx, &a).unwrap();
+    // Stream-convert (never materializes the COO) and re-read the file
+    // in-core: the two operand paths must agree bit-for-bit end to end.
+    let sd = Arc::new(shard::convert_mtx_to_shards(&mtx, &format!("{dir}/shards"), 4).unwrap());
+    let a_file = trunksvd::sparse::mm::read_csr(&mtx).unwrap();
+    let cap = 2 * sd.max_resident_bytes::<f64>();
+    parity_at::<f64>(&a_file, &sd, cap);
+}
+
+#[test]
+fn staged_ledger_accounts_disk_tier_exactly_once_per_pass() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(2);
+    let a = test_matrix();
+    let dir = tmp("ledger");
+    let n_shards = 4usize;
+    let sd = Arc::new(shard::write_shards_from_csr(&dir, &a, n_shards).unwrap());
+    let file_bytes = sd.total_file_bytes();
+    let opts = LancSvdOpts { r: 16, p: 3, b: 8, wanted: 6, seed: 7, ..Default::default() };
+
+    // Streaming regime: every pass reloads every shard.
+    let cap = 2 * sd.max_resident_bytes::<f64>();
+    let mut be: StagedBackend = StagedBackend::new_sharded(Arc::clone(&sd), cap);
+    be.ensure_operand_resident().unwrap();
+    lancsvd(&mut be, &opts).unwrap();
+    let t = be.ledger().totals();
+    let st = be.shard_stats().unwrap();
+    assert!(st.passes > 0);
+    assert_eq!(st.pin_loads, 0, "tight cap must pin nothing");
+    assert_eq!(
+        st.stream_bytes,
+        st.passes * file_bytes,
+        "each pass must stream each shard's file exactly once"
+    );
+    assert_eq!(st.stream_loads, st.passes * n_shards);
+    assert_eq!(t.disk_count as usize, st.stream_loads, "every load ledgered, none twice");
+    assert_eq!(t.disk_bytes as usize, st.stream_bytes);
+    // Rule 3 and the POTRF-only factor accounting are host↔arena
+    // properties; the disk tier must not leak into either.
+    assert_eq!(t.hot_panel_transfers, 0);
+
+    // In-core staged reference: identical hot-loop accounting.
+    let mut be_ref: StagedBackend = StagedBackend::new_sparse(a.clone());
+    lancsvd(&mut be_ref, &opts).unwrap();
+    let tr = be_ref.ledger().totals();
+    assert_eq!(
+        t.hot_factor_crossings, tr.hot_factor_crossings,
+        "disk traffic must not change factor-crossing counts"
+    );
+    assert_eq!((tr.disk_count, tr.disk_bytes), (0, 0), "in-core solve has no disk tier");
+
+    // Unlimited cap: the whole operand is pinned once at staging —
+    // disk bytes appear exactly once regardless of pass count, and the
+    // pinned prefix counts as staged operand bytes.
+    let mut be_pin: StagedBackend = StagedBackend::new_sharded(Arc::clone(&sd), 0);
+    be_pin.ensure_operand_resident().unwrap();
+    lancsvd(&mut be_pin, &opts).unwrap();
+    let tp = be_pin.ledger().totals();
+    let sp = be_pin.shard_stats().unwrap();
+    assert_eq!(sp.pin_loads, n_shards);
+    assert_eq!((sp.stream_loads, sp.stream_bytes), (0, 0));
+    assert_eq!(tp.disk_bytes as usize, file_bytes, "pinned: one load per shard, ever");
+    assert!(tp.staged_operand_bytes as usize >= file_bytes);
+}
+
+#[test]
+fn resident_cap_is_enforced_and_validated() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(2);
+    let a = test_matrix();
+    let dir = tmp("cap");
+    let sd = Arc::new(shard::write_shards_from_csr(&dir, &a, 5).unwrap());
+    let maxb = sd.max_resident_bytes::<f64>();
+
+    // Peak decoded shard bytes stay under the cap for a whole solve.
+    for cap in [2 * maxb, 3 * maxb] {
+        let mut be = CpuBackend::<f64>::new(Operand::sharded(Arc::clone(&sd), cap));
+        be.ensure_operand_resident().unwrap();
+        let opts = LancSvdOpts { r: 16, p: 3, b: 8, wanted: 6, seed: 7, ..Default::default() };
+        lancsvd(&mut be, &opts).unwrap();
+        let st = be.shard_stats().unwrap();
+        assert!(
+            st.peak_resident_bytes <= cap,
+            "peak {} exceeds cap {cap}",
+            st.peak_resident_bytes
+        );
+    }
+
+    // A cap smaller than the largest shard is an Err from the driver
+    // (make_backend_at resolves the manifest eagerly), not a panic.
+    let too_small = Operand::<f64>::sharded(Arc::clone(&sd), maxb - 1);
+    assert!(make_backend_at::<f64>(too_small, &BackendChoice::Cpu).is_err());
+    let staged_small = Operand::<f64>::sharded(Arc::clone(&sd), maxb - 1);
+    assert!(make_backend_at::<f64>(staged_small, &BackendChoice::Staged).is_err());
+
+    // cpu-expt needs the whole operand in core for its eager transpose.
+    let op = Operand::<f64>::sharded(Arc::clone(&sd), 0);
+    assert!(make_backend_at::<f64>(op, &BackendChoice::CpuExplicitT).is_err());
+}
