@@ -1,0 +1,39 @@
+//! Replays a serve workload trace over one warm server and writes the
+//! per-job latency / throughput / reuse report to `BENCH_serve.json`.
+//!
+//!     cargo bench --bench bench_serve [-- WORKLOAD [OUT]]
+//!
+//! Defaults to the committed CI trace `config/workloads/smoke.json`.
+//! With `BENCH_ASSERT_REUSE=1` the replayer additionally gates on ≥1
+//! operand-cache hit, ≥1 warm workspace reuse, ≥1 exercised rejection,
+//! zero rework and zero failures (bitwise repeat-run determinism is
+//! always enforced).
+
+use trunksvd::runtime::serve::{replay_file, ReplayOverrides};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let workload = args
+        .first()
+        .cloned()
+        .unwrap_or_else(|| format!("{}/config/workloads/smoke.json", env!("CARGO_MANIFEST_DIR")));
+    let out = args.get(1).cloned().unwrap_or_else(|| "BENCH_serve.json".to_string());
+
+    let s = replay_file(&workload, Some(&out), &ReplayOverrides::default()).expect("replay");
+    let c = s.counters;
+    println!(
+        "replayed {} x{} runs in {:.3}s: {} completed, {} failed, {} rejected \
+         (operand hits {}, rework {}, warm workspace reuses {}) -> {}",
+        s.jobs_per_run,
+        s.runs,
+        s.wall_secs,
+        c.completed,
+        c.failed,
+        c.rejected_backpressure + c.rejected_deadline,
+        c.operand_hits,
+        c.operand_rework,
+        c.ws_warm_reuses,
+        out,
+    );
+    assert!(s.deterministic, "repeat runs diverged bitwise");
+}

@@ -149,6 +149,12 @@ pub fn lancsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
     let mut filled = 0usize;
 
     for j in 1..=p {
+        // Restart boundary: a cooperative safepoint where a serving
+        // scheduler can interleave co-tenant solves (no numeric effect;
+        // no-op unless the thread installed a hook — `runtime::serve`).
+        if j > 1 {
+            crate::util::pool::restart_yield();
+        }
         iters = j;
         // Extend the bases block-by-block until the Krylov width is full.
         while filled < r {

@@ -90,7 +90,12 @@ pub fn randsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
     be.stage_in(q.as_ref());
     t.stop(be.profile_mut());
 
-    for _j in 1..=p {
+    for j in 1..=p {
+        // Power-iteration boundary: same cooperative safepoint as the
+        // LancSVD restart loop (no-op without a hook — `runtime::serve`).
+        if j > 1 {
+            crate::util::pool::restart_yield();
+        }
         // S1: Ȳ = A·Q
         be.profile_mut().set_phase(Block::MultA);
         be.apply_a_into(q.as_ref(), qbar.as_mut());

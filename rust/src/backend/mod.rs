@@ -569,6 +569,32 @@ impl<S: Scalar> Operand<S> {
             }
         }
     }
+
+    /// A collision-free identity token for operand-level caching
+    /// (`runtime::serve` keys its warm-backend cache on it), or `None`
+    /// when the operand carries no stable identity:
+    ///
+    /// * `Sparse` — the process-unique [`Csr::generation`] stamp
+    ///   (`crate::sparse::csr::Csr::generation`). `Arc`-clones share the
+    ///   stamp (same matrix ⇒ same key); rebuilding or deep-cloning a
+    ///   matrix — even with identical contents — mints a fresh stamp and
+    ///   therefore misses, which is the conservative direction.
+    /// * `Sharded` — the shard-directory path plus the resident cap (the
+    ///   cap changes staging behavior, so it is part of the identity).
+    /// * `Dense` — `None`. A bare `Mat` has no generation stamp, and its
+    ///   data pointer is unusable as a key (a freed-and-reused
+    ///   allocation would alias a dead entry). Callers that *know* two
+    ///   dense operands are the same matrix pass their own tag at the
+    ///   job layer instead (`runtime::serve::JobSpec::operand_tag`).
+    pub fn identity_key(&self) -> Option<String> {
+        match self {
+            Operand::Sparse(a) => Some(format!("csr:g{}", a.generation())),
+            Operand::Dense(_) => None,
+            Operand::Sharded { dir, resident_cap } => {
+                Some(format!("shards:{}:cap{resident_cap}", dir.path()))
+            }
+        }
+    }
 }
 
 #[cfg(test)]

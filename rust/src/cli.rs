@@ -14,13 +14,17 @@
 //! trunksvd experiment fig1|fig2|fig3|fig4|table1|table2|all \
 //!                [--subset N] [--shrink S] [--out DIR] [--dtype f32|f64] \
 //!                [--backend ...]
+//! trunksvd serve [--workers N] [--queue-cap N] [--backend cpu|...|staged] \
+//!                [--deadline-ms MS] [--socket PATH]
+//! trunksvd serve --replay config/workloads/W.json [--out BENCH_serve.json] \
+//!                [--repeat N] [--workers N] [--queue-cap N]
 //! ```
 
 use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::backend::Operand;
-use crate::coordinator::driver::{run, Algo, BackendChoice, Params};
+use crate::coordinator::driver::{run, Algo, BackendChoice, Params, SendBackendChoice};
 use crate::coordinator::experiments::{self, ExpOpts};
 use crate::coordinator::report::sci;
 use crate::error::{Error, Result};
@@ -111,7 +115,15 @@ const USAGE: &str = "usage: trunksvd <info|suite|gen|shard|solve|experiment> [op
         [--tol T] [--wanted K] [--restart basic|thick] [--keep K]
         [--dtype f32|f64] [--backend cpu|cpu-scatter|cpu-expt|staged|xla]
   experiment fig1|fig2|fig3|fig4|table1|table2|all
-        [--subset N] [--shrink S] [--out DIR] [--dtype f32|f64] [--backend ...]";
+        [--subset N] [--shrink S] [--out DIR] [--dtype f32|f64] [--backend ...]
+  serve [--workers N] [--queue-cap N] [--backend cpu|cpu-scatter|cpu-expt|staged]
+        [--deadline-ms MS] [--socket PATH]
+        line-delimited JSON jobs on stdin (or the unix socket), results out;
+        see rust/src/runtime/serve.rs for the job schema
+  serve --replay config/workloads/W.json [--out BENCH_serve.json]
+        [--repeat N] [--workers N] [--queue-cap N] [--backend ...]
+        replay a committed workload against one warm server and write
+        per-job latency / reuse-rate metrics (BENCH_ASSERT_REUSE=1 gates)";
 
 /// Run the CLI; returns the process exit code.
 pub fn main_with_args(argv: Vec<String>) -> i32 {
@@ -134,6 +146,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "gen" => cmd_gen(&args),
         "shard" => cmd_shard(&args),
         "solve" => cmd_solve(&args),
+        "serve" => cmd_serve(&args),
         "experiment" => cmd_experiment(&args),
         "help" | "--help" => {
             println!("{USAGE}");
@@ -308,6 +321,122 @@ fn cmd_solve(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// `serve`: the long-running multi-tenant solve service
+/// (`runtime::serve`) — either interactive (line-delimited JSON jobs on
+/// stdin or a unix socket) or replaying a committed workload file with
+/// metrics output.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::runtime::serve::{
+        replay_file, serve_connection, JobDefaults, ProtocolState, ReplayOverrides, ServeConfig,
+        Server,
+    };
+
+    let backend = match args.get("backend") {
+        None => SendBackendChoice::Cpu,
+        Some("xla") => {
+            return Err(Error::Parse {
+                what: "cli",
+                detail: "serve needs a Send backend (cpu|cpu-scatter|cpu-expt|staged); \
+                         the xla backend is bound to its creating thread"
+                    .into(),
+            })
+        }
+        Some(tag) => SendBackendChoice::parse(tag).ok_or(Error::Parse {
+            what: "cli",
+            detail: format!("unknown backend '{tag}' (cpu|cpu-scatter|cpu-expt|staged)"),
+        })?,
+    };
+
+    // Present-only flag → Some(parsed), absent → None (workload file or
+    // ServeConfig default wins).
+    let opt_usize = |key: &str| -> Result<Option<usize>> {
+        match args.get(key) {
+            None => Ok(None),
+            Some(_) => args.get_usize(key, 0).map(Some),
+        }
+    };
+
+    if let Some(workload) = args.get("replay") {
+        let ov = ReplayOverrides {
+            workers: opt_usize("workers")?,
+            queue_cap: opt_usize("queue-cap")?,
+            repeat: opt_usize("repeat")?,
+            backend: args.get("backend").map(|_| backend),
+        };
+        let out = args.get("out").unwrap_or("BENCH_serve.json");
+        let s = replay_file(workload, Some(out), &ov)?;
+        let c = s.counters;
+        println!(
+            "replayed {workload}: {} run(s) x {} job(s) in {:.3}s \
+             (ok {}, failed {}, rejected {}, bitwise_identical {})",
+            s.runs,
+            s.jobs_per_run,
+            s.wall_secs,
+            c.completed,
+            c.failed,
+            c.rejected_backpressure + c.rejected_deadline,
+            s.deterministic,
+        );
+        println!(
+            "  reuse: operand hits {}/{} (rework {}), warm workspaces {}/{}, \
+             restart yields {}",
+            c.operand_hits,
+            c.operand_hits + c.operand_misses,
+            c.operand_rework,
+            c.ws_warm_reuses,
+            c.ws_warm_reuses + c.ws_created,
+            c.restart_yields,
+        );
+        println!("  report: {out}");
+        return Ok(());
+    }
+
+    let cfg = ServeConfig {
+        solvers: args.get_usize("workers", 2)?,
+        queue_cap: args.get_usize("queue-cap", 16)?,
+        backend,
+        default_deadline: args
+            .get_f64("deadline-ms")?
+            .map(|ms| std::time::Duration::from_secs_f64(ms.max(0.0) / 1e3)),
+        max_free_ws_per_class: args.get_usize("ws-per-class", 4)?,
+    };
+    let mut server = Server::new(cfg);
+    let defaults = JobDefaults::default();
+
+    if let Some(sock) = args.get("socket") {
+        #[cfg(unix)]
+        {
+            eprintln!("serving on unix socket {sock}");
+            crate::runtime::serve::serve_unix(&server, sock, &defaults)?;
+            server.shutdown();
+            return Ok(());
+        }
+        #[cfg(not(unix))]
+        return Err(Error::Parse {
+            what: "cli",
+            detail: format!("--socket {sock} needs a unix platform; use stdin mode"),
+        });
+    }
+
+    let st = ProtocolState::new();
+    let stdin = std::io::stdin();
+    let mut stdout = std::io::stdout();
+    serve_connection(&server, &st, &defaults, stdin.lock(), &mut stdout)?;
+    server.shutdown();
+    let c = server.counters();
+    eprintln!(
+        "served {} job(s): ok {}, failed {}, rejected {}; operand hits {}, \
+         warm workspaces {}",
+        c.submitted,
+        c.completed,
+        c.failed,
+        c.rejected_backpressure + c.rejected_deadline,
+        c.operand_hits,
+        c.ws_warm_reuses,
+    );
     Ok(())
 }
 

@@ -111,7 +111,9 @@ pub mod names {
 }
 
 /// Which solve a [`Plan`] was computed for (shapes differ per algorithm).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// `Hash` because the serving layer (`runtime::serve`) keys its warm
+/// workspace pool on `(kind, m, n, r, p, b, dtype)` shape classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PlanKind {
     /// LancSVD (Alg. 2): Lanczos bases + B_k + restart scratch.
     LancSvd,

@@ -59,6 +59,7 @@ pub mod cost;
 pub mod metrics;
 
 pub use error::{Error, Result};
+pub use runtime::serve::{JobResult, JobSpec, JobStatus, ServeConfig, Server, ShapeClass};
 pub use la::mat::Mat;
 pub use la::workspace::{Plan, Workspace};
 pub use sparse::csr::Csr;

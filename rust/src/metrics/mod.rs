@@ -164,6 +164,20 @@ impl Timer {
     }
 }
 
+/// Nearest-rank percentile of a sample (`p` in `[0, 100]`): the smallest
+/// value with at least `p`% of the sample at or below it. `0.0` on an
+/// empty sample. Used by the serve replayer's per-job latency summary
+/// (`runtime::serve` → `BENCH_serve.json`).
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,6 +9,7 @@
 
 pub mod builder_ops;
 pub mod convert;
+pub mod serve;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

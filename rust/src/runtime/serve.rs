@@ -1,0 +1,1733 @@
+//! Multi-tenant truncated-SVD serving: many concurrent jobs over one
+//! warm process.
+//!
+//! The one-shot CLI pays the full cold-start price on every query:
+//! operand staging (CSR admission, explicit-transpose build, shard
+//! manifest resolution), first-touch workspace arenas, and thread-pool
+//! spin-up. A retrieval or LSI service issuing thousands of truncated
+//! SVDs against a handful of corpus matrices re-pays those costs for no
+//! reason. `trunksvd serve` keeps the process warm and multiplexes jobs
+//! over three reuse layers:
+//!
+//! * **Workspace pool** ([`WorkspacePool`]) — solve arenas keyed by
+//!   *shape class* `(kind, m, n, r, p, b, dtype)` ([`ShapeClass`]). A
+//!   completed job checks its workspace back in; the next job of the
+//!   same class reuses the warm, already-first-touched arena through
+//!   the allocation-free [`lancsvd_with`] / [`randsvd_with`] entry
+//!   points instead of paying `Workspace::new`.
+//! * **Operand cache** ([`OperandCache`] inside the server) — built
+//!   backends keyed by *operand identity*: the process-unique
+//!   [`Csr::generation`](crate::sparse::csr::Csr::generation) stamp for
+//!   in-core sparse, the shard-dir path + resident cap for out-of-core,
+//!   or the caller-supplied [`JobSpec::operand_tag`] (the protocol layer
+//!   uses the canonical operand-spec JSON). A repeat query against the
+//!   same matrix skips staging entirely — including the eager explicit
+//!   transpose — and lands on the warm backend.
+//! * **Admission control** — a bounded queue ([`ServeConfig::queue_cap`])
+//!   with per-job deadlines. A full queue or an expired deadline is a
+//!   *typed rejection* ([`JobStatus::Rejected`]), distinct from a solve
+//!   failure, so callers can tell backpressure from broken inputs.
+//!
+//! # Scheduling policy
+//!
+//! Jobs are FIFO *within* a shape class and round-robin *across*
+//! classes: the scheduler keeps one sub-queue per class and rotates
+//! through the non-empty classes, so a burst of large jobs cannot
+//! starve a co-tenant's small ones, while same-class jobs retain
+//! submission order (which maximizes warm-workspace and warm-backend
+//! locality). Solver workers additionally install a cooperative
+//! restart-boundary yield hook
+//! ([`pool::set_restart_yield_hook`](crate::util::pool::set_restart_yield_hook)):
+//! the algorithms call back at every outer-iteration boundary, giving
+//! the OS a chance to interleave co-tenant solver threads at points
+//! that have **no numeric effect**.
+//!
+//! # Determinism
+//!
+//! Repeat submissions of an identical job at a fixed
+//! `TRUNKSVD_THREADS` return **bitwise-identical** singular values
+//! regardless of interleaving with other tenants. Everything
+//! schedule-dependent is kept out of the solve: backends are built by
+//! [`make_send_backend_at`], whose `cpu` choice uses the *eager*
+//! explicit transpose (the interactive adaptive transpose adopts its
+//! cached copy at a schedule-dependent instant, which would flip
+//! reduction orders between runs), and workspace reuse is
+//! content-independent (arenas carry no state between solves that the
+//! algorithms read before writing).
+//!
+//! # Job protocol
+//!
+//! One JSON object per line on stdin (or a unix socket via
+//! `trunksvd serve --socket`), one JSON result object per line out
+//! (order follows completion, not submission; match on `id`):
+//!
+//! ```text
+//! {"id": "q1", "algo": "lanc", "r": 16, "p": 2, "b": 8, "seed": 7,
+//!  "wanted": 4, "dtype": "f64",
+//!  "operand": {"sparse": {"rows": 400, "cols": 160, "nnz": 6000, "seed": 11}}}
+//! ```
+//!
+//! Operand specs: `{"suite": NAME}` (config/suite.json entry),
+//! `{"mtx": PATH}`, `{"sparse": {rows, cols, nnz, seed[, skew,
+//! value_decay]}}` (the synthetic generator), `{"dense": {m, n[,
+//! seed]}}` (the paper's dense spectrum), `{"shards": DIR[,
+//! "resident_cap": BYTES]}` (out-of-core). Identical operand specs
+//! resolve to the *same* in-memory operand (one build, shared `Arc`),
+//! which is what makes the operand cache hit across jobs. Optional
+//! per-job fields: `deadline_ms` (0 ⇒ reject at admission —
+//! deterministic, used by CI gates), `tol`, `restart`/`keep`, and the
+//! fault-injection knobs `inject_panic` / `inject_delay_ms` (tests).
+//!
+//! Results: `{"id", "status": "ok"|"failed"|"rejected", "sigma": [..],
+//! "iters", "secs", "queue_secs", "shape_class", "operand_hit",
+//! "workspace_warm"[, "error", "est_residuals"]}`.
+//!
+//! # Replay
+//!
+//! `trunksvd serve --replay config/workloads/smoke.json` replays a
+//! committed workload (optionally several times over one warm server),
+//! checks that repeat runs are bitwise identical, and writes per-job
+//! latency / throughput / reuse-rate metrics to `BENCH_serve.json`.
+//! With `BENCH_ASSERT_REUSE=1` it additionally gates on the reuse
+//! counters (≥1 operand-cache hit, ≥1 warm workspace reuse, ≥1
+//! exercised rejection, zero rework, zero failures) — the CI
+//! `serve-stress` contract.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::algo::lancsvd::lancsvd_with;
+use crate::algo::randsvd::randsvd_with;
+use crate::algo::{InitDist, LancSvdOpts, RandSvdOpts, Restart, TruncatedSvd};
+use crate::backend::{Backend, Operand};
+use crate::coordinator::driver::{make_send_backend_at, Algo, Params, SendBackendChoice};
+use crate::error::{Error, Result};
+use crate::gen::dense::paper_dense;
+use crate::gen::sparse::{generate, SparseSpec};
+use crate::gen::suite::Suite;
+use crate::la::workspace::{Plan, PlanKind, Workspace};
+use crate::metrics::percentile;
+use crate::util::json::{self, Json};
+use crate::util::pool;
+use crate::util::scalar::{DType, Scalar};
+
+fn perr(detail: impl Into<String>) -> Error {
+    Error::Parse { what: "serve", detail: detail.into() }
+}
+
+/// Poison-proof lock: a panicking job is already contained by
+/// `catch_unwind`, so a poisoned mutex carries no extra information —
+/// take the inner guard.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Shape classes
+// ---------------------------------------------------------------------------
+
+/// The workspace-reuse key: two jobs share warm arenas iff their plans
+/// are interchangeable, i.e. same algorithm kind, operand shape, solve
+/// parameters that size buffers, and element precision. `p` is part of
+/// the class even though it sizes no buffer: backends may stage
+/// per-iteration device queues from it ([`Plan`] carries it), so plans
+/// differing only in `p` are distinct classes by design.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ShapeClass {
+    pub kind: PlanKind,
+    pub m: usize,
+    pub n: usize,
+    pub r: usize,
+    pub p: usize,
+    pub b: usize,
+    pub dtype: DType,
+}
+
+impl ShapeClass {
+    /// The class a job schedules under.
+    pub fn of(spec: &JobSpec) -> ShapeClass {
+        let (m, n) = spec.operand.shape();
+        let kind = match spec.algo {
+            Algo::Lanc => PlanKind::LancSvd,
+            Algo::Rand => PlanKind::RandSvd,
+        };
+        ShapeClass {
+            kind,
+            m,
+            n,
+            r: spec.params.r,
+            p: spec.params.p,
+            b: spec.params.b,
+            dtype: spec.params.dtype,
+        }
+    }
+
+    /// The buffer plan every workspace of this class is built from.
+    pub fn plan(&self) -> Plan {
+        match self.kind {
+            PlanKind::LancSvd => Plan::lancsvd(self.m, self.n, self.r, self.p, self.b),
+            PlanKind::RandSvd => Plan::randsvd(self.m, self.n, self.r, self.p, self.b),
+            PlanKind::Orth => Plan::orth(self.m, self.r, self.b),
+        }
+    }
+
+    /// Human-readable class tag for results and metrics
+    /// (`lanc:400x160:r16:p2:b8:f64`).
+    pub fn label(&self) -> String {
+        let kind = match self.kind {
+            PlanKind::LancSvd => "lanc",
+            PlanKind::RandSvd => "rand",
+            PlanKind::Orth => "orth",
+        };
+        format!(
+            "{kind}:{}x{}:r{}:p{}:b{}:{}",
+            self.m,
+            self.n,
+            self.r,
+            self.p,
+            self.b,
+            self.dtype.name()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Precision erasure
+// ---------------------------------------------------------------------------
+
+/// A workspace of either serving precision (pool storage).
+pub enum AnyWorkspace {
+    F32(Workspace<f32>),
+    F64(Workspace<f64>),
+}
+
+/// A built backend of either serving precision (operand-cache storage).
+/// Backends must be `Send`: they cross solver threads and outlive the
+/// job that built them. The XLA backend (thread-bound `Rc<Runtime>`)
+/// is structurally excluded — serve only accepts [`SendBackendChoice`].
+pub enum AnyBackend {
+    F32(Box<dyn Backend<f32> + Send>),
+    F64(Box<dyn Backend<f64> + Send>),
+}
+
+/// The two precisions the server dispatches over. Monomorphizes the
+/// execution path while the queue/caches stay type-erased.
+pub trait ServeScalar: Scalar {
+    const DTYPE: DType;
+    /// Convert the canonical f64 operand to this precision. For f64
+    /// this is an `Arc` bump (identity — and generation stamp —
+    /// preserved); for f32 a one-time cast, built at most once per
+    /// cache key because the slot lock covers the build.
+    fn specialize(op: &Operand<f64>) -> Operand<Self>;
+    fn wrap_ws(ws: Workspace<Self>) -> AnyWorkspace;
+    fn unwrap_ws(any: AnyWorkspace) -> Option<Workspace<Self>>;
+    fn wrap_be(be: Box<dyn Backend<Self> + Send>) -> AnyBackend;
+    fn unwrap_be(any: AnyBackend) -> Option<Box<dyn Backend<Self> + Send>>;
+}
+
+impl ServeScalar for f64 {
+    const DTYPE: DType = DType::F64;
+    fn specialize(op: &Operand<f64>) -> Operand<f64> {
+        op.clone()
+    }
+    fn wrap_ws(ws: Workspace<f64>) -> AnyWorkspace {
+        AnyWorkspace::F64(ws)
+    }
+    fn unwrap_ws(any: AnyWorkspace) -> Option<Workspace<f64>> {
+        match any {
+            AnyWorkspace::F64(ws) => Some(ws),
+            AnyWorkspace::F32(_) => None,
+        }
+    }
+    fn wrap_be(be: Box<dyn Backend<f64> + Send>) -> AnyBackend {
+        AnyBackend::F64(be)
+    }
+    fn unwrap_be(any: AnyBackend) -> Option<Box<dyn Backend<f64> + Send>> {
+        match any {
+            AnyBackend::F64(be) => Some(be),
+            AnyBackend::F32(_) => None,
+        }
+    }
+}
+
+impl ServeScalar for f32 {
+    const DTYPE: DType = DType::F32;
+    fn specialize(op: &Operand<f64>) -> Operand<f32> {
+        op.cast()
+    }
+    fn wrap_ws(ws: Workspace<f32>) -> AnyWorkspace {
+        AnyWorkspace::F32(ws)
+    }
+    fn unwrap_ws(any: AnyWorkspace) -> Option<Workspace<f32>> {
+        match any {
+            AnyWorkspace::F32(ws) => Some(ws),
+            AnyWorkspace::F64(_) => None,
+        }
+    }
+    fn wrap_be(be: Box<dyn Backend<f32> + Send>) -> AnyBackend {
+        AnyBackend::F32(be)
+    }
+    fn unwrap_be(any: AnyBackend) -> Option<Box<dyn Backend<f32> + Send>> {
+        match any {
+            AnyBackend::F32(be) => Some(be),
+            AnyBackend::F64(_) => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workspace pool
+// ---------------------------------------------------------------------------
+
+/// Per-class pool counters (exposed via [`Server::class_stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassStats {
+    /// Cold `Workspace::new` constructions.
+    pub created: u64,
+    /// Checkouts satisfied by a warm, previously-used arena.
+    pub warm_reuses: u64,
+}
+
+#[derive(Default)]
+struct ClassPool {
+    free: Vec<AnyWorkspace>,
+    stats: ClassStats,
+}
+
+/// Warm solve arenas keyed by [`ShapeClass`]. Checkout pops a warm
+/// arena when one is free (counted as a reuse) and otherwise
+/// constructs cold *outside* the pool lock; checkin keeps at most
+/// `max_free_per_class` arenas warm and reports whether the workspace
+/// was retained.
+pub struct WorkspacePool {
+    classes: Mutex<HashMap<ShapeClass, ClassPool>>,
+    max_free_per_class: usize,
+}
+
+impl WorkspacePool {
+    fn new(max_free_per_class: usize) -> WorkspacePool {
+        WorkspacePool {
+            classes: Mutex::new(HashMap::new()),
+            max_free_per_class: max_free_per_class.max(1),
+        }
+    }
+
+    /// `(workspace, was_warm)`.
+    fn checkout<S: ServeScalar>(&self, class: &ShapeClass) -> (Workspace<S>, bool) {
+        {
+            let mut map = lock(&self.classes);
+            let cp = map.entry(*class).or_default();
+            while let Some(any) = cp.free.pop() {
+                if let Some(ws) = S::unwrap_ws(any) {
+                    cp.stats.warm_reuses += 1;
+                    return (ws, true);
+                }
+                // Precision mismatch cannot happen (dtype is part of the
+                // class key); if it somehow did, dropping the stranger
+                // and continuing is the safe direction.
+            }
+            cp.stats.created += 1;
+        }
+        // Cold build outside the lock: first-touch banding walks the
+        // whole arena and must not serialize the other workers.
+        (Workspace::new(class.plan()), false)
+    }
+
+    /// `true` when the workspace was retained for reuse.
+    fn checkin(&self, class: &ShapeClass, ws: AnyWorkspace) -> bool {
+        let mut map = lock(&self.classes);
+        let cp = map.entry(*class).or_default();
+        if cp.free.len() < self.max_free_per_class {
+            cp.free.push(ws);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn snapshot(&self) -> Vec<(ShapeClass, ClassStats, usize)> {
+        let map = lock(&self.classes);
+        map.iter().map(|(c, p)| (*c, p.stats, p.free.len())).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Operand cache
+// ---------------------------------------------------------------------------
+
+/// One operand-cache slot. `built_ever` is flipped the first time a
+/// backend build *succeeds* under this slot's lock; together with the
+/// lock being held across build and solve it makes the hit/miss/rework
+/// classification a pure function of slot state — independent of which
+/// concurrent same-key job wins the lock first:
+///
+/// * `be` present            ⇒ hit;
+/// * `be` absent, never built ⇒ miss (the one first build per key);
+/// * `be` absent, built once  ⇒ rework (a panic discarded the backend).
+struct SlotState {
+    be: Option<AnyBackend>,
+    built_ever: bool,
+}
+
+type BackendSlot = Arc<Mutex<SlotState>>;
+
+/// Warm built backends keyed by
+/// `"{operand identity}|{dtype}|{backend}"`. Each key owns one *slot*
+/// whose mutex is held across build **and** solve: concurrent jobs on
+/// the same operand serialize on the slot instead of building duplicate
+/// backends, which is both the cheap choice (one explicit-transpose
+/// build, ever) and what makes the hit/miss counters deterministic.
+struct OperandCache {
+    slots: Mutex<HashMap<String, BackendSlot>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// A previously-built backend was gone at lock time (a panic
+    /// discarded it). Zero in any healthy workload.
+    rework: AtomicU64,
+}
+
+impl OperandCache {
+    fn new() -> OperandCache {
+        OperandCache {
+            slots: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            rework: AtomicU64::new(0),
+        }
+    }
+
+    fn slot(&self, key: &str) -> BackendSlot {
+        let mut map = lock(&self.slots);
+        match map.get(key) {
+            Some(s) => Arc::clone(s),
+            None => {
+                let s: BackendSlot =
+                    Arc::new(Mutex::new(SlotState { be: None, built_ever: false }));
+                map.insert(key.to_string(), Arc::clone(&s));
+                s
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Jobs
+// ---------------------------------------------------------------------------
+
+/// One truncated-SVD request.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Caller-chosen correlation id (echoed in the result).
+    pub id: String,
+    pub algo: Algo,
+    pub params: Params,
+    /// Canonical f64 operand; converted per job dtype at backend build.
+    pub operand: Operand<f64>,
+    /// Operand-cache key override for operands without intrinsic
+    /// identity (dense matrices). The protocol layer sets this to the
+    /// canonical operand-spec JSON, which is content-determining for
+    /// every generative spec. `None` + a dense operand ⇒ the job runs
+    /// uncached (counted as a miss).
+    pub operand_tag: Option<String>,
+    /// Admission + queue deadline. `Some(0)` rejects at admission
+    /// (deterministically — the CI rejection gate); otherwise jobs
+    /// still queued past the deadline are rejected at dequeue.
+    pub deadline: Option<Duration>,
+    /// Fault injection (tests): panic mid-solve inside the worker.
+    pub inject_panic: bool,
+    /// Fault injection (tests): sleep before solving, to hold a worker
+    /// and force queueing behavior.
+    pub inject_delay: Option<Duration>,
+}
+
+impl JobSpec {
+    pub fn new(
+        id: impl Into<String>,
+        algo: Algo,
+        params: Params,
+        operand: Operand<f64>,
+    ) -> JobSpec {
+        JobSpec {
+            id: id.into(),
+            algo,
+            params,
+            operand,
+            operand_tag: None,
+            deadline: None,
+            inject_panic: false,
+            inject_delay: None,
+        }
+    }
+}
+
+/// Terminal state of a job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Done,
+    /// The solve ran and errored (validation, breakdown, panic) — the
+    /// server and its pools remain healthy.
+    Failed(String),
+    /// The job never ran: backpressure, expired deadline, or shutdown.
+    Rejected(String),
+}
+
+impl JobStatus {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            JobStatus::Done => "ok",
+            JobStatus::Failed(_) => "failed",
+            JobStatus::Rejected(_) => "rejected",
+        }
+    }
+}
+
+/// What a job returns (also the replay record).
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: String,
+    pub status: JobStatus,
+    /// Leading `wanted` singular values (f64 bits are exact for both
+    /// precisions — the determinism comparison runs on these).
+    pub sigma: Vec<f64>,
+    pub est_residuals: Vec<f64>,
+    pub iters: usize,
+    /// Dequeue-to-completion seconds.
+    pub secs: f64,
+    /// Submission-to-dequeue seconds.
+    pub queue_secs: f64,
+    pub shape_class: String,
+    /// The operand cache held a warm backend for this job's key.
+    pub operand_hit: bool,
+    /// The workspace checkout was satisfied by a warm arena.
+    pub workspace_warm: bool,
+}
+
+impl JobResult {
+    fn sync(id: String, status: JobStatus) -> JobResult {
+        JobResult {
+            id,
+            status,
+            sigma: Vec::new(),
+            est_residuals: Vec::new(),
+            iters: 0,
+            secs: 0.0,
+            queue_secs: 0.0,
+            shape_class: String::new(),
+            operand_hit: false,
+            workspace_warm: false,
+        }
+    }
+}
+
+/// Receipt for a submitted job.
+pub struct JobHandle {
+    pub id: String,
+    rx: Receiver<JobResult>,
+}
+
+impl JobHandle {
+    /// Block until the job reaches a terminal state.
+    pub fn wait(self) -> JobResult {
+        let JobHandle { id, rx } = self;
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => JobResult::sync(
+                id,
+                JobStatus::Failed("server dropped before the job completed".into()),
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Server construction knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Solver worker threads (each runs one job at a time; the inner
+    /// thread pool is shared, so keep this small).
+    pub solvers: usize,
+    /// Bounded-queue capacity; submissions beyond it are rejected.
+    pub queue_cap: usize,
+    /// Backend family for every job (must be `Send`; see
+    /// [`make_send_backend_at`] for the determinism-driven transpose
+    /// policy).
+    pub backend: SendBackendChoice,
+    /// Deadline applied to jobs that do not carry their own.
+    pub default_deadline: Option<Duration>,
+    /// Warm arenas retained per shape class.
+    pub max_free_ws_per_class: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            solvers: 2,
+            queue_cap: 16,
+            backend: SendBackendChoice::Cpu,
+            default_deadline: None,
+            max_free_ws_per_class: 4,
+        }
+    }
+}
+
+/// Monotonic counter snapshot ([`Server::counters`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeCounters {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected_backpressure: u64,
+    pub rejected_deadline: u64,
+    pub operand_hits: u64,
+    pub operand_misses: u64,
+    pub operand_rework: u64,
+    pub ws_created: u64,
+    pub ws_warm_reuses: u64,
+    pub ws_discarded: u64,
+    pub restart_yields: u64,
+}
+
+#[derive(Default)]
+struct ServeStats {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    rejected_backpressure: AtomicU64,
+    rejected_deadline: AtomicU64,
+    ws_discarded: AtomicU64,
+    restart_yields: AtomicU64,
+}
+
+struct Queued {
+    spec: JobSpec,
+    tx: Sender<JobResult>,
+    submitted: Instant,
+    deadline: Option<Instant>,
+    class: ShapeClass,
+}
+
+/// Fair-within-class scheduler state: FIFO sub-queue per shape class,
+/// round-robin over the non-empty classes.
+struct SchedState {
+    order: VecDeque<ShapeClass>,
+    queues: HashMap<ShapeClass, VecDeque<Queued>>,
+    queued: usize,
+    open: bool,
+}
+
+impl SchedState {
+    fn push(&mut self, q: Queued) {
+        let class = q.class;
+        let dq = self.queues.entry(class).or_default();
+        if dq.is_empty() {
+            self.order.push_back(class);
+        }
+        dq.push_back(q);
+        self.queued += 1;
+    }
+
+    fn pop(&mut self) -> Option<Queued> {
+        let class = self.order.pop_front()?;
+        let dq = self.queues.get_mut(&class)?;
+        let job = dq.pop_front();
+        if dq.is_empty() {
+            self.queues.remove(&class);
+        } else {
+            // Rotate: the class goes to the back so co-tenant classes
+            // interleave.
+            self.order.push_back(class);
+        }
+        if job.is_some() {
+            self.queued -= 1;
+        }
+        job
+    }
+}
+
+struct ServerInner {
+    cfg: ServeConfig,
+    sched: Mutex<SchedState>,
+    available: Condvar,
+    ws_pool: WorkspacePool,
+    cache: OperandCache,
+    stats: ServeStats,
+}
+
+/// The long-running multi-tenant solver (see module docs).
+pub struct Server {
+    inner: Arc<ServerInner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn new(cfg: ServeConfig) -> Server {
+        let solvers = cfg.solvers.max(1);
+        let inner = Arc::new(ServerInner {
+            ws_pool: WorkspacePool::new(cfg.max_free_ws_per_class),
+            cfg,
+            sched: Mutex::new(SchedState {
+                order: VecDeque::new(),
+                queues: HashMap::new(),
+                queued: 0,
+                open: true,
+            }),
+            available: Condvar::new(),
+            cache: OperandCache::new(),
+            stats: ServeStats::default(),
+        });
+        let workers = (0..solvers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("trunksvd-serve-{i}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("serve: failed to spawn solver thread")
+            })
+            .collect();
+        Server { inner, workers }
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.inner.cfg
+    }
+
+    /// Submit a job; the handle resolves to its [`JobResult`].
+    pub fn submit(&self, spec: JobSpec) -> JobHandle {
+        let (tx, rx) = channel();
+        let id = spec.id.clone();
+        self.submit_with(spec, tx);
+        JobHandle { id, rx }
+    }
+
+    /// Submit with a caller-owned result channel (the protocol layer
+    /// funnels every connection's jobs into one writer this way). The
+    /// admission decision — and any rejection — happens synchronously.
+    pub fn submit_with(&self, spec: JobSpec, tx: Sender<JobResult>) {
+        self.inner.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        let class = ShapeClass::of(&spec);
+        let deadline = spec.deadline.or(self.inner.cfg.default_deadline);
+
+        if let Some(d) = deadline {
+            if d.is_zero() {
+                self.inner.stats.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+                let mut r = JobResult::sync(
+                    spec.id.clone(),
+                    JobStatus::Rejected("deadline expired before admission".into()),
+                );
+                r.shape_class = class.label();
+                let _ = tx.send(r);
+                return;
+            }
+        }
+
+        let mut s = lock(&self.inner.sched);
+        if !s.open {
+            drop(s);
+            self.inner.stats.rejected_backpressure.fetch_add(1, Ordering::Relaxed);
+            let mut r = JobResult::sync(
+                spec.id.clone(),
+                JobStatus::Rejected("server is shutting down".into()),
+            );
+            r.shape_class = class.label();
+            let _ = tx.send(r);
+            return;
+        }
+        if s.queued >= self.inner.cfg.queue_cap {
+            let depth = s.queued;
+            drop(s);
+            self.inner.stats.rejected_backpressure.fetch_add(1, Ordering::Relaxed);
+            let mut r = JobResult::sync(
+                spec.id.clone(),
+                JobStatus::Rejected(format!(
+                    "queue full ({depth}/{} jobs queued)",
+                    self.inner.cfg.queue_cap
+                )),
+            );
+            r.shape_class = class.label();
+            let _ = tx.send(r);
+            return;
+        }
+        s.push(Queued {
+            deadline: deadline.map(|d| now + d),
+            spec,
+            tx,
+            submitted: now,
+            class,
+        });
+        drop(s);
+        self.inner.available.notify_one();
+    }
+
+    /// Jobs admitted but not yet dequeued by a worker (tests and
+    /// load-shedding probes poll this).
+    pub fn queue_depth(&self) -> usize {
+        lock(&self.inner.sched).queued
+    }
+
+    /// Counter snapshot (monotonic across the server's lifetime).
+    pub fn counters(&self) -> ServeCounters {
+        let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let (mut created, mut warm) = (0, 0);
+        for (_, s, _) in self.inner.ws_pool.snapshot() {
+            created += s.created;
+            warm += s.warm_reuses;
+        }
+        ServeCounters {
+            submitted: ld(&self.inner.stats.submitted),
+            completed: ld(&self.inner.stats.completed),
+            failed: ld(&self.inner.stats.failed),
+            rejected_backpressure: ld(&self.inner.stats.rejected_backpressure),
+            rejected_deadline: ld(&self.inner.stats.rejected_deadline),
+            operand_hits: ld(&self.inner.cache.hits),
+            operand_misses: ld(&self.inner.cache.misses),
+            operand_rework: ld(&self.inner.cache.rework),
+            ws_created: created,
+            ws_warm_reuses: warm,
+            ws_discarded: ld(&self.inner.stats.ws_discarded),
+            restart_yields: ld(&self.inner.stats.restart_yields),
+        }
+    }
+
+    /// Per-class `(label, stats, free arenas)` snapshot.
+    pub fn class_stats(&self) -> Vec<(String, ClassStats, usize)> {
+        let mut v: Vec<_> = self
+            .inner
+            .ws_pool
+            .snapshot()
+            .into_iter()
+            .map(|(c, s, free)| (c.label(), s, free))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Stop admitting, drain the queue, and join the workers. Queued
+    /// jobs still run to completion; only *new* submissions are
+    /// rejected. Idempotent; also invoked by `Drop`.
+    pub fn shutdown(&mut self) {
+        {
+            let mut s = lock(&self.inner.sched);
+            s.open = false;
+        }
+        self.inner.available.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workers
+// ---------------------------------------------------------------------------
+
+fn worker_loop(inner: Arc<ServerInner>) {
+    // Restart-boundary yield: the algorithms call back between outer
+    // iterations (numerically inert points), letting the OS interleave
+    // co-tenant solver threads there and letting us count the
+    // safepoints actually reached.
+    let hook_inner = Arc::clone(&inner);
+    pool::set_restart_yield_hook(Some(Box::new(move || {
+        hook_inner.stats.restart_yields.fetch_add(1, Ordering::Relaxed);
+        std::thread::yield_now();
+    })));
+
+    loop {
+        let job = {
+            let mut s = lock(&inner.sched);
+            loop {
+                if let Some(j) = s.pop() {
+                    break Some(j);
+                }
+                if !s.open {
+                    break None;
+                }
+                s = inner.available.wait(s).unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        match job {
+            Some(q) => run_job(&inner, q),
+            None => break,
+        }
+    }
+    pool::set_restart_yield_hook(None);
+}
+
+/// What one executed job produced (pre-assembly of [`JobResult`]).
+struct Executed {
+    status: JobStatus,
+    sigma: Vec<f64>,
+    est_residuals: Vec<f64>,
+    iters: usize,
+    operand_hit: bool,
+    workspace_warm: bool,
+}
+
+impl Executed {
+    fn failed(msg: String, operand_hit: bool) -> Executed {
+        Executed {
+            status: JobStatus::Failed(msg),
+            sigma: Vec::new(),
+            est_residuals: Vec::new(),
+            iters: 0,
+            operand_hit,
+            workspace_warm: false,
+        }
+    }
+}
+
+fn run_job(inner: &ServerInner, q: Queued) {
+    let start = Instant::now();
+    let queue_secs = start.duration_since(q.submitted).as_secs_f64();
+    let class_label = q.class.label();
+
+    // Deadline re-check at dequeue: the job may have aged out while
+    // queued behind slower tenants.
+    if let Some(dl) = q.deadline {
+        if start > dl {
+            inner.stats.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+            let mut r = JobResult::sync(
+                q.spec.id.clone(),
+                JobStatus::Rejected(format!(
+                    "deadline exceeded after {:.0} ms in queue",
+                    queue_secs * 1e3
+                )),
+            );
+            r.queue_secs = queue_secs;
+            r.shape_class = class_label;
+            let _ = q.tx.send(r);
+            return;
+        }
+    }
+
+    let ex = match q.spec.params.dtype {
+        DType::F64 => execute_typed::<f64>(inner, &q),
+        DType::F32 => execute_typed::<f32>(inner, &q),
+    };
+    match ex.status {
+        JobStatus::Done => inner.stats.completed.fetch_add(1, Ordering::Relaxed),
+        _ => inner.stats.failed.fetch_add(1, Ordering::Relaxed),
+    };
+    let _ = q.tx.send(JobResult {
+        id: q.spec.id.clone(),
+        status: ex.status,
+        sigma: ex.sigma,
+        est_residuals: ex.est_residuals,
+        iters: ex.iters,
+        secs: start.elapsed().as_secs_f64(),
+        queue_secs,
+        shape_class: class_label,
+        operand_hit: ex.operand_hit,
+        workspace_warm: ex.workspace_warm,
+    });
+}
+
+fn execute_typed<S: ServeScalar>(inner: &ServerInner, q: &Queued) -> Executed {
+    let spec = &q.spec;
+
+    // Operand-cache key: caller tag wins (it is the only identity a
+    // dense operand has), else the operand's intrinsic identity. The
+    // dtype and backend family are part of the key because the cached
+    // value is a *built backend*, not the operand.
+    let key = spec
+        .operand_tag
+        .clone()
+        .or_else(|| spec.operand.identity_key())
+        .map(|k| format!("{k}|{}|{}", S::DTYPE.name(), inner.cfg.backend.name()));
+
+    let slot = key.as_deref().map(|k| inner.cache.slot(k));
+    // The slot guard is held across build AND solve: a concurrent job
+    // on the same operand waits here and then finds both the warm
+    // backend and (because checkin happens before this guard drops) a
+    // warm workspace. Classification reads only slot state (see
+    // [`SlotState`]), so the counters come out the same no matter how
+    // concurrent same-key jobs interleave.
+    let mut guard = slot.as_ref().map(|s| lock(s));
+
+    let operand_hit = match &guard {
+        Some(g) if g.be.is_some() => {
+            inner.cache.hits.fetch_add(1, Ordering::Relaxed);
+            true
+        }
+        Some(g) if g.built_ever => {
+            inner.cache.rework.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+        _ => {
+            inner.cache.misses.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    };
+
+    let mut be: Box<dyn Backend<S> + Send> =
+        match guard.as_mut().and_then(|g| g.be.take()).and_then(S::unwrap_be) {
+            Some(be) => be,
+            None => match make_send_backend_at::<S>(S::specialize(&spec.operand), inner.cfg.backend)
+            {
+                Ok(be) => be,
+                Err(e) => return Executed::failed(format!("backend build: {e}"), operand_hit),
+            },
+        };
+    // The build succeeded (or a warm backend was taken): from here on
+    // an empty slot means a discarded backend, i.e. rework.
+    if let Some(g) = guard.as_mut() {
+        g.built_ever = true;
+    }
+
+    let (ws, workspace_warm) = inner.ws_pool.checkout::<S>(&q.class);
+
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if let Some(d) = spec.inject_delay {
+            std::thread::sleep(d);
+        }
+        if spec.inject_panic {
+            panic!("injected panic (fault-injection test)");
+        }
+        solve_on(&mut *be, spec, &ws)
+    }));
+
+    match outcome {
+        Ok(res) => {
+            // Solve returned (Ok or clean Err): backend and workspace
+            // are both in a reusable state. Order matters — check the
+            // workspace in BEFORE releasing the slot guard, so a
+            // same-operand waiter blocked on the slot is guaranteed to
+            // find the warm arena.
+            if !inner.ws_pool.checkin(&q.class, S::wrap_ws(ws)) {
+                inner.stats.ws_discarded.fetch_add(1, Ordering::Relaxed);
+            }
+            if let Some(g) = guard.as_mut() {
+                g.be = Some(S::wrap_be(be));
+            }
+            drop(guard);
+            match res {
+                Ok(svd) => {
+                    let wanted = spec.params.wanted.min(svd.sigma.len());
+                    Executed {
+                        status: JobStatus::Done,
+                        sigma: svd.sigma[..wanted].iter().map(|s| s.to_f64()).collect(),
+                        est_residuals: svd.est_residuals,
+                        iters: svd.iters,
+                        operand_hit,
+                        workspace_warm,
+                    }
+                }
+                Err(e) => Executed {
+                    status: JobStatus::Failed(e.to_string()),
+                    sigma: Vec::new(),
+                    est_residuals: Vec::new(),
+                    iters: 0,
+                    operand_hit,
+                    workspace_warm,
+                },
+            }
+        }
+        Err(payload) => {
+            // Panic mid-solve: the backend and workspace were torn at an
+            // arbitrary point — discard both. The slot stays empty, so
+            // the next same-key job rebuilds (counted as rework).
+            drop(ws);
+            drop(be);
+            inner.stats.ws_discarded.fetch_add(1, Ordering::Relaxed);
+            drop(guard);
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            Executed::failed(format!("solve panicked: {msg}"), operand_hit)
+        }
+    }
+}
+
+/// Dispatch one solve on a cached backend through the allocation-free
+/// `*_with` entry points (the serving layer never solves without a
+/// pooled workspace).
+fn solve_on<S: Scalar>(
+    be: &mut dyn Backend<S>,
+    spec: &JobSpec,
+    ws: &Workspace<S>,
+) -> Result<TruncatedSvd<S>> {
+    let p = &spec.params;
+    match spec.algo {
+        Algo::Rand => randsvd_with(
+            be,
+            &RandSvdOpts {
+                r: p.r,
+                p: p.p,
+                b: p.b,
+                seed: p.seed,
+                init: InitDist::CenteredPoisson,
+            },
+            ws,
+        ),
+        Algo::Lanc => lancsvd_with(
+            be,
+            &LancSvdOpts {
+                r: p.r,
+                p: p.p,
+                b: p.b,
+                seed: p.seed,
+                init: InitDist::CenteredPoisson,
+                tol: p.tol,
+                wanted: p.wanted,
+                restart: p.restart,
+            },
+            ws,
+        ),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Line protocol
+// ---------------------------------------------------------------------------
+
+/// Per-connection-set protocol state: the operand-spec → operand memo
+/// (identical specs must resolve to the *same* `Arc` so the operand
+/// cache can hit) and the fallback job-id counter.
+pub struct ProtocolState {
+    operands: Mutex<HashMap<String, Operand<f64>>>,
+    next_id: AtomicU64,
+}
+
+impl Default for ProtocolState {
+    fn default() -> Self {
+        ProtocolState::new()
+    }
+}
+
+impl ProtocolState {
+    pub fn new() -> ProtocolState {
+        ProtocolState { operands: Mutex::new(HashMap::new()), next_id: AtomicU64::new(0) }
+    }
+
+    fn fresh_id(&self) -> String {
+        format!("job-{}", self.next_id.fetch_add(1, Ordering::Relaxed) + 1)
+    }
+
+    /// Resolve an operand spec to `(operand, canonical tag)`. The tag
+    /// is the compact JSON serialization of the spec — `Json::Obj` is a
+    /// `BTreeMap`, so key order is canonical and equal specs produce
+    /// equal tags. The memo is held across the build so a spec is built
+    /// exactly once no matter how many connections race on it.
+    pub fn resolve_operand(&self, spec: &Json) -> Result<(Operand<f64>, String)> {
+        let tag = json::write(spec);
+        let mut map = lock(&self.operands);
+        if let Some(op) = map.get(&tag) {
+            return Ok((op.clone(), tag));
+        }
+        let op = build_operand(spec)?;
+        map.insert(tag.clone(), op.clone());
+        Ok((op, tag))
+    }
+}
+
+fn opt_usize(j: &Json, key: &str) -> Option<usize> {
+    j.get(key).and_then(|v| v.as_usize())
+}
+fn opt_u64(j: &Json, key: &str) -> Option<u64> {
+    j.get(key).and_then(|v| v.as_u64())
+}
+fn opt_f64(j: &Json, key: &str) -> Option<f64> {
+    j.get(key).and_then(|v| v.as_f64())
+}
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| perr(format!("field '{key}' must be a number")))
+}
+
+/// Build an operand from its spec object (see module docs for the
+/// accepted forms).
+pub fn build_operand(spec: &Json) -> Result<Operand<f64>> {
+    if let Some(name) = spec.get("suite").and_then(|v| v.as_str()) {
+        let suite = Suite::load_default()?;
+        let e = suite
+            .sparse_by_name(name)
+            .ok_or_else(|| perr(format!("unknown suite matrix '{name}'")))?;
+        return Ok(Operand::sparse(generate(&e.spec)));
+    }
+    if let Some(path) = spec.get("mtx").and_then(|v| v.as_str()) {
+        return Ok(Operand::sparse(crate::sparse::mm::read_csr(path)?));
+    }
+    if let Some(sp) = spec.get("sparse") {
+        let d = SparseSpec::default();
+        return Ok(Operand::sparse(generate(&SparseSpec {
+            rows: req_usize(sp, "rows")?,
+            cols: req_usize(sp, "cols")?,
+            nnz: req_usize(sp, "nnz")?,
+            seed: opt_u64(sp, "seed").unwrap_or(d.seed),
+            skew: opt_f64(sp, "skew").unwrap_or(d.skew),
+            value_decay: opt_f64(sp, "value_decay").unwrap_or(d.value_decay),
+        })));
+    }
+    if let Some(dn) = spec.get("dense") {
+        let m = req_usize(dn, "m")?;
+        let n = req_usize(dn, "n")?;
+        let seed = opt_u64(dn, "seed").unwrap_or(42);
+        return Ok(Operand::dense(paper_dense(m, n, seed).a));
+    }
+    if let Some(dir) = spec.get("shards").and_then(|v| v.as_str()) {
+        let cap = opt_usize(spec, "resident_cap").unwrap_or(0);
+        let sd = crate::sparse::shard::ShardDir::open(dir)?;
+        return Ok(Operand::sharded(Arc::new(sd), cap));
+    }
+    Err(perr("operand spec needs one of suite|mtx|sparse|dense|shards"))
+}
+
+/// Server-side defaults a job line is merged over.
+#[derive(Clone, Debug)]
+pub struct JobDefaults {
+    pub algo: Algo,
+    pub params: Params,
+}
+
+impl Default for JobDefaults {
+    fn default() -> Self {
+        JobDefaults { algo: Algo::Lanc, params: Params::default() }
+    }
+}
+
+/// Merge a job (or workload `defaults`) object over the base defaults.
+fn overlay(j: &Json, base: &JobDefaults) -> Result<(Algo, Params)> {
+    let algo = match j.get("algo").and_then(|v| v.as_str()) {
+        None => base.algo,
+        Some("lanc" | "lancsvd") => Algo::Lanc,
+        Some("rand" | "randsvd") => Algo::Rand,
+        Some(other) => return Err(perr(format!("unknown algo '{other}' (lanc|rand)"))),
+    };
+    let restart = match j.get("restart").and_then(|v| v.as_str()) {
+        None => base.params.restart,
+        Some("basic") => Restart::Basic,
+        Some("thick") => Restart::Thick { keep: opt_usize(j, "keep").unwrap_or(32) },
+        Some(other) => return Err(perr(format!("unknown restart '{other}' (basic|thick)"))),
+    };
+    let dtype = match j.get("dtype").and_then(|v| v.as_str()) {
+        None => base.params.dtype,
+        Some(tag) => {
+            DType::parse(tag).ok_or_else(|| perr(format!("unknown dtype '{tag}' (f32|f64)")))?
+        }
+    };
+    let params = Params {
+        r: opt_usize(j, "r").unwrap_or(base.params.r),
+        p: opt_usize(j, "p").unwrap_or(base.params.p),
+        b: opt_usize(j, "b").unwrap_or(base.params.b),
+        seed: opt_u64(j, "seed").unwrap_or(base.params.seed),
+        tol: opt_f64(j, "tol").or(base.params.tol),
+        wanted: opt_usize(j, "wanted").unwrap_or(base.params.wanted),
+        restart,
+        dtype,
+    };
+    Ok((algo, params))
+}
+
+/// Parse one protocol line into a [`JobSpec`].
+pub fn parse_job(line: &str, defaults: &JobDefaults, st: &ProtocolState) -> Result<JobSpec> {
+    let j = json::parse(line)?;
+    job_from_json(&j, defaults, st)
+}
+
+/// Build a [`JobSpec`] from a parsed job object.
+pub fn job_from_json(j: &Json, defaults: &JobDefaults, st: &ProtocolState) -> Result<JobSpec> {
+    let (algo, params) = overlay(j, defaults)?;
+    let (operand, tag) = st.resolve_operand(j.req("operand")?)?;
+    let id = match j.get("id").and_then(|v| v.as_str()) {
+        Some(s) => s.to_string(),
+        None => st.fresh_id(),
+    };
+    Ok(JobSpec {
+        id,
+        algo,
+        params,
+        operand,
+        operand_tag: Some(tag),
+        deadline: opt_f64(j, "deadline_ms").map(|ms| Duration::from_secs_f64(ms.max(0.0) / 1e3)),
+        inject_panic: j.get("inject_panic").and_then(|v| v.as_bool()).unwrap_or(false),
+        inject_delay: opt_f64(j, "inject_delay_ms")
+            .map(|ms| Duration::from_secs_f64(ms.max(0.0) / 1e3)),
+    })
+}
+
+/// Serialize a result for the line protocol / replay report.
+pub fn result_json(r: &JobResult) -> Json {
+    let mut pairs = vec![
+        ("id", json::str(r.id.clone())),
+        ("status", json::str(r.status.tag())),
+        ("sigma", json::arr(r.sigma.iter().map(|s| json::num(*s)).collect())),
+        ("iters", json::num(r.iters as f64)),
+        ("secs", json::num(r.secs)),
+        ("queue_secs", json::num(r.queue_secs)),
+        ("shape_class", json::str(r.shape_class.clone())),
+        ("operand_hit", Json::Bool(r.operand_hit)),
+        ("workspace_warm", Json::Bool(r.workspace_warm)),
+    ];
+    if let JobStatus::Failed(m) | JobStatus::Rejected(m) = &r.status {
+        pairs.push(("error", json::str(m.clone())));
+    }
+    if !r.est_residuals.is_empty() {
+        pairs.push((
+            "est_residuals",
+            json::arr(r.est_residuals.iter().map(|x| json::num(*x)).collect()),
+        ));
+    }
+    json::obj(pairs)
+}
+
+fn parse_failure(st: &ProtocolState, e: &Error) -> JobResult {
+    JobResult::sync(st.fresh_id(), JobStatus::Failed(format!("parse: {e}")))
+}
+
+/// Serve one connection: read line-delimited jobs from `input`, write
+/// line-delimited results to `output` as they complete (a dedicated
+/// writer thread keeps slow solves from blocking result delivery).
+/// Unparseable lines produce a `failed` result and do not tear down
+/// the connection. Returns after every submitted job has resolved.
+pub fn serve_connection<R: BufRead, W: Write + Send>(
+    server: &Server,
+    st: &ProtocolState,
+    defaults: &JobDefaults,
+    input: R,
+    output: &mut W,
+) -> Result<()> {
+    let (tx, rx) = channel::<JobResult>();
+    std::thread::scope(|scope| -> Result<()> {
+        let writer = scope.spawn(move || -> std::io::Result<()> {
+            for r in rx {
+                writeln!(output, "{}", json::write(&result_json(&r)))?;
+                output.flush()?;
+            }
+            Ok(())
+        });
+        for line in input.lines() {
+            let line = line.map_err(|e| Error::Io { path: "<serve input>".into(), source: e })?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            match parse_job(line, defaults, st) {
+                Ok(spec) => server.submit_with(spec, tx.clone()),
+                Err(e) => {
+                    let _ = tx.send(parse_failure(st, &e));
+                }
+            }
+        }
+        // Closing our sender leaves one per in-flight job; the writer
+        // drains until the last completes.
+        drop(tx);
+        match writer.join() {
+            Ok(io) => io.map_err(|e| Error::Io { path: "<serve output>".into(), source: e }),
+            Err(_) => Err(Error::InvalidParam("serve: writer thread panicked".into())),
+        }
+    })
+}
+
+/// In-memory convenience wrapper around [`serve_connection`] (tests,
+/// and `serve` reading stdin via the CLI).
+pub fn serve_lines(
+    server: &Server,
+    defaults: &JobDefaults,
+    input: &str,
+    output: &mut Vec<u8>,
+) -> Result<()> {
+    let st = ProtocolState::new();
+    serve_connection(server, &st, defaults, std::io::Cursor::new(input.as_bytes()), output)
+}
+
+/// Accept connections on a unix socket, each served concurrently
+/// against the shared server (and a shared operand memo, so tenants on
+/// different connections still share staged operands). Runs until the
+/// listener errors (or forever).
+#[cfg(unix)]
+pub fn serve_unix(server: &Server, socket_path: &str, defaults: &JobDefaults) -> Result<()> {
+    use std::os::unix::net::UnixListener;
+    let _ = std::fs::remove_file(socket_path);
+    let listener = UnixListener::bind(socket_path)
+        .map_err(|e| Error::Io { path: socket_path.to_string(), source: e })?;
+    let st = ProtocolState::new();
+    std::thread::scope(|scope| {
+        for conn in listener.incoming() {
+            let Ok(stream) = conn else { break };
+            let Ok(read_half) = stream.try_clone() else { continue };
+            let st = &st;
+            scope.spawn(move || {
+                let mut out = stream;
+                let _ = serve_connection(
+                    server,
+                    st,
+                    defaults,
+                    std::io::BufReader::new(read_half),
+                    &mut out,
+                );
+            });
+        }
+    });
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Workload replay
+// ---------------------------------------------------------------------------
+
+/// CLI overrides for a workload file's own settings.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayOverrides {
+    pub workers: Option<usize>,
+    pub queue_cap: Option<usize>,
+    pub repeat: Option<usize>,
+    pub backend: Option<SendBackendChoice>,
+}
+
+/// What [`replay_file`] returns (the full report also lands in the
+/// `--out` JSON).
+#[derive(Clone, Debug)]
+pub struct ReplaySummary {
+    pub runs: usize,
+    pub jobs_per_run: usize,
+    pub counters: ServeCounters,
+    /// Repeat runs produced bitwise-identical singular values per job
+    /// id (vacuously true for a single run).
+    pub deterministic: bool,
+    pub wall_secs: f64,
+}
+
+/// Replay a workload file (see `config/workloads/README.md` for the
+/// schema) `repeat` times over ONE warm server, verify repeat-run
+/// bitwise determinism, and write the metrics report. Gates:
+///
+/// * `repeat > 1` and any per-id sigma mismatch ⇒ `Err` (always — the
+///   report is still written first, for diagnosis);
+/// * `BENCH_ASSERT_REUSE=1` ⇒ [`assert_reuse_gates`] on the final
+///   counters.
+pub fn replay_file(path: &str, out: Option<&str>, ov: &ReplayOverrides) -> Result<ReplaySummary> {
+    let doc = json::parse_file(path)?;
+    let workers = ov.workers.or_else(|| opt_usize(&doc, "workers")).unwrap_or(2);
+    let queue_cap = ov.queue_cap.or_else(|| opt_usize(&doc, "queue_cap")).unwrap_or(16);
+    let repeat = ov.repeat.or_else(|| opt_usize(&doc, "repeat")).unwrap_or(1).max(1);
+    let backend = match ov.backend {
+        Some(b) => b,
+        None => match doc.get("backend").and_then(|v| v.as_str()) {
+            None => SendBackendChoice::Cpu,
+            Some(tag) => SendBackendChoice::parse(tag).ok_or_else(|| {
+                perr(format!("unknown backend '{tag}' (cpu|cpu-scatter|cpu-expt|staged)"))
+            })?,
+        },
+    };
+    let mut defaults = JobDefaults::default();
+    if let Some(d) = doc.get("defaults") {
+        let (algo, params) = overlay(d, &defaults)?;
+        defaults = JobDefaults { algo, params };
+    }
+    let jobs = doc
+        .req("jobs")?
+        .as_arr()
+        .ok_or_else(|| perr("'jobs' must be an array"))?;
+
+    let st = ProtocolState::new();
+    let mut server = Server::new(ServeConfig {
+        solvers: workers,
+        queue_cap,
+        backend,
+        ..ServeConfig::default()
+    });
+
+    let t0 = Instant::now();
+    let mut per_run: Vec<Vec<JobResult>> = Vec::new();
+    for _ in 0..repeat {
+        let base = Instant::now();
+        let (tx, rx) = channel::<JobResult>();
+        let mut records: Vec<JobResult> = Vec::new();
+        for j in jobs {
+            let at_ms = opt_f64(j, "at_ms").unwrap_or(0.0).max(0.0);
+            let target = base + Duration::from_secs_f64(at_ms / 1e3);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            match job_from_json(j, &defaults, &st) {
+                Ok(spec) => server.submit_with(spec, tx.clone()),
+                Err(e) => records.push(parse_failure(&st, &e)),
+            }
+        }
+        drop(tx);
+        for r in rx {
+            records.push(r);
+        }
+        per_run.push(records);
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    server.shutdown();
+
+    // Bitwise determinism across repeat runs: per job id, `Done` in
+    // both runs ⇒ identical sigma bit patterns.
+    let mut mismatched: Vec<String> = Vec::new();
+    if repeat > 1 {
+        let first: HashMap<&str, &JobResult> =
+            per_run[0].iter().map(|r| (r.id.as_str(), r)).collect();
+        for later in &per_run[1..] {
+            for r in later {
+                let Some(f) = first.get(r.id.as_str()) else { continue };
+                if f.status != JobStatus::Done || r.status != JobStatus::Done {
+                    continue;
+                }
+                let a: Vec<u64> = f.sigma.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u64> = r.sigma.iter().map(|x| x.to_bits()).collect();
+                if a != b && !mismatched.iter().any(|m| m == &r.id) {
+                    mismatched.push(r.id.clone());
+                }
+            }
+        }
+    }
+    let deterministic = mismatched.is_empty();
+
+    let counters = server.counters();
+    let done: Vec<f64> = per_run
+        .iter()
+        .flatten()
+        .filter(|r| r.status == JobStatus::Done)
+        .map(|r| r.secs)
+        .collect();
+    let throughput = done.len() as f64 / wall_secs.max(1e-9);
+
+    let counters_json = json::obj(vec![
+        ("submitted", json::num(counters.submitted as f64)),
+        ("completed", json::num(counters.completed as f64)),
+        ("failed", json::num(counters.failed as f64)),
+        ("rejected_backpressure", json::num(counters.rejected_backpressure as f64)),
+        ("rejected_deadline", json::num(counters.rejected_deadline as f64)),
+        ("operand_hits", json::num(counters.operand_hits as f64)),
+        ("operand_misses", json::num(counters.operand_misses as f64)),
+        ("operand_rework", json::num(counters.operand_rework as f64)),
+        ("ws_created", json::num(counters.ws_created as f64)),
+        ("ws_warm_reuses", json::num(counters.ws_warm_reuses as f64)),
+        ("ws_discarded", json::num(counters.ws_discarded as f64)),
+        ("restart_yields", json::num(counters.restart_yields as f64)),
+    ]);
+    let classes_json = json::arr(
+        server
+            .class_stats()
+            .into_iter()
+            .map(|(label, s, free)| {
+                json::obj(vec![
+                    ("class", json::str(label)),
+                    ("created", json::num(s.created as f64)),
+                    ("warm_reuses", json::num(s.warm_reuses as f64)),
+                    ("free", json::num(free as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let runs_json = json::arr(
+        per_run
+            .iter()
+            .map(|run| json::arr(run.iter().map(result_json).collect()))
+            .collect(),
+    );
+    let report = json::obj(vec![
+        ("workload", json::str(path)),
+        ("threads", json::num(pool::num_threads() as f64)),
+        ("workers", json::num(workers as f64)),
+        ("queue_cap", json::num(queue_cap as f64)),
+        ("backend", json::str(backend.name())),
+        ("repeat", json::num(repeat as f64)),
+        ("jobs_per_run", json::num(jobs.len() as f64)),
+        ("wall_secs", json::num(wall_secs)),
+        ("throughput_jobs_per_sec", json::num(throughput)),
+        (
+            "latency",
+            json::obj(vec![
+                ("p50_secs", json::num(percentile(&done, 50.0))),
+                ("p95_secs", json::num(percentile(&done, 95.0))),
+                ("max_secs", json::num(percentile(&done, 100.0))),
+            ]),
+        ),
+        ("counters", counters_json),
+        ("classes", classes_json),
+        (
+            "determinism",
+            json::obj(vec![
+                ("repeat", json::num(repeat as f64)),
+                ("bitwise_identical", Json::Bool(deterministic)),
+                (
+                    "mismatched_ids",
+                    json::arr(mismatched.iter().map(|s| json::str(s.clone())).collect()),
+                ),
+            ]),
+        ),
+        ("runs", runs_json),
+    ]);
+
+    // Write the report BEFORE gating so a failed gate still leaves the
+    // evidence on disk.
+    if let Some(p) = out {
+        let mut text = json::write(&report);
+        text.push('\n');
+        std::fs::write(p, text).map_err(|e| Error::Io { path: p.to_string(), source: e })?;
+    }
+
+    if !deterministic {
+        return Err(Error::InvalidParam(format!(
+            "replay determinism violated: jobs {mismatched:?} returned different \
+             singular-value bit patterns across repeat runs at {} threads",
+            pool::num_threads()
+        )));
+    }
+    if std::env::var("BENCH_ASSERT_REUSE").map(|v| v == "1").unwrap_or(false) {
+        assert_reuse_gates(&counters)?;
+    }
+
+    Ok(ReplaySummary {
+        runs: repeat,
+        jobs_per_run: jobs.len(),
+        counters,
+        deterministic,
+        wall_secs,
+    })
+}
+
+/// The CI `serve-stress` reuse contract: the warm paths actually ran,
+/// admission control actually rejected something, and nothing was
+/// rebuilt or failed behind the scenes.
+pub fn assert_reuse_gates(c: &ServeCounters) -> Result<()> {
+    let mut violations = Vec::new();
+    if c.operand_hits == 0 {
+        violations.push("expected ≥1 operand-cache hit".to_string());
+    }
+    if c.ws_warm_reuses == 0 {
+        violations.push("expected ≥1 warm workspace reuse".to_string());
+    }
+    if c.rejected_backpressure + c.rejected_deadline == 0 {
+        violations.push("expected ≥1 exercised rejection".to_string());
+    }
+    if c.operand_rework != 0 {
+        violations.push(format!("expected zero operand rework, saw {}", c.operand_rework));
+    }
+    if c.failed != 0 {
+        violations.push(format!("expected zero failed jobs, saw {}", c.failed));
+    }
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        Err(Error::InvalidParam(format!(
+            "serve reuse gates failed: {} (counters: {c:?})",
+            violations.join("; ")
+        )))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_params() -> Params {
+        Params { r: 8, p: 2, b: 4, seed: 7, wanted: 4, ..Params::default() }
+    }
+
+    fn tiny_operand() -> Operand<f64> {
+        Operand::sparse(generate(&SparseSpec {
+            rows: 120,
+            cols: 48,
+            nnz: 1500,
+            seed: 3,
+            ..SparseSpec::default()
+        }))
+    }
+
+    #[test]
+    fn shape_class_label_and_plan() {
+        let spec = JobSpec::new("a", Algo::Lanc, tiny_params(), tiny_operand());
+        let c = ShapeClass::of(&spec);
+        assert_eq!(c.label(), "lanc:120x48:r8:p2:b4:f64");
+        assert_eq!(c.plan().kind, PlanKind::LancSvd);
+        let rand = JobSpec::new("b", Algo::Rand, tiny_params(), tiny_operand());
+        assert_eq!(ShapeClass::of(&rand).plan().kind, PlanKind::RandSvd);
+    }
+
+    #[test]
+    fn single_job_end_to_end() {
+        let mut server = Server::new(ServeConfig { solvers: 1, ..ServeConfig::default() });
+        let r = server
+            .submit(JobSpec::new("q", Algo::Lanc, tiny_params(), tiny_operand()))
+            .wait();
+        assert_eq!(r.status, JobStatus::Done, "{:?}", r.status);
+        assert_eq!(r.sigma.len(), 4);
+        assert!(r.sigma.windows(2).all(|w| w[0] >= w[1]), "descending {:?}", r.sigma);
+        server.shutdown();
+        let c = server.counters();
+        assert_eq!((c.submitted, c.completed, c.failed), (1, 1, 0));
+        assert_eq!(c.operand_misses, 1);
+    }
+
+    #[test]
+    fn same_operand_hits_same_workspace_warms() {
+        let mut server = Server::new(ServeConfig { solvers: 1, ..ServeConfig::default() });
+        let op = tiny_operand();
+        let a = server.submit(JobSpec::new("a", Algo::Lanc, tiny_params(), op.clone())).wait();
+        let b = server.submit(JobSpec::new("b", Algo::Lanc, tiny_params(), op)).wait();
+        assert_eq!(a.status, JobStatus::Done);
+        assert_eq!(b.status, JobStatus::Done);
+        assert!(!a.operand_hit && !a.workspace_warm);
+        assert!(b.operand_hit, "second same-operand job must hit the cache");
+        assert!(b.workspace_warm, "second same-class job must reuse the arena");
+        assert_eq!(a.sigma.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   b.sigma.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        server.shutdown();
+    }
+
+    #[test]
+    fn zero_deadline_rejects_at_admission() {
+        let mut server = Server::new(ServeConfig { solvers: 1, ..ServeConfig::default() });
+        let mut spec = JobSpec::new("late", Algo::Lanc, tiny_params(), tiny_operand());
+        spec.deadline = Some(Duration::ZERO);
+        let r = server.submit(spec).wait();
+        assert!(matches!(r.status, JobStatus::Rejected(_)), "{:?}", r.status);
+        server.shutdown();
+        assert_eq!(server.counters().rejected_deadline, 1);
+        assert_eq!(server.counters().completed, 0);
+    }
+
+    #[test]
+    fn protocol_roundtrip_and_bad_line() {
+        let mut server = Server::new(ServeConfig { solvers: 2, ..ServeConfig::default() });
+        let defaults = JobDefaults {
+            algo: Algo::Lanc,
+            params: Params { r: 8, p: 2, b: 4, wanted: 3, ..Params::default() },
+        };
+        let input = concat!(
+            r#"{"id": "p1", "operand": {"sparse": {"rows": 100, "cols": 40, "nnz": 900, "seed": 5}}}"#,
+            "\n",
+            "this is not json\n",
+            r#"{"id": "p2", "algo": "rand", "operand": {"sparse": {"rows": 100, "cols": 40, "nnz": 900, "seed": 5}}}"#,
+            "\n",
+        );
+        let mut out = Vec::new();
+        serve_lines(&server, &defaults, input, &mut out).unwrap();
+        server.shutdown();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        let mut ok = 0;
+        let mut failed = 0;
+        for l in &lines {
+            let v = json::parse(l).unwrap();
+            match v.get("status").unwrap().as_str().unwrap() {
+                "ok" => ok += 1,
+                "failed" => failed += 1,
+                other => panic!("unexpected status {other}"),
+            }
+        }
+        assert_eq!((ok, failed), (2, 1), "{text}");
+    }
+}

@@ -395,6 +395,38 @@ pub fn in_parallel_job() -> bool {
     IN_JOB.with(|c| c.get())
 }
 
+thread_local! {
+    /// Per-thread cooperative-yield hook fired by the iterative solvers
+    /// at outer-iteration boundaries (see [`restart_yield`]).
+    static RESTART_YIELD_HOOK: std::cell::RefCell<Option<Box<dyn FnMut()>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Install (or clear, with `None`) the calling thread's
+/// restart-boundary yield hook. The multi-tenant serving layer
+/// (`runtime::serve`) installs one per solver thread so long jobs hand
+/// the scheduler a chance between Lanczos restarts / power iterations
+/// (fair FIFO-within-shape-class needs long solves to be preemptible at
+/// their natural safepoints), and so reuse metrics can count boundaries.
+/// Threads with no hook installed pay a thread-local read per restart
+/// and nothing else.
+pub fn set_restart_yield_hook(hook: Option<Box<dyn FnMut()>>) {
+    RESTART_YIELD_HOOK.with(|h| *h.borrow_mut() = hook);
+}
+
+/// Cooperative scheduling point: the solvers call this at every outer
+/// Lanczos-restart / power-iteration boundary (between restarts — never
+/// inside the inner block recurrence). Purely a scheduling hook: it
+/// performs no numeric work, so fixed-seed solves are bitwise identical
+/// whether or not a hook is installed.
+pub fn restart_yield() {
+    RESTART_YIELD_HOOK.with(|h| {
+        if let Some(f) = h.borrow_mut().as_mut() {
+            f();
+        }
+    });
+}
+
 /// Current job, lifetime-erased. The submitter keeps the closure alive
 /// on its stack until every band has finished, which is what makes the
 /// erasure sound.

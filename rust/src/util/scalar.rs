@@ -283,8 +283,10 @@ impl Scalar for f32 {
 }
 
 /// Runtime precision choice, plumbed from the CLI / `config/suite.json`
-/// down to the solve driver (`coordinator::driver`).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// down to the solve driver (`coordinator::driver`). `Hash` because the
+/// serving layer (`runtime::serve`) keys its workspace pool and operand
+/// cache on shape classes that include the dtype.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum DType {
     F32,
     #[default]

@@ -1,0 +1,400 @@
+//! Serve-mode battery: concurrency/determinism, fault injection,
+//! cache keying, deadline/backpressure, restart-boundary yields, the
+//! line protocol, and the committed smoke-workload replay.
+//!
+//! None of these tests mutate the global compute pool, so they run
+//! safely in parallel within this binary; determinism assertions hold
+//! because the pool's thread count is fixed for the process and its
+//! partitioning is schedule-independent.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use trunksvd::backend::Operand;
+use trunksvd::coordinator::driver::{Algo, Params};
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::runtime::serve::{
+    assert_reuse_gates, replay_file, serve_lines, JobDefaults, JobResult, JobSpec, JobStatus,
+    ReplayOverrides, ServeConfig, Server,
+};
+use trunksvd::sparse::shard;
+use trunksvd::util::json;
+use trunksvd::util::scalar::DType;
+
+fn tiny(dtype: DType) -> Params {
+    Params { r: 8, p: 2, b: 4, seed: 13, tol: None, wanted: 4, dtype, ..Params::default() }
+}
+
+fn sparse_op(rows: usize, cols: usize, nnz: usize, seed: u64) -> Operand<f64> {
+    Operand::sparse(generate(&SparseSpec { rows, cols, nnz, seed, ..Default::default() }))
+}
+
+fn sigma_bits(r: &JobResult) -> Vec<u64> {
+    r.sigma.iter().map(|x| x.to_bits()).collect()
+}
+
+fn tmp(name: &str) -> String {
+    let d = std::env::temp_dir().join("trunksvd_serve_tests").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d.to_str().unwrap().to_string()
+}
+
+/// Satellite 1: N concurrent submitters × {lancsvd, randsvd} × {f32, f64}
+/// against one shared operand. Every repetition of a combo must return
+/// bitwise-identical singular values, and every shape class must see at
+/// least one warm workspace reuse.
+#[test]
+fn concurrent_submitters_bitwise_identical_per_combo() {
+    const COMBOS: [(Algo, DType); 4] = [
+        (Algo::Lanc, DType::F64),
+        (Algo::Lanc, DType::F32),
+        (Algo::Rand, DType::F64),
+        (Algo::Rand, DType::F32),
+    ];
+    const SUBMITTERS: usize = 4;
+    const REPS: usize = 2;
+
+    let mut server =
+        Server::new(ServeConfig { solvers: 3, queue_cap: 64, ..ServeConfig::default() });
+    let op = sparse_op(300, 120, 4000, 5);
+
+    let mut all: Vec<(usize, JobResult)> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..SUBMITTERS {
+            let server = &server;
+            let op = op.clone();
+            handles.push(s.spawn(move || {
+                let mut out = Vec::new();
+                for rep in 0..REPS {
+                    for (ci, (algo, dt)) in COMBOS.iter().enumerate() {
+                        let spec = JobSpec::new(
+                            format!("t{t}-r{rep}-c{ci}"),
+                            *algo,
+                            tiny(*dt),
+                            op.clone(),
+                        );
+                        out.push((ci, server.submit(spec).wait()));
+                    }
+                }
+                out
+            }));
+        }
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+    });
+
+    let total = SUBMITTERS * REPS * COMBOS.len();
+    assert_eq!(all.len(), total);
+    for (_, r) in &all {
+        assert_eq!(r.status, JobStatus::Done, "job {} failed: {:?}", r.id, r.status);
+        assert_eq!(r.sigma.len(), 4, "job {}", r.id);
+        for w in r.sigma.windows(2) {
+            assert!(w[0] >= w[1], "sigma not descending in {}: {:?}", r.id, r.sigma);
+        }
+    }
+    // Bitwise identity within each combo, regardless of which worker
+    // ran which repetition.
+    for ci in 0..COMBOS.len() {
+        let group: Vec<&JobResult> =
+            all.iter().filter(|(c, _)| *c == ci).map(|(_, r)| r).collect();
+        assert_eq!(group.len(), SUBMITTERS * REPS);
+        let reference = sigma_bits(group[0]);
+        for r in &group[1..] {
+            assert_eq!(
+                sigma_bits(r),
+                reference,
+                "combo {ci}: {} disagrees with {}",
+                r.id,
+                group[0].id
+            );
+        }
+    }
+
+    server.shutdown();
+    let c = server.counters();
+    assert_eq!(c.completed, total as u64);
+    assert_eq!(c.failed, 0);
+    assert_eq!(c.operand_rework, 0);
+    // The cache key is (operand identity, dtype, backend) — algo is
+    // deliberately excluded (the staged operand is algo-independent) —
+    // so the 4 combos collapse onto 2 keys, each built exactly once.
+    assert_eq!(c.operand_misses, 2, "{c:?}");
+    assert_eq!(c.operand_hits, (total - 2) as u64, "{c:?}");
+
+    // 4 distinct shape classes (plan kind × dtype), each warm at least once.
+    let classes = server.class_stats();
+    assert_eq!(classes.len(), 4, "{classes:?}");
+    let mut created = 0;
+    let mut warm = 0;
+    for (label, st, _free) in &classes {
+        assert!(st.created >= 1, "class {label} never built an arena");
+        assert!(st.warm_reuses >= 1, "class {label} never reused a warm arena");
+        created += st.created;
+        warm += st.warm_reuses;
+    }
+    assert_eq!(created + warm, total as u64);
+}
+
+/// Satellite 2a: validation failures (r not a multiple of b; r beyond
+/// min(m, n); inadmissible shard resident-cap) come back as `Failed`
+/// without wedging the server — a subsequent well-formed job succeeds.
+#[test]
+fn validation_failures_fail_cleanly_and_server_stays_healthy() {
+    let mut server = Server::new(ServeConfig { solvers: 2, ..ServeConfig::default() });
+    let op = sparse_op(200, 80, 2500, 9);
+
+    let bad_rb = server
+        .submit(JobSpec::new(
+            "bad-rb",
+            Algo::Lanc,
+            Params { r: 10, b: 4, ..tiny(DType::F64) },
+            op.clone(),
+        ))
+        .wait();
+    assert!(matches!(bad_rb.status, JobStatus::Failed(_)), "{:?}", bad_rb.status);
+
+    let bad_r = server
+        .submit(JobSpec::new(
+            "bad-r",
+            Algo::Lanc,
+            Params { r: 96, b: 8, ..tiny(DType::F64) },
+            op.clone(),
+        ))
+        .wait();
+    assert!(matches!(bad_r.status, JobStatus::Failed(_)), "{:?}", bad_r.status);
+
+    // Sharded operand whose resident cap is one byte below the largest
+    // shard: the eager staging done at backend build must surface a
+    // clean error, not a panic.
+    let dir = tmp("inadmissible_cap");
+    let a = generate(&SparseSpec { rows: 200, cols: 80, nnz: 2500, seed: 9, ..Default::default() });
+    let sd = Arc::new(shard::write_shards_from_csr(&dir, &a, 4).unwrap());
+    let maxb = sd.max_resident_bytes::<f64>();
+    let bad_cap = server
+        .submit(JobSpec::new(
+            "bad-cap",
+            Algo::Lanc,
+            tiny(DType::F64),
+            Operand::sharded(Arc::clone(&sd), maxb - 1),
+        ))
+        .wait();
+    match &bad_cap.status {
+        JobStatus::Failed(msg) => {
+            assert!(msg.starts_with("backend build:"), "unexpected failure text: {msg}")
+        }
+        other => panic!("expected Failed, got {other:?}"),
+    }
+
+    let ok = server.submit(JobSpec::new("ok", Algo::Lanc, tiny(DType::F64), op)).wait();
+    assert_eq!(ok.status, JobStatus::Done, "{:?}", ok.status);
+
+    server.shutdown();
+    let c = server.counters();
+    assert_eq!(c.failed, 3);
+    assert_eq!(c.completed, 1);
+    assert_eq!(c.rejected_backpressure + c.rejected_deadline, 0);
+}
+
+/// Satellite 2b: a mid-solve panic is contained by the worker — the
+/// job reports `Failed`, the poisoned workspace and half-built backend
+/// are discarded (never returned to the pools), and the next job on
+/// the same class + operand rebuilds (counted as rework) and succeeds.
+#[test]
+fn mid_solve_panic_contained_and_rework_counted() {
+    let mut server = Server::new(ServeConfig { solvers: 2, ..ServeConfig::default() });
+    let op = sparse_op(240, 100, 3000, 17);
+
+    let mut boom = JobSpec::new("boom", Algo::Lanc, tiny(DType::F64), op.clone());
+    boom.inject_panic = true;
+    let r = server.submit(boom).wait();
+    match &r.status {
+        JobStatus::Failed(msg) => assert!(msg.contains("panicked"), "{msg}"),
+        other => panic!("expected Failed, got {other:?}"),
+    }
+
+    let after = server.submit(JobSpec::new("after", Algo::Lanc, tiny(DType::F64), op)).wait();
+    assert_eq!(after.status, JobStatus::Done, "{:?}", after.status);
+    assert!(!after.operand_hit, "post-panic job must rebuild the backend, not hit a stale slot");
+
+    server.shutdown();
+    let c = server.counters();
+    assert_eq!(c.failed, 1);
+    assert_eq!(c.completed, 1);
+    assert!(c.ws_discarded >= 1, "{c:?}");
+    assert_eq!(c.operand_rework, 1, "{c:?}");
+}
+
+/// Satellite 3: cache-keying properties, asserted on counters (not
+/// timing). Arc-clones of one `Csr` share a generation stamp (hit); a
+/// regenerated bit-identical matrix mints a fresh generation (miss,
+/// conservatively — but the math agrees bitwise); a plan differing
+/// only in `p` keeps the operand key yet lands in a distinct shape
+/// class (cold arena).
+#[test]
+fn cache_keying_generation_arc_and_shape_class() {
+    let mut server = Server::new(ServeConfig { solvers: 1, ..ServeConfig::default() });
+    let spec = SparseSpec { rows: 220, cols: 90, nnz: 2600, seed: 23, ..Default::default() };
+    let op = Operand::sparse(generate(&spec));
+
+    let a = server.submit(JobSpec::new("a", Algo::Lanc, tiny(DType::F64), op.clone())).wait();
+    let b = server.submit(JobSpec::new("b", Algo::Lanc, tiny(DType::F64), op.clone())).wait();
+    let c = server
+        .submit(JobSpec::new("c", Algo::Lanc, tiny(DType::F64), Operand::sparse(generate(&spec))))
+        .wait();
+    for r in [&a, &b, &c] {
+        assert_eq!(r.status, JobStatus::Done, "job {}: {:?}", r.id, r.status);
+    }
+    assert!(!a.operand_hit, "first sight of a generation must miss");
+    assert!(b.operand_hit, "Arc-clone shares the generation stamp and must hit");
+    assert!(!c.operand_hit, "a regenerated Csr mints a fresh generation and must miss");
+    assert!(b.workspace_warm && c.workspace_warm, "b={} c={}", b.workspace_warm, c.workspace_warm);
+    assert_eq!(sigma_bits(&a), sigma_bits(&b));
+    assert_eq!(sigma_bits(&a), sigma_bits(&c), "identical content must agree bitwise");
+
+    // Same operand, padding p bumped: operand cache hits, workspace
+    // pool must NOT serve a warm arena from the old class.
+    let d = server
+        .submit(JobSpec::new("d", Algo::Lanc, Params { p: 3, ..tiny(DType::F64) }, op))
+        .wait();
+    assert_eq!(d.status, JobStatus::Done, "{:?}", d.status);
+    assert!(d.operand_hit, "p is not part of the operand key");
+    assert!(!d.workspace_warm, "p IS part of the shape class; arena must be cold");
+
+    server.shutdown();
+    let c = server.counters();
+    assert_eq!(c.operand_hits, 2, "{c:?}");
+    assert_eq!(c.operand_misses, 2, "{c:?}");
+    assert_eq!(c.operand_rework, 0, "{c:?}");
+    assert_eq!(server.class_stats().len(), 2, "{:?}", server.class_stats());
+}
+
+/// Satellite 4: with one solver held busy and a queue capacity of 1,
+/// an overflow job gets a typed backpressure rejection and a queued
+/// job whose deadline lapses in the queue gets a typed deadline
+/// rejection — both recorded as `rejected`, never `failed`.
+#[test]
+fn deadline_and_backpressure_rejections_are_typed() {
+    let mut server =
+        Server::new(ServeConfig { solvers: 1, queue_cap: 1, ..ServeConfig::default() });
+    let op = sparse_op(150, 60, 1500, 29);
+
+    let mut slow = JobSpec::new("slow", Algo::Lanc, tiny(DType::F64), op.clone());
+    slow.inject_delay = Some(Duration::from_millis(600));
+    let h_slow = server.submit(slow);
+
+    // Wait for the worker to actually dequeue the slow job so the
+    // queue is empty; polling the depth (not sleeping a fixed time)
+    // keeps this deterministic on slow CI machines.
+    let t0 = Instant::now();
+    while server.queue_depth() > 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "slow job never dequeued");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let mut stale = JobSpec::new("stale", Algo::Lanc, tiny(DType::F64), op.clone());
+    stale.deadline = Some(Duration::from_millis(50));
+    let h_stale = server.submit(stale); // fills the single queue slot
+
+    let burst = server.submit(JobSpec::new("burst", Algo::Lanc, tiny(DType::F64), op)).wait();
+    match &burst.status {
+        JobStatus::Rejected(msg) => assert!(msg.contains("queue full"), "{msg}"),
+        other => panic!("expected backpressure rejection, got {other:?}"),
+    }
+
+    let stale = h_stale.wait();
+    match &stale.status {
+        JobStatus::Rejected(msg) => assert!(msg.contains("deadline"), "{msg}"),
+        other => panic!("expected deadline rejection, got {other:?}"),
+    }
+
+    let slow = h_slow.wait();
+    assert_eq!(slow.status, JobStatus::Done, "{:?}", slow.status);
+
+    server.shutdown();
+    let c = server.counters();
+    assert_eq!(c.rejected_backpressure, 1, "{c:?}");
+    assert_eq!(c.rejected_deadline, 1, "{c:?}");
+    assert_eq!(c.completed, 1, "{c:?}");
+    assert_eq!(c.failed, 0, "rejections must not be recorded as failures: {c:?}");
+}
+
+/// Tentpole invariant: LancSVD restart boundaries are cooperative
+/// yield points inside serve workers; `tol: None` with `p = 3` runs
+/// all three outer iterations, yielding at j = 2 and j = 3.
+#[test]
+fn restart_boundaries_yield_and_are_counted() {
+    let mut server = Server::new(ServeConfig { solvers: 1, ..ServeConfig::default() });
+    let r = server
+        .submit(JobSpec::new(
+            "yields",
+            Algo::Lanc,
+            Params { p: 3, ..tiny(DType::F64) },
+            sparse_op(200, 80, 2400, 31),
+        ))
+        .wait();
+    assert_eq!(r.status, JobStatus::Done, "{:?}", r.status);
+    assert_eq!(r.iters, 3);
+    server.shutdown();
+    let c = server.counters();
+    assert_eq!(c.restart_yields, 2, "{c:?}");
+}
+
+/// Satellite 4 (protocol surface): the line protocol reports `ok`,
+/// `rejected` (deadline 0) and `failed` (unparseable algo) as three
+/// distinct statuses on the output stream.
+#[test]
+fn protocol_reports_rejections_distinct_from_failures() {
+    let mut server = Server::new(ServeConfig { solvers: 2, ..ServeConfig::default() });
+    let defaults = JobDefaults {
+        algo: Algo::Lanc,
+        params: Params { r: 8, p: 2, b: 4, wanted: 3, ..Params::default() },
+    };
+    let operand = r#"{"sparse": {"rows": 150, "cols": 60, "nnz": 1400, "seed": 3}}"#;
+    let lines = [
+        format!(r#"{{"id": "good", "operand": {operand}}}"#),
+        format!(r#"{{"id": "late", "deadline_ms": 0, "operand": {operand}}}"#),
+        format!(r#"{{"id": "broken", "algo": "nope", "operand": {operand}}}"#),
+    ];
+    let input = lines.join("\n") + "\n";
+    let mut out = Vec::new();
+    serve_lines(&server, &defaults, &input, &mut out).unwrap();
+    server.shutdown();
+
+    let text = String::from_utf8(out).unwrap();
+    let mut by_status = std::collections::HashMap::new();
+    for line in text.lines() {
+        let v = json::parse(line).unwrap();
+        let tag = v.get("status").unwrap().as_str().unwrap().to_string();
+        *by_status.entry(tag).or_insert(0u32) += 1;
+    }
+    assert_eq!(by_status.get("ok"), Some(&1), "{text}");
+    assert_eq!(by_status.get("rejected"), Some(&1), "{text}");
+    assert_eq!(by_status.get("failed"), Some(&1), "{text}");
+}
+
+/// Satellite 5 backing test: replaying the committed smoke workload
+/// (repeat = 2 over one warm server) is bitwise deterministic and
+/// passes every reuse gate; the written report agrees.
+#[test]
+fn replay_smoke_twice_is_bitwise_and_reuse_gated() {
+    let workload = concat!(env!("CARGO_MANIFEST_DIR"), "/config/workloads/smoke.json");
+    let out_path =
+        std::env::temp_dir().join(format!("trunksvd_bench_serve_{}.json", std::process::id()));
+    let out = out_path.to_str().unwrap().to_string();
+
+    let s = replay_file(workload, Some(&out), &ReplayOverrides::default()).unwrap();
+    assert_eq!(s.runs, 2);
+    assert_eq!(s.jobs_per_run, 7);
+    assert!(s.deterministic);
+    assert_reuse_gates(&s.counters).unwrap();
+
+    let rep = json::parse_file(&out).unwrap();
+    let det = rep.get("determinism").unwrap();
+    assert_eq!(det.get("bitwise_identical").unwrap().as_bool(), Some(true));
+    assert!(rep.get("counters").unwrap().get("operand_hits").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(rep.get("counters").unwrap().get("ws_warm_reuses").unwrap().as_f64().unwrap() >= 1.0);
+    let _ = std::fs::remove_file(&out_path);
+}
