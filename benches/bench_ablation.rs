@@ -90,7 +90,7 @@ fn main() {
         let t0 = std::time::Instant::now();
         let svd = trunksvd::algo::randsvd::randsvd(
             &mut be,
-            &trunksvd::algo::RandSvdOpts { r: 16, p: 24, b: 16, seed: 5, init },
+            &trunksvd::algo::RandSvdOpts { r: 16, p: 24, b: 16, seed: 5, init, fuse: None },
         )
         .unwrap();
         let mut chk = CpuBackend::new_sparse(a.clone());

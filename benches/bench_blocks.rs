@@ -39,6 +39,13 @@
 //! gates parity, overlap, cap enforcement, and exactly-once disk
 //! accounting.
 //!
+//! The `fused` section times the one-sweep fused kernels (`spmm_ata`,
+//! `spmm_gram`) against their two-kernel compositions on an
+//! over-LLC operand, and replays a sharded RandSVD power solve fused vs
+//! unfused to read the disk-tier byte drop off the staged ledger
+//! (deterministically 2p/(p+1)). `BENCH_ASSERT_FUSED=1` (set in CI)
+//! gates fused-not-slower (full size only) and a ≥1.8× disk-byte drop.
+//!
 //! The `cost_calibration` section measures the real dispatch-grain and
 //! adaptive-transpose crossovers on this host and emits them in the
 //! layout `cost::load_calibration` reads — point
@@ -727,6 +734,155 @@ fn main() {
     };
 
     banner(
+        "Fused operand passes (A·Q + Gram, Aᵀ(A·Q))",
+        "one nonzero sweep vs the two-kernel composition; BENCH_ASSERT_FUSED=1 \
+         gates fused-not-slower in core (full size only) and the >=1.8x \
+         disk-byte drop out of core",
+    );
+    let fused_section = {
+        use std::sync::Arc;
+        use trunksvd::algo::randsvd::randsvd;
+        use trunksvd::algo::RandSvdOpts;
+        use trunksvd::backend::staged::StagedBackend;
+        use trunksvd::sparse::shard;
+
+        let assert_fused = env_usize("BENCH_ASSERT_FUSED", 0) == 1;
+        // In-core leg: operand past the LLC crossover (~37 MB of CSR at
+        // full size), so the composition's second read of the nonzeros
+        // is a real DRAM pass and the fused band sweep's is a cache hit.
+        let rows = if quick { 16384 } else { 65536 };
+        let spec =
+            SparseSpec { rows, cols: rows / 2, nnz: rows * 48, seed: 83, ..Default::default() };
+        let a = generate(&spec);
+        let k = 8usize;
+        let mut rng2 = Rng::new(97);
+        let x: Mat<f64> = Mat::randn(a.cols(), k, &mut rng2);
+        let mut y: Mat<f64> = Mat::zeros(a.rows(), k);
+        let mut z: Mat<f64> = Mat::zeros(a.cols(), k);
+        let mut g: Mat<f64> = Mat::zeros(k, k);
+        let fl_ata = 4.0 * a.nnz() as f64 * k as f64;
+        let (w, r) = auto_runs(fl_ata / 1e9);
+        // Min-of-runs with up-to-5 retries keeping the best ratio (the
+        // same noise armor as the SIMD gate).
+        let (mut ata_ratio, mut gram_ratio) = (0.0f64, 0.0f64);
+        let (mut tfa, mut tua, mut tfg, mut tug) = (0.0f64, 0.0, 0.0, 0.0);
+        for _ in 0..5 {
+            let f_ata = time_runs(w, r, || a.spmm_ata(x.as_ref(), y.as_mut(), z.as_mut())).min;
+            let u_ata = time_runs(w, r, || {
+                a.spmm(x.as_ref(), y.as_mut());
+                a.spmm_t(y.as_ref(), z.as_mut());
+            })
+            .min;
+            let f_gram = time_runs(w, r, || a.spmm_gram(x.as_ref(), y.as_mut(), g.as_mut())).min;
+            let u_gram = time_runs(w, r, || {
+                a.spmm(x.as_ref(), y.as_mut());
+                blas3::gram_into(y.as_ref(), g.as_mut());
+            })
+            .min;
+            if u_ata / f_ata > ata_ratio {
+                ata_ratio = u_ata / f_ata;
+                (tfa, tua) = (f_ata, u_ata);
+            }
+            if u_gram / f_gram > gram_ratio {
+                gram_ratio = u_gram / f_gram;
+                (tfg, tug) = (f_gram, u_gram);
+            }
+            if ata_ratio >= 1.0 && gram_ratio >= 1.0 {
+                break;
+            }
+        }
+        println!(
+            "fused_ata        m={rows:>6} nnz={}  fused {tfa:>8.4}s  unfused {tua:>8.4}s  \
+             speedup {ata_ratio:>5.2}x  {:>7.2} GF/s",
+            a.nnz(),
+            gflops(fl_ata, tfa)
+        );
+        println!(
+            "fused_gram       m={rows:>6} nnz={}  fused {tfg:>8.4}s  unfused {tug:>8.4}s  \
+             speedup {gram_ratio:>5.2}x",
+            a.nnz()
+        );
+
+        // Out-of-core leg: deterministic ledger arithmetic, no timing.
+        // A fused RandSVD power sweep makes p+1 operand passes against
+        // 2p unfused, so at p = 10 the disk tier must record exactly a
+        // 20/11 ≈ 1.82x byte drop.
+        let rows_ooc = 4000usize;
+        let spec = SparseSpec {
+            rows: rows_ooc,
+            cols: rows_ooc / 4,
+            nnz: rows_ooc * 12,
+            seed: 89,
+            ..Default::default()
+        };
+        let a_ooc = generate(&spec);
+        let dir_path = std::env::temp_dir().join("trunksvd_bench_fused_shards");
+        let _ = std::fs::remove_dir_all(&dir_path);
+        let dirs = dir_path.to_str().expect("utf8 temp path").to_string();
+        let sd =
+            Arc::new(shard::write_shards_from_csr(&dirs, &a_ooc, 4).expect("write fused shards"));
+        let cap = 2 * sd.max_resident_bytes::<f64>();
+        let p = 10usize;
+        let solve_disk_bytes = |fuse: bool| -> u64 {
+            let mut be: StagedBackend = StagedBackend::new_sharded(Arc::clone(&sd), cap);
+            be.ensure_operand_resident().expect("fused shard staging");
+            let opts = RandSvdOpts {
+                r: 12,
+                p,
+                b: 4,
+                seed: 7,
+                fuse: Some(fuse),
+                ..Default::default()
+            };
+            randsvd(&mut be, &opts).expect("sharded power solve");
+            be.ledger().totals().disk_bytes
+        };
+        let disk_fused = solve_disk_bytes(true);
+        let disk_unfused = solve_disk_bytes(false);
+        let _ = std::fs::remove_dir_all(&dir_path);
+        let disk_ratio = disk_unfused as f64 / disk_fused.max(1) as f64;
+        println!(
+            "fused_ooc        p={p} shards=4  disk fused {disk_fused} B  \
+             unfused {disk_unfused} B  drop {disk_ratio:>5.2}x"
+        );
+        if assert_fused {
+            if !quick {
+                // At quick size the operand is cache-resident and the
+                // in-core comparison is noise; the timing gate only
+                // means something past the LLC.
+                assert!(
+                    ata_ratio >= 1.0,
+                    "fused A^T(A q) must not be slower than the composition \
+                     (best ratio {ata_ratio:.3})"
+                );
+                assert!(
+                    gram_ratio >= 0.95,
+                    "fused A q + Gram regressed past noise (best ratio {gram_ratio:.3})"
+                );
+            }
+            assert!(
+                disk_ratio >= 1.8,
+                "fused power sweep must cut disk bytes >= 1.8x (got {disk_ratio:.3})"
+            );
+        }
+        json::obj(vec![
+            ("m", json::num(rows as f64)),
+            ("nnz", json::num(a.nnz() as f64)),
+            ("k", json::num(k as f64)),
+            ("fused_ata_s", json::num(tfa)),
+            ("unfused_ata_s", json::num(tua)),
+            ("ata_speedup", json::num(ata_ratio)),
+            ("fused_gram_s", json::num(tfg)),
+            ("unfused_gram_s", json::num(tug)),
+            ("gram_speedup", json::num(gram_ratio)),
+            ("ooc_p", json::num(p as f64)),
+            ("ooc_disk_bytes_fused", json::num(disk_fused as f64)),
+            ("ooc_disk_bytes_unfused", json::num(disk_unfused as f64)),
+            ("ooc_disk_drop", json::num(disk_ratio)),
+        ])
+    };
+
+    banner(
         "Cost-model calibration",
         "measured dispatch/scatter/build crossovers -> cost_calibration section \
          (load with TRUNKSVD_COST_CALIB=BENCH_kernels.json; --calibrate adds a k-sweep)",
@@ -816,6 +972,7 @@ fn main() {
         ("quick", json::num(if quick { 1.0 } else { 0.0 })),
         ("cost_calibration", cal_section),
         ("out_of_core", ooc_section),
+        ("fused", fused_section),
         ("kernels", json::arr(entries)),
     ]);
     std::fs::write("BENCH_kernels.json", json::write(&doc)).expect("write BENCH_kernels.json");

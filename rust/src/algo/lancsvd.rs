@@ -97,10 +97,14 @@ pub fn lancsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
     ws: &Workspace<S>,
 ) -> Result<TruncatedSvd<S>> {
     let (m, n) = (be.m(), be.n());
-    let LancSvdOpts { r, p, b, seed, init, tol, wanted, restart } = opts.clone();
+    let LancSvdOpts { r, p, b, seed, init, tol, wanted, restart, fuse } = opts.clone();
     let keep = check_opts(m, n, opts)?;
     ws.plan().require(PlanKind::LancSvd, m, n, r, b)?;
     be.plan(ws.plan());
+    // Fusion policy: explicit opt-in/out via opts, else the cost model
+    // (operand larger than LLC, or streamed from disk).
+    let fuse = fuse
+        .unwrap_or_else(|| crate::cost::should_fuse(be.operand_bytes(), be.operand_on_disk()));
 
     // Solve-state buffers, borrowed for the whole solve. The orth
     // kernels borrow only their own `orth.{w,l1,l2,hbar,snap}` scratch,
@@ -112,6 +116,7 @@ pub fn lancsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
     let mut pbar_basis = ws.mat(names::LANC_PBAR, m, r);
     let mut bmat = ws.mat(names::LANC_B, r, r);
     let mut rk_last = ws.mat(names::LANC_RK, b, b);
+    let mut gram = ws.mat(names::LANC_G, b, b);
     let mut svd_u = ws.mat(names::SVD_U, r, r);
     let mut svd_v = ws.mat(names::SVD_V, r, r);
     let mut tmp = ws.buf(names::LANC_TMP);
@@ -187,9 +192,17 @@ pub fn lancsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
                 }
             }
 
-            // S4: Q̄ᵢ₊₁ = A·Qᵢ
+            // S4: Q̄ᵢ₊₁ = A·Qᵢ. Fused: the b×b Gram Q̄ᵢ₊₁ᵀQ̄ᵢ₊₁ is
+            // accumulated in the SAME sweep over the operand's nonzeros
+            // while each output band is still in cache, so S5's first
+            // CholeskyQR pass can downdate it (W = G − HᵀH) instead of
+            // re-reading the m×b panel.
             be.profile_mut().set_phase(Block::MultA);
-            be.apply_a_into(p_basis.panel(s, b), qnext.as_mut());
+            if fuse {
+                be.apply_a_gram_into(p_basis.panel(s, b), qnext.as_mut(), gram.as_mut());
+            } else {
+                be.apply_a_into(p_basis.panel(s, b), qnext.as_mut());
+            }
 
             // S5: orthogonalize in the m dimension against P̄ᵢ → Rᵢ.
             be.profile_mut().set_phase(Block::OrthM);
@@ -197,7 +210,18 @@ pub fn lancsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
                 let hist = pbar_basis.panel(0, s + b);
                 let h = h_buf.view_mut(s + b, b);
                 let mut ri = lt_buf.view_mut(b, b);
-                be.orth_cgs_cqr2_into(qnext.as_mut(), hist, h, ri.reborrow(), ws)?;
+                if fuse {
+                    be.orth_cgs_cqr2_pregram_into(
+                        qnext.as_mut(),
+                        hist,
+                        gram.as_ref(),
+                        h,
+                        ri.reborrow(),
+                        ws,
+                    )?;
+                } else {
+                    be.orth_cgs_cqr2_into(qnext.as_mut(), hist, h, ri.reborrow(), ws)?;
+                }
                 if s + b < r {
                     // B sub-diagonal block (upper-triangular Rᵢ).
                     for jj in 0..b {

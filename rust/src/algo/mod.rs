@@ -36,11 +36,22 @@ pub struct RandSvdOpts {
     pub seed: u64,
     /// Initial-vector distribution.
     pub init: InitDist,
+    /// Fused operand-pass override: `Some(true)`/`Some(false)` force the
+    /// fused/unfused power step; `None` defers to the cost-model policy
+    /// ([`crate::cost::should_fuse`], overridable via `TRUNKSVD_FUSE`).
+    pub fuse: Option<bool>,
 }
 
 impl Default for RandSvdOpts {
     fn default() -> Self {
-        RandSvdOpts { r: 16, p: 96, b: 16, seed: 0xC0FFEE, init: InitDist::CenteredPoisson }
+        RandSvdOpts {
+            r: 16,
+            p: 96,
+            b: 16,
+            seed: 0xC0FFEE,
+            init: InitDist::CenteredPoisson,
+            fuse: None,
+        }
     }
 }
 
@@ -80,6 +91,11 @@ pub struct LancSvdOpts {
     pub wanted: usize,
     /// Restart strategy (paper default: basic).
     pub restart: Restart,
+    /// Fused operand-pass override: `Some(true)`/`Some(false)` force the
+    /// fused/unfused A·Q + Gram sweep; `None` defers to the cost-model
+    /// policy ([`crate::cost::should_fuse`], overridable via
+    /// `TRUNKSVD_FUSE`).
+    pub fuse: Option<bool>,
 }
 
 impl Default for LancSvdOpts {
@@ -93,6 +109,7 @@ impl Default for LancSvdOpts {
             tol: None,
             wanted: 10,
             restart: Restart::Basic,
+            fuse: None,
         }
     }
 }

@@ -172,6 +172,101 @@ pub fn cgs_cqr2_into_host<S: Scalar, B: Backend<S> + ?Sized>(
     Ok(())
 }
 
+/// CGS + CholeskyQR2 with the panel Gram precomputed (contract rule 8;
+/// the trait's default for [`Backend::orth_cgs_cqr2_pregram_into`]).
+///
+/// `g` must hold QᵀQ of the *incoming* panel — the fused
+/// `apply_a_gram_into` sweep produces it alongside the panel itself.
+/// The first CholeskyQR pass then forms its Gram by the downdate
+/// `W = G − HᵀH` instead of re-streaming the q×b panel: with `p`
+/// orthonormal (the Lanczos invariant) and `Q₁ = Q − P·H`,
+/// `Q₁ᵀQ₁ = G − HᵀH` exactly in exact arithmetic. The downdate can lose
+/// positive-definiteness to rounding where the direct Gram would not,
+/// so on a first-pass breakdown the Gram is recomputed directly and the
+/// Cholesky retried before falling back to CGS2. The second pass is the
+/// standard re-streamed one — it restores orthogonality to machine
+/// precision, which is what keeps the fused path ε-equal to the unfused
+/// composition.
+pub fn cgs_cqr2_pregram_into_host<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    mut q: MatMut<'_, S>,
+    p: MatRef<'_, S>,
+    g: MatRef<'_, S>,
+    mut h: MatMut<'_, S>,
+    mut r: MatMut<'_, S>,
+    ws: &Workspace<S>,
+) -> Result<()> {
+    assert_eq!(p.rows, q.rows, "cgs_cqr2 panel rows");
+    let b = q.cols;
+    assert_eq!((g.rows, g.cols), (b, b), "cgs_cqr2 pregram G shape");
+    assert_eq!((h.rows, h.cols), (p.cols, b), "cgs_cqr2 H shape");
+    assert_eq!((r.rows, r.cols), (b, b), "cgs_cqr2 R shape");
+    let mut snap_buf = ws.buf(names::ORTH_SNAP);
+    let mut snap = snap_buf.view_mut(q.rows, b);
+    snap.data.copy_from_slice(q.data);
+    // First pass: project out P, then CholeskyQR on the downdated Gram.
+    be.proj_into(p, q.as_ref(), h.reborrow()); // S1
+    be.subtract_proj(q.reborrow(), p, h.as_ref()); // S2
+    let mut l1_buf = ws.buf(names::ORTH_L1);
+    let mut l1 = l1_buf.view_mut(b, b);
+    let mut l2_buf = ws.buf(names::ORTH_L2);
+    let mut l2 = l2_buf.view_mut(b, b);
+    let first = {
+        let mut w_buf = ws.buf(names::ORTH_W);
+        let mut w = w_buf.view_mut(b, b);
+        // W = G − HᵀH: the 2sb² downdate + b³/3 POTRF replace the b²q
+        // Gram re-stream (host factor-sized work, rule 3).
+        w.data.copy_from_slice(g.data);
+        let t = Timer::start(
+            2.0 * h.rows as f64 * (b * b) as f64 + (b * b * b) as f64 / 3.0,
+        );
+        crate::la::blas3::gemm_tn(-S::ONE, h.as_ref(), h.as_ref(), S::ONE, w.reborrow());
+        let mut res = potrf_into(w.as_ref(), l1.reborrow());
+        t.stop(be.profile_mut());
+        if matches!(res, Err(Error::CholeskyBreakdown { .. })) {
+            // Rounding in the downdate can lose definiteness the direct
+            // Gram still has: recompute and retry before declaring a
+            // real breakdown.
+            be.gram_into(q.as_ref(), w.reborrow());
+            let t = Timer::start((b * b * b) as f64 / 3.0);
+            res = potrf_into(w.as_ref(), l1.reborrow());
+            t.stop(be.profile_mut());
+        }
+        res
+    };
+    match first {
+        Ok(()) => be.tri_solve_right(q.reborrow(), l1.as_ref()),
+        Err(Error::CholeskyBreakdown { .. }) => {
+            be.proj_into(p, snap.as_ref(), h.reborrow());
+            q.data.copy_from_slice(snap.data);
+            return cgs2_fallback(be, q, Some(p), r);
+        }
+        Err(e) => return Err(e),
+    }
+    // Second pass: identical to the unfused composition.
+    let mut hbar_buf = ws.buf(names::ORTH_HBAR);
+    let mut hbar = hbar_buf.view_mut(p.cols, b);
+    be.proj_into(p, q.as_ref(), hbar.reborrow()); // S6
+    be.subtract_proj(q.reborrow(), p, hbar.as_ref()); // S7
+    match cholqr_pass_into(be, &mut q, &mut l2, ws) {
+        Ok(()) => {}
+        Err(Error::CholeskyBreakdown { .. }) => {
+            be.proj_into(p, snap.as_ref(), h.reborrow());
+            q.data.copy_from_slice(snap.data);
+            return cgs2_fallback(be, q, Some(p), r);
+        }
+        Err(e) => return Err(e),
+    }
+    // S11/S12 as in the unfused composition.
+    let t = Timer::start((b * b * b) as f64 + (h.rows * h.cols) as f64);
+    crate::la::blas3::trmm_lt_lt_into(l2.as_ref(), l1.as_ref(), r.reborrow());
+    for (hv, hb) in h.data.iter_mut().zip(hbar.data.iter()) {
+        *hv += *hb;
+    }
+    t.stop(be.profile_mut());
+    Ok(())
+}
+
 /// Backend-dispatching entry point for the out-parameter Alg. 4 (the
 /// XLA backend overrides the trait method with its fused AOT graph).
 pub fn cholqr2_into<S: Scalar, B: Backend<S> + ?Sized>(
@@ -443,6 +538,95 @@ mod tests {
         }
         let mut q = y.clone();
         let (_h, _r) = cgs_cqr2(&mut be, &mut q, p.as_ref()).unwrap();
+        assert!(orth_error(&q) < 1e-9, "orth {}", orth_error(&q));
+        let cross = mat_tn(&p, &q);
+        assert!(cross.fro_norm() < 1e-9, "cross {}", cross.fro_norm());
+    }
+
+    #[test]
+    fn pregram_matches_unfused_composition() {
+        // The Gram-downdated first pass must agree with the re-streamed
+        // one to roundoff; the second CholeskyQR pass makes both paths
+        // orthonormal to machine precision.
+        let mut be = dummy_backend();
+        let mut rng = Rng::new(7);
+        let ws = Workspace::new(Plan::orth(150, 24, 8));
+        for trial in 0..3 {
+            let p = crate::la::qr::random_orthonormal(150, 12, &mut rng);
+            let y = Mat::randn(150, 8, &mut rng);
+            let g = mat_tn(&y, &y);
+            let mut q1 = y.clone();
+            let mut h1 = Mat::zeros(12, 8);
+            let mut r1 = Mat::zeros(8, 8);
+            cgs_cqr2_into(&mut be, q1.as_mut(), p.as_ref(), h1.as_mut(), r1.as_mut(), &ws)
+                .unwrap();
+            let mut q2 = y.clone();
+            let mut h2 = Mat::zeros(12, 8);
+            let mut r2 = Mat::zeros(8, 8);
+            cgs_cqr2_pregram_into_host(
+                &mut be,
+                q2.as_mut(),
+                p.as_ref(),
+                g.as_ref(),
+                h2.as_mut(),
+                r2.as_mut(),
+                &ws,
+            )
+            .unwrap();
+            assert!(orth_error(&q2) < 1e-13, "trial {trial} orth");
+            let cross = mat_tn(&p, &q2);
+            assert!(cross.fro_norm() < 1e-12, "trial {trial} cross");
+            let scale = y.fro_norm();
+            assert!(q1.max_abs_diff(&q2) < 1e-10, "trial {trial} Q");
+            assert!(h1.max_abs_diff(&h2) / scale < 1e-10, "trial {trial} H");
+            assert!(r1.max_abs_diff(&r2) / scale < 1e-10, "trial {trial} R");
+            // Y ≈ P·H + Q·R through the pregram path too.
+            let mut back = mat_nn(&p, &h2);
+            let qr = mat_nn(&q2, &r2);
+            for (a, c) in back.data_mut().iter_mut().zip(qr.data()) {
+                *a += c;
+            }
+            assert!(back.max_abs_diff(&y) / scale < 1e-12, "trial {trial} reconstruct");
+        }
+    }
+
+    #[test]
+    fn pregram_breakdown_falls_back() {
+        // Panel columns inside span(P) zero out after S2: the downdated
+        // Gram (and the recomputed one) break down, and the CGS2
+        // fallback must still deliver an orthonormal Q ⟂ P.
+        let mut be = dummy_backend();
+        let mut rng = Rng::new(8);
+        let rows = 80;
+        let ws = Workspace::new(Plan::orth(rows, 8, 4));
+        let p = crate::la::qr::random_orthonormal(rows, 8, &mut rng);
+        let mut y = Mat::zeros(rows, 4);
+        for j in 0..2 {
+            let mut comb = vec![0.0; rows];
+            for k in 0..8 {
+                axpy(rng.normal(), p.col(k), &mut comb);
+            }
+            y.col_mut(j).copy_from_slice(&comb);
+        }
+        for j in 2..4 {
+            let mut v = vec![0.0; rows];
+            rng.fill_normal(&mut v);
+            y.col_mut(j).copy_from_slice(&v);
+        }
+        let g = mat_tn(&y, &y);
+        let mut q = y.clone();
+        let mut h = Mat::zeros(8, 4);
+        let mut r = Mat::zeros(4, 4);
+        cgs_cqr2_pregram_into_host(
+            &mut be,
+            q.as_mut(),
+            p.as_ref(),
+            g.as_ref(),
+            h.as_mut(),
+            r.as_mut(),
+            &ws,
+        )
+        .unwrap();
         assert!(orth_error(&q) < 1e-9, "orth {}", orth_error(&q));
         let cross = mat_tn(&p, &q);
         assert!(cross.fro_norm() < 1e-9, "cross {}", cross.fro_norm());

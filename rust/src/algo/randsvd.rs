@@ -65,12 +65,17 @@ pub fn randsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
     ws: &Workspace<S>,
 ) -> Result<TruncatedSvd<S>> {
     let (m, n) = (be.m(), be.n());
-    let RandSvdOpts { r, p, b, seed, init } = *opts;
+    let RandSvdOpts { r, p, b, seed, init, fuse } = *opts;
     check_opts(m, n, opts)?;
     ws.plan().require(PlanKind::RandSvd, m, n, r, b)?;
     be.plan(ws.plan());
+    // Fusion policy: explicit opt-in/out via opts, else the cost model
+    // (operand larger than LLC, or streamed from disk).
+    let fuse = fuse
+        .unwrap_or_else(|| crate::cost::should_fuse(be.operand_bytes(), be.operand_on_disk()));
 
     let mut q = ws.mat(names::RAND_Q, n, r);
+    let mut z = ws.mat(names::RAND_Z, n, r);
     let mut qbar = ws.mat(names::RAND_QBAR, m, r);
     let mut r_last = ws.mat(names::RAND_R, r, r);
     let mut svd_u = ws.mat(names::SVD_U, r, r);
@@ -95,6 +100,24 @@ pub fn randsvd_with<S: Scalar, B: Backend<S> + ?Sized>(
         // LancSVD restart loop (no-op without a hook — `runtime::serve`).
         if j > 1 {
             crate::util::pool::restart_yield();
+        }
+        // Fused power step (all but the last iteration): Z = Aᵀ(A·Q) in
+        // ONE sweep over the operand's nonzeros — each CSR band (and,
+        // out-of-core, each disk shard) is read exactly once instead of
+        // twice. The intermediate Ȳ = A·Q lands in `qbar` unorthonormal-
+        // ized; only the n-side sketch is re-orthonormalized per fused
+        // step (κ(A)² conditioning per step, standard for subspace
+        // iteration without intermediate QR). The LAST iteration always
+        // runs the unfused S1–S4 path so the finalize identity
+        // AᵀQ̄ = QR holds with an orthonormal Q̄. Total operand passes:
+        // p+1 fused vs 2p unfused.
+        if fuse && j < p {
+            be.profile_mut().set_phase(Block::MultA);
+            be.apply_ata_into(q.as_ref(), qbar.as_mut(), z.as_mut());
+            be.profile_mut().set_phase(Block::OrthN);
+            cgs_qr_into(be, z.as_mut(), r_last.as_mut(), b, ws)?;
+            std::mem::swap(&mut *q, &mut *z);
+            continue;
         }
         // S1: Ȳ = A·Q
         be.profile_mut().set_phase(Block::MultA);

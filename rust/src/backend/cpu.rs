@@ -180,6 +180,64 @@ impl<S: Scalar> Backend<S> for CpuBackend<S> {
         t.stop(&mut self.profile);
     }
 
+    // ---- fused operand-pass tier (contract rule 8) ----
+
+    fn apply_a_gram_into(&mut self, x: MatRef<S>, mut y: MatMut<S>, mut g: MatMut<S>) {
+        let k = x.cols;
+        let flops = self.mult_flops(k) + k as f64 * k as f64 * y.rows as f64;
+        let t = Timer::start(flops);
+        match &self.a {
+            Operand::Sparse(a) => a.spmm_gram(x, y, g),
+            Operand::Dense(a) => {
+                blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, y.reborrow());
+                blas3::gram_into(y.as_ref(), g);
+            }
+            Operand::Sharded { .. } => self
+                .sharded
+                .as_mut()
+                .expect("sharded operand state")
+                .spmm_gram(x, &mut y, &mut g)
+                .expect("sharded operand I/O during apply_a_gram"),
+        }
+        t.stop(&mut self.profile);
+    }
+
+    fn apply_ata_into(&mut self, x: MatRef<S>, mut y: MatMut<S>, mut z: MatMut<S>) {
+        let t = Timer::start(2.0 * self.mult_flops(x.cols));
+        match &self.a {
+            // Deliberately does NOT consult the adaptive transpose: the
+            // fused sweep must stay on the band-serial gather+scatter so
+            // a background-build adoption can never flip the numerics
+            // mid-solve (rule 8 determinism).
+            Operand::Sparse(a) => a.spmm_ata(x, y, z),
+            Operand::Dense(a) => {
+                blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, y.reborrow());
+                blas3::gemm_tn(S::ONE, a.as_ref(), y.as_ref(), S::ZERO, z);
+            }
+            Operand::Sharded { .. } => self
+                .sharded
+                .as_mut()
+                .expect("sharded operand state")
+                .spmm_ata(x, &mut y, &mut z)
+                .expect("sharded operand I/O during apply_ata"),
+        }
+        t.stop(&mut self.profile);
+    }
+
+    fn operand_bytes(&self) -> usize {
+        match &self.a {
+            Operand::Sparse(a) => {
+                a.nnz() * (std::mem::size_of::<S>() + 4) + 8 * (a.rows() + 1)
+            }
+            Operand::Dense(a) => a.rows() * a.cols() * std::mem::size_of::<S>(),
+            Operand::Sharded { dir, .. } => dir.total_file_bytes(),
+        }
+    }
+
+    fn operand_on_disk(&self) -> bool {
+        matches!(self.a, Operand::Sharded { .. })
+    }
+
     fn gram_into(&mut self, q: MatRef<S>, w: MatMut<S>) {
         let flops = q.cols as f64 * q.cols as f64 * q.rows as f64; // syrk: b²q
         let t = Timer::start(flops);
@@ -362,6 +420,35 @@ mod tests {
             assert!(w.max_abs_diff(&expect) < 1e-12);
         }
         assert_eq!(be.name(), "cpu-scatter");
+    }
+
+    #[test]
+    fn fused_ops_match_composition() {
+        let a = small_sparse(30);
+        let ad = a.to_dense();
+        let mut be = CpuBackend::new_sparse(a);
+        let mut rng = Rng::new(31);
+        let x = Mat::randn(12, 3, &mut rng);
+        let y0 = mat_nn(&ad, &x);
+        let mut y = Mat::zeros(20, 3);
+        let mut g = Mat::zeros(3, 3);
+        be.apply_a_gram_into(x.as_ref(), y.as_mut(), g.as_mut());
+        assert!(y.max_abs_diff(&y0) < 1e-12);
+        assert!(g.max_abs_diff(&mat_tn(&y0, &y0)) < 1e-11);
+        let mut y2 = Mat::zeros(20, 3);
+        let mut z = Mat::zeros(12, 3);
+        be.apply_ata_into(x.as_ref(), y2.as_mut(), z.as_mut());
+        assert!(y2.max_abs_diff(&y0) < 1e-12);
+        assert!(z.max_abs_diff(&mat_tn(&ad, &y0)) < 1e-11);
+        assert!(be.operand_bytes() > 0);
+        assert!(!be.operand_on_disk());
+        // Dense operand takes the two-gemm fused arm.
+        let mut bd = CpuBackend::new_dense(ad.clone());
+        let mut yd = Mat::zeros(20, 3);
+        let mut zd = Mat::zeros(12, 3);
+        bd.apply_ata_into(x.as_ref(), yd.as_mut(), zd.as_mut());
+        assert!(zd.max_abs_diff(&z) < 1e-11);
+        assert_eq!(bd.operand_bytes(), 20 * 12 * std::mem::size_of::<f64>());
     }
 
     #[test]

@@ -151,6 +151,45 @@
 //!   `util::pool` docs). Backends should not nest their own threads
 //!   around pool-dispatching kernels — nested calls degrade serial.
 //!
+//! ## 8. Fused ops
+//!
+//! The fused tier ([`Backend::apply_a_gram_into`],
+//! [`Backend::apply_ata_into`], [`Backend::orth_cgs_cqr2_pregram_into`])
+//! exists to cut **operand passes**, not flops: the bandwidth-bound
+//! building blocks re-stream A (and the freshly produced panels) from
+//! DRAM or disk, so consuming each row band / shard by every op that
+//! needs it while it is still resident halves the dominant traffic.
+//!
+//! * **Semantics.** `apply_a_gram_into(q, y, g)` ≡ `apply_a_into(q, y)`
+//!   then `gram_into(y, g)`; `apply_ata_into(q, y, z)` ≡
+//!   `apply_a_into(q, y)` then `apply_at_into(y, z)` — in both, `y`
+//!   holds A·Q on return (the algorithms rely on that for the scratch
+//!   reuse). `orth_cgs_cqr2_pregram_into` is `orth_cgs_cqr2_into` with
+//!   the panel Gram `g = QᵀQ` precomputed by the fused sweep: the first
+//!   CholeskyQR pass uses the downdate `W = G − HᵀH` (exact when the
+//!   history is orthonormal) instead of re-streaming the q×b panel, and
+//!   on a downdate-induced Cholesky breakdown must recompute the Gram
+//!   directly and retry before falling back to CGS2.
+//! * **Default-fallback legality.** The trait defaults compose the
+//!   unfused ops, so a backend without fused kernels (e.g.
+//!   [`xla::XlaBackend`]) stays conforming unchanged — the fused tier is
+//!   an optimization contract, never a correctness requirement. The
+//!   algorithms consult the cost model (`crate::cost::should_fuse`,
+//!   `TRUNKSVD_FUSE={auto,on,off}`) through [`Backend::operand_bytes`] /
+//!   [`Backend::operand_on_disk`] before taking the fused path.
+//! * **Ledger expectations.** A fused op is **one** staged pass: it notes
+//!   one hot-loop read of `q` and writes of `y`/`z`/`g`, performs zero
+//!   extra panel crossings versus the composition (rule 4 unchanged),
+//!   and out-of-core reads each disk shard **exactly once** — the
+//!   headline saving; the unfused composition reads each shard twice.
+//! * **Determinism.** Fused kernels follow rule 7: fixed band order with
+//!   a first-band-only zero fill for the scatter half (bitwise equal to
+//!   the unfused scatter composition at a fixed thread count) and fixed
+//!   band-order reduction for the Gram half (ε-equal to `gram_into`,
+//!   bitwise-reproducible at a fixed thread count). Conformance pins
+//!   fused-vs-unfused ε-parity and fixed-thread determinism across
+//!   backends and dtypes (`tests/test_fused_ops.rs`).
+//!
 //! # Implementations
 //!
 //! * [`cpu::CpuBackend`] — pure-rust substrate, the conformance
@@ -208,6 +247,42 @@ pub trait Backend<S: Scalar = f64> {
     fn apply_a_into(&mut self, x: MatRef<S>, y: MatMut<S>);
     /// Y ← Aᵀ · X  with X m×k, Y n×k (transposed SpMM / GEMM).
     fn apply_at_into(&mut self, x: MatRef<S>, y: MatMut<S>);
+
+    // ---- fused operand-pass tier (contract rule 8) --------------------
+
+    /// Fused sweep: Y ← A · X **and** G ← YᵀY in one pass over the
+    /// operand, with the Gram accumulated per row band while Y's band is
+    /// still cache-resident. X n×k, Y m×k, G k×k. Default: the unfused
+    /// composition (legal for every backend; see contract rule 8).
+    fn apply_a_gram_into(&mut self, x: MatRef<S>, mut y: MatMut<S>, g: MatMut<S>) {
+        self.apply_a_into(x, y.reborrow());
+        self.gram_into(y.as_ref(), g);
+    }
+
+    /// Fused power step: Y ← A · X and Z ← Aᵀ · Y band-by-band (and, for
+    /// sharded operands, shard-by-shard — each shard read from disk
+    /// exactly once instead of twice). X n×k, Y m×k scratch (holds A·X
+    /// on return), Z n×k. Default: the unfused composition.
+    fn apply_ata_into(&mut self, x: MatRef<S>, mut y: MatMut<S>, z: MatMut<S>) {
+        self.apply_a_into(x, y.reborrow());
+        self.apply_at_into(y.as_ref(), z);
+    }
+
+    /// Total bytes of the operand's value + index storage — the signal
+    /// the cost model's fusion policy compares against the LLC
+    /// ([`crate::cost::should_fuse`]). Backends that cannot say (the XLA
+    /// stand-in stages literals) report 0, which keeps the Auto policy
+    /// on the unfused path.
+    fn operand_bytes(&self) -> usize {
+        0
+    }
+
+    /// Does the operand stream from disk (sharded under a resident cap)?
+    /// The Auto fusion policy always fuses on-disk operands: the fused
+    /// power step halves their per-iteration disk traffic.
+    fn operand_on_disk(&self) -> bool {
+        false
+    }
     /// W ← QᵀQ (SYRK-shaped Gram product, W b×b).
     fn gram_into(&mut self, q: MatRef<S>, w: MatMut<S>);
     /// H ← PᵀQ (block-CGS projection, H s×b).
@@ -276,6 +351,25 @@ pub trait Backend<S: Scalar = f64> {
         ws: &Workspace<S>,
     ) -> crate::error::Result<()> {
         crate::algo::orth::cgs_cqr2_into_host(self, q, p, h, r, ws)
+    }
+
+    /// [`Backend::orth_cgs_cqr2_into`] with the panel Gram `g = QᵀQ`
+    /// precomputed by the fused [`Backend::apply_a_gram_into`] sweep:
+    /// the first CholeskyQR pass downdates `W = G − HᵀH` instead of
+    /// re-streaming the q×b panel (exact when `p` is orthonormal — the
+    /// Lanczos invariant), recomputing the Gram directly on a
+    /// downdate-induced breakdown before the CGS2 fallback. Workspace
+    /// contract as for [`Backend::orth_cholqr2_into`].
+    fn orth_cgs_cqr2_pregram_into(
+        &mut self,
+        q: MatMut<S>,
+        p: MatRef<'_, S>,
+        g: MatRef<'_, S>,
+        h: MatMut<S>,
+        r: MatMut<S>,
+        ws: &Workspace<S>,
+    ) -> crate::error::Result<()> {
+        crate::algo::orth::cgs_cqr2_pregram_into_host(self, q, p, g, h, r, ws)
     }
 
     // ---- thin value-returning wrappers (tests / examples / one-shot) --

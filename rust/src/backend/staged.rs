@@ -692,6 +692,145 @@ impl<S: Scalar> Backend<S> for StagedBackend<S> {
         self.note_write("apply_at", y.rows, y.cols, y.data, true);
     }
 
+    // ---- fused operand-pass tier (contract rule 8) ----
+
+    fn apply_a_gram_into(&mut self, x: MatRef<S>, mut y: MatMut<S>, mut g: MatMut<S>) {
+        assert_eq!((y.rows, y.cols), (self.m(), x.cols), "apply_a_gram_into y shape");
+        assert_eq!((g.rows, g.cols), (x.cols, x.cols), "apply_a_gram_into g shape");
+        self.ensure_staged();
+        self.ensure_pads(x.cols);
+        self.note_read("apply_a_gram", x.rows, x.cols, x.data);
+        let k = x.cols;
+        let flops = self.mult_flops(k) + k as f64 * k as f64 * y.rows as f64;
+        let t = Timer::start(flops);
+        match self.dev.as_mut().expect("operand staged above") {
+            DeviceOperand::Dense(a) => {
+                blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, y.reborrow());
+                blas3::gram_into(y.as_ref(), g.reborrow());
+            }
+            DeviceOperand::Csr { .. } => {
+                let Operand::Sparse(a) = &self.a else { unreachable!("csr arena, sparse host") };
+                a.spmm_gram(x, y.reborrow(), g.reborrow());
+            }
+            DeviceOperand::BlockEll { a, .. } => {
+                // Pad x, run the fused padded-panel kernel, unpad y. The
+                // Gram over the padded panel equals the unpadded one
+                // (A's padding rows are exactly zero).
+                let pad = self.pad.as_mut().expect("pads sized above");
+                let mut yp = pad.y.view_mut(a.padded_rows(), k);
+                {
+                    let mut xp = pad.x.view_mut(a.padded_cols(), k);
+                    for j in 0..k {
+                        let src = x.col(j);
+                        let dst = xp.col_mut(j);
+                        dst[..src.len()].copy_from_slice(src);
+                        dst[src.len()..].fill(S::ZERO);
+                    }
+                    a.spmm_gram(xp.as_ref(), yp.reborrow(), g.reborrow());
+                }
+                for j in 0..k {
+                    y.col_mut(j).copy_from_slice(&yp.col(j)[..y.rows]);
+                }
+                let moved = std::mem::size_of::<S>() * k * (x.rows + y.rows);
+                self.ledger.record(
+                    "apply_a_gram",
+                    Direction::ArenaToArena,
+                    moved,
+                    self.profile.phase(),
+                    true,
+                );
+            }
+            DeviceOperand::Sharded(sh) => {
+                sh.spmm_gram(x, &mut y, &mut g)
+                    .expect("sharded operand I/O during apply_a_gram");
+            }
+        }
+        t.stop(&mut self.profile);
+        self.drain_shard_events("apply_a_gram");
+        self.note_write("apply_a_gram", y.rows, y.cols, y.data, true);
+        // The b×b Gram is consumed by the host POTRF downdate — the
+        // sanctioned factor download (rule 3).
+        self.note_write("apply_a_gram", g.rows, g.cols, g.data, true);
+    }
+
+    fn apply_ata_into(&mut self, x: MatRef<S>, mut y: MatMut<S>, mut z: MatMut<S>) {
+        assert_eq!((y.rows, y.cols), (self.m(), x.cols), "apply_ata_into y shape");
+        assert_eq!((z.rows, z.cols), (self.n(), x.cols), "apply_ata_into z shape");
+        self.ensure_staged();
+        self.ensure_pads(x.cols);
+        self.note_read("apply_ata", x.rows, x.cols, x.data);
+        let t = Timer::start(2.0 * self.mult_flops(x.cols));
+        match self.dev.as_mut().expect("operand staged above") {
+            DeviceOperand::Dense(a) => {
+                blas3::gemm_nn(S::ONE, a.as_ref(), x, S::ZERO, y.reborrow());
+                blas3::gemm_tn(S::ONE, a.as_ref(), y.as_ref(), S::ZERO, z.reborrow());
+            }
+            DeviceOperand::Csr { at } => {
+                let Operand::Sparse(a) = &self.a else { unreachable!("csr arena, sparse host") };
+                a.spmm(x, y.reborrow());
+                at.spmm(y.as_ref(), z.reborrow());
+            }
+            DeviceOperand::BlockEll { a, at } => {
+                // Single-pad fused chain: the forward product's padded
+                // output panel is exactly the transposed product's padded
+                // input (`a.padded_rows() == at.padded_cols()` at one
+                // block size, and A's padding rows are zero), so the
+                // unfused pair's intermediate unpad→repad memcpy is
+                // skipped; pad.x is recycled as the Z output panel.
+                let pad = self.pad.as_mut().expect("pads sized above");
+                let k = x.cols;
+                debug_assert_eq!(a.padded_rows(), at.padded_cols());
+                let mut yp = pad.y.view_mut(a.padded_rows(), k);
+                {
+                    let mut xp = pad.x.view_mut(a.padded_cols(), k);
+                    for j in 0..k {
+                        let src = x.col(j);
+                        let dst = xp.col_mut(j);
+                        dst[..src.len()].copy_from_slice(src);
+                        dst[src.len()..].fill(S::ZERO);
+                    }
+                    a.spmm(xp.as_ref(), yp.reborrow());
+                }
+                for j in 0..k {
+                    y.col_mut(j).copy_from_slice(&yp.col(j)[..y.rows]);
+                }
+                let mut zp = pad.x.view_mut(at.padded_rows(), k);
+                at.spmm(yp.as_ref(), zp.reborrow());
+                for j in 0..k {
+                    z.col_mut(j).copy_from_slice(&zp.col(j)[..z.rows]);
+                }
+                let moved = std::mem::size_of::<S>() * k * (x.rows + y.rows + z.rows);
+                self.ledger.record(
+                    "apply_ata",
+                    Direction::ArenaToArena,
+                    moved,
+                    self.profile.phase(),
+                    true,
+                );
+            }
+            DeviceOperand::Sharded(sh) => {
+                sh.spmm_ata(x, &mut y, &mut z)
+                    .expect("sharded operand I/O during apply_ata");
+            }
+        }
+        t.stop(&mut self.profile);
+        self.drain_shard_events("apply_ata");
+        self.note_write("apply_ata", y.rows, y.cols, y.data, true);
+        self.note_write("apply_ata", z.rows, z.cols, z.data, true);
+    }
+
+    fn operand_bytes(&self) -> usize {
+        match &self.a {
+            Operand::Sparse(a) => csr_bytes(a.as_ref()),
+            Operand::Dense(a) => a.rows() * a.cols() * std::mem::size_of::<S>(),
+            Operand::Sharded { dir, .. } => dir.total_file_bytes(),
+        }
+    }
+
+    fn operand_on_disk(&self) -> bool {
+        matches!(self.a, Operand::Sharded { .. })
+    }
+
     fn gram_into(&mut self, q: MatRef<S>, mut w: MatMut<S>) {
         self.note_read("gram", q.rows, q.cols, q.data);
         let flops = q.cols as f64 * q.cols as f64 * q.rows as f64;
@@ -798,6 +937,19 @@ impl<S: Scalar> Backend<S> for StagedBackend<S> {
         crate::algo::orth::cgs_cqr2_into_host(self, q, p, h, r, ws)
     }
 
+    fn orth_cgs_cqr2_pregram_into(
+        &mut self,
+        q: MatMut<S>,
+        p: MatRef<'_, S>,
+        g: MatRef<'_, S>,
+        h: MatMut<S>,
+        r: MatMut<S>,
+        ws: &Workspace<S>,
+    ) -> crate::error::Result<()> {
+        self.mark_snap_resident(ws);
+        crate::algo::orth::cgs_cqr2_pregram_into_host(self, q, p, g, h, r, ws)
+    }
+
     fn profile_mut(&mut self) -> &mut Profile {
         &mut self.profile
     }
@@ -894,6 +1046,40 @@ mod tests {
         // Only the Block-ELL path pays arena staging memcpys.
         assert!(ell.ledger().totals().a2a_bytes > 0);
         assert_eq!(csr.ledger().totals().a2a_bytes, 0);
+    }
+
+    #[test]
+    fn fused_ops_match_composition_bitwise() {
+        // Both device formats exercise the fused tier: Block-ELL takes
+        // the single-pad chain, CSR the arena explicit transpose.
+        for (cap, fmt) in [(1e9, "blockell"), (1.0, "csr")] {
+            let a = small_sparse(13);
+            let ad = a.to_dense();
+            let mut be = StagedBackend::new_sparse(a.clone()).with_fill_cap(cap);
+            let mut un = StagedBackend::new_sparse(a).with_fill_cap(cap);
+            let mut rng = Rng::new(14);
+            let x = Mat::randn(24, 4, &mut rng);
+            let y0 = un.apply_a(x.as_ref());
+            let z0 = un.apply_at(y0.as_ref());
+            let mut y = Mat::zeros(40, 4);
+            let mut z = Mat::zeros(24, 4);
+            be.apply_ata_into(x.as_ref(), y.as_mut(), z.as_mut());
+            assert_eq!(be.device_format(), Some(fmt));
+            // Fused Aᵀ(A·Q) is bitwise the unfused staged composition:
+            // the forward kernel is shared, and the padded intermediate
+            // equals the unpad→repad roundtrip exactly (padding rows
+            // are zero).
+            assert_eq!(y.data(), y0.data(), "{fmt}: fused Y drifted");
+            assert_eq!(z.data(), z0.data(), "{fmt}: fused Z drifted");
+            let mut y2 = Mat::zeros(40, 4);
+            let mut g = Mat::zeros(4, 4);
+            be.apply_a_gram_into(x.as_ref(), y2.as_mut(), g.as_mut());
+            assert_eq!(y2.data(), y0.data(), "{fmt}: fused-gram Y drifted");
+            assert!(g.max_abs_diff(&mat_tn(&y0, &y0)) < 1e-11, "{fmt}: Gram drifted");
+            assert!(y.max_abs_diff(&mat_nn(&ad, &x)) < 1e-12);
+            assert!(be.operand_bytes() > 0);
+            assert!(!be.operand_on_disk());
+        }
     }
 
     #[test]

@@ -305,6 +305,7 @@ fn solve<S: Scalar, B: Backend<S> + ?Sized>(
                 b: params.b,
                 seed: params.seed,
                 init: crate::algo::InitDist::CenteredPoisson,
+                fuse: None,
             },
         ),
         Algo::Lanc => lancsvd(
@@ -318,6 +319,7 @@ fn solve<S: Scalar, B: Backend<S> + ?Sized>(
                 tol: params.tol,
                 wanted: params.wanted,
                 restart: params.restart,
+                fuse: None,
             },
         ),
     }

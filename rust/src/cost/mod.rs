@@ -98,6 +98,77 @@ pub fn calibration() -> CostCalibration {
     })
 }
 
+/// Fusion policy for the fused operand-pass tier
+/// (`Backend::apply_a_gram_into` / `Backend::apply_ata_into`), resolved
+/// from `TRUNKSVD_FUSE={auto,on,off}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusePolicy {
+    /// Cost-model decision: fuse when the operand exceeds the assumed
+    /// last-level cache or lives on disk (see [`should_fuse_with`]).
+    Auto,
+    /// Always take the fused kernels.
+    On,
+    /// Always take the unfused composition.
+    Off,
+}
+
+/// Last-level-cache size the [`FusePolicy::Auto`] heuristic assumes
+/// (32 MiB — the order of a mainstream server LLC). Operands below this
+/// are re-streamed from cache, so a second pass is nearly free and the
+/// fused kernels' extra synchronization (serial band loop between the
+/// gather and scatter halves) can only cost; operands above it pay DRAM
+/// bandwidth per pass, which is exactly what fusing halves.
+pub const FUSE_LLC_BYTES: usize = 32 << 20;
+
+/// Parse a `TRUNKSVD_FUSE` value. Accepts `auto`, `on`/`1`/`true`,
+/// `off`/`0`/`false` (ASCII case-insensitive, surrounding whitespace
+/// ignored); anything else is `None` so the caller can fall back loudly.
+pub fn parse_fuse(s: &str) -> Option<FusePolicy> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "auto" => Some(FusePolicy::Auto),
+        "on" | "1" | "true" => Some(FusePolicy::On),
+        "off" | "0" | "false" => Some(FusePolicy::Off),
+        _ => None,
+    }
+}
+
+/// The active fusion policy: `TRUNKSVD_FUSE` if set and recognized, else
+/// [`FusePolicy::Auto`]. Resolved once per process, like [`calibration`].
+pub fn fuse_policy() -> FusePolicy {
+    static POLICY: OnceLock<FusePolicy> = OnceLock::new();
+    *POLICY.get_or_init(|| {
+        std::env::var("TRUNKSVD_FUSE")
+            .ok()
+            .and_then(|v| parse_fuse(&v))
+            .unwrap_or(FusePolicy::Auto)
+    })
+}
+
+/// Pure fusion decision for a given policy: should the algorithms take
+/// the fused operand-pass kernels for an operand of `operand_bytes`
+/// (values + index structure), `on_disk` when it streams from shards?
+///
+/// The Auto rationale is bandwidth, not flops: the fused kernels do the
+/// same arithmetic as the unfused composition but touch the operand once
+/// per power/Lanczos step instead of twice. That only buys anything when
+/// a pass actually costs DRAM (operand larger than the LLC) or disk
+/// (sharded under a resident cap) traffic; cache-resident operands stay
+/// unfused so the tiny fixtures in the test suite keep exercising the
+/// classic composition by default.
+pub fn should_fuse_with(policy: FusePolicy, operand_bytes: usize, on_disk: bool) -> bool {
+    match policy {
+        FusePolicy::On => true,
+        FusePolicy::Off => false,
+        FusePolicy::Auto => on_disk || operand_bytes > FUSE_LLC_BYTES,
+    }
+}
+
+/// [`should_fuse_with`] under the process-wide [`fuse_policy`] — the
+/// entry point `randsvd`/`lancsvd` consult when `opts.fuse` is `None`.
+pub fn should_fuse(operand_bytes: usize, on_disk: bool) -> bool {
+    should_fuse_with(fuse_policy(), operand_bytes, on_disk)
+}
+
 /// Problem description for the cost model.
 #[derive(Clone, Copy, Debug)]
 pub struct Problem {
@@ -451,6 +522,52 @@ mod tests {
         );
         let _ = std::fs::remove_file(path);
         assert!(load_calibration("/nonexistent/trunksvd_calib.json").is_none());
+    }
+
+    #[test]
+    fn parse_fuse_accepts_known_spellings() {
+        assert_eq!(parse_fuse("auto"), Some(FusePolicy::Auto));
+        assert_eq!(parse_fuse(" AUTO "), Some(FusePolicy::Auto));
+        assert_eq!(parse_fuse("on"), Some(FusePolicy::On));
+        assert_eq!(parse_fuse("1"), Some(FusePolicy::On));
+        assert_eq!(parse_fuse("true"), Some(FusePolicy::On));
+        assert_eq!(parse_fuse("off"), Some(FusePolicy::Off));
+        assert_eq!(parse_fuse("0"), Some(FusePolicy::Off));
+        assert_eq!(parse_fuse("False"), Some(FusePolicy::Off));
+        assert_eq!(parse_fuse(""), None);
+        assert_eq!(parse_fuse("yes"), None);
+        assert_eq!(parse_fuse("2"), None);
+    }
+
+    #[test]
+    fn should_fuse_auto_crosses_at_llc_and_disk() {
+        use FusePolicy::*;
+        // Monotone in operand bytes: once fused, bigger stays fused.
+        let mut prev = false;
+        for bytes in [0, 1, FUSE_LLC_BYTES, FUSE_LLC_BYTES + 1, usize::MAX] {
+            let f = should_fuse_with(Auto, bytes, false);
+            assert!(f >= prev, "auto fusion not monotone at {bytes}");
+            prev = f;
+        }
+        // LLC crossover is exactly "strictly larger than the cache".
+        assert!(!should_fuse_with(Auto, FUSE_LLC_BYTES, false));
+        assert!(should_fuse_with(Auto, FUSE_LLC_BYTES + 1, false));
+        // Disk tier always fuses, even for tiny shards.
+        assert!(should_fuse_with(Auto, 0, true));
+        // Forced policies ignore both signals.
+        assert!(should_fuse_with(On, 0, false));
+        assert!(!should_fuse_with(Off, usize::MAX, true));
+        // Degenerate clamp: empty operand in core never fuses under Auto.
+        assert!(!should_fuse_with(Auto, 0, false));
+    }
+
+    #[test]
+    fn default_fuse_policy_without_env_is_auto() {
+        if std::env::var("TRUNKSVD_FUSE").is_err() {
+            assert_eq!(fuse_policy(), FusePolicy::Auto);
+            assert!(!should_fuse(1024, false));
+            assert!(should_fuse(1024, true));
+        }
     }
 
     #[test]

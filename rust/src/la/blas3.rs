@@ -261,7 +261,11 @@ pub fn gemm_tn<S: Scalar>(alpha: S, a: MatRef<S>, b: MatRef<S>, beta: S, c: MatM
 /// Upper-triangle tile accumulation shared by the serial and banded
 /// Gram paths: adds Q[t0+lo..t0+hi, :]ᵀ·Q[…] into `acc` (column-major
 /// b×b, upper triangle only), walking cache-resident row tiles.
-fn gram_accumulate<S: Scalar>(q: MatRef<S>, lo: usize, hi: usize, acc: &mut [S]) {
+/// `pub(crate)` so the fused operand-pass kernels (`sparse::csr`,
+/// `sparse::shard`) can accumulate the Gram of a freshly produced row
+/// band while it is still cache-resident, with the same tile walk and
+/// `util::simd` reduction order as [`gram_into`].
+pub(crate) fn gram_accumulate<S: Scalar>(q: MatRef<S>, lo: usize, hi: usize, acc: &mut [S]) {
     let b = q.cols;
     // 256 rows × b ≤ 32 cols × 8 B = 64 KiB worst case — L2-resident.
     const TILE: usize = 256;
@@ -287,6 +291,51 @@ fn gram_accumulate<S: Scalar>(q: MatRef<S>, lo: usize, hi: usize, acc: &mut [S])
             }
         }
         t0 += tl;
+    }
+}
+
+/// [`gram_accumulate`] over a band's detached column slices (the
+/// prepared-task form the fused SpMM+Gram kernel hands its workers:
+/// each task owns disjoint sub-slices of Y's columns, not a `MatRef`).
+/// Same 256-row tile walk and `simd_dot2`/`simd_dot` reduction order,
+/// so a fixed band partition yields bitwise-reproducible partials.
+pub(crate) fn gram_accumulate_cols<S: Scalar>(cols: &[&mut [S]], acc: &mut [S]) {
+    let b = cols.len();
+    let rows = if b == 0 { 0 } else { cols[0].len() };
+    const TILE: usize = 256;
+    let mut t0 = 0;
+    while t0 < rows {
+        let tl = TILE.min(rows - t0);
+        for j in 0..b {
+            let qj: &[S] = &cols[j][t0..t0 + tl];
+            let mut i = 0;
+            while i + 1 <= j {
+                let qi0: &[S] = &cols[i][t0..t0 + tl];
+                let qi1: &[S] = &cols[i + 1][t0..t0 + tl];
+                let (s0, s1) = S::simd_dot2(qi0, qi1, qj);
+                acc[j * b + i] += s0;
+                acc[j * b + i + 1] += s1;
+                i += 2;
+            }
+            if i <= j {
+                let qi: &[S] = &cols[i][t0..t0 + tl];
+                acc[j * b + i] += S::simd_dot(qi, qj);
+            }
+        }
+        t0 += tl;
+    }
+}
+
+/// Mirror a column-major upper-triangle accumulator into a full
+/// symmetric b×b output (the finishing step every Gram path shares).
+pub(crate) fn gram_mirror<S: Scalar>(acc: &[S], w: &mut MatMut<S>) {
+    let b = w.cols;
+    for j in 0..b {
+        for i in 0..=j {
+            let s = acc[j * b + i];
+            w.set(i, j, s);
+            w.set(j, i, s);
+        }
     }
 }
 
@@ -519,6 +568,26 @@ mod tests {
             let w = gram(q.as_ref());
             let expect = mat_tn(&q, &q);
             assert!(w.max_abs_diff(&expect) < 1e-10, "shape {rows}x{b}");
+        }
+    }
+
+    #[test]
+    fn gram_accumulate_cols_bitwise_matches_matref_path() {
+        // The detached-column form used by the fused kernels must follow
+        // the exact tile walk and reduction order of the MatRef form.
+        let mut rng = Rng::new(32);
+        for &(rows, b) in &[(1usize, 1usize), (255, 3), (300, 5), (700, 8)] {
+            let mut q = Mat::randn(rows, b, &mut rng);
+            let mut acc1 = vec![0.0; b * b];
+            gram_accumulate(q.as_ref(), 0, rows, &mut acc1);
+            let mut acc2 = vec![0.0; b * b];
+            {
+                let cols: Vec<&mut [f64]> = q.data_mut().chunks_mut(rows).collect();
+                gram_accumulate_cols(&cols, &mut acc2);
+            }
+            for (x, y) in acc1.iter().zip(&acc2) {
+                assert_eq!(x.to_bits(), y.to_bits(), "shape {rows}x{b}");
+            }
         }
     }
 

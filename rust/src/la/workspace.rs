@@ -103,6 +103,15 @@ pub mod names {
     pub const RAND_QBAR: &str = "rand.qbar";
     /// RandSVD: last triangular factor R (r×r).
     pub const RAND_R: &str = "rand.r";
+    /// RandSVD: fused power-step destination Z = Aᵀ(A·Q) (n×r). Planned
+    /// unconditionally so the fuse decision can flip per solve without
+    /// re-planning; ping-pongs with [`RAND_Q`] on the fused path.
+    pub const RAND_Z: &str = "rand.z";
+
+    /// LancSVD: fused-sweep Gram G = Q̄ᵢ₊₁ᵀQ̄ᵢ₊₁ (b×b), produced by
+    /// `Backend::apply_a_gram_into` and consumed by the Gram-downdated
+    /// first CholeskyQR pass in `orth_cgs_cqr2_pregram_into`.
+    pub const LANC_G: &str = "lanc.g";
 
     /// Host GESVD: left factor Ū of the small r×r SVD (r×r).
     pub const SVD_U: &str = "svd.u";
@@ -189,6 +198,7 @@ impl Plan {
         plan.push(names::LANC_RK, b, b);
         plan.push(names::LANC_QBAR, m, b);
         plan.push(names::LANC_QNEXT, m, b);
+        plan.push(names::LANC_G, b.max(1), b.max(1));
         plan.push(names::LANC_TMP, q_max, r);
         plan.push(names::SVD_U, r, r);
         plan.push(names::SVD_V, r, r);
@@ -204,6 +214,7 @@ impl Plan {
         plan.push(names::RAND_Q, n, r);
         plan.push(names::RAND_QBAR, m, r);
         plan.push(names::RAND_R, r, r);
+        plan.push(names::RAND_Z, n, r);
         plan.push(names::SVD_U, r, r);
         plan.push(names::SVD_V, r, r);
         plan
@@ -389,6 +400,7 @@ mod tests {
         assert_eq!(plan.shape_of(names::LANC_PBAR), Some((100, 16)));
         assert_eq!(plan.shape_of(names::ORTH_SNAP), Some((100, 8)));
         assert_eq!(plan.shape_of(names::ORTH_H), Some((16, 8)));
+        assert_eq!(plan.shape_of(names::LANC_G), Some((8, 8)));
         assert_eq!(plan.shape_of("nope"), None);
         assert!(plan.total_elems() > 0);
 
@@ -396,6 +408,7 @@ mod tests {
         assert_eq!(plan.shape_of(names::RAND_Q), Some((40, 16)));
         assert_eq!(plan.shape_of(names::RAND_QBAR), Some((100, 16)));
         assert_eq!(plan.shape_of(names::RAND_R), Some((16, 16)));
+        assert_eq!(plan.shape_of(names::RAND_Z), Some((40, 16)));
     }
 
     #[test]

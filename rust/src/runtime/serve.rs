@@ -1071,6 +1071,7 @@ fn solve_on<S: Scalar>(
                 b: p.b,
                 seed: p.seed,
                 init: InitDist::CenteredPoisson,
+                fuse: None,
             },
             ws,
         ),
@@ -1085,6 +1086,7 @@ fn solve_on<S: Scalar>(
                 tol: p.tol,
                 wanted: p.wanted,
                 restart: p.restart,
+                fuse: None,
             },
             ws,
         ),

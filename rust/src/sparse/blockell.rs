@@ -18,7 +18,7 @@
 use super::csr::Csr;
 use crate::error::{Error, Result};
 use crate::la::mat::{Mat, MatMut, MatRef};
-use crate::util::pool::parallel_row_blocks_work;
+use crate::util::pool::{self, parallel_row_blocks_work, parallel_tasks};
 use crate::util::scalar::Scalar;
 
 /// A block-ELL matrix: `blocks[(br*mbpr + s)*bs*bs ..]` is the s-th
@@ -143,60 +143,144 @@ impl<S: Scalar> BlockEll<S> {
             "block-ELL spmm out"
         );
         let k = x.cols;
-        let bs = self.bs;
-        let mbpr = self.mbpr;
         if k == 0 || self.nbr == 0 || self.ncb == 0 {
             y.fill(S::ZERO);
             return;
         }
-        let blocks = &self.blocks;
-        let idx = &self.idx;
         let rows_pad = self.padded_rows();
         // Work estimate: every stored block entry is re-streamed once
         // per 4-column group, plus the padded output writes.
         let work = self.blocks.len() * k.div_ceil(4) + rows_pad * k;
-        parallel_row_blocks_work(y.data, rows_pad, bs, work, |r0, r1, cols| {
-            for cb in cols.iter_mut() {
-                cb.fill(S::ZERO);
-            }
-            let br0 = r0 / bs;
-            for lb in 0..(r1 - r0) / bs {
-                let br = br0 + lb;
-                for s in 0..mbpr {
-                    let slot = br * mbpr + s;
-                    let bc = idx[slot] as usize;
-                    let base = slot * bs * bs;
-                    let blk = &blocks[base..base + bs * bs];
-                    let mut j = 0;
-                    while j + 3 < k {
-                        let x0 = &x.col(j)[bc * bs..(bc + 1) * bs];
-                        let x1 = &x.col(j + 1)[bc * bs..(bc + 1) * bs];
-                        let x2 = &x.col(j + 2)[bc * bs..(bc + 1) * bs];
-                        let x3 = &x.col(j + 3)[bc * bs..(bc + 1) * bs];
-                        let [c0, c1, c2, c3] = &mut cols[j..j + 4] else { unreachable!() };
-                        for ri in 0..bs {
-                            let row = &blk[ri * bs..(ri + 1) * bs];
-                            let (s0, s1, s2, s3) = S::simd_dot4(row, x0, x1, x2, x3);
-                            let o = lb * bs + ri;
-                            c0[o] += s0;
-                            c1[o] += s1;
-                            c2[o] += s2;
-                            c3[o] += s3;
-                        }
-                        j += 4;
+        parallel_row_blocks_work(y.data, rows_pad, self.bs, work, |r0, r1, cols| {
+            self.spmm_band(&x, r0, r1, cols)
+        });
+    }
+
+    /// The spmm band body: rows `[r0, r1)` (bs-aligned) of Y = A·X into
+    /// `cols` (the band's sub-slices of the output columns). Shared by
+    /// [`BlockEll::spmm`] and the fused [`BlockEll::spmm_gram`]; each
+    /// output element accumulates its block-row's slots in fixed slot
+    /// order, so any bs-aligned band partition is bitwise-identical.
+    fn spmm_band(&self, x: &MatRef<S>, r0: usize, r1: usize, cols: &mut [&mut [S]]) {
+        let k = x.cols;
+        let bs = self.bs;
+        let mbpr = self.mbpr;
+        let blocks = &self.blocks;
+        let idx = &self.idx;
+        for cb in cols.iter_mut() {
+            cb.fill(S::ZERO);
+        }
+        let br0 = r0 / bs;
+        for lb in 0..(r1 - r0) / bs {
+            let br = br0 + lb;
+            for s in 0..mbpr {
+                let slot = br * mbpr + s;
+                let bc = idx[slot] as usize;
+                let base = slot * bs * bs;
+                let blk = &blocks[base..base + bs * bs];
+                let mut j = 0;
+                while j + 3 < k {
+                    let x0 = &x.col(j)[bc * bs..(bc + 1) * bs];
+                    let x1 = &x.col(j + 1)[bc * bs..(bc + 1) * bs];
+                    let x2 = &x.col(j + 2)[bc * bs..(bc + 1) * bs];
+                    let x3 = &x.col(j + 3)[bc * bs..(bc + 1) * bs];
+                    let [c0, c1, c2, c3] = &mut cols[j..j + 4] else { unreachable!() };
+                    for ri in 0..bs {
+                        let row = &blk[ri * bs..(ri + 1) * bs];
+                        let (s0, s1, s2, s3) = S::simd_dot4(row, x0, x1, x2, x3);
+                        let o = lb * bs + ri;
+                        c0[o] += s0;
+                        c1[o] += s1;
+                        c2[o] += s2;
+                        c3[o] += s3;
                     }
-                    while j < k {
-                        let xj = &x.col(j)[bc * bs..(bc + 1) * bs];
-                        let cj = &mut cols[j];
-                        for ri in 0..bs {
-                            let row = &blk[ri * bs..(ri + 1) * bs];
-                            cj[lb * bs + ri] += S::simd_dot(row, xj);
-                        }
-                        j += 1;
+                    j += 4;
+                }
+                while j < k {
+                    let xj = &x.col(j)[bc * bs..(bc + 1) * bs];
+                    let cj = &mut cols[j];
+                    for ri in 0..bs {
+                        let row = &blk[ri * bs..(ri + 1) * bs];
+                        cj[lb * bs + ri] += S::simd_dot(row, xj);
                     }
+                    j += 1;
                 }
             }
+        }
+    }
+
+    /// Fused Y = A·X and G = YᵀY in one sweep over the stored blocks
+    /// (contract rule 8, block-ELL substrate). Each block-row band
+    /// reduces its freshly-gathered slice of Y into a private Gram
+    /// accumulator while it is cache-resident; accumulators fold in
+    /// band-index order (bitwise-reproducible at a fixed thread count).
+    /// The Y half is bitwise-identical to [`BlockEll::spmm`]; the Gram
+    /// is taken over the *padded* panel, whose padding rows are exactly
+    /// zero, so it is ε-equal to the unpadded Gram.
+    pub fn spmm_gram(&self, x: MatRef<S>, mut y: MatMut<S>, mut g: MatMut<S>) {
+        assert_eq!(x.rows, self.padded_cols(), "block-ELL spmm_gram X rows");
+        assert_eq!(
+            (y.rows, y.cols),
+            (self.padded_rows(), x.cols),
+            "block-ELL spmm_gram out"
+        );
+        assert_eq!((g.rows, g.cols), (x.cols, x.cols), "block-ELL spmm_gram g");
+        let k = x.cols;
+        let rows_pad = self.padded_rows();
+        if k == 0 || self.nbr == 0 || self.ncb == 0 {
+            y.fill(S::ZERO);
+            g.data.fill(S::ZERO);
+            return;
+        }
+        let work = self.blocks.len() * k.div_ceil(4) + rows_pad * k;
+        let nb = pool::planned_bands(work, self.nbr);
+        if nb <= 1 {
+            // Serial: gather pass, then the Gram accumulated in place
+            // (no scratch allocation — the zero-alloc gate path).
+            self.spmm(x, y.reborrow());
+            g.data.fill(S::ZERO);
+            crate::la::blas3::gram_accumulate(y.as_ref(), 0, rows_pad, g.data);
+            for j in 0..k {
+                for i in 0..j {
+                    g.data[i * k + j] = g.data[j * k + i];
+                }
+            }
+            return;
+        }
+        let bs = self.bs;
+        let per = self.nbr.div_ceil(nb);
+        let nbands = self.nbr.div_ceil(per);
+        let mut accs = vec![S::ZERO; nbands * k * k];
+        let mut tasks: Vec<(usize, usize, Vec<&mut [S]>, &mut [S])> = Vec::with_capacity(nbands);
+        {
+            let mut col_tails: Vec<&mut [S]> = y.data.chunks_mut(rows_pad).collect();
+            let mut acc_rest: &mut [S] = &mut accs;
+            for w in 0..nbands {
+                let r0 = w * per * bs;
+                let r1 = ((w + 1) * per).min(self.nbr) * bs;
+                let mut band_cols: Vec<&mut [S]> = Vec::with_capacity(k);
+                for tail in col_tails.iter_mut() {
+                    let t = std::mem::take(tail);
+                    let (head, rest) = t.split_at_mut(r1 - r0);
+                    band_cols.push(head);
+                    *tail = rest;
+                }
+                let (acc_band, acc_tail) = acc_rest.split_at_mut(k * k);
+                acc_rest = acc_tail;
+                tasks.push((r0, r1, band_cols, acc_band));
+            }
+        }
+        parallel_tasks(tasks, |_w, (r0, r1, mut band_cols, acc)| {
+            self.spmm_band(&x, r0, r1, &mut band_cols);
+            crate::la::blas3::gram_accumulate_cols(&band_cols, acc);
         });
+        let (first, rest) = accs.split_at_mut(k * k);
+        for chunk in rest.chunks(k * k) {
+            for (fv, &cv) in first.iter_mut().zip(chunk) {
+                *fv += cv;
+            }
+        }
+        crate::la::blas3::gram_mirror(first, &mut g);
     }
 
     /// Allocating wrapper around [`BlockEll::spmm`] — kept as the oracle
@@ -269,6 +353,33 @@ mod tests {
         }
         for i in 130..be.padded_rows() {
             assert_eq!(y.at(i, 0), 0.0);
+        }
+    }
+
+    #[test]
+    fn spmm_gram_matches_unfused() {
+        // Y must be bitwise spmm; G ε-equal to YᵀY over the padded
+        // panel (padding rows are zero, so also over the logical one).
+        let spec = SparseSpec { rows: 600, cols: 180, nnz: 9000, seed: 21, ..Default::default() };
+        let a = generate(&spec);
+        let be = BlockEll::from_csr(&a, 16, 64).unwrap();
+        let mut rng = Rng::new(22);
+        for k in [1usize, 5, 8] {
+            let mut x = Mat::zeros(be.padded_cols(), k);
+            for j in 0..k {
+                for i in 0..180 {
+                    x.set(i, j, rng.normal());
+                }
+            }
+            let y0 = be.spmm_ref(&x);
+            let mut y = Mat::zeros(be.padded_rows(), k);
+            let mut g = Mat::zeros(k, k);
+            be.spmm_gram(x.as_ref(), y.as_mut(), g.as_mut());
+            let same = y0.data().iter().zip(y.data()).all(|(p, q)| p.to_bits() == q.to_bits());
+            assert!(same, "k={k}: fused Y differs from spmm");
+            let expect = crate::la::blas3::mat_tn(&y0, &y0);
+            let scale = expect.fro_norm().max(1.0);
+            assert!(g.max_abs_diff(&expect) / scale < 1e-12, "k={k}: Gram mismatch");
         }
     }
 

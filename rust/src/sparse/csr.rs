@@ -589,6 +589,197 @@ impl<S: Scalar> Csr<S> {
         });
     }
 
+    /// Fused Y = A·X and G = YᵀY in one sweep over the nonzeros
+    /// (contract rule 8: the `apply_a_gram_into` kernel).
+    ///
+    /// Each nnz-balanced row band (same cached plan as [`Csr::spmm`])
+    /// gathers its slice of Y and immediately reduces it into a private
+    /// b×b Gram accumulator while the slice is still cache-resident —
+    /// the q×b panel is never re-streamed from memory for the Gram.
+    /// Per-band accumulators fold in band-index order, so results are
+    /// bitwise-reproducible at a fixed thread count; the Y half is
+    /// bitwise-identical to [`Csr::spmm`] under any partition (gather
+    /// writes each element exactly once), the Gram half is ε-equal to
+    /// `gram_into` (different reduction banding).
+    ///
+    /// The serial path (pool planned to one band) is allocation-free:
+    /// it accumulates the upper triangle straight into `g`'s storage and
+    /// mirrors in place, which is what the steady-state zero-alloc gate
+    /// exercises.
+    pub fn spmm_gram(&self, x: MatRef<S>, mut y: MatMut<S>, mut g: MatMut<S>) {
+        assert_eq!(x.rows, self.cols, "spmm_gram inner dim");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols), "spmm_gram y");
+        assert_eq!((g.rows, g.cols), (x.cols, x.cols), "spmm_gram g");
+        let k = x.cols;
+        let m = self.rows;
+        let work = self.nnz() * k + m * k;
+        let bounds = if m > 0 && k > 0 {
+            let bands = pool::planned_bands(work, m.div_ceil(32));
+            if bands > 1 {
+                band_plan(self, bands)
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        let Some(bounds) = bounds else {
+            // Serial / degenerate: one gather pass, then the Gram
+            // accumulated in place (no scratch allocation).
+            self.spmm(x, y.reborrow());
+            g.data.fill(S::ZERO);
+            crate::la::blas3::gram_accumulate(y.as_ref(), 0, m, g.data);
+            for j in 0..k {
+                for i in 0..j {
+                    g.data[i * k + j] = g.data[j * k + i];
+                }
+            }
+            return;
+        };
+        let indptr = &self.indptr;
+        let indices = &self.indices;
+        let values = &self.values;
+        let nb = bounds.len() - 1;
+        let mut accs = vec![S::ZERO; nb * k * k];
+        let mut tasks: Vec<(usize, usize, Vec<&mut [S]>, &mut [S])> = Vec::with_capacity(nb);
+        {
+            let mut col_tails: Vec<&mut [S]> = y.data.chunks_mut(m).collect();
+            let mut acc_rest: &mut [S] = &mut accs;
+            for w in 0..nb {
+                let (r0, r1) = (bounds[w], bounds[w + 1]);
+                let mut band_cols: Vec<&mut [S]> = Vec::with_capacity(k);
+                for tail in col_tails.iter_mut() {
+                    let t = std::mem::take(tail);
+                    let (head, rest) = t.split_at_mut(r1 - r0);
+                    band_cols.push(head);
+                    *tail = rest;
+                }
+                let (acc_band, acc_tail) = acc_rest.split_at_mut(k * k);
+                acc_rest = acc_tail;
+                tasks.push((r0, r1, band_cols, acc_band));
+            }
+        }
+        parallel_tasks(tasks, |_w, (r0, r1, mut band_cols, acc)| {
+            spmm_rows(indptr, indices, values, &x, r0, r1, &mut band_cols);
+            crate::la::blas3::gram_accumulate_cols(&band_cols, acc);
+        });
+        // Fold the per-band upper triangles in band order (fixed by the
+        // cached plan, independent of thread scheduling), then mirror.
+        let (first, rest) = accs.split_at_mut(k * k);
+        for chunk in rest.chunks(k * k) {
+            for (fv, &cv) in first.iter_mut().zip(chunk) {
+                *fv += cv;
+            }
+        }
+        crate::la::blas3::gram_mirror(first, &mut g);
+    }
+
+    /// Fused Y = A·X, Z = Aᵀ·Y: the normal-equations power step in one
+    /// sweep over the nonzeros (contract rule 8: `apply_ata_into`).
+    ///
+    /// The outer loop walks the cached nnz-balanced row bands *serially*
+    /// in increasing row order; each band gathers its slice of Y in
+    /// parallel over sub-rows, then immediately scatters that same band
+    /// of nonzeros into Z in parallel over output columns while the
+    /// band's CSR arrays are still cache-resident — A is streamed once
+    /// per power iteration instead of twice.
+    ///
+    /// Bitwise: the gather half writes each Y element exactly once under
+    /// any partition, and the scatter half accumulates each Z column in
+    /// global increasing-row order (band-serial outer loop, first band
+    /// zero-fills), which is exactly the order [`Csr::spmm_t`] uses — so
+    /// the fused result is bitwise-identical to the unfused
+    /// `spmm` + `spmm_t` composition at *any* thread count.
+    pub fn spmm_ata(&self, x: MatRef<S>, mut y: MatMut<S>, mut z: MatMut<S>) {
+        assert_eq!(x.rows, self.cols, "spmm_ata inner dim");
+        assert_eq!((y.rows, y.cols), (self.rows, x.cols), "spmm_ata y");
+        assert_eq!((z.rows, z.cols), (self.cols, x.cols), "spmm_ata z");
+        let k = x.cols;
+        let m = self.rows;
+        let n = self.cols;
+        let work = self.nnz() * k + m * k;
+        let bounds = if m > 0 && n > 0 && k > 0 {
+            let bands = pool::planned_bands(work, m.div_ceil(32));
+            if bands > 1 {
+                band_plan(self, bands)
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        let Some(bounds) = bounds else {
+            // Serial / degenerate: the unfused composition is already
+            // allocation-free and the operand fits in cache anyway.
+            self.spmm(x, y.reborrow());
+            self.spmm_t(y.as_ref(), z);
+            return;
+        };
+        let indptr = &self.indptr;
+        let indices = &self.indices;
+        let values = &self.values;
+        let nb = bounds.len() - 1;
+        let t = num_threads().max(1);
+        for w in 0..nb {
+            let (r0, r1) = (bounds[w], bounds[w + 1]);
+            // Gather rows [r0, r1) of Y in parallel over 32-row-aligned
+            // sub-bands (any split is bitwise-safe for the gather).
+            let sub = (r1 - r0).div_ceil(t).max(1).div_ceil(32) * 32;
+            let mut tasks: Vec<(usize, usize, Vec<&mut [S]>)> = Vec::new();
+            {
+                let mut col_tails: Vec<&mut [S]> = Vec::with_capacity(k);
+                let mut rest: &mut [S] = &mut y.data[..];
+                for _ in 0..k {
+                    let (col, tail) = rest.split_at_mut(m);
+                    rest = tail;
+                    col_tails.push(&mut col[r0..r1]);
+                }
+                let mut tr0 = r0;
+                while tr0 < r1 {
+                    let tr1 = (tr0 + sub).min(r1);
+                    let cols: Vec<&mut [S]> = col_tails
+                        .iter_mut()
+                        .map(|c| {
+                            let tail = std::mem::take(c);
+                            let (head, rest) = tail.split_at_mut(tr1 - tr0);
+                            *c = rest;
+                            head
+                        })
+                        .collect();
+                    tasks.push((tr0, tr1, cols));
+                    tr0 = tr1;
+                }
+            }
+            parallel_tasks(tasks, |_i, (tr0, tr1, mut cols)| {
+                spmm_rows(indptr, indices, values, &x, tr0, tr1, &mut cols);
+            });
+            // Scatter the same band into Z, parallel over whole output
+            // columns (race-free; per-column order fixed by the serial
+            // band walk). First band zero-fills, matching spmm_t.
+            let first = w == 0;
+            let y_ref = y.as_ref();
+            let band_nnz = indptr[r1] - indptr[r0];
+            let zwork = band_nnz * k + if first { n * k } else { 0 };
+            parallel_chunks_mut_work(z.data, n, zwork, |j, zj| {
+                if first {
+                    zj.fill(S::ZERO);
+                }
+                let yj = &y_ref.col(j)[r0..r1];
+                for (ii, &xij) in yj.iter().enumerate() {
+                    if xij == S::ZERO {
+                        continue;
+                    }
+                    let i = r0 + ii;
+                    let lo = indptr[i];
+                    let hi = indptr[i + 1];
+                    for p in lo..hi {
+                        zj[indices[p] as usize] += values[p] * xij;
+                    }
+                }
+            });
+        }
+    }
+
     /// Densify (tests / tiny matrices only).
     pub fn to_dense(&self) -> Mat<S> {
         let mut m = Mat::zeros(self.rows, self.cols);
@@ -771,6 +962,64 @@ mod tests {
         // Different band count = different plan key.
         if let Some(p4) = band_plan(&a, 2) {
             assert_ne!(p1.len(), p4.len());
+        }
+    }
+
+    #[test]
+    fn spmm_gram_matches_unfused_small_and_banded() {
+        // Small (serial path) and large (cached-band-plan parallel path)
+        // operands: Y must be bitwise spmm, G ε-equal to YᵀY.
+        for &(rows, cols, nnz, seed) in
+            &[(23usize, 17usize, 80usize, 7u64), (700, 200, 20_000, 25)]
+        {
+            let a = Csr::from_coo(&random_coo(rows, cols, nnz, seed)).unwrap();
+            let mut rng = Rng::new(seed + 1);
+            for k in [1usize, 3, 6, 8] {
+                let x = Mat::randn(cols, k, &mut rng);
+                let mut y0 = Mat::zeros(rows, k);
+                a.spmm(x.as_ref(), y0.as_mut());
+                let mut y = Mat::zeros(rows, k);
+                let mut g = Mat::zeros(k, k);
+                a.spmm_gram(x.as_ref(), y.as_mut(), g.as_mut());
+                let same =
+                    y0.data().iter().zip(y.data()).all(|(p, q)| p.to_bits() == q.to_bits());
+                assert!(same, "{rows}x{cols} k={k}: fused Y differs from spmm");
+                let expect = mat_tn(&y0, &y0);
+                let scale = expect.fro_norm().max(1.0);
+                assert!(
+                    g.max_abs_diff(&expect) / scale < 1e-12,
+                    "{rows}x{cols} k={k}: Gram mismatch"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_ata_bitwise_matches_unfused_composition() {
+        // Both the serial fallback and the band-serial fused sweep must
+        // reproduce spmm + spmm_t exactly (the scatter accumulates each
+        // column in the same global row order).
+        for &(rows, cols, nnz, seed) in
+            &[(19usize, 29usize, 100usize, 9u64), (700, 300, 25_000, 27)]
+        {
+            let a = Csr::from_coo(&random_coo(rows, cols, nnz, seed)).unwrap();
+            let mut rng = Rng::new(seed + 2);
+            for k in [1usize, 4, 7] {
+                let x = Mat::randn(cols, k, &mut rng);
+                let mut y0 = Mat::zeros(rows, k);
+                let mut z0 = Mat::zeros(cols, k);
+                a.spmm(x.as_ref(), y0.as_mut());
+                a.spmm_t(y0.as_ref(), z0.as_mut());
+                let mut y = Mat::zeros(rows, k);
+                let mut z = Mat::zeros(cols, k);
+                a.spmm_ata(x.as_ref(), y.as_mut(), z.as_mut());
+                let ysame =
+                    y0.data().iter().zip(y.data()).all(|(p, q)| p.to_bits() == q.to_bits());
+                let zsame =
+                    z0.data().iter().zip(z.data()).all(|(p, q)| p.to_bits() == q.to_bits());
+                assert!(ysame, "{rows}x{cols} k={k}: fused Y differs");
+                assert!(zsame, "{rows}x{cols} k={k}: fused Z differs from spmm_t(spmm)");
+            }
         }
     }
 

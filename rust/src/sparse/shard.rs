@@ -754,6 +754,67 @@ impl<S: Scalar> ShardedOperand<S> {
         }
         self.for_each_shard(|i, sh| spmm_t_shard(sh, &x, y, i == 0))
     }
+
+    /// Fused Y = A·X, Z = Aᵀ·Y in **one** sweep over the shards
+    /// (contract rule 8: the out-of-core `apply_ata_into`). Each shard
+    /// is gathered into its row band of Y and immediately scattered into
+    /// Z while its decoded CSR arrays are still host-resident, so the
+    /// normal-equations power step reads the disk once per iteration
+    /// instead of twice — under a tight `--resident-cap` this halves the
+    /// `DiskToHost` traffic (one `ShardStats::passes` increment, each
+    /// streamed shard loaded exactly once).
+    ///
+    /// Bitwise-identical to the `spmm` → `spmm_t` composition at any
+    /// thread count: the gather writes each Y element exactly once, and
+    /// the scatter accumulates each Z column in global increasing row
+    /// order with the zero-fill on the first shard only.
+    pub fn spmm_ata(
+        &mut self,
+        x: MatRef<'_, S>,
+        y: &mut MatMut<'_, S>,
+        z: &mut MatMut<'_, S>,
+    ) -> Result<()> {
+        assert_eq!(x.rows, self.dir.cols(), "sharded spmm_ata inner dim");
+        assert_eq!((y.rows, y.cols), (self.dir.rows(), x.cols), "sharded spmm_ata y");
+        assert_eq!((z.rows, z.cols), (self.dir.cols(), x.cols), "sharded spmm_ata z");
+        if z.rows == 0 || x.cols == 0 {
+            return Ok(());
+        }
+        self.for_each_shard(|i, sh| {
+            spmm_shard(sh, &x, y);
+            let yref = y.as_ref();
+            spmm_t_shard(sh, &yref, z, i == 0);
+        })
+    }
+
+    /// Fused Y = A·X and G = YᵀY in one sweep over the shards (contract
+    /// rule 8: the out-of-core `apply_a_gram_into`). Each shard's band
+    /// of Y is reduced into the Gram accumulator right after the gather,
+    /// while it is cache-resident; bands fold in shard order (fixed),
+    /// so the Gram is bitwise-reproducible at a fixed thread count and
+    /// ε-equal to a dense `gram_into` over the assembled panel.
+    pub fn spmm_gram(
+        &mut self,
+        x: MatRef<'_, S>,
+        y: &mut MatMut<'_, S>,
+        g: &mut MatMut<'_, S>,
+    ) -> Result<()> {
+        assert_eq!(x.rows, self.dir.cols(), "sharded spmm_gram inner dim");
+        assert_eq!((y.rows, y.cols), (self.dir.rows(), x.cols), "sharded spmm_gram y");
+        assert_eq!((g.rows, g.cols), (x.cols, x.cols), "sharded spmm_gram g");
+        let k = x.cols;
+        if y.rows == 0 || k == 0 {
+            g.fill(S::ZERO);
+            return Ok(());
+        }
+        let mut acc = vec![S::ZERO; k * k];
+        self.for_each_shard(|_, sh| {
+            spmm_shard(sh, &x, y);
+            crate::la::blas3::gram_accumulate(y.as_ref(), sh.r0, sh.r1, &mut acc);
+        })?;
+        crate::la::blas3::gram_mirror(&acc, g);
+        Ok(())
+    }
 }
 
 /// Gather rows `[sh.r0, sh.r1)` of `A·X` from one shard into the global
@@ -1002,6 +1063,52 @@ mod tests {
         let total_stream_bytes: usize = ev2.iter().map(|e| e.file_bytes).sum();
         let expect: usize = streamed.iter().map(|&i| sd.meta(i).file_bytes()).sum();
         assert_eq!(total_stream_bytes, expect, "disk bytes exactly once per shard per pass");
+    }
+
+    #[test]
+    fn fused_ata_one_pass_bitwise_and_gram() {
+        let a = test_matrix(500, 140, 9000, 31);
+        let dir = tmp("fusedata");
+        let sd = Arc::new(write_shards_from_csr(&dir, &a, 5).unwrap());
+        let cap = 2 * sd.max_resident_bytes::<f64>();
+        let mut op: ShardedOperand<f64> = ShardedOperand::new(Arc::clone(&sd), cap);
+        let mut rng = Rng::new(32);
+        let x = Mat::randn(a.cols(), 6, &mut rng);
+        let mut y0 = Mat::zeros(a.rows(), 6);
+        let mut z0 = Mat::zeros(a.cols(), 6);
+        a.spmm(x.as_ref(), y0.as_mut());
+        a.spmm_t(y0.as_ref(), z0.as_mut());
+        let mut y = Mat::zeros(a.rows(), 6);
+        let mut z = Mat::zeros(a.cols(), 6);
+        op.spmm_ata(x.as_ref(), &mut y.as_mut(), &mut z.as_mut()).unwrap();
+        assert!(
+            y0.data().iter().zip(y.data()).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "fused Y differs bitwise from in-core spmm"
+        );
+        assert!(
+            z0.data().iter().zip(z.data()).all(|(p, q)| p.to_bits() == q.to_bits()),
+            "fused Z differs bitwise from in-core spmm_t(spmm)"
+        );
+        // One sweep over the operand: exactly one pass, each shard
+        // loaded exactly once (the disk-traffic halving the fused power
+        // step buys under a tight resident cap).
+        let stats = op.stats();
+        assert_eq!(stats.passes, 1, "fused ata must be a single operand pass");
+        let ev = op.take_load_events();
+        let mut seen: Vec<usize> = ev.iter().map(|e| e.shard).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), ev.len(), "a shard loaded twice within the fused pass");
+        assert_eq!(seen.len(), sd.num_shards());
+        // Fused gram: Y bitwise, Gram ε-equal to YᵀY; one more pass.
+        let mut y2 = Mat::zeros(a.rows(), 6);
+        let mut g = Mat::zeros(6, 6);
+        op.spmm_gram(x.as_ref(), &mut y2.as_mut(), &mut g.as_mut()).unwrap();
+        assert!(y0.data().iter().zip(y2.data()).all(|(p, q)| p.to_bits() == q.to_bits()));
+        let expect = crate::la::blas3::mat_tn(&y0, &y0);
+        let scale = expect.fro_norm().max(1.0);
+        assert!(g.max_abs_diff(&expect) / scale < 1e-12, "Gram mismatch");
+        assert_eq!(op.stats().passes, 2);
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! monotonicity and crossover shape are pinned here, not exact values.
 
 use trunksvd::cost::{
-    adaptive_transpose_threshold, ca3, ca4, ca5, lancsvd_cost, parallel_cutoff, randsvd_cost,
-    Problem,
+    adaptive_transpose_threshold, ca3, ca4, ca5, lancsvd_cost, parallel_cutoff, parse_fuse,
+    randsvd_cost, should_fuse_with, FusePolicy, Problem, FUSE_LLC_BYTES,
 };
 
 const CAP: usize = 64;
@@ -98,6 +98,57 @@ fn parallel_cutoff_sits_between_dispatch_and_panel_scale() {
     assert!(c <= 4096 * 8 / 2, "cutoff {c} would serialize paper-scale panels");
     // Stability: the policy is a pure function (no hidden global state).
     assert_eq!(c, parallel_cutoff());
+}
+
+#[test]
+fn fuse_policy_is_monotone_with_single_crossover() {
+    // Same shape-pinning as the transpose threshold: calibration (or an
+    // LLC-constant retune) must not be able to invert the fusion gate.
+    // Sweeping operand bytes upward under Auto, the decision flips
+    // off→on exactly once, at the LLC boundary.
+    let mut flips = 0;
+    let mut prev = should_fuse_with(FusePolicy::Auto, 0, false);
+    assert!(!prev, "an empty operand must not fuse under Auto");
+    for e in 10..=40 {
+        let f = should_fuse_with(FusePolicy::Auto, 1usize << e, false);
+        if f != prev {
+            assert!(f && !prev, "fusion gate re-descended at 2^{e} bytes");
+            flips += 1;
+        }
+        prev = f;
+    }
+    assert_eq!(flips, 1, "exactly one off→on crossover in the sweep");
+    assert!(prev, "post-crossover the gate must stay on");
+    // Disk residency dominates size: even a tiny on-disk operand fuses
+    // (every saved pass is a saved read of the whole shard set).
+    assert!(should_fuse_with(FusePolicy::Auto, 0, true));
+    // Explicit overrides are absolute in both directions.
+    assert!(should_fuse_with(FusePolicy::On, 0, false));
+    assert!(!should_fuse_with(FusePolicy::Off, usize::MAX, true));
+}
+
+#[test]
+fn fuse_env_spellings_match_knob_conventions() {
+    // TRUNKSVD_FUSE accepts the same boolean spellings as the other
+    // runtime knobs, trimmed and case-insensitive; anything else is
+    // None (the resolver then falls back to Auto).
+    for (s, want) in [
+        ("auto", Some(FusePolicy::Auto)),
+        ("  Auto\t", Some(FusePolicy::Auto)),
+        ("on", Some(FusePolicy::On)),
+        ("ON", Some(FusePolicy::On)),
+        ("1", Some(FusePolicy::On)),
+        ("true", Some(FusePolicy::On)),
+        ("off", Some(FusePolicy::Off)),
+        ("0", Some(FusePolicy::Off)),
+        ("False", Some(FusePolicy::Off)),
+        ("", None),
+        ("yes", None),
+        ("fused", None),
+    ] {
+        assert_eq!(parse_fuse(s), want, "spelling {s:?}");
+    }
+    let _ = FUSE_LLC_BYTES; // re-exported constant stays public API
 }
 
 #[test]

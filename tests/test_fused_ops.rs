@@ -1,0 +1,233 @@
+//! Fused operand-pass tier, integration level.
+//!
+//! The tentpole claims pinned here (see `backend/mod.rs` §8):
+//!
+//! * **ε-parity** — LancSVD with the fused A·Q + Gram sweep and the
+//!   Gram-downdated first CholeskyQR pass agrees with the classic
+//!   composition to rounding (the downdate W = G − HᵀH is algebraically
+//!   exact); RandSVD's fused power step is a different (coarser)
+//!   iteration, so it is held to residual quality, not trajectory
+//!   parity.
+//! * **Bitwise determinism at a fixed thread count** — repeating a
+//!   fused solve under an unchanged pool reproduces every factor bit,
+//!   for both algorithms, both dtypes, at 1 / 2 / all threads.
+//! * **One operand pass per fused power iteration** — out of core, a
+//!   RandSVD power step reads each disk shard exactly once instead of
+//!   twice: p+1 total passes vs 2p unfused, pinned against the shard
+//!   loader's own statistics and the staged ledger's disk tier.
+//! * **In-core/out-of-core bitwise parity of the fused step** — the
+//!   fused Aᵀ(A·Q) kernel is a band-serial scatter in global row order,
+//!   the same order the shard stream replays, so the sharded fused
+//!   solve is bitwise the in-core scatter-only fused solve.
+//!
+//! Pool-pinning tests serialize on `POOL_LOCK` and restore defaults on
+//! exit (same idiom as `test_threaded_kernels`).
+
+use std::sync::{Arc, Mutex};
+
+use trunksvd::algo::lancsvd::lancsvd;
+use trunksvd::algo::randsvd::randsvd;
+use trunksvd::algo::{residuals, LancSvdOpts, RandSvdOpts, TruncatedSvd};
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::backend::staged::StagedBackend;
+use trunksvd::backend::Operand;
+use trunksvd::gen::sparse::{generate, SparseSpec};
+use trunksvd::sparse::shard;
+use trunksvd::util::pool;
+use trunksvd::util::scalar::Scalar;
+use trunksvd::Csr;
+
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+struct PoolReset;
+impl Drop for PoolReset {
+    fn drop(&mut self) {
+        pool::set_num_threads(0);
+    }
+}
+
+fn tmp(name: &str) -> String {
+    let dir = std::env::temp_dir().join("trunksvd_fused_tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.to_str().unwrap().to_string()
+}
+
+fn test_matrix() -> Csr {
+    generate(&SparseSpec { rows: 600, cols: 220, nnz: 7000, seed: 41, ..Default::default() })
+}
+
+fn assert_bitwise_svd<S: Scalar>(a: &TruncatedSvd<S>, b: &TruncatedSvd<S>, what: &str) {
+    assert_eq!(a.iters, b.iters, "{what}: iteration counts differ");
+    assert_eq!(a.sigma.len(), b.sigma.len(), "{what}: rank differs");
+    for (i, (x, y)) in a.sigma.iter().zip(&b.sigma).enumerate() {
+        assert_eq!(x.to_f64().to_bits(), y.to_f64().to_bits(), "{what}: sigma[{i}]");
+    }
+    for (m, (x, y)) in [("u", (&a.u, &b.u)), ("v", (&a.v, &b.v))] {
+        assert_eq!(x.data().len(), y.data().len(), "{what}: {m} shape");
+        for (i, (p, q)) in x.data().iter().zip(y.data()).enumerate() {
+            assert_eq!(p.to_f64().to_bits(), q.to_f64().to_bits(), "{what}: {m}[{i}]");
+        }
+    }
+}
+
+fn lanc_opts(fuse: Option<bool>) -> LancSvdOpts {
+    LancSvdOpts { r: 16, p: 2, b: 8, wanted: 6, seed: 7, fuse, ..Default::default() }
+}
+
+fn rand_opts(fuse: Option<bool>) -> RandSvdOpts {
+    RandSvdOpts { r: 12, p: 6, b: 4, seed: 7, fuse, ..Default::default() }
+}
+
+/// One dtype's leg of the parity/determinism matrix, under whatever
+/// thread count the caller pinned. `res_floor` absorbs the dtype's
+/// converged-residual noise floor in the fused-vs-unfused quality
+/// comparison.
+fn fused_leg_at<S: Scalar>(a: &Csr<S>, sig_tol: f64, res_floor: f64) {
+    // LancSVD: fused vs unfused is ε-parity (the Gram downdate is
+    // algebraically exact; CholeskyQR2's second pass restores
+    // orthogonality), on both backends.
+    let mut be = CpuBackend::new_sparse(a.clone()).scatter_only();
+    let lanc_unf = lancsvd(&mut be, &lanc_opts(Some(false))).unwrap();
+    let mut be = CpuBackend::new_sparse(a.clone()).scatter_only();
+    let lanc_fus = lancsvd(&mut be, &lanc_opts(Some(true))).unwrap();
+    let s0 = lanc_unf.sigma[0].to_f64();
+    for i in 0..6 {
+        let d = (lanc_fus.sigma[i].to_f64() - lanc_unf.sigma[i].to_f64()).abs();
+        assert!(
+            d <= sig_tol * s0,
+            "cpu lancsvd sigma[{i}]: fused {} vs unfused {} (tol {sig_tol:e})",
+            lanc_fus.sigma[i].to_f64(),
+            lanc_unf.sigma[i].to_f64()
+        );
+    }
+    let mut sbe = StagedBackend::new_sparse(a.clone());
+    let lanc_staged = lancsvd(&mut sbe, &lanc_opts(Some(true))).unwrap();
+    assert_eq!(sbe.ledger().hot_panel_transfers(), 0, "fused hot loop leaked a panel");
+    for i in 0..6 {
+        let d = (lanc_staged.sigma[i].to_f64() - lanc_unf.sigma[i].to_f64()).abs();
+        assert!(d <= sig_tol * s0, "staged lancsvd sigma[{i}] drifted past {sig_tol:e}");
+    }
+
+    // RandSVD fused: the fused power step is one AᵀA application per
+    // iteration, same as the classic S1–S4 sweep, so at equal p its
+    // measured residuals must track the unfused run's (same convergence
+    // rate; only rounding trajectories differ).
+    let mut be = CpuBackend::new_sparse(a.clone()).scatter_only();
+    let rand_fus = randsvd(&mut be, &rand_opts(Some(true))).unwrap();
+    let mut be = CpuBackend::new_sparse(a.clone()).scatter_only();
+    let rand_unf = randsvd(&mut be, &rand_opts(Some(false))).unwrap();
+    let max_res = |svd: &TruncatedSvd<S>| {
+        let mut chk = CpuBackend::new_sparse(a.clone()).scatter_only();
+        residuals(&mut chk, svd, 6).iter().fold(0.0f64, |m, &x| m.max(x))
+    };
+    let (rf, ru) = (max_res(&rand_fus), max_res(&rand_unf));
+    assert!(
+        rf <= 5.0 * ru + res_floor,
+        "fused randsvd residual {rf:.3e} vs unfused {ru:.3e} (floor {res_floor:e})"
+    );
+    let mut sbe = StagedBackend::new_sparse(a.clone());
+    let _ = randsvd(&mut sbe, &rand_opts(Some(true))).unwrap();
+    assert_eq!(sbe.ledger().hot_panel_transfers(), 0, "fused randsvd leaked a panel");
+
+    // Bitwise repeatability at this fixed thread count, both algorithms.
+    let mut be = CpuBackend::new_sparse(a.clone()).scatter_only();
+    let lanc_again = lancsvd(&mut be, &lanc_opts(Some(true))).unwrap();
+    assert_bitwise_svd(&lanc_fus, &lanc_again, "lancsvd fused repeat");
+    let mut be = CpuBackend::new_sparse(a.clone()).scatter_only();
+    let rand_again = randsvd(&mut be, &rand_opts(Some(true))).unwrap();
+    assert_bitwise_svd(&rand_fus, &rand_again, "randsvd fused repeat");
+}
+
+#[test]
+fn fused_parity_and_determinism_across_dtypes_and_threads() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    let a = test_matrix();
+    let a32: Csr<f32> = a.cast();
+    // 0 = pool default (all available workers).
+    for threads in [1usize, 2, 0] {
+        pool::set_num_threads(threads);
+        fused_leg_at::<f64>(&a, 1e-9, 1e-8);
+        fused_leg_at::<f32>(&a32, 2e-3, 1e-3);
+    }
+}
+
+#[test]
+fn fused_sharded_randsvd_bitwise_matches_incore_and_halves_disk_traffic() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(3);
+    let a = test_matrix();
+    let dir = tmp("fused_parity");
+    let n_shards = 5usize;
+    let sd = Arc::new(shard::write_shards_from_csr(&dir, &a, n_shards).unwrap());
+    let file_bytes = sd.total_file_bytes();
+    // Tight cap: zero pinned prefix, every pass streams every shard.
+    let cap = 2 * sd.max_resident_bytes::<f64>();
+    let p = 10usize;
+    let opts = RandSvdOpts { r: 12, p, b: 4, seed: 7, fuse: Some(true), ..Default::default() };
+
+    // The fused Aᵀ(A·Q) is a band-serial scatter in global row order —
+    // the same order the shard stream replays — so out-of-core fused is
+    // bitwise the in-core scatter-only fused solve.
+    let mut be_in = CpuBackend::new_sparse(a.clone()).scatter_only();
+    let svd_in = randsvd(&mut be_in, &opts).unwrap();
+    let mut be_sh = CpuBackend::<f64>::new(Operand::sharded(Arc::clone(&sd), cap));
+    be_sh.ensure_operand_resident().unwrap();
+    let svd_sh = randsvd(&mut be_sh, &opts).unwrap();
+    assert_bitwise_svd(&svd_in, &svd_sh, "randsvd fused ooc");
+
+    // Pass accounting: p−1 fused one-sweep iterations + the final
+    // unfused iteration's A and Aᵀ passes = p+1, against 2p unfused.
+    let st = be_sh.shard_stats().unwrap();
+    assert_eq!(st.passes, p + 1, "fused solve must make exactly p+1 operand passes");
+    let mut be_unf = CpuBackend::<f64>::new(Operand::sharded(Arc::clone(&sd), cap));
+    be_unf.ensure_operand_resident().unwrap();
+    let _ = randsvd(&mut be_unf, &RandSvdOpts { fuse: Some(false), ..opts.clone() }).unwrap();
+    let st_unf = be_unf.shard_stats().unwrap();
+    assert_eq!(st_unf.passes, 2 * p, "unfused solve reads the operand twice per iteration");
+
+    // Staged ledger: the disk tier sees each pass stream the whole
+    // shard set exactly once, and the fused/unfused byte ratio is the
+    // tentpole's ≥1.8× traffic drop (2p/(p+1) at p = 10).
+    let mut sbe: StagedBackend = StagedBackend::new_sharded(Arc::clone(&sd), cap);
+    sbe.ensure_operand_resident().unwrap();
+    let _ = randsvd(&mut sbe, &opts).unwrap();
+    let t = sbe.ledger().totals();
+    assert_eq!(t.disk_bytes as usize, (p + 1) * file_bytes, "fused staged disk bytes");
+    assert_eq!(t.hot_panel_transfers, 0);
+    let mut sbe_unf: StagedBackend = StagedBackend::new_sharded(Arc::clone(&sd), cap);
+    sbe_unf.ensure_operand_resident().unwrap();
+    let _ = randsvd(&mut sbe_unf, &RandSvdOpts { fuse: Some(false), ..opts }).unwrap();
+    let t_unf = sbe_unf.ledger().totals();
+    assert_eq!(t_unf.disk_bytes as usize, 2 * p * file_bytes, "unfused staged disk bytes");
+    let ratio = t_unf.disk_bytes as f64 / t.disk_bytes as f64;
+    assert!(ratio >= 1.8, "fused power step must cut disk traffic >= 1.8x, got {ratio:.3}");
+}
+
+#[test]
+fn fused_auto_policy_engages_for_disk_operands() {
+    // `fuse: None` + an on-disk operand must resolve to the fused path
+    // (the cost model's `on_disk` arm) — pinned end to end via the pass
+    // counter rather than any internal flag.
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(2);
+    let a = test_matrix();
+    let dir = tmp("auto_policy");
+    let sd = Arc::new(shard::write_shards_from_csr(&dir, &a, 4).unwrap());
+    let cap = 2 * sd.max_resident_bytes::<f64>();
+    let p = 6usize;
+    let mut be = CpuBackend::<f64>::new(Operand::sharded(Arc::clone(&sd), cap));
+    be.ensure_operand_resident().unwrap();
+    let opts = RandSvdOpts { r: 12, p, b: 4, seed: 7, fuse: None, ..Default::default() };
+    let svd = randsvd(&mut be, &opts).unwrap();
+    assert_eq!(be.shard_stats().unwrap().passes, p + 1, "auto policy must fuse on disk");
+    // Backstop: the auto decision lands on exactly the forced-fused
+    // trajectory (bitwise, per the in-core/out-of-core parity claim).
+    let mut be_in = CpuBackend::new_sparse(a).scatter_only();
+    let svd_in =
+        randsvd(&mut be_in, &RandSvdOpts { fuse: Some(true), ..opts }).unwrap();
+    assert_bitwise_svd(&svd_in, &svd, "auto-fused vs forced-fused");
+}

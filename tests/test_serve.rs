@@ -398,3 +398,107 @@ fn replay_smoke_twice_is_bitwise_and_reuse_gated() {
     assert!(rep.get("counters").unwrap().get("ws_warm_reuses").unwrap().as_f64().unwrap() >= 1.0);
     let _ = std::fs::remove_file(&out_path);
 }
+
+/// Fused-PR satellite: the `--socket` transport end-to-end. A detached
+/// thread runs [`serve_unix`] on a temp socket; a client connects over
+/// the unix socket and gets the same ok/rejected/failed triage as the
+/// in-memory line protocol, and a second connection exercises the
+/// cross-connection operand memo (same spec ⇒ server cache hit).
+#[cfg(unix)]
+#[test]
+fn unix_socket_serve_triages_ok_rejected_failed() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::Shutdown;
+    use std::os::unix::net::UnixStream;
+    use trunksvd::runtime::serve::serve_unix;
+
+    let sock = format!("{}/serve.sock", tmp("socket"));
+    // serve_unix accepts until the listener errors, so it outlives the
+    // test: leak the server and let process teardown reap the daemon
+    // thread (it blocks in accept() holding no per-test state).
+    let server: &'static Server = Box::leak(Box::new(Server::new(ServeConfig {
+        solvers: 2,
+        queue_cap: 64,
+        ..ServeConfig::default()
+    })));
+    let defaults = JobDefaults {
+        algo: Algo::Lanc,
+        params: Params { r: 8, p: 2, b: 4, wanted: 3, ..Params::default() },
+    };
+    {
+        let sock = sock.clone();
+        std::thread::spawn(move || {
+            let _ = serve_unix(server, &sock, &defaults);
+        });
+    }
+    // The listener binds on the daemon thread; connect with retry.
+    let connect = || -> UnixStream {
+        for _ in 0..500 {
+            if let Ok(s) = UnixStream::connect(&sock) {
+                return s;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("serve_unix never bound {sock}");
+    };
+
+    let operand = r#"{"sparse": {"rows": 150, "cols": 60, "nnz": 1400, "seed": 3}}"#;
+    let mut c1 = connect();
+    let lines = [
+        // Well-formed solve ⇒ ok.
+        format!(r#"{{"id": "good", "operand": {operand}}}"#),
+        // deadline_ms 0 ⇒ typed rejection at admission.
+        format!(r#"{{"id": "late", "deadline_ms": 0, "operand": {operand}}}"#),
+        // Unknown algo ⇒ failed under a fresh protocol id (parse-stage
+        // errors never reach the queue).
+        format!(r#"{{"id": "broken", "algo": "nope", "operand": {operand}}}"#),
+        // Not JSON at all ⇒ failed, and the connection stays up.
+        "this is not json".to_string(),
+    ];
+    c1.write_all((lines.join("\n") + "\n").as_bytes()).unwrap();
+    c1.shutdown(Shutdown::Write).unwrap();
+
+    let mut results: Vec<(String, String)> = Vec::new();
+    for line in BufReader::new(c1).lines() {
+        let v = json::parse(&line.unwrap()).unwrap();
+        results.push((
+            v.get("id").unwrap().as_str().unwrap().to_string(),
+            v.get("status").unwrap().as_str().unwrap().to_string(),
+        ));
+    }
+    assert_eq!(results.len(), 4, "{results:?}");
+    let status_of = |id: &str| {
+        results.iter().find(|(i, _)| i == id).map(|(_, s)| s.as_str()).unwrap_or("<missing>")
+    };
+    assert_eq!(status_of("good"), "ok", "{results:?}");
+    assert_eq!(status_of("late"), "rejected", "{results:?}");
+    let parse_failures: Vec<&(String, String)> =
+        results.iter().filter(|(i, _)| i.starts_with("job-")).collect();
+    assert_eq!(parse_failures.len(), 2, "{results:?}");
+    for (_, status) in &parse_failures {
+        assert_eq!(status, "failed", "{results:?}");
+    }
+
+    // Second connection, same operand spec: the shared protocol memo
+    // resolves it to the same Arc, so the server's operand cache hits.
+    let mut c2 = connect();
+    c2.write_all(format!("{{\"id\": \"warm\", \"operand\": {operand}}}\n").as_bytes()).unwrap();
+    c2.shutdown(Shutdown::Write).unwrap();
+    let mut warm = Vec::new();
+    for line in BufReader::new(c2).lines() {
+        warm.push(json::parse(&line.unwrap()).unwrap());
+    }
+    assert_eq!(warm.len(), 1, "second connection expected exactly one result");
+    assert_eq!(warm[0].get("id").unwrap().as_str(), Some("warm"));
+    assert_eq!(warm[0].get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(
+        warm[0].get("operand_hit").and_then(|v| v.as_bool()),
+        Some(true),
+        "cross-connection operand reuse must hit the cache"
+    );
+    assert!(warm[0].get("sigma").unwrap().as_arr().unwrap().len() >= 3);
+
+    let c = server.counters();
+    assert!(c.completed >= 2, "{c:?}");
+    assert_eq!(c.rejected_deadline, 1, "{c:?}");
+}

@@ -161,6 +161,98 @@ fn lancsvd_inner_iteration_is_allocation_free_sparse() {
     }
 }
 
+/// The fused form of the inner block step (S4 `apply_a_gram_into` + S5
+/// Gram-downdated CGS+CholeskyQR2), exactly as `lancsvd_with` runs it
+/// with the fused tier enabled.
+fn lanc_inner_step_fused<S, B>(be: &mut B, ws: &Workspace<S>, s: usize, b: usize)
+where
+    S: trunksvd::Scalar,
+    B: Backend<S> + ?Sized,
+{
+    let mut qbar = ws.buf(names::LANC_QBAR);
+    let mut qnext = ws.buf(names::LANC_QNEXT);
+    let mut p_basis = ws.buf(names::LANC_P);
+    let mut pbar_basis = ws.buf(names::LANC_PBAR);
+    let mut lt_buf = ws.buf(names::ORTH_R);
+    let mut h_buf = ws.buf(names::ORTH_H);
+    let mut g_buf = ws.buf(names::LANC_G);
+
+    pbar_basis.set_panel(s, &qbar);
+    {
+        let (hist, mut rest) = p_basis.split_at_col(s);
+        let mut qi = rest.panel_mut(0, b);
+        be.apply_at_into(qbar.as_ref(), qi.reborrow());
+        let lt = lt_buf.view_mut(b, b);
+        if s == 0 {
+            be.orth_cholqr2_into(qi, lt, ws).unwrap();
+        } else {
+            let h = h_buf.view_mut(s, b);
+            be.orth_cgs_cqr2_into(qi, hist, h, lt, ws).unwrap();
+        }
+    }
+    let mut gram = g_buf.view_mut(b, b);
+    be.apply_a_gram_into(p_basis.panel(s, b), qnext.as_mut(), gram.reborrow());
+    {
+        let hist = pbar_basis.panel(0, s + b);
+        let h = h_buf.view_mut(s + b, b);
+        let ri = lt_buf.view_mut(b, b);
+        be.orth_cgs_cqr2_pregram_into(qnext.as_mut(), hist, gram.as_ref(), h, ri, ws).unwrap();
+    }
+    std::mem::swap(&mut *qbar, &mut *qnext);
+}
+
+#[test]
+fn fused_lancsvd_inner_iteration_is_allocation_free_sparse() {
+    // The fused tier's serial fast paths (one-sweep A·Q + Gram, and the
+    // Gram-downdated first CholeskyQR pass) must honor the same
+    // steady-state contract as the classic composition.
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(1);
+    let spec = SparseSpec { rows: 300, cols: 120, nnz: 5000, seed: 4, ..Default::default() };
+    let a = generate(&spec);
+    let (b, r) = (8usize, 16usize);
+    let mut be = CpuBackend::new_sparse(a).scatter_only();
+    let ws: Workspace = Workspace::new(Plan::lancsvd(300, 120, r, 2, b));
+    be.plan(ws.plan());
+    seed_qbar(&mut be, &ws, b);
+    for _ in 0..3 {
+        lanc_inner_step_fused(&mut be, &ws, 8, b);
+    }
+    let (c0, b0) = (thread_allocs(), thread_alloc_bytes());
+    for _ in 0..40 {
+        lanc_inner_step_fused(&mut be, &ws, 8, b);
+    }
+    let (allocs, bytes) = (thread_allocs() - c0, thread_alloc_bytes() - b0);
+    assert_eq!((allocs, bytes), (0, 0), "fused inner step allocated");
+}
+
+#[test]
+fn fused_randsvd_allocation_count_is_independent_of_p() {
+    // Fused power iterations run Aᵀ(A·Q) through the planned `rand.z`
+    // sketch; steady state must stay allocation-free end to end.
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(1);
+    let spec = SparseSpec { rows: 300, cols: 120, nnz: 5000, seed: 6, ..Default::default() };
+    let a = generate(&spec);
+    let ws: Workspace = Workspace::new(Plan::randsvd(300, 120, 12, 16, 4));
+    let solve_allocs = |p: usize| -> (u64, u64) {
+        let opts =
+            RandSvdOpts { r: 12, p, b: 4, seed: 3, fuse: Some(true), ..Default::default() };
+        let mut be = CpuBackend::new_sparse(a.clone()).scatter_only();
+        let (c0, b0) = (thread_allocs(), thread_alloc_bytes());
+        let svd = randsvd_with(&mut be, &opts, &ws).unwrap();
+        assert_eq!(svd.iters, p);
+        (thread_allocs() - c0, thread_alloc_bytes() - b0)
+    };
+    let _ = solve_allocs(2); // warm lazy statics off-window
+    let (c3, by3) = solve_allocs(3);
+    let (c13, by13) = solve_allocs(13);
+    assert_eq!(c3, c13, "fused allocation count must not scale with p ({c3} vs {c13})");
+    assert_eq!(by3, by13, "fused allocated bytes must not scale with p ({by3} vs {by13})");
+}
+
 fn seed_qbar<S: trunksvd::Scalar>(be: &mut CpuBackend<S>, ws: &Workspace<S>, b: usize) {
     let mut rng = Rng::new(9);
     let mut qbar = ws.buf(names::LANC_QBAR);

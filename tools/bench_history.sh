@@ -1,0 +1,82 @@
+#!/usr/bin/env bash
+# Append a compact summary of a BENCH_kernels.json run to the committed
+# perf trajectory (BENCH_history/trajectory.jsonl) and fail the run if a
+# deterministic metric regressed against the last committed entry.
+#
+#   tools/bench_history.sh [BENCH_kernels.json] [BENCH_history/trajectory.jsonl]
+#
+# Two classes of metric:
+#   - deterministic (ledger byte counts, pass counts, parity flags):
+#     hard-gated. `ooc_disk_drop` must not fall below 0.9x the last
+#     committed value, `bitwise_parity` must stay 1, and
+#     `hot_panel_transfers` must stay 0.
+#   - timing (speedups, overlap efficiency): recorded for trend reading
+#     only — CI runners are too noisy to gate on wall-clock ratios here;
+#     the bench's own BENCH_ASSERT_* envs gate those at full size.
+#
+# CI appends on every run and uploads the updated file as an artifact;
+# maintainers periodically commit the artifact back so the trajectory in
+# the repo tracks merged history (see BENCH_history/README.md).
+set -euo pipefail
+
+BENCH=${1:-BENCH_kernels.json}
+HIST=${2:-BENCH_history/trajectory.jsonl}
+
+if ! command -v jq >/dev/null 2>&1; then
+    echo "bench-history: jq not found; skipping trajectory append" >&2
+    exit 0
+fi
+[ -f "$BENCH" ] || { echo "bench-history: $BENCH not found" >&2; exit 1; }
+mkdir -p "$(dirname "$HIST")"
+
+commit=$(git rev-parse --short HEAD 2>/dev/null || echo unknown)
+stamp=$(date -u +%Y-%m-%dT%H:%M:%SZ)
+
+entry=$(jq -c --arg commit "$commit" --arg date "$stamp" '{
+    commit: $commit,
+    date: $date,
+    threads: .threads,
+    quick: .quick,
+    fused_ata_speedup: .fused.ata_speedup,
+    fused_gram_speedup: .fused.gram_speedup,
+    fused_ooc_disk_drop: .fused.ooc_disk_drop,
+    ooc_passes: .out_of_core.passes,
+    ooc_overlap_efficiency: .out_of_core.overlap_efficiency,
+    ooc_bitwise_parity: .out_of_core.bitwise_parity,
+    ooc_hot_panel_transfers: .out_of_core.hot_panel_transfers,
+    parallel_cutoff: .cost_calibration.parallel_cutoff
+}' "$BENCH")
+
+# Absolute gates on the fresh run — these never depend on history.
+parity=$(echo "$entry" | jq -r '.ooc_bitwise_parity')
+hot=$(echo "$entry" | jq -r '.ooc_hot_panel_transfers')
+if [ "$parity" != "1" ]; then
+    echo "bench-history: REGRESSION — out-of-core bitwise parity lost ($parity)" >&2
+    exit 1
+fi
+if [ "$hot" != "0" ]; then
+    echo "bench-history: REGRESSION — $hot hot-loop panel transfers (must be 0)" >&2
+    exit 1
+fi
+
+# Relative gate vs the last committed entry: the fused tier's disk-byte
+# drop is a deterministic ledger ratio, so any real decrease is a code
+# change, not noise. Allow 10% slack for bench-shape changes.
+last=$(grep -v '^\s*$' "$HIST" 2>/dev/null | tail -n 1 || true)
+if [ -n "$last" ]; then
+    prev_drop=$(echo "$last" | jq -r '.fused_ooc_disk_drop // empty')
+    new_drop=$(echo "$entry" | jq -r '.fused_ooc_disk_drop // empty')
+    if [ -n "$prev_drop" ] && [ -n "$new_drop" ]; then
+        ok=$(jq -n --argjson a "$new_drop" --argjson b "$prev_drop" '$a >= 0.9 * $b')
+        if [ "$ok" != "true" ]; then
+            echo "bench-history: REGRESSION — fused disk-byte drop $new_drop" \
+                 "fell below 0.9x last committed $prev_drop" >&2
+            echo "bench-history: last committed entry: $last" >&2
+            exit 1
+        fi
+    fi
+fi
+
+echo "$entry" >> "$HIST"
+echo "bench-history: appended -> $HIST"
+echo "$entry" | jq .
