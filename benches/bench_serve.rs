@@ -7,7 +7,10 @@
 //! With `BENCH_ASSERT_REUSE=1` the replayer additionally gates on ≥1
 //! operand-cache hit, ≥1 warm workspace reuse, ≥1 exercised rejection,
 //! zero rework and zero failures (bitwise repeat-run determinism is
-//! always enforced).
+//! always enforced). Workloads with streaming `append` jobs (e.g.
+//! `config/workloads/streaming.json`) also report and gate the
+//! accuracy-vs-staleness audit of each warm basis against the
+//! from-scratch prefix solve.
 
 use trunksvd::runtime::serve::{replay_file, ReplayOverrides};
 
@@ -35,5 +38,12 @@ fn main() {
         c.ws_warm_reuses,
         out,
     );
+    if s.staleness_appends > 0 {
+        println!(
+            "staleness: {} append(s) audited, max rel sigma err {:.3e} (within_tolerance {})",
+            s.staleness_appends, s.staleness_max_rel, s.staleness_ok,
+        );
+    }
     assert!(s.deterministic, "repeat runs diverged bitwise");
+    assert!(s.staleness_ok, "incremental basis drifted past the staleness tolerance");
 }

@@ -8,162 +8,315 @@
 //!
 //! 1. project:   H = UᵀC;  residual E = C − U·H
 //! 2. expand:    E = Q_E·R_E  (CholeskyQR2 + fallback — Alg. 4 reused)
-//! 3. small SVD: [diag(s) H; 0 R_E] = Ū Σ V̄ᵀ   ((r+c)×(r+c), host)
+//! 3. small SVD: [diag(s) H; 0 R_E] = Ū Σ V̄ᵀ   ((k+c)×(k+c), host)
 //! 4. rotate + truncate: U ← [U Q_E]·Ū_r, V bookkeeping, s ← Σ_r
 //!
 //! The σ-threshold variant (`tol`) drops triplets with σ_i < tol·σ_1,
 //! implementing the user-defined threshold of Eq. 3.
+//!
+//! The update runs entirely on the allocation-free out-parameter
+//! substrate: every per-block operand is a view of a
+//! [`Plan::incremental`] workspace buffer, every kernel is a `*_into`
+//! backend op (so cpu/staged backends see — and ledger — the traffic),
+//! and the host GESVD reuses a [`JacobiScratch`]. After construction,
+//! [`IncrementalSvd::update_with`] performs zero heap allocations on
+//! the non-degenerate path (pinned by `tests/test_incremental.rs`).
 
 use crate::backend::Backend;
 use crate::error::Result;
-use crate::la::mat::Mat;
-use crate::la::svd::jacobi_svd;
+use crate::la::mat::{Mat, MatRef};
+use crate::la::svd::{jacobi_svd_scratch_into, JacobiScratch};
+use crate::la::workspace::{names, Plan, PlanKind, Workspace};
 use crate::metrics::Block;
 use crate::util::scalar::Scalar;
 
-use super::orth::cholqr2;
-
 /// Streaming truncated SVD of a column stream (generic over the working
 /// precision; the σ threshold `tol` stays an f64 ratio).
+///
+/// All state is preallocated at construction for a stream of up to
+/// `cols_max` columns arriving in blocks of at most `block_cap`
+/// columns, with the retained rank capped at `rank_cap`. The serve
+/// layer keeps one of these warm per stream tenant — the whole basis
+/// (U, σ, V, cols_seen) lives in this struct.
 pub struct IncrementalSvd<S: Scalar = f64> {
     rows: usize,
+    cols_max: usize,
     rank_cap: usize,
+    block_cap: usize,
     /// relative σ threshold (triplets below tol·σ₁ are truncated away)
     tol: f64,
-    u: Mat<S>,
-    s: Vec<S>,
-    /// right factor as a growing (cols_seen × rank) matrix
-    v: Mat<S>,
+    /// live rank k ≤ rank_cap
+    k: usize,
     cols_seen: usize,
+    /// left basis storage (rows×rank_cap; live panel = leading k cols)
+    u: Mat<S>,
+    /// singular values (len k)
+    s: Vec<S>,
+    /// right factor storage. The live factor is cols_seen×k
+    /// column-major with leading dimension cols_seen, packed flat at
+    /// the front of this buffer — NOT at the buffer's own leading
+    /// dimension — so it stays contiguous as the stream grows.
+    v: Mat<S>,
+    /// core-SVD singular values (capacity rank_cap + block_cap)
+    core_s: Vec<S>,
+    /// host-GESVD bookkeeping, reused across updates
+    jac: JacobiScratch<S>,
 }
 
 impl<S: Scalar> IncrementalSvd<S> {
-    /// New accumulator for m-row inputs with rank cap `r`.
-    pub fn new(rows: usize, rank_cap: usize, tol: f64) -> IncrementalSvd<S> {
+    /// New accumulator for `rows`-row inputs streaming up to `cols_max`
+    /// total columns in blocks of ≤ `block_cap`, rank cap `rank_cap`.
+    pub fn new(
+        rows: usize,
+        cols_max: usize,
+        rank_cap: usize,
+        block_cap: usize,
+        tol: f64,
+    ) -> IncrementalSvd<S> {
+        assert!(rank_cap >= 1, "rank cap must be >= 1");
+        assert!(block_cap >= 1, "block cap must be >= 1");
+        assert!(rank_cap <= rows, "rank cap {rank_cap} exceeds row count {rows}");
+        let aug = rank_cap + block_cap;
         IncrementalSvd {
             rows,
+            cols_max,
             rank_cap,
+            block_cap,
             tol,
-            u: Mat::zeros(rows, 0),
-            s: Vec::new(),
-            v: Mat::zeros(0, 0),
+            k: 0,
             cols_seen: 0,
+            u: Mat::zeros(rows, rank_cap),
+            s: Vec::with_capacity(rank_cap),
+            v: Mat::zeros(cols_max, rank_cap),
+            core_s: Vec::with_capacity(aug),
+            jac: JacobiScratch::with_capacity(aug, aug),
         }
     }
 
+    /// The workspace plan every [`IncrementalSvd::update_with`] call on
+    /// this accumulator requires.
+    pub fn plan(&self) -> Plan {
+        Plan::incremental(self.rows, self.cols_max, self.rank_cap, self.block_cap)
+    }
+
     pub fn rank(&self) -> usize {
-        self.s.len()
+        self.k
     }
     pub fn cols_seen(&self) -> usize {
         self.cols_seen
     }
-    pub fn u(&self) -> &Mat<S> {
-        &self.u
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols_max(&self) -> usize {
+        self.cols_max
+    }
+    pub fn rank_cap(&self) -> usize {
+        self.rank_cap
+    }
+    pub fn block_cap(&self) -> usize {
+        self.block_cap
+    }
+    /// Live left basis (rows×rank view of the preallocated storage).
+    pub fn u(&self) -> MatRef<'_, S> {
+        self.u.panel(0, self.k)
     }
     pub fn sigma(&self) -> &[S] {
         &self.s
     }
-    pub fn v(&self) -> &Mat<S> {
-        &self.v
+    /// Live right factor (cols_seen×rank). Packed flat at the front of
+    /// the storage buffer (see the field docs), so the view is built
+    /// directly over the leading `cols_seen·rank` elements.
+    pub fn v(&self) -> MatRef<'_, S> {
+        MatRef {
+            rows: self.cols_seen,
+            cols: self.k,
+            data: &self.v.data()[..self.cols_seen * self.k],
+        }
     }
 
-    /// Append a block of columns C (m×c).
-    pub fn push_block<B: Backend<S> + ?Sized>(&mut self, be: &mut B, c: &Mat<S>) -> Result<()> {
-        assert_eq!(c.rows(), self.rows, "column block rows");
-        let k = self.rank();
-        let cc = c.cols();
+    /// Append a block of columns C (m×c, c ≤ block_cap) through the
+    /// planned workspace: allocation-free after construction (on the
+    /// non-degenerate path) and routed through the backend `*_into`
+    /// ops, so a staged backend's transfer ledger sees every crossing
+    /// (see the backend contract §9 on which crossings are sanctioned).
+    pub fn update_with<B: Backend<S> + ?Sized>(
+        &mut self,
+        be: &mut B,
+        c: MatRef<'_, S>,
+        ws: &Workspace<S>,
+    ) -> Result<()> {
+        let m = self.rows;
+        let r = self.rank_cap;
+        assert_eq!(c.rows, m, "column block rows");
+        let cc = c.cols;
+        assert!(cc >= 1 && cc <= self.block_cap, "block width {cc} outside 1..={}", self.block_cap);
+        assert!(
+            self.cols_seen + cc <= self.cols_max,
+            "stream exceeds the planned capacity ({} + {cc} > {})",
+            self.cols_seen,
+            self.cols_max
+        );
+        ws.plan().require(PlanKind::Incremental, m, self.cols_max, r, self.block_cap)?;
         be.profile_mut().set_phase(Block::Other);
 
-        // 1. project onto the current left basis: H = UᵀC, E = C − U·H.
+        let k = self.k;
+        let aug = k + cc;
+
+        let mut ext = ws.buf(names::INC_EXT);
+        let mut h = ws.buf(names::INC_H);
+        let mut re = ws.buf(names::INC_RE);
+
+        // Assemble [U | C] in the extended panel. The copy of U is what
+        // lets the rotation GEMM below read the *old* basis while the
+        // new one is written back into `self.u`.
+        {
+            let mut ext_v = ext.view_mut(m, aug);
+            if k > 0 {
+                be.copy_into(self.u.panel(0, k), ext_v.panel_mut(0, k));
+            }
+            be.copy_into(c, ext_v.panel_mut(k, cc));
+        }
+
+        // 1+2. project the tail onto the live basis (H = UᵀC,
+        // E = C − U·H), orthonormalize it (Alg. 4 + fallback), then
+        // re-orthogonalize against U folding the corrections exactly:
+        // Q_old = U·G + Q_new·T  ⇒  H += G·R_E,  R_E ← T·R_E.
         //
         // Note: we do NOT reuse Alg. 5 here. Its paper-faithful step S12
         // (H ← H + H̄ instead of the exact H + H̄·L₁ᵀ) is harmless for the
         // Lanczos panels but becomes an O(1) error when the residual
         // block is *numerically zero* (new columns entirely inside
-        // span(U)) — the common case for low-rank streams. The explicit
-        // re-orthogonalization below folds every correction exactly.
-        let (mut h, mut e) = if k > 0 {
-            let h = be.proj(self.u.as_ref(), c.as_ref());
-            let mut e = c.clone();
-            be.subtract_proj(e.as_mut(), self.u.as_ref(), h.as_ref());
-            (h, e)
-        } else {
-            (Mat::zeros(0, cc), c.clone())
-        };
-
-        // 2. orthonormalize the residual (Alg. 4 + CGS2 fallback), then
-        // re-orthogonalize it against U, folding the corrections:
-        // Q_old = U·G + Q_new·T  ⇒  H += G·R_E,  R_E ← T·R_E.
-        let mut r_e = cholqr2(be, &mut e)?;
-        if k > 0 {
-            let g = be.proj(self.u.as_ref(), e.as_ref());
-            be.subtract_proj(e.as_mut(), self.u.as_ref(), g.as_ref());
-            let t = cholqr2(be, &mut e)?;
-            let g_re = crate::la::blas3::mat_nn(&g, &r_e);
-            for (hv, c) in h.data_mut().iter_mut().zip(g_re.data()) {
-                *hv += *c;
+        // span(U)) — the common case for low-rank streams.
+        {
+            let mut ext_v = ext.view_mut(m, aug);
+            let (u_live, mut e) = ext_v.split_at_col(k);
+            if k > 0 {
+                let mut h_v = h.view_mut(k, cc);
+                be.proj_into(u_live, e.as_ref(), h_v.reborrow());
+                be.subtract_proj(e.reborrow(), u_live, h_v.as_ref());
             }
-            r_e = crate::la::blas3::mat_nn(&t, &r_e);
+            be.orth_cholqr2_into(e.reborrow(), re.view_mut(cc, cc), ws)?;
+            if k > 0 {
+                let mut g = ws.buf(names::INC_G);
+                let mut g_v = g.view_mut(k, cc);
+                be.proj_into(u_live, e.as_ref(), g_v.reborrow());
+                be.subtract_proj(e.reborrow(), u_live, g_v.as_ref());
+                let mut t = ws.buf(names::INC_T);
+                let mut t_v = t.view_mut(cc, cc);
+                be.orth_cholqr2_into(e, t_v.reborrow(), ws)?;
+                let mut gre = ws.buf(names::INC_GRE);
+                let mut gre_v = gre.view_mut(k, cc);
+                be.gemm_nn_into(g_v.as_ref(), re.view_mut(cc, cc).as_ref(), gre_v.reborrow());
+                let mut h_v = h.view_mut(k, cc);
+                for (hv, gv) in h_v.data.iter_mut().zip(gre_v.as_ref().data) {
+                    *hv += *gv;
+                }
+                let mut tre = ws.buf(names::INC_TRE);
+                let mut tre_v = tre.view_mut(cc, cc);
+                be.gemm_nn_into(t_v.as_ref(), re.view_mut(cc, cc).as_ref(), tre_v.reborrow());
+                be.copy_into(tre_v.as_ref(), re.view_mut(cc, cc));
+            }
         }
 
-        // 3. small SVD of the augmented core [diag(s) H; 0 R_E].
-        let aug = k + cc;
-        let mut core = Mat::zeros(aug, aug);
+        // 3. small SVD of the augmented core [diag(s) H; 0 R_E] — the
+        // host GESVD of Table 1, factor-sized, reusing the scratch.
+        let mut core = ws.buf(names::INC_CORE);
+        let mut cu = ws.buf(names::INC_CU);
+        let mut cv = ws.buf(names::INC_CV);
+        let mut core_v = core.view_mut(aug, aug);
+        core_v.fill(S::ZERO);
         for i in 0..k {
-            core.set(i, i, self.s[i]);
+            core_v.set(i, i, self.s[i]);
         }
-        for j in 0..cc {
-            for i in 0..k {
-                core.set(i, k + j, h.at(i, j));
-            }
-            for i in 0..cc {
-                core.set(k + i, k + j, r_e.at(i, j));
+        {
+            let h_v = h.view_mut(k, cc);
+            let re_v = re.view_mut(cc, cc);
+            for j in 0..cc {
+                for i in 0..k {
+                    core_v.set(i, k + j, h_v.at(i, j));
+                }
+                for i in 0..cc {
+                    core_v.set(k + i, k + j, re_v.at(i, j));
+                }
             }
         }
-        let svd = jacobi_svd(&core)?;
+        let mut cu_v = cu.view_mut(aug, aug);
+        let mut cv_v = cv.view_mut(aug, aug);
+        jacobi_svd_scratch_into(
+            core_v.as_ref(),
+            cu_v.reborrow(),
+            &mut self.core_s,
+            cv_v.reborrow(),
+            &mut self.jac,
+        )?;
 
-        // 4. decide the new rank (cap + σ threshold).
-        let smax = svd.s.first().copied().unwrap_or(S::ZERO);
-        let mut new_rank = svd.s.len().min(self.rank_cap);
-        while new_rank > 1 && svd.s[new_rank - 1] < S::from_f64(self.tol) * smax {
+        // 4. decide the new rank (cap + σ threshold)...
+        let smax = self.core_s.first().copied().unwrap_or(S::ZERO);
+        let mut new_rank = self.core_s.len().min(r);
+        while new_rank > 1 && self.core_s[new_rank - 1] < S::from_f64(self.tol) * smax {
             new_rank -= 1;
         }
 
-        // Rotate the left basis: U ← [U Q_E]·Ū_new.
-        let ext = self.u.hcat(&e); // m×aug
-        let u_new = be.gemm_nn(ext.as_ref(), svd.u.panel(0, new_rank));
+        // ...rotate the left basis U ← [U Q_E]·Ū_r...
+        let mut unew = ws.buf(names::INC_UNEW);
+        {
+            let mut unew_v = unew.view_mut(m, new_rank);
+            be.gemm_nn_into(
+                ext.view_mut(m, aug).as_ref(),
+                cu_v.as_ref().panel(0, new_rank),
+                unew_v.reborrow(),
+            );
+            be.copy_into(unew_v.as_ref(), self.u.panel_mut(0, new_rank));
+        }
 
-        // Rotate/extend the right factor: V_new = [V 0; 0 I]·V̄_new.
-        let old_cols = self.cols_seen;
-        let mut v_ext = Mat::zeros(old_cols + cc, aug);
-        for j in 0..k {
-            for i in 0..old_cols {
-                v_ext.set(i, j, self.v.at(i, j));
+        // ...and the right factor V ← [V 0; 0 I]·V̄_r, repacked flat at
+        // the stream's new length.
+        let old = self.cols_seen;
+        let rows_v = old + cc;
+        let mut vext = ws.buf(names::INC_VEXT);
+        let mut vnew = ws.buf(names::INC_VNEW);
+        {
+            let mut vext_v = vext.view_mut(rows_v, aug);
+            vext_v.fill(S::ZERO);
+            for j in 0..k {
+                let src = &self.v.data()[j * old..(j + 1) * old];
+                vext_v.col_mut(j)[..old].copy_from_slice(src);
             }
+            for j in 0..cc {
+                vext_v.set(old + j, k + j, S::ONE);
+            }
+            let mut vnew_v = vnew.view_mut(rows_v, new_rank);
+            be.gemm_nn_into(vext_v.as_ref(), cv_v.as_ref().panel(0, new_rank), vnew_v.reborrow());
+            be.copy_into(vnew_v.as_ref(), self.v.view_mut(rows_v, new_rank));
         }
-        for j in 0..cc {
-            v_ext.set(old_cols + j, k + j, S::ONE);
-        }
-        let v_new = be.gemm_nn(v_ext.as_ref(), svd.v.panel(0, new_rank));
 
-        self.u = u_new;
-        self.v = v_new;
-        self.s = svd.s[..new_rank].to_vec();
+        self.s.clear();
+        self.s.extend_from_slice(&self.core_s[..new_rank]);
+        self.k = new_rank;
         self.cols_seen += cc;
         Ok(())
     }
 
+    /// Allocating convenience over [`IncrementalSvd::update_with`] with
+    /// a throwaway workspace (tests / one-shot callers; streaming
+    /// callers build the workspace once from [`IncrementalSvd::plan`]).
+    pub fn push_block<B: Backend<S> + ?Sized>(&mut self, be: &mut B, c: &Mat<S>) -> Result<()> {
+        let ws = Workspace::new(self.plan());
+        self.update_with(be, c.as_ref(), &ws)
+    }
+
     /// Current reconstruction A ≈ U·diag(s)·Vᵀ (tests / small problems).
     pub fn reconstruct(&self) -> Mat<S> {
-        let k = self.rank();
-        let mut us = self.u.clone();
+        let k = self.k;
+        let mut us = self.u().to_owned();
         for j in 0..k {
             let s = self.s[j];
             for x in us.col_mut(j) {
                 *x *= s;
             }
         }
-        crate::la::blas3::mat_nn(&us, &self.v.transpose())
+        crate::la::blas3::mat_nn(&us, &self.v().to_owned().transpose())
     }
 }
 
@@ -187,10 +340,11 @@ mod tests {
         let u = crate::la::qr::random_orthonormal(40, 5, &mut rng);
         let w = Mat::randn(5, 24, &mut rng);
         let a = crate::la::blas3::mat_nn(&u, &w);
-        let mut inc = IncrementalSvd::new(40, 12, 0.0);
+        let mut inc = IncrementalSvd::new(40, 24, 12, 6, 0.0);
+        let ws = Workspace::new(inc.plan());
         let mut be = dummy_backend();
         for j0 in (0..24).step_by(6) {
-            inc.push_block(&mut be, &a.panel_owned(j0, 6)).unwrap();
+            inc.update_with(&mut be, a.panel(j0, 6), &ws).unwrap();
         }
         assert_eq!(inc.cols_seen(), 24);
         assert!(inc.rank() <= 12);
@@ -200,17 +354,18 @@ mod tests {
             "reconstruction {}",
             back.max_abs_diff(&a)
         );
-        assert!(orth_error(inc.u()) < 1e-10);
+        assert!(orth_error(&inc.u().to_owned()) < 1e-10);
     }
 
     #[test]
     fn matches_batch_truncated_svd() {
         let sigma: Vec<f64> = (0..20).map(|i| 2.0f64.powi(-(i as i32))).collect();
         let prob = dense_with_spectrum(60, 20, &sigma, 3);
-        let mut inc = IncrementalSvd::new(60, 8, 0.0);
+        let mut inc = IncrementalSvd::new(60, 20, 8, 5, 0.0);
+        let ws = Workspace::new(inc.plan());
         let mut be = dummy_backend();
         for j0 in (0..20).step_by(5) {
-            inc.push_block(&mut be, &prob.a.panel_owned(j0, 5)).unwrap();
+            inc.update_with(&mut be, prob.a.panel(j0, 5), &ws).unwrap();
         }
         // Leading singular values match the truth (truncation error is
         // bounded by the discarded tail, so allow a small perturbation).
@@ -230,10 +385,11 @@ mod tests {
         let mut sigma = vec![1.0, 0.9, 0.8];
         sigma.extend(std::iter::repeat(1e-9).take(17));
         let prob = dense_with_spectrum(50, 20, &sigma, 4);
-        let mut inc = IncrementalSvd::new(50, 20, 1e-6);
+        let mut inc = IncrementalSvd::new(50, 20, 20, 4, 1e-6);
+        let ws = Workspace::new(inc.plan());
         let mut be = dummy_backend();
         for j0 in (0..20).step_by(4) {
-            inc.push_block(&mut be, &prob.a.panel_owned(j0, 4)).unwrap();
+            inc.update_with(&mut be, prob.a.panel(j0, 4), &ws).unwrap();
         }
         assert!(inc.rank() <= 4, "threshold should cap rank, got {}", inc.rank());
         assert!((inc.sigma()[0] - 1.0).abs() < 1e-8);
@@ -243,12 +399,31 @@ mod tests {
     fn single_column_blocks() {
         let mut rng = Rng::new(5);
         let a = Mat::randn(30, 7, &mut rng);
-        let mut inc = IncrementalSvd::new(30, 7, 0.0);
+        let mut inc = IncrementalSvd::new(30, 7, 7, 1, 0.0);
+        let ws = Workspace::new(inc.plan());
         let mut be = dummy_backend();
         for j in 0..7 {
-            inc.push_block(&mut be, &a.panel_owned(j, 1)).unwrap();
+            inc.update_with(&mut be, a.panel(j, 1), &ws).unwrap();
         }
         let back = inc.reconstruct();
         assert!(back.max_abs_diff(&a) / a.fro_norm() < 1e-10);
+    }
+
+    #[test]
+    fn push_block_convenience_matches_update_with() {
+        let mut rng = Rng::new(6);
+        let a = Mat::randn(25, 12, &mut rng);
+        let mut inc_a = IncrementalSvd::new(25, 12, 6, 4, 0.0);
+        let mut inc_b = IncrementalSvd::new(25, 12, 6, 4, 0.0);
+        let ws = Workspace::new(inc_a.plan());
+        let mut be = dummy_backend();
+        for j0 in (0..12).step_by(4) {
+            inc_a.update_with(&mut be, a.panel(j0, 4), &ws).unwrap();
+            inc_b.push_block(&mut be, &a.panel_owned(j0, 4)).unwrap();
+        }
+        assert_eq!(inc_a.rank(), inc_b.rank());
+        for (x, y) in inc_a.sigma().iter().zip(inc_b.sigma()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "push_block must be the same arithmetic");
+        }
     }
 }

@@ -5,6 +5,7 @@ pub mod incremental;
 pub mod lancsvd;
 pub mod orth;
 pub mod randsvd;
+pub mod stream;
 
 use crate::backend::Backend;
 use crate::la::blas1::nrm2;

@@ -1,0 +1,264 @@
+//! Single-pass randomized sketch SVD for one-shot column streams
+//! (Halko–Martinsson–Tropp §5.5).
+//!
+//! Where [`crate::algo::incremental::IncrementalSvd`] maintains an
+//! exact-rotation basis per block — O(m·r) work per arriving column —
+//! [`StreamSketch`] only *accumulates two sketches* as blocks arrive and
+//! never revisits the data:
+//!
+//! * Y += C·Ω_C   (m×r; Ω rows are drawn per **global column index**,
+//!   so the accumulated Y equals A·Ω regardless of how the stream is
+//!   blocked)
+//! * Wᵀ[:, seen..seen+c] = ΨᵀC   (l×n; the co-sketch of Aᵀ)
+//!
+//! [`StreamSketch::finalize`] then recovers the factorization without
+//! the data: Q = orth(Y), and B solves the small least-squares system
+//! (ΨᵀQ)·B ≈ Wᵀ — so A ≈ Q·B — via normal equations + Cholesky. The
+//! final SVD of Bᵀ (n×l, host Jacobi) yields A ≈ (Q·Û)·Σ·V̂ᵀ.
+//!
+//! This is the right tool when each block can only be touched once
+//! (data too large to store, or arriving over a wire); the incremental
+//! path is more accurate when blocks can be revisited within the
+//! update. Accuracy follows HMT Thm. 5.x sketch bounds: near-exact for
+//! streams of numerical rank ≤ r, additive O(σ_{r+1}) otherwise.
+
+use crate::backend::Backend;
+use crate::error::{Error, Result};
+use crate::la::chol::potrf;
+use crate::la::mat::{Mat, MatRef};
+use crate::la::svd::jacobi_svd;
+use crate::metrics::{Block, Profile};
+use crate::util::rng::Rng;
+use crate::util::scalar::Scalar;
+
+use super::orth::cholqr2;
+use super::TruncatedSvd;
+
+/// Fixed per-column RNG stream offset (splitmix64 increment): column
+/// j's Ω row is drawn from `Rng::new(seed ⊕ GOLDEN·(j+1))`, which makes
+/// the accumulated Y = A·Ω independent of how the stream was blocked.
+const GOLDEN: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Single-pass randomized sketch of a column stream (HMT §5.5):
+/// absorb blocks once, finalize without the data.
+pub struct StreamSketch<S: Scalar = f64> {
+    rows: usize,
+    cols_max: usize,
+    r: usize,
+    l: usize,
+    seed: u64,
+    cols_seen: usize,
+    /// right-sketch accumulator Y = A·Ω (m×r)
+    y: Mat<S>,
+    /// left test matrix Ψ (m×l), fixed at construction
+    psi: Mat<S>,
+    /// co-sketch Wᵀ = ΨᵀA (l×cols_max; live panel l×cols_seen)
+    wt: Mat<S>,
+    /// per-block Ω rows (block_cap-free: sized per call via view; this
+    /// is the one growing scratch, capacity cols_max×r)
+    omega: Mat<S>,
+    /// per-block Y increment scratch (m×r)
+    yinc: Mat<S>,
+}
+
+impl<S: Scalar> StreamSketch<S> {
+    /// New sketch for `rows`-row streams of up to `cols_max` columns:
+    /// target rank `r`, left-sketch oversampling `oversample` ≥ 1
+    /// (l = r + oversample; HMT recommend l ≈ 2r for one-pass).
+    pub fn new(rows: usize, cols_max: usize, r: usize, oversample: usize, seed: u64) -> Self {
+        assert!(r >= 1 && r <= rows, "sketch rank {r} outside 1..={rows}");
+        assert!(oversample >= 1, "one-pass sketch needs oversample >= 1");
+        let l = r + oversample;
+        let mut rng = Rng::new(seed ^ GOLDEN);
+        let mut psi = Mat::zeros(rows, l);
+        rng.fill_normal(psi.data_mut());
+        StreamSketch {
+            rows,
+            cols_max,
+            r,
+            l,
+            seed,
+            cols_seen: 0,
+            y: Mat::zeros(rows, r),
+            psi,
+            wt: Mat::zeros(l, cols_max),
+            omega: Mat::zeros(cols_max.max(1), r),
+            yinc: Mat::zeros(rows, r),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.r
+    }
+    pub fn cols_seen(&self) -> usize {
+        self.cols_seen
+    }
+
+    /// Absorb one arriving block C (m×c). Each column is touched once:
+    /// one GEMM against its Ω rows into the Y accumulator, one
+    /// projection ΨᵀC into the co-sketch panel. Partition-invariant —
+    /// the sketches after absorbing [C₁ C₂] equal those after
+    /// absorbing the concatenated block.
+    pub fn absorb_block<B: Backend<S> + ?Sized>(&mut self, be: &mut B, c: MatRef<'_, S>) {
+        assert_eq!(c.rows, self.rows, "stream block rows");
+        let cc = c.cols;
+        assert!(cc >= 1, "empty block");
+        assert!(
+            self.cols_seen + cc <= self.cols_max,
+            "stream exceeds the planned capacity ({} + {cc} > {})",
+            self.cols_seen,
+            self.cols_max
+        );
+        be.profile_mut().set_phase(Block::Other);
+        // Ω rows for these columns, keyed by global column index.
+        let mut omega = self.omega.view_mut(cc, self.r);
+        for i in 0..cc {
+            let j = self.cols_seen + i;
+            let mut rng = Rng::new(self.seed ^ GOLDEN.wrapping_mul(j as u64 + 1));
+            for q in 0..self.r {
+                omega.set(i, q, S::from_f64(rng.normal()));
+            }
+        }
+        // Y += C·Ω_C
+        let mut yinc = self.yinc.as_mut();
+        be.gemm_nn_into(c, omega.as_ref(), yinc.reborrow());
+        for (y, d) in self.y.data_mut().iter_mut().zip(yinc.as_ref().data) {
+            *y += *d;
+        }
+        // Wᵀ co-sketch columns for this block: ΨᵀC.
+        be.proj_into(self.psi.as_ref(), c, self.wt.panel_mut(self.cols_seen, cc));
+        self.cols_seen += cc;
+    }
+
+    /// Recover A ≈ U·Σ·Vᵀ from the sketches alone (the data is gone):
+    /// Q = orth(Y); solve (ΨᵀQ)·B ≈ Wᵀ by normal equations; SVD of Bᵀ.
+    pub fn finalize<B: Backend<S> + ?Sized>(&self, be: &mut B) -> Result<TruncatedSvd<S>> {
+        let (r, n) = (self.r, self.cols_seen);
+        if n == 0 {
+            return Err(Error::InvalidParam("stream sketch: no columns absorbed".into()));
+        }
+        be.profile_mut().set_phase(Block::Other);
+        // Q = orth(Y) (CholeskyQR2 + fallback, m×r).
+        let mut q = self.y.clone();
+        cholqr2(be, &mut q)?;
+        // M = ΨᵀQ (l×r) and the normal equations G·B = Mᵀ·Wᵀ with
+        // G = MᵀM (r×r, SPD for any genuinely oversampled sketch).
+        let mq = be.proj(self.psi.as_ref(), q.as_ref());
+        let mut g = Mat::zeros(r, r);
+        be.gram_into(mq.as_ref(), g.as_mut());
+        let mut b = Mat::zeros(r, n);
+        be.proj_into(mq.as_ref(), self.wt.panel(0, n), b.as_mut());
+        let lchol = potrf(&g)?;
+        chol_solve_in_place(&lchol, &mut b);
+        // SVD of Bᵀ (n×r, satisfies the Jacobi m ≥ n shape):
+        // Bᵀ = V̂·Σ·Ûᵀ, so A ≈ Q·B = (Q·Û)·Σ·V̂ᵀ.
+        let bt = b.transpose();
+        let svd = jacobi_svd(&bt)?;
+        let u = be.gemm_nn(q.as_ref(), svd.v.as_ref());
+        Ok(TruncatedSvd {
+            u,
+            sigma: svd.s,
+            v: svd.u,
+            profile: Profile::new(),
+            iters: 1,
+            est_residuals: Vec::new(),
+        })
+    }
+}
+
+/// Solve (L·Lᵀ)·X = B in place, column by column (forward + backward
+/// substitution against the lower Cholesky factor; factor-sized, host).
+fn chol_solve_in_place<S: Scalar>(l: &Mat<S>, x: &mut Mat<S>) {
+    let n = l.rows();
+    assert_eq!(x.rows(), n, "chol_solve shape");
+    for j in 0..x.cols() {
+        let col = x.col_mut(j);
+        for i in 0..n {
+            let mut s = col[i];
+            for t in 0..i {
+                s -= l.at(i, t) * col[t];
+            }
+            col[i] = s / l.at(i, i);
+        }
+        for i in (0..n).rev() {
+            let mut s = col[i];
+            for t in (i + 1)..n {
+                s -= l.at(t, i) * col[t];
+            }
+            col[i] = s / l.at(i, i);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::cpu::CpuBackend;
+    use crate::la::blas3::mat_nn;
+    use crate::la::norms::orth_error;
+    use crate::la::qr::random_orthonormal;
+    use crate::util::rng::Rng;
+
+    fn dummy_backend() -> CpuBackend {
+        CpuBackend::new_dense(Mat::zeros(1, 1))
+    }
+
+    fn low_rank(m: usize, n: usize, rank: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let u = random_orthonormal(m, rank, &mut rng);
+        let w = Mat::randn(rank, n, &mut rng);
+        mat_nn(&u, &w)
+    }
+
+    #[test]
+    fn one_pass_recovers_low_rank_stream() {
+        let a = low_rank(48, 30, 5, 11);
+        let mut sk = StreamSketch::new(48, 30, 8, 6, 42);
+        let mut be = dummy_backend();
+        for j0 in (0..30).step_by(6) {
+            sk.absorb_block(&mut be, a.panel(j0, 6));
+        }
+        let svd = sk.finalize(&mut be).unwrap();
+        let mut us = svd.u.clone();
+        for j in 0..svd.sigma.len() {
+            for x in us.col_mut(j) {
+                *x *= svd.sigma[j];
+            }
+        }
+        let back = mat_nn(&us, &svd.v.transpose());
+        assert!(
+            back.max_abs_diff(&a) / a.fro_norm() < 1e-8,
+            "one-pass reconstruction {}",
+            back.max_abs_diff(&a)
+        );
+        assert!(orth_error(&svd.u) < 1e-8);
+    }
+
+    #[test]
+    fn sketch_is_partition_invariant() {
+        let a = low_rank(40, 24, 4, 7);
+        let mut be = dummy_backend();
+        let mut one = StreamSketch::new(40, 24, 6, 4, 9);
+        one.absorb_block(&mut be, a.as_ref());
+        let mut many = StreamSketch::new(40, 24, 6, 4, 9);
+        for j0 in 0..24 {
+            many.absorb_block(&mut be, a.panel(j0, 1));
+        }
+        let sa = one.finalize(&mut be).unwrap();
+        let sb = many.finalize(&mut be).unwrap();
+        // Mathematically identical sketches; summation order differs
+        // per blocking, so compare to rounding accuracy, not bitwise.
+        for (x, y) in sa.sigma.iter().zip(&sb.sigma).take(4) {
+            assert!(
+                (x - y).abs() <= 1e-10 * sa.sigma[0].max(1e-300),
+                "blocking changed the sketch: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn finalize_without_columns_errors() {
+        let sk: StreamSketch = StreamSketch::new(10, 10, 2, 2, 1);
+        assert!(sk.finalize(&mut dummy_backend()).is_err());
+    }
+}

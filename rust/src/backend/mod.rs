@@ -190,6 +190,38 @@
 //!   fused-vs-unfused ε-parity and fixed-thread determinism across
 //!   backends and dtypes (`tests/test_fused_ops.rs`).
 //!
+//! ## 9. Streaming ops
+//!
+//! The streaming tier (`algo::incremental::IncrementalSvd::update_with`,
+//! driven by the serve layer's `append` jobs) runs the per-block
+//! project → expand → small-SVD → rotate update entirely through the
+//! composable ops above — there is no dedicated streaming kernel — but
+//! it has its own crossing budget, because the operand is *the arriving
+//! block*, not a staged matrix. Per appended m×c block, the sanctioned
+//! host↔device crossings are exactly:
+//!
+//! * the arriving block itself, **once** (it is new data by definition:
+//!   the `copy_into` that lands C in the extended-panel workspace
+//!   buffer is the upload on a device target);
+//! * the c×c POTRF round-trips of the two CholeskyQR2 passes on the
+//!   residual (rule 3 unchanged — factor-sized, never O(m));
+//! * the (k+c)×(k+c) augmented core down to the host GESVD and the two
+//!   factor-sized rotation panels (Ū_r, V̄_r) back up for the basis
+//!   rotation GEMMs (the Table 1 split: factor-sized traffic is
+//!   sanctioned, panel-sized traffic is not);
+//! * nothing else — the warm basis U stays device-resident between
+//!   appends (it lives in planned buffers and moves only through
+//!   `copy_into`/`gemm_nn_into`), and the right factor V is
+//!   **host-resident bookkeeping** by design (it is cols_seen-tall —
+//!   operand-sized, not subspace-sized — and no kernel ever consumes
+//!   it; keeping it off the device is the memory-budget choice, not a
+//!   contract violation).
+//!
+//! A query on the warm basis performs **zero** crossings: it reads the
+//! already-host-resident σ. Backends need no new entry points for any
+//! of this; the contract here is the crossing budget the staged
+//! ledger audits per append.
+//!
 //! # Implementations
 //!
 //! * [`cpu::CpuBackend`] — pure-rust substrate, the conformance

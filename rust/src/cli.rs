@@ -119,11 +119,15 @@ const USAGE: &str = "usage: trunksvd <info|suite|gen|shard|solve|experiment> [op
   serve [--workers N] [--queue-cap N] [--backend cpu|cpu-scatter|cpu-expt|staged]
         [--deadline-ms MS] [--socket PATH]
         line-delimited JSON jobs on stdin (or the unix socket), results out;
-        see rust/src/runtime/serve.rs for the job schema
+        see rust/src/runtime/serve.rs for the job schema; streaming tenants
+        via {\"kind\": \"append\"|\"query\"|\"finalize\", \"stream\": NAME, \"cols\": C}
+        keep a warm incremental-SVD basis per stream between jobs
   serve --replay config/workloads/W.json [--out BENCH_serve.json]
         [--repeat N] [--workers N] [--queue-cap N] [--backend ...]
         replay a committed workload against one warm server and write
-        per-job latency / reuse-rate metrics (BENCH_ASSERT_REUSE=1 gates)";
+        per-job latency / reuse-rate metrics (BENCH_ASSERT_REUSE=1 gates);
+        workloads with append jobs also get an accuracy-vs-staleness audit
+        against a from-scratch solve of each stream prefix";
 
 /// Run the CLI; returns the process exit code.
 pub fn main_with_args(argv: Vec<String>) -> i32 {
@@ -390,6 +394,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             c.ws_warm_reuses + c.ws_created,
             c.restart_yields,
         );
+        if s.staleness_appends > 0 {
+            println!(
+                "  staleness: {} append(s) audited, max rel sigma err {:.3e} \
+                 (tolerance 1e-4, within_tolerance {})",
+                s.staleness_appends, s.staleness_max_rel, s.staleness_ok,
+            );
+        }
         println!("  report: {out}");
         return Ok(());
     }

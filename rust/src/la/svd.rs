@@ -20,6 +20,36 @@ pub struct Svd<S: Scalar = f64> {
     pub v: Mat<S>,
 }
 
+/// Reusable O(n) bookkeeping for [`jacobi_svd_scratch_into`]: the norm
+/// cache, sort keys, permutation and column-cycling scratch that the
+/// plain into-form allocates per call. Streaming callers
+/// (`algo::incremental`) hold one of these across updates so every
+/// small-core SVD in the update loop is strictly allocation-free.
+pub struct JacobiScratch<S: Scalar = f64> {
+    norms: Vec<S>,
+    svals: Vec<(S, usize)>,
+    perm: Vec<usize>,
+    done: Vec<bool>,
+    tmp: Vec<S>,
+    deficient: Vec<usize>,
+}
+
+impl<S: Scalar> JacobiScratch<S> {
+    /// Scratch sized for inputs up to `rows_max`×`n_max` (the column
+    /// cycling buffer serves both the m-row U and the n-row V
+    /// permutations, so it is sized at the larger of the two).
+    pub fn with_capacity(rows_max: usize, n_max: usize) -> JacobiScratch<S> {
+        JacobiScratch {
+            norms: Vec::with_capacity(n_max),
+            svals: Vec::with_capacity(n_max),
+            perm: Vec::with_capacity(n_max),
+            done: Vec::with_capacity(n_max),
+            tmp: Vec::with_capacity(rows_max.max(n_max)),
+            deficient: Vec::with_capacity(n_max),
+        }
+    }
+}
+
 /// One-sided Jacobi SVD of A (m×n, m ≥ n), out-parameter form.
 ///
 /// `u` (m×n) doubles as the rotation workspace — A is copied into it and
@@ -27,8 +57,9 @@ pub struct Svd<S: Scalar = f64> {
 /// caller can hand in planned workspace buffers and the big factors
 /// never hit the allocator (the per-restart call in LancSVD writes
 /// straight into `svd.u`/`svd.v` workspace slots). `s` is cleared and
-/// refilled; O(n) sorting/permutation bookkeeping still allocates — this
-/// is the tiny host GESVD of Table 1, outside the device loop.
+/// refilled. This convenience form still allocates the O(n) bookkeeping
+/// per call; pass a reused [`JacobiScratch`] to
+/// [`jacobi_svd_scratch_into`] for the fully allocation-free path.
 ///
 /// Rotates column pairs until all pairs are numerically orthogonal; then
 /// σ_j = ‖a_j‖, U = A·diag(1/σ), and V accumulates the rotations.
@@ -36,14 +67,31 @@ pub struct Svd<S: Scalar = f64> {
 /// (their singular vectors are arbitrary).
 pub fn jacobi_svd_into<S: Scalar>(
     a: MatRef<S>,
+    u: MatMut<S>,
+    s_out: &mut Vec<S>,
+    v: MatMut<S>,
+) -> Result<()> {
+    let mut scratch = JacobiScratch::with_capacity(a.rows, a.cols);
+    jacobi_svd_scratch_into(a, u, s_out, v, &mut scratch)
+}
+
+/// [`jacobi_svd_into`] with caller-owned bookkeeping: allocation-free
+/// when `scratch` was sized (via [`JacobiScratch::with_capacity`]) for
+/// this problem and `s_out` has capacity ≥ n — except on the
+/// rank-deficient path, where basis completion still allocates its
+/// candidate column (degenerate inputs only, never the steady state).
+pub fn jacobi_svd_scratch_into<S: Scalar>(
+    a: MatRef<S>,
     mut u: MatMut<S>,
     s_out: &mut Vec<S>,
     mut v: MatMut<S>,
+    scratch: &mut JacobiScratch<S>,
 ) -> Result<()> {
     let (m, n) = (a.rows, a.cols);
     assert!(m >= n, "jacobi_svd needs m >= n (got {m}x{n})");
     assert_eq!((u.rows, u.cols), (m, n), "jacobi_svd_into U shape");
     assert_eq!((v.rows, v.cols), (n, n), "jacobi_svd_into V shape");
+    let JacobiScratch { norms, svals, perm, done, tmp, deficient } = scratch;
     let w = &mut u; // rotation workspace aliases the U output
     w.data.copy_from_slice(a.data);
     v.fill(S::ZERO);
@@ -61,7 +109,8 @@ pub fn jacobi_svd_into<S: Scalar>(
     // Cached squared column norms, updated analytically per rotation
     // (§Perf: cuts the per-pair dot count from 3 to 1; the cache is
     // refreshed every few sweeps to bound drift).
-    let mut norms: Vec<S> = (0..n).map(|j| dot(w.col(j), w.col(j))).collect();
+    norms.clear();
+    norms.extend((0..n).map(|j| dot(w.col(j), w.col(j))));
     let colnorm_max0 = norms.iter().copied().fold(S::ZERO, S::max);
     let tiny2 = S::from_f64((n as f64 * eps.to_f64()).powi(2)) * colnorm_max0;
     for sweep in 0..max_sweeps {
@@ -112,9 +161,13 @@ pub fn jacobi_svd_into<S: Scalar>(
         return Err(Error::SvdNoConvergence { sweeps: max_sweeps, off: last_off.to_f64() });
     }
 
-    // Extract singular values and sort descending.
-    let mut svals: Vec<(S, usize)> = (0..n).map(|j| (nrm2(w.col(j)), j)).collect();
-    svals.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    // Extract singular values and sort descending. The in-place
+    // unstable sort keeps this allocation-free; the index tiebreak
+    // makes it a total order, so ties land exactly where the old
+    // stable sort put them.
+    svals.clear();
+    svals.extend((0..n).map(|j| (nrm2(w.col(j)), j)));
+    svals.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
     let smax = svals.first().map(|x| x.0).unwrap_or(S::ZERO);
     let tiny = S::from_f64(n as f64) * eps * smax;
 
@@ -122,11 +175,12 @@ pub fn jacobi_svd_into<S: Scalar>(
     s_out.extend(svals.iter().map(|x| x.0));
     // Reorder U (= rotated A) and V columns into descending-σ order in
     // place (cycle-following permutation, one column of scratch).
-    let perm: Vec<usize> = svals.iter().map(|x| x.1).collect();
-    permute_columns(w, &perm);
-    permute_columns(&mut v, &perm);
+    perm.clear();
+    perm.extend(svals.iter().map(|x| x.1));
+    permute_columns(w, perm, done, tmp);
+    permute_columns(&mut v, perm, done, tmp);
 
-    let mut deficient = Vec::new();
+    deficient.clear();
     for (out_j, &sigma) in s_out.iter().enumerate() {
         if sigma > tiny && sigma > S::ZERO {
             let inv = S::ONE / sigma;
@@ -144,7 +198,7 @@ pub fn jacobi_svd_into<S: Scalar>(
     // Complete rank-deficient directions to an orthonormal basis via
     // Gram-Schmidt against the existing columns of U.
     if !deficient.is_empty() {
-        complete_basis(w, &deficient);
+        complete_basis(w, deficient);
     }
     Ok(())
 }
@@ -162,11 +216,20 @@ pub fn jacobi_svd<S: Scalar>(a: &Mat<S>) -> Result<Svd<S>> {
 
 /// Apply the column permutation `out column j ← source column perm[j]`
 /// in place (cycle following; `perm` must be a permutation of 0..n).
-fn permute_columns<S: Scalar>(m: &mut MatMut<S>, perm: &[usize]) {
+/// `done`/`tmp` are caller-owned scratch (allocation-free when their
+/// capacity covers n flags / `m.rows` elements).
+fn permute_columns<S: Scalar>(
+    m: &mut MatMut<S>,
+    perm: &[usize],
+    done: &mut Vec<bool>,
+    tmp: &mut Vec<S>,
+) {
     let rows = m.rows;
     let n = perm.len();
-    let mut done = vec![false; n];
-    let mut tmp = vec![S::ZERO; rows];
+    done.clear();
+    done.resize(n, false);
+    tmp.clear();
+    tmp.resize(rows, S::ZERO);
     for start in 0..n {
         if done[start] || perm[start] == start {
             done[start] = true;

@@ -117,6 +117,40 @@ pub mod names {
     pub const SVD_U: &str = "svd.u";
     /// Host GESVD: right factor V̄ of the small r×r SVD (r×r).
     pub const SVD_V: &str = "svd.v";
+
+    /// Incremental update: projection coefficients H = UᵀC (capacity
+    /// r×b, viewed k×c).
+    pub const INC_H: &str = "inc.h";
+    /// Incremental update: re-orthogonalization corrections G = UᵀE
+    /// (capacity r×b).
+    pub const INC_G: &str = "inc.g";
+    /// Incremental update: folded correction product G·R_E (capacity
+    /// r×b).
+    pub const INC_GRE: &str = "inc.gre";
+    /// Incremental update: first-pass triangular factor R_E (capacity
+    /// b×b, viewed c×c).
+    pub const INC_RE: &str = "inc.re";
+    /// Incremental update: second-pass triangular factor T (b×b).
+    pub const INC_T: &str = "inc.t";
+    /// Incremental update: folded product T·R_E (b×b).
+    pub const INC_TRE: &str = "inc.tre";
+    /// Incremental update: extended left basis [U Q_E] (m×(r+b)).
+    pub const INC_EXT: &str = "inc.ext";
+    /// Incremental update: rotated left basis destination (m×r).
+    pub const INC_UNEW: &str = "inc.unew";
+    /// Incremental update: augmented core [diag(s) H; 0 R_E]
+    /// ((r+b)×(r+b), viewed (k+c)×(k+c)).
+    pub const INC_CORE: &str = "inc.core";
+    /// Incremental update: core-SVD left factor Ū ((r+b)×(r+b)).
+    pub const INC_CU: &str = "inc.cu";
+    /// Incremental update: core-SVD right factor V̄ ((r+b)×(r+b)).
+    pub const INC_CV: &str = "inc.cv";
+    /// Incremental update: extended right factor [V 0; 0 I] (capacity
+    /// n×(r+b), viewed (cols_seen+c)×(k+c)).
+    pub const INC_VEXT: &str = "inc.vext";
+    /// Incremental update: rotated right factor destination (capacity
+    /// n×r).
+    pub const INC_VNEW: &str = "inc.vnew";
 }
 
 /// Which solve a [`Plan`] was computed for (shapes differ per algorithm).
@@ -131,6 +165,11 @@ pub enum PlanKind {
     /// Standalone orthogonalization (the thin value-returning wrappers
     /// and the orth/cgs_qr unit paths).
     Orth,
+    /// Streaming incremental update (`algo::incremental`): per-block
+    /// project → expand → small-SVD → rotate scratch. Here `n` is the
+    /// planned stream capacity (total columns the stream may absorb),
+    /// `r` the rank cap and `b` the maximum arriving block width.
+    Incremental,
 }
 
 #[derive(Clone, Debug)]
@@ -217,6 +256,34 @@ impl Plan {
         plan.push(names::RAND_Z, n, r);
         plan.push(names::SVD_U, r, r);
         plan.push(names::SVD_V, r, r);
+        plan
+    }
+
+    /// Plan for the streaming incremental update (`algo::incremental`)
+    /// on an m-row stream capped at `n` total columns, rank cap `r`,
+    /// maximum block width `b`. The augmented-core buffers are sized at
+    /// (r+b)² — the largest core a single update can assemble — and the
+    /// right-factor scratch at the full stream capacity, so one
+    /// workspace serves the stream from its first block to its last.
+    pub fn incremental(m: usize, n: usize, r: usize, b: usize) -> Plan {
+        let r = r.max(1);
+        let b = b.max(1);
+        let aug = r + b;
+        let mut plan = Plan { kind: PlanKind::Incremental, m, n, r, p: 1, b, entries: Vec::new() };
+        plan.push_orth(m.max(1), r, b);
+        plan.push(names::INC_H, r, b);
+        plan.push(names::INC_G, r, b);
+        plan.push(names::INC_GRE, r, b);
+        plan.push(names::INC_RE, b, b);
+        plan.push(names::INC_T, b, b);
+        plan.push(names::INC_TRE, b, b);
+        plan.push(names::INC_EXT, m, aug);
+        plan.push(names::INC_UNEW, m, r);
+        plan.push(names::INC_CORE, aug, aug);
+        plan.push(names::INC_CU, aug, aug);
+        plan.push(names::INC_CV, aug, aug);
+        plan.push(names::INC_VEXT, n.max(1), aug);
+        plan.push(names::INC_VNEW, n.max(1), r);
         plan
     }
 
@@ -409,6 +476,17 @@ mod tests {
         assert_eq!(plan.shape_of(names::RAND_QBAR), Some((100, 16)));
         assert_eq!(plan.shape_of(names::RAND_R), Some((16, 16)));
         assert_eq!(plan.shape_of(names::RAND_Z), Some((40, 16)));
+
+        let plan = Plan::incremental(100, 40, 12, 6);
+        assert_eq!(plan.kind, PlanKind::Incremental);
+        assert_eq!(plan.shape_of(names::INC_EXT), Some((100, 18)));
+        assert_eq!(plan.shape_of(names::INC_CORE), Some((18, 18)));
+        assert_eq!(plan.shape_of(names::INC_VEXT), Some((40, 18)));
+        assert_eq!(plan.shape_of(names::INC_VNEW), Some((40, 12)));
+        assert_eq!(plan.shape_of(names::INC_H), Some((12, 6)));
+        assert_eq!(plan.shape_of(names::ORTH_SNAP), Some((100, 6)));
+        assert!(plan.require(PlanKind::Incremental, 100, 40, 12, 6).is_ok());
+        assert!(plan.require(PlanKind::Incremental, 100, 40, 12, 8).is_err());
     }
 
     #[test]

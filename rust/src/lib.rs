@@ -58,8 +58,10 @@ pub mod coordinator;
 pub mod cost;
 pub mod metrics;
 
+pub use algo::incremental::IncrementalSvd;
+pub use algo::stream::StreamSketch;
 pub use error::{Error, Result};
-pub use runtime::serve::{JobResult, JobSpec, JobStatus, ServeConfig, Server, ShapeClass};
+pub use runtime::serve::{JobKind, JobResult, JobSpec, JobStatus, ServeConfig, Server, ShapeClass};
 pub use la::mat::Mat;
 pub use la::workspace::{Plan, Workspace};
 pub use sparse::csr::Csr;

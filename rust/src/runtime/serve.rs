@@ -79,8 +79,34 @@
 //! fault-injection knobs `inject_panic` / `inject_delay_ms` (tests).
 //!
 //! Results: `{"id", "status": "ok"|"failed"|"rejected", "sigma": [..],
-//! "iters", "secs", "queue_secs", "shape_class", "operand_hit",
-//! "workspace_warm"[, "error", "est_residuals"]}`.
+//! "iters", "secs", "queue_secs", "shape_class", "cols_seen",
+//! "operand_hit", "workspace_warm"[, "error", "est_residuals"]}`.
+//!
+//! # Streaming tenants
+//!
+//! A job may carry `"kind": "append"|"query"|"finalize"` plus a
+//! `"stream": NAME` to address a *streaming tenant*: a warm
+//! [`IncrementalSvd`] basis (U, σ, V, cols_seen) living in the operand
+//! cache under the key `stream:NAME|dtype|backend`.
+//!
+//! * `append` (+ `"cols": C`) absorbs the next C columns of the job's
+//!   operand — the stream source — into the basis, in `b`-column
+//!   blocks through the allocation-free
+//!   [`IncrementalSvd::update_with`] path and a pooled
+//!   [`Plan::incremental`] workspace. The result's `sigma` is the
+//!   post-append spectrum snapshot and `cols_seen` the new stream
+//!   length.
+//! * `query` reads the warm basis's leading singular values without
+//!   touching the operand or checking out a workspace (zero staging,
+//!   zero crossings — see the backend contract §9).
+//! * `finalize` returns the final spectrum, then retires the tenant:
+//!   basis and backend are dropped and the slot forgets it ever built
+//!   (so a repeated workload starts from a clean miss, not rework).
+//!
+//! Stream jobs schedule under the `inc` shape class, so same-stream
+//! jobs are FIFO in submission order; a panic mid-append discards the
+//! torn basis (the next append rebuilds from scratch, counted as
+//! rework) — exactly the solve-path containment story.
 //!
 //! # Replay
 //!
@@ -100,15 +126,18 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
-use crate::algo::lancsvd::lancsvd_with;
+use crate::algo::incremental::IncrementalSvd;
+use crate::algo::lancsvd::{lancsvd, lancsvd_with};
 use crate::algo::randsvd::randsvd_with;
 use crate::algo::{InitDist, LancSvdOpts, RandSvdOpts, Restart, TruncatedSvd};
+use crate::backend::cpu::CpuBackend;
 use crate::backend::{Backend, Operand};
 use crate::coordinator::driver::{make_send_backend_at, Algo, Params, SendBackendChoice};
 use crate::error::{Error, Result};
 use crate::gen::dense::paper_dense;
 use crate::gen::sparse::{generate, SparseSpec};
 use crate::gen::suite::Suite;
+use crate::la::mat::Mat;
 use crate::la::workspace::{Plan, PlanKind, Workspace};
 use crate::metrics::percentile;
 use crate::util::json::{self, Json};
@@ -151,9 +180,15 @@ impl ShapeClass {
     /// The class a job schedules under.
     pub fn of(spec: &JobSpec) -> ShapeClass {
         let (m, n) = spec.operand.shape();
-        let kind = match spec.algo {
-            Algo::Lanc => PlanKind::LancSvd,
-            Algo::Rand => PlanKind::RandSvd,
+        let kind = match spec.kind {
+            JobKind::Solve => match spec.algo {
+                Algo::Lanc => PlanKind::LancSvd,
+                Algo::Rand => PlanKind::RandSvd,
+            },
+            // Stream jobs (append/query/finalize) all schedule under
+            // the incremental plan, so same-stream jobs share one FIFO
+            // sub-queue: submission order IS stream order.
+            _ => PlanKind::Incremental,
         };
         ShapeClass {
             kind,
@@ -172,6 +207,7 @@ impl ShapeClass {
             PlanKind::LancSvd => Plan::lancsvd(self.m, self.n, self.r, self.p, self.b),
             PlanKind::RandSvd => Plan::randsvd(self.m, self.n, self.r, self.p, self.b),
             PlanKind::Orth => Plan::orth(self.m, self.r, self.b),
+            PlanKind::Incremental => Plan::incremental(self.m, self.n, self.r, self.b),
         }
     }
 
@@ -182,6 +218,7 @@ impl ShapeClass {
             PlanKind::LancSvd => "lanc",
             PlanKind::RandSvd => "rand",
             PlanKind::Orth => "orth",
+            PlanKind::Incremental => "inc",
         };
         format!(
             "{kind}:{}x{}:r{}:p{}:b{}:{}",
@@ -214,6 +251,29 @@ pub enum AnyBackend {
     F64(Box<dyn Backend<f64> + Send>),
 }
 
+/// A warm incremental basis of either serving precision — the whole
+/// streaming-tenant state (U, σ, V, cols_seen) an operand-cache slot
+/// keeps between `append`/`query` jobs.
+pub enum AnyBasis {
+    F32(IncrementalSvd<f32>),
+    F64(IncrementalSvd<f64>),
+}
+
+impl AnyBasis {
+    /// Leading ≤ `wanted` singular values (as f64 bits — the
+    /// determinism comparison runs on these) and the stream length.
+    fn sigma_snapshot(&self, wanted: usize) -> (Vec<f64>, usize) {
+        match self {
+            AnyBasis::F64(inc) => {
+                (inc.sigma().iter().take(wanted).map(|x| x.to_f64()).collect(), inc.cols_seen())
+            }
+            AnyBasis::F32(inc) => {
+                (inc.sigma().iter().take(wanted).map(|x| x.to_f64()).collect(), inc.cols_seen())
+            }
+        }
+    }
+}
+
 /// The two precisions the server dispatches over. Monomorphizes the
 /// execution path while the queue/caches stay type-erased.
 pub trait ServeScalar: Scalar {
@@ -227,6 +287,8 @@ pub trait ServeScalar: Scalar {
     fn unwrap_ws(any: AnyWorkspace) -> Option<Workspace<Self>>;
     fn wrap_be(be: Box<dyn Backend<Self> + Send>) -> AnyBackend;
     fn unwrap_be(any: AnyBackend) -> Option<Box<dyn Backend<Self> + Send>>;
+    fn wrap_basis(b: IncrementalSvd<Self>) -> AnyBasis;
+    fn unwrap_basis(any: AnyBasis) -> Option<IncrementalSvd<Self>>;
 }
 
 impl ServeScalar for f64 {
@@ -252,6 +314,15 @@ impl ServeScalar for f64 {
             AnyBackend::F32(_) => None,
         }
     }
+    fn wrap_basis(b: IncrementalSvd<f64>) -> AnyBasis {
+        AnyBasis::F64(b)
+    }
+    fn unwrap_basis(any: AnyBasis) -> Option<IncrementalSvd<f64>> {
+        match any {
+            AnyBasis::F64(b) => Some(b),
+            AnyBasis::F32(_) => None,
+        }
+    }
 }
 
 impl ServeScalar for f32 {
@@ -275,6 +346,15 @@ impl ServeScalar for f32 {
         match any {
             AnyBackend::F32(be) => Some(be),
             AnyBackend::F64(_) => None,
+        }
+    }
+    fn wrap_basis(b: IncrementalSvd<f32>) -> AnyBasis {
+        AnyBasis::F32(b)
+    }
+    fn unwrap_basis(any: AnyBasis) -> Option<IncrementalSvd<f32>> {
+        match any {
+            AnyBasis::F32(b) => Some(b),
+            AnyBasis::F64(_) => None,
         }
     }
 }
@@ -370,6 +450,11 @@ impl WorkspacePool {
 /// * `be` absent, built once  ⇒ rework (a panic discarded the backend).
 struct SlotState {
     be: Option<AnyBackend>,
+    /// Streaming tenants only: the warm incremental basis. Presence
+    /// classifies hit/miss/rework for stream jobs exactly as `be` does
+    /// for solves (a panic mid-append discards it; `finalize` clears it
+    /// *and* `built_ever`, retiring the tenant cleanly).
+    basis: Option<AnyBasis>,
     built_ever: bool,
 }
 
@@ -405,8 +490,11 @@ impl OperandCache {
         match map.get(key) {
             Some(s) => Arc::clone(s),
             None => {
-                let s: BackendSlot =
-                    Arc::new(Mutex::new(SlotState { be: None, built_ever: false }));
+                let s: BackendSlot = Arc::new(Mutex::new(SlotState {
+                    be: None,
+                    basis: None,
+                    built_ever: false,
+                }));
                 map.insert(key.to_string(), Arc::clone(&s));
                 s
             }
@@ -418,11 +506,33 @@ impl OperandCache {
 // Jobs
 // ---------------------------------------------------------------------------
 
+/// What a job asks the server to do: a one-shot solve, or one of the
+/// streaming-tenant verbs (see the module docs, § Streaming tenants).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// One-shot truncated SVD of the operand (the classic tenant).
+    Solve,
+    /// Absorb the next [`JobSpec::append_cols`] columns of the operand
+    /// into the stream's warm incremental basis.
+    Append,
+    /// Read the warm basis's leading singular values; touches neither
+    /// the operand nor a workspace.
+    Query,
+    /// Report the final spectrum and retire the stream tenant.
+    Finalize,
+}
+
 /// One truncated-SVD request.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     /// Caller-chosen correlation id (echoed in the result).
     pub id: String,
+    pub kind: JobKind,
+    /// Stream-tenant name (required for every non-`Solve` kind); keys
+    /// the warm basis as `stream:NAME|dtype|backend`.
+    pub stream: Option<String>,
+    /// `Append` only: how many operand columns this job absorbs.
+    pub append_cols: usize,
     pub algo: Algo,
     pub params: Params,
     /// Canonical f64 operand; converted per job dtype at backend build.
@@ -453,6 +563,9 @@ impl JobSpec {
     ) -> JobSpec {
         JobSpec {
             id: id.into(),
+            kind: JobKind::Solve,
+            stream: None,
+            append_cols: 0,
             algo,
             params,
             operand,
@@ -461,6 +574,52 @@ impl JobSpec {
             inject_panic: false,
             inject_delay: None,
         }
+    }
+
+    /// An `append` job: absorb the next `cols` columns of `operand`
+    /// (the stream source) into `stream`'s warm basis. `params.r` is
+    /// the rank cap, `params.b` the update block width, `params.tol`
+    /// the σ threshold.
+    pub fn append(
+        id: impl Into<String>,
+        stream: impl Into<String>,
+        params: Params,
+        operand: Operand<f64>,
+        cols: usize,
+    ) -> JobSpec {
+        let mut s = JobSpec::new(id, Algo::Lanc, params, operand);
+        s.kind = JobKind::Append;
+        s.stream = Some(stream.into());
+        s.append_cols = cols;
+        s
+    }
+
+    /// A `query` job: snapshot `stream`'s warm spectrum. The operand is
+    /// only used for shape-class bookkeeping (pass the stream source).
+    pub fn query(
+        id: impl Into<String>,
+        stream: impl Into<String>,
+        params: Params,
+        operand: Operand<f64>,
+    ) -> JobSpec {
+        let mut s = JobSpec::new(id, Algo::Lanc, params, operand);
+        s.kind = JobKind::Query;
+        s.stream = Some(stream.into());
+        s
+    }
+
+    /// A `finalize` job: report the final spectrum and retire the
+    /// stream tenant (basis and backend dropped, slot reset).
+    pub fn finalize(
+        id: impl Into<String>,
+        stream: impl Into<String>,
+        params: Params,
+        operand: Operand<f64>,
+    ) -> JobSpec {
+        let mut s = JobSpec::new(id, Algo::Lanc, params, operand);
+        s.kind = JobKind::Finalize;
+        s.stream = Some(stream.into());
+        s
     }
 }
 
@@ -500,6 +659,9 @@ pub struct JobResult {
     /// Submission-to-dequeue seconds.
     pub queue_secs: f64,
     pub shape_class: String,
+    /// Stream jobs: total columns the basis had absorbed when this job
+    /// completed (0 for solves).
+    pub cols_seen: usize,
     /// The operand cache held a warm backend for this job's key.
     pub operand_hit: bool,
     /// The workspace checkout was satisfied by a warm arena.
@@ -517,6 +679,7 @@ impl JobResult {
             secs: 0.0,
             queue_secs: 0.0,
             shape_class: String::new(),
+            cols_seen: 0,
             operand_hit: false,
             workspace_warm: false,
         }
@@ -592,6 +755,8 @@ pub struct ServeCounters {
     pub ws_warm_reuses: u64,
     pub ws_discarded: u64,
     pub restart_yields: u64,
+    pub stream_appends: u64,
+    pub stream_queries: u64,
 }
 
 #[derive(Default)]
@@ -603,6 +768,8 @@ struct ServeStats {
     rejected_deadline: AtomicU64,
     ws_discarded: AtomicU64,
     restart_yields: AtomicU64,
+    stream_appends: AtomicU64,
+    stream_queries: AtomicU64,
 }
 
 struct Queued {
@@ -793,6 +960,8 @@ impl Server {
             ws_warm_reuses: warm,
             ws_discarded: ld(&self.inner.stats.ws_discarded),
             restart_yields: ld(&self.inner.stats.restart_yields),
+            stream_appends: ld(&self.inner.stats.stream_appends),
+            stream_queries: ld(&self.inner.stats.stream_queries),
         }
     }
 
@@ -872,6 +1041,7 @@ struct Executed {
     sigma: Vec<f64>,
     est_residuals: Vec<f64>,
     iters: usize,
+    cols_seen: usize,
     operand_hit: bool,
     workspace_warm: bool,
 }
@@ -883,6 +1053,7 @@ impl Executed {
             sigma: Vec::new(),
             est_residuals: Vec::new(),
             iters: 0,
+            cols_seen: 0,
             operand_hit,
             workspace_warm: false,
         }
@@ -913,9 +1084,11 @@ fn run_job(inner: &ServerInner, q: Queued) {
         }
     }
 
-    let ex = match q.spec.params.dtype {
-        DType::F64 => execute_typed::<f64>(inner, &q),
-        DType::F32 => execute_typed::<f32>(inner, &q),
+    let ex = match (q.spec.kind, q.spec.params.dtype) {
+        (JobKind::Solve, DType::F64) => execute_typed::<f64>(inner, &q),
+        (JobKind::Solve, DType::F32) => execute_typed::<f32>(inner, &q),
+        (_, DType::F64) => execute_stream_typed::<f64>(inner, &q),
+        (_, DType::F32) => execute_stream_typed::<f32>(inner, &q),
     };
     match ex.status {
         JobStatus::Done => inner.stats.completed.fetch_add(1, Ordering::Relaxed),
@@ -930,6 +1103,7 @@ fn run_job(inner: &ServerInner, q: Queued) {
         secs: start.elapsed().as_secs_f64(),
         queue_secs,
         shape_class: class_label,
+        cols_seen: ex.cols_seen,
         operand_hit: ex.operand_hit,
         workspace_warm: ex.workspace_warm,
     });
@@ -1021,6 +1195,7 @@ fn execute_typed<S: ServeScalar>(inner: &ServerInner, q: &Queued) -> Executed {
                         sigma: svd.sigma[..wanted].iter().map(|s| s.to_f64()).collect(),
                         est_residuals: svd.est_residuals,
                         iters: svd.iters,
+                        cols_seen: 0,
                         operand_hit,
                         workspace_warm,
                     }
@@ -1030,6 +1205,7 @@ fn execute_typed<S: ServeScalar>(inner: &ServerInner, q: &Queued) -> Executed {
                     sigma: Vec::new(),
                     est_residuals: Vec::new(),
                     iters: 0,
+                    cols_seen: 0,
                     operand_hit,
                     workspace_warm,
                 },
@@ -1050,6 +1226,239 @@ fn execute_typed<S: ServeScalar>(inner: &ServerInner, q: &Queued) -> Executed {
                 .unwrap_or_else(|| "non-string panic payload".into());
             Executed::failed(format!("solve panicked: {msg}"), operand_hit)
         }
+    }
+}
+
+/// Execute one streaming-tenant job (`append`/`query`/`finalize`) —
+/// see the module docs, § Streaming tenants. The stream's slot mutex is
+/// held across the whole job, so same-stream jobs serialize and the
+/// hit/miss/rework classification is a pure function of slot state,
+/// exactly like the solve path.
+fn execute_stream_typed<S: ServeScalar>(inner: &ServerInner, q: &Queued) -> Executed {
+    let spec = &q.spec;
+    let Some(name) = spec.stream.as_deref() else {
+        return Executed::failed("stream job without a 'stream' name".into(), false);
+    };
+    let key = format!("stream:{name}|{}|{}", S::DTYPE.name(), inner.cfg.backend.name());
+    let slot = inner.cache.slot(&key);
+    let mut guard = lock(&slot);
+
+    // Hit = a warm basis is present; rework = one existed and a panic
+    // discarded it; miss = this stream never built (the first append —
+    // or, after `finalize` reset the slot, the first of the next life).
+    let operand_hit = if guard.basis.is_some() {
+        inner.cache.hits.fetch_add(1, Ordering::Relaxed);
+        true
+    } else if guard.built_ever {
+        inner.cache.rework.fetch_add(1, Ordering::Relaxed);
+        false
+    } else {
+        inner.cache.misses.fetch_add(1, Ordering::Relaxed);
+        false
+    };
+
+    match spec.kind {
+        JobKind::Query => {
+            inner.stats.stream_queries.fetch_add(1, Ordering::Relaxed);
+            match guard.basis.as_ref() {
+                Some(b) => {
+                    let (sigma, cols_seen) = b.sigma_snapshot(spec.params.wanted);
+                    Executed {
+                        status: JobStatus::Done,
+                        sigma,
+                        est_residuals: Vec::new(),
+                        iters: 0,
+                        cols_seen,
+                        operand_hit,
+                        workspace_warm: false,
+                    }
+                }
+                None => {
+                    Executed::failed(format!("query on stream '{name}' with no basis"), operand_hit)
+                }
+            }
+        }
+        JobKind::Finalize => match guard.basis.take() {
+            Some(b) => {
+                let (sigma, cols_seen) = b.sigma_snapshot(spec.params.wanted);
+                // Retire the tenant: drop the basis AND the backend,
+                // and forget the slot ever built — a replayed workload's
+                // first append is then a clean miss, not rework.
+                guard.be = None;
+                guard.built_ever = false;
+                drop(guard);
+                Executed {
+                    status: JobStatus::Done,
+                    sigma,
+                    est_residuals: Vec::new(),
+                    iters: 0,
+                    cols_seen,
+                    operand_hit,
+                    workspace_warm: false,
+                }
+            }
+            None => {
+                Executed::failed(format!("finalize on stream '{name}' with no basis"), operand_hit)
+            }
+        },
+        JobKind::Append => {
+            inner.stats.stream_appends.fetch_add(1, Ordering::Relaxed);
+            let p = &spec.params;
+            let (m, n_total) = spec.operand.shape();
+            let cols = spec.append_cols;
+            if cols == 0 {
+                return Executed::failed("append needs cols >= 1".into(), operand_hit);
+            }
+            if p.r < 1 || p.r > m {
+                return Executed::failed(
+                    format!("append rank cap {} outside 1..={m}", p.r),
+                    operand_hit,
+                );
+            }
+            let basis = match guard.basis.take().and_then(S::unwrap_basis) {
+                Some(b) => b,
+                None => IncrementalSvd::new(m, n_total, p.r, p.b.max(1), p.tol.unwrap_or(0.0)),
+            };
+            let start_col = basis.cols_seen();
+            if start_col + cols > n_total {
+                guard.basis = Some(S::wrap_basis(basis));
+                return Executed::failed(
+                    format!(
+                        "append past the end of the stream source \
+                         ({start_col} + {cols} > {n_total})"
+                    ),
+                    operand_hit,
+                );
+            }
+            let mut be = match guard.be.take().and_then(S::unwrap_be) {
+                Some(be) => be,
+                None => {
+                    match make_send_backend_at::<S>(S::specialize(&spec.operand), inner.cfg.backend)
+                    {
+                        Ok(be) => be,
+                        Err(e) => {
+                            guard.basis = Some(S::wrap_basis(basis));
+                            return Executed::failed(format!("backend build: {e}"), operand_hit);
+                        }
+                    }
+                }
+            };
+            // Build succeeded: from here an empty slot means a panic
+            // discarded the basis, i.e. rework.
+            guard.built_ever = true;
+            let op = S::specialize(&spec.operand);
+            let (ws, workspace_warm) = inner.ws_pool.checkout::<S>(&q.class);
+            let block_cap = basis.block_cap();
+
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                let mut basis = basis;
+                if let Some(d) = spec.inject_delay {
+                    std::thread::sleep(d);
+                }
+                if spec.inject_panic {
+                    panic!("injected panic (fault-injection test)");
+                }
+                let mut res = Ok(());
+                let mut j = 0;
+                while j < cols {
+                    let w = (cols - j).min(block_cap);
+                    res = operand_columns(&op, start_col + j, w)
+                        .and_then(|block| basis.update_with(&mut *be, block.as_ref(), &ws));
+                    if res.is_err() {
+                        break;
+                    }
+                    j += w;
+                }
+                (be, basis, ws, res)
+            }));
+
+            match outcome {
+                Ok((be, basis, ws, res)) => {
+                    // The update returned (Ok, or a clean Err that left
+                    // the basis self-consistent — `update_with` commits
+                    // its state only after every fallible step). Check
+                    // the workspace in BEFORE the slot guard drops, as
+                    // in the solve path.
+                    if !inner.ws_pool.checkin(&q.class, S::wrap_ws(ws)) {
+                        inner.stats.ws_discarded.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let any = S::wrap_basis(basis);
+                    let (sigma, cols_seen) = any.sigma_snapshot(spec.params.wanted);
+                    guard.be = Some(S::wrap_be(be));
+                    guard.basis = Some(any);
+                    drop(guard);
+                    match res {
+                        Ok(()) => Executed {
+                            status: JobStatus::Done,
+                            sigma,
+                            est_residuals: Vec::new(),
+                            iters: cols.div_ceil(block_cap),
+                            cols_seen,
+                            operand_hit,
+                            workspace_warm,
+                        },
+                        Err(e) => Executed {
+                            status: JobStatus::Failed(e.to_string()),
+                            sigma: Vec::new(),
+                            est_residuals: Vec::new(),
+                            iters: 0,
+                            cols_seen,
+                            operand_hit,
+                            workspace_warm,
+                        },
+                    }
+                }
+                Err(payload) => {
+                    // Panic mid-append: basis, backend, and workspace
+                    // were all torn at an arbitrary point and died with
+                    // the closure. The slot stays empty with
+                    // `built_ever` set, so the next same-stream append
+                    // rebuilds from scratch (counted as rework).
+                    inner.stats.ws_discarded.fetch_add(1, Ordering::Relaxed);
+                    drop(guard);
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".into());
+                    Executed::failed(format!("append panicked: {msg}"), operand_hit)
+                }
+            }
+        }
+        JobKind::Solve => unreachable!("solve jobs dispatch to execute_typed"),
+    }
+}
+
+/// Materialize columns `[j0, j0+w)` of an operand as a dense m×w block
+/// (the staging copy an `append` feeds to the incremental update).
+/// Sharded operands are rejected: a stream tenant's source must be
+/// addressable by column.
+fn operand_columns<S: ServeScalar>(op: &Operand<S>, j0: usize, w: usize) -> Result<Mat<S>> {
+    let (m, n) = op.shape();
+    if j0 + w > n {
+        return Err(Error::InvalidParam(format!(
+            "stream block [{j0}, {}) outside the operand's {n} columns",
+            j0 + w
+        )));
+    }
+    match op {
+        Operand::Dense(a) => Ok(a.panel_owned(j0, w)),
+        Operand::Sparse(a) => {
+            let mut out = Mat::zeros(m, w);
+            for i in 0..m {
+                let (idx, vals) = a.row(i);
+                for (c, v) in idx.iter().zip(vals) {
+                    let c = *c as usize;
+                    if c >= j0 && c < j0 + w {
+                        out.set(i, c - j0, *v);
+                    }
+                }
+            }
+            Ok(out)
+        }
+        Operand::Sharded { .. } => Err(Error::InvalidParam(
+            "stream appends need an in-core operand (dense|sparse), not shards".into(),
+        )),
     }
 }
 
@@ -1245,6 +1654,27 @@ pub fn parse_job(line: &str, defaults: &JobDefaults, st: &ProtocolState) -> Resu
 /// Build a [`JobSpec`] from a parsed job object.
 pub fn job_from_json(j: &Json, defaults: &JobDefaults, st: &ProtocolState) -> Result<JobSpec> {
     let (algo, params) = overlay(j, defaults)?;
+    let kind = match j.get("kind").and_then(|v| v.as_str()) {
+        None | Some("solve") => JobKind::Solve,
+        Some("append") => JobKind::Append,
+        Some("query") => JobKind::Query,
+        Some("finalize") => JobKind::Finalize,
+        Some(other) => {
+            return Err(perr(format!("unknown kind '{other}' (solve|append|query|finalize)")))
+        }
+    };
+    let stream = j.get("stream").and_then(|v| v.as_str()).map(|s| s.to_string());
+    if kind != JobKind::Solve && stream.is_none() {
+        return Err(perr(format!("'{}' jobs need a 'stream' name", match kind {
+            JobKind::Append => "append",
+            JobKind::Query => "query",
+            _ => "finalize",
+        })));
+    }
+    let append_cols = opt_usize(j, "cols").unwrap_or(0);
+    if kind == JobKind::Append && append_cols == 0 {
+        return Err(perr("'append' jobs need 'cols' >= 1"));
+    }
     let (operand, tag) = st.resolve_operand(j.req("operand")?)?;
     let id = match j.get("id").and_then(|v| v.as_str()) {
         Some(s) => s.to_string(),
@@ -1252,6 +1682,9 @@ pub fn job_from_json(j: &Json, defaults: &JobDefaults, st: &ProtocolState) -> Re
     };
     Ok(JobSpec {
         id,
+        kind,
+        stream,
+        append_cols,
         algo,
         params,
         operand,
@@ -1273,6 +1706,7 @@ pub fn result_json(r: &JobResult) -> Json {
         ("secs", json::num(r.secs)),
         ("queue_secs", json::num(r.queue_secs)),
         ("shape_class", json::str(r.shape_class.clone())),
+        ("cols_seen", json::num(r.cols_seen as f64)),
         ("operand_hit", Json::Bool(r.operand_hit)),
         ("workspace_warm", Json::Bool(r.workspace_warm)),
     ];
@@ -1403,7 +1837,20 @@ pub struct ReplaySummary {
     /// id (vacuously true for a single run).
     pub deterministic: bool,
     pub wall_secs: f64,
+    /// Streaming staleness check: `append` jobs audited against a
+    /// from-scratch solve of the stream prefix (0 ⇒ no stream jobs).
+    pub staleness_appends: usize,
+    /// Worst relative σ error of the warm basis across those appends.
+    pub staleness_max_rel: f64,
+    /// Every audited append was within [`STALENESS_TOL`] (vacuously
+    /// true with no appends).
+    pub staleness_ok: bool,
 }
+
+/// The replay accuracy-vs-staleness gate: after every `append`, the
+/// warm incremental basis must match a from-scratch solve of the same
+/// stream prefix to this relative σ error.
+pub const STALENESS_TOL: f64 = 1e-4;
 
 /// Replay a workload file (see `config/workloads/README.md` for the
 /// schema) `repeat` times over ONE warm server, verify repeat-run
@@ -1494,6 +1941,58 @@ pub fn replay_file(path: &str, out: Option<&str>, ov: &ReplayOverrides) -> Resul
     }
     let deterministic = mismatched.is_empty();
 
+    // Accuracy-vs-staleness audit (run 0): replaying the appends in
+    // workload order, after each one the served spectrum snapshot must
+    // match a from-scratch solve of exactly the columns absorbed so
+    // far. The reference is the value-level LancSVD on a fresh CPU
+    // backend over the re-materialized prefix — fully independent of
+    // the serve path and its warm state.
+    let mut stale_entries: Vec<Json> = Vec::new();
+    let mut stale_appends = 0usize;
+    let mut stale_skipped = 0usize;
+    let mut stale_max_rel = 0.0f64;
+    {
+        let first: HashMap<&str, &JobResult> =
+            per_run[0].iter().map(|r| (r.id.as_str(), r)).collect();
+        let mut cum: HashMap<String, usize> = HashMap::new();
+        for j in jobs {
+            if j.get("kind").and_then(|v| v.as_str()) != Some("append") {
+                continue;
+            }
+            let Some(stream) = j.get("stream").and_then(|v| v.as_str()) else { continue };
+            let cols = opt_usize(j, "cols").unwrap_or(0);
+            let seen = cum.entry(stream.to_string()).or_insert(0);
+            *seen += cols;
+            let cum_cols = *seen;
+            let Some(id) = j.get("id").and_then(|v| v.as_str()) else {
+                stale_skipped += 1;
+                continue;
+            };
+            let Some(r) = first.get(id) else { continue };
+            if r.status != JobStatus::Done {
+                continue; // a failed append already trips the reuse gates
+            }
+            let (_algo, params) = overlay(j, &defaults)?;
+            let Some(dn) = j.req("operand")?.get("dense") else {
+                // Only generative dense specs can be re-materialized
+                // for the reference; anything else is reported, not
+                // silently passed.
+                stale_skipped += 1;
+                continue;
+            };
+            let rel = staleness_reference(dn, cum_cols, &params, &r.sigma)?;
+            stale_appends += 1;
+            stale_max_rel = stale_max_rel.max(rel);
+            stale_entries.push(json::obj(vec![
+                ("id", json::str(id)),
+                ("stream", json::str(stream)),
+                ("cols_seen", json::num(cum_cols as f64)),
+                ("rel_sigma_err", json::num(rel)),
+            ]));
+        }
+    }
+    let stale_ok = stale_max_rel <= STALENESS_TOL;
+
     let counters = server.counters();
     let done: Vec<f64> = per_run
         .iter()
@@ -1516,6 +2015,8 @@ pub fn replay_file(path: &str, out: Option<&str>, ov: &ReplayOverrides) -> Resul
         ("ws_warm_reuses", json::num(counters.ws_warm_reuses as f64)),
         ("ws_discarded", json::num(counters.ws_discarded as f64)),
         ("restart_yields", json::num(counters.restart_yields as f64)),
+        ("stream_appends", json::num(counters.stream_appends as f64)),
+        ("stream_queries", json::num(counters.stream_queries as f64)),
     ]);
     let classes_json = json::arr(
         server
@@ -1537,7 +2038,7 @@ pub fn replay_file(path: &str, out: Option<&str>, ov: &ReplayOverrides) -> Resul
             .map(|run| json::arr(run.iter().map(result_json).collect()))
             .collect(),
     );
-    let report = json::obj(vec![
+    let mut report_pairs = vec![
         ("workload", json::str(path)),
         ("threads", json::num(pool::num_threads() as f64)),
         ("workers", json::num(workers as f64)),
@@ -1568,8 +2069,22 @@ pub fn replay_file(path: &str, out: Option<&str>, ov: &ReplayOverrides) -> Resul
                 ),
             ]),
         ),
-        ("runs", runs_json),
-    ]);
+    ];
+    if stale_appends + stale_skipped > 0 {
+        report_pairs.push((
+            "staleness",
+            json::obj(vec![
+                ("appends", json::num(stale_appends as f64)),
+                ("skipped", json::num(stale_skipped as f64)),
+                ("max_rel_sigma_err", json::num(stale_max_rel)),
+                ("tolerance", json::num(STALENESS_TOL)),
+                ("within_tolerance", Json::Bool(stale_ok)),
+                ("per_append", json::arr(stale_entries)),
+            ]),
+        ));
+    }
+    report_pairs.push(("runs", runs_json));
+    let report = json::obj(report_pairs);
 
     // Write the report BEFORE gating so a failed gate still leaves the
     // evidence on disk.
@@ -1586,6 +2101,13 @@ pub fn replay_file(path: &str, out: Option<&str>, ov: &ReplayOverrides) -> Resul
             pool::num_threads()
         )));
     }
+    if !stale_ok {
+        return Err(Error::InvalidParam(format!(
+            "replay staleness violated: worst relative σ error {stale_max_rel:.3e} across \
+             {stale_appends} appends exceeds {STALENESS_TOL:.0e} against the from-scratch \
+             reference"
+        )));
+    }
     if std::env::var("BENCH_ASSERT_REUSE").map(|v| v == "1").unwrap_or(false) {
         assert_reuse_gates(&counters)?;
     }
@@ -1596,7 +2118,49 @@ pub fn replay_file(path: &str, out: Option<&str>, ov: &ReplayOverrides) -> Resul
         counters,
         deterministic,
         wall_secs,
+        staleness_appends: stale_appends,
+        staleness_max_rel: stale_max_rel,
+        staleness_ok: stale_ok,
     })
+}
+
+/// From-scratch reference for one audited append: re-materialize the
+/// stream prefix (the leading `cum_cols` columns of the dense
+/// generative operand), solve it with the value-level LancSVD on a
+/// fresh CPU backend, and return the worst relative σ error of the
+/// served snapshot against it (normalized by the reference σ₁).
+fn staleness_reference(
+    dn: &Json,
+    cum_cols: usize,
+    params: &Params,
+    served: &[f64],
+) -> Result<f64> {
+    let m = req_usize(dn, "m")?;
+    let n = req_usize(dn, "n")?;
+    let seed = opt_u64(dn, "seed").unwrap_or(42);
+    let a = paper_dense(m, n, seed).a;
+    let prefix = a.panel_owned(0, cum_cols.min(n));
+    let mut be = CpuBackend::new_dense(prefix);
+    let svd = lancsvd(
+        &mut be,
+        &LancSvdOpts {
+            r: params.r,
+            p: params.p,
+            b: params.b,
+            seed: params.seed,
+            init: InitDist::CenteredPoisson,
+            tol: params.tol,
+            wanted: params.wanted,
+            restart: params.restart,
+            fuse: None,
+        },
+    )?;
+    let s1 = svd.sigma.first().copied().unwrap_or(1.0).max(1e-300);
+    let mut rel: f64 = 0.0;
+    for i in 0..served.len().min(svd.sigma.len()) {
+        rel = rel.max((served[i] - svd.sigma[i]).abs() / s1);
+    }
+    Ok(rel)
 }
 
 /// The CI `serve-stress` reuse contract: the warm paths actually ran,
@@ -1655,6 +2219,86 @@ mod tests {
         assert_eq!(c.plan().kind, PlanKind::LancSvd);
         let rand = JobSpec::new("b", Algo::Rand, tiny_params(), tiny_operand());
         assert_eq!(ShapeClass::of(&rand).plan().kind, PlanKind::RandSvd);
+        let app = JobSpec::append("c", "s", tiny_params(), tiny_operand(), 8);
+        let c = ShapeClass::of(&app);
+        assert_eq!(c.label(), "inc:120x48:r8:p2:b4:f64");
+        assert_eq!(c.plan().kind, PlanKind::Incremental);
+        let qry = JobSpec::query("d", "s", tiny_params(), tiny_operand());
+        assert_eq!(ShapeClass::of(&qry), c, "append and query share the stream's class");
+    }
+
+    #[test]
+    fn stream_append_query_finalize_cycle() {
+        let params = Params { r: 6, p: 2, b: 3, seed: 7, wanted: 4, ..Params::default() };
+        let op = Operand::dense(paper_dense(40, 12, 5).a);
+        let mut server = Server::new(ServeConfig { solvers: 1, ..ServeConfig::default() });
+
+        let a1 = server.submit(JobSpec::append("a1", "s", params.clone(), op.clone(), 6)).wait();
+        assert_eq!(a1.status, JobStatus::Done, "{:?}", a1.status);
+        assert_eq!(a1.cols_seen, 6);
+        assert!(!a1.operand_hit, "first append is the stream's one miss");
+        assert_eq!(a1.sigma.len(), 4);
+        assert!(a1.sigma.windows(2).all(|w| w[0] >= w[1]), "descending {:?}", a1.sigma);
+
+        let q1 = server.submit(JobSpec::query("q1", "s", params.clone(), op.clone())).wait();
+        assert_eq!(q1.status, JobStatus::Done, "{:?}", q1.status);
+        assert!(q1.operand_hit, "query lands on the warm basis");
+        assert_eq!(q1.cols_seen, 6);
+        assert_eq!(
+            q1.sigma.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            a1.sigma.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "query reads exactly the post-append snapshot"
+        );
+
+        let a2 = server.submit(JobSpec::append("a2", "s", params.clone(), op.clone(), 6)).wait();
+        assert_eq!(a2.status, JobStatus::Done, "{:?}", a2.status);
+        assert_eq!(a2.cols_seen, 12);
+        assert!(a2.operand_hit && a2.workspace_warm, "second append reuses basis and arena");
+
+        let f = server.submit(JobSpec::finalize("f", "s", params.clone(), op.clone())).wait();
+        assert_eq!(f.status, JobStatus::Done, "{:?}", f.status);
+        assert_eq!(f.cols_seen, 12);
+
+        // The tenant is retired: a fresh same-name append is a clean
+        // miss (not rework), and a query now has nothing to read.
+        let a3 = server.submit(JobSpec::append("a3", "s", params.clone(), op.clone(), 6)).wait();
+        assert_eq!(a3.status, JobStatus::Done, "{:?}", a3.status);
+        assert_eq!(a3.cols_seen, 6);
+        assert!(!a3.operand_hit, "finalize must reset the slot to a clean miss");
+        server.shutdown();
+        let c = server.counters();
+        assert_eq!(c.operand_rework, 0, "{c:?}");
+        assert_eq!(c.stream_appends, 3);
+        assert_eq!(c.stream_queries, 1);
+    }
+
+    #[test]
+    fn stream_protocol_parse_validates() {
+        let st = ProtocolState::new();
+        let defaults = JobDefaults::default();
+        let op = r#""operand": {"dense": {"m": 30, "n": 10, "seed": 1}}"#;
+        let ok = json::parse(&format!(
+            r#"{{"id": "a", "kind": "append", "stream": "s", "cols": 4, {op}}}"#
+        ))
+        .unwrap();
+        let spec = job_from_json(&ok, &defaults, &st).unwrap();
+        assert_eq!(spec.kind, JobKind::Append);
+        assert_eq!(spec.stream.as_deref(), Some("s"));
+        assert_eq!(spec.append_cols, 4);
+
+        let no_stream =
+            json::parse(&format!(r#"{{"id": "b", "kind": "query", {op}}}"#)).unwrap();
+        assert!(job_from_json(&no_stream, &defaults, &st).is_err());
+        let no_cols = json::parse(&format!(
+            r#"{{"id": "c", "kind": "append", "stream": "s", {op}}}"#
+        ))
+        .unwrap();
+        assert!(job_from_json(&no_cols, &defaults, &st).is_err());
+        let bad_kind = json::parse(&format!(
+            r#"{{"id": "d", "kind": "nope", "stream": "s", {op}}}"#
+        ))
+        .unwrap();
+        assert!(job_from_json(&bad_kind, &defaults, &st).is_err());
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! Incremental-SVD accuracy battery: the streaming/updatable factor's
+//! contract, pinned at the integration level.
+//!
+//! * Block-arrival **order invariance** at a fixed rank cap — singular
+//!   values are invariant under column permutation, so feeding the same
+//!   column blocks in any order must land on the same spectrum (up to
+//!   the discarded-tail perturbation), on both the cpu and staged
+//!   backends, in both precisions.
+//! * **σ-threshold truncation** agrees with a from-scratch dense Jacobi
+//!   SVD: the threshold drops exactly the below-gap triplets and the
+//!   surviving values match the batch reference.
+//! * **Bitwise repeatability**: the same stream absorbed twice at a
+//!   fixed pool thread count returns bit-identical singular values, for
+//!   every count in {1, 2, default} × {f32, f64}.
+//! * **Zero allocations**: after construction and warmup,
+//!   [`IncrementalSvd::update_with`] against a planned workspace
+//!   performs no heap allocation (counting global allocator, pool
+//!   pinned to one thread so kernels take their serial fast paths).
+//!
+//! Tests that pin the pool serialize on `POOL_LOCK`, as in
+//! `tests/test_workspace.rs`.
+
+use std::sync::Mutex;
+
+use trunksvd::algo::incremental::IncrementalSvd;
+use trunksvd::backend::cpu::CpuBackend;
+use trunksvd::backend::staged::StagedBackend;
+use trunksvd::backend::Backend;
+use trunksvd::gen::dense::dense_with_spectrum;
+use trunksvd::la::mat::Mat;
+use trunksvd::la::svd::jacobi_svd;
+use trunksvd::la::workspace::Workspace;
+use trunksvd::util::counting_alloc::{thread_alloc_bytes, thread_allocs, CountingAllocator};
+use trunksvd::util::pool;
+use trunksvd::util::scalar::Scalar;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// Serializes tests that pin the global pool thread count.
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+struct PoolReset;
+impl Drop for PoolReset {
+    fn drop(&mut self) {
+        pool::set_num_threads(0);
+    }
+}
+
+const M: usize = 48;
+const N: usize = 24;
+const RANK_CAP: usize = 12;
+const BLOCK: usize = 6;
+const DOMINANT: usize = 8;
+
+/// Dummy-operand backends: the incremental update only touches
+/// workspace views, never the staged operand.
+fn cpu<S: Scalar>() -> CpuBackend<S> {
+    CpuBackend::new_dense(Mat::zeros(1, 1))
+}
+fn staged<S: Scalar>() -> StagedBackend<S> {
+    StagedBackend::new_dense(Mat::zeros(1, 1))
+}
+
+/// Test stream: 8 dominant singular values above a tail parked at
+/// 16·ε of the working precision — far below every gate used here (the
+/// rank-12 cap discards only noise), but still above the projection's
+/// rounding floor so the residual orthonormalization stays on its
+/// non-degenerate path.
+fn stream_matrix<S: Scalar>(seed: u64) -> (Mat<S>, Vec<f64>) {
+    let tail = S::EPSILON.to_f64() * 16.0;
+    let mut sigma: Vec<f64> = (0..DOMINANT).map(|i| 1.0 / (1.0 + i as f64)).collect();
+    sigma.extend(std::iter::repeat(tail).take(N - DOMINANT));
+    let prob = dense_with_spectrum(M, N, &sigma, seed);
+    (prob.a.cast::<S>(), sigma)
+}
+
+/// Absorb the blocks of `a` (width `BLOCK`) in the given arrival order.
+fn absorb<S: Scalar, B: Backend<S> + ?Sized>(
+    be: &mut B,
+    a: &Mat<S>,
+    order: &[usize],
+) -> IncrementalSvd<S> {
+    let mut inc = IncrementalSvd::new(M, N, RANK_CAP, BLOCK, 0.0);
+    let ws = Workspace::new(inc.plan());
+    for &bi in order {
+        inc.update_with(be, a.panel(bi * BLOCK, BLOCK), &ws).unwrap();
+    }
+    assert_eq!(inc.cols_seen(), N);
+    assert!(inc.rank() <= RANK_CAP, "rank {} exceeds cap", inc.rank());
+    inc
+}
+
+fn sigma_f64<S: Scalar>(inc: &IncrementalSvd<S>) -> Vec<f64> {
+    inc.sigma().iter().map(|x| x.to_f64()).collect()
+}
+
+fn sigma_bits<S: Scalar>(inc: &IncrementalSvd<S>) -> Vec<u64> {
+    inc.sigma().iter().map(|x| x.to_f64().to_bits()).collect()
+}
+
+/// Order-invariance core: three arrival orders of the same four blocks
+/// must agree with each other and with the planted spectrum on the
+/// dominant values, to `tol` relative.
+fn order_invariance_on<S: Scalar, B: Backend<S> + ?Sized>(be: &mut B, tol: f64) -> Vec<f64> {
+    const ORDERS: [[usize; 4]; 3] = [[0, 1, 2, 3], [3, 2, 1, 0], [2, 0, 3, 1]];
+    let (a, truth) = stream_matrix::<S>(11);
+    let mut spectra = Vec::new();
+    for order in &ORDERS {
+        let inc = absorb(be, &a, order);
+        let s = sigma_f64(&inc);
+        assert!(s.len() >= DOMINANT, "rank collapsed to {}", s.len());
+        for i in 0..DOMINANT {
+            let rel = (s[i] - truth[i]).abs() / truth[i];
+            assert!(rel < tol, "order {order:?} sigma_{i}: {} vs {} ({rel:.3e})", s[i], truth[i]);
+        }
+        spectra.push(s);
+    }
+    for s in &spectra[1..] {
+        for i in 0..DOMINANT {
+            let rel = (s[i] - spectra[0][i]).abs() / spectra[0][i];
+            assert!(rel < tol, "arrival orders disagree at sigma_{i} (rel {rel:.3e})");
+        }
+    }
+    spectra.remove(0)
+}
+
+/// Satellite battery 1: block-arrival order invariance at a fixed rank
+/// cap, across {cpu, staged} × {f32, f64}; the two backends must also
+/// agree with each other.
+#[test]
+fn order_invariance_across_backends_and_dtypes() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(1);
+
+    let cpu64 = order_invariance_on::<f64, _>(&mut cpu(), 1e-9);
+    let stg64 = order_invariance_on::<f64, _>(&mut staged(), 1e-9);
+    for i in 0..DOMINANT {
+        let rel = (cpu64[i] - stg64[i]).abs() / cpu64[i];
+        assert!(rel < 1e-9, "cpu/staged f64 disagree at sigma_{i} (rel {rel:.3e})");
+    }
+
+    let cpu32 = order_invariance_on::<f32, _>(&mut cpu(), 2e-3);
+    let stg32 = order_invariance_on::<f32, _>(&mut staged(), 2e-3);
+    for i in 0..DOMINANT {
+        let rel = (cpu32[i] - stg32[i]).abs() / cpu32[i];
+        assert!(rel < 2e-3, "cpu/staged f32 disagree at sigma_{i} (rel {rel:.3e})");
+    }
+}
+
+/// Satellite battery 2: the σ-threshold variant truncates exactly the
+/// below-gap triplets and the survivors match a from-scratch dense
+/// Jacobi SVD of the full matrix.
+fn sigma_threshold_matches_reference<S: Scalar>(tol: f64) {
+    // Hard spectral gap: 3 values at O(1), the rest five decades down —
+    // but above the σ-threshold noise floor of the working precision.
+    let mut sigma = vec![1.0, 0.7, 0.5];
+    sigma.extend(std::iter::repeat(1e-5).take(N - 3));
+    let a = dense_with_spectrum(M, N, &sigma, 3).a.cast::<S>();
+
+    let mut inc = IncrementalSvd::<S>::new(M, N, N, BLOCK, 1e-3);
+    let ws = Workspace::new(inc.plan());
+    let mut be = cpu::<S>();
+    for j0 in (0..N).step_by(BLOCK) {
+        inc.update_with(&mut be, a.panel(j0, BLOCK), &ws).unwrap();
+    }
+
+    // The threshold 1e-3·σ₁ sits inside the gap: everything at 1e-5
+    // must be gone, all three dominant triplets must survive.
+    assert_eq!(inc.rank(), 3, "threshold kept rank {}", inc.rank());
+
+    let reference = jacobi_svd(&a).unwrap();
+    for i in 0..3 {
+        let (got, want) = (inc.sigma()[i].to_f64(), reference.s[i].to_f64());
+        let rel = (got - want).abs() / want;
+        assert!(rel < tol, "sigma_{i}: {got} vs batch {want} (rel {rel:.3e})");
+    }
+}
+
+#[test]
+fn sigma_threshold_truncation_matches_dense_reference() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(1);
+    sigma_threshold_matches_reference::<f64>(1e-9);
+    sigma_threshold_matches_reference::<f32>(2e-3);
+}
+
+/// Satellite battery 3: at any fixed pool thread count, absorbing the
+/// same stream twice is bitwise repeatable (the pool's partitioning is
+/// schedule-independent, so a fixed count fully determines the
+/// arithmetic).
+#[test]
+fn bitwise_repeatable_across_thread_counts_and_dtypes() {
+    fn run<S: Scalar>() -> Vec<u64> {
+        let (a, _) = stream_matrix::<S>(17);
+        let mut be = cpu::<S>();
+        let inc = absorb(&mut be, &a, &[0, 1, 2, 3]);
+        sigma_bits(&inc)
+    }
+
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    for threads in [1usize, 2, 0] {
+        pool::set_num_threads(threads);
+        assert_eq!(run::<f64>(), run::<f64>(), "f64 not repeatable at threads={threads}");
+        assert_eq!(run::<f32>(), run::<f32>(), "f32 not repeatable at threads={threads}");
+    }
+}
+
+/// Satellite battery 4: once the accumulator and its planned workspace
+/// exist and the first blocks have warmed every lazy path, further
+/// `update_with` calls allocate nothing.
+fn update_with_allocation_free<S: Scalar>() {
+    let (a, _) = stream_matrix::<S>(23);
+    let mut inc = IncrementalSvd::<S>::new(M, N, RANK_CAP, BLOCK, 0.0);
+    let ws = Workspace::new(inc.plan());
+    let mut be = cpu::<S>();
+
+    // Warm off-window: first update builds rank from 0 (degenerate
+    // branch), second runs the full path once so lazy statics and the
+    // backend profile are initialized.
+    inc.update_with(&mut be, a.panel(0, BLOCK), &ws).unwrap();
+    inc.update_with(&mut be, a.panel(BLOCK, BLOCK), &ws).unwrap();
+
+    let (c0, b0) = (thread_allocs(), thread_alloc_bytes());
+    inc.update_with(&mut be, a.panel(2 * BLOCK, BLOCK), &ws).unwrap();
+    inc.update_with(&mut be, a.panel(3 * BLOCK, BLOCK), &ws).unwrap();
+    let allocs = (thread_allocs() - c0, thread_alloc_bytes() - b0);
+    assert_eq!(
+        allocs,
+        (0, 0),
+        "{}: warmed update_with must not allocate (allocs, bytes) = {allocs:?}",
+        S::DTYPE
+    );
+    assert_eq!(inc.cols_seen(), N);
+}
+
+#[test]
+fn update_with_is_allocation_free_after_warmup() {
+    let _guard = POOL_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let _reset = PoolReset;
+    pool::set_num_threads(1);
+    update_with_allocation_free::<f64>();
+    update_with_allocation_free::<f32>();
+}

@@ -399,6 +399,166 @@ fn replay_smoke_twice_is_bitwise_and_reuse_gated() {
     let _ = std::fs::remove_file(&out_path);
 }
 
+/// Streaming-tenant battery: interleaved append+query traffic from 4
+/// submitters shares ONE warm incremental basis. Appends are fungible
+/// (each absorbs the *next* `cols` columns of the stream source), so
+/// with a single solver any interleaving absorbs the same column
+/// sequence: the post-append `cols_seen` values form exactly
+/// {12, 24, …, 96}, only the first append misses the cache, and the
+/// finalized spectrum — plus every counter — is bitwise independent of
+/// the submission interleaving.
+#[test]
+fn interleaved_append_query_streams_share_one_warm_basis() {
+    use trunksvd::gen::dense::paper_dense;
+
+    const SUBMITTERS: usize = 4;
+    const APPENDS_EACH: usize = 2;
+    const COLS: usize = 12;
+
+    let params = tiny(DType::F64);
+    let run_once = |tag: &str| {
+        let mut server =
+            Server::new(ServeConfig { solvers: 1, queue_cap: 64, ..ServeConfig::default() });
+        let op = Operand::dense(paper_dense(120, 96, 31).a);
+
+        let mut appends: Vec<JobResult> = Vec::new();
+        let mut queries: Vec<JobResult> = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for t in 0..SUBMITTERS {
+                let server = &server;
+                let op = op.clone();
+                let params = params.clone();
+                handles.push(s.spawn(move || {
+                    let mut out = Vec::new();
+                    for i in 0..APPENDS_EACH {
+                        let a = server.submit(JobSpec::append(
+                            format!("{tag}-t{t}-a{i}"),
+                            "tenant",
+                            params.clone(),
+                            op.clone(),
+                            COLS,
+                        ));
+                        // The query is submitted after this thread's
+                        // append, so FIFO execution guarantees it sees
+                        // a live basis.
+                        let ar = a.wait();
+                        let q = server
+                            .submit(JobSpec::query(
+                                format!("{tag}-t{t}-q{i}"),
+                                "tenant",
+                                params.clone(),
+                                op.clone(),
+                            ))
+                            .wait();
+                        out.push((ar, q));
+                    }
+                    out
+                }));
+            }
+            for h in handles {
+                for (a, q) in h.join().unwrap() {
+                    appends.push(a);
+                    queries.push(q);
+                }
+            }
+        });
+
+        for r in appends.iter().chain(&queries) {
+            assert_eq!(r.status, JobStatus::Done, "job {}: {:?}", r.id, r.status);
+        }
+        // Fungible appends: the multiset of post-append stream lengths
+        // is the full ladder, whatever the interleaving was.
+        let mut lens: Vec<usize> = appends.iter().map(|r| r.cols_seen).collect();
+        lens.sort_unstable();
+        let ladder: Vec<usize> = (1..=SUBMITTERS * APPENDS_EACH).map(|i| i * COLS).collect();
+        assert_eq!(lens, ladder, "append ladder broken");
+        let misses = appends.iter().filter(|r| !r.operand_hit).count();
+        assert_eq!(misses, 1, "exactly the first append may build the basis");
+        for q in &queries {
+            assert!(q.operand_hit, "query {} ran without a warm basis", q.id);
+            assert!(q.cols_seen >= COLS && q.cols_seen % COLS == 0, "query {}", q.id);
+        }
+
+        let fin = server
+            .submit(JobSpec::finalize(format!("{tag}-fin"), "tenant", params.clone(), op))
+            .wait();
+        assert_eq!(fin.status, JobStatus::Done, "{:?}", fin.status);
+        assert_eq!(fin.cols_seen, SUBMITTERS * APPENDS_EACH * COLS);
+        assert_eq!(fin.sigma.len(), 4, "{:?}", fin.sigma);
+        for w in fin.sigma.windows(2) {
+            assert!(w[0] >= w[1], "finalized sigma not descending: {:?}", fin.sigma);
+        }
+
+        server.shutdown();
+        let c = server.counters();
+        assert_eq!(c.failed, 0, "{c:?}");
+        assert_eq!(c.operand_rework, 0, "{c:?}");
+        assert_eq!(c.stream_appends, (SUBMITTERS * APPENDS_EACH) as u64, "{c:?}");
+        assert_eq!(c.stream_queries, (SUBMITTERS * APPENDS_EACH) as u64, "{c:?}");
+        (sigma_bits(&fin), c)
+    };
+
+    let (sig1, c1) = run_once("r1");
+    let (sig2, c2) = run_once("r2");
+    assert_eq!(sig1, sig2, "finalized spectrum depends on submission interleaving");
+    assert_eq!(
+        (c1.completed, c1.operand_hits, c1.operand_misses, c1.stream_appends, c1.stream_queries),
+        (c2.completed, c2.operand_hits, c2.operand_misses, c2.stream_appends, c2.stream_queries),
+        "counters depend on submission interleaving: {c1:?} vs {c2:?}"
+    );
+}
+
+/// Streaming-tenant fault containment: a panic mid-append discards the
+/// torn basis entirely — the next append is a from-scratch rework (not
+/// a resume of half-committed state, pinned by bitwise agreement with
+/// the pre-panic append), and the server keeps serving queries and
+/// ordinary solves afterwards.
+#[test]
+fn mid_append_panic_discards_torn_basis_and_rework_recovers() {
+    use trunksvd::gen::dense::paper_dense;
+
+    let mut server = Server::new(ServeConfig { solvers: 1, ..ServeConfig::default() });
+    let op = Operand::dense(paper_dense(80, 48, 19).a);
+    let params = tiny(DType::F64);
+
+    let a1 =
+        server.submit(JobSpec::append("a1", "tenant", params.clone(), op.clone(), 16)).wait();
+    assert_eq!(a1.status, JobStatus::Done, "{:?}", a1.status);
+    assert_eq!(a1.cols_seen, 16);
+
+    let mut boom = JobSpec::append("boom", "tenant", params.clone(), op.clone(), 16);
+    boom.inject_panic = true;
+    let r = server.submit(boom).wait();
+    match &r.status {
+        JobStatus::Failed(msg) => assert!(msg.contains("append panicked"), "{msg}"),
+        other => panic!("expected Failed, got {other:?}"),
+    }
+
+    // The torn basis is gone: the rework append restarts the stream at
+    // column 0 and must reproduce a1 exactly.
+    let a2 =
+        server.submit(JobSpec::append("a2", "tenant", params.clone(), op.clone(), 16)).wait();
+    assert_eq!(a2.status, JobStatus::Done, "{:?}", a2.status);
+    assert!(!a2.operand_hit, "post-panic append must rebuild, not hit a torn slot");
+    assert_eq!(a2.cols_seen, 16, "rework must restart the stream, not resume torn state");
+    assert_eq!(sigma_bits(&a2), sigma_bits(&a1), "rework diverged from the original append");
+
+    let q = server.submit(JobSpec::query("q", "tenant", params.clone(), op.clone())).wait();
+    assert_eq!(q.status, JobStatus::Done, "{:?}", q.status);
+    assert_eq!(sigma_bits(&q), sigma_bits(&a2));
+
+    let solve = server.submit(JobSpec::new("solve", Algo::Lanc, params, op)).wait();
+    assert_eq!(solve.status, JobStatus::Done, "server unhealthy after panic: {:?}", solve.status);
+
+    server.shutdown();
+    let c = server.counters();
+    assert_eq!(c.failed, 1, "{c:?}");
+    assert_eq!(c.completed, 4, "{c:?}");
+    assert_eq!(c.operand_rework, 1, "{c:?}");
+    assert!(c.ws_discarded >= 1, "{c:?}");
+}
+
 /// Fused-PR satellite: the `--socket` transport end-to-end. A detached
 /// thread runs [`serve_unix`] on a temp socket; a client connects over
 /// the unix socket and gets the same ok/rejected/failed triage as the

@@ -1,15 +1,24 @@
 #!/usr/bin/env bash
-# Append a compact summary of a BENCH_kernels.json run to the committed
+# Append a compact summary of a bench/replay report to the committed
 # perf trajectory (BENCH_history/trajectory.jsonl) and fail the run if a
 # deterministic metric regressed against the last committed entry.
 #
-#   tools/bench_history.sh [BENCH_kernels.json] [BENCH_history/trajectory.jsonl]
+#   tools/bench_history.sh [REPORT.json] [BENCH_history/trajectory.jsonl]
+#
+# Two report shapes are recognized:
+#   - BENCH_kernels.json (kernel micro-bench): the default.
+#   - serve-replay reports carrying a `staleness` section (streaming
+#     workloads, e.g. BENCH_serve_streaming.json): appended as a
+#     `kind: "serve-stream"` entry.
 #
 # Two classes of metric:
-#   - deterministic (ledger byte counts, pass counts, parity flags):
-#     hard-gated. `ooc_disk_drop` must not fall below 0.9x the last
-#     committed value, `bitwise_parity` must stay 1, and
-#     `hot_panel_transfers` must stay 0.
+#   - deterministic (ledger byte counts, pass counts, parity flags,
+#     staleness of the incremental basis vs the from-scratch prefix
+#     solve): hard-gated. `ooc_disk_drop` must not fall below 0.9x the
+#     last committed value, `bitwise_parity` must stay 1,
+#     `hot_panel_transfers` must stay 0, and serve-stream entries must
+#     be within the staleness tolerance and bitwise repeat-run
+#     deterministic.
 #   - timing (speedups, overlap efficiency): recorded for trend reading
 #     only — CI runners are too noisy to gate on wall-clock ratios here;
 #     the bench's own BENCH_ASSERT_* envs gate those at full size.
@@ -32,6 +41,50 @@ mkdir -p "$(dirname "$HIST")"
 commit=$(git rev-parse --short HEAD 2>/dev/null || echo unknown)
 stamp=$(date -u +%Y-%m-%dT%H:%M:%SZ)
 
+# ---- serve-replay reports with a staleness audit (streaming workloads)
+if jq -e 'has("staleness")' "$BENCH" >/dev/null; then
+    entry=$(jq -c --arg commit "$commit" --arg date "$stamp" '{
+        commit: $commit,
+        date: $date,
+        kind: "serve-stream",
+        threads: .threads,
+        workers: .workers,
+        backend: .backend,
+        repeat: .repeat,
+        jobs_per_run: .jobs_per_run,
+        staleness_appends: .staleness.appends,
+        staleness_skipped: .staleness.skipped,
+        staleness_max_rel_sigma_err: .staleness.max_rel_sigma_err,
+        staleness_tolerance: .staleness.tolerance,
+        staleness_within_tolerance: .staleness.within_tolerance,
+        deterministic: .determinism.bitwise_identical,
+        failed: .counters.failed
+    }' "$BENCH")
+
+    stale_ok=$(echo "$entry" | jq -r '.staleness_within_tolerance')
+    det=$(echo "$entry" | jq -r '.deterministic')
+    failed=$(echo "$entry" | jq -r '.failed')
+    if [ "$stale_ok" != "true" ]; then
+        echo "bench-history: REGRESSION — incremental basis drifted past the" \
+             "staleness tolerance ($(echo "$entry" | jq -r '.staleness_max_rel_sigma_err'))" >&2
+        exit 1
+    fi
+    if [ "$det" != "true" ]; then
+        echo "bench-history: REGRESSION — streaming replay lost bitwise repeat-run determinism" >&2
+        exit 1
+    fi
+    if [ "$failed" != "0" ]; then
+        echo "bench-history: REGRESSION — $failed failed job(s) in the streaming replay" >&2
+        exit 1
+    fi
+
+    echo "$entry" >> "$HIST"
+    echo "bench-history: appended serve-stream entry -> $HIST"
+    echo "$entry" | jq .
+    exit 0
+fi
+
+# ---- BENCH_kernels.json (kernel micro-bench)
 entry=$(jq -c --arg commit "$commit" --arg date "$stamp" '{
     commit: $commit,
     date: $date,
@@ -59,10 +112,11 @@ if [ "$hot" != "0" ]; then
     exit 1
 fi
 
-# Relative gate vs the last committed entry: the fused tier's disk-byte
-# drop is a deterministic ledger ratio, so any real decrease is a code
-# change, not noise. Allow 10% slack for bench-shape changes.
-last=$(grep -v '^\s*$' "$HIST" 2>/dev/null | tail -n 1 || true)
+# Relative gate vs the last committed kernel entry (serve-stream entries
+# interleave in the same file, so filter by shape): the fused tier's
+# disk-byte drop is a deterministic ledger ratio, so any real decrease
+# is a code change, not noise. Allow 10% slack for bench-shape changes.
+last=$(jq -c 'select(has("fused_ooc_disk_drop"))' "$HIST" 2>/dev/null | tail -n 1 || true)
 if [ -n "$last" ]; then
     prev_drop=$(echo "$last" | jq -r '.fused_ooc_disk_drop // empty')
     new_drop=$(echo "$entry" | jq -r '.fused_ooc_disk_drop // empty')
